@@ -1,0 +1,114 @@
+//! Micro-benchmarks of the coordinator hot paths (bench-lite harness;
+//! no criterion in the offline vendor set — see util::bench).
+//!
+//! These are the quantities the §Perf pass tracks: PJRT dispatch latency,
+//! block gather/scatter, aggregation, round planning, data synthesis.
+
+use heroes::config::{ExperimentConfig, Scale};
+use heroes::coordinator::aggregate::ComposedAccumulator;
+use heroes::coordinator::assignment::{plan_round, ClientStatus, ControllerCfg};
+use heroes::coordinator::frequency::Estimates;
+use heroes::coordinator::ledger::BlockLedger;
+use heroes::data::synth_image::ImageGen;
+use heroes::model::ComposedGlobal;
+use heroes::runtime::{Engine, Manifest, Value};
+use heroes::simulation::LinkSample;
+use heroes::tensor::blocks::{gather_blocks, scatter_blocks_add};
+use heroes::tensor::Tensor;
+use heroes::util::bench::Bench;
+use heroes::util::rng::Rng;
+
+fn main() {
+    let b = Bench::default();
+
+    // ---- pure-rust substrate paths (always available) ----
+    let mut rng = Rng::new(1);
+    let u = Tensor::randn(&[8, 128], 0.1, &mut rng);
+    b.run("blocks/gather 4-of-16 (R=8,O=8)", |_| gather_blocks(&u, &[1, 5, 9, 13], 8));
+
+    let reduced = gather_blocks(&u, &[1, 5, 9, 13], 8);
+    b.run("blocks/scatter+count", |_| {
+        let mut sums = Tensor::zeros(&[8, 128]);
+        let mut counts = vec![0u32; 16];
+        scatter_blocks_add(&mut sums, &mut counts, &reduced, &[1, 5, 9, 13], 8);
+        sums
+    });
+
+    let gen = ImageGen::cifar_twin();
+    b.run("data/synthesize 64 images", |i| gen.generate(64, i, &mut Rng::new(i)));
+
+    // manifest-dependent paths
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts missing — run `make artifacts` for the PJRT benches)");
+        return;
+    }
+    let engine = Engine::new(Manifest::load(&dir).unwrap()).unwrap();
+    let info = engine.manifest().model("cnn").unwrap().clone();
+    let cfg = ExperimentConfig::preset("cnn", Scale::Smoke);
+
+    // round planning
+    let ctrl = ControllerCfg {
+        mu_max: cfg.mu_max, rho: cfg.rho, eta: 0.1, epsilon: cfg.epsilon,
+        tau_min: 1, tau_max: 60, tau_floor: 10, h_max: 1_000_000,
+    };
+    let est = Estimates { l: 2.0, sigma_sq: 0.5, g_sq: 1.0, loss: 2.0 };
+    let statuses: Vec<ClientStatus> = (0..10)
+        .map(|i| ClientStatus {
+            client: i,
+            q_flops: 2e7 + i as f64 * 7e6,
+            link: LinkSample { up_bps: 8_000.0 + i as f64 * 1000.0, down_bps: 50_000.0 },
+        })
+        .collect();
+    b.run("coordinator/plan_round K=10", |_| {
+        let mut ledger = BlockLedger::new(&info);
+        plan_round(&info, &ctrl, &est, &statuses, &mut ledger)
+    });
+
+    // aggregation of K=10 full-width updates
+    let mut rng = Rng::new(2);
+    let global = ComposedGlobal::init(&info, &mut rng).unwrap();
+    let mut ledger = BlockLedger::new(&info);
+    let full = ledger.full_selection(&info);
+    let payload = global.reduced_inputs(&info, info.cap_p, &full.blocks).unwrap();
+    b.run("coordinator/aggregate K=10 full-width", |_| {
+        let mut acc = ComposedAccumulator::new(&info, &global);
+        for _ in 0..10 {
+            acc.push(&full.blocks, &payload).unwrap();
+        }
+        acc.finalize().unwrap()
+    });
+
+    // PJRT single train-step dispatch (p=1 and p=4)
+    let ds = ImageGen::cifar_twin().generate(info.batch, 7, &mut rng);
+    let mut x = vec![0.0f32; info.batch * ds.sample_size()];
+    let mut y = vec![0i32; info.batch];
+    for i in 0..info.batch {
+        x[i * ds.sample_size()..(i + 1) * ds.sample_size()].copy_from_slice(ds.sample(i));
+        y[i] = ds.labels[i];
+    }
+    let xt = Tensor::from_vec(&[info.batch, 16, 16, 3], x);
+    let yt = heroes::tensor::IntTensor::from_vec(&[info.batch], y);
+    let lr = Tensor::from_vec(&[1], vec![0.05]);
+    for p in [1, info.cap_p] {
+        let sel = ledger.select_for_width(&info, p);
+        let params = global.reduced_inputs(&info, p, &sel.blocks).unwrap();
+        let name = Manifest::train_name("cnn", p, true);
+        engine.prepare(&name).unwrap();
+        b.run(&format!("pjrt/train_step cnn p={p}"), |_| {
+            let mut inputs: Vec<Value> = params.iter().map(Value::F32).collect();
+            inputs.push(Value::F32(&xt));
+            inputs.push(Value::I32(&yt));
+            inputs.push(Value::F32(&lr));
+            engine.execute(&name, &inputs).unwrap()
+        });
+    }
+    let st = engine.stats();
+    println!(
+        "engine totals: {} compiles ({:.2}s), {} executions ({:.3}ms mean)",
+        st.compiles,
+        st.compile_secs,
+        st.executions,
+        1e3 * st.execute_secs / st.executions.max(1) as f64
+    );
+}

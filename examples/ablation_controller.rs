@@ -1,0 +1,61 @@
+//! Ablation: which of Heroes' two mechanisms buys what?
+//!
+//! Runs four variants under identical worlds (DESIGN.md ablation index):
+//!   1. full Heroes            (adaptive τ + enhanced NC rotation)
+//!   2. Heroes w/o adaptive τ  (fixed identical τ, rotation kept)
+//!   3. Flanc                  (original NC: no rotation, fixed τ)
+//!   4. FedAvg                 (no NC at all)
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example ablation_controller
+//! ```
+
+use heroes::baselines::make_strategy;
+use heroes::baselines::Strategy;
+use heroes::config::{ExperimentConfig, Scale};
+use heroes::coordinator::env::FlEnv;
+use heroes::runtime::{Engine, Manifest};
+use heroes::util::rng::Rng;
+
+fn run_variant(
+    engine: &Engine,
+    cfg: &ExperimentConfig,
+    label: &str,
+    scheme: &str,
+) -> anyhow::Result<()> {
+    let mut env = FlEnv::build(engine, cfg.clone())?;
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut s = make_strategy(scheme, &env.info, cfg, &mut rng)?;
+    let mut waits = Vec::new();
+    for _ in 0..cfg.rounds {
+        waits.push(s.run_round(&mut env)?.avg_wait);
+    }
+    let (_, acc) = s.evaluate(&env)?;
+    println!(
+        "{label:<24} acc {:>5.1}%  sim {:>7.1}s  wait {:>5.2}s  traffic {:.4} GB",
+        acc * 100.0,
+        env.clock.now(),
+        heroes::util::stats::mean(&waits),
+        env.traffic.total_gb()
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    heroes::util::logging::init_from_env();
+    let engine = Engine::new(Manifest::load(&Manifest::default_dir())?)?;
+    let mut cfg = ExperimentConfig::preset("cnn", Scale::Smoke);
+    cfg.rounds = 25;
+
+    run_variant(&engine, &cfg, "heroes (full)", "heroes")?;
+
+    // no adaptive τ: collapse the controller's freedom to a single value
+    let mut fixed = cfg.clone();
+    fixed.tau_min = fixed.tau_default;
+    fixed.tau_max = fixed.tau_default;
+    run_variant(&engine, &fixed, "heroes w/o adaptive τ", "heroes")?;
+
+    run_variant(&engine, &cfg, "flanc (original NC)", "flanc")?;
+    run_variant(&engine, &cfg, "fedavg", "fedavg")?;
+    Ok(())
+}

@@ -1,0 +1,31 @@
+use heroes::config::{ExperimentConfig, Scale};
+use heroes::coordinator::env::FlEnv;
+use heroes::coordinator::server::HeroesServer;
+use heroes::runtime::{Engine, Manifest};
+use heroes::util::rng::Rng;
+use heroes::baselines::Strategy;
+
+fn main() {
+    let engine = Engine::new(Manifest::load(&Manifest::default_dir()).unwrap()).unwrap();
+    let mut cfg = ExperimentConfig::preset("cnn", Scale::Smoke);
+    cfg.n_clients = 8; cfg.k_per_round = 4; cfg.samples_per_client = 32;
+    cfg.test_samples = 128; cfg.tau_default = 4; cfg.tau_max = 12; cfg.mu_max = 1.1; 
+    let mut env = FlEnv::build(&engine, cfg.clone()).unwrap();
+    let mut rng = Rng::new(cfg.seed);
+    let mut server = HeroesServer::new(&env.info, &cfg, &mut rng).unwrap();
+    let norm = |s: &HeroesServer| -> (f64, f64) {
+        (s.global.bases.iter().map(|t| t.sq_norm()).sum::<f64>(),
+         s.global.coeffs.iter().map(|t| t.sq_norm()).sum::<f64>())
+    };
+    let (b0, c0) = norm(&server);
+    println!("init basis²={b0:.4} coeff²={c0:.4}");
+    for i in 0..50 {
+        let prev = server.global.clone();
+        let r = server.run_round(&mut env).unwrap();
+        let db: f64 = server.global.bases.iter().zip(&prev.bases).map(|(a,b)| a.sq_dist(b)).sum();
+        let dc: f64 = server.global.coeffs.iter().zip(&prev.coeffs).map(|(a,b)| a.sq_dist(b)).sum();
+        if i % 10 == 9 { let (l,a)=server.evaluate(&env).unwrap(); println!("round {i}: train={:.3} eval={l:.4} acc={a:.4} (db={db:.4} dc={dc:.4})", r.mean_loss); }
+    }
+    let (l, a) = server.evaluate(&env).unwrap();
+    println!("eval {l:.4} acc {a:.4}");
+}

@@ -1,0 +1,52 @@
+//! Scenario: federated next-character prediction over naturally Non-IID
+//! text shards (the paper's Shakespeare workload, §VI-D5).
+//!
+//! Each client's shard comes from its own style-perturbed Markov chain
+//! (like per-role dialogue styles); the composed RNN shares a neural
+//! basis across widths while Heroes rotates coefficient groups.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example text_federated
+//! ```
+
+use heroes::baselines::make_strategy;
+use heroes::baselines::Strategy;
+use heroes::config::{ExperimentConfig, Scale};
+use heroes::coordinator::env::FlEnv;
+use heroes::runtime::{Engine, Manifest};
+use heroes::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    heroes::util::logging::init_from_env();
+    let engine = Engine::new(Manifest::load(&Manifest::default_dir())?)?;
+
+    let mut cfg = ExperimentConfig::preset("rnn", Scale::Smoke);
+    cfg.n_clients = 12;
+    cfg.k_per_round = 4;
+    cfg.rounds = 30;
+
+    println!(
+        "federated text: {} clients (natural Non-IID shards), vocab 64, seq 20\n",
+        cfg.n_clients
+    );
+
+    for scheme in ["fedavg", "flanc", "heroes"] {
+        let mut env = FlEnv::build(&engine, cfg.clone())?;
+        let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+        let mut s = make_strategy(scheme, &env.info, &cfg, &mut rng)?;
+        let (_, acc0) = s.evaluate(&env)?;
+        for _ in 0..cfg.rounds {
+            s.run_round(&mut env)?;
+        }
+        let (loss, acc) = s.evaluate(&env)?;
+        println!(
+            "{scheme:<8} next-char acc {:.1}% -> {:.1}%  (sim {:.0}s, {:.4} GB, loss {loss:.3})",
+            acc0 * 100.0,
+            acc * 100.0,
+            env.clock.now(),
+            env.traffic.total_gb()
+        );
+    }
+    println!("\nchance level is 1/64 ≈ 1.6%; the chain's bigram ceiling is ~35-45%.");
+    Ok(())
+}

@@ -1,0 +1,184 @@
+"""AOT entry point: lower every Heroes executable to HLO *text* and emit
+artifacts/manifest.json for the rust runtime.
+
+Run once at build time (`make artifacts`); python never touches the
+request path afterwards. Interchange is HLO text, NOT serialized
+HloModuleProto — jax >= 0.5 emits protos with 64-bit instruction ids that
+the crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Per model family (cnn / resnet / rnn) we export:
+  {fam}_train_p{p}   composed train step,  p = 1..P     (Heroes, Flanc)
+  {fam}_dtrain_p{p}  dense train step,     p = 1..P     (FedAvg, ADP, HeteroFL)
+  {fam}_eval         composed eval at full width P
+  {fam}_deval        dense eval at full width P
+  {fam}_probe_p{p}   composed flat-gradient probe        (Alg. 2 l.7-9)
+
+manifest.json records, for every executable, the exact positional input /
+output tensor specs, and for every family the layer geometry, per-width
+FLOPs and transfer-byte cost model the L3 simulator uses (paper Eq. 17-18).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import specs as S
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def _sds(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), _DTYPES[dtype])
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _input_specs(spec: S.ModelSpec, p: int, composed: bool, kind: str):
+    """Positional input tensor specs for an executable."""
+    pspecs = (M.composed_param_specs(spec, p) if composed
+              else M.dense_param_specs(spec, p))
+    ins = [{"name": n, "shape": list(s), "dtype": "f32"} for n, s, _ in pspecs]
+    batch = spec.eval_batch if kind == "eval" else spec.batch
+    for n, s, d in M.data_specs(spec, batch):
+        ins.append({"name": n, "shape": list(s), "dtype": d})
+    if kind == "train":
+        ins.append({"name": "lr", "shape": [1], "dtype": "f32"})
+    return ins
+
+
+def _output_specs(spec: S.ModelSpec, p: int, composed: bool, kind: str):
+    if kind == "train":
+        pspecs = (M.composed_param_specs(spec, p) if composed
+                  else M.dense_param_specs(spec, p))
+        outs = [{"name": n, "shape": list(s), "dtype": "f32"} for n, s, _ in pspecs]
+        outs.append({"name": "loss", "shape": [1], "dtype": "f32"})
+        outs.append({"name": "grad_sq_norm", "shape": [1], "dtype": "f32"})
+        return outs
+    if kind == "eval":
+        return [{"name": "loss_sum", "shape": [1], "dtype": "f32"},
+                {"name": "correct", "shape": [1], "dtype": "f32"}]
+    d = M.probe_dim(spec, p, composed)
+    return [{"name": "grad_flat", "shape": [d], "dtype": "f32"}]
+
+
+def _builder(spec: S.ModelSpec, p: int, composed: bool, kind: str):
+    if kind == "train":
+        return M.make_train(spec, p, composed)
+    if kind == "eval":
+        return M.make_eval(spec, p, composed)
+    return M.make_probe(spec, p, composed)
+
+
+def _lower_one(spec: S.ModelSpec, p: int, composed: bool, kind: str, out_dir: str,
+               name: str) -> dict:
+    ins = _input_specs(spec, p, composed, kind)
+    args = [_sds(i["shape"], i["dtype"]) for i in ins]
+    fn = _builder(spec, p, composed, kind)
+    t0 = time.time()
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  {name:24s} {len(text):>9d} chars  {time.time()-t0:5.1f}s", flush=True)
+    return {
+        "file": fname, "model": spec.family, "kind": kind, "p": p,
+        "composed": composed,
+        "inputs": ins,
+        "outputs": _output_specs(spec, p, composed, kind),
+    }
+
+
+def _model_manifest(spec: S.ModelSpec) -> dict:
+    layers = []
+    for l in spec.layers:
+        layers.append({
+            "name": l.name, "kind": l.kind, "k": l.k, "stride": l.stride,
+            "i": l.i, "o": l.o, "r": l.r, "s_in": l.s_in, "s_out": l.s_out,
+            "in_class": l.in_class, "out_class": l.out_class,
+            "basis_shape": list(l.basis_shape()),
+            "block_shape": list(l.block_shape()),
+            "blocks_total": l.blocks_total(spec.cap_p),
+        })
+    widths = list(range(1, spec.cap_p + 1))
+    params = {
+        "composed": {str(p): [{"name": n, "shape": list(s), "init_std": std}
+                              for n, s, std in M.composed_param_specs(spec, p)]
+                     for p in widths},
+        "dense": {str(p): [{"name": n, "shape": list(s), "init_std": std}
+                           for n, s, std in M.dense_param_specs(spec, p)]
+                  for p in widths},
+    }
+    if spec.family == "rnn":
+        inp = {"kind": "text", "vocab": spec.vocab, "seq_len": spec.seq_len}
+    else:
+        inp = {"kind": "image", "hw": spec.input_hw, "channels": spec.in_channels}
+    return {
+        "cap_p": spec.cap_p, "classes": spec.classes,
+        "batch": spec.batch, "eval_batch": spec.eval_batch,
+        "input": inp, "layers": layers, "params": params,
+        "flops": {
+            "composed": {str(p): spec.train_flops(p, True) for p in widths},
+            "dense": {str(p): spec.train_flops(p, False) for p in widths},
+        },
+        "bytes": {
+            "composed": {str(p): spec.upload_bytes(p, True) for p in widths},
+            "dense": {str(p): spec.upload_bytes(p, False) for p in widths},
+        },
+        "probe_dim": {str(p): M.probe_dim(spec, p, True) for p in widths},
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--only", default=None, help="restrict to one family")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "models": {}, "executables": {}}
+    t0 = time.time()
+    for fam, mk in S.FAMILIES.items():
+        if args.only and fam != args.only:
+            continue
+        spec = mk()
+        print(f"[{fam}] lowering (P={spec.cap_p})", flush=True)
+        manifest["models"][fam] = _model_manifest(spec)
+        for p in range(1, spec.cap_p + 1):
+            manifest["executables"][f"{fam}_train_p{p}"] = _lower_one(
+                spec, p, True, "train", out_dir, f"{fam}_train_p{p}")
+            manifest["executables"][f"{fam}_dtrain_p{p}"] = _lower_one(
+                spec, p, False, "train", out_dir, f"{fam}_dtrain_p{p}")
+            manifest["executables"][f"{fam}_probe_p{p}"] = _lower_one(
+                spec, p, True, "probe", out_dir, f"{fam}_probe_p{p}")
+        manifest["executables"][f"{fam}_eval"] = _lower_one(
+            spec, spec.cap_p, True, "eval", out_dir, f"{fam}_eval")
+        manifest["executables"][f"{fam}_deval"] = _lower_one(
+            spec, spec.cap_p, False, "eval", out_dir, f"{fam}_deval")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    n = len(manifest["executables"])
+    print(f"wrote {n} executables + manifest.json in {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for Heroes' compute hot-spots.
+
+- compose: neural composition matmul w = v . u (fwd + VJP)  [paper Eq. 4]
+- sgd:     fused elementwise SGD update                      [Alg. 2 l.5]
+- xent:    fused softmax cross-entropy (fwd + VJP)
+- ref:     pure-jnp oracles for all of the above
+"""
+from .compose import compose, matmul  # noqa: F401
+from .sgd import sgd_update  # noqa: F401
+from .xent import xent  # noqa: F401

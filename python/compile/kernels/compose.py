@@ -1,0 +1,104 @@
+"""Pallas kernels for neural composition (paper §II-B, Eq. 4 / Fig. 1).
+
+The compute hot-spot of Heroes is the composition matmul
+``w = reshape(v · û)`` plus its two VJP matmuls (``dv = dw · ûᵀ``,
+``dû = vᵀ · dw``). All three run through one tiled Pallas matmul kernel.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks (M/TM, N/TN)
+output tiles; each step keeps an (TM, K) A-tile and a (K, TN) B-tile
+resident in VMEM and contracts them on the MXU with f32 accumulation
+(``preferred_element_type``). K is the rank R (small), so a single K pass
+per tile suffices — no K-loop accumulator is needed, which keeps the VMEM
+footprint at ``TM*K + K*TN + TM*TN`` floats per step and lets the implicit
+Pallas pipeline double-buffer the HBM→VMEM streams.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode is the correctness path (validated against
+kernels.ref by pytest); real-TPU performance is estimated analytically in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Largest tile edge we allow. 128 matches the MXU systolic-array edge;
+# tiles are chosen as the largest divisor of the dim that is <= this.
+_MAX_TILE = 128
+# Single-pass contraction bound: all Heroes shapes have K = R (<= 32) in
+# the forward pass and K = k^2*I (<= 576) in the VJPs.
+_MAX_K = 4096
+
+
+def _tile(dim: int, cap: int = _MAX_TILE) -> int:
+    """Largest divisor of `dim` that is <= cap (>= 1)."""
+    if dim <= cap:
+        return max(dim, 1)
+    for t in range(cap, 0, -1):
+        if dim % t == 0:
+            return t
+    return 1
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Tiled Pallas matmul: (M, K) x (K, N) -> (M, N), f32 accumulate.
+
+    Grid is (M/TM, N/TN); K is contracted in a single pass (see module
+    docstring for why that is the right TPU schedule at Heroes' ranks).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} x {b.shape}"
+    assert k <= _MAX_K, f"K={k} exceeds single-pass bound {_MAX_K}"
+    tm, tn = _tile(m), _tile(n)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def compose(v: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Neural composition w = v · u (paper Eq. 4).
+
+    v: (K2, I, R) neural basis; u: (R, BO) reduced coefficient built from
+    b(p) least-trained blocks. Returns (K2, I, BO); the model layer
+    reshapes this to the (k, k, p_in*I, p_out*O) weight (paper Fig. 1).
+
+    Differentiable via custom VJP so gradients flow into both factors —
+    this is the Flanc-style all-in-one training that replaces the lossy
+    decompose step of Alg. 2 line 10 (see DESIGN.md "Decomposition note").
+    """
+    k2, i, r = v.shape
+    return matmul(v.reshape(k2 * i, r), u).reshape(k2, i, u.shape[1])
+
+
+def _compose_fwd(v, u):
+    return compose(v, u), (v, u)
+
+
+def _compose_bwd(res, dw):
+    v, u = res
+    k2, i, r = v.shape
+    bo = u.shape[1]
+    dw2 = dw.reshape(k2 * i, bo)
+    dv = matmul(dw2, u.T).reshape(k2, i, r)
+    du = matmul(v.reshape(k2 * i, r).T, dw2)
+    return dv, du
+
+
+compose.defvjp(_compose_fwd, _compose_bwd)

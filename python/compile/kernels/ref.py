@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness reference).
+
+Every Pallas kernel in this package has an exact jnp twin here; pytest
+asserts allclose between the two across a hypothesis-driven sweep of
+shapes/dtypes (python/tests/test_kernels.py). The oracles are also the
+semantic definition used by the convergence-sensitive code paths: if a
+kernel and its oracle disagree, the kernel is wrong.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain 2-D matmul in f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def compose_ref(v: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Neural composition (paper Eq. 4): w = v · u.
+
+    v: (K2, I, R) neural basis, u: (R, BO) reduced coefficient.
+    Returns the intermediate tensor (K2, I, BO); the caller reshapes to
+    the (k, k, p_in*I, p_out*O) weight (paper Fig. 1).
+    """
+    k2, i, r = v.shape
+    return matmul_ref(v.reshape(k2 * i, r), u).reshape(k2, i, u.shape[1])
+
+
+def sgd_ref(param: jnp.ndarray, grad: jnp.ndarray, lr: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise SGD: p - lr * g, lr a (1,) array."""
+    return param - lr[0] * grad
+
+
+def xent_ref(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample softmax cross-entropy.
+
+    logits: (B, C) f32, labels: (B,) int32. Returns (B,) f32 losses.
+    """
+    m = jnp.max(logits, axis=1, keepdims=True)
+    lse = m[:, 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=1))
+    picked = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return lse - picked
+
+
+def xent_grad_ref(logits: jnp.ndarray, labels: jnp.ndarray, dloss: jnp.ndarray) -> jnp.ndarray:
+    """VJP of xent_ref w.r.t. logits: (softmax - onehot) * dloss."""
+    m = jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(logits - m)
+    sm = e / jnp.sum(e, axis=1, keepdims=True)
+    onehot = (labels[:, None] == jnp.arange(logits.shape[1])[None, :]).astype(logits.dtype)
+    return (sm - onehot) * dloss[:, None]

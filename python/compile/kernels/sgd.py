@@ -1,0 +1,44 @@
+"""Fused elementwise SGD-update Pallas kernel.
+
+Applied to every basis / coefficient / bias tensor once per local
+iteration (paper Alg. 2 line 5). The tensor is flattened, padded to a
+lane-friendly multiple, and walked by a 1-D grid; the learning rate
+arrives as a (1,) operand so the same AOT executable serves any lr the
+rust coordinator chooses at runtime.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8 sublanes x 128 lanes — one f32 VREG tile on TPU.
+_CHUNK = 1024
+
+
+def _sgd_kernel(p_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def sgd_update(param: jnp.ndarray, grad: jnp.ndarray, lr: jnp.ndarray) -> jnp.ndarray:
+    """p - lr * g, elementwise, any shape; lr is a (1,) f32 array."""
+    assert param.shape == grad.shape, (param.shape, grad.shape)
+    shape = param.shape
+    n = param.size
+    pad = (-n) % _CHUNK
+    p1 = jnp.pad(param.reshape(-1), (0, pad))
+    g1 = jnp.pad(grad.reshape(-1), (0, pad))
+    total = n + pad
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(total // _CHUNK,),
+        in_specs=[
+            pl.BlockSpec((_CHUNK,), lambda i: (i,)),
+            pl.BlockSpec((_CHUNK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_CHUNK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((total,), jnp.float32),
+        interpret=True,
+    )(p1, g1, lr)
+    return out[:n].reshape(shape)

@@ -1,0 +1,257 @@
+"""L2: Heroes model forward/train/eval graphs in JAX (build-time only).
+
+Every exported function takes a *flat* argument list (the manifest records
+the exact ordering) so the rust L3 coordinator can feed PJRT literals
+positionally:
+
+  composed params : [v_0, u_0, v_1, u_1, ..., bias]       (layer order)
+  dense params    : [w_0, w_1, ..., bias]
+  train   : (*params, x, y, lr)  -> (*params', loss[1], grad_sq_norm[1])
+  eval    : (*params, x, y)      -> (loss_sum[1], correct[1])
+  probe   : (*params, x, y)      -> (grad_flat[D],)        (Alg. 2 l.7-9)
+
+The composed path calls the L1 Pallas kernels (compose / sgd / xent) so
+they lower into the same HLO module; the dense path (baselines: FedAvg,
+ADP, HeteroFL) shares xent/sgd. Width-p geometry follows paper Fig. 1:
+û_p is the concatenation of b(p) blocks chosen by the rust block ledger —
+the HLO is width-specific but block-choice agnostic.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import compose, sgd_update, xent
+from .specs import LayerSpec, ModelSpec
+
+# ---------------------------------------------------------------------------
+# parameter bookkeeping
+
+
+def composed_param_specs(spec: ModelSpec, p: int) -> List[Tuple[str, Tuple[int, ...], float]]:
+    """(name, shape, init_std) for every composed-model input tensor."""
+    out = []
+    for l in spec.layers:
+        k2, i, r = l.basis_shape()
+        # Composed weight w = v·u has var(w) = R·var(v)·var(u). Target
+        # He-init variance 2/fan_in at the FULL width P (the global
+        # coefficient is initialized once, width-independently); narrower
+        # compositions are then mildly conservative, never explosive.
+        fan_in_full = k2 * l.p_in(spec.cap_p) * i
+        out.append((f"v_{l.name}", (k2, i, r), (1.0 / (k2 * i)) ** 0.5))
+        out.append((f"u_{l.name}", l.coeff_shape(p),
+                    (2.0 * k2 * i / (r * fan_in_full)) ** 0.5))
+    out.append(("bias", (spec.classes,), 0.0))
+    return out
+
+
+def dense_param_specs(spec: ModelSpec, p: int) -> List[Tuple[str, Tuple[int, ...], float]]:
+    """(name, shape, init_std) for every dense-model input tensor."""
+    out = []
+    for l in spec.layers:
+        shape = l.weight_shape(p)
+        # He at FULL width, like the composed path: HeteroFL slices the
+        # width-P global model, so sub-width weights inherit the full-width
+        # variance and the forward pass applies the static scaler.
+        fan_in_full = l.k * l.k * l.p_in(spec.cap_p) * l.i
+        out.append((f"w_{l.name}", shape, (2.0 / fan_in_full) ** 0.5))
+    out.append(("bias", (spec.classes,), 0.0))
+    return out
+
+
+def data_specs(spec: ModelSpec, batch: int):
+    """(name, shape, dtype) of the (x, y) batch inputs."""
+    if spec.family == "rnn":
+        return [("x", (batch, spec.seq_len), "i32"), ("y", (batch, spec.seq_len), "i32")]
+    hw = spec.input_hw
+    return [("x", (batch, hw, hw, spec.in_channels), "f32"), ("y", (batch,), "i32")]
+
+
+# ---------------------------------------------------------------------------
+# weight materialization
+
+
+def _weight(l: LayerSpec, p: int, v: jnp.ndarray, u: jnp.ndarray, cap_p: int) -> jnp.ndarray:
+    """Compose + arrange one width-p weight (paper Fig. 1, via L1 kernel).
+
+    Block slot `s = a·p_out + g` must cover the *contiguous* input-channel
+    group `a` and output-channel group `g`, so that (i) consecutive
+    composed layers agree on channel grouping and (ii) a width-p model is
+    a channel-aligned sub-network of the width-P model. A plain row-major
+    reshape of (k², I, b·O) would interleave the basis rows across groups
+    (stride-P channels), destroying both properties — hence the explicit
+    (k², a, i, g, o) transpose before flattening.
+    """
+    inter = compose(v, u)                     # (k², I, b·O)
+    k2, i, _ = inter.shape
+    p_in, p_out = l.p_in(p), l.p_out(p)
+    inter = inter.reshape(k2, i, p_in, p_out, l.o)   # slots -> (a, g)
+    inter = inter.transpose(0, 2, 1, 3, 4)           # (k², a, i, g, o)
+    w = inter.reshape(l.weight_shape(p))
+    # Static width scaler (HeteroFL-style): factors are initialized for
+    # He variance at the FULL width P, so a width-p weight has fan-in
+    # p_in·I but variance 2/(k²·P·I) — sqrt(P/p_in) restores unit-scale
+    # activations at every width. Deterministic per width, identity at P.
+    if l.s_in and p < cap_p:
+        w = w * float((cap_p / p) ** 0.5)
+    return w
+
+
+def _conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int) -> jnp.ndarray:
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _weights_from_args(spec: ModelSpec, p: int, params: Sequence[jnp.ndarray], composed: bool):
+    """Materialize {layer name: weight} plus the head bias from flat params."""
+    ws = {}
+    if composed:
+        for idx, l in enumerate(spec.layers):
+            v, u = params[2 * idx], params[2 * idx + 1]
+            ws[l.name] = _weight(l, p, v, u, spec.cap_p)
+        bias = params[2 * len(spec.layers)]
+    else:
+        for idx, l in enumerate(spec.layers):
+            w = params[idx]
+            if l.s_in and p < spec.cap_p:
+                w = w * float((spec.cap_p / p) ** 0.5)  # static scaler
+            ws[l.name] = w
+        bias = params[len(spec.layers)]
+    return ws, bias
+
+
+# ---------------------------------------------------------------------------
+# family forwards
+
+
+def _cnn_forward(spec: ModelSpec, ws, bias, x):
+    h = jax.nn.relu(_conv2d(x, ws["conv1"], 1))
+    h = jax.nn.relu(_conv2d(h, ws["conv2"], 2))
+    h = jax.nn.relu(_conv2d(h, ws["conv3"], 2))
+    pooled = jnp.mean(h, axis=(1, 2))
+    return pooled @ ws["head"] + bias[None, :]
+
+
+def _resnet_forward(spec: ModelSpec, ws, bias, x):
+    # residual sums are normalized by 1/sqrt(2) to keep activation
+    # variance flat through the network (no BatchNorm in the composed
+    # setting — width-dependent statistics would break block sharing)
+    inv_sqrt2 = 0.7071067811865476
+    h1 = jax.nn.relu(_conv2d(x, ws["conv1"], 1))
+    b1 = _conv2d(jax.nn.relu(_conv2d(h1, ws["b1c1"], 1)), ws["b1c2"], 1)
+    h2 = jax.nn.relu((h1 + b1) * inv_sqrt2)
+    h3 = jax.nn.relu(
+        (_conv2d(h2, ws["down"], 2) + _conv2d(h2, ws["skip"], 2)) * inv_sqrt2
+    )
+    b2 = _conv2d(jax.nn.relu(_conv2d(h3, ws["b2c1"], 1)), ws["b2c2"], 1)
+    h4 = jax.nn.relu((h3 + b2) * inv_sqrt2)
+    pooled = jnp.mean(h4, axis=(1, 2))
+    return pooled @ ws["head"] + bias[None, :]
+
+
+def _rnn_forward(spec: ModelSpec, ws, bias, x):
+    """x: (B, T) int32 -> logits (B, T, vocab) via scan over time."""
+    emb = jnp.take(ws["embed"], x, axis=0)            # (B, T, E)
+    b, t, e = emb.shape
+    hidden = ws["wh"].shape[0]
+
+    def step(h, xt):
+        h = jnp.tanh(xt @ ws["wx"] + h @ ws["wh"])
+        return h, h
+
+    h0 = jnp.zeros((b, hidden), dtype=jnp.float32)
+    _, hs = lax.scan(step, h0, jnp.swapaxes(emb, 0, 1))  # (T, B, H)
+    logits = jnp.einsum("tbh,hc->tbc", hs, ws["head"]) + bias[None, None, :]
+    return jnp.swapaxes(logits, 0, 1)                    # (B, T, C)
+
+
+_FORWARDS = {"cnn": _cnn_forward, "resnet": _resnet_forward, "rnn": _rnn_forward}
+
+
+def forward(spec: ModelSpec, p: int, params: Sequence[jnp.ndarray], x: jnp.ndarray,
+            composed: bool) -> jnp.ndarray:
+    ws, bias = _weights_from_args(spec, p, params, composed)
+    return _FORWARDS[spec.family](spec, ws, bias, x)
+
+
+# ---------------------------------------------------------------------------
+# loss / metrics
+
+
+def _per_sample_loss(spec: ModelSpec, logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    if spec.family == "rnn":
+        b, t, c = logits.shape
+        return xent(logits.reshape(b * t, c), y.reshape(b * t))
+    return xent(logits, y)
+
+
+def _correct_count(spec: ModelSpec, logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    if spec.family == "rnn":
+        pred = jnp.argmax(logits, axis=-1)
+        return jnp.sum((pred == y).astype(jnp.float32))
+    pred = jnp.argmax(logits, axis=-1)
+    return jnp.sum((pred == y).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# exported graph builders (consumed by aot.py)
+
+
+def make_train(spec: ModelSpec, p: int, composed: bool):
+    """One local SGD iteration (paper Alg. 2 line 5) as a pure function."""
+    n_params = 2 * len(spec.layers) + 1 if composed else len(spec.layers) + 1
+
+    def train(*args):
+        params, (x, y, lr) = list(args[:n_params]), args[n_params:]
+
+        def loss_fn(ps):
+            logits = forward(spec, p, ps, x, composed)
+            return jnp.mean(_per_sample_loss(spec, logits, y))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new = [sgd_update(pa, g, lr) for pa, g in zip(params, grads)]
+        gsq = sum(jnp.sum(g * g) for g in grads)
+        return (*new, loss[None], gsq[None])
+
+    return train
+
+
+def make_eval(spec: ModelSpec, p: int, composed: bool):
+    """Batch evaluation: (loss_sum, correct_count) over eval_batch samples."""
+    n_params = 2 * len(spec.layers) + 1 if composed else len(spec.layers) + 1
+
+    def evaluate(*args):
+        params, (x, y) = list(args[:n_params]), args[n_params:]
+        logits = forward(spec, p, params, x, composed)
+        losses = _per_sample_loss(spec, logits, y)
+        return (jnp.sum(losses)[None], _correct_count(spec, logits, y)[None])
+
+    return evaluate
+
+
+def make_probe(spec: ModelSpec, p: int, composed: bool = True):
+    """Flat gradient probe: the PS estimates L, σ², G² (Alg. 2 lines 7-9)
+    from probe outputs at two parameter points / two batches."""
+    n_params = 2 * len(spec.layers) + 1 if composed else len(spec.layers) + 1
+
+    def probe(*args):
+        params, (x, y) = list(args[:n_params]), args[n_params:]
+
+        def loss_fn(ps):
+            logits = forward(spec, p, ps, x, composed)
+            return jnp.mean(_per_sample_loss(spec, logits, y))
+
+        grads = jax.grad(loss_fn)(params)
+        return (jnp.concatenate([g.reshape(-1) for g in grads]),)
+
+    return probe
+
+
+def probe_dim(spec: ModelSpec, p: int, composed: bool = True) -> int:
+    specs = composed_param_specs(spec, p) if composed else dense_param_specs(spec, p)
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s, _ in specs)

@@ -1,0 +1,233 @@
+"""Model-family specifications shared by L2 (jax), aot.py and (via
+manifest.json) the rust L3 coordinator.
+
+A composed layer follows paper §II-B: basis v ∈ (k², I, R), complete
+coefficient u ∈ (R, B·O) with B = P^(s_in + s_out) blocks of shape (R, O).
+A width-p reduction uses b(p) = p^(s_in + s_out) blocks; composing and
+reshaping yields the (k, k, p_in·I, p_out·O) weight, p_in = p if s_in else
+1, p_out = p if s_out else 1 (paper Fig. 1).
+
+Three families mirror the paper's evaluation (§VI-A):
+  cnn    — 4-layer CNN            (CIFAR-10 twin;      synthetic 16×16×3, 10 classes)
+  resnet — composed ResNet-8      (ImageNet-100 twin;  synthetic 16×16×3, 20 classes)
+  rnn    — next-char vanilla RNN  (Shakespeare twin;   64-symbol alphabet)
+
+The real datasets are not available offline; DESIGN.md §Substitutions
+documents the synthetic twins. All geometry below is exercised at the
+paper's P = 4 widths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+BYTES_F32 = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One composed layer (conv / dense / embedding lookup)."""
+
+    name: str
+    kind: str                 # 'conv' | 'dense' | 'embed'
+    k: int                    # kernel edge (1 for dense/embed)
+    stride: int               # conv stride (1 otherwise)
+    i: int                    # base input channels (per width unit)
+    o: int                    # base output channels (per width unit)
+    r: int                    # rank R of the factorization
+    s_in: bool                # input channel count scales with p
+    s_out: bool               # output channel count scales with p
+    # Channel-group classes: layers whose activations meet (sequentially
+    # or through residual adds) must select the SAME channel groups, so
+    # width-p sub-models stay channel-aligned sub-networks of the full
+    # model. `in_class` names the group class feeding this layer;
+    # `out_class` the class of its output channels. None on a fixed
+    # (non-scaling) side. The rust block ledger rotates *groups* per
+    # class (enhanced NC at group granularity — DESIGN.md §Deviations).
+    in_class: Optional[str] = None
+    out_class: Optional[str] = None
+
+    def blocks_total(self, cap_p: int) -> int:
+        """B = P^(s_in+s_out): number of blocks in the complete coefficient."""
+        return cap_p ** (int(self.s_in) + int(self.s_out))
+
+    def blocks_at(self, p: int) -> int:
+        """b(p) = p^(s_in+s_out): blocks composing a width-p weight."""
+        return p ** (int(self.s_in) + int(self.s_out))
+
+    def p_in(self, p: int) -> int:
+        return p if self.s_in else 1
+
+    def p_out(self, p: int) -> int:
+        return p if self.s_out else 1
+
+    def basis_shape(self) -> Tuple[int, int, int]:
+        return (self.k * self.k, self.i, self.r)
+
+    def block_shape(self) -> Tuple[int, int]:
+        return (self.r, self.o)
+
+    def coeff_shape(self, p: int) -> Tuple[int, int]:
+        """Reduced coefficient (R, b(p)·O)."""
+        return (self.r, self.blocks_at(p) * self.o)
+
+    def weight_shape(self, p: int):
+        """Composed / dense weight at width p."""
+        ci, co = self.p_in(p) * self.i, self.p_out(p) * self.o
+        if self.kind == "conv":
+            return (self.k, self.k, ci, co)
+        return (ci, co)
+
+    # --- cost model (used by aot.py to fill manifest; L3 simulator reads it) ---
+
+    def fwd_flops(self, p: int, hw: int) -> int:
+        """Forward FLOPs for one sample; hw = spatial positions seen by this
+        layer (1 for dense, seq_len for recurrent dense)."""
+        ci, co = self.p_in(p) * self.i, self.p_out(p) * self.o
+        return 2 * self.k * self.k * ci * co * hw
+
+    def compose_flops(self, p: int) -> int:
+        """Composition matmul + its two VJP matmuls (per iteration, not per
+        sample): 3 matmuls of (k²I × R) x (R × b·O)."""
+        m = self.k * self.k * self.i
+        n = self.blocks_at(p) * self.o
+        return 3 * 2 * m * self.r * n
+
+    def factor_bytes(self, p: int) -> int:
+        """Bytes of (v, û_p) — what Heroes/Flanc transmit."""
+        k2, i, r = self.basis_shape()
+        return BYTES_F32 * (k2 * i * r + r * self.blocks_at(p) * self.o)
+
+    def dense_bytes(self, p: int) -> int:
+        """Bytes of the dense width-p weight — what MP schemes transmit."""
+        ci, co = self.p_in(p) * self.i, self.p_out(p) * self.o
+        return BYTES_F32 * self.k * self.k * ci * co
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    family: str
+    layers: Tuple[LayerSpec, ...]
+    cap_p: int                       # P, maximum width
+    classes: int
+    batch: int                       # training batch size (fixed for AOT)
+    eval_batch: int
+    input_hw: Optional[int] = None   # image edge (CV families)
+    in_channels: int = 3
+    vocab: int = 0                   # NLP family
+    seq_len: int = 0
+
+    def layer(self, name: str) -> LayerSpec:
+        for l in self.layers:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    # --- spatial bookkeeping for the cost model ---
+
+    def spatial(self) -> dict:
+        """Map layer name -> number of spatial positions its conv touches."""
+        out = {}
+        if self.family == "rnn":
+            for l in self.layers:
+                out[l.name] = self.seq_len if l.name != "embed" else 1
+            return out
+        hw = self.input_hw
+        for l in self.layers:
+            if l.kind == "conv":
+                hw_out = (hw + l.stride - 1) // l.stride
+                out[l.name] = hw_out * hw_out
+                hw = hw_out
+            else:
+                out[l.name] = 1
+        return out
+
+    def train_flops(self, p: int, composed: bool) -> int:
+        """FLOPs for one local iteration (fwd + bwd ≈ 3×fwd per batch,
+        plus composition overhead when running the factorized model)."""
+        sp = self.spatial()
+        per_sample = sum(l.fwd_flops(p, sp[l.name]) for l in self.layers)
+        total = 3 * per_sample * self.batch
+        if composed:
+            total += sum(l.compose_flops(p) for l in self.layers)
+        return total
+
+    def upload_bytes(self, p: int, composed: bool) -> int:
+        """Bytes a client uploads after local training (paper Eq. 18);
+        the head bias (classes,) always rides along."""
+        if composed:
+            body = sum(l.factor_bytes(p) for l in self.layers)
+        else:
+            body = sum(l.dense_bytes(p) for l in self.layers)
+        return body + BYTES_F32 * self.classes
+
+    def download_bytes(self, p: int, composed: bool) -> int:
+        """PS -> client payload; same tensors travel down."""
+        return self.upload_bytes(p, composed)
+
+
+def _conv(name, i, o, r, *, k=3, stride=1, s_in=True, s_out=True, ic=None, oc=None):
+    return LayerSpec(name, "conv", k, stride, i, o, r, s_in, s_out, ic, oc)
+
+
+def _dense(name, i, o, r, *, s_in=True, s_out=False, ic=None, oc=None):
+    return LayerSpec(name, "dense", 1, 1, i, o, r, s_in, s_out, ic, oc)
+
+
+def cnn_spec() -> ModelSpec:
+    """4-layer CNN, the paper's CIFAR-10 model (§VI-A3): three 3×3 convs +
+    linear head. Base widths ×{1..4}."""
+    return ModelSpec(
+        family="cnn",
+        layers=(
+            _conv("conv1", 3, 4, 6, s_in=False, oc="g1"),
+            _conv("conv2", 4, 8, 8, stride=2, ic="g1", oc="g2"),
+            _conv("conv3", 8, 8, 8, stride=2, ic="g2", oc="g3"),
+            _dense("head", 8, 10, 8, ic="g3"),
+        ),
+        cap_p=4, classes=10, batch=16, eval_batch=64, input_hw=16,
+    )
+
+
+def resnet_spec() -> ModelSpec:
+    """Composed ResNet-8, the ImageNet-100 twin (paper uses ResNet-18; the
+    CPU-only box gets the same residual topology at reduced depth/width).
+    Residual adds tie group classes: conv1/b1c2 share s1; down/skip/b2c2
+    share s2."""
+    return ModelSpec(
+        family="resnet",
+        layers=(
+            _conv("conv1", 3, 4, 6, s_in=False, oc="s1"),
+            _conv("b1c1", 4, 4, 8, ic="s1", oc="m1"),
+            _conv("b1c2", 4, 4, 8, ic="m1", oc="s1"),
+            _conv("down", 4, 8, 8, stride=2, ic="s1", oc="s2"),
+            _conv("skip", 4, 8, 4, k=1, stride=2, ic="s1", oc="s2"),
+            _conv("b2c1", 8, 8, 8, ic="s2", oc="m2"),
+            _conv("b2c2", 8, 8, 8, ic="m2", oc="s2"),
+            _dense("head", 8, 20, 8, ic="s2"),
+        ),
+        cap_p=4, classes=20, batch=16, eval_batch=64, input_hw=16,
+    )
+
+
+def rnn_spec() -> ModelSpec:
+    """Vanilla tanh RNN for next-character prediction, the Shakespeare twin
+    (paper: RNN with hidden = embed = 512; ours: 8·p at P = 4). The hidden
+    state ties embed/wx/wh/head to one group class."""
+    return ModelSpec(
+        family="rnn",
+        layers=(
+            LayerSpec("embed", "embed", 1, 1, 64, 8, 8, False, True, None, "h"),
+            _dense("wx", 8, 8, 8, s_in=True, s_out=True, ic="h", oc="h"),
+            _dense("wh", 8, 8, 8, s_in=True, s_out=True, ic="h", oc="h"),
+            _dense("head", 8, 64, 8, ic="h"),
+        ),
+        cap_p=4, classes=64, batch=8, eval_batch=32, vocab=64, seq_len=20,
+    )
+
+
+FAMILIES = {"cnn": cnn_spec, "resnet": resnet_spec, "rnn": rnn_spec}
+
+
+def all_specs() -> List[ModelSpec]:
+    return [f() for f in FAMILIES.values()]

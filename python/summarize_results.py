@@ -1,0 +1,106 @@
+"""Render results/*_summary.json into the EXPERIMENTS.md tables.
+
+Usage: python python/summarize_results.py [results_dir]
+"""
+import json
+import os
+import sys
+
+
+def load(d, name):
+    p = os.path.join(d, f"{name}_summary.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def pct(x):
+    return "n/r" if x is None else f"{100*x:.1f}%"
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results"
+
+    t1 = load(d, "table1")
+    if t1:
+        print("## Table I (measured)")
+        bg, bt = t1["budgets_gb"], t1["budgets_s"]
+        print(f"| scheme | acc@{bg[0]:.3f}GB | acc@{bg[1]:.3f}GB | acc@{bt[0]:.0f}s | acc@{bt[1]:.0f}s |")
+        print("|---|---|---|---|---|")
+        label = {"heterofl": "MP", "flanc": "Original NC", "heroes": "Enhanced NC"}
+        for s in ["heterofl", "flanc", "heroes"]:
+            row = t1["accuracy"].get(s)
+            if row:
+                print(f"| {label[s]} | " + " | ".join(pct(x) for x in row) + " |")
+        print()
+
+    f2 = load(d, "fig2")
+    if f2:
+        print("## Fig 2 (measured)")
+        fx, ad = f2["fixed_sorted_s"], f2["adaptive_sorted_s"]
+        print(f"- fixed τ: max {fx[0]:.1f}s / min {fx[-1]:.1f}s, mean idle {100*f2['fixed_idle_frac']:.1f}%")
+        print(f"- adaptive τ: max {ad[0]:.1f}s / min {ad[-1]:.1f}s, mean idle {100*f2['adaptive_idle_frac']:.1f}%")
+        print()
+
+    for name, title in [("fig4a", "Fig 4a (CNN)"), ("fig4b", "Fig 4b (ResNet)")]:
+        f4 = load(d, name)
+        if f4:
+            print(f"## {title} — accuracy at the common time budget ({f4['time_budget_s']:.0f}s)")
+            print("| scheme | final acc |")
+            print("|---|---|")
+            for s, acc in sorted(f4["final_accuracy"].items(), key=lambda kv: -kv[1]):
+                print(f"| {s} | {pct(acc)} |")
+            print()
+
+    for name, title in [("fig5a", "Fig 5a (CNN)"), ("fig5b", "Fig 5b (ResNet)")]:
+        f5 = load(d, name)
+        if f5:
+            print(f"## {title} — mean waiting time")
+            print("| scheme | wait (s) |")
+            print("|---|---|")
+            for s, w in sorted(f5["mean_wait_s"].items(), key=lambda kv: kv[1]):
+                print(f"| {s} | {w:.2f} |")
+            print()
+
+    for name, title in [("fig6", "Fig 6 (CNN)"), ("fig8", "Fig 8 (ResNet)")]:
+        f = load(d, name)
+        if f:
+            print(f"## {title} — to {100*f['target_accuracy']:.0f}% accuracy")
+            print("| scheme | traffic (GB) | time (s) | final acc |")
+            print("|---|---|---|---|")
+            for s, row in f["consumption"].items():
+                gb = row["traffic_gb"]
+                t = row["time_s"]
+                print(f"| {s} | {gb if gb is None else f'{gb:.4f}'} | "
+                      f"{t if t is None else f'{t:.0f}'} | {pct(row['final_acc'])} |")
+            print()
+
+    for name, title in [("fig7a", "Fig 7a (Γ sweep, CNN)"), ("fig7b", "Fig 7b (φ sweep, ResNet)")]:
+        f = load(d, name)
+        if f:
+            print(f"## {title} — accuracy at common budget per level")
+            print("| scheme | " + " | ".join(str(int(l)) for l in f["levels"]) + " |")
+            print("|---|" + "---|" * len(f["levels"]))
+            for s, accs in f["accuracy"].items():
+                print(f"| {s} | " + " | ".join(pct(a) for a in accs) + " |")
+            print()
+
+    f9 = load(d, "fig9")
+    if f9:
+        print(f"## Fig 9 (RNN) — to {100*f9['target_accuracy']:.0f}% next-char accuracy")
+        print("| scheme | time (s) | traffic (GB) | final acc |")
+        print("|---|---|---|---|")
+        for s, row in f9["results"].items():
+            t, gb = row["time_s"], row["traffic_gb"]
+            print(f"| {s} | {t if t is None else f'{t:.0f}'} | "
+                  f"{gb if gb is None else f'{gb:.4f}'} | {pct(row['final_acc'])} |")
+        print()
+
+    e2 = load(d, "e2e")
+    if e2:
+        print(f"## e2e — Heroes final accuracy {pct(e2['final_accuracy'])} after {e2['rounds']} rounds")
+
+
+if __name__ == "__main__":
+    main()

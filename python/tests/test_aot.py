@@ -1,0 +1,101 @@
+"""AOT pipeline checks: spec builders agree with the exported manifest and
+the HLO files exist and parse structurally (when artifacts are built)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import specs as S
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+HAVE_ARTIFACTS = os.path.exists(os.path.join(ART, "manifest.json"))
+
+
+def test_input_specs_ordering():
+    spec = S.cnn_spec()
+    ins = aot._input_specs(spec, 2, True, "train")
+    names = [i["name"] for i in ins]
+    assert names[0] == "v_conv1"
+    assert names[1] == "u_conv1"
+    assert names[-3:] == ["x", "y", "lr"]
+    # eval uses eval_batch and no lr
+    ev = aot._input_specs(spec, 4, True, "eval")
+    assert ev[-1]["name"] == "y"
+    assert ev[-2]["shape"][0] == spec.eval_batch
+
+
+def test_output_specs_match_kind():
+    spec = S.rnn_spec()
+    outs = aot._output_specs(spec, 3, True, "train")
+    assert outs[-2]["name"] == "loss"
+    assert outs[-1]["name"] == "grad_sq_norm"
+    assert len(outs) == 2 * len(spec.layers) + 1 + 2
+    probe = aot._output_specs(spec, 3, True, "probe")
+    assert probe[0]["shape"] == [M.probe_dim(spec, 3, True)]
+    ev = aot._output_specs(spec, 4, True, "eval")
+    assert [o["name"] for o in ev] == ["loss_sum", "correct"]
+
+
+def test_model_manifest_contents():
+    spec = S.resnet_spec()
+    m = aot._model_manifest(spec)
+    assert m["cap_p"] == 4
+    assert len(m["layers"]) == len(spec.layers)
+    for lm, l in zip(m["layers"], spec.layers):
+        assert lm["blocks_total"] == l.blocks_total(4)
+        assert lm["in_class"] == l.in_class
+        assert lm["out_class"] == l.out_class
+    for p in "1234":
+        assert m["flops"]["composed"][p] > 0
+        assert m["bytes"]["composed"][p] < m["bytes"]["dense"][p] or p == "1"
+
+
+@pytest.mark.skipif(not HAVE_ARTIFACTS, reason="run `make artifacts` first")
+def test_manifest_file_matches_specs():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert set(man["models"]) == set(S.FAMILIES)
+    for fam, mk in S.FAMILIES.items():
+        spec = mk()
+        got = man["models"][fam]
+        expect = aot._model_manifest(spec)
+        assert got["cap_p"] == expect["cap_p"]
+        assert got["params"] == expect["params"]
+        assert got["flops"] == {k: {p: float(v) for p, v in d.items()}
+                                for k, d in expect["flops"].items()}
+        for p in range(1, spec.cap_p + 1):
+            for kind in ["train", "dtrain", "probe"]:
+                name = f"{fam}_{kind}_p{p}"
+                assert name in man["executables"], name
+                assert os.path.exists(os.path.join(ART, man["executables"][name]["file"]))
+        for kind in ["eval", "deval"]:
+            assert f"{fam}_{kind}" in man["executables"]
+
+
+@pytest.mark.skipif(not HAVE_ARTIFACTS, reason="run `make artifacts` first")
+def test_hlo_files_look_like_hlo():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    # spot-check one executable per family
+    for fam in S.FAMILIES:
+        path = os.path.join(ART, man["executables"][f"{fam}_train_p1"]["file"])
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, f"{path} does not look like HLO text"
+        assert "ENTRY" in open(path).read()
+
+
+def test_lowering_one_executable_roundtrip(tmp_path):
+    """Actually lower a tiny executable and check the emitted spec."""
+    spec = S.cnn_spec()
+    entry = aot._lower_one(spec, 1, True, "eval", str(tmp_path), "tmp_eval")
+    assert (tmp_path / "tmp_eval.hlo.txt").exists()
+    text = (tmp_path / "tmp_eval.hlo.txt").read_text()
+    assert "HloModule" in text
+    assert entry["kind"] == "eval"
+    assert entry["inputs"][-1]["dtype"] == "i32"
+    # input count: 2 per layer + bias + x + y
+    assert len(entry["inputs"]) == 2 * len(spec.layers) + 1 + 2

@@ -1,0 +1,149 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle,
+including the custom VJPs, with hypothesis sweeping shapes/dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import compose, matmul, sgd_update, xent
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def arr(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32) * scale)
+
+
+# ----------------------------------------------------------------------
+# matmul / compose
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 48),
+    n=st.integers(1, 200),
+)
+def test_matmul_matches_ref_over_shapes(m, k, n):
+    a = arr(m, k)
+    b = arr(k, n)
+    np.testing.assert_allclose(matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.sampled_from([1, 3]),
+    i=st.integers(1, 12),
+    r=st.integers(1, 16),
+    blocks=st.integers(1, 16),
+    o=st.integers(1, 12),
+)
+def test_compose_matches_ref_over_geometry(k, i, r, blocks, o):
+    v = arr(k * k, i, r)
+    u = arr(r, blocks * o)
+    np.testing.assert_allclose(compose(v, u), ref.compose_ref(v, u), rtol=1e-4, atol=1e-5)
+
+
+def test_compose_vjp_matches_autodiff_of_ref():
+    v = arr(9, 4, 8)
+    u = arr(8, 128)
+
+    def f(v, u):
+        return jnp.sum(jnp.tanh(compose(v, u)))
+
+    def g(v, u):
+        return jnp.sum(jnp.tanh(ref.compose_ref(v, u)))
+
+    gv1, gu1 = jax.grad(f, argnums=(0, 1))(v, u)
+    gv2, gu2 = jax.grad(g, argnums=(0, 1))(v, u)
+    np.testing.assert_allclose(gv1, gv2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gu1, gu2, rtol=1e-4, atol=1e-5)
+
+
+def test_compose_under_jit():
+    v, u = arr(9, 3, 6), arr(6, 16)
+    out = jax.jit(compose)(v, u)
+    np.testing.assert_allclose(out, ref.compose_ref(v, u), rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_rejects_bad_contraction():
+    with pytest.raises(AssertionError):
+        matmul(arr(4, 5), arr(6, 7))
+
+
+# ----------------------------------------------------------------------
+# sgd
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    lr=st.floats(1e-4, 1.0),
+)
+def test_sgd_matches_ref_any_length(n, lr):
+    p = arr(n)
+    g = arr(n)
+    lr_a = jnp.asarray([lr], dtype=jnp.float32)
+    np.testing.assert_allclose(
+        sgd_update(p, g, lr_a), ref.sgd_ref(p, g, lr_a), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_sgd_nd_shapes():
+    for shape in [(3, 5, 7), (1,), (2, 2, 2, 2), (1024,), (1025,)]:
+        p, g = arr(*shape), arr(*shape)
+        lr = jnp.asarray([0.1], dtype=jnp.float32)
+        out = sgd_update(p, g, lr)
+        assert out.shape == p.shape
+        np.testing.assert_allclose(out, p - 0.1 * g, rtol=1e-5, atol=1e-6)
+
+
+def test_sgd_zero_lr_is_identity():
+    p, g = arr(33), arr(33)
+    out = sgd_update(p, g, jnp.asarray([0.0], dtype=jnp.float32))
+    np.testing.assert_array_equal(out, p)
+
+
+# ----------------------------------------------------------------------
+# xent
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 130), c=st.integers(2, 64))
+def test_xent_matches_ref_over_shapes(b, c):
+    z = arr(b, c, scale=3.0)
+    y = jnp.asarray(RNG.integers(0, c, size=(b,)).astype(np.int32))
+    np.testing.assert_allclose(xent(z, y), ref.xent_ref(z, y), rtol=1e-4, atol=1e-5)
+
+
+def test_xent_vjp_matches_autodiff_of_ref():
+    z = arr(32, 10, scale=2.0)
+    y = jnp.asarray(RNG.integers(0, 10, size=(32,)).astype(np.int32))
+
+    g1 = jax.grad(lambda z: jnp.mean(xent(z, y)))(z)
+    g2 = jax.grad(lambda z: jnp.mean(ref.xent_ref(z, y)))(z)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-6)
+
+
+def test_xent_is_shift_invariant():
+    z = arr(8, 12)
+    y = jnp.asarray(RNG.integers(0, 12, size=(8,)).astype(np.int32))
+    np.testing.assert_allclose(xent(z, y), xent(z + 100.0, y), rtol=1e-4, atol=1e-4)
+
+
+def test_xent_correct_class_dominant_gives_low_loss():
+    c = 10
+    y = jnp.asarray(np.arange(8, dtype=np.int32) % c)
+    z = jax.nn.one_hot(y, c) * 20.0
+    losses = xent(z, y)
+    assert float(jnp.max(losses)) < 1e-3
+
+
+def test_xent_gradient_rows_sum_to_zero():
+    # d/dz of per-sample xent sums to zero across classes
+    z = arr(16, 7)
+    y = jnp.asarray(RNG.integers(0, 7, size=(16,)).astype(np.int32))
+    g = jax.grad(lambda z: jnp.sum(xent(z, y)))(z)
+    np.testing.assert_allclose(jnp.sum(g, axis=1), jnp.zeros(16), atol=1e-5)

@@ -1,0 +1,195 @@
+"""L2 correctness: model geometry, training dynamics, the channel-aligned
+composition property, the static width scaler, and probes — for all three
+families at every width."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import specs as S
+
+RNG = np.random.default_rng(7)
+
+
+def init(pspecs):
+    return [
+        jnp.asarray(RNG.normal(size=s).astype(np.float32) * (std if std > 0 else 0.0))
+        for _, s, std in pspecs
+    ]
+
+
+def batch_for(spec, batch=None):
+    b = batch or spec.batch
+    if spec.family == "rnn":
+        x = jnp.asarray(RNG.integers(0, spec.vocab, size=(b, spec.seq_len)).astype(np.int32))
+        y = jnp.asarray(RNG.integers(0, spec.vocab, size=(b, spec.seq_len)).astype(np.int32))
+    else:
+        x = jnp.asarray(RNG.normal(size=(b, spec.input_hw, spec.input_hw, 3)).astype(np.float32))
+        y = jnp.asarray(RNG.integers(0, spec.classes, size=(b,)).astype(np.int32))
+    return x, y
+
+
+FAMS = list(S.FAMILIES)
+WIDTHS = [1, 2, 3, 4]
+
+
+@pytest.mark.parametrize("fam", FAMS)
+@pytest.mark.parametrize("p", WIDTHS)
+@pytest.mark.parametrize("composed", [True, False])
+def test_forward_shapes(fam, p, composed):
+    spec = S.FAMILIES[fam]()
+    ps = init(M.composed_param_specs(spec, p) if composed else M.dense_param_specs(spec, p))
+    x, _ = batch_for(spec)
+    logits = M.forward(spec, p, ps, x, composed)
+    if fam == "rnn":
+        assert logits.shape == (spec.batch, spec.seq_len, spec.vocab)
+    else:
+        assert logits.shape == (spec.batch, spec.classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("fam", FAMS)
+@pytest.mark.parametrize("p", [1, 4])
+@pytest.mark.parametrize("composed", [True, False])
+def test_train_step_reduces_loss(fam, p, composed):
+    spec = S.FAMILIES[fam]()
+    ps = init(M.composed_param_specs(spec, p) if composed else M.dense_param_specs(spec, p))
+    x, y = batch_for(spec)
+    tr = jax.jit(M.make_train(spec, p, composed))
+    lr = jnp.asarray([0.05], dtype=jnp.float32)
+    cur, losses = list(ps), []
+    for _ in range(30):
+        out = tr(*cur, x, y, lr)
+        cur = list(out[:-2])
+        losses.append(float(out[-2][0]))
+        assert float(out[-1][0]) >= 0.0  # grad_sq_norm
+    assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0], f"{fam} p={p} composed={composed}: {losses[0]} -> {losses[-1]}"
+
+
+@pytest.mark.parametrize("fam", FAMS)
+def test_eval_counts_and_loss(fam):
+    spec = S.FAMILIES[fam]()
+    p = spec.cap_p
+    ps = init(M.composed_param_specs(spec, p))
+    x, y = batch_for(spec, spec.eval_batch)
+    ev = M.make_eval(spec, p, True)
+    loss_sum, correct = ev(*ps, x, y)
+    n = spec.eval_batch * (spec.seq_len if fam == "rnn" else 1)
+    assert 0.0 <= float(correct[0]) <= n
+    assert float(loss_sum[0]) > 0.0
+
+
+@pytest.mark.parametrize("fam", FAMS)
+@pytest.mark.parametrize("p", [1, 3])
+def test_probe_dim_matches_param_count(fam, p):
+    spec = S.FAMILIES[fam]()
+    ps = init(M.composed_param_specs(spec, p))
+    x, y = batch_for(spec)
+    g = M.make_probe(spec, p, True)(*ps, x, y)[0]
+    expect = sum(int(np.prod(s)) for _, s, _ in M.composed_param_specs(spec, p))
+    assert g.shape == (expect,)
+    assert float(jnp.sum(g * g)) > 0.0
+
+
+def test_channel_aligned_composition():
+    """The width-p composed weight with group selections {A}×{G} must equal
+    (up to the static scaler) the full-width weight restricted to those
+    channel groups — the sub-network alignment property (DESIGN.md
+    §Deviations 1-2)."""
+    spec = S.FAMILIES["cnn"]()
+    l = spec.layer("conv2")  # s_in & s_out, B = 16
+    P = spec.cap_p
+    v = jnp.asarray(RNG.normal(size=l.basis_shape()).astype(np.float32))
+    u_full = jnp.asarray(RNG.normal(size=(l.r, l.blocks_total(P) * l.o)).astype(np.float32))
+    w_full = M._weight(l, P, v, u_full, P)  # (3,3,16,32)
+
+    sel_in, sel_out = [1, 3], [0, 2]  # arbitrary ascending groups
+    block_ids = [a * P + g for a in sel_in for g in sel_out]
+    u_hat = jnp.concatenate([u_full[:, b * l.o:(b + 1) * l.o] for b in block_ids], axis=1)
+    p = 2
+    w_sub = M._weight(l, p, v, u_hat, P)  # (3,3,8,16), scaled by sqrt(P/p)
+    scale = float(np.sqrt(P / p))
+
+    for ai, a in enumerate(sel_in):
+        for gi, g in enumerate(sel_out):
+            sub_tile = w_sub[:, :, ai * l.i:(ai + 1) * l.i, gi * l.o:(gi + 1) * l.o]
+            full_tile = w_full[:, :, a * l.i:(a + 1) * l.i, g * l.o:(g + 1) * l.o]
+            np.testing.assert_allclose(sub_tile / scale, full_tile, rtol=1e-5, atol=1e-6)
+
+
+def test_static_scaler_identity_at_full_width():
+    spec = S.FAMILIES["cnn"]()
+    l = spec.layer("conv3")
+    v = jnp.asarray(RNG.normal(size=l.basis_shape()).astype(np.float32))
+    u = jnp.asarray(RNG.normal(size=(l.r, l.blocks_total(4) * l.o)).astype(np.float32))
+    w4 = M._weight(l, 4, v, u, 4)
+    # recompute without scaler by asking for cap_p == p
+    inter = np.asarray(w4)
+    assert np.isfinite(inter).all()
+    # p=1 weight from block 0 should be exactly sqrt(4) x the full tile
+    u1 = u[:, : l.o]
+    w1 = M._weight(l, 1, v, u1, 4)
+    np.testing.assert_allclose(
+        np.asarray(w1) / 2.0, np.asarray(w4)[:, :, : l.i, : l.o], rtol=1e-5, atol=1e-6
+    )
+
+
+def test_logit_scale_healthy_across_widths():
+    """The static scaler keeps logits within an order of magnitude across
+    widths (the bug class that froze sub-width training)."""
+    spec = S.FAMILIES["cnn"]()
+    x, _ = batch_for(spec)
+    stds = []
+    for p in WIDTHS:
+        ps = init(M.composed_param_specs(spec, p))
+        stds.append(float(jnp.std(M.forward(spec, p, ps, x, True))))
+    assert max(stds) / min(stds) < 8.0, f"logit stds diverge across widths: {stds}"
+
+
+def test_param_specs_shapes_and_stds():
+    for fam in FAMS:
+        spec = S.FAMILIES[fam]()
+        for p in WIDTHS:
+            cspecs = M.composed_param_specs(spec, p)
+            assert cspecs[-1][0] == "bias"
+            for (name, shape, std), l in zip(cspecs[0::2], spec.layers):
+                assert name == f"v_{l.name}"
+                assert tuple(shape) == l.basis_shape()
+                assert std > 0
+            for (name, shape, _), l in zip(cspecs[1::2], spec.layers):
+                assert name == f"u_{l.name}"
+                assert tuple(shape) == l.coeff_shape(p)
+            dspecs = M.dense_param_specs(spec, p)
+            assert len(dspecs) == len(spec.layers) + 1
+
+
+def test_cost_model_monotone_in_width():
+    for fam in FAMS:
+        spec = S.FAMILIES[fam]()
+        for composed in [True, False]:
+            flops = [spec.train_flops(p, composed) for p in WIDTHS]
+            bytes_ = [spec.upload_bytes(p, composed) for p in WIDTHS]
+            assert flops == sorted(flops) and flops[0] > 0
+            assert bytes_ == sorted(bytes_) and bytes_[0] > 0
+        # the factorized transfer must beat dense at full width
+        assert spec.upload_bytes(4, True) < spec.upload_bytes(4, False)
+
+
+def test_group_classes_are_consistent():
+    """s_in/s_out must come with in_class/out_class, and residual-tied
+    layers must agree on base channel counts."""
+    for fam in FAMS:
+        spec = S.FAMILIES[fam]()
+        out_dims = {}
+        for l in spec.layers:
+            assert l.s_in == (l.in_class is not None), l.name
+            assert l.s_out == (l.out_class is not None), l.name
+            if l.out_class:
+                out_dims.setdefault(l.out_class, l.o)
+                assert out_dims[l.out_class] == l.o, f"{l.name}: class width mismatch"
+        for l in spec.layers:
+            if l.in_class:
+                assert l.in_class in out_dims, f"{l.name}: dangling in_class"
+                assert out_dims[l.in_class] == l.i, f"{l.name}: in/out width mismatch"

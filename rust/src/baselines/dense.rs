@@ -1,0 +1,193 @@
+//! Dense-model baselines: FedAvg, ADP and HeteroFL as one parameterized
+//! server (width policy × τ policy).
+//!
+//! * FedAvg  (width = Full, τ = Fixed): the reference scheme [McMahan'17].
+//! * ADP     (width = Full, τ = Adaptive): per-round identical τ chosen so
+//!   the projected slowest participant fits a per-round time budget —
+//!   the resource-constrained adaptive control of [Wang'18] reduced to
+//!   its time dimension (DESIGN.md §Substitutions).
+//! * HeteroFL (width = Greedy, τ = Fixed): width-pruned dense sub-models
+//!   by computation power with overlap-aware aggregation [Diao'20].
+
+use crate::baselines::Strategy;
+use crate::config::ExperimentConfig;
+use crate::coordinator::aggregate::DenseAccumulator;
+use crate::coordinator::assignment::average_wait;
+use crate::coordinator::client::run_local;
+use crate::coordinator::env::FlEnv;
+use crate::coordinator::frequency::completion_time;
+use crate::coordinator::RoundReport;
+use crate::model::DenseGlobal;
+use crate::runtime::{Manifest, ModelInfo};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Width assignment policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WidthPolicy {
+    /// everyone trains the full width-P model
+    Full,
+    /// greedy μ ≤ μ^max width by computation power (HeteroFL)
+    Greedy,
+}
+
+/// Local-update-frequency policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TauPolicy {
+    /// fixed identical τ every round (FedAvg, HeteroFL)
+    Fixed(usize),
+    /// identical τ per round fitted to a round-time budget (ADP)
+    Adaptive { round_budget: f64 },
+}
+
+/// Parameterized dense-model PS.
+pub struct DenseServer {
+    pub global: DenseGlobal,
+    scheme: &'static str,
+    width: WidthPolicy,
+    tau: TauPolicy,
+    family: String,
+    lr: f32,
+    lr_decay_rounds: usize,
+    mu_max: f64,
+    tau_bounds: (usize, usize),
+    round: usize,
+}
+
+impl DenseServer {
+    fn new(
+        scheme: &'static str,
+        width: WidthPolicy,
+        tau: TauPolicy,
+        info: &ModelInfo,
+        cfg: &ExperimentConfig,
+        rng: &mut Rng,
+    ) -> Result<DenseServer> {
+        Ok(DenseServer {
+            global: DenseGlobal::init(info, rng)?,
+            scheme,
+            width,
+            tau,
+            family: cfg.family.clone(),
+            lr: cfg.lr,
+            lr_decay_rounds: cfg.lr_decay_rounds,
+            mu_max: cfg.mu_max,
+            tau_bounds: (cfg.tau_min, cfg.tau_max),
+            round: 0,
+        })
+    }
+
+    pub fn fedavg(info: &ModelInfo, cfg: &ExperimentConfig, rng: &mut Rng) -> Result<DenseServer> {
+        Self::new("fedavg", WidthPolicy::Full, TauPolicy::Fixed(cfg.tau_default), info, cfg, rng)
+    }
+
+    pub fn adp(info: &ModelInfo, cfg: &ExperimentConfig, rng: &mut Rng) -> Result<DenseServer> {
+        // Budget: what the default τ costs a mid-fleet client on the full
+        // model — ADP then squeezes τ whenever the round would overshoot.
+        let q_mid = crate::simulation::DeviceClass::JetsonTx2.mean_flops();
+        let mu_mid = info.flops_dense[&info.cap_p] / q_mid;
+        let up_mid = 0.5 * (cfg.up_mbps.0 + cfg.up_mbps.1) * 125_000.0;
+        let nu_mid = info.bytes_dense[&info.cap_p] as f64 / up_mid;
+        let budget = cfg.tau_default as f64 * mu_mid + nu_mid;
+        Self::new(
+            "adp", WidthPolicy::Full, TauPolicy::Adaptive { round_budget: budget }, info, cfg, rng,
+        )
+    }
+
+    pub fn heterofl(info: &ModelInfo, cfg: &ExperimentConfig, rng: &mut Rng) -> Result<DenseServer> {
+        Self::new("heterofl", WidthPolicy::Greedy, TauPolicy::Fixed(cfg.tau_default), info, cfg, rng)
+    }
+
+    /// Greedy dense width under μ^max (HeteroFL analogue of Alg. 1 l.6-11).
+    fn assign_width(&self, info: &ModelInfo, q: f64) -> (usize, f64) {
+        match self.width {
+            WidthPolicy::Full => (info.cap_p, info.flops_dense[&info.cap_p] / q),
+            WidthPolicy::Greedy => {
+                let mut p = 1;
+                while p < info.cap_p && info.flops_dense[&(p + 1)] / q <= self.mu_max {
+                    p += 1;
+                }
+                (p, info.flops_dense[&p] / q)
+            }
+        }
+    }
+}
+
+impl Strategy for DenseServer {
+    fn name(&self) -> &'static str {
+        self.scheme
+    }
+
+    fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport> {
+        let info = env.info.clone();
+        let clients = env.sample_clients();
+        let statuses: Vec<_> = clients.iter().map(|&c| env.status(c)).collect();
+        let engine = env.engine;
+
+        // widths + cost components
+        let work: Vec<(usize, usize, f64, f64)> = statuses
+            .iter()
+            .map(|s| {
+                let (p, mu) = self.assign_width(&info, s.q_flops);
+                let nu = s.link.upload_time(info.bytes_dense[&p]);
+                (s.client, p, mu, nu)
+            })
+            .collect();
+
+        // identical τ for everyone
+        let tau = match self.tau {
+            TauPolicy::Fixed(t) => t,
+            TauPolicy::Adaptive { round_budget } => {
+                let mu_max = work.iter().map(|w| w.2).fold(0.0, f64::max);
+                let nu_max = work.iter().map(|w| w.3).fold(0.0, f64::max);
+                let t = ((round_budget - nu_max) / mu_max).floor();
+                (t.max(1.0) as usize).clamp(self.tau_bounds.0, self.tau_bounds.1)
+            }
+        };
+
+        let mut acc = DenseAccumulator::new(&info, &self.global);
+        let mut completion = Vec::with_capacity(work.len());
+        let mut losses = Vec::with_capacity(work.len());
+        let mut down = 0usize;
+        let mut up = 0usize;
+        let lr_h = crate::coordinator::scheduled_lr(self.lr, self.round, self.lr_decay_rounds);
+        for &(client, p, mu, nu) in &work {
+            let payload = self.global.reduced_inputs(&info, p)?;
+            let bytes = info.bytes_dense[&p];
+            down += bytes;
+            let exec = Manifest::train_name(&self.family, p, false);
+            let result = run_local(engine, &exec, None, payload, tau, lr_h, || {
+                env.next_batch(client)
+            })?;
+            up += bytes;
+            acc.push(p, &result.params)?;
+            completion.push(completion_time(tau, mu, nu));
+            losses.push(result.mean_loss);
+        }
+        self.global = acc.finalize()?;
+
+        env.traffic.record_down(down);
+        env.traffic.record_up(up);
+        let round_time = completion.iter().copied().fold(0.0, f64::max);
+        env.clock.advance(round_time);
+
+        let report = RoundReport {
+            round: self.round,
+            round_time,
+            avg_wait: average_wait(&completion),
+            mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
+            taus: vec![tau; work.len()],
+            widths: work.iter().map(|w| w.1).collect(),
+            down_bytes: down,
+            up_bytes: up,
+            completion_times: completion,
+            block_variance: 0.0,
+        };
+        self.round += 1;
+        Ok(report)
+    }
+
+    fn evaluate(&self, env: &FlEnv) -> Result<(f64, f64)> {
+        env.evaluate_dense(&self.global)
+    }
+}

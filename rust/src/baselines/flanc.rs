@@ -1,0 +1,201 @@
+//! Flanc — original neural composition [Mei et al., NeurIPS'22].
+//!
+//! Shared neural basis across all widths, but each width `p` owns a
+//! *private* coefficient `u_p ∈ (R, b(p)·O)` per layer: "the coefficients
+//! in different shapes do not share any parameter" (paper §VI-B1 ④).
+//! Consequently a width's coefficient is only ever trained by clients
+//! fast enough to run that width — the very training-starvation problem
+//! Heroes' enhanced composition fixes (paper §I). Aggregation: basis
+//! averaged over *all* K participants; coefficients averaged within the
+//! same-width group only; the global model evaluated at width P.
+
+use crate::baselines::Strategy;
+use crate::config::ExperimentConfig;
+use crate::coordinator::assignment::{assign_width, average_wait};
+use crate::coordinator::client::run_local;
+use crate::coordinator::env::FlEnv;
+use crate::coordinator::frequency::completion_time;
+use crate::coordinator::RoundReport;
+use crate::model::init_params;
+use crate::runtime::{Manifest, ModelInfo};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+/// Flanc PS state: shared basis + per-width private coefficients.
+pub struct FlancServer {
+    /// per layer
+    bases: Vec<Tensor>,
+    /// coeffs[p-1][layer]: width-p coefficient (R, b(p)·O)
+    coeffs: Vec<Vec<Tensor>>,
+    bias: Tensor,
+    family: String,
+    lr: f32,
+    lr_decay_rounds: usize,
+    mu_max: f64,
+    tau: usize,
+    round: usize,
+}
+
+impl FlancServer {
+    pub fn new(info: &ModelInfo, cfg: &ExperimentConfig, rng: &mut Rng) -> Result<FlancServer> {
+        // Basis + bias from the full-width spec; per-width coefficients
+        // drawn independently (they share no parameters by construction).
+        let full = init_params(
+            info.composed_params
+                .get(&info.cap_p)
+                .ok_or_else(|| anyhow!("no composed params at P"))?,
+            rng,
+        );
+        let l = info.layers.len();
+        let bases: Vec<Tensor> = (0..l).map(|i| full[2 * i].clone()).collect();
+        let bias = full[2 * l].clone();
+        let mut coeffs = Vec::with_capacity(info.cap_p);
+        for p in 1..=info.cap_p {
+            let specs = info
+                .composed_params
+                .get(&p)
+                .ok_or_else(|| anyhow!("no composed params at p={p}"))?;
+            let params = init_params(specs, rng);
+            coeffs.push((0..l).map(|i| params[2 * i + 1].clone()).collect());
+        }
+        Ok(FlancServer {
+            bases,
+            coeffs,
+            bias,
+            family: cfg.family.clone(),
+            lr: cfg.lr,
+            lr_decay_rounds: cfg.lr_decay_rounds,
+            mu_max: cfg.mu_max,
+            tau: cfg.tau_default,
+            round: 0,
+        })
+    }
+
+    /// Payload for a width-p client: `[v_0, u_p_0, ..., bias]`.
+    fn payload(&self, p: usize) -> Vec<Tensor> {
+        let mut out = Vec::with_capacity(2 * self.bases.len() + 1);
+        for (i, v) in self.bases.iter().enumerate() {
+            out.push(v.clone());
+            out.push(self.coeffs[p - 1][i].clone());
+        }
+        out.push(self.bias.clone());
+        out
+    }
+}
+
+impl Strategy for FlancServer {
+    fn name(&self) -> &'static str {
+        "flanc"
+    }
+
+    fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport> {
+        let info = env.info.clone();
+        let clients = env.sample_clients();
+        let statuses: Vec<_> = clients.iter().map(|&c| env.status(c)).collect();
+        let engine = env.engine;
+        let l = info.layers.len();
+
+        let mut basis_sum: Vec<Tensor> = self.bases.iter().map(|v| Tensor::zeros(v.shape())).collect();
+        let mut bias_sum = Tensor::zeros(self.bias.shape());
+        let mut coeff_sum: Vec<Vec<Tensor>> = self
+            .coeffs
+            .iter()
+            .map(|per| per.iter().map(|u| Tensor::zeros(u.shape())).collect())
+            .collect();
+        let mut coeff_cnt = vec![0u32; info.cap_p];
+        let mut total = 0u32;
+
+        let mut completion = Vec::new();
+        let mut losses = Vec::new();
+        let mut taus = Vec::new();
+        let mut widths = Vec::new();
+        let mut down = 0usize;
+        let mut up = 0usize;
+        let lr_h = crate::coordinator::scheduled_lr(self.lr, self.round, self.lr_decay_rounds);
+
+        for s in &statuses {
+            let (p, mu) = assign_width(&info, s.q_flops, self.mu_max);
+            let nu = s.link.upload_time(info.bytes_composed[&p]);
+            let bytes = info.bytes_composed[&p];
+            down += bytes;
+            let exec = Manifest::train_name(&self.family, p, true);
+            let client = s.client;
+            let result = run_local(engine, &exec, None, self.payload(p), self.tau, lr_h, || {
+                env.next_batch(client)
+            })?;
+            up += bytes;
+
+            for i in 0..l {
+                basis_sum[i].add_assign(&result.params[2 * i]);
+                coeff_sum[p - 1][i].add_assign(&result.params[2 * i + 1]);
+            }
+            bias_sum.add_assign(&result.params[2 * l]);
+            coeff_cnt[p - 1] += 1;
+            total += 1;
+
+            completion.push(completion_time(self.tau, mu, nu));
+            losses.push(result.mean_loss);
+            taus.push(self.tau);
+            widths.push(p);
+        }
+
+        // basis + bias: average over all participants
+        if total > 0 {
+            let inv = 1.0 / total as f32;
+            for (i, sum) in basis_sum.into_iter().enumerate() {
+                let mut v = sum;
+                v.scale(inv);
+                self.bases[i] = v;
+            }
+            bias_sum.scale(inv);
+            self.bias = bias_sum;
+        }
+        // coefficients: same-shape groups only; untouched widths keep state
+        for (pi, cnt) in coeff_cnt.iter().enumerate() {
+            if *cnt > 0 {
+                let inv = 1.0 / *cnt as f32;
+                for i in 0..l {
+                    let mut u = std::mem::replace(&mut coeff_sum[pi][i], Tensor::zeros(&[1]));
+                    u.scale(inv);
+                    self.coeffs[pi][i] = u;
+                }
+            }
+        }
+
+        env.traffic.record_down(down);
+        env.traffic.record_up(up);
+        let round_time = completion.iter().copied().fold(0.0, f64::max);
+        env.clock.advance(round_time);
+
+        let report = RoundReport {
+            round: self.round,
+            round_time,
+            avg_wait: average_wait(&completion),
+            mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
+            taus,
+            widths,
+            down_bytes: down,
+            up_bytes: up,
+            completion_times: completion,
+            block_variance: 0.0,
+        };
+        self.round += 1;
+        Ok(report)
+    }
+
+    fn evaluate(&self, env: &FlEnv) -> Result<(f64, f64)> {
+        let p = env.info.cap_p;
+        let params = self.payload(p);
+        let mut inputs = params;
+        // evaluate_composed expects a ComposedGlobal; reuse the generic
+        // param-list evaluation path instead.
+        let exec = Manifest::eval_name(&self.family, true);
+        env_eval(env, &exec, &mut inputs)
+    }
+}
+
+/// Evaluate an arbitrary composed param list (helper shared with tests).
+fn env_eval(env: &FlEnv, exec: &str, params: &mut [Tensor]) -> Result<(f64, f64)> {
+    env.evaluate_param_list(exec, params)
+}

@@ -1,0 +1,74 @@
+//! Baseline FL schemes (paper §VI-B1) behind a common `Strategy` trait.
+//!
+//! * `FedAvg`   — full dense model, fixed identical τ.
+//! * `ADP`      — full dense model, per-round *identical* τ adapted to a
+//!                resource budget (Wang et al., INFOCOM'18).
+//! * `HeteroFL` — dense width-pruned sub-models by computation power,
+//!                fixed τ, overlap-aware aggregation.
+//! * `Flanc`    — original neural composition: shared basis, but each
+//!                width owns a private coefficient (no cross-shape
+//!                aggregation), fixed τ.
+//!
+//! Heroes itself (`coordinator::server::HeroesServer`) implements the same
+//! trait, so experiment drivers iterate schemes uniformly.
+
+pub mod dense;
+pub mod flanc;
+
+use crate::coordinator::env::FlEnv;
+use crate::coordinator::RoundReport;
+use anyhow::Result;
+
+/// A federated scheme driving rounds against a shared environment.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+    /// Execute one synchronous round.
+    fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport>;
+    /// Evaluate the current global model: (test loss, test accuracy).
+    fn evaluate(&self, env: &FlEnv) -> Result<(f64, f64)>;
+    /// Current block-variance diagnostic (0 for schemes without a ledger).
+    fn block_variance(&self) -> f64 {
+        0.0
+    }
+}
+
+impl Strategy for crate::coordinator::server::HeroesServer {
+    fn name(&self) -> &'static str {
+        "heroes"
+    }
+
+    fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport> {
+        HeroesServer::run_round(self, env)
+    }
+
+    fn evaluate(&self, env: &FlEnv) -> Result<(f64, f64)> {
+        env.evaluate_composed(&self.global)
+    }
+
+    fn block_variance(&self) -> f64 {
+        self.ledger.variance()
+    }
+}
+
+use crate::coordinator::server::HeroesServer;
+
+/// Instantiate a scheme by name ("heroes", "fedavg", "adp", "heterofl",
+/// "flanc").
+pub fn make_strategy(
+    name: &str,
+    info: &crate::runtime::ModelInfo,
+    cfg: &crate::config::ExperimentConfig,
+    rng: &mut crate::util::rng::Rng,
+) -> Result<Box<dyn Strategy>> {
+    Ok(match name {
+        "heroes" => Box::new(HeroesServer::new(info, cfg, rng)?),
+        "fedavg" => Box::new(dense::DenseServer::fedavg(info, cfg, rng)?),
+        "adp" => Box::new(dense::DenseServer::adp(info, cfg, rng)?),
+        "heterofl" => Box::new(dense::DenseServer::heterofl(info, cfg, rng)?),
+        "flanc" => Box::new(flanc::FlancServer::new(info, cfg, rng)?),
+        other => anyhow::bail!("unknown scheme `{other}`"),
+    })
+}
+
+/// The five schemes of the paper's evaluation, in figure order.
+pub const ALL_SCHEMES: [&str; 5] = ["fedavg", "adp", "heterofl", "flanc", "heroes"];

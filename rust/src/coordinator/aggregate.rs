@@ -1,0 +1,325 @@
+//! Global aggregation (paper §III-3).
+//!
+//! * neural basis: plain average over the K participants,
+//!   `v^{h+1} = (1/K) Σ v̄_n` — every client trains the full basis.
+//! * coefficient: **block-wise** average (Eq. 5) — each block averages
+//!   over exactly the clients that trained it; untouched blocks carry the
+//!   previous global value forward.
+//! * head bias: plain average (it rides along with every payload).
+//!
+//! `DenseAccumulator` implements the baselines' aggregation: FedAvg's
+//! plain average is the width-P special case of HeteroFL's overlap-aware
+//! element-count averaging.
+
+use crate::model::{ComposedGlobal, DenseGlobal};
+use crate::runtime::ModelInfo;
+use crate::tensor::blocks::{finalize_block_average, scatter_blocks_add};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+
+/// Accumulates composed-model client updates for one round.
+pub struct ComposedAccumulator<'a> {
+    info: &'a ModelInfo,
+    prev: &'a ComposedGlobal,
+    basis_sums: Vec<Tensor>,
+    coeff_sums: Vec<Tensor>,
+    coeff_counts: Vec<Vec<u32>>,
+    bias_sum: Tensor,
+    clients: u32,
+}
+
+impl<'a> ComposedAccumulator<'a> {
+    pub fn new(info: &'a ModelInfo, prev: &'a ComposedGlobal) -> ComposedAccumulator<'a> {
+        ComposedAccumulator {
+            info,
+            prev,
+            basis_sums: info.layers.iter().map(|l| Tensor::zeros(&l.basis_shape)).collect(),
+            coeff_sums: info
+                .layers
+                .iter()
+                .map(|l| Tensor::zeros(&l.full_coeff_shape()))
+                .collect(),
+            coeff_counts: info.layers.iter().map(|l| vec![0u32; l.blocks_total]).collect(),
+            bias_sum: Tensor::zeros(prev.bias.shape()),
+            clients: 0,
+        }
+    }
+
+    /// Fold in one client's updated parameter list
+    /// `[v̄_0, ū̂_0, v̄_1, ū̂_1, ..., bias]` with its block selections.
+    pub fn push(&mut self, selections: &[Vec<usize>], updated: &[Tensor]) -> Result<()> {
+        let l = self.info.layers.len();
+        if updated.len() != 2 * l + 1 {
+            return Err(anyhow!("expected {} tensors, got {}", 2 * l + 1, updated.len()));
+        }
+        if selections.len() != l {
+            return Err(anyhow!("expected {} selections", l));
+        }
+        for (idx, layer) in self.info.layers.iter().enumerate() {
+            let v = &updated[2 * idx];
+            let u_hat = &updated[2 * idx + 1];
+            if v.shape() != layer.basis_shape.as_slice() {
+                return Err(anyhow!("basis shape mismatch on {}", layer.name));
+            }
+            self.basis_sums[idx].add_assign(v);
+            scatter_blocks_add(
+                &mut self.coeff_sums[idx],
+                &mut self.coeff_counts[idx],
+                u_hat,
+                &selections[idx],
+                layer.o,
+            );
+        }
+        self.bias_sum.add_assign(&updated[2 * l]);
+        self.clients += 1;
+        Ok(())
+    }
+
+    /// Number of clients folded in so far.
+    pub fn count(&self) -> u32 {
+        self.clients
+    }
+
+    /// Produce the next global model (paper Alg. 1 line 26).
+    pub fn finalize(mut self) -> Result<ComposedGlobal> {
+        if self.clients == 0 {
+            return Err(anyhow!("no client updates to aggregate"));
+        }
+        let inv = 1.0 / self.clients as f32;
+        for b in self.basis_sums.iter_mut() {
+            b.scale(inv);
+        }
+        for (idx, layer) in self.info.layers.iter().enumerate() {
+            finalize_block_average(
+                &mut self.coeff_sums[idx],
+                &self.coeff_counts[idx],
+                &self.prev.coeffs[idx],
+                layer.o,
+            );
+        }
+        self.bias_sum.scale(inv);
+        Ok(ComposedGlobal { bases: self.basis_sums, coeffs: self.coeff_sums, bias: self.bias_sum })
+    }
+}
+
+/// Accumulates dense-model client updates (FedAvg / ADP / HeteroFL).
+pub struct DenseAccumulator<'a> {
+    info: &'a ModelInfo,
+    prev: &'a DenseGlobal,
+    weight_sums: Vec<Tensor>,
+    weight_counts: Vec<Vec<u32>>,
+    bias_sum: Tensor,
+    clients: u32,
+}
+
+impl<'a> DenseAccumulator<'a> {
+    pub fn new(info: &'a ModelInfo, prev: &'a DenseGlobal) -> DenseAccumulator<'a> {
+        DenseAccumulator {
+            info,
+            prev,
+            weight_sums: prev.weights.iter().map(|w| Tensor::zeros(w.shape())).collect(),
+            weight_counts: prev.weights.iter().map(|w| vec![0u32; w.len()]).collect(),
+            bias_sum: Tensor::zeros(prev.bias.shape()),
+            clients: 0,
+        }
+    }
+
+    /// Fold in one client's updated dense sub-model at width `p`
+    /// (`[w̄_0, ..., w̄_{L-1}, bias]` with width-p shapes).
+    pub fn push(&mut self, p: usize, updated: &[Tensor]) -> Result<()> {
+        let l = self.info.layers.len();
+        if updated.len() != l + 1 {
+            return Err(anyhow!("expected {} tensors, got {}", l + 1, updated.len()));
+        }
+        let specs = self
+            .info
+            .dense_params
+            .get(&p)
+            .ok_or_else(|| anyhow!("no dense params at p={p}"))?;
+        for idx in 0..l {
+            if updated[idx].shape() != specs[idx].shape.as_slice() {
+                return Err(anyhow!(
+                    "weight {idx} shape {:?} != spec {:?}",
+                    updated[idx].shape(),
+                    specs[idx].shape
+                ));
+            }
+            self.weight_sums[idx].scatter_prefix_add(&updated[idx], &mut self.weight_counts[idx]);
+        }
+        self.bias_sum.add_assign(&updated[l]);
+        self.clients += 1;
+        Ok(())
+    }
+
+    pub fn count(&self) -> u32 {
+        self.clients
+    }
+
+    /// Element-wise overlap-aware average; untouched elements carry the
+    /// previous global value (HeteroFL).
+    pub fn finalize(mut self) -> Result<DenseGlobal> {
+        if self.clients == 0 {
+            return Err(anyhow!("no client updates to aggregate"));
+        }
+        for (idx, sums) in self.weight_sums.iter_mut().enumerate() {
+            let counts = &self.weight_counts[idx];
+            let prev = self.prev.weights[idx].data();
+            let data = sums.data_mut();
+            for (e, (&cnt, &pv)) in counts.iter().zip(prev).enumerate() {
+                if cnt == 0 {
+                    data[e] = pv;
+                } else {
+                    data[e] /= cnt as f32;
+                }
+            }
+        }
+        self.bias_sum.scale(1.0 / self.clients as f32);
+        Ok(DenseGlobal { weights: self.weight_sums, bias: self.bias_sum })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tests_support::toy_info;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn composed_roundtrip_identity() {
+        // One client training everything at full width with no change
+        // must reproduce the previous global exactly.
+        let info = toy_info();
+        let prev = ComposedGlobal::init(&info, &mut Rng::new(1)).unwrap();
+        let sels = crate::model::full_selections(&info);
+        let payload = prev.reduced_inputs(&info, info.cap_p, &sels).unwrap();
+        let mut acc = ComposedAccumulator::new(&info, &prev);
+        acc.push(&sels, &payload).unwrap();
+        let next = acc.finalize().unwrap();
+        assert_eq!(next.bases[0].data(), prev.bases[0].data());
+        assert_eq!(next.coeffs[0].data(), prev.coeffs[0].data());
+        assert_eq!(next.bias.data(), prev.bias.data());
+    }
+
+    #[test]
+    fn composed_blockwise_average_eq5() {
+        // Two clients train disjoint blocks of layer 0; each block must
+        // take exactly its trainer's value; basis averages.
+        let info = toy_info();
+        let prev = ComposedGlobal::init(&info, &mut Rng::new(2)).unwrap();
+        let mut acc = ComposedAccumulator::new(&info, &prev);
+
+        let mk = |c: f32| -> Vec<Tensor> {
+            vec![
+                Tensor::from_vec(&[9, 2, 3], vec![c; 54]),
+                Tensor::from_vec(&[3, 4], vec![c; 12]), // 1 block of layer 0
+                Tensor::from_vec(&[1, 4, 3], vec![c; 12]),
+                Tensor::from_vec(&[3, 5], vec![c; 15]), // 1 block of layer 1
+                Tensor::from_vec(&[5], vec![c; 5]),
+            ]
+        };
+        acc.push(&[vec![0], vec![0]], &mk(2.0)).unwrap();
+        acc.push(&[vec![1], vec![1]], &mk(4.0)).unwrap();
+        let next = acc.finalize().unwrap();
+        // basis = mean(2, 4) = 3 everywhere
+        assert!(next.bases[0].data().iter().all(|&x| (x - 3.0).abs() < 1e-6));
+        // layer-0 coefficient: block 0 = 2.0, block 1 = 4.0
+        let u = next.coeffs[0].data();
+        for row in 0..3 {
+            for c in 0..4 {
+                assert_eq!(u[row * 8 + c], 2.0);
+                assert_eq!(u[row * 8 + 4 + c], 4.0);
+            }
+        }
+        assert!(next.bias.data().iter().all(|&x| (x - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn composed_shared_block_averages_paper_fig3() {
+        // paper Fig. 3: a block trained by two clients with values 4 and 2
+        // aggregates to 3.
+        let info = toy_info();
+        let prev = ComposedGlobal::init(&info, &mut Rng::new(3)).unwrap();
+        let mut acc = ComposedAccumulator::new(&info, &prev);
+        let mk = |c: f32| -> Vec<Tensor> {
+            vec![
+                Tensor::from_vec(&[9, 2, 3], vec![0.0; 54]),
+                Tensor::from_vec(&[3, 4], vec![c; 12]),
+                Tensor::from_vec(&[1, 4, 3], vec![0.0; 12]),
+                Tensor::from_vec(&[3, 5], vec![0.0; 15]),
+                Tensor::from_vec(&[5], vec![0.0; 5]),
+            ]
+        };
+        acc.push(&[vec![0], vec![0]], &mk(4.0)).unwrap();
+        acc.push(&[vec![0], vec![1]], &mk(2.0)).unwrap();
+        let next = acc.finalize().unwrap();
+        let u = next.coeffs[0].data();
+        assert_eq!(u[0], 3.0); // (4+2)/2
+        // block 1 untouched -> carried from prev
+        assert_eq!(u[4], prev.coeffs[0].data()[4]);
+    }
+
+    #[test]
+    fn composed_rejects_bad_shapes() {
+        let info = toy_info();
+        let prev = ComposedGlobal::init(&info, &mut Rng::new(4)).unwrap();
+        let mut acc = ComposedAccumulator::new(&info, &prev);
+        assert!(acc.push(&[vec![0], vec![0]], &[Tensor::zeros(&[1])]).is_err());
+        assert!(ComposedAccumulator::new(&info, &prev).finalize().is_err());
+    }
+
+    #[test]
+    fn dense_fedavg_is_plain_average_at_full_width() {
+        let info = toy_info();
+        let prev = DenseGlobal::init(&info, &mut Rng::new(5)).unwrap();
+        let mut acc = DenseAccumulator::new(&info, &prev);
+        let mk = |c: f32| -> Vec<Tensor> {
+            vec![
+                Tensor::from_vec(&[3, 3, 2, 8], vec![c; 144]),
+                Tensor::from_vec(&[8, 5], vec![c; 40]),
+                Tensor::from_vec(&[5], vec![c; 5]),
+            ]
+        };
+        acc.push(2, &mk(1.0)).unwrap();
+        acc.push(2, &mk(3.0)).unwrap();
+        let next = acc.finalize().unwrap();
+        assert!(next.weights[0].data().iter().all(|&x| (x - 2.0).abs() < 1e-6));
+        assert!(next.bias.data().iter().all(|&x| (x - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn dense_heterofl_overlap_average() {
+        // client A at width 1 (prefix region), client B at width 2 (full):
+        // overlap averages, B-only region takes B's value, untouched = prev.
+        let info = toy_info();
+        let prev = DenseGlobal::init(&info, &mut Rng::new(6)).unwrap();
+        let mut acc = DenseAccumulator::new(&info, &prev);
+        let a = vec![
+            Tensor::from_vec(&[3, 3, 2, 4], vec![1.0; 72]),
+            Tensor::from_vec(&[4, 5], vec![1.0; 20]),
+            Tensor::from_vec(&[5], vec![1.0; 5]),
+        ];
+        let b = vec![
+            Tensor::from_vec(&[3, 3, 2, 8], vec![3.0; 144]),
+            Tensor::from_vec(&[8, 5], vec![3.0; 40]),
+            Tensor::from_vec(&[5], vec![3.0; 5]),
+        ];
+        acc.push(1, &a).unwrap();
+        acc.push(2, &b).unwrap();
+        let next = acc.finalize().unwrap();
+        let w = next.weights[0].data();
+        // element (0,0,0,0): trained by both -> 2.0
+        assert_eq!(w[0], 2.0);
+        // element (0,0,0,7): only B -> 3.0
+        assert_eq!(w[7], 3.0);
+        // head weight rows beyond width-1 prefix: only B
+        assert_eq!(next.weights[1].data()[39], 3.0);
+    }
+
+    #[test]
+    fn dense_rejects_unknown_width() {
+        let info = toy_info();
+        let prev = DenseGlobal::init(&info, &mut Rng::new(7)).unwrap();
+        let mut acc = DenseAccumulator::new(&info, &prev);
+        assert!(acc.push(9, &[Tensor::zeros(&[1])]).is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Client-side local training (paper Alg. 2), executed through the AOT
+//! train/probe executables.
+//!
+//! The client receives `[v, û, ..., bias]` (already composed-ready), runs
+//! `τ` SGD iterations via the width-specific `train` executable, and —
+//! when probing is requested — estimates `L, σ², G²` from three probe
+//! gradients (see `estimator`). The updated factors go back to the PS;
+//! nothing here ever touches python.
+
+use crate::coordinator::estimator::{estimate_from_probes, ClientEstimates};
+use crate::coordinator::XData;
+use crate::runtime::{Engine, Value};
+use crate::tensor::{IntTensor, Tensor};
+use anyhow::{anyhow, Result};
+
+/// Outcome of one client's local round.
+#[derive(Debug, Clone)]
+pub struct LocalResult {
+    /// updated parameter list, same layout as the payload
+    pub params: Vec<Tensor>,
+    /// mean training loss over the τ iterations
+    pub mean_loss: f64,
+    /// loss at the final iteration
+    pub final_loss: f64,
+    /// mean ||∇||² reported by the train executable
+    pub mean_grad_sq: f64,
+    /// probe-based estimates (None when probing was skipped)
+    pub estimates: Option<ClientEstimates>,
+}
+
+fn push_batch<'a>(inputs: &mut Vec<Value<'a>>, x: &'a XData, y: &'a IntTensor) {
+    match x {
+        XData::Image(t) => inputs.push(Value::F32(t)),
+        XData::Tokens(t) => inputs.push(Value::I32(t)),
+    }
+    inputs.push(Value::I32(y));
+}
+
+fn run_probe(
+    engine: &Engine,
+    probe_exec: &str,
+    params: &[Tensor],
+    x: &XData,
+    y: &IntTensor,
+) -> Result<Tensor> {
+    let mut inputs: Vec<Value> = params.iter().map(Value::F32).collect();
+    push_batch(&mut inputs, x, y);
+    let mut out = engine.execute(probe_exec, &inputs)?;
+    out.pop().ok_or_else(|| anyhow!("probe returned nothing"))
+}
+
+/// Run `τ` local iterations (+ optional estimation probes).
+///
+/// `next_batch` yields a fresh mini-batch per call (paper: ξ ~ D_n).
+///
+/// Divergence guard: if a step produces a non-finite loss the client
+/// restarts from the received payload at lr/4; if that also diverges it
+/// uploads the payload unchanged (a skipped update). Schemes whose
+/// dynamics blow up (e.g. original-NC's cross-width basis/coefficient
+/// drift at high lr) thus lose progress instead of crashing the run —
+/// matching how a real deployment would clamp a bad client round.
+pub fn run_local(
+    engine: &Engine,
+    train_exec: &str,
+    probe_exec: Option<&str>,
+    payload: Vec<Tensor>,
+    tau: usize,
+    lr: f32,
+    mut next_batch: impl FnMut() -> (XData, IntTensor),
+) -> Result<LocalResult> {
+    assert!(tau >= 1, "tau must be at least 1");
+    let n_params = payload.len();
+
+    // Estimation probes need a fixed batch ξ₁ reused at start and end
+    // (Alg. 2 l.7) plus an independent ξ₂ (l.8-9).
+    let probe_ctx = if let Some(pe) = probe_exec {
+        let (x1, y1) = next_batch();
+        let (x2, y2) = next_batch();
+        let g_start = run_probe(engine, pe, &payload, &x1, &y1)?;
+        let g_alt = run_probe(engine, pe, &payload, &x2, &y2)?;
+        Some((pe, x1, y1, g_start, g_alt, payload.clone()))
+    } else {
+        None
+    };
+
+    let mut attempt_lr = lr;
+    let mut params = payload.clone();
+    let mut loss_sum = 0.0f64;
+    let mut gsq_sum = 0.0f64;
+    let mut final_loss = f64::NAN;
+    'attempts: for attempt in 0..2 {
+        let lr_t = Tensor::from_vec(&[1], vec![attempt_lr]);
+        params = payload.clone();
+        loss_sum = 0.0;
+        gsq_sum = 0.0;
+        for _ in 0..tau {
+            let (x, y) = next_batch();
+            let mut inputs: Vec<Value> = params.iter().map(Value::F32).collect();
+            push_batch(&mut inputs, &x, &y);
+            inputs.push(Value::F32(&lr_t));
+            let mut out = engine.execute(train_exec, &inputs)?;
+            if out.len() != n_params + 2 {
+                return Err(anyhow!(
+                    "{train_exec}: expected {} outputs, got {}",
+                    n_params + 2,
+                    out.len()
+                ));
+            }
+            let gsq = out.pop().unwrap().data()[0] as f64;
+            let loss = out.pop().unwrap().data()[0] as f64;
+            if !loss.is_finite() {
+                if attempt == 0 {
+                    log::debug!("{train_exec}: non-finite loss, retrying at lr/4");
+                    attempt_lr = lr * 0.25;
+                    continue 'attempts;
+                }
+                // second divergence: skip the update entirely
+                log::debug!("{train_exec}: diverged twice, skipping update");
+                params = payload.clone();
+                loss_sum = f64::NAN;
+                break;
+            }
+            loss_sum += loss;
+            gsq_sum += gsq;
+            final_loss = loss;
+            params = out;
+        }
+        break;
+    }
+    let loss_sum = if loss_sum.is_finite() { loss_sum } else { final_loss.max(0.0) * tau as f64 };
+
+    let estimates = if let Some((pe, x1, y1, g_start, g_alt, theta0)) = probe_ctx {
+        let g_end = run_probe(engine, pe, &params, &x1, &y1)?;
+        let dist_sq: f64 = params.iter().zip(&theta0).map(|(a, b)| a.sq_dist(b)).sum();
+        Some(estimate_from_probes(&g_start, &g_alt, &g_end, dist_sq))
+    } else {
+        None
+    };
+
+    Ok(LocalResult {
+        params,
+        mean_loss: loss_sum / tau as f64,
+        final_loss,
+        mean_grad_sq: gsq_sum / tau as f64,
+        estimates,
+    })
+}

@@ -1,0 +1,218 @@
+//! Shared federated environment: datasets + partitions + device fleet +
+//! WAN model + virtual clock + traffic meter + global evaluation.
+//!
+//! Every scheme (Heroes and the four baselines) runs against the same
+//! `FlEnv`, so comparisons in the experiment figures differ only by the
+//! scheme logic, exactly like the paper's testbed (§VI-C).
+
+use crate::config::{ExperimentConfig, Partition};
+use crate::coordinator::assignment::ClientStatus;
+use crate::coordinator::XData;
+use crate::data::loader::{EvalBatches, ImageLoader, TextEvalBatches, TextLoader};
+use crate::data::partition::{gamma_partition, phi_partition};
+use crate::data::synth_image::ImageGen;
+use crate::data::synth_text::TextGen;
+use crate::data::{ImageSet, TextSet};
+use crate::model::{ComposedGlobal, DenseGlobal};
+use crate::runtime::{Engine, InputInfo, Manifest, ModelInfo, Value};
+use crate::simulation::{DeviceFleet, NetworkModel, TrafficMeter, VirtualClock};
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+enum ClientLoader {
+    Image(ImageLoader),
+    Text(TextLoader),
+}
+
+enum TestData {
+    Image(Arc<ImageSet>),
+    Text(Arc<TextSet>),
+}
+
+/// The common federated world for one experiment run.
+pub struct FlEnv<'e> {
+    pub engine: &'e Engine,
+    pub info: ModelInfo,
+    pub cfg: ExperimentConfig,
+    pub fleet: DeviceFleet,
+    pub clock: VirtualClock,
+    pub traffic: TrafficMeter,
+    network: NetworkModel,
+    loaders: Vec<ClientLoader>,
+    test: TestData,
+    rng: Rng,
+}
+
+impl<'e> FlEnv<'e> {
+    /// Build the world: synthesize data, partition it per the config,
+    /// draw the device fleet. Deterministic in `cfg.seed`.
+    pub fn build(engine: &'e Engine, cfg: ExperimentConfig) -> Result<FlEnv<'e>> {
+        cfg.validate()?;
+        let info = engine.manifest().model(&cfg.family)?.clone();
+        let mut rng = Rng::new(cfg.seed);
+        let mut data_rng = rng.fork(1);
+        let mut fleet_rng = rng.fork(2);
+
+        let (loaders, test) = match &info.input {
+            InputInfo::Image { .. } => {
+                let gen = if cfg.family == "resnet" {
+                    ImageGen::imagenet_twin()
+                } else {
+                    ImageGen::cifar_twin()
+                };
+                let n_train = cfg.n_clients * cfg.samples_per_client;
+                // test size must tile the eval batch exactly (exact metrics)
+                let n_test = (cfg.test_samples / info.eval_batch).max(1) * info.eval_batch;
+                let train = Arc::new(gen.generate(n_train, cfg.seed ^ 0xDA7A, &mut data_rng));
+                let test = Arc::new(gen.generate(n_test, cfg.seed ^ 0xDA7A, &mut data_rng));
+                let labels = &train.labels;
+                let parts = match cfg.partition {
+                    Partition::Gamma(g) => gamma_partition(
+                        labels, info.classes, cfg.n_clients, cfg.samples_per_client, g, &mut data_rng,
+                    ),
+                    Partition::Phi(frac) => {
+                        let missing = ((info.classes as f64) * frac).round() as usize;
+                        phi_partition(
+                            labels, info.classes, cfg.n_clients, cfg.samples_per_client,
+                            missing.min(info.classes - 1), &mut data_rng,
+                        )
+                    }
+                    Partition::Natural => {
+                        return Err(anyhow!("natural partition is text-only"));
+                    }
+                };
+                let loaders = parts
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, idxs)| {
+                        ClientLoader::Image(ImageLoader::new(
+                            train.clone(), idxs, info.batch, data_rng.fork(100 + i as u64),
+                        ))
+                    })
+                    .collect();
+                (loaders, TestData::Image(test))
+            }
+            InputInfo::Text { seq_len, .. } => {
+                let gen = TextGen::shakespeare_twin();
+                let test_tokens = 4_000.max(cfg.test_samples * (seq_len + 1));
+                let set = Arc::new(gen.generate(
+                    cfg.n_clients, cfg.shard_tokens, test_tokens, cfg.seed ^ 0x7E47,
+                ));
+                let seq = *seq_len;
+                let loaders = (0..cfg.n_clients)
+                    .map(|i| {
+                        ClientLoader::Text(TextLoader::new(
+                            Arc::new(set.shards[i].clone()), info.batch, seq,
+                            data_rng.fork(200 + i as u64),
+                        ))
+                    })
+                    .collect();
+                (loaders, TestData::Text(set))
+            }
+        };
+
+        let fleet = DeviceFleet::default_fleet(cfg.n_clients, &mut fleet_rng);
+        let network = NetworkModel {
+            up_lo_mbps: cfg.up_mbps.0,
+            up_hi_mbps: cfg.up_mbps.1,
+            down_lo_mbps: cfg.down_mbps.0,
+            down_hi_mbps: cfg.down_mbps.1,
+        };
+        Ok(FlEnv {
+            engine,
+            info,
+            cfg,
+            fleet,
+            clock: VirtualClock::new(),
+            traffic: TrafficMeter::new(),
+            network,
+            loaders,
+            test,
+            rng: rng.fork(3),
+        })
+    }
+
+    /// Randomly sample K participants (paper Alg. 1 line 5).
+    pub fn sample_clients(&mut self) -> Vec<usize> {
+        self.rng.sample_distinct(self.cfg.n_clients, self.cfg.k_per_round)
+    }
+
+    /// Collect a client's round status (Alg. 1 line 4).
+    pub fn status(&mut self, client: usize) -> ClientStatus {
+        let q = self.fleet.devices[client].sample_flops();
+        let link = self.network.sample(&mut self.rng);
+        ClientStatus { client, q_flops: q, link }
+    }
+
+    /// Next training batch for a client.
+    pub fn next_batch(&mut self, client: usize) -> (XData, IntTensor) {
+        match &mut self.loaders[client] {
+            ClientLoader::Image(l) => {
+                let b = l.next_batch();
+                (XData::Image(b.x), b.y)
+            }
+            ClientLoader::Text(l) => {
+                let b = l.next_batch();
+                (XData::Tokens(b.x), b.y)
+            }
+        }
+    }
+
+    /// Evaluate a parameter list with the given eval executable over the
+    /// full test split; returns (mean loss, accuracy).
+    pub fn evaluate_param_list(&self, exec: &str, params: &[Tensor]) -> Result<(f64, f64)> {
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut total = 0.0f64;
+        match &self.test {
+            TestData::Image(set) => {
+                for (batch, real) in EvalBatches::new(set, self.info.eval_batch) {
+                    debug_assert_eq!(real, self.info.eval_batch, "test set must tile eval batches");
+                    let mut inputs: Vec<Value> = params.iter().map(Value::F32).collect();
+                    inputs.push(Value::F32(&batch.x));
+                    inputs.push(Value::I32(&batch.y));
+                    let out = self.engine.execute(exec, &inputs)?;
+                    loss_sum += out[0].data()[0] as f64;
+                    correct += out[1].data()[0] as f64;
+                    total += real as f64;
+                }
+            }
+            TestData::Text(set) => {
+                let InputInfo::Text { seq_len, .. } = self.info.input else {
+                    return Err(anyhow!("text eval on non-text family"));
+                };
+                for (batch, real) in TextEvalBatches::new(set, self.info.eval_batch, seq_len) {
+                    if real < self.info.eval_batch {
+                        break; // drop the ragged tail: exact full batches only
+                    }
+                    let mut inputs: Vec<Value> = params.iter().map(Value::F32).collect();
+                    inputs.push(Value::I32(&batch.x));
+                    inputs.push(Value::I32(&batch.y));
+                    let out = self.engine.execute(exec, &inputs)?;
+                    loss_sum += out[0].data()[0] as f64;
+                    correct += out[1].data()[0] as f64;
+                    total += (real * seq_len) as f64;
+                }
+            }
+        }
+        if total == 0.0 {
+            return Err(anyhow!("empty test set"));
+        }
+        Ok((loss_sum / total, correct / total))
+    }
+
+    /// Test the composed global model at full width (paper metric ①).
+    pub fn evaluate_composed(&self, global: &ComposedGlobal) -> Result<(f64, f64)> {
+        let params = global.full_inputs(&self.info);
+        self.evaluate_param_list(&Manifest::eval_name(&self.cfg.family, true), &params)
+    }
+
+    /// Test the dense global model at full width.
+    pub fn evaluate_dense(&self, global: &DenseGlobal) -> Result<(f64, f64)> {
+        let mut params = global.weights.clone();
+        params.push(global.bias.clone());
+        self.evaluate_param_list(&Manifest::eval_name(&self.cfg.family, false), &params)
+    }
+}

@@ -1,0 +1,168 @@
+//! Client-side variable estimation (paper Alg. 2 lines 7-9) and PS-side
+//! aggregation (Alg. 1 line 25).
+//!
+//! The AOT `probe` executables return the flat gradient of the local loss
+//! at given parameters/batch. From three probes a client estimates:
+//!
+//!   L  = ||∇F(x̄) − ∇F(x̂)|| / ||x̄ − x̂||      (smoothness, line 7)
+//!   σ² = ||∇F(x̂;ξ₁) − ∇F(x̂;ξ₂)||² / 2        (gradient variance, line 8)
+//!   G² = (||∇F(x̂;ξ₁)||² + ||∇F(x̂;ξ₂)||²)/2   (gradient bound, line 9)
+//!
+//! (The σ² estimator is the standard unbiased two-sample form of
+//! E||∇F(x;ξ) − ∇F(x)||² under independent batches.) The PS averages the
+//! per-client values and smooths across rounds with an EMA — edge
+//! conditions drift, so fresh rounds should dominate (§V-C).
+
+use crate::coordinator::frequency::Estimates;
+use crate::tensor::Tensor;
+use crate::util::stats::Ema;
+
+/// One client's probe-derived estimates.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientEstimates {
+    pub l: f64,
+    pub sigma_sq: f64,
+    pub g_sq: f64,
+}
+
+/// Compute the Alg. 2 estimates from three probe gradients.
+///
+/// * `g_start` — ∇F(x̂; ξ₁) at the received parameters
+/// * `g_alt`   — ∇F(x̂; ξ₂) at the received parameters, independent batch
+/// * `g_end`   — ∇F(x̄; ξ₁) at the locally-updated parameters
+/// * `param_sq_dist` — ||x̄ − x̂||²
+pub fn estimate_from_probes(
+    g_start: &Tensor,
+    g_alt: &Tensor,
+    g_end: &Tensor,
+    param_sq_dist: f64,
+) -> ClientEstimates {
+    let g1 = g_start.sq_norm();
+    let g2 = g_alt.sq_norm();
+    let sigma_sq = g_start.sq_dist(g_alt) / 2.0;
+    let g_sq = 0.5 * (g1 + g2);
+    let l = if param_sq_dist > 1e-12 {
+        (g_end.sq_dist(g_start)).sqrt() / param_sq_dist.sqrt()
+    } else {
+        0.0
+    };
+    ClientEstimates { l, sigma_sq, g_sq }
+}
+
+/// PS-side aggregator: means over the round's participants, EMA-smoothed
+/// across rounds.
+#[derive(Debug)]
+pub struct EstimateTracker {
+    l: Ema,
+    sigma_sq: Ema,
+    g_sq: Ema,
+    loss: Ema,
+    seen_any: bool,
+}
+
+impl EstimateTracker {
+    pub fn new(alpha: f64) -> EstimateTracker {
+        EstimateTracker {
+            l: Ema::new(alpha),
+            sigma_sq: Ema::new(alpha),
+            g_sq: Ema::new(alpha),
+            loss: Ema::new(alpha),
+            seen_any: false,
+        }
+    }
+
+    /// Fold in one round's client estimates + observed mean training loss.
+    pub fn update(&mut self, clients: &[ClientEstimates], mean_loss: f64) {
+        if !clients.is_empty() {
+            let n = clients.len() as f64;
+            let ml = clients.iter().map(|c| c.l).sum::<f64>() / n;
+            let ms = clients.iter().map(|c| c.sigma_sq).sum::<f64>() / n;
+            let mg = clients.iter().map(|c| c.g_sq).sum::<f64>() / n;
+            // discard degenerate L (all-zero probes) rather than poison the EMA
+            if ml.is_finite() && ml > 0.0 {
+                self.l.push(ml);
+            }
+            if ms.is_finite() {
+                self.sigma_sq.push(ms);
+            }
+            if mg.is_finite() {
+                self.g_sq.push(mg);
+            }
+            self.seen_any = true;
+        }
+        if mean_loss.is_finite() && mean_loss > 0.0 {
+            self.loss.push(mean_loss);
+        }
+    }
+
+    /// True once at least one probe round has been folded in — before
+    /// that the controller must use the predefined τ (Alg. 1: h = 0 case).
+    pub fn ready(&self) -> bool {
+        self.seen_any && self.loss.get().is_some()
+    }
+
+    /// Current estimates (bootstrap defaults if not ready).
+    pub fn current(&self) -> Estimates {
+        let loss = self.loss.get().unwrap_or(1.0);
+        if !self.seen_any {
+            return Estimates::bootstrap(loss);
+        }
+        Estimates {
+            l: self.l.get().unwrap_or(1.0),
+            sigma_sq: self.sigma_sq.get().unwrap_or(1.0),
+            g_sq: self.g_sq.get().unwrap_or(1.0),
+            loss,
+        }
+        .sanitized()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_math_matches_formulas() {
+        let g1 = Tensor::from_vec(&[3], vec![1.0, 0.0, 0.0]);
+        let g2 = Tensor::from_vec(&[3], vec![0.0, 1.0, 0.0]);
+        let ge = Tensor::from_vec(&[3], vec![3.0, 0.0, 0.0]);
+        let e = estimate_from_probes(&g1, &g2, &ge, 4.0);
+        assert!((e.sigma_sq - 1.0).abs() < 1e-9); // ||g1-g2||²/2 = 2/2
+        assert!((e.g_sq - 1.0).abs() < 1e-9);
+        assert!((e.l - 1.0).abs() < 1e-9); // ||ge-g1||/||dx|| = 2/2
+    }
+
+    #[test]
+    fn zero_distance_gives_zero_l() {
+        let g = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let e = estimate_from_probes(&g, &g, &g, 0.0);
+        assert_eq!(e.l, 0.0);
+        assert_eq!(e.sigma_sq, 0.0);
+    }
+
+    #[test]
+    fn tracker_bootstraps_then_tracks() {
+        let mut t = EstimateTracker::new(0.5);
+        assert!(!t.ready());
+        let boot = t.current();
+        assert_eq!(boot.l, 1.0);
+        t.update(&[ClientEstimates { l: 2.0, sigma_sq: 0.3, g_sq: 5.0 }], 2.5);
+        assert!(t.ready());
+        let cur = t.current();
+        assert!((cur.l - 2.0).abs() < 1e-9);
+        assert!((cur.loss - 2.5).abs() < 1e-9);
+        // EMA moves toward the new value
+        t.update(&[ClientEstimates { l: 4.0, sigma_sq: 0.3, g_sq: 5.0 }], 2.0);
+        let cur = t.current();
+        assert!(cur.l > 2.0 && cur.l < 4.0);
+    }
+
+    #[test]
+    fn tracker_ignores_degenerate_probes() {
+        let mut t = EstimateTracker::new(0.5);
+        t.update(&[ClientEstimates { l: 3.0, sigma_sq: 0.1, g_sq: 1.0 }], 2.0);
+        let before = t.current().l;
+        t.update(&[ClientEstimates { l: 0.0, sigma_sq: 0.1, g_sq: 1.0 }], 2.0);
+        assert_eq!(t.current().l, before, "zero L must not poison the EMA");
+    }
+}

@@ -1,0 +1,182 @@
+//! Local-update-frequency mathematics (paper §V-B, Eq. 23-27).
+//!
+//! The approximated convergence bound (Eq. 23)
+//!
+//!   G(H, τ) = 4F(x⁰)/(Hητ) + LητΦ/3 + 6L²β²,   Φ = G² + 18σ²
+//!
+//! is convex in τ; its minimizer at fixed H is
+//!
+//!   τ*(H) = sqrt(12 F / (η² H L Φ)).                       (Eq. 26)
+//!
+//! Substituting τ* gives G*(H) = 4·sqrt(F·L·Φ/(3H)) + 6L²β², decreasing
+//! in H, so the *smallest* round count meeting the convergence target ε is
+//!
+//!   H* = ceil( 16·F·L·Φ / (3·(ε − 6L²β²)²) ).
+//!
+//! Alg. 1 line 13 solves Eq. 27 by exactly this: each candidate client is
+//! assumed fastest, H* is computed, and its projected total time
+//! T_n = H*·(τ*(H*)·μ_n + ν_n) ranks the clients. Eq. 24 then brackets the
+//! other clients' τ so nobody waits more than ρ.
+
+/// Variable estimates aggregated from client probes (Alg. 2 l.7-9 → Alg. 1 l.25).
+#[derive(Debug, Clone, Copy)]
+pub struct Estimates {
+    /// smoothness L
+    pub l: f64,
+    /// gradient-variance bound σ²
+    pub sigma_sq: f64,
+    /// gradient-norm bound G²
+    pub g_sq: f64,
+    /// current global loss F(x^h)
+    pub loss: f64,
+}
+
+impl Estimates {
+    /// Sensible bootstrap before any probe data exists (round 0 uses the
+    /// predefined τ anyway; these values only avoid division by zero).
+    pub fn bootstrap(loss: f64) -> Estimates {
+        Estimates { l: 1.0, sigma_sq: 1.0, g_sq: 1.0, loss: loss.max(1e-3) }
+    }
+
+    /// Φ = G² + 18σ² (appears throughout §V).
+    pub fn phi(&self) -> f64 {
+        self.g_sq + 18.0 * self.sigma_sq
+    }
+
+    /// Guard against degenerate probes: clamp everything positive.
+    pub fn sanitized(&self) -> Estimates {
+        Estimates {
+            l: self.l.clamp(1e-3, 1e3),
+            sigma_sq: self.sigma_sq.clamp(1e-8, 1e6),
+            g_sq: self.g_sq.clamp(1e-8, 1e6),
+            loss: self.loss.clamp(1e-3, 1e6),
+        }
+    }
+}
+
+/// τ*(H) = sqrt(12 F / (η² H L Φ)) (Eq. 26), as a float ≥ 1.
+pub fn tau_opt(est: &Estimates, eta: f64, h: usize) -> f64 {
+    let e = est.sanitized();
+    let denom = eta * eta * h as f64 * e.l * e.phi();
+    (12.0 * e.loss / denom).sqrt().max(1.0)
+}
+
+/// H* = smallest round count whose optimal-τ bound reaches `epsilon`
+/// (β² — the coefficient-reduction error bound — shifts the floor).
+/// Clamped to [1, h_max]: when ε is unreachable (ε ≤ 6L²β²) the best the
+/// controller can do is run the maximum horizon.
+pub fn solve_rounds(est: &Estimates, epsilon: f64, beta_sq: f64, h_max: usize) -> usize {
+    let e = est.sanitized();
+    let floor = 6.0 * e.l * e.l * beta_sq;
+    let margin = epsilon - floor;
+    if margin <= 0.0 {
+        return h_max;
+    }
+    let h = (16.0 * e.loss * e.l * e.phi() / (3.0 * margin * margin)).ceil();
+    (h as usize).clamp(1, h_max)
+}
+
+/// Projected total completion time if client (μ, ν) is the fastest
+/// (Eq. 27): T(H) = H · (τ*(H)·μ + ν).
+pub fn projected_total_time(est: &Estimates, eta: f64, h: usize, mu: f64, nu: f64) -> f64 {
+    h as f64 * (tau_opt(est, eta, h) * mu + nu)
+}
+
+/// Eq. 24 bracket: τ for client (μ, ν) such that
+/// 0 ≤ T_l − (τ·μ + ν) ≤ ρ, intersected with [τ_min, τ_max].
+/// Returns an inclusive integer interval, or the closest feasible point
+/// when the exact bracket is empty (a very slow client simply gets τ_min —
+/// it is the straggler the width assignment should have prevented).
+pub fn tau_bounds(t_l: f64, mu: f64, nu: f64, rho: f64, tau_min: usize, tau_max: usize) -> (usize, usize) {
+    debug_assert!(mu > 0.0);
+    let hi = ((t_l - nu) / mu).floor();
+    let lo = ((t_l - rho - nu) / mu).ceil();
+    let lo = (lo.max(tau_min as f64)) as usize;
+    let hi = if hi < tau_min as f64 { tau_min } else { (hi as usize).min(tau_max) };
+    if lo > hi {
+        // infeasible bracket: collapse onto the nearest feasible τ
+        let pin = hi.clamp(tau_min, tau_max);
+        (pin, pin)
+    } else {
+        (lo.clamp(tau_min, tau_max), hi)
+    }
+}
+
+/// Completion time of one client for a round (Eq. 19 summand).
+pub fn completion_time(tau: usize, mu: f64, nu: f64) -> f64 {
+    tau as f64 * mu + nu
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est() -> Estimates {
+        Estimates { l: 2.0, sigma_sq: 0.5, g_sq: 4.0, loss: 2.3 }
+    }
+
+    #[test]
+    fn phi_combines_bounds() {
+        assert!((est().phi() - 13.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tau_opt_decreases_with_h() {
+        let e = est();
+        let t10 = tau_opt(&e, 0.05, 10);
+        let t100 = tau_opt(&e, 0.05, 100);
+        assert!(t10 > t100, "{t10} !> {t100}");
+        // exact: sqrt(12*2.3/(0.05^2*10*2*13))
+        let expect = (12.0 * 2.3 / (0.05f64.powi(2) * 10.0 * 2.0 * 13.0)).sqrt();
+        assert!((t10 - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tau_opt_floors_at_one() {
+        let e = Estimates { l: 100.0, sigma_sq: 100.0, g_sq: 100.0, loss: 1e-3 };
+        assert_eq!(tau_opt(&e, 0.5, 10_000), 1.0);
+    }
+
+    #[test]
+    fn solve_rounds_monotone_in_epsilon() {
+        let e = est();
+        let h_loose = solve_rounds(&e, 1.0, 0.0, 100_000);
+        let h_tight = solve_rounds(&e, 0.1, 0.0, 100_000);
+        assert!(h_tight > h_loose, "{h_tight} !> {h_loose}");
+    }
+
+    #[test]
+    fn solve_rounds_caps_when_unreachable() {
+        let e = est();
+        // floor = 6 L² β² = 24 β²; with β²=1, floor=24 > ε
+        assert_eq!(solve_rounds(&e, 0.5, 1.0, 500), 500);
+    }
+
+    #[test]
+    fn projected_time_increasing_in_mu_nu() {
+        let e = est();
+        let base = projected_total_time(&e, 0.05, 50, 0.1, 1.0);
+        assert!(projected_total_time(&e, 0.05, 50, 0.2, 1.0) > base);
+        assert!(projected_total_time(&e, 0.05, 50, 0.1, 2.0) > base);
+    }
+
+    #[test]
+    fn tau_bounds_bracket_matches_eq24() {
+        // T_l = 10, μ = 0.5, ν = 1, ρ = 2 → τ ∈ [(10-2-1)/0.5, (10-1)/0.5] = [14, 18]
+        let (lo, hi) = tau_bounds(10.0, 0.5, 1.0, 2.0, 1, 100);
+        assert_eq!((lo, hi), (14, 18));
+        // every τ in the bracket satisfies 0 ≤ T_l - (τμ+ν) ≤ ρ
+        for tau in lo..=hi {
+            let slack = 10.0 - completion_time(tau, 0.5, 1.0);
+            assert!((0.0..=2.0).contains(&slack), "τ={tau} slack={slack}");
+        }
+    }
+
+    #[test]
+    fn tau_bounds_clamp_to_range() {
+        let (lo, hi) = tau_bounds(1000.0, 0.1, 0.0, 1.0, 1, 30);
+        assert_eq!((lo, hi), (30, 30)); // wants huge τ, capped at τ_max... bracket collapses
+        let (lo, hi) = tau_bounds(0.1, 1.0, 5.0, 1.0, 1, 30);
+        assert_eq!((lo, hi), (1, 1)); // slow client pinned at τ_min
+    }
+}

@@ -1,0 +1,281 @@
+//! Block ledger — training-adequacy bookkeeping for the enhanced neural
+//! composition (paper §II-B), at **channel-group granularity**.
+//!
+//! The paper selects the least-trained coefficient *blocks* freely. Free
+//! selection breaks channel alignment between consecutive layers (a block
+//! trained at slot (0,0) of a width-1 model lands at tile (a,g) of the
+//! full model), which at reproducible training budgets prevents the full
+//! model from cohering (DESIGN.md §Deviations). We therefore rotate at
+//! the granularity the composition actually exposes: every *group class*
+//! (a set of layers whose activations meet, e.g. through residual adds)
+//! selects the `p` least-trained channel groups; a layer's trained blocks
+//! are the cross product of its input-class and output-class selections,
+//! `id = a·P + g`. Width-p sub-models are then exactly channel-aligned
+//! sub-networks of the width-P model, while rotation still guarantees the
+//! paper's core property: every block of every coefficient is trained
+//! evenly (total-update-times balance, Eq. 21).
+
+use crate::runtime::ModelInfo;
+use crate::util::stats;
+
+/// One round's selection for one client: per-class group choices plus the
+/// per-layer block ids they induce (both ascending).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Selection {
+    /// groups[class_idx] = selected group ids, len = p
+    pub groups: Vec<Vec<usize>>,
+    /// blocks[layer_idx] = coefficient block ids (ascending)
+    pub blocks: Vec<Vec<usize>>,
+}
+
+/// Group-class update counters.
+#[derive(Debug, Clone)]
+pub struct BlockLedger {
+    cap_p: usize,
+    /// group-class names, in first-appearance order over the layer list
+    classes: Vec<String>,
+    /// counts[class_idx][group] — total local iterations (c_i analogue)
+    counts: Vec<Vec<u64>>,
+    /// per layer: (in_class idx, out_class idx)
+    layer_classes: Vec<(Option<usize>, Option<usize>)>,
+}
+
+impl BlockLedger {
+    pub fn new(info: &ModelInfo) -> BlockLedger {
+        let mut classes: Vec<String> = Vec::new();
+        let idx_of = |name: &Option<String>, classes: &mut Vec<String>| -> Option<usize> {
+            name.as_ref().map(|n| {
+                if let Some(i) = classes.iter().position(|c| c == n) {
+                    i
+                } else {
+                    classes.push(n.clone());
+                    classes.len() - 1
+                }
+            })
+        };
+        let layer_classes: Vec<(Option<usize>, Option<usize>)> = info
+            .layers
+            .iter()
+            .map(|l| {
+                assert_eq!(
+                    l.s_in,
+                    l.in_class.is_some(),
+                    "layer {}: s_in must come with an in_class",
+                    l.name
+                );
+                assert_eq!(
+                    l.s_out,
+                    l.out_class.is_some(),
+                    "layer {}: s_out must come with an out_class",
+                    l.name
+                );
+                (idx_of(&l.in_class, &mut classes), idx_of(&l.out_class, &mut classes))
+            })
+            .collect();
+        BlockLedger {
+            cap_p: info.cap_p,
+            counts: vec![vec![0; info.cap_p]; classes.len()],
+            classes,
+            layer_classes,
+        }
+    }
+
+    pub fn classes(&self) -> &[String] {
+        &self.classes
+    }
+
+    pub fn class_counts(&self, class_idx: usize) -> &[u64] {
+        &self.counts[class_idx]
+    }
+
+    /// The `want` least-trained groups of a class, ascending id order
+    /// (count-sorted, id tie-break — the paper's least-trained rule).
+    fn select_groups(&self, class_idx: usize, want: usize) -> Vec<usize> {
+        let c = &self.counts[class_idx];
+        assert!(want <= c.len(), "want {want} of {} groups", c.len());
+        let mut ids: Vec<usize> = (0..c.len()).collect();
+        ids.sort_by_key(|&i| c[i]);
+        ids.truncate(want);
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Blocks of one layer induced by per-class group selections.
+    fn layer_blocks(&self, layer_idx: usize, groups: &[Vec<usize>]) -> Vec<usize> {
+        let (ic, oc) = self.layer_classes[layer_idx];
+        match (ic, oc) {
+            (None, None) => vec![0],
+            (None, Some(o)) => groups[o].clone(),
+            (Some(i), None) => groups[i].clone(),
+            (Some(i), Some(o)) => {
+                let mut out = Vec::with_capacity(groups[i].len() * groups[o].len());
+                for &a in &groups[i] {
+                    for &g in &groups[o] {
+                        out.push(a * self.cap_p + g);
+                    }
+                }
+                out // ascending because both selections are sorted
+            }
+        }
+    }
+
+    /// Full selection for a width-p client.
+    pub fn select_for_width(&self, info: &ModelInfo, p: usize) -> Selection {
+        assert!(p >= 1 && p <= self.cap_p);
+        let groups: Vec<Vec<usize>> =
+            (0..self.classes.len()).map(|c| self.select_groups(c, p)).collect();
+        let blocks = (0..info.layers.len()).map(|l| self.layer_blocks(l, &groups)).collect();
+        Selection { groups, blocks }
+    }
+
+    /// The all-groups selection (width P) — identity block layout.
+    pub fn full_selection(&self, info: &ModelInfo) -> Selection {
+        self.select_for_width(info, self.cap_p)
+    }
+
+    /// Record `tau` local iterations on a selection (Alg. 1 l.21-22).
+    pub fn record(&mut self, sel: &Selection, tau: u64) {
+        assert_eq!(sel.groups.len(), self.counts.len());
+        for (class_idx, groups) in sel.groups.iter().enumerate() {
+            for &g in groups {
+                self.counts[class_idx][g] += tau;
+            }
+        }
+    }
+
+    /// V^h: mean over classes of the per-class group-count variance
+    /// (Eq. 21 at group granularity).
+    pub fn variance(&self) -> f64 {
+        let per_class: Vec<f64> = self
+            .counts
+            .iter()
+            .map(|c| stats::variance(&c.iter().map(|&x| x as f64).collect::<Vec<_>>()))
+            .collect();
+        stats::mean(&per_class)
+    }
+
+    /// Hypothetical V^h if `sel` received `tau` more iterations — the
+    /// controller's τ search (Alg. 1 line 19) uses this without mutating.
+    pub fn variance_if(&self, sel: &Selection, tau: u64) -> f64 {
+        let per_class: Vec<f64> = self
+            .counts
+            .iter()
+            .enumerate()
+            .map(|(class_idx, c)| {
+                let groups = &sel.groups[class_idx];
+                let xs: Vec<f64> = c
+                    .iter()
+                    .enumerate()
+                    .map(|(g, &x)| {
+                        let add = if groups.binary_search(&g).is_ok() { tau } else { 0 };
+                        (x + add) as f64
+                    })
+                    .collect();
+                stats::variance(&xs)
+            })
+            .collect();
+        stats::mean(&per_class)
+    }
+
+    /// Spread diagnostics: (min, max) group count over all classes.
+    pub fn count_range(&self) -> (u64, u64) {
+        let mut lo = u64::MAX;
+        let mut hi = 0;
+        for c in &self.counts {
+            for &x in c {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+        }
+        if lo == u64::MAX {
+            (0, 0)
+        } else {
+            (lo, hi)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tests_support::toy_info;
+
+    // toy_info: conv1 (out class "g1"), head (in class "g1"); cap_p = 2.
+
+    #[test]
+    fn classes_derived_from_layers() {
+        let info = toy_info();
+        let ledger = BlockLedger::new(&info);
+        assert_eq!(ledger.classes(), &["g1".to_string()]);
+        assert_eq!(ledger.class_counts(0), &[0, 0]);
+    }
+
+    #[test]
+    fn selection_is_shared_across_tied_layers() {
+        let info = toy_info();
+        let mut ledger = BlockLedger::new(&info);
+        let sel = ledger.select_for_width(&info, 1);
+        // one class, one group picked; conv1 blocks == head blocks == group
+        assert_eq!(sel.groups, vec![vec![0]]);
+        assert_eq!(sel.blocks, vec![vec![0], vec![0]]);
+        ledger.record(&sel, 5);
+        // next narrow selection must rotate to the other group
+        let sel2 = ledger.select_for_width(&info, 1);
+        assert_eq!(sel2.groups, vec![vec![1]]);
+        assert_eq!(sel2.blocks, vec![vec![1], vec![1]]);
+    }
+
+    #[test]
+    fn full_selection_is_identity_layout() {
+        let info = toy_info();
+        let ledger = BlockLedger::new(&info);
+        let sel = ledger.full_selection(&info);
+        assert_eq!(sel.groups, vec![vec![0, 1]]);
+        assert_eq!(sel.blocks, vec![vec![0, 1], vec![0, 1]]);
+    }
+
+    #[test]
+    fn cross_product_blocks_for_dual_scaled_layers() {
+        // synthesize a dual-scaled layer by hand
+        let mut info = toy_info();
+        info.layers[1].s_in = true;
+        info.layers[1].s_out = true;
+        info.layers[1].in_class = Some("g1".into());
+        info.layers[1].out_class = Some("g2".into());
+        info.layers[1].blocks_total = 4;
+        let mut ledger = BlockLedger::new(&info);
+        assert_eq!(ledger.classes(), &["g1".to_string(), "g2".to_string()]);
+        let sel = ledger.select_for_width(&info, 1);
+        assert_eq!(sel.blocks[1], vec![0]); // a=0,g=0 -> 0*2+0
+        ledger.record(&sel, 3);
+        let sel2 = ledger.select_for_width(&info, 1);
+        // both classes rotate -> a=1,g=1 -> 1*2+1 = 3
+        assert_eq!(sel2.blocks[1], vec![3]);
+        let full = ledger.select_for_width(&info, 2);
+        assert_eq!(full.blocks[1], vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn variance_and_variance_if_agree() {
+        let info = toy_info();
+        let mut ledger = BlockLedger::new(&info);
+        let sel = ledger.select_for_width(&info, 1);
+        ledger.record(&sel, 4);
+        assert!(ledger.variance() > 0.0);
+        let sel2 = ledger.select_for_width(&info, 1);
+        let hyp = ledger.variance_if(&sel2, 4);
+        ledger.record(&sel2, 4);
+        assert!((hyp - ledger.variance()).abs() < 1e-12);
+        assert_eq!(ledger.variance(), 0.0); // balanced again
+    }
+
+    #[test]
+    fn count_range_tracks_extremes() {
+        let info = toy_info();
+        let mut ledger = BlockLedger::new(&info);
+        assert_eq!(ledger.count_range(), (0, 0));
+        let sel = ledger.select_for_width(&info, 1);
+        ledger.record(&sel, 9);
+        assert_eq!(ledger.count_range(), (0, 9));
+    }
+}

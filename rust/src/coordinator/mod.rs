@@ -1,0 +1,54 @@
+//! Layer-3 coordinator — the paper's system contribution.
+//!
+//! * `ledger`     — block training-adequacy bookkeeping (§II-B)
+//! * `frequency`  — convergence-bound mathematics (Eq. 23-27)
+//! * `estimator`  — L/σ²/G² estimation from probe gradients (Alg. 2 l.7-9)
+//! * `assignment` — the greedy round planner (Alg. 1 l.4-23)
+//! * `aggregate`  — basis averaging + block-wise coefficient aggregation (Eq. 5)
+//! * `client`     — simulated client executing Alg. 2 through PJRT
+//! * `env`        — shared federated world (data, fleet, WAN, clock, eval)
+//! * `server`     — the Heroes PS round loop (Alg. 1)
+
+pub mod aggregate;
+pub mod assignment;
+pub mod client;
+pub mod env;
+pub mod estimator;
+pub mod frequency;
+pub mod ledger;
+pub mod server;
+
+use crate::tensor::{IntTensor, Tensor};
+
+/// 1/t learning-rate schedule shared by every scheme: lr_h = lr0 / (1 + h/D).
+pub fn scheduled_lr(lr0: f32, round: usize, decay_rounds: usize) -> f32 {
+    lr0 / (1.0 + round as f32 / decay_rounds.max(1) as f32)
+}
+
+/// A model input batch: image families feed f32 pixels, the text family
+/// feeds i32 tokens.
+#[derive(Debug, Clone)]
+pub enum XData {
+    Image(Tensor),
+    Tokens(IntTensor),
+}
+
+/// Per-round metrics emitted by every scheme (Heroes and baselines) —
+/// the raw series behind all paper figures.
+#[derive(Debug, Clone)]
+pub struct RoundReport {
+    pub round: usize,
+    /// T^h (Eq. 19): synchronous round completion time, simulated seconds
+    pub round_time: f64,
+    /// W^h (Eq. 20): average waiting time
+    pub avg_wait: f64,
+    /// mean local training loss over participants
+    pub mean_loss: f64,
+    pub taus: Vec<usize>,
+    pub widths: Vec<usize>,
+    pub down_bytes: usize,
+    pub up_bytes: usize,
+    pub completion_times: Vec<f64>,
+    /// V^h (Eq. 21): block update-count variance after the round
+    pub block_variance: f64,
+}

@@ -1,0 +1,164 @@
+//! The Heroes parameter server — paper Alg. 1 end to end.
+//!
+//! Owns the composed global model, the block ledger and the estimate
+//! tracker; each `run_round` samples clients, plans widths / τ / blocks
+//! (`assignment::plan_round`), dispatches the simulated clients through
+//! the PJRT train executables, performs basis + block-wise aggregation
+//! and advances the virtual clock by the synchronous-round maximum.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::aggregate::ComposedAccumulator;
+use crate::coordinator::assignment::{self, average_wait, ControllerCfg, RoundPlan};
+use crate::coordinator::client::run_local;
+use crate::coordinator::env::FlEnv;
+use crate::coordinator::estimator::EstimateTracker;
+use crate::coordinator::ledger::BlockLedger;
+use crate::coordinator::RoundReport;
+use crate::model::ComposedGlobal;
+use crate::runtime::{Manifest, ModelInfo};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// The Heroes PS state.
+pub struct HeroesServer {
+    pub global: ComposedGlobal,
+    pub ledger: BlockLedger,
+    pub tracker: EstimateTracker,
+    ctrl: ControllerCfg,
+    family: String,
+    lr: f32,
+    lr_decay_rounds: usize,
+    tau_default: usize,
+    round: usize,
+    /// probe every round (paper); can be thinned for speed
+    pub probe_every: usize,
+}
+
+impl HeroesServer {
+    pub fn new(info: &ModelInfo, cfg: &ExperimentConfig, rng: &mut Rng) -> Result<HeroesServer> {
+        Ok(HeroesServer {
+            global: ComposedGlobal::init(info, rng)?,
+            ledger: BlockLedger::new(info),
+            tracker: EstimateTracker::new(0.3),
+            ctrl: ControllerCfg {
+                mu_max: cfg.mu_max,
+                rho: cfg.rho,
+                eta: cfg.lr as f64,
+                epsilon: cfg.epsilon,
+                tau_min: cfg.tau_min,
+                tau_max: cfg.tau_max,
+                tau_floor: cfg.tau_default,
+                h_max: 1_000_000,
+            },
+            family: cfg.family.clone(),
+            lr: cfg.lr,
+            lr_decay_rounds: cfg.lr_decay_rounds,
+            tau_default: cfg.tau_default,
+            round: 0,
+            probe_every: 1,
+        })
+    }
+
+    /// Plan the round: Alg. 1 proper once estimates exist, otherwise the
+    /// predefined identical τ (h = 0 bootstrap).
+    fn plan(&mut self, env: &mut FlEnv, clients: &[usize]) -> RoundPlan {
+        let statuses: Vec<_> = clients.iter().map(|&c| env.status(c)).collect();
+        if self.tracker.ready() {
+            let est = self.tracker.current();
+            assignment::plan_round(&env.info, &self.ctrl, &est, &statuses, &mut self.ledger)
+        } else {
+            // bootstrap: widths still greedy, τ identical
+            let mut assignments = Vec::with_capacity(statuses.len());
+            for s in &statuses {
+                let (p, mu) = assignment::assign_width(&env.info, s.q_flops, self.ctrl.mu_max);
+                let nu = s.link.upload_time(env.info.bytes_composed[&p]);
+                let sel = self.ledger.select_for_width(&env.info, p);
+                self.ledger.record(&sel, self.tau_default as u64);
+                assignments.push(assignment::Assignment {
+                    client: s.client,
+                    p,
+                    mu,
+                    nu,
+                    tau: self.tau_default,
+                    selection: sel,
+                    projected_t: crate::coordinator::frequency::completion_time(
+                        self.tau_default, mu, nu,
+                    ),
+                });
+            }
+            let (fastest, t_l) = assignments
+                .iter()
+                .enumerate()
+                .map(|(i, a)| (i, a.projected_t))
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap_or((0, 0.0));
+            RoundPlan { assignments, fastest, t_l, h_star: 1 }
+        }
+    }
+
+    /// Execute one synchronous round (paper Alg. 1 lines 4-27).
+    pub fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport> {
+        let clients = env.sample_clients();
+        let plan = self.plan(env, &clients);
+        let engine = env.engine;
+        let info = env.info.clone();
+        let probing = self.probe_every > 0 && self.round % self.probe_every.max(1) == 0;
+
+        let mut acc = ComposedAccumulator::new(&info, &self.global);
+        let mut completion = Vec::with_capacity(plan.assignments.len());
+        let mut losses = Vec::with_capacity(plan.assignments.len());
+        let mut estimates = Vec::new();
+        let mut down = 0usize;
+        let mut up = 0usize;
+        let lr_h = crate::coordinator::scheduled_lr(self.lr, self.round, self.lr_decay_rounds);
+
+        for a in &plan.assignments {
+            let payload = self.global.reduced_inputs(&info, a.p, &a.selection.blocks)?;
+            let bytes = info.bytes_composed[&a.p];
+            down += bytes;
+            let train_exec = Manifest::train_name(&self.family, a.p, true);
+            let probe_exec = probing.then(|| Manifest::probe_name(&self.family, a.p));
+            let client = a.client;
+            let result = run_local(
+                engine,
+                &train_exec,
+                probe_exec.as_deref(),
+                payload,
+                a.tau,
+                lr_h,
+                || env.next_batch(client),
+            )?;
+            up += bytes;
+            acc.push(&a.selection.blocks, &result.params)?;
+            completion.push(a.projected_t);
+            losses.push(result.mean_loss);
+            if let Some(e) = result.estimates {
+                estimates.push(e);
+            }
+        }
+
+        self.global = acc.finalize()?;
+        let mean_loss = losses.iter().sum::<f64>() / losses.len().max(1) as f64;
+        self.tracker.update(&estimates, mean_loss);
+
+        env.traffic.record_down(down);
+        env.traffic.record_up(up);
+        let round_time = completion.iter().copied().fold(0.0, f64::max);
+        env.clock.advance(round_time);
+
+        let report = RoundReport {
+            round: self.round,
+            round_time,
+            avg_wait: average_wait(&completion),
+            mean_loss,
+            taus: plan.assignments.iter().map(|a| a.tau).collect(),
+            widths: plan.assignments.iter().map(|a| a.p).collect(),
+            down_bytes: down,
+            up_bytes: up,
+            completion_times: completion,
+            block_variance: self.ledger.variance(),
+        };
+        self.round += 1;
+        Ok(report)
+    }
+}

@@ -1,0 +1,260 @@
+//! Per-client batch iterators feeding PJRT literals.
+//!
+//! A `ImageLoader` owns a client's index list into the shared `ImageSet`
+//! and yields fixed-size `(x, y)` batches (the AOT executables have static
+//! shapes), reshuffling each epoch. `TextLoader` slides fixed-length
+//! windows over the client's token stream: `x = s[i..i+T]`,
+//! `y = s[i+1..i+T+1]` (next-char prediction).
+
+use super::{ImageSet, TextSet};
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// One (x, y) training batch as host tensors.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Tensor,
+    pub y: IntTensor,
+}
+
+/// One tokenized (x, y) batch for the RNN family.
+#[derive(Debug, Clone)]
+pub struct TokenBatch {
+    pub x: IntTensor,
+    pub y: IntTensor,
+}
+
+/// Shuffled, epoch-cycling image batch loader.
+#[derive(Debug, Clone)]
+pub struct ImageLoader {
+    data: Arc<ImageSet>,
+    indices: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    rng: Rng,
+}
+
+impl ImageLoader {
+    pub fn new(data: Arc<ImageSet>, indices: Vec<usize>, batch: usize, rng: Rng) -> ImageLoader {
+        assert!(!indices.is_empty(), "empty client partition");
+        let mut l = ImageLoader { data, indices, cursor: 0, batch, rng };
+        l.rng.shuffle(&mut l.indices);
+        l
+    }
+
+    /// Number of samples this client holds.
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Next fixed-size batch; wraps (with reshuffle) at epoch end.
+    pub fn next_batch(&mut self) -> Batch {
+        let ss = self.data.sample_size();
+        let hw = self.data.hw;
+        let c = self.data.channels;
+        let mut x = vec![0.0f32; self.batch * ss];
+        let mut y = vec![0i32; self.batch];
+        for b in 0..self.batch {
+            if self.cursor >= self.indices.len() {
+                self.cursor = 0;
+                self.rng.shuffle(&mut self.indices);
+            }
+            let i = self.indices[self.cursor];
+            self.cursor += 1;
+            x[b * ss..(b + 1) * ss].copy_from_slice(self.data.sample(i));
+            y[b] = self.data.labels[i];
+        }
+        Batch {
+            x: Tensor::from_vec(&[self.batch, hw, hw, c], x),
+            y: IntTensor::from_vec(&[self.batch], y),
+        }
+    }
+}
+
+/// Sequential full-set evaluator batches (padding the tail by wrapping).
+pub struct EvalBatches<'a> {
+    data: &'a ImageSet,
+    cursor: usize,
+    batch: usize,
+}
+
+impl<'a> EvalBatches<'a> {
+    pub fn new(data: &'a ImageSet, batch: usize) -> Self {
+        EvalBatches { data, cursor: 0, batch }
+    }
+
+    /// Number of batches covering the set once.
+    pub fn num_batches(&self) -> usize {
+        self.data.len().div_ceil(self.batch)
+    }
+}
+
+impl<'a> Iterator for EvalBatches<'a> {
+    /// (batch, number of *real* samples in it)
+    type Item = (Batch, usize);
+
+    fn next(&mut self) -> Option<(Batch, usize)> {
+        if self.cursor >= self.data.len() {
+            return None;
+        }
+        let ss = self.data.sample_size();
+        let real = (self.data.len() - self.cursor).min(self.batch);
+        let mut x = vec![0.0f32; self.batch * ss];
+        let mut y = vec![0i32; self.batch];
+        for b in 0..self.batch {
+            let i = if b < real { self.cursor + b } else { b % self.data.len() };
+            x[b * ss..(b + 1) * ss].copy_from_slice(self.data.sample(i));
+            y[b] = self.data.labels[i];
+        }
+        self.cursor += real;
+        Some((
+            Batch {
+                x: Tensor::from_vec(&[self.batch, self.data.hw, self.data.hw, self.data.channels], x),
+                y: IntTensor::from_vec(&[self.batch], y),
+            },
+            real,
+        ))
+    }
+}
+
+/// Random-window token batch loader over one shard.
+#[derive(Debug, Clone)]
+pub struct TextLoader {
+    stream: Arc<Vec<i32>>,
+    batch: usize,
+    seq: usize,
+    rng: Rng,
+}
+
+impl TextLoader {
+    pub fn new(stream: Arc<Vec<i32>>, batch: usize, seq: usize, rng: Rng) -> TextLoader {
+        assert!(stream.len() > seq + 1, "stream shorter than sequence length");
+        TextLoader { stream, batch, seq, rng }
+    }
+
+    pub fn next_batch(&mut self) -> TokenBatch {
+        let mut x = vec![0i32; self.batch * self.seq];
+        let mut y = vec![0i32; self.batch * self.seq];
+        let limit = self.stream.len() - self.seq - 1;
+        for b in 0..self.batch {
+            let start = self.rng.below(limit);
+            x[b * self.seq..(b + 1) * self.seq].copy_from_slice(&self.stream[start..start + self.seq]);
+            y[b * self.seq..(b + 1) * self.seq]
+                .copy_from_slice(&self.stream[start + 1..start + self.seq + 1]);
+        }
+        TokenBatch {
+            x: IntTensor::from_vec(&[self.batch, self.seq], x),
+            y: IntTensor::from_vec(&[self.batch, self.seq], y),
+        }
+    }
+}
+
+/// Deterministic eval windows over the test stream.
+pub struct TextEvalBatches<'a> {
+    set: &'a TextSet,
+    cursor: usize,
+    batch: usize,
+    seq: usize,
+}
+
+impl<'a> TextEvalBatches<'a> {
+    pub fn new(set: &'a TextSet, batch: usize, seq: usize) -> Self {
+        TextEvalBatches { set, cursor: 0, batch, seq }
+    }
+}
+
+impl<'a> Iterator for TextEvalBatches<'a> {
+    /// (batch, real sequences)
+    type Item = (TokenBatch, usize);
+
+    fn next(&mut self) -> Option<(TokenBatch, usize)> {
+        let stride = self.seq + 1;
+        let avail = self.set.test.len().saturating_sub(self.cursor);
+        if avail < stride {
+            return None;
+        }
+        let real = (avail / stride).min(self.batch);
+        let mut x = vec![0i32; self.batch * self.seq];
+        let mut y = vec![0i32; self.batch * self.seq];
+        for b in 0..self.batch {
+            let start = if b < real {
+                self.cursor + b * stride
+            } else {
+                // pad by repeating the first window
+                self.cursor
+            };
+            x[b * self.seq..(b + 1) * self.seq].copy_from_slice(&self.set.test[start..start + self.seq]);
+            y[b * self.seq..(b + 1) * self.seq]
+                .copy_from_slice(&self.set.test[start + 1..start + self.seq + 1]);
+        }
+        self.cursor += real * stride;
+        Some((
+            TokenBatch {
+                x: IntTensor::from_vec(&[self.batch, self.seq], x),
+                y: IntTensor::from_vec(&[self.batch, self.seq], y),
+            },
+            real,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_image::ImageGen;
+    use crate::data::synth_text::TextGen;
+
+    #[test]
+    fn image_loader_batches_and_wraps() {
+        let ds = Arc::new(ImageGen::cifar_twin().generate(25, 42, &mut Rng::new(1)));
+        let mut l = ImageLoader::new(ds.clone(), (0..25).collect(), 16, Rng::new(2));
+        let b1 = l.next_batch();
+        assert_eq!(b1.x.shape(), &[16, 16, 16, 3]);
+        assert_eq!(b1.y.shape(), &[16]);
+        let _b2 = l.next_batch(); // forces an epoch wrap
+        assert_eq!(l.len(), 25);
+    }
+
+    #[test]
+    fn eval_batches_cover_all_samples_once() {
+        let ds = ImageGen::cifar_twin().generate(100, 42, &mut Rng::new(1));
+        let it = EvalBatches::new(&ds, 64);
+        let total: usize = it.map(|(_, real)| real).sum();
+        assert_eq!(total, 100);
+        assert_eq!(EvalBatches::new(&ds, 64).num_batches(), 2);
+    }
+
+    #[test]
+    fn text_loader_targets_are_shifted_inputs() {
+        let ts = TextGen::shakespeare_twin().generate(1, 500, 10, 3);
+        let stream = Arc::new(ts.shards[0].clone());
+        let mut l = TextLoader::new(stream.clone(), 4, 20, Rng::new(5));
+        let b = l.next_batch();
+        assert_eq!(b.x.shape(), &[4, 20]);
+        // y row must equal x row shifted by one within the source stream
+        for row in 0..4 {
+            let xs = &b.x.data()[row * 20..(row + 1) * 20];
+            let ys = &b.y.data()[row * 20..(row + 1) * 20];
+            // find xs in stream and verify ys follows it
+            let pos = stream
+                .windows(20)
+                .position(|w| w == xs)
+                .expect("window must come from the stream");
+            assert_eq!(ys, &stream[pos + 1..pos + 21]);
+        }
+    }
+
+    #[test]
+    fn text_eval_is_deterministic_and_covers() {
+        let ts = TextGen::shakespeare_twin().generate(1, 10, 2_000, 3);
+        let n1: usize = TextEvalBatches::new(&ts, 32, 20).map(|(_, r)| r).sum();
+        let n2: usize = TextEvalBatches::new(&ts, 32, 20).map(|(_, r)| r).sum();
+        assert_eq!(n1, n2);
+        assert!(n1 > 50, "too few eval windows: {n1}");
+    }
+}

@@ -1,0 +1,55 @@
+//! Synthetic federated datasets (substrate — CIFAR-10 / ImageNet-100 /
+//! Shakespeare are not available offline; DESIGN.md §Substitutions).
+//!
+//! * `synth_image` — class-conditioned image generator (CIFAR / ImageNet
+//!   twins) with controllable difficulty.
+//! * `synth_text` — order-2 Markov character streams (Shakespeare twin)
+//!   with per-client chain perturbation for natural Non-IID.
+//! * `partition` — the paper's Γ (dominant-class) and φ (missing-class)
+//!   Non-IID partition schemes (§VI-A2).
+//! * `loader` — per-client shuffled batch iterators feeding PJRT literals.
+
+pub mod loader;
+pub mod partition;
+pub mod synth_image;
+pub mod synth_text;
+
+/// A supervised image dataset in NHWC f32 with int labels.
+#[derive(Debug, Clone)]
+pub struct ImageSet {
+    pub hw: usize,
+    pub channels: usize,
+    pub classes: usize,
+    /// (n, hw, hw, c) row-major
+    pub pixels: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl ImageSet {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn sample_size(&self) -> usize {
+        self.hw * self.hw * self.channels
+    }
+
+    pub fn sample(&self, i: usize) -> &[f32] {
+        let s = self.sample_size();
+        &self.pixels[i * s..(i + 1) * s]
+    }
+}
+
+/// A character-stream dataset: one token stream per logical shard plus a
+/// global test stream.
+#[derive(Debug, Clone)]
+pub struct TextSet {
+    pub vocab: usize,
+    /// per-shard token streams (shard = paper's "speaking role")
+    pub shards: Vec<Vec<i32>>,
+    pub test: Vec<i32>,
+}

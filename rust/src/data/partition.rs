@@ -1,0 +1,202 @@
+//! Non-IID partition schemes from the paper (§VI-A2).
+//!
+//! * `gamma_partition` — CIFAR-10 scheme: Γ% of each client's samples come
+//!   from one dominant class, the rest spread evenly over the other
+//!   classes. Γ = 100/classes (10 for CIFAR-10) degenerates to IID.
+//! * `phi_partition` — ImageNet-100 scheme: each client *lacks* φ% of the
+//!   classes; volume is equal across the classes it does hold. φ = 0 is IID.
+//!
+//! Both return per-client index lists into the dataset, never duplicate an
+//! index, and use every sample at most once (invariants property-tested in
+//! rust/tests/prop_coordinator.rs).
+
+use crate::util::rng::Rng;
+
+/// Group sample indices by label. `classes` must exceed every label.
+fn by_class(labels: &[i32], classes: usize) -> Vec<Vec<usize>> {
+    let mut pools: Vec<Vec<usize>> = vec![Vec::new(); classes];
+    for (i, &l) in labels.iter().enumerate() {
+        pools[l as usize].push(i);
+    }
+    pools
+}
+
+/// Γ-scheme (dominant-class). `gamma_pct` in [0,100]; each client draws
+/// ~`gamma_pct`% of its quota from a dominant class assigned round-robin
+/// and the rest evenly from the remaining classes. Pools are consumed
+/// without replacement; when a pool dries up the sampler falls back to
+/// whatever classes still have samples, so all quotas are met whenever
+/// `n_clients * quota <= labels.len()`.
+pub fn gamma_partition(
+    labels: &[i32],
+    classes: usize,
+    n_clients: usize,
+    quota: usize,
+    gamma_pct: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert!(n_clients * quota <= labels.len(), "not enough samples: need {} have {}", n_clients * quota, labels.len());
+    let mut pools = by_class(labels, classes);
+    for p in pools.iter_mut() {
+        rng.shuffle(p);
+    }
+    let frac = (gamma_pct / 100.0).clamp(0.0, 1.0);
+    let mut out = Vec::with_capacity(n_clients);
+    for client in 0..n_clients {
+        let dom = client % classes;
+        let n_dom = ((quota as f64) * frac).round() as usize;
+        let mut idxs = Vec::with_capacity(quota);
+        take_from(&mut pools, dom, n_dom.min(quota), &mut idxs, rng);
+        // even spread over the other classes
+        let rest = quota - idxs.len();
+        let others: Vec<usize> = (0..classes).filter(|&c| c != dom).collect();
+        for (j, &c) in others.iter().enumerate() {
+            // distribute remainder as evenly as integer division allows
+            let share = rest / others.len() + usize::from(j < rest % others.len());
+            take_from(&mut pools, c, share, &mut idxs, rng);
+        }
+        // top up from any non-empty pool if some pools dried out
+        while idxs.len() < quota {
+            let Some(c) = (0..classes).find(|&c| !pools[c].is_empty()) else { break };
+            take_from(&mut pools, c, quota - idxs.len(), &mut idxs, rng);
+        }
+        assert_eq!(idxs.len(), quota, "client {client} quota unmet");
+        out.push(idxs);
+    }
+    out
+}
+
+/// φ-scheme (missing-class). Each client holds `classes - missing` classes
+/// (chosen per client) with equal per-class volume.
+pub fn phi_partition(
+    labels: &[i32],
+    classes: usize,
+    n_clients: usize,
+    quota: usize,
+    missing: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert!(missing < classes, "cannot miss all classes");
+    assert!(n_clients * quota <= labels.len(), "not enough samples");
+    let mut pools = by_class(labels, classes);
+    for p in pools.iter_mut() {
+        rng.shuffle(p);
+    }
+    let keep = classes - missing;
+    let mut out = Vec::with_capacity(n_clients);
+    for client in 0..n_clients {
+        let kept = rng.sample_distinct(classes, keep);
+        let mut idxs = Vec::with_capacity(quota);
+        for (j, &c) in kept.iter().enumerate() {
+            let share = quota / keep + usize::from(j < quota % keep);
+            take_from(&mut pools, c, share, &mut idxs, rng);
+        }
+        while idxs.len() < quota {
+            let Some(c) = (0..classes).find(|&c| !pools[c].is_empty()) else { break };
+            take_from(&mut pools, c, quota - idxs.len(), &mut idxs, rng);
+        }
+        assert_eq!(idxs.len(), quota, "client {client} quota unmet");
+        out.push(idxs);
+    }
+    out
+}
+
+fn take_from(pools: &mut [Vec<usize>], class: usize, want: usize, out: &mut Vec<usize>, _rng: &mut Rng) {
+    let pool = &mut pools[class];
+    let take = want.min(pool.len());
+    out.extend(pool.drain(pool.len() - take..));
+}
+
+/// Measure the dominant-class fraction of a partition (diagnostics + tests).
+pub fn dominant_fraction(part: &[usize], labels: &[i32], classes: usize) -> f64 {
+    let mut counts = vec![0usize; classes];
+    for &i in part {
+        counts[labels[i] as usize] += 1;
+    }
+    let max = counts.iter().max().copied().unwrap_or(0);
+    if part.is_empty() {
+        0.0
+    } else {
+        max as f64 / part.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labels(n: usize, classes: usize) -> Vec<i32> {
+        (0..n).map(|i| (i % classes) as i32).collect()
+    }
+
+    #[test]
+    fn gamma_no_duplicates_and_quota() {
+        let l = labels(2000, 10);
+        let mut rng = Rng::new(1);
+        let parts = gamma_partition(&l, 10, 20, 50, 40.0, &mut rng);
+        assert_eq!(parts.len(), 20);
+        let mut seen = std::collections::HashSet::new();
+        for p in &parts {
+            assert_eq!(p.len(), 50);
+            for &i in p {
+                assert!(seen.insert(i), "duplicate index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn gamma_skew_increases_with_gamma() {
+        let l = labels(5000, 10);
+        let f = |g: f64| {
+            let mut rng = Rng::new(2);
+            let parts = gamma_partition(&l, 10, 10, 100, g, &mut rng);
+            let avg: f64 = parts
+                .iter()
+                .map(|p| dominant_fraction(p, &l, 10))
+                .sum::<f64>()
+                / parts.len() as f64;
+            avg
+        };
+        let iid = f(10.0);
+        let mid = f(40.0);
+        let hi = f(80.0);
+        assert!(iid < mid && mid < hi, "skew not monotone: {iid} {mid} {hi}");
+        assert!((hi - 0.8).abs() < 0.05, "Γ=80 should give ~80% dominant, got {hi}");
+    }
+
+    #[test]
+    fn phi_missing_classes() {
+        let l = labels(4000, 20);
+        let mut rng = Rng::new(3);
+        let missing = 8; // 40%
+        let parts = phi_partition(&l, 20, 10, 100, missing, &mut rng);
+        for p in &parts {
+            let mut present = vec![false; 20];
+            for &i in p {
+                present[l[i] as usize] = true;
+            }
+            let held = present.iter().filter(|&&x| x).count();
+            assert!(held <= 20 - missing, "client holds {held} classes, expected <= {}", 20 - missing);
+        }
+    }
+
+    #[test]
+    fn phi_zero_is_iid_like() {
+        let l = labels(4000, 20);
+        let mut rng = Rng::new(4);
+        let parts = phi_partition(&l, 20, 10, 200, 0, &mut rng);
+        for p in &parts {
+            let dom = dominant_fraction(p, &l, 20);
+            assert!(dom < 0.10, "IID partition too skewed: {dom}");
+        }
+    }
+
+    #[test]
+    fn exhausts_gracefully_at_capacity() {
+        let l = labels(500, 10);
+        let mut rng = Rng::new(5);
+        let parts = gamma_partition(&l, 10, 10, 50, 80.0, &mut rng);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 500);
+    }
+}

@@ -1,0 +1,172 @@
+//! Order-2 Markov character streams — the Shakespeare twin.
+//!
+//! A global transition structure maps each character bigram to a small
+//! set of plausible next characters (like English orthography does); each
+//! shard ("speaking role" in LEAF's Shakespeare split) perturbs the chain
+//! with its own style component, which reproduces the natural Non-IID of
+//! the original dataset. The entropy of the chain bounds achievable
+//! next-char accuracy well above chance, so accuracy curves behave like
+//! the paper's Fig. 9.
+
+use super::TextSet;
+use crate::util::rng::Rng;
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct TextGen {
+    pub vocab: usize,
+    /// candidate next-chars per bigram state
+    pub branching: usize,
+    /// weight of the shard-specific chain vs the global one, in [0,1]
+    pub style_weight: f64,
+}
+
+impl TextGen {
+    /// Shakespeare twin defaults (vocab matches the rnn model spec).
+    pub fn shakespeare_twin() -> TextGen {
+        TextGen { vocab: 64, branching: 3, style_weight: 0.3 }
+    }
+
+    /// Draw a chain: for every bigram state, `branching` candidate next
+    /// chars with geometric-ish weights.
+    fn chain(&self, rng: &mut Rng) -> Vec<Vec<(i32, f64)>> {
+        let states = self.vocab * self.vocab;
+        (0..states)
+            .map(|_| {
+                let mut cands = Vec::with_capacity(self.branching);
+                let mut w = 1.0;
+                for _ in 0..self.branching {
+                    cands.push((rng.below(self.vocab) as i32, w));
+                    w *= 0.45;
+                }
+                cands
+            })
+            .collect()
+    }
+
+    fn sample_stream(
+        &self,
+        global: &[Vec<(i32, f64)>],
+        style: Option<&[Vec<(i32, f64)>]>,
+        len: usize,
+        rng: &mut Rng,
+    ) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        let mut a = rng.below(self.vocab) as i32;
+        let mut b = rng.below(self.vocab) as i32;
+        out.push(a);
+        out.push(b);
+        let mut weights: Vec<f64> = Vec::with_capacity(self.vocab);
+        while out.len() < len {
+            let state = (a as usize) * self.vocab + b as usize;
+            weights.clear();
+            weights.resize(self.vocab, 1e-4); // smoothing mass
+            for &(c, w) in &global[state] {
+                weights[c as usize] += (1.0 - self.style_weight) * w;
+            }
+            if let Some(st) = style {
+                for &(c, w) in &st[state] {
+                    weights[c as usize] += self.style_weight * w;
+                }
+            }
+            let next = rng.weighted(&weights) as i32;
+            out.push(next);
+            a = b;
+            b = next;
+        }
+        out
+    }
+
+    /// Build `shards` per-client streams of `shard_len` tokens plus a
+    /// global test stream of `test_len` tokens.
+    pub fn generate(&self, shards: usize, shard_len: usize, test_len: usize, seed: u64) -> TextSet {
+        let mut rng = Rng::new(seed);
+        let global = self.chain(&mut rng);
+        let mut out_shards = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let mut srng = rng.fork(s as u64 + 1);
+            let style = self.chain(&mut srng);
+            out_shards.push(self.sample_stream(&global, Some(&style), shard_len, &mut srng));
+        }
+        let mut trng = rng.fork(0xEEEE);
+        // test stream mixes styles the way the paper evaluates on the full
+        // test split: global chain only.
+        let test = self.sample_stream(&global, None, test_len, &mut trng);
+        TextSet { vocab: self.vocab, shards: out_shards, test }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let gen = TextGen::shakespeare_twin();
+        let ts = gen.generate(5, 500, 1000, 9);
+        assert_eq!(ts.shards.len(), 5);
+        assert!(ts.shards.iter().all(|s| s.len() == 500));
+        assert_eq!(ts.test.len(), 1000);
+        let ok = |s: &[i32]| s.iter().all(|&t| (0..64).contains(&t));
+        assert!(ts.shards.iter().all(|s| ok(s)));
+        assert!(ok(&ts.test));
+    }
+
+    #[test]
+    fn deterministic() {
+        let gen = TextGen::shakespeare_twin();
+        let a = gen.generate(3, 100, 100, 5);
+        let b = gen.generate(3, 100, 100, 5);
+        assert_eq!(a.shards, b.shards);
+        assert_eq!(a.test, b.test);
+    }
+
+    #[test]
+    fn chain_is_predictable_above_chance() {
+        // An order-2 bigram counter trained on the test stream should
+        // predict continuations far better than 1/64.
+        let gen = TextGen::shakespeare_twin();
+        let ts = gen.generate(1, 10, 20_000, 11);
+        let v = gen.vocab;
+        let split = ts.test.len() / 2;
+        let mut counts = vec![0u32; v * v * v];
+        for w in ts.test[..split].windows(3) {
+            counts[(w[0] as usize * v + w[1] as usize) * v + w[2] as usize] += 1;
+        }
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for w in ts.test[split..].windows(3) {
+            let state = w[0] as usize * v + w[1] as usize;
+            let row = &counts[state * v..(state + 1) * v];
+            let pred = row.iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0;
+            if pred == w[2] as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+        let acc = correct as f64 / total as f64;
+        assert!(acc > 0.25, "bigram predictability too low: {acc}");
+    }
+
+    #[test]
+    fn shards_differ_in_style() {
+        let gen = TextGen::shakespeare_twin();
+        let ts = gen.generate(2, 5000, 10, 13);
+        // bigram distributions of two shards should differ measurably
+        let hist = |s: &[i32]| {
+            let mut h = vec![0f64; 64 * 64];
+            for w in s.windows(2) {
+                h[w[0] as usize * 64 + w[1] as usize] += 1.0;
+            }
+            let n: f64 = h.iter().sum();
+            for x in &mut h {
+                *x /= n;
+            }
+            h
+        };
+        let h0 = hist(&ts.shards[0]);
+        let h1 = hist(&ts.shards[1]);
+        let l1: f64 = h0.iter().zip(&h1).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 > 0.1, "shard styles indistinguishable: l1={l1}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Experiment harnesses: one per paper table/figure (see DESIGN.md's
+//! experiment index) plus the generic scheme runner.
+
+pub mod figures;
+pub mod runner;
+
+pub use figures::{run_experiment, ExpCtx, ALL_EXPERIMENTS};
+pub use runner::{run_scheme, run_schemes, StopCondition};

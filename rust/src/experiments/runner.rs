@@ -1,0 +1,106 @@
+//! Generic experiment runner: drive one scheme against a fresh `FlEnv`
+//! for a budgeted number of rounds, evaluating periodically into a
+//! `Recorder`. All table/figure harnesses build on this.
+
+use crate::baselines::make_strategy;
+use crate::config::ExperimentConfig;
+use crate::coordinator::env::FlEnv;
+use crate::metrics::Recorder;
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::path::Path;
+
+/// Early-stop conditions checked at every evaluation point.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StopCondition {
+    /// stop once simulated time exceeds this (seconds)
+    pub sim_time: Option<f64>,
+    /// stop once total traffic exceeds this (GB)
+    pub traffic_gb: Option<f64>,
+    /// stop once test accuracy reaches this
+    pub accuracy: Option<f64>,
+}
+
+impl StopCondition {
+    fn met(&self, sim_time: f64, traffic_gb: f64, acc: f64) -> bool {
+        self.sim_time.map(|t| sim_time >= t).unwrap_or(false)
+            || self.traffic_gb.map(|t| traffic_gb >= t).unwrap_or(false)
+            || self.accuracy.map(|a| acc >= a).unwrap_or(false)
+    }
+}
+
+/// Run `scheme` on a fresh environment derived from `cfg`.
+///
+/// Evaluates at round 0 and then every `cfg.eval_every` rounds (plus a
+/// final evaluation), recording the simulated clock and traffic meter at
+/// each point. Returns the full series.
+pub fn run_scheme(
+    engine: &Engine,
+    cfg: &ExperimentConfig,
+    scheme: &str,
+    stop: StopCondition,
+) -> Result<Recorder> {
+    let mut env = FlEnv::build(engine, cfg.clone())?;
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut strategy = make_strategy(scheme, &env.info, cfg, &mut rng)?;
+    let mut rec = Recorder::new(scheme);
+
+    let (loss0, acc0) = strategy.evaluate(&env)?;
+    rec.push_eval(0, 0.0, 0.0, loss0, acc0, loss0, strategy.block_variance());
+
+    #[allow(unused_assignments)]
+    let mut last_train_loss = loss0;
+    for round in 1..=cfg.rounds {
+        let report = strategy.run_round(&mut env)?;
+        last_train_loss = report.mean_loss;
+        rec.push_round(&report);
+        if round % cfg.eval_every == 0 || round == cfg.rounds {
+            let (loss, acc) = strategy.evaluate(&env)?;
+            let t = env.clock.now();
+            let gb = env.traffic.total_gb();
+            rec.push_eval(round, t, gb, loss, acc, last_train_loss, strategy.block_variance());
+            log::info!(
+                "[{scheme}] round {round:>4}: t={t:9.1}s traffic={gb:.4}GB loss={loss:.4} acc={acc:.4}"
+            );
+            if stop.met(t, gb, acc) {
+                break;
+            }
+        }
+    }
+    Ok(rec)
+}
+
+/// Run several schemes under identical configs; optionally persist each
+/// series under `out_dir` with the given file prefix.
+pub fn run_schemes(
+    engine: &Engine,
+    cfg: &ExperimentConfig,
+    schemes: &[&str],
+    stop: StopCondition,
+    out: Option<(&Path, &str)>,
+) -> Result<Vec<Recorder>> {
+    let mut all = Vec::with_capacity(schemes.len());
+    for scheme in schemes {
+        let rec = run_scheme(engine, cfg, scheme, stop)?;
+        if let Some((dir, prefix)) = out {
+            rec.write_files(dir, prefix)?;
+        }
+        all.push(rec);
+    }
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stop_condition_logic() {
+        let s = StopCondition { sim_time: Some(10.0), traffic_gb: None, accuracy: Some(0.9) };
+        assert!(!s.met(5.0, 1.0, 0.5));
+        assert!(s.met(11.0, 1.0, 0.5));
+        assert!(s.met(5.0, 1.0, 0.95));
+        assert!(!StopCondition::default().met(1e9, 1e9, 1.0));
+    }
+}

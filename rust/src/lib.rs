@@ -1,0 +1,30 @@
+//! # Heroes — lightweight federated learning with enhanced neural
+//! composition and adaptive local update
+//!
+//! Rust reproduction of *Heroes* (Yan et al., 2023): an FL framework for
+//! heterogeneous edge networks combining
+//!
+//! 1. **enhanced neural composition** — layer weights factored into a
+//!    shared neural basis and a blocked coefficient; width-`p` sub-models
+//!    compose the `p²` least-trained blocks, and blocks of all shapes
+//!    aggregate into one global coefficient (paper §II-B, Eq. 5), and
+//! 2. **adaptive local update** — per-client local iteration counts
+//!    chosen by a greedy controller driven by the convergence bound
+//!    (paper §V, Alg. 1/2).
+//!
+//! Architecture (DESIGN.md): this crate is Layer 3 — the coordinator.
+//! Model compute (Layer 2 JAX graphs calling Layer 1 Pallas kernels) is
+//! AOT-compiled to HLO text by `make artifacts` and executed through the
+//! PJRT CPU client (`runtime`); python never runs inside the round loop.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod simulation;
+pub mod tensor;
+pub mod util;

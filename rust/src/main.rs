@@ -1,0 +1,137 @@
+//! `heroes` — the experiment launcher.
+//!
+//! ```text
+//! heroes exp <id> [--scale smoke|paper] [--out results/] [overrides...]
+//! heroes exp all            # every table/figure at the chosen scale
+//! heroes train [--family cnn] [--scheme heroes] [--rounds N] [...]
+//! heroes inspect-artifacts  # list compiled executables + cost model
+//! heroes list               # available experiments / schemes
+//! ```
+//!
+//! Overrides: --clients --k --rounds --lr --seed --gamma --phi --tau
+//! --tau-max --mu-max --rho --epsilon --eval-every --samples-per-client
+//! --test-samples --up-lo/--up-hi/--down-lo/--down-hi --target.
+
+use anyhow::{anyhow, Result};
+use heroes::baselines::ALL_SCHEMES;
+use heroes::config::{ExperimentConfig, Scale};
+use heroes::experiments::{run_experiment, run_scheme, ExpCtx, StopCondition, ALL_EXPERIMENTS};
+use heroes::runtime::{Engine, Manifest};
+use heroes::util::cli::Args;
+use std::path::PathBuf;
+
+fn main() {
+    heroes::util::logging::init_from_env();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "exp" => cmd_exp(&args),
+        "train" => cmd_train(&args),
+        "inspect-artifacts" => cmd_inspect(),
+        "list" => {
+            println!("experiments: {}", ALL_EXPERIMENTS.join(" "));
+            println!("schemes:     {}", ALL_SCHEMES.join(" "));
+            Ok(())
+        }
+        _ => {
+            println!("usage: heroes <exp|train|inspect-artifacts|list> [...]");
+            println!("       see rust/src/main.rs docs for flags");
+            Ok(())
+        }
+    }
+}
+
+fn make_engine() -> Result<Engine> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        return Err(anyhow!(
+            "artifacts not found in {} — run `make artifacts` first",
+            dir.display()
+        ));
+    }
+    Engine::new(Manifest::load(&dir)?)
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: heroes exp <id|all> [flags]"))?
+        .clone();
+    let scale = Scale::parse(args.get_or("scale", "smoke"))?;
+    let engine = make_engine()?;
+    let ctx = ExpCtx {
+        engine: &engine,
+        scale,
+        args: args.clone(),
+        out_dir: PathBuf::from(args.get_or("out", "results")),
+    };
+    if id == "all" {
+        for name in ALL_EXPERIMENTS {
+            run_experiment(name, &ctx)?;
+            println!();
+        }
+        Ok(())
+    } else {
+        run_experiment(&id, &ctx)
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let family = args.get_or("family", "cnn").to_string();
+    let scheme = args.get_or("scheme", "heroes").to_string();
+    let scale = Scale::parse(args.get_or("scale", "smoke"))?;
+    let cfg = if let Some(path) = args.get("config") {
+        let doc = heroes::util::json::parse_file(std::path::Path::new(path))?;
+        ExperimentConfig::from_json(&family, scale, &doc)?.apply_args(args)?
+    } else {
+        ExperimentConfig::preset(&family, scale).apply_args(args)?
+    };
+    let engine = make_engine()?;
+    let stop = StopCondition {
+        sim_time: args.get("time-budget").map(|v| v.parse()).transpose().map_err(|_| anyhow!("bad --time-budget"))?,
+        traffic_gb: args.get("traffic-budget").map(|v| v.parse()).transpose().map_err(|_| anyhow!("bad --traffic-budget"))?,
+        accuracy: args.get("target").map(|v| v.parse()).transpose().map_err(|_| anyhow!("bad --target"))?,
+    };
+    let rec = run_scheme(&engine, &cfg, &scheme, stop)?;
+    let out = PathBuf::from(args.get_or("out", "results"));
+    rec.write_files(&out, &format!("train_{family}"))?;
+    let last = rec.samples.last().unwrap();
+    println!(
+        "{scheme}/{family}: {} rounds, sim {:.0}s, traffic {:.4}GB, acc {:.2}%",
+        last.round,
+        last.sim_time,
+        last.traffic_gb,
+        last.test_acc * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let m = Manifest::load(&Manifest::default_dir())?;
+    println!("{} model families, {} executables", m.models.len(), m.executables.len());
+    for (fam, info) in &m.models {
+        println!(
+            "[{fam}] P={} classes={} batch={} layers={}",
+            info.cap_p,
+            info.classes,
+            info.batch,
+            info.layers.len()
+        );
+        for p in 1..=info.cap_p {
+            println!(
+                "  p={p}: flops/iter composed {:>12.0} dense {:>12.0} | upload bytes composed {:>8} dense {:>8}",
+                info.flops_composed[&p], info.flops_dense[&p],
+                info.bytes_composed[&p], info.bytes_dense[&p]
+            );
+        }
+    }
+    Ok(())
+}

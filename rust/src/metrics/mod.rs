@@ -1,0 +1,7 @@
+//! Metrics recording + the paper's four evaluation metrics (§VI-B2):
+//! test accuracy, average waiting time, completion time (to target
+//! accuracy) and network traffic.
+
+pub mod recorder;
+
+pub use recorder::{Recorder, Sample};

@@ -1,0 +1,227 @@
+//! Time-series recorder for one scheme's run.
+//!
+//! One `Sample` per evaluation point carries the simulated clock, the
+//! cumulative traffic and the test metrics; the figure/table harnesses
+//! query derived quantities (time-to-accuracy, traffic-to-accuracy,
+//! accuracy-at-budget) from the recorded series, and experiments persist
+//! them as JSON + CSV under `results/`.
+
+use crate::coordinator::RoundReport;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One evaluation point of a run.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub round: usize,
+    /// simulated seconds since start
+    pub sim_time: f64,
+    /// cumulative PS↔client traffic (GB)
+    pub traffic_gb: f64,
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// W^h averaged since the previous sample
+    pub avg_wait: f64,
+    pub mean_train_loss: f64,
+    pub block_variance: f64,
+}
+
+/// A scheme's recorded run.
+#[derive(Debug, Clone)]
+pub struct Recorder {
+    pub scheme: String,
+    pub samples: Vec<Sample>,
+    // accumulators between eval points
+    waits: Vec<f64>,
+    reports: usize,
+}
+
+impl Recorder {
+    pub fn new(scheme: &str) -> Recorder {
+        Recorder { scheme: scheme.to_string(), samples: Vec::new(), waits: Vec::new(), reports: 0 }
+    }
+
+    /// Fold in a round report (between evaluation points).
+    pub fn push_round(&mut self, r: &RoundReport) {
+        self.waits.push(r.avg_wait);
+        self.reports += 1;
+    }
+
+    /// Record an evaluation point (test metrics + current clock/traffic).
+    pub fn push_eval(
+        &mut self,
+        round: usize,
+        sim_time: f64,
+        traffic_gb: f64,
+        test_loss: f64,
+        test_acc: f64,
+        mean_train_loss: f64,
+        block_variance: f64,
+    ) {
+        let avg_wait = crate::util::stats::mean(&self.waits);
+        self.waits.clear();
+        self.samples.push(Sample {
+            round,
+            sim_time,
+            traffic_gb,
+            test_loss,
+            test_acc,
+            avg_wait,
+            mean_train_loss,
+            block_variance,
+        });
+    }
+
+    // ------------- derived metrics (paper §VI-B2) -------------
+
+    /// Completion time (metric ③): first simulated time reaching `target`
+    /// accuracy.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.samples.iter().find(|s| s.test_acc >= target).map(|s| s.sim_time)
+    }
+
+    /// Network traffic (metric ④) consumed by the time `target` accuracy
+    /// is first reached.
+    pub fn traffic_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.samples.iter().find(|s| s.test_acc >= target).map(|s| s.traffic_gb)
+    }
+
+    /// Best accuracy achieved within a simulated-time budget.
+    pub fn accuracy_at_time(&self, budget: f64) -> f64 {
+        self.samples
+            .iter()
+            .filter(|s| s.sim_time <= budget)
+            .map(|s| s.test_acc)
+            .fold(0.0, f64::max)
+    }
+
+    /// Best accuracy achieved within a traffic budget (GB).
+    pub fn accuracy_at_traffic(&self, budget_gb: f64) -> f64 {
+        self.samples
+            .iter()
+            .filter(|s| s.traffic_gb <= budget_gb)
+            .map(|s| s.test_acc)
+            .fold(0.0, f64::max)
+    }
+
+    /// Mean of the recorded per-sample average waits (metric ②).
+    pub fn mean_wait(&self) -> f64 {
+        crate::util::stats::mean(&self.samples.iter().map(|s| s.avg_wait).collect::<Vec<_>>())
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.samples.last().map(|s| s.test_acc).unwrap_or(0.0)
+    }
+
+    // ------------- persistence -------------
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .samples
+            .iter()
+            .map(|s| {
+                Json::Obj(BTreeMap::from([
+                    ("round".into(), Json::from(s.round)),
+                    ("sim_time".into(), Json::from(s.sim_time)),
+                    ("traffic_gb".into(), Json::from(s.traffic_gb)),
+                    ("test_loss".into(), Json::from(s.test_loss)),
+                    ("test_acc".into(), Json::from(s.test_acc)),
+                    ("avg_wait".into(), Json::from(s.avg_wait)),
+                    ("mean_train_loss".into(), Json::from(s.mean_train_loss)),
+                    ("block_variance".into(), Json::from(s.block_variance)),
+                ]))
+            })
+            .collect();
+        Json::obj(vec![
+            ("scheme", Json::from(self.scheme.clone())),
+            ("samples", Json::Arr(rows)),
+        ])
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,sim_time,traffic_gb,test_loss,test_acc,avg_wait,mean_train_loss,block_variance\n",
+        );
+        for s in &self.samples {
+            out.push_str(&format!(
+                "{},{:.3},{:.6},{:.5},{:.5},{:.4},{:.5},{:.4}\n",
+                s.round, s.sim_time, s.traffic_gb, s.test_loss, s.test_acc, s.avg_wait,
+                s.mean_train_loss, s.block_variance
+            ));
+        }
+        out
+    }
+
+    /// Write `<dir>/<prefix>_<scheme>.{json,csv}`.
+    pub fn write_files(&self, dir: &Path, prefix: &str) -> Result<()> {
+        std::fs::create_dir_all(dir).context("creating results dir")?;
+        let base = format!("{prefix}_{}", self.scheme);
+        std::fs::write(dir.join(format!("{base}.json")), self.to_json().to_string_pretty())?;
+        std::fs::write(dir.join(format!("{base}.csv")), self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec() -> Recorder {
+        let mut r = Recorder::new("test");
+        // three eval points with rising accuracy
+        r.push_eval(0, 10.0, 0.1, 2.0, 0.30, 2.0, 0.0);
+        r.push_eval(5, 50.0, 0.5, 1.5, 0.55, 1.5, 1.0);
+        r.push_eval(10, 100.0, 1.0, 1.0, 0.70, 1.0, 2.0);
+        r
+    }
+
+    #[test]
+    fn derived_metrics() {
+        let r = rec();
+        assert_eq!(r.time_to_accuracy(0.5), Some(50.0));
+        assert_eq!(r.time_to_accuracy(0.9), None);
+        assert_eq!(r.traffic_to_accuracy(0.6), Some(1.0));
+        assert!((r.accuracy_at_time(60.0) - 0.55).abs() < 1e-12);
+        assert!((r.accuracy_at_traffic(0.2) - 0.30).abs() < 1e-12);
+        assert!((r.final_accuracy() - 0.70).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_accumulation_resets_per_eval() {
+        let mut r = Recorder::new("w");
+        let mk = |wait: f64| crate::coordinator::RoundReport {
+            round: 0,
+            round_time: 1.0,
+            avg_wait: wait,
+            mean_loss: 1.0,
+            taus: vec![],
+            widths: vec![],
+            down_bytes: 0,
+            up_bytes: 0,
+            completion_times: vec![],
+            block_variance: 0.0,
+        };
+        r.push_round(&mk(2.0));
+        r.push_round(&mk(4.0));
+        r.push_eval(1, 1.0, 0.0, 1.0, 0.1, 1.0, 0.0);
+        assert!((r.samples[0].avg_wait - 3.0).abs() < 1e-12);
+        r.push_round(&mk(10.0));
+        r.push_eval(2, 2.0, 0.0, 1.0, 0.2, 1.0, 0.0);
+        assert!((r.samples[1].avg_wait - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_and_json_shapes() {
+        let r = rec();
+        let csv = r.to_csv();
+        assert_eq!(csv.lines().count(), 4); // header + 3 rows
+        let j = r.to_json();
+        assert_eq!(j.get("scheme").unwrap().as_str(), Some("test"));
+        assert_eq!(j.get("samples").unwrap().as_arr().unwrap().len(), 3);
+        // round-trips through our parser
+        let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("samples").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

@@ -1,0 +1,356 @@
+//! Global model state held by the PS.
+//!
+//! * `ComposedGlobal` — Heroes / Flanc state: per layer a neural basis
+//!   `v` and the *complete* coefficient `u` (R, B·O), plus the head bias.
+//!   Width-p client payloads are `[v_0, û_0, v_1, û_1, ..., bias]` where
+//!   `û_l` gathers that layer's selected blocks (paper Fig. 1).
+//! * `DenseGlobal` — baseline state (FedAvg / ADP / HeteroFL): one dense
+//!   weight per layer at full width; width-p sub-models are per-axis
+//!   prefix slices (HeteroFL §3).
+//!
+//! Both initialize from the manifest's parameter specs (shape + init std)
+//! so rust and the AOT graphs agree exactly on geometry.
+
+use crate::runtime::{ModelInfo, ParamSpec};
+use crate::tensor::blocks::gather_blocks;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+/// Initialize a parameter list from manifest specs.
+pub fn init_params(specs: &[ParamSpec], rng: &mut Rng) -> Vec<Tensor> {
+    specs
+        .iter()
+        .map(|s| Tensor::randn(&s.shape, s.init_std, rng))
+        .collect()
+}
+
+/// PS state for the composed (neural-composition) model family.
+#[derive(Debug, Clone)]
+pub struct ComposedGlobal {
+    /// aligned with `ModelInfo::layers`
+    pub bases: Vec<Tensor>,
+    /// complete coefficients, shape (R, B·O) per layer
+    pub coeffs: Vec<Tensor>,
+    pub bias: Tensor,
+}
+
+impl ComposedGlobal {
+    /// Random init (paper Alg. 1 line 1) using the full-width param specs.
+    pub fn init(info: &ModelInfo, rng: &mut Rng) -> Result<ComposedGlobal> {
+        let specs = info
+            .composed_params
+            .get(&info.cap_p)
+            .ok_or_else(|| anyhow!("no composed params at P={}", info.cap_p))?;
+        let params = init_params(specs, rng);
+        Self::from_params(info, params)
+    }
+
+    /// Reassemble from a flat `[v_0, u_0, ..., bias]` list (full width).
+    pub fn from_params(info: &ModelInfo, params: Vec<Tensor>) -> Result<ComposedGlobal> {
+        let l = info.layers.len();
+        if params.len() != 2 * l + 1 {
+            return Err(anyhow!("expected {} params, got {}", 2 * l + 1, params.len()));
+        }
+        let mut it = params.into_iter();
+        let mut bases = Vec::with_capacity(l);
+        let mut coeffs = Vec::with_capacity(l);
+        for layer in &info.layers {
+            let v = it.next().unwrap();
+            let u = it.next().unwrap();
+            if v.shape() != layer.basis_shape.as_slice() {
+                return Err(anyhow!("basis shape mismatch on {}", layer.name));
+            }
+            if u.shape() != layer.full_coeff_shape() {
+                return Err(anyhow!("coefficient shape mismatch on {}", layer.name));
+            }
+            bases.push(v);
+            coeffs.push(u);
+        }
+        Ok(ComposedGlobal { bases, coeffs, bias: it.next().unwrap() })
+    }
+
+    /// Client payload for width `p` given per-layer block selections
+    /// (ascending ids, `len == layer.blocks_at(p)`).
+    pub fn reduced_inputs(
+        &self,
+        info: &ModelInfo,
+        p: usize,
+        selections: &[Vec<usize>],
+    ) -> Result<Vec<Tensor>> {
+        if selections.len() != info.layers.len() {
+            return Err(anyhow!("need one selection per layer"));
+        }
+        let mut out = Vec::with_capacity(2 * info.layers.len() + 1);
+        for (idx, layer) in info.layers.iter().enumerate() {
+            let sel = &selections[idx];
+            if sel.len() != layer.blocks_at(p) {
+                return Err(anyhow!(
+                    "layer {} expects {} blocks at p={p}, got {}",
+                    layer.name,
+                    layer.blocks_at(p),
+                    sel.len()
+                ));
+            }
+            out.push(self.bases[idx].clone());
+            out.push(gather_blocks(&self.coeffs[idx], sel, layer.o));
+        }
+        out.push(self.bias.clone());
+        Ok(out)
+    }
+
+    /// Full-width payload (all blocks, ascending) — used by eval and by
+    /// full-width clients.
+    pub fn full_inputs(&self, info: &ModelInfo) -> Vec<Tensor> {
+        let selections = full_selections(info);
+        self.reduced_inputs(info, info.cap_p, &selections)
+            .expect("full selection is always valid")
+    }
+
+    /// Squared reduction error α_n = ||u - û||² over the blocks NOT sent
+    /// (paper Lemma 1: the model error induced by reducing the coefficient).
+    pub fn reduction_error(&self, info: &ModelInfo, selections: &[Vec<usize>]) -> f64 {
+        let mut err = 0.0;
+        for (idx, layer) in info.layers.iter().enumerate() {
+            let u = &self.coeffs[idx];
+            let sel = &selections[idx];
+            let o = layer.o;
+            let data = u.data();
+            let cols = layer.blocks_total * o;
+            for b in 0..layer.blocks_total {
+                if sel.binary_search(&b).is_err() {
+                    for row in 0..layer.r {
+                        let off = row * cols + b * o;
+                        for c in 0..o {
+                            let x = data[off + c] as f64;
+                            err += x * x;
+                        }
+                    }
+                }
+            }
+        }
+        err
+    }
+
+    /// Total parameter element count (basis + coefficients + bias).
+    pub fn num_elements(&self) -> usize {
+        self.bases.iter().map(Tensor::len).sum::<usize>()
+            + self.coeffs.iter().map(Tensor::len).sum::<usize>()
+            + self.bias.len()
+    }
+}
+
+/// All-blocks selections (ascending ids per layer).
+pub fn full_selections(info: &ModelInfo) -> Vec<Vec<usize>> {
+    info.layers
+        .iter()
+        .map(|l| (0..l.blocks_total).collect())
+        .collect()
+}
+
+/// PS state for the dense baselines.
+#[derive(Debug, Clone)]
+pub struct DenseGlobal {
+    /// aligned with `ModelInfo::layers`
+    pub weights: Vec<Tensor>,
+    pub bias: Tensor,
+}
+
+impl DenseGlobal {
+    pub fn init(info: &ModelInfo, rng: &mut Rng) -> Result<DenseGlobal> {
+        let specs = info
+            .dense_params
+            .get(&info.cap_p)
+            .ok_or_else(|| anyhow!("no dense params at P={}", info.cap_p))?;
+        let params = init_params(specs, rng);
+        Self::from_params(info, params)
+    }
+
+    pub fn from_params(info: &ModelInfo, params: Vec<Tensor>) -> Result<DenseGlobal> {
+        let l = info.layers.len();
+        if params.len() != l + 1 {
+            return Err(anyhow!("expected {} params, got {}", l + 1, params.len()));
+        }
+        let mut it = params.into_iter();
+        let weights: Vec<Tensor> = (0..l).map(|_| it.next().unwrap()).collect();
+        Ok(DenseGlobal { weights, bias: it.next().unwrap() })
+    }
+
+    /// Width-p sub-model: per-axis prefix slices matching the manifest's
+    /// dense param shapes at p (HeteroFL extraction).
+    pub fn reduced_inputs(&self, info: &ModelInfo, p: usize) -> Result<Vec<Tensor>> {
+        let specs = info
+            .dense_params
+            .get(&p)
+            .ok_or_else(|| anyhow!("no dense params at p={p}"))?;
+        let mut out = Vec::with_capacity(specs.len());
+        for (idx, spec) in specs.iter().enumerate() {
+            if idx < self.weights.len() {
+                out.push(self.weights[idx].slice_prefix(&spec.shape));
+            } else {
+                out.push(self.bias.clone()); // bias is width-independent
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.weights.iter().map(Tensor::len).sum::<usize>() + self.bias.len()
+    }
+}
+
+/// Test-support fixtures shared by unit tests across modules and the
+/// integration/property tests (which, as external crates, cannot see
+/// `#[cfg(test)]` items). Not part of the public API.
+#[doc(hidden)]
+pub mod tests_support {
+    use super::*;
+    use crate::runtime::{InputInfo, LayerInfo};
+    use std::collections::BTreeMap;
+
+    /// Hand-built two-layer ModelInfo (no manifest file needed).
+    pub fn toy_info() -> ModelInfo {
+        let layers = vec![
+            LayerInfo {
+                name: "conv1".into(), kind: "conv".into(), k: 3, stride: 1,
+                i: 2, o: 4, r: 3, s_in: false, s_out: true,
+                in_class: None, out_class: Some("g1".into()),
+                basis_shape: vec![9, 2, 3], block_shape: vec![3, 4], blocks_total: 2,
+            },
+            LayerInfo {
+                name: "head".into(), kind: "dense".into(), k: 1, stride: 1,
+                i: 4, o: 5, r: 3, s_in: true, s_out: false,
+                in_class: Some("g1".into()), out_class: None,
+                basis_shape: vec![1, 4, 3], block_shape: vec![3, 5], blocks_total: 2,
+            },
+        ];
+        let mk_composed = |p: usize| {
+            vec![
+                ParamSpec { name: "v_conv1".into(), shape: vec![9, 2, 3], init_std: 0.1 },
+                ParamSpec { name: "u_conv1".into(), shape: vec![3, p * 4], init_std: 0.1 },
+                ParamSpec { name: "v_head".into(), shape: vec![1, 4, 3], init_std: 0.1 },
+                ParamSpec { name: "u_head".into(), shape: vec![3, p * 5], init_std: 0.1 },
+                ParamSpec { name: "bias".into(), shape: vec![5], init_std: 0.0 },
+            ]
+        };
+        let mk_dense = |p: usize| {
+            vec![
+                ParamSpec { name: "w_conv1".into(), shape: vec![3, 3, 2, 4 * p], init_std: 0.1 },
+                ParamSpec { name: "w_head".into(), shape: vec![4 * p, 5], init_std: 0.1 },
+                ParamSpec { name: "bias".into(), shape: vec![5], init_std: 0.0 },
+            ]
+        };
+        ModelInfo {
+            family: "toy".into(),
+            cap_p: 2,
+            classes: 5,
+            batch: 4,
+            eval_batch: 8,
+            input: InputInfo::Image { hw: 8, channels: 2 },
+            layers,
+            composed_params: (1..=2).map(|p| (p, mk_composed(p))).collect(),
+            dense_params: (1..=2).map(|p| (p, mk_dense(p))).collect(),
+            flops_composed: BTreeMap::from([(1, 1e6), (2, 2e6)]),
+            flops_dense: BTreeMap::from([(1, 0.9e6), (2, 1.8e6)]),
+            bytes_composed: BTreeMap::from([(1, 500), (2, 800)]),
+            bytes_dense: BTreeMap::from([(1, 700), (2, 2000)]),
+            probe_dim: BTreeMap::from([(1, 10), (2, 20)]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::toy_info;
+    use super::*;
+
+    #[test]
+    fn composed_init_shapes() {
+        let info = toy_info();
+        let g = ComposedGlobal::init(&info, &mut Rng::new(1)).unwrap();
+        assert_eq!(g.bases[0].shape(), &[9, 2, 3]);
+        assert_eq!(g.coeffs[0].shape(), &[3, 8]); // B=2 blocks of 4 cols
+        assert_eq!(g.coeffs[1].shape(), &[3, 10]);
+        assert_eq!(g.bias.shape(), &[5]);
+        assert!(g.num_elements() > 0);
+    }
+
+    #[test]
+    fn reduced_inputs_select_blocks() {
+        let info = toy_info();
+        let g = ComposedGlobal::init(&info, &mut Rng::new(2)).unwrap();
+        let sels = vec![vec![1], vec![0]];
+        let inputs = g.reduced_inputs(&info, 1, &sels).unwrap();
+        assert_eq!(inputs.len(), 5);
+        assert_eq!(inputs[1].shape(), &[3, 4]); // û_conv1: 1 block
+        assert_eq!(inputs[3].shape(), &[3, 5]); // û_head: 1 block
+        // û_conv1 equals block 1 of the full coefficient
+        let full = &g.coeffs[0];
+        for row in 0..3 {
+            assert_eq!(&inputs[1].data()[row * 4..(row + 1) * 4], &full.data()[row * 8 + 4..row * 8 + 8]);
+        }
+    }
+
+    #[test]
+    fn full_inputs_match_cap_width() {
+        let info = toy_info();
+        let g = ComposedGlobal::init(&info, &mut Rng::new(3)).unwrap();
+        let inputs = g.full_inputs(&info);
+        assert_eq!(inputs[1].shape(), &[3, 8]);
+        assert_eq!(inputs[3].shape(), &[3, 10]);
+        // gathering all blocks in order is the identity
+        assert_eq!(inputs[1].data(), g.coeffs[0].data());
+    }
+
+    #[test]
+    fn reduction_error_counts_unsent_blocks() {
+        let info = toy_info();
+        let mut g = ComposedGlobal::init(&info, &mut Rng::new(4)).unwrap();
+        // zero out everything, then set block 0 of layer 0 to ones
+        for c in g.coeffs.iter_mut() {
+            c.scale(0.0);
+        }
+        for row in 0..3 {
+            for col in 0..4 {
+                g.coeffs[0].data_mut()[row * 8 + col] = 1.0;
+            }
+        }
+        // selecting block 0 ⇒ no error; selecting block 1 ⇒ error = 12
+        let full_sel_head = vec![0, 1];
+        let e0 = g.reduction_error(&info, &[vec![0], full_sel_head.clone()]);
+        assert_eq!(e0, 0.0);
+        let e1 = g.reduction_error(&info, &[vec![1], full_sel_head]);
+        assert!((e1 - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dense_reduce_slices_prefixes() {
+        let info = toy_info();
+        let g = DenseGlobal::init(&info, &mut Rng::new(5)).unwrap();
+        assert_eq!(g.weights[0].shape(), &[3, 3, 2, 8]);
+        let reduced = g.reduced_inputs(&info, 1).unwrap();
+        assert_eq!(reduced[0].shape(), &[3, 3, 2, 4]);
+        assert_eq!(reduced[1].shape(), &[4, 5]);
+        assert_eq!(reduced[2].shape(), &[5]); // bias full
+        // prefix slice of the first weight matches manual indexing
+        let w = &g.weights[0];
+        let r = &reduced[0];
+        assert_eq!(r.data()[0], w.data()[0]);
+        assert_eq!(r.data()[3], w.data()[3]);
+        assert_eq!(r.data()[4], w.data()[8]);
+    }
+
+    #[test]
+    fn from_params_validates() {
+        let info = toy_info();
+        assert!(ComposedGlobal::from_params(&info, vec![Tensor::zeros(&[1])]).is_err());
+        let bad = vec![
+            Tensor::zeros(&[9, 2, 3]),
+            Tensor::zeros(&[3, 7]), // wrong coeff width
+            Tensor::zeros(&[1, 4, 3]),
+            Tensor::zeros(&[3, 10]),
+            Tensor::zeros(&[5]),
+        ];
+        assert!(ComposedGlobal::from_params(&info, bad).is_err());
+    }
+}

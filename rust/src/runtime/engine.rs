@@ -1,0 +1,249 @@
+//! PJRT execution engine: loads `artifacts/*.hlo.txt`, compiles them on
+//! the CPU PJRT client (lazily, cached per process) and executes them with
+//! host tensors from `crate::tensor`.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`. The AOT
+//! side lowers with `return_tuple=True`, so every result is one tuple
+//! literal that we decompose against the manifest's output specs.
+
+use super::manifest::{DType, ExecSpec, Manifest, TensorSpec};
+use crate::tensor::{IntTensor, Tensor};
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Borrowed input value for an execution.
+#[derive(Debug, Clone, Copy)]
+pub enum Value<'a> {
+    F32(&'a Tensor),
+    I32(&'a IntTensor),
+}
+
+impl<'a> Value<'a> {
+    fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(t) => t.shape(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            Value::F32(_) => DType::F32,
+            Value::I32(_) => DType::I32,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Value::F32(t) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, t.shape(), bytes)?
+            }
+            Value::I32(t) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, t.shape(), bytes)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// Cumulative engine statistics (perf pass reads these).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+}
+
+/// The PJRT engine. One per process; not Sync (the PJRT client is used
+/// from the coordinator thread only).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Create a CPU engine over a parsed manifest.
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        log::debug!(
+            "PJRT platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()), stats: RefCell::new(EngineStats::default()) })
+    }
+
+    /// Engine over the default artifacts directory.
+    pub fn load_default() -> Result<Engine> {
+        Engine::new(Manifest::load_default()?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.borrow()
+    }
+
+    /// Ensure an executable is compiled (warms the cache).
+    pub fn prepare(&self, name: &str) -> Result<()> {
+        self.with_compiled(name, |_| Ok(()))
+    }
+
+    fn with_compiled<R>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<R>,
+    ) -> Result<R> {
+        {
+            let cache = self.cache.borrow();
+            if let Some(exe) = cache.get(name) {
+                return f(exe);
+            }
+        }
+        let spec = self.manifest.exec(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow!("loading {}: {e}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        log::debug!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let mut cache = self.cache.borrow_mut();
+        let exe = cache.entry(name.to_string()).or_insert(exe);
+        f(exe)
+    }
+
+    fn check_inputs(spec: &ExecSpec, inputs: &[Value]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (v, is) in inputs.iter().zip(&spec.inputs) {
+            if v.shape() != is.shape.as_slice() || v.dtype() != is.dtype {
+                return Err(anyhow!(
+                    "{}: input `{}` expects {:?} {:?}, got {:?} {:?}",
+                    spec.name,
+                    is.name,
+                    is.dtype,
+                    is.shape,
+                    v.dtype(),
+                    v.shape()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute `name` with positional inputs, returning positional f32
+    /// outputs as host tensors (all Heroes outputs are f32).
+    pub fn execute(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        // borrow, don't clone: ExecSpec holds nested Vecs and this is the
+        // hot path (§Perf iteration 1)
+        let spec = self.manifest.exec(name)?;
+        Self::check_inputs(spec, inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = self.with_compiled(name, |exe| {
+            exe.execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("executing {name}: {e}"))
+        })?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        let parts = out_lit
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing result tuple of {name}: {e}"))?;
+        if parts.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, os)| literal_to_tensor(lit, os).context(os.name.clone()))
+            .collect()
+    }
+}
+
+fn literal_to_tensor(lit: xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+    let v: Vec<f32> = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("output is not f32: {e}"))?;
+    if v.len() != spec.elements() {
+        return Err(anyhow!(
+            "output `{}` has {} elements, expected {:?}",
+            spec.name,
+            v.len(),
+            spec.shape
+        ));
+    }
+    Ok(Tensor::from_vec(&spec.shape, v))
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that require compiled artifacts live in
+    // rust/tests/integration_runtime.rs; the Value plumbing is testable
+    // standalone.
+    use super::*;
+
+    #[test]
+    fn value_shape_dtype() {
+        let t = Tensor::zeros(&[2, 3]);
+        let v = Value::F32(&t);
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.dtype(), DType::F32);
+        let it = IntTensor::zeros(&[4]);
+        let vi = Value::I32(&it);
+        assert_eq!(vi.dtype(), DType::I32);
+    }
+
+    #[test]
+    fn value_to_literal_roundtrip() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = Value::F32(&t).to_literal().unwrap();
+        assert_eq!(lit.element_count(), 4);
+        let back: Vec<f32> = lit.to_vec().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
+        let it = IntTensor::from_vec(&[3], vec![7, 8, 9]);
+        let lit = Value::I32(&it).to_literal().unwrap();
+        let back: Vec<i32> = lit.to_vec().unwrap();
+        assert_eq!(back, vec![7, 8, 9]);
+    }
+}

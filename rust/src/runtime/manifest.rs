@@ -1,0 +1,391 @@
+//! `artifacts/manifest.json` loader.
+//!
+//! The manifest is produced by `python/compile/aot.py` alongside the HLO
+//! text files and is the single source of truth for: executable I/O
+//! orderings and shapes, per-family layer geometry (basis/block shapes,
+//! block counts), per-width parameter specs with init stds, and the
+//! FLOPs / transfer-bytes cost model the simulator plugs into the paper's
+//! Eq. 17-18.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor dtype in the AOT interface (everything is f32 or i32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(anyhow!("unknown dtype `{other}`")),
+        }
+    }
+}
+
+/// One positional input/output of an executable.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req_str("name")?.to_string(),
+            shape: j.req("shape")?.usize_vec()?,
+            dtype: DType::parse(j.req_str("dtype")?)?,
+        })
+    }
+}
+
+/// Executable kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecKind {
+    Train,
+    Eval,
+    Probe,
+}
+
+/// One AOT-compiled HLO module.
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub model: String,
+    pub kind: ExecKind,
+    pub p: usize,
+    pub composed: bool,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One composed layer's geometry (mirrors python specs.LayerSpec).
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub name: String,
+    pub kind: String,
+    pub k: usize,
+    pub stride: usize,
+    pub i: usize,
+    pub o: usize,
+    pub r: usize,
+    pub s_in: bool,
+    pub s_out: bool,
+    /// channel-group class feeding this layer (None = fixed input side)
+    pub in_class: Option<String>,
+    /// channel-group class of the output channels (None = fixed output)
+    pub out_class: Option<String>,
+    pub basis_shape: Vec<usize>,
+    pub block_shape: Vec<usize>,
+    pub blocks_total: usize,
+}
+
+impl LayerInfo {
+    /// b(p) = p^(s_in+s_out): blocks a width-p model trains (paper §II-B).
+    pub fn blocks_at(&self, p: usize) -> usize {
+        p.pow(u32::from(self.s_in) + u32::from(self.s_out))
+    }
+
+    /// Shape of the complete coefficient (R, B·O).
+    pub fn full_coeff_shape(&self) -> [usize; 2] {
+        [self.r, self.blocks_total * self.o]
+    }
+}
+
+/// A parameter tensor spec with its init std.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init_std: f64,
+}
+
+/// Input data description for a family.
+#[derive(Debug, Clone)]
+pub enum InputInfo {
+    Image { hw: usize, channels: usize },
+    Text { vocab: usize, seq_len: usize },
+}
+
+/// One model family's geometry + cost model.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub family: String,
+    pub cap_p: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub input: InputInfo,
+    pub layers: Vec<LayerInfo>,
+    /// composed-model params per width ("1".."P")
+    pub composed_params: BTreeMap<usize, Vec<ParamSpec>>,
+    /// dense-model params per width
+    pub dense_params: BTreeMap<usize, Vec<ParamSpec>>,
+    /// FLOPs per local iteration, per width
+    pub flops_composed: BTreeMap<usize, f64>,
+    pub flops_dense: BTreeMap<usize, f64>,
+    /// upload bytes per width (Eq. 18 numerator)
+    pub bytes_composed: BTreeMap<usize, usize>,
+    pub bytes_dense: BTreeMap<usize, usize>,
+    pub probe_dim: BTreeMap<usize, usize>,
+}
+
+impl ModelInfo {
+    pub fn layer(&self, name: &str) -> Result<&LayerInfo> {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .ok_or_else(|| anyhow!("no layer `{name}` in {}", self.family))
+    }
+}
+
+/// Parsed manifest: all families + all executables.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub executables: BTreeMap<String, ExecSpec>,
+}
+
+fn parse_per_width_map<T, F: Fn(&Json) -> Option<T>>(j: &Json, f: F) -> Result<BTreeMap<usize, T>> {
+    let obj = j.as_obj().ok_or_else(|| anyhow!("expected object keyed by width"))?;
+    let mut out = BTreeMap::new();
+    for (k, v) in obj {
+        let p: usize = k.parse().map_err(|_| anyhow!("bad width key `{k}`"))?;
+        out.insert(p, f(v).ok_or_else(|| anyhow!("bad value for width {k}"))?);
+    }
+    Ok(out)
+}
+
+fn parse_params(j: &Json) -> Result<Vec<ParamSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("params must be an array"))?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.req_str("name")?.to_string(),
+                shape: p.req("shape")?.usize_vec()?,
+                init_std: p.req_f64("init_std")?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let root = json::parse_file(&dir.join("manifest.json"))
+            .context("loading manifest (run `make artifacts` first)")?;
+        let mut models = BTreeMap::new();
+        for (fam, m) in root.req("models")?.as_obj().ok_or_else(|| anyhow!("models not an object"))? {
+            let input_j = m.req("input")?;
+            let input = match input_j.req_str("kind")? {
+                "image" => InputInfo::Image {
+                    hw: input_j.req_usize("hw")?,
+                    channels: input_j.req_usize("channels")?,
+                },
+                "text" => InputInfo::Text {
+                    vocab: input_j.req_usize("vocab")?,
+                    seq_len: input_j.req_usize("seq_len")?,
+                },
+                other => return Err(anyhow!("unknown input kind `{other}`")),
+            };
+            let layers = m
+                .req_arr("layers")?
+                .iter()
+                .map(|l| {
+                    Ok(LayerInfo {
+                        name: l.req_str("name")?.to_string(),
+                        kind: l.req_str("kind")?.to_string(),
+                        k: l.req_usize("k")?,
+                        stride: l.req_usize("stride")?,
+                        i: l.req_usize("i")?,
+                        o: l.req_usize("o")?,
+                        r: l.req_usize("r")?,
+                        s_in: l.req_bool("s_in")?,
+                        s_out: l.req_bool("s_out")?,
+                        in_class: l.get("in_class").and_then(Json::as_str).map(str::to_string),
+                        out_class: l.get("out_class").and_then(Json::as_str).map(str::to_string),
+                        basis_shape: l.req("basis_shape")?.usize_vec()?,
+                        block_shape: l.req("block_shape")?.usize_vec()?,
+                        blocks_total: l.req_usize("blocks_total")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let params = m.req("params")?;
+            let flops = m.req("flops")?;
+            let bytes = m.req("bytes")?;
+            models.insert(
+                fam.clone(),
+                ModelInfo {
+                    family: fam.clone(),
+                    cap_p: m.req_usize("cap_p")?,
+                    classes: m.req_usize("classes")?,
+                    batch: m.req_usize("batch")?,
+                    eval_batch: m.req_usize("eval_batch")?,
+                    input,
+                    layers,
+                    composed_params: parse_per_width_map(params.req("composed")?, |v| parse_params(v).ok())?,
+                    dense_params: parse_per_width_map(params.req("dense")?, |v| parse_params(v).ok())?,
+                    flops_composed: parse_per_width_map(flops.req("composed")?, Json::as_f64)?,
+                    flops_dense: parse_per_width_map(flops.req("dense")?, Json::as_f64)?,
+                    bytes_composed: parse_per_width_map(bytes.req("composed")?, Json::as_usize)?,
+                    bytes_dense: parse_per_width_map(bytes.req("dense")?, Json::as_usize)?,
+                    probe_dim: parse_per_width_map(m.req("probe_dim")?, Json::as_usize)?,
+                },
+            );
+        }
+
+        let mut executables = BTreeMap::new();
+        for (name, e) in root
+            .req("executables")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("executables not an object"))?
+        {
+            let kind = match e.req_str("kind")? {
+                "train" => ExecKind::Train,
+                "eval" => ExecKind::Eval,
+                "probe" => ExecKind::Probe,
+                other => return Err(anyhow!("unknown exec kind `{other}`")),
+            };
+            executables.insert(
+                name.clone(),
+                ExecSpec {
+                    name: name.clone(),
+                    file: dir.join(e.req_str("file")?),
+                    model: e.req_str("model")?.to_string(),
+                    kind,
+                    p: e.req_usize("p")?,
+                    composed: e.req_bool("composed")?,
+                    inputs: e.req_arr("inputs")?.iter().map(TensorSpec::parse).collect::<Result<Vec<_>>>()?,
+                    outputs: e.req_arr("outputs")?.iter().map(TensorSpec::parse).collect::<Result<Vec<_>>>()?,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models, executables })
+    }
+
+    /// Default artifacts dir: `$HEROES_ARTIFACTS` or `<crate root>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("HEROES_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Load from the default location.
+    pub fn load_default() -> Result<Manifest> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn model(&self, family: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(family)
+            .ok_or_else(|| anyhow!("family `{family}` not in manifest"))
+    }
+
+    pub fn exec(&self, name: &str) -> Result<&ExecSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("executable `{name}` not in manifest"))
+    }
+
+    /// Conventional executable names.
+    pub fn train_name(family: &str, p: usize, composed: bool) -> String {
+        if composed {
+            format!("{family}_train_p{p}")
+        } else {
+            format!("{family}_dtrain_p{p}")
+        }
+    }
+
+    pub fn eval_name(family: &str, composed: bool) -> String {
+        if composed {
+            format!("{family}_eval")
+        } else {
+            format!("{family}_deval")
+        }
+    }
+
+    pub fn probe_name(family: &str, p: usize) -> String {
+        format!("{family}_probe_p{p}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full-manifest integration tests live in rust/tests/ (they need
+    // `make artifacts`); here we check parsing against a miniature doc.
+    fn mini() -> Manifest {
+        let doc = r#"{
+          "models": {"toy": {
+            "cap_p": 2, "classes": 3, "batch": 4, "eval_batch": 8,
+            "input": {"kind": "image", "hw": 8, "channels": 1},
+            "layers": [{"name":"l0","kind":"conv","k":3,"stride":1,"i":2,"o":5,"r":4,
+                        "s_in":false,"s_out":true,"basis_shape":[9,2,4],
+                        "block_shape":[4,5],"blocks_total":2}],
+            "params": {"composed": {"1": [{"name":"v_l0","shape":[9,2,4],"init_std":0.1}]},
+                        "dense": {"1": [{"name":"w_l0","shape":[3,3,2,5],"init_std":0.2}]}},
+            "flops": {"composed": {"1": 100}, "dense": {"1": 90}},
+            "bytes": {"composed": {"1": 1000}, "dense": {"1": 2000}},
+            "probe_dim": {"1": 42}
+          }},
+          "executables": {"toy_train_p1": {
+            "file": "toy_train_p1.hlo.txt", "model": "toy", "kind": "train",
+            "p": 1, "composed": true,
+            "inputs": [{"name":"v_l0","shape":[9,2,4],"dtype":"f32"},
+                       {"name":"y","shape":[4],"dtype":"i32"}],
+            "outputs": [{"name":"loss","shape":[1],"dtype":"f32"}]
+          }}
+        }"#;
+        let dir = std::env::temp_dir().join("heroes_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn parses_models_and_executables() {
+        let m = mini();
+        let toy = m.model("toy").unwrap();
+        assert_eq!(toy.cap_p, 2);
+        assert_eq!(toy.layers[0].blocks_at(2), 2); // s_out only
+        assert_eq!(toy.layers[0].full_coeff_shape(), [4, 10]);
+        assert_eq!(toy.flops_composed[&1], 100.0);
+        let e = m.exec("toy_train_p1").unwrap();
+        assert_eq!(e.kind, ExecKind::Train);
+        assert_eq!(e.inputs[1].dtype, DType::I32);
+        assert_eq!(e.inputs[0].elements(), 72);
+    }
+
+    #[test]
+    fn missing_family_errors() {
+        let m = mini();
+        assert!(m.model("nope").is_err());
+        assert!(m.exec("nope").is_err());
+    }
+
+    #[test]
+    fn exec_name_conventions() {
+        assert_eq!(Manifest::train_name("cnn", 3, true), "cnn_train_p3");
+        assert_eq!(Manifest::train_name("cnn", 3, false), "cnn_dtrain_p3");
+        assert_eq!(Manifest::eval_name("rnn", true), "rnn_eval");
+        assert_eq!(Manifest::eval_name("rnn", false), "rnn_deval");
+        assert_eq!(Manifest::probe_name("resnet", 2), "resnet_probe_p2");
+    }
+}

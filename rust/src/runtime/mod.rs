@@ -1,0 +1,9 @@
+//! Runtime layer: manifest-driven loading + PJRT execution of the AOT
+//! artifacts (`artifacts/*.hlo.txt`). See DESIGN.md — rust owns the entire
+//! request path; python only ever ran at `make artifacts` time.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EngineStats, Value};
+pub use manifest::{DType, ExecKind, ExecSpec, InputInfo, LayerInfo, Manifest, ModelInfo, ParamSpec, TensorSpec};

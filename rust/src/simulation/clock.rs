@@ -1,0 +1,90 @@
+//! Virtual clock + traffic meter.
+//!
+//! All completion-time metrics in the experiments are *simulated* time
+//! (the paper's testbed also simulates devices/network on a workstation).
+//! The clock advances by the synchronous-round maximum (Eq. 19); the
+//! meter sums every PS↔client transfer (metric ④, §VI-B2).
+
+/// Monotonic virtual clock (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by `dt` seconds (panics on negative dt — a scheduling bug).
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt >= 0.0, "clock moved backwards by {dt}");
+        self.now += dt;
+    }
+}
+
+/// Cumulative PS↔client traffic in bytes, split by direction.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficMeter {
+    pub down_bytes: u64,
+    pub up_bytes: u64,
+}
+
+impl TrafficMeter {
+    pub fn new() -> TrafficMeter {
+        TrafficMeter::default()
+    }
+
+    pub fn record_down(&mut self, bytes: usize) {
+        self.down_bytes += bytes as u64;
+    }
+
+    pub fn record_up(&mut self, bytes: usize) {
+        self.up_bytes += bytes as u64;
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.down_bytes + self.up_bytes
+    }
+
+    pub fn total_gb(&self) -> f64 {
+        self.total_bytes() as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        c.advance(0.0);
+        c.advance(2.5);
+        assert!((c.now() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn clock_rejects_negative() {
+        VirtualClock::new().advance(-1.0);
+    }
+
+    #[test]
+    fn traffic_accumulates() {
+        let mut t = TrafficMeter::new();
+        t.record_down(1000);
+        t.record_up(500);
+        t.record_up(250);
+        assert_eq!(t.down_bytes, 1000);
+        assert_eq!(t.up_bytes, 750);
+        assert_eq!(t.total_bytes(), 1750);
+        assert!((t.total_gb() - 1.75e-6).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,160 @@
+//! Device compute model.
+//!
+//! Four device classes mirror the paper's physical testbed records
+//! (§VI-C): laptop, Jetson TX2, Xavier NX, AGX Xavier. Effective training
+//! throughput (FLOP/s actually sustained by f32 training, not peak specs)
+//! is Gaussian per round: `q_n^h ~ N(mean, (cv·mean)²)`, giving the ~4×
+//! strongest-to-weakest spread of the paper's Fig. 2. The fleet mix keeps
+//! powerful devices rare ("high-performance clients only constitute a
+//! small fraction" — §I).
+
+use crate::util::rng::Rng;
+
+/// Edge device classes from the paper's testbed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceClass {
+    Laptop,
+    JetsonTx2,
+    XavierNx,
+    AgxXavier,
+}
+
+impl DeviceClass {
+    /// Mean sustained training throughput (FLOP/s). Values are scaled to
+    /// this testbed but preserve the published inter-device ratios
+    /// (TX2 : NX : AGX ≈ 1.3 : 21 : 32 TOPS peak → compressed in
+    /// sustained f32 training to roughly 1 : 2 : 3, laptop ≈ 0.7×TX2).
+    pub fn mean_flops(self) -> f64 {
+        match self {
+            DeviceClass::Laptop => 2.0e7,
+            DeviceClass::JetsonTx2 => 3.0e7,
+            DeviceClass::XavierNx => 6.0e7,
+            DeviceClass::AgxXavier => 9.0e7,
+        }
+    }
+
+    /// Coefficient of variation of the per-round throughput draw.
+    pub fn cv(self) -> f64 {
+        0.15
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceClass::Laptop => "laptop",
+            DeviceClass::JetsonTx2 => "jetson-tx2",
+            DeviceClass::XavierNx => "xavier-nx",
+            DeviceClass::AgxXavier => "agx-xavier",
+        }
+    }
+}
+
+/// One client's device: samples a throughput per round.
+#[derive(Debug, Clone)]
+pub struct ClientDevice {
+    pub class: DeviceClass,
+    rng: Rng,
+}
+
+impl ClientDevice {
+    pub fn new(class: DeviceClass, rng: Rng) -> ClientDevice {
+        ClientDevice { class, rng }
+    }
+
+    /// Throughput (FLOP/s) for this round; clamped to stay positive and
+    /// within a sane band so a single draw cannot produce a degenerate
+    /// round time.
+    pub fn sample_flops(&mut self) -> f64 {
+        let mean = self.class.mean_flops();
+        let std = mean * self.class.cv();
+        self.rng.normal_ms(mean, std).clamp(mean * 0.4, mean * 1.8)
+    }
+
+    /// Seconds for one local iteration of a model costing `flops`
+    /// (paper Eq. 17: μ = G(v·û)/q).
+    pub fn iteration_time(&mut self, flops: f64) -> f64 {
+        flops / self.sample_flops()
+    }
+}
+
+/// The fleet: device class per client, drawn from the configured mix.
+#[derive(Debug, Clone)]
+pub struct DeviceFleet {
+    pub devices: Vec<ClientDevice>,
+}
+
+impl DeviceFleet {
+    /// Paper-like mix: mostly weak devices, few powerful ones.
+    pub const DEFAULT_MIX: [(DeviceClass, f64); 4] = [
+        (DeviceClass::Laptop, 0.4),
+        (DeviceClass::JetsonTx2, 0.3),
+        (DeviceClass::XavierNx, 0.2),
+        (DeviceClass::AgxXavier, 0.1),
+    ];
+
+    pub fn new(n_clients: usize, mix: &[(DeviceClass, f64)], rng: &mut Rng) -> DeviceFleet {
+        let weights: Vec<f64> = mix.iter().map(|(_, w)| *w).collect();
+        let devices = (0..n_clients)
+            .map(|i| {
+                let class = mix[rng.weighted(&weights)].0;
+                ClientDevice::new(class, rng.fork(i as u64))
+            })
+            .collect();
+        DeviceFleet { devices }
+    }
+
+    pub fn default_fleet(n_clients: usize, rng: &mut Rng) -> DeviceFleet {
+        Self::new(n_clients, &Self::DEFAULT_MIX, rng)
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_order_matches_classes() {
+        assert!(DeviceClass::Laptop.mean_flops() < DeviceClass::JetsonTx2.mean_flops());
+        assert!(DeviceClass::JetsonTx2.mean_flops() < DeviceClass::XavierNx.mean_flops());
+        assert!(DeviceClass::XavierNx.mean_flops() < DeviceClass::AgxXavier.mean_flops());
+        // paper Fig. 2: ~4x spread strongest vs weakest
+        let ratio = DeviceClass::AgxXavier.mean_flops() / DeviceClass::Laptop.mean_flops();
+        assert!((3.0..6.0).contains(&ratio), "spread {ratio}");
+    }
+
+    #[test]
+    fn samples_cluster_around_mean() {
+        let mut d = ClientDevice::new(DeviceClass::XavierNx, Rng::new(1));
+        let n = 5000;
+        let mean_draw: f64 = (0..n).map(|_| d.sample_flops()).sum::<f64>() / n as f64;
+        let mean = DeviceClass::XavierNx.mean_flops();
+        assert!((mean_draw / mean - 1.0).abs() < 0.05, "mean drift {mean_draw}");
+    }
+
+    #[test]
+    fn iteration_time_scales_with_flops() {
+        let mut d = ClientDevice::new(DeviceClass::Laptop, Rng::new(2));
+        let t1: f64 = (0..500).map(|_| d.iteration_time(1e7)).sum();
+        let mut d2 = ClientDevice::new(DeviceClass::Laptop, Rng::new(2));
+        let t2: f64 = (0..500).map(|_| d2.iteration_time(2e7)).sum();
+        assert!((t2 / t1 - 2.0).abs() < 0.01, "not linear in flops: {}", t2 / t1);
+    }
+
+    #[test]
+    fn fleet_mix_roughly_matches() {
+        let mut rng = Rng::new(3);
+        let fleet = DeviceFleet::default_fleet(2000, &mut rng);
+        let frac = |c: DeviceClass| {
+            fleet.devices.iter().filter(|d| d.class == c).count() as f64 / 2000.0
+        };
+        assert!((frac(DeviceClass::Laptop) - 0.4).abs() < 0.05);
+        assert!((frac(DeviceClass::AgxXavier) - 0.1).abs() < 0.03);
+    }
+}

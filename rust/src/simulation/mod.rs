@@ -1,0 +1,17 @@
+//! Heterogeneous edge-network simulator (paper §VI-C).
+//!
+//! The paper simulates 100 virtual clients on a workstation: per-client
+//! iteration time follows a Gaussian whose mean/variance come from
+//! physical device records (laptop, Jetson TX2, Xavier NX, AGX Xavier),
+//! and WAN bandwidth fluctuates per round (1–5 Mb/s up, 10–20 Mb/s down).
+//! We reproduce exactly that model: *learning* is real (PJRT executions),
+//! *time* is virtual — completion/waiting/traffic metrics integrate the
+//! simulated quantities (Eq. 17–20).
+
+pub mod clock;
+pub mod device;
+pub mod network;
+
+pub use clock::{TrafficMeter, VirtualClock};
+pub use device::{ClientDevice, DeviceClass, DeviceFleet};
+pub use network::{LinkSample, NetworkModel};

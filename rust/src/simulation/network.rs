@@ -1,0 +1,80 @@
+//! WAN bandwidth model.
+//!
+//! Paper §VI-C: download fluctuates in [10, 20] Mb/s, upload in
+//! [1, 5] Mb/s, per client per round. Upload dominates completion time
+//! (Eq. 18 only counts upload; downloads are an order of magnitude
+//! faster) but both directions are metered for the traffic figures.
+
+use crate::util::rng::Rng;
+
+const MBIT: f64 = 1_000_000.0 / 8.0; // bytes per second per Mb/s
+
+/// One round's sampled link for a client.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkSample {
+    /// bytes/second
+    pub up_bps: f64,
+    /// bytes/second
+    pub down_bps: f64,
+}
+
+impl LinkSample {
+    /// Seconds to upload `bytes` (paper Eq. 18).
+    pub fn upload_time(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.up_bps
+    }
+
+    /// Seconds to download `bytes`.
+    pub fn download_time(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.down_bps
+    }
+}
+
+/// Fluctuating-uniform WAN model.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    pub up_lo_mbps: f64,
+    pub up_hi_mbps: f64,
+    pub down_lo_mbps: f64,
+    pub down_hi_mbps: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel { up_lo_mbps: 1.0, up_hi_mbps: 5.0, down_lo_mbps: 10.0, down_hi_mbps: 20.0 }
+    }
+}
+
+impl NetworkModel {
+    pub fn sample(&self, rng: &mut Rng) -> LinkSample {
+        LinkSample {
+            up_bps: rng.uniform_in(self.up_lo_mbps, self.up_hi_mbps) * MBIT,
+            down_bps: rng.uniform_in(self.down_lo_mbps, self.down_hi_mbps) * MBIT,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_within_paper_ranges() {
+        let m = NetworkModel::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let l = m.sample(&mut rng);
+            assert!((1.0 * MBIT..5.0 * MBIT).contains(&l.up_bps));
+            assert!((10.0 * MBIT..20.0 * MBIT).contains(&l.down_bps));
+            assert!(l.down_bps > l.up_bps, "download must be faster than upload");
+        }
+    }
+
+    #[test]
+    fn transfer_times() {
+        let l = LinkSample { up_bps: 2.0 * MBIT, down_bps: 10.0 * MBIT };
+        // 1 MB at 2 Mb/s = 4 s
+        assert!((l.upload_time(1_000_000) - 4.0).abs() < 1e-9);
+        assert!((l.download_time(1_000_000) - 0.8).abs() < 1e-9);
+    }
+}

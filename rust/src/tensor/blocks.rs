@@ -1,0 +1,184 @@
+//! Coefficient-block gather/scatter (paper §II-B, Fig. 1).
+//!
+//! The complete coefficient of a layer is `u ∈ (R, B·O)` — `B` blocks of
+//! shape `(R, O)` laid out contiguously along the column axis. A width-p
+//! client receives the `b(p)` least-trained blocks *in ascending block-id
+//! order* concatenated into the reduced coefficient `û ∈ (R, b·O)`; after
+//! local training the PS scatters the updated blocks back and averages
+//! block-wise over the clients that trained them (paper Eq. 5).
+//!
+//! Keeping ids sorted makes the (gather ∘ scatter) pair an exact bijection
+//! per block and the block-wise aggregation well-defined across clients
+//! with different selections.
+
+use super::Tensor;
+
+/// Extract blocks `ids` (each of `o` columns) from the complete
+/// coefficient `u: (R, B·O)` into a reduced coefficient `(R, ids.len()·O)`.
+/// `ids` must be strictly ascending.
+pub fn gather_blocks(u: &Tensor, ids: &[usize], o: usize) -> Tensor {
+    let (r, total_cols) = dims2(u);
+    assert!(total_cols % o == 0, "coefficient width {total_cols} not a multiple of block width {o}");
+    let b_total = total_cols / o;
+    assert!(ids.windows(2).all(|w| w[0] < w[1]), "block ids must be strictly ascending: {ids:?}");
+    assert!(ids.iter().all(|&i| i < b_total), "block id out of range: {ids:?} (B={b_total})");
+
+    let bsel = ids.len();
+    let mut out = Tensor::zeros(&[r, bsel * o]);
+    let src = u.data();
+    let dst = out.data_mut();
+    for row in 0..r {
+        let src_row = row * total_cols;
+        let dst_row = row * bsel * o;
+        for (slot, &id) in ids.iter().enumerate() {
+            let s = src_row + id * o;
+            let d = dst_row + slot * o;
+            dst[d..d + o].copy_from_slice(&src[s..s + o]);
+        }
+    }
+    out
+}
+
+/// Accumulate a reduced coefficient back into block-granular sums.
+/// `sums: (R, B·O)` accumulates values; `counts[b]` counts contributions
+/// per block. Division happens in `finalize_block_average`.
+pub fn scatter_blocks_add(sums: &mut Tensor, counts: &mut [u32], reduced: &Tensor, ids: &[usize], o: usize) {
+    let (r, total_cols) = dims2(sums);
+    let (rr, red_cols) = dims2(reduced);
+    assert_eq!(r, rr, "rank-dim mismatch");
+    assert_eq!(red_cols, ids.len() * o, "reduced width {red_cols} != {}*{o}", ids.len());
+    assert!(total_cols % o == 0);
+    assert_eq!(counts.len(), total_cols / o, "counts must have one slot per block");
+
+    let src = reduced.data();
+    let dst = sums.data_mut();
+    for row in 0..r {
+        let dst_row = row * total_cols;
+        let src_row = row * red_cols;
+        for (slot, &id) in ids.iter().enumerate() {
+            let d = dst_row + id * o;
+            let s = src_row + slot * o;
+            for c in 0..o {
+                dst[d + c] += src[s + c];
+            }
+        }
+    }
+    for &id in ids {
+        counts[id] += 1;
+    }
+}
+
+/// Finish paper Eq. 5: blocks with `counts > 0` become `sum / count`;
+/// untouched blocks keep `fallback`'s value (the previous global
+/// coefficient — a block nobody trained this round is carried forward).
+pub fn finalize_block_average(sums: &mut Tensor, counts: &[u32], fallback: &Tensor, o: usize) {
+    let (r, total_cols) = dims2(sums);
+    assert_eq!(fallback.shape(), sums.shape(), "fallback shape mismatch");
+    assert_eq!(counts.len(), total_cols / o);
+    let prev = fallback.data();
+    let data = sums.data_mut();
+    for row in 0..r {
+        let base = row * total_cols;
+        for (b, &cnt) in counts.iter().enumerate() {
+            let off = base + b * o;
+            if cnt == 0 {
+                data[off..off + o].copy_from_slice(&prev[off..off + o]);
+            } else {
+                let inv = 1.0 / cnt as f32;
+                for c in 0..o {
+                    data[off + c] *= inv;
+                }
+            }
+        }
+    }
+}
+
+fn dims2(t: &Tensor) -> (usize, usize) {
+    let s = t.shape();
+    assert_eq!(s.len(), 2, "coefficient must be rank-2, got {s:?}");
+    (s[0], s[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coeff(r: usize, b: usize, o: usize) -> Tensor {
+        // element value encodes (row, block, col) for easy checking
+        let mut data = Vec::with_capacity(r * b * o);
+        for row in 0..r {
+            for blk in 0..b {
+                for c in 0..o {
+                    data.push((row * 100 + blk * 10 + c) as f32);
+                }
+            }
+        }
+        Tensor::from_vec(&[r, b * o], data)
+    }
+
+    #[test]
+    fn gather_picks_correct_columns() {
+        let u = coeff(2, 4, 3);
+        let g = gather_blocks(&u, &[1, 3], 3);
+        assert_eq!(g.shape(), &[2, 6]);
+        // row 0: block1 cols then block3 cols
+        assert_eq!(&g.data()[..6], &[10.0, 11.0, 12.0, 30.0, 31.0, 32.0]);
+        // row 1
+        assert_eq!(&g.data()[6..], &[110.0, 111.0, 112.0, 130.0, 131.0, 132.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn gather_requires_sorted_ids() {
+        let u = coeff(1, 4, 2);
+        gather_blocks(&u, &[2, 1], 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn gather_checks_range() {
+        let u = coeff(1, 4, 2);
+        gather_blocks(&u, &[4], 2);
+    }
+
+    #[test]
+    fn scatter_then_average_roundtrip() {
+        let u = coeff(2, 4, 3);
+        let g = gather_blocks(&u, &[0, 2], 3);
+        let mut sums = Tensor::zeros(&[2, 12]);
+        let mut counts = vec![0u32; 4];
+        scatter_blocks_add(&mut sums, &mut counts, &g, &[0, 2], 3);
+        assert_eq!(counts, vec![1, 0, 1, 0]);
+        finalize_block_average(&mut sums, &counts, &u, 3);
+        // trained blocks equal original (single contribution), untouched fall back
+        assert_eq!(sums.data(), u.data());
+    }
+
+    #[test]
+    fn blockwise_average_of_two_clients() {
+        // paper Fig. 3: leftmost block trained by two clients with values 4 and 2 -> 3
+        let mut sums = Tensor::zeros(&[1, 2]);
+        let mut counts = vec![0u32; 2];
+        let c1 = Tensor::from_vec(&[1, 1], vec![4.0]);
+        let c2 = Tensor::from_vec(&[1, 1], vec![2.0]);
+        scatter_blocks_add(&mut sums, &mut counts, &c1, &[0], 1);
+        scatter_blocks_add(&mut sums, &mut counts, &c2, &[0], 1);
+        let fallback = Tensor::from_vec(&[1, 2], vec![9.0, 7.0]);
+        finalize_block_average(&mut sums, &counts, &fallback, 1);
+        assert_eq!(sums.data(), &[3.0, 7.0]); // averaged block + carried-forward block
+    }
+
+    #[test]
+    fn disjoint_selections_fill_disjoint_blocks() {
+        let u = coeff(1, 4, 2);
+        let ga = gather_blocks(&u, &[0, 1], 2);
+        let gb = gather_blocks(&u, &[2, 3], 2);
+        let mut sums = Tensor::zeros(&[1, 8]);
+        let mut counts = vec![0u32; 4];
+        scatter_blocks_add(&mut sums, &mut counts, &ga, &[0, 1], 2);
+        scatter_blocks_add(&mut sums, &mut counts, &gb, &[2, 3], 2);
+        assert_eq!(counts, vec![1; 4]);
+        finalize_block_average(&mut sums, &counts, &u, 2);
+        assert_eq!(sums.data(), u.data());
+    }
+}

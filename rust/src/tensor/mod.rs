@@ -1,0 +1,298 @@
+//! Host-side tensors (substrate — no ndarray offline).
+//!
+//! Row-major f32 (`Tensor`) and i32 (`IntTensor`) buffers with the exact
+//! operations the coordinator hot path needs: init, axpy-style
+//! accumulation for aggregation, norms for the L/σ²/G² estimators,
+//! N-d prefix slicing for HeteroFL sub-model extraction, and the
+//! coefficient block gather/scatter (see `blocks`).
+
+pub mod blocks;
+
+use crate::util::rng::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} incompatible with {} elements",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Gaussian init with the manifest-provided std (0 ⇒ zeros).
+    pub fn randn(shape: &[usize], std: f64, rng: &mut Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        if std == 0.0 {
+            return Tensor::zeros(shape);
+        }
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(n, std) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Bytes when serialized as f32 (traffic accounting).
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    // ---------------- arithmetic (aggregation hot path) ----------------
+
+    /// self += other
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += *b;
+        }
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * *b;
+        }
+    }
+
+    /// self *= alpha
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// ||self - other||²  (model-error α and L estimation)
+    pub fn sq_dist(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape, "sq_dist shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    /// ||self||²
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|a| (*a as f64) * (*a as f64)).sum()
+    }
+
+    // ---------------- N-d prefix slicing (HeteroFL) ----------------
+
+    fn strides(shape: &[usize]) -> Vec<usize> {
+        let mut s = vec![1usize; shape.len()];
+        for i in (0..shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * shape[i + 1];
+        }
+        s
+    }
+
+    /// Copy the leading `sub` region (per-axis prefix) out of self.
+    /// HeteroFL extracts width-p sub-weights this way: `w[..ci, ..co]`.
+    pub fn slice_prefix(&self, sub: &[usize]) -> Tensor {
+        assert_eq!(sub.len(), self.shape.len(), "rank mismatch");
+        for (s, full) in sub.iter().zip(&self.shape) {
+            assert!(s <= full, "prefix {sub:?} exceeds {:?}", self.shape);
+        }
+        let mut out = Tensor::zeros(sub);
+        let src_strides = Self::strides(&self.shape);
+        let dst_strides = Self::strides(sub);
+        let n: usize = sub.iter().product();
+        let rank = sub.len();
+        let mut idx = vec![0usize; rank];
+        for flat in 0..n {
+            // decompose flat into multi-index over `sub`
+            let mut rem = flat;
+            for d in 0..rank {
+                idx[d] = rem / dst_strides[d];
+                rem %= dst_strides[d];
+            }
+            let src: usize = idx.iter().zip(&src_strides).map(|(i, s)| i * s).sum();
+            out.data[flat] = self.data[src];
+        }
+        out
+    }
+
+    /// Accumulate `sub` into the leading region of self; `counts` tracks
+    /// how many contributions each element has received (HeteroFL's
+    /// overlap-aware averaging divides by it afterwards).
+    pub fn scatter_prefix_add(&mut self, sub: &Tensor, counts: &mut [u32]) {
+        assert_eq!(sub.shape.len(), self.shape.len(), "rank mismatch");
+        assert_eq!(counts.len(), self.data.len(), "counts length mismatch");
+        let src_strides = Self::strides(&sub.shape);
+        let dst_strides = Self::strides(&self.shape);
+        let n = sub.data.len();
+        let rank = sub.shape.len();
+        let mut idx = vec![0usize; rank];
+        for flat in 0..n {
+            let mut rem = flat;
+            for d in 0..rank {
+                idx[d] = rem / src_strides[d];
+                rem %= src_strides[d];
+            }
+            let dst: usize = idx.iter().zip(&dst_strides).map(|(i, s)| i * s).sum();
+            self.data[dst] += sub.data[flat];
+            counts[dst] += 1;
+        }
+    }
+}
+
+/// Dense row-major i32 tensor (token / label batches).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> IntTensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} incompatible with {} elements",
+            data.len()
+        );
+        IntTensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> IntTensor {
+        let n: usize = shape.iter().product();
+        IntTensor { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_from_vec() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        let u = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(u.data()[3], 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible")]
+    fn from_vec_checks_shape() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn randn_respects_std() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[10_000], 0.5, &mut rng);
+        let var = t.data().iter().map(|x| (*x as f64).powi(2)).sum::<f64>() / 10_000.0;
+        assert!((var - 0.25).abs() < 0.02, "var {var}");
+        let z = Tensor::randn(&[4], 0.0, &mut rng);
+        assert!(z.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn arithmetic() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![10.0, 20.0, 30.0]);
+        a.add_assign(&b);
+        assert_eq!(a.data(), &[11.0, 22.0, 33.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[16.0, 32.0, 48.0]);
+        a.scale(0.25);
+        assert_eq!(a.data(), &[4.0, 8.0, 12.0]);
+        assert!((a.sq_norm() - (16.0 + 64.0 + 144.0)).abs() < 1e-9);
+        assert!((a.sq_dist(&b) - (36.0 + 144.0 + 324.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefix_slice_2d() {
+        // 3x4 matrix, take 2x2 prefix
+        let t = Tensor::from_vec(&[3, 4], (0..12).map(|x| x as f32).collect());
+        let s = t.slice_prefix(&[2, 2]);
+        assert_eq!(s.data(), &[0.0, 1.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn prefix_slice_4d_conv() {
+        // (k,k,ci,co) = (1,1,2,3) out of (1,1,4,6)
+        let t = Tensor::from_vec(&[1, 1, 4, 6], (0..24).map(|x| x as f32).collect());
+        let s = t.slice_prefix(&[1, 1, 2, 3]);
+        assert_eq!(s.data(), &[0.0, 1.0, 2.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn scatter_prefix_roundtrip() {
+        let mut full = Tensor::zeros(&[3, 4]);
+        let mut counts = vec![0u32; 12];
+        let sub = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        full.scatter_prefix_add(&sub, &mut counts);
+        full.scatter_prefix_add(&sub, &mut counts);
+        assert_eq!(full.data()[0], 2.0);
+        assert_eq!(full.data()[1], 4.0);
+        assert_eq!(full.data()[4], 6.0);
+        assert_eq!(full.data()[5], 8.0);
+        assert_eq!(counts[0], 2);
+        assert_eq!(counts[2], 0);
+        // slice back out equals 2x the sub
+        let back = full.slice_prefix(&[2, 2]);
+        assert_eq!(back.data(), &[2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn int_tensor_basics() {
+        let t = IntTensor::from_vec(&[2, 2], vec![1, 2, 3, 4]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.data()[2], 3);
+        let z = IntTensor::zeros(&[3]);
+        assert_eq!(z.data(), &[0, 0, 0]);
+    }
+}

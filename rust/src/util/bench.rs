@@ -1,0 +1,163 @@
+//! bench-lite: a minimal benchmarking harness (substrate — no criterion in
+//! the offline vendor set).
+//!
+//! Every `benches/*.rs` target (`harness = false`) uses this: warmup,
+//! fixed-duration sampling, and a median / mean / p95 report in a
+//! criterion-like one-line format. Also used by the EXPERIMENTS.md §Perf
+//! iteration loop to keep before/after numbers comparable.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected samples (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> f64 {
+        crate::util::stats::median(&self.samples)
+    }
+
+    pub fn mean(&self) -> f64 {
+        crate::util::stats::mean(&self.samples)
+    }
+
+    pub fn p95(&self) -> f64 {
+        crate::util::stats::quantile(&self.samples, 0.95)
+    }
+
+    /// criterion-like single line, time auto-scaled.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} time: [{} {} {}]  ({} samples x {} iters)",
+            self.name,
+            fmt_time(self.median()),
+            fmt_time(self.mean()),
+            fmt_time(self.p95()),
+            self.samples.len(),
+            self.iters_per_sample,
+        )
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.2} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: Duration::from_millis(300), measure: Duration::from_secs(2), max_samples: 50 }
+    }
+}
+
+impl Bench {
+    /// Quick profile for heavier end-to-end benches.
+    pub fn quick() -> Self {
+        Bench { warmup: Duration::from_millis(50), measure: Duration::from_millis(800), max_samples: 12 }
+    }
+
+    /// Run `f` repeatedly, printing and returning the result.
+    /// `f` receives the iteration index; return value is black-boxed.
+    pub fn run<F, R>(&self, name: &str, mut f: F) -> BenchResult
+    where
+        F: FnMut(u64) -> R,
+    {
+        // Warmup + calibration: find iters per sample so one sample is ~2ms+.
+        let wstart = Instant::now();
+        let mut calib_iters = 0u64;
+        while wstart.elapsed() < self.warmup {
+            std::hint::black_box(f(calib_iters));
+            calib_iters += 1;
+        }
+        let per_iter = if calib_iters > 0 {
+            wstart.elapsed().as_secs_f64() / calib_iters as f64
+        } else {
+            self.warmup.as_secs_f64()
+        };
+        let iters_per_sample = ((2e-3 / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::new();
+        let mstart = Instant::now();
+        let mut idx = 0u64;
+        while mstart.elapsed() < self.measure && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                std::hint::black_box(f(idx));
+                idx += 1;
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        if samples.is_empty() {
+            // single mandatory sample for very slow bodies
+            let t0 = Instant::now();
+            std::hint::black_box(f(idx));
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult { name: name.to_string(), samples, iters_per_sample };
+        println!("{}", res.report());
+        res
+    }
+
+    /// Time a single execution (for end-to-end experiment benches where
+    /// one run IS the measurement).
+    pub fn run_once<F, R>(&self, name: &str, f: F) -> BenchResult
+    where
+        F: FnOnce() -> R,
+    {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let dt = t0.elapsed().as_secs_f64();
+        let res = BenchResult { name: name.to_string(), samples: vec![dt], iters_per_sample: 1 };
+        println!("{}", res.report());
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(5e-9).contains("ns"));
+        assert!(fmt_time(5e-6).contains("µs"));
+        assert!(fmt_time(5e-3).contains("ms"));
+        assert!(fmt_time(5.0).contains(" s"));
+    }
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench { warmup: Duration::from_millis(5), measure: Duration::from_millis(30), max_samples: 10 };
+        let r = b.run("noop", |i| i.wrapping_mul(3));
+        assert!(!r.samples.is_empty());
+        assert!(r.median() >= 0.0);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn run_once_single_sample() {
+        let b = Bench::default();
+        let r = b.run_once("one", || 42);
+        assert_eq!(r.samples.len(), 1);
+    }
+}

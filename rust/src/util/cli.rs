@@ -1,0 +1,130 @@
+//! Tiny CLI flag parser (substrate — no clap in the offline vendor set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and free
+//! positional arguments. The launcher (`rust/src/main.rs`), every example
+//! and every bench use this.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals + `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    /// flags seen without a value, e.g. `--verbose`
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `argv[0]` must already be
+    /// stripped.
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn parse_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got `{v}`")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = args(&["exp", "fig4a", "--scale", "smoke", "--rounds=20", "--verbose"]);
+        assert_eq!(a.positional, vec!["exp", "fig4a"]);
+        assert_eq!(a.get("scale"), Some("smoke"));
+        assert_eq!(a.get_usize("rounds", 0).unwrap(), 20);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = args(&["--n", "abc"]);
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+        assert!(a.get_usize("n", 0).is_err());
+        assert_eq!(a.get_or("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn switch_before_positional() {
+        // `--dry` followed by another flag stays a switch
+        let a = args(&["--dry", "--k", "3"]);
+        assert!(a.flag("dry"));
+        assert_eq!(a.get("k"), Some("3"));
+    }
+
+    #[test]
+    fn eq_form_and_floats() {
+        let a = args(&["--lr=0.05", "--rho", "1.5"]);
+        assert!((a.get_f64("lr", 0.0).unwrap() - 0.05).abs() < 1e-12);
+        assert!((a.get_f64("rho", 0.0).unwrap() - 1.5).abs() < 1e-12);
+    }
+}

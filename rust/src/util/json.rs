@@ -1,0 +1,580 @@
+//! Minimal JSON parser / serializer (substrate — no serde in the offline
+//! vendor set; see DESIGN.md).
+//!
+//! Supports the full JSON grammar (objects, arrays, strings with escapes,
+//! numbers incl. exponents, bools, null). Object key order is preserved so
+//! serialized configs/results diff cleanly. Used for `artifacts/manifest.json`,
+//! experiment configs and results emission.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// BTreeMap keeps deterministic ordering for serialization.
+    Obj(BTreeMap<String, Json>),
+}
+
+/// Error with byte offset into the source text.
+#[derive(Debug, thiserror::Error)]
+#[error("json parse error at byte {offset}: {msg}")]
+pub struct JsonError {
+    pub offset: usize,
+    pub msg: String,
+}
+
+impl Json {
+    // ---------------- accessors ----------------
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|n| n as i64)
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(|n| if n >= 0.0 { Some(n as usize) } else { None })
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup; `Json::Null` on a non-object.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.as_obj().and_then(|o| o.get(key))
+    }
+
+    /// `get` that fails loudly with a path-ish message — manifest reading
+    /// wants hard errors, not silent defaults.
+    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing json field `{key}`"))
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("json field `{key}` is not a string"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("json field `{key}` is not a number"))
+    }
+
+    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.req(key)?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("json field `{key}` is not a non-negative number"))
+    }
+
+    pub fn req_bool(&self, key: &str) -> anyhow::Result<bool> {
+        self.req(key)?
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("json field `{key}` is not a bool"))
+    }
+
+    pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
+        self.req(key)?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("json field `{key}` is not an array"))
+    }
+
+    /// `[1,2,3]` -> `vec![1,2,3]` (usize).
+    pub fn usize_vec(&self) -> anyhow::Result<Vec<usize>> {
+        let arr = self
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("expected array of numbers"))?;
+        arr.iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("expected non-negative number"))
+            })
+            .collect()
+    }
+
+    // ---------------- constructors ----------------
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn from_f64_slice(v: &[f64]) -> Json {
+        Json::Arr(v.iter().map(|x| Json::Num(*x)).collect())
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Self {
+        Json::Num(v)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<&str> for Json {
+    fn from(v: &str) -> Self {
+        Json::Str(v.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(v: String) -> Self {
+        Json::Str(v)
+    }
+}
+impl From<bool> for Json {
+    fn from(v: bool) -> Self {
+        Json::Bool(v)
+    }
+}
+
+// ------------------------------------------------------------------------
+// parsing
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+/// Parse a JSON document (must consume the entire input modulo whitespace).
+pub fn parse(src: &str) -> Result<Json, JsonError> {
+    let mut p = Parser { b: src.as_bytes(), pos: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.pos != p.b.len() {
+        return Err(p.err("trailing characters"));
+    }
+    Ok(v)
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { offset: self.pos, msg: msg.to_string() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json, JsonError> {
+        if self.b[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected `{s}`")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a json value")),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            let val = self.value()?;
+            map.insert(key, val);
+            self.ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(map)),
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut arr = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(arr));
+        }
+        loop {
+            self.ws();
+            arr.push(self.value()?);
+            self.ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(arr)),
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{0008}'),
+                    Some(b'f') => out.push('\u{000C}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let cp = self.hex4()?;
+                        // surrogate pairs
+                        let c = if (0xD800..0xDC00).contains(&cp) {
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("unpaired surrogate"));
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            let v = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                            char::from_u32(v).ok_or_else(|| self.err("invalid codepoint"))?
+                        } else {
+                            char::from_u32(cp).ok_or_else(|| self.err("invalid codepoint"))?
+                        };
+                        out.push(c);
+                    }
+                    _ => return Err(self.err("invalid escape")),
+                },
+                Some(c) if c < 0x20 => return Err(self.err("control char in string")),
+                Some(c) => {
+                    // Re-assemble UTF-8 multibyte sequences byte-by-byte.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let len = if c >= 0xF0 {
+                            4
+                        } else if c >= 0xE0 {
+                            3
+                        } else {
+                            2
+                        };
+                        if start + len > self.b.len() {
+                            return Err(self.err("truncated utf-8"));
+                        }
+                        let s = std::str::from_utf8(&self.b[start..start + len])
+                            .map_err(|_| self.err("invalid utf-8"))?;
+                        out.push_str(s);
+                        self.pos = start + len;
+                    }
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d = (c as char).to_digit(16).ok_or_else(|| self.err("bad hex digit"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| self.err("invalid number"))
+    }
+}
+
+// ------------------------------------------------------------------------
+// serialization
+
+fn esc(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn fmt_num(n: f64, out: &mut String) {
+    if n.is_finite() && n == n.trunc() && n.abs() < 1e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else if n.is_finite() {
+        out.push_str(&format!("{n}"));
+    } else {
+        out.push_str("null"); // JSON has no NaN/Inf
+    }
+}
+
+impl Json {
+    fn write(&self, out: &mut String, indent: usize, cur: usize) {
+        let (nl, pad, pad2): (String, String, String) = if indent > 0 {
+            (
+                "\n".into(),
+                " ".repeat(cur + indent),
+                " ".repeat(cur),
+            )
+        } else {
+            (String::new(), String::new(), String::new())
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => fmt_num(*n, out),
+            Json::Str(s) => esc(s, out),
+            Json::Arr(a) => {
+                if a.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(&nl);
+                    out.push_str(&pad);
+                    v.write(out, indent, cur + indent);
+                }
+                out.push_str(&nl);
+                out.push_str(&pad2);
+                out.push(']');
+            }
+            Json::Obj(o) => {
+                if o.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(&nl);
+                    out.push_str(&pad);
+                    esc(k, out);
+                    out.push(':');
+                    if indent > 0 {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, cur + indent);
+                }
+                out.push_str(&nl);
+                out.push_str(&pad2);
+                out.push('}');
+            }
+        }
+    }
+
+    /// Compact serialization.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, 0);
+        s
+    }
+
+    /// Pretty serialization with 2-space indent.
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 2, 0);
+        s
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_string_compact())
+    }
+}
+
+/// Parse a JSON file from disk.
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    parse(&src).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(parse("-3.5e2").unwrap(), Json::Num(-350.0));
+        assert_eq!(parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = parse(r#"{"a":[1,2,{"b":null}],"c":"x"}"#).unwrap();
+        assert_eq!(v.get("c").unwrap().as_str(), Some("x"));
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[2].get("b"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn parses_escapes_and_unicode() {
+        let v = parse(r#""a\nb\t\"q\" é 😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\nb\t\"q\" é 😀");
+    }
+
+    #[test]
+    fn parses_utf8_passthrough() {
+        let v = parse("\"héllo — ok\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "héllo — ok");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("1 2").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+        assert!(parse("\"\\x\"").is_err());
+    }
+
+    #[test]
+    fn roundtrip_compact_and_pretty() {
+        let src = r#"{"arr":[1,2.5,true,null,"s"],"n":-7,"o":{"k":[[]]}}"#;
+        let v = parse(src).unwrap();
+        let c = v.to_string_compact();
+        assert_eq!(parse(&c).unwrap(), v);
+        let p = v.to_string_pretty();
+        assert_eq!(parse(&p).unwrap(), v);
+    }
+
+    #[test]
+    fn integer_formatting_is_exact() {
+        let v = Json::Num(1234567890.0);
+        assert_eq!(v.to_string_compact(), "1234567890");
+    }
+
+    #[test]
+    fn accessors_and_req() {
+        let v = parse(r#"{"s":"x","n":3,"b":true,"a":[4,5]}"#).unwrap();
+        assert_eq!(v.req_str("s").unwrap(), "x");
+        assert_eq!(v.req_usize("n").unwrap(), 3);
+        assert!(v.req_bool("b").unwrap());
+        assert_eq!(v.req_arr("a").unwrap().len(), 2);
+        assert_eq!(v.get("a").unwrap().usize_vec().unwrap(), vec![4, 5]);
+        assert!(v.req("missing").is_err());
+        assert!(v.req_str("n").is_err());
+    }
+}

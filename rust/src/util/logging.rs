@@ -1,0 +1,70 @@
+//! Minimal `log` backend writing to stderr with wall-clock offsets.
+//!
+//! The `log` facade is in the vendor set; this is the only implementation
+//! (substrate — no env_logger offline). Verbosity comes from the launcher
+//! (`--verbose` / `-q`) or `HEROES_LOG=debug|info|warn|error`.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _metadata: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed().as_secs_f64();
+            let lvl = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            eprintln!("[{t:9.3}s {lvl}] {}", record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; later calls adjust the level only.
+pub fn init(level: LevelFilter) {
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| {
+        let logger = Box::leak(Box::new(StderrLogger { start: Instant::now() }));
+        let _ = log::set_logger(logger);
+    });
+    log::set_max_level(level);
+}
+
+/// Level from the HEROES_LOG env var, defaulting to `info`.
+pub fn init_from_env() {
+    let lvl = match std::env::var("HEROES_LOG").as_deref() {
+        Ok("trace") => LevelFilter::Trace,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("error") => LevelFilter::Error,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    init(lvl);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        init(LevelFilter::Info);
+        init(LevelFilter::Debug);
+        log::info!("logging test line");
+        assert_eq!(log::max_level(), LevelFilter::Debug);
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities built in-house for the offline environment (see
+//! DESIGN.md "Substrate inventory"): JSON, RNG, statistics, CLI parsing,
+//! bench-lite and prop-lite.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

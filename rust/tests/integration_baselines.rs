@@ -1,0 +1,142 @@
+//! Integration: the four baselines end-to-end (requires artifacts;
+//! skips gracefully otherwise), plus cross-scheme comparisons that
+//! encode the paper's qualitative claims at miniature scale.
+
+use heroes::baselines::{make_strategy, Strategy};
+use heroes::config::{ExperimentConfig, Scale};
+use heroes::coordinator::env::FlEnv;
+use heroes::runtime::{Engine, Manifest};
+use heroes::util::rng::Rng;
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(Manifest::load(&dir).unwrap()).unwrap())
+}
+
+fn tiny_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("cnn", Scale::Smoke);
+    cfg.n_clients = 8;
+    cfg.k_per_round = 4;
+    cfg.samples_per_client = 32;
+    cfg.test_samples = 128;
+    cfg.tau_default = 5;
+    cfg
+}
+
+fn run_rounds(
+    engine: &Engine,
+    cfg: &ExperimentConfig,
+    scheme: &str,
+    rounds: usize,
+) -> (Vec<heroes::coordinator::RoundReport>, (f64, f64), f64, f64) {
+    let mut env = FlEnv::build(engine, cfg.clone()).unwrap();
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut s = make_strategy(scheme, &env.info, cfg, &mut rng).unwrap();
+    let mut reports = Vec::new();
+    for _ in 0..rounds {
+        reports.push(s.run_round(&mut env).unwrap());
+    }
+    let eval = s.evaluate(&env).unwrap();
+    (reports, eval, env.clock.now(), env.traffic.total_gb())
+}
+
+#[test]
+fn fedavg_trains_full_width_fixed_tau() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = tiny_cfg();
+    let (reports, (loss, acc), _, _) = run_rounds(&engine, &cfg, "fedavg", 6);
+    for r in &reports {
+        assert!(r.widths.iter().all(|&p| p == 4), "fedavg must use full width");
+        assert!(r.taus.iter().all(|&t| t == cfg.tau_default), "fedavg τ must be fixed");
+    }
+    assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn adp_adapts_identical_tau() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = tiny_cfg();
+    let (reports, _, _, _) = run_rounds(&engine, &cfg, "adp", 6);
+    let mut distinct = std::collections::HashSet::new();
+    for r in &reports {
+        // identical τ within a round
+        assert_eq!(r.taus.iter().min(), r.taus.iter().max(), "ADP τ must be identical per round");
+        assert!(r.widths.iter().all(|&p| p == 4), "ADP keeps the full model");
+        distinct.insert(r.taus[0]);
+    }
+    assert!(distinct.len() > 1, "ADP should adapt τ across rounds, saw {distinct:?}");
+}
+
+#[test]
+fn heterofl_prunes_widths_by_capability() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = tiny_cfg();
+    let (reports, (loss, _), _, _) = run_rounds(&engine, &cfg, "heterofl", 8);
+    let mut widths = std::collections::HashSet::new();
+    for r in &reports {
+        for &p in &r.widths {
+            widths.insert(p);
+        }
+        assert!(r.taus.iter().all(|&t| t == cfg.tau_default));
+    }
+    assert!(widths.len() > 1, "heterogeneous fleet must induce multiple widths: {widths:?}");
+    assert!(loss.is_finite());
+}
+
+#[test]
+fn flanc_runs_and_keeps_per_width_coefficients() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = tiny_cfg();
+    let (reports, (loss, acc), _, _) = run_rounds(&engine, &cfg, "flanc", 8);
+    assert!(reports.iter().all(|r| r.block_variance == 0.0), "flanc has no ledger");
+    assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn composed_uploads_are_smaller_than_dense() {
+    // paper headline: NC transfers factors, MP transfers dense weights.
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = tiny_cfg();
+    let (h_reports, _, _, _) = run_rounds(&engine, &cfg, "heroes", 4);
+    let (f_reports, _, _, _) = run_rounds(&engine, &cfg, "fedavg", 4);
+    let h_bytes: usize = h_reports.iter().map(|r| r.up_bytes).sum();
+    let f_bytes: usize = f_reports.iter().map(|r| r.up_bytes).sum();
+    assert!(
+        (h_bytes as f64) < 0.6 * f_bytes as f64,
+        "heroes rounds should upload far less: {h_bytes} vs {f_bytes}"
+    );
+}
+
+#[test]
+fn heroes_waits_less_than_fedavg() {
+    // paper Fig. 5: adaptive τ slashes the synchronization waiting time.
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = tiny_cfg();
+    let (h_reports, _, _, _) = run_rounds(&engine, &cfg, "heroes", 8);
+    let (f_reports, _, _, _) = run_rounds(&engine, &cfg, "fedavg", 8);
+    // skip heroes' bootstrap round (identical τ there)
+    let h_wait: f64 =
+        h_reports[1..].iter().map(|r| r.avg_wait).sum::<f64>() / (h_reports.len() - 1) as f64;
+    let f_wait: f64 = f_reports.iter().map(|r| r.avg_wait).sum::<f64>() / f_reports.len() as f64;
+    assert!(
+        h_wait < f_wait,
+        "heroes should wait less than fedavg: {h_wait:.2}s vs {f_wait:.2}s"
+    );
+}
+
+#[test]
+fn all_schemes_same_seed_same_world() {
+    // The environment must be identical across schemes (fair comparison):
+    // same fleet classes, same first sampled batch labels.
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = tiny_cfg();
+    let fleet_sig = |cfg: &ExperimentConfig| {
+        let env = FlEnv::build(&engine, cfg.clone()).unwrap();
+        env.fleet.devices.iter().map(|d| d.class.name().to_string()).collect::<Vec<_>>()
+    };
+    assert_eq!(fleet_sig(&cfg), fleet_sig(&cfg));
+}

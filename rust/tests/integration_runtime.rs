@@ -1,0 +1,198 @@
+//! Integration: manifest + PJRT engine over the real artifacts.
+//!
+//! Requires `make artifacts` (skipped gracefully when absent so plain
+//! `cargo test` in a fresh checkout still passes the rest of the suite).
+
+use heroes::data::loader::{Batch, ImageLoader, TextLoader};
+use heroes::data::synth_image::ImageGen;
+use heroes::data::synth_text::TextGen;
+use heroes::model::{full_selections, ComposedGlobal, DenseGlobal};
+use heroes::runtime::{Engine, ExecKind, Manifest, Value};
+use heroes::tensor::Tensor;
+use heroes::util::rng::Rng;
+use std::sync::Arc;
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(Manifest::load(&dir).unwrap()).unwrap())
+}
+
+#[test]
+fn manifest_lists_all_families_and_execs() {
+    let Some(engine) = engine_or_skip() else { return };
+    let m = engine.manifest();
+    for fam in ["cnn", "resnet", "rnn"] {
+        let info = m.model(fam).unwrap();
+        assert_eq!(info.cap_p, 4);
+        for p in 1..=4 {
+            assert!(m.exec(&Manifest::train_name(fam, p, true)).is_ok());
+            assert!(m.exec(&Manifest::train_name(fam, p, false)).is_ok());
+            assert!(m.exec(&Manifest::probe_name(fam, p)).is_ok());
+            assert!(info.flops_composed[&p] > 0.0);
+            assert!(info.bytes_composed[&p] > 0);
+            // factorized transfer must be smaller than dense at larger widths
+            if p == 4 {
+                assert!(
+                    info.bytes_composed[&p] < info.bytes_dense[&p],
+                    "{fam}: composed {} !< dense {}",
+                    info.bytes_composed[&p],
+                    info.bytes_dense[&p]
+                );
+            }
+        }
+        assert_eq!(m.exec(&Manifest::eval_name(fam, true)).unwrap().kind, ExecKind::Eval);
+        assert_eq!(m.exec(&Manifest::eval_name(fam, false)).unwrap().kind, ExecKind::Eval);
+    }
+}
+
+#[test]
+fn composed_cnn_train_step_runs_and_learns() {
+    let Some(engine) = engine_or_skip() else { return };
+    let info = engine.manifest().model("cnn").unwrap().clone();
+    let mut rng = Rng::new(42);
+    let global = ComposedGlobal::init(&info, &mut rng).unwrap();
+
+    let ds = Arc::new(ImageGen::cifar_twin().generate(64, 7, &mut rng));
+    let mut loader = ImageLoader::new(ds, (0..64).collect(), info.batch, Rng::new(1));
+    let Batch { x, y } = loader.next_batch();
+    let lr = Tensor::from_vec(&[1], vec![0.05]);
+
+    let p = 2;
+    let sels: Vec<Vec<usize>> = info.layers.iter().map(|l| (0..l.blocks_at(p)).collect()).collect();
+    let mut params = global.reduced_inputs(&info, p, &sels).unwrap();
+    let name = Manifest::train_name("cnn", p, true);
+
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let mut inputs: Vec<Value> = params.iter().map(Value::F32).collect();
+        inputs.push(Value::F32(&x));
+        inputs.push(Value::I32(&y));
+        inputs.push(Value::F32(&lr));
+        let out = engine.execute(&name, &inputs).unwrap();
+        assert_eq!(out.len(), params.len() + 2);
+        let loss = out[params.len()].data()[0];
+        let gsq = out[params.len() + 1].data()[0];
+        assert!(loss.is_finite() && gsq >= 0.0);
+        losses.push(loss);
+        params = out[..2 * info.layers.len() + 1].to_vec();
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+    let st = engine.stats();
+    assert_eq!(st.compiles, 1, "executable must be cached");
+    assert_eq!(st.executions, 8);
+}
+
+#[test]
+fn composed_eval_reports_sane_accuracy() {
+    let Some(engine) = engine_or_skip() else { return };
+    let info = engine.manifest().model("cnn").unwrap().clone();
+    let mut rng = Rng::new(11);
+    let global = ComposedGlobal::init(&info, &mut rng).unwrap();
+    let ds = ImageGen::cifar_twin().generate(info.eval_batch, 7, &mut rng);
+
+    let params = global.full_inputs(&info);
+    let mut x = vec![0.0f32; info.eval_batch * ds.sample_size()];
+    let mut y = vec![0i32; info.eval_batch];
+    for i in 0..info.eval_batch {
+        x[i * ds.sample_size()..(i + 1) * ds.sample_size()].copy_from_slice(ds.sample(i));
+        y[i] = ds.labels[i];
+    }
+    let xt = Tensor::from_vec(&[info.eval_batch, ds.hw, ds.hw, ds.channels], x);
+    let yt = heroes::tensor::IntTensor::from_vec(&[info.eval_batch], y);
+
+    let mut inputs: Vec<Value> = params.iter().map(Value::F32).collect();
+    inputs.push(Value::F32(&xt));
+    inputs.push(Value::I32(&yt));
+    let out = engine.execute(&Manifest::eval_name("cnn", true), &inputs).unwrap();
+    let loss_sum = out[0].data()[0];
+    let correct = out[1].data()[0];
+    assert!(loss_sum > 0.0 && loss_sum.is_finite());
+    assert!((0.0..=info.eval_batch as f32).contains(&correct));
+}
+
+#[test]
+fn probe_gradient_has_manifest_dim_and_matches_structure() {
+    let Some(engine) = engine_or_skip() else { return };
+    let info = engine.manifest().model("cnn").unwrap().clone();
+    let mut rng = Rng::new(13);
+    let global = ComposedGlobal::init(&info, &mut rng).unwrap();
+    let ds = Arc::new(ImageGen::cifar_twin().generate(32, 7, &mut rng));
+    let mut loader = ImageLoader::new(ds, (0..32).collect(), info.batch, Rng::new(2));
+    let Batch { x, y } = loader.next_batch();
+
+    let p = 1;
+    let sels: Vec<Vec<usize>> = info.layers.iter().map(|l| (0..l.blocks_at(p)).collect()).collect();
+    let params = global.reduced_inputs(&info, p, &sels).unwrap();
+    let mut inputs: Vec<Value> = params.iter().map(Value::F32).collect();
+    inputs.push(Value::F32(&x));
+    inputs.push(Value::I32(&y));
+    let out = engine.execute(&Manifest::probe_name("cnn", p), &inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), info.probe_dim[&p]);
+    assert!(out[0].sq_norm() > 0.0, "gradient must be non-zero");
+}
+
+#[test]
+fn dense_train_step_runs_for_all_widths() {
+    let Some(engine) = engine_or_skip() else { return };
+    let info = engine.manifest().model("cnn").unwrap().clone();
+    let mut rng = Rng::new(17);
+    let global = DenseGlobal::init(&info, &mut rng).unwrap();
+    let ds = Arc::new(ImageGen::cifar_twin().generate(32, 7, &mut rng));
+    let mut loader = ImageLoader::new(ds, (0..32).collect(), info.batch, Rng::new(3));
+    let Batch { x, y } = loader.next_batch();
+    let lr = Tensor::from_vec(&[1], vec![0.05]);
+
+    for p in 1..=info.cap_p {
+        let params = global.reduced_inputs(&info, p).unwrap();
+        let mut inputs: Vec<Value> = params.iter().map(Value::F32).collect();
+        inputs.push(Value::F32(&x));
+        inputs.push(Value::I32(&y));
+        inputs.push(Value::F32(&lr));
+        let out = engine
+            .execute(&Manifest::train_name("cnn", p, false), &inputs)
+            .unwrap();
+        let loss = out[params.len()].data()[0];
+        assert!(loss.is_finite(), "p={p} loss {loss}");
+    }
+}
+
+#[test]
+fn rnn_train_step_runs() {
+    let Some(engine) = engine_or_skip() else { return };
+    let info = engine.manifest().model("rnn").unwrap().clone();
+    let mut rng = Rng::new(19);
+    let global = ComposedGlobal::init(&info, &mut rng).unwrap();
+    let ts = TextGen::shakespeare_twin().generate(1, 2_000, 100, 5);
+    let mut loader = TextLoader::new(Arc::new(ts.shards[0].clone()), info.batch, 20, Rng::new(4));
+    let b = loader.next_batch();
+    let lr = Tensor::from_vec(&[1], vec![0.1]);
+
+    let sels = full_selections(&info);
+    let params = global.reduced_inputs(&info, info.cap_p, &sels).unwrap();
+    let mut inputs: Vec<Value> = params.iter().map(Value::F32).collect();
+    inputs.push(Value::I32(&b.x));
+    inputs.push(Value::I32(&b.y));
+    inputs.push(Value::F32(&lr));
+    let out = engine
+        .execute(&Manifest::train_name("rnn", info.cap_p, true), &inputs)
+        .unwrap();
+    let loss = out[params.len()].data()[0];
+    assert!(loss.is_finite() && loss > 0.0);
+}
+
+#[test]
+fn engine_rejects_shape_mismatches() {
+    let Some(engine) = engine_or_skip() else { return };
+    let bad = Tensor::zeros(&[3, 3]);
+    let inputs = vec![Value::F32(&bad)];
+    assert!(engine.execute("cnn_train_p1", &inputs).is_err());
+    assert!(engine.execute("no_such_exec", &[]).is_err());
+}

@@ -1,0 +1,159 @@
+//! Integration: the Heroes server end-to-end on tiny federated worlds.
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use heroes::baselines::Strategy;
+use heroes::config::{ExperimentConfig, Scale};
+use heroes::coordinator::env::FlEnv;
+use heroes::coordinator::server::HeroesServer;
+use heroes::runtime::{Engine, Manifest};
+use heroes::util::rng::Rng;
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(Manifest::load(&dir).unwrap()).unwrap())
+}
+
+fn tiny_cfg(family: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(family, Scale::Smoke);
+    cfg.n_clients = 8;
+    cfg.k_per_round = 4;
+    cfg.samples_per_client = 32;
+    cfg.test_samples = 128;
+    cfg.shard_tokens = 800;
+    cfg.tau_default = 4;
+    cfg.tau_max = 12;
+    cfg
+}
+
+#[test]
+fn heroes_cnn_rounds_run_and_improve() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = tiny_cfg("cnn");
+    let mut env = FlEnv::build(&engine, cfg.clone()).unwrap();
+    let mut rng = Rng::new(cfg.seed);
+    let mut server = HeroesServer::new(&env.info, &cfg, &mut rng).unwrap();
+
+    let (loss0, acc0) = server.evaluate(&env).unwrap();
+    assert!(acc0 < 0.35, "untrained accuracy should be near chance, got {acc0}");
+
+    let mut reports = Vec::new();
+    for _ in 0..10 {
+        reports.push(server.run_round(&mut env).unwrap());
+    }
+    let (loss1, acc1) = server.evaluate(&env).unwrap();
+    assert!(loss1 < loss0, "test loss should drop: {loss0} -> {loss1}");
+    assert!(acc1 > acc0, "accuracy should improve: {acc0} -> {acc1}");
+
+    // structural checks on the reports
+    for r in &reports {
+        assert_eq!(r.taus.len(), cfg.k_per_round);
+        assert_eq!(r.widths.len(), cfg.k_per_round);
+        assert!(r.widths.iter().all(|&p| (1..=4).contains(&p)));
+        assert!(r.taus.iter().all(|&t| (1..=cfg.tau_max).contains(&t)));
+        assert!(r.round_time > 0.0);
+        assert!(r.avg_wait >= 0.0);
+        assert!(r.down_bytes > 0 && r.up_bytes > 0);
+    }
+    // clock advanced by the sum of round times; traffic metered
+    let total: f64 = reports.iter().map(|r| r.round_time).sum();
+    assert!((env.clock.now() - total).abs() < 1e-9);
+    assert_eq!(
+        env.traffic.total_bytes(),
+        reports.iter().map(|r| (r.down_bytes + r.up_bytes) as u64).sum::<u64>()
+    );
+}
+
+#[test]
+fn heroes_adapts_taus_after_bootstrap() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = tiny_cfg("cnn");
+    let mut env = FlEnv::build(&engine, cfg.clone()).unwrap();
+    let mut rng = Rng::new(7);
+    let mut server = HeroesServer::new(&env.info, &cfg, &mut rng).unwrap();
+
+    // round 0: bootstrap — identical predefined τ
+    let r0 = server.run_round(&mut env).unwrap();
+    assert!(r0.taus.iter().all(|&t| t == cfg.tau_default), "round 0 must use τ_default");
+
+    // later rounds: controller active, τ diversity expected across
+    // heterogeneous clients (paper Fig. 2b)
+    let mut diverse = false;
+    for _ in 0..6 {
+        let r = server.run_round(&mut env).unwrap();
+        let min = r.taus.iter().min().unwrap();
+        let max = r.taus.iter().max().unwrap();
+        if max > min {
+            diverse = true;
+        }
+    }
+    assert!(diverse, "adaptive τ should differ across heterogeneous clients");
+}
+
+#[test]
+fn heroes_block_ledger_stays_balanced() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = tiny_cfg("cnn");
+    let mut env = FlEnv::build(&engine, cfg.clone()).unwrap();
+    let mut rng = Rng::new(9);
+    let mut server = HeroesServer::new(&env.info, &cfg, &mut rng).unwrap();
+    for _ in 0..8 {
+        server.run_round(&mut env).unwrap();
+    }
+    // every block must have been trained at least once after 8 rounds of
+    // least-trained-first selection
+    let (lo, hi) = server.ledger.count_range();
+    assert!(lo > 0, "some block never trained (range {lo}..{hi})");
+}
+
+#[test]
+fn heroes_rnn_round_runs() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = tiny_cfg("rnn");
+    let mut env = FlEnv::build(&engine, cfg.clone()).unwrap();
+    let mut rng = Rng::new(11);
+    let mut server = HeroesServer::new(&env.info, &cfg, &mut rng).unwrap();
+    let r = server.run_round(&mut env).unwrap();
+    assert!(r.mean_loss.is_finite());
+    let (loss, acc) = server.evaluate(&env).unwrap();
+    assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn heroes_resnet_round_runs() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = tiny_cfg("resnet");
+    let mut env = FlEnv::build(&engine, cfg.clone()).unwrap();
+    let mut rng = Rng::new(13);
+    let mut server = HeroesServer::new(&env.info, &cfg, &mut rng).unwrap();
+    let r = server.run_round(&mut env).unwrap();
+    assert!(r.mean_loss.is_finite());
+}
+
+#[test]
+fn same_seed_reproduces_run() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = tiny_cfg("cnn");
+    let run = |seed: u64| {
+        let mut c = cfg.clone();
+        c.seed = seed;
+        let mut env = FlEnv::build(&engine, c.clone()).unwrap();
+        let mut rng = Rng::new(c.seed);
+        let mut server = HeroesServer::new(&env.info, &c, &mut rng).unwrap();
+        let mut sig = Vec::new();
+        for _ in 0..3 {
+            let r = server.run_round(&mut env).unwrap();
+            sig.push((r.taus.clone(), r.widths.clone(), r.round_time));
+        }
+        (sig, server.evaluate(&env).unwrap())
+    };
+    let (a, ea) = run(123);
+    let (b, eb) = run(123);
+    assert_eq!(a, b, "same seed must reproduce the schedule exactly");
+    assert_eq!(ea, eb);
+    let (c, _) = run(124);
+    assert_ne!(a, c, "different seed should differ");
+}

@@ -1,0 +1,302 @@
+//! Property-based tests (prop-lite) over the coordinator's pure logic:
+//! block ledger balance, round-planner invariants, aggregation
+//! conservation, partitioner correctness. None of these need artifacts.
+
+use heroes::coordinator::aggregate::{ComposedAccumulator, DenseAccumulator};
+use heroes::coordinator::assignment::{plan_round, ClientStatus, ControllerCfg};
+use heroes::coordinator::frequency::{completion_time, tau_bounds, Estimates};
+use heroes::coordinator::ledger::BlockLedger;
+use heroes::data::partition::{gamma_partition, phi_partition};
+use heroes::model::tests_support::toy_info;
+use heroes::model::{ComposedGlobal, DenseGlobal};
+use heroes::simulation::LinkSample;
+use heroes::tensor::Tensor;
+use heroes::util::prop::check;
+use heroes::util::rng::Rng;
+
+fn ctrl() -> ControllerCfg {
+    ControllerCfg {
+        mu_max: 0.5,
+        rho: 0.8,
+        eta: 0.1,
+        epsilon: 0.8,
+        tau_min: 1,
+        tau_max: 40,
+        tau_floor: 8,
+        h_max: 1_000_000,
+    }
+}
+
+fn statuses_from(qs: &[f64], ups: &[f64]) -> Vec<ClientStatus> {
+    qs.iter()
+        .zip(ups)
+        .enumerate()
+        .map(|(i, (&q, &up))| ClientStatus {
+            client: i,
+            q_flops: q,
+            link: LinkSample { up_bps: up, down_bps: up * 8.0 },
+        })
+        .collect()
+}
+
+#[test]
+fn prop_ledger_rotation_balances_counts() {
+    // Repeatedly planning rounds keeps the group-count spread bounded:
+    // least-trained-first can never let one group run away.
+    check(
+        11,
+        60,
+        |rng| {
+            let n: usize = 2 + rng.below(6);
+            let rounds: usize = 1 + rng.below(12);
+            let qs: Vec<f64> = (0..n).map(|_| rng.uniform_in(1e6, 4e7)).collect();
+            let ups: Vec<f64> = (0..n).map(|_| rng.uniform_in(3e3, 3e4)).collect();
+            (qs, ups, rounds)
+        },
+        |(qs, ups, rounds)| {
+            let info = toy_info();
+            let mut ledger = BlockLedger::new(&info);
+            let est = Estimates { l: 1.5, sigma_sq: 0.4, g_sq: 1.2, loss: 2.0 };
+            let mut max_tau = 0u64;
+            for _ in 0..*rounds {
+                let plan = plan_round(&info, &ctrl(), &est, &statuses_from(qs, ups), &mut ledger);
+                for a in &plan.assignments {
+                    max_tau = max_tau.max(a.tau as u64);
+                }
+            }
+            let (lo, hi) = ledger.count_range();
+            if hi - lo > max_tau * (qs.len() as u64) * (*rounds as u64) {
+                return Err(format!("spread {} exceeds hard bound", hi - lo));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_plan_round_invariants() {
+    // For every plan: widths in range, τ in range, blocks consistent with
+    // width, every completion within the reference unless pinned.
+    check(
+        13,
+        80,
+        |rng| {
+            let n: usize = 1 + rng.below(8);
+            let qs: Vec<f64> = (0..n).map(|_| rng.uniform_in(5e5, 6e7)).collect();
+            let ups: Vec<f64> = (0..n).map(|_| rng.uniform_in(2e3, 5e4)).collect();
+            (qs, ups)
+        },
+        |(qs, ups)| {
+            let info = toy_info();
+            let cfg = ctrl();
+            let mut ledger = BlockLedger::new(&info);
+            let est = Estimates { l: 2.0, sigma_sq: 0.3, g_sq: 1.0, loss: 2.3 };
+            let plan = plan_round(&info, &cfg, &est, &statuses_from(qs, ups), &mut ledger);
+            if plan.assignments.len() != qs.len() {
+                return Err("lost a client".into());
+            }
+            for a in &plan.assignments {
+                if !(1..=info.cap_p).contains(&a.p) {
+                    return Err(format!("width {} out of range", a.p));
+                }
+                if !(cfg.tau_min..=cfg.tau_max).contains(&a.tau) {
+                    return Err(format!("tau {} out of range", a.tau));
+                }
+                for (li, layer) in info.layers.iter().enumerate() {
+                    let expect = layer.blocks_at(a.p);
+                    if a.selection.blocks[li].len() != expect {
+                        return Err(format!(
+                            "layer {li}: {} blocks != b(p)={expect}",
+                            a.selection.blocks[li].len()
+                        ));
+                    }
+                    let mut sorted = a.selection.blocks[li].clone();
+                    sorted.sort_unstable();
+                    sorted.dedup();
+                    if sorted != a.selection.blocks[li] {
+                        return Err("blocks not ascending/unique".into());
+                    }
+                }
+                let t = completion_time(a.tau, a.mu, a.nu);
+                if (t - a.projected_t).abs() > 1e-9 {
+                    return Err("projected_t inconsistent".into());
+                }
+                if t > plan.t_l + 1e-9 && a.tau > cfg.tau_min {
+                    return Err(format!("client {} exceeds T_l without being pinned", a.client));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tau_bounds_respect_eq24() {
+    check(
+        17,
+        300,
+        |rng| {
+            let t_l = rng.uniform_in(0.1, 100.0);
+            let mu = rng.uniform_in(0.01, 5.0);
+            let nu = rng.uniform_in(0.0, 20.0);
+            let rho = rng.uniform_in(0.0, 5.0);
+            (vec![t_l, mu, nu], rho)
+        },
+        |(v, rho)| {
+            let (t_l, mu, nu) = (v[0], v[1], v[2]);
+            let (lo, hi) = tau_bounds(t_l, mu, nu, *rho, 1, 1000);
+            if lo > hi {
+                return Err(format!("empty bracket [{lo},{hi}]"));
+            }
+            for tau in [lo, hi] {
+                let t = completion_time(tau, mu, nu);
+                let slack = t_l - t;
+                let clamped = tau == 1 || tau == 1000;
+                if !clamped && (slack < -1e-9 || slack > rho + mu + 1e-9) {
+                    return Err(format!("τ={tau}: slack {slack} violates Eq. 24 (ρ={rho})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_composed_aggregation_idempotent() {
+    // If all clients upload exactly what they received, aggregation
+    // returns the previous global unchanged, for any block selections.
+    check(
+        19,
+        60,
+        |rng| (1 + rng.below(5), rng.next_u64()),
+        |&(k, seed)| {
+            let info = toy_info();
+            let mut rng = Rng::new(seed);
+            let prev = ComposedGlobal::init(&info, &mut rng).unwrap();
+            let mut ledger = BlockLedger::new(&info);
+            let mut acc = ComposedAccumulator::new(&info, &prev);
+            for i in 0..k {
+                let p = 1 + (i % info.cap_p);
+                let sel = ledger.select_for_width(&info, p);
+                ledger.record(&sel, 1);
+                let payload = prev.reduced_inputs(&info, p, &sel.blocks).unwrap();
+                acc.push(&sel.blocks, &payload).unwrap();
+            }
+            let next = acc.finalize().unwrap();
+            for (a, b) in next.coeffs.iter().zip(&prev.coeffs) {
+                if a.sq_dist(b) > 1e-8 {
+                    return Err("coefficient changed under identical uploads".into());
+                }
+            }
+            for (a, b) in next.bases.iter().zip(&prev.bases) {
+                if a.sq_dist(b) > 1e-8 {
+                    return Err("basis changed under identical uploads".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dense_bias_is_plain_average() {
+    check(
+        23,
+        50,
+        |rng| (1 + rng.below(4), rng.next_u64()),
+        |&(k, seed)| {
+            let info = toy_info();
+            let mut rng = Rng::new(seed);
+            let prev = DenseGlobal::init(&info, &mut rng).unwrap();
+            let mut acc = DenseAccumulator::new(&info, &prev);
+            let mut uploads = Vec::new();
+            for i in 0..k {
+                let p = 1 + (i % info.cap_p);
+                let mut up = prev.reduced_inputs(&info, p).unwrap();
+                for t in up.iter_mut() {
+                    let delta = Tensor::randn(t.shape(), 0.1, &mut rng);
+                    t.add_assign(&delta);
+                }
+                acc.push(p, &up).unwrap();
+                uploads.push(up);
+            }
+            let next = acc.finalize().unwrap();
+            let expect: f32 =
+                uploads.iter().map(|u| u.last().unwrap().data()[0]).sum::<f32>() / k as f32;
+            let got = next.bias.data()[0];
+            if (got - expect).abs() > 1e-4 {
+                return Err(format!("bias avg {got} != {expect}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gamma_partition_invariants() {
+    check(
+        29,
+        40,
+        |rng| {
+            let classes = 2 + rng.below(10);
+            let clients = 1 + rng.below(10);
+            let quota = 5 + rng.below(30);
+            let gamma = rng.uniform_in(100.0 / classes as f64, 95.0);
+            (vec![classes, clients, quota], gamma)
+        },
+        |(v, gamma)| {
+            let (classes, clients, quota) = (v[0], v[1], v[2]);
+            let n = classes * clients * quota; // plenty of samples
+            let labels: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
+            let mut rng = Rng::new(7);
+            let parts = gamma_partition(&labels, classes, clients, quota, *gamma, &mut rng);
+            let mut seen = std::collections::HashSet::new();
+            for p in &parts {
+                if p.len() != quota {
+                    return Err("quota violated".into());
+                }
+                for &i in p {
+                    if !seen.insert(i) {
+                        return Err(format!("duplicate sample {i}"));
+                    }
+                    if i >= n {
+                        return Err("index out of range".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_phi_partition_missing_classes() {
+    check(
+        31,
+        40,
+        |rng| {
+            let classes = 4 + rng.below(16);
+            let missing = rng.below(classes - 1);
+            let clients = 1 + rng.below(6);
+            (classes, missing, clients)
+        },
+        |&(classes, missing, clients)| {
+            let quota = 40;
+            let n = classes * clients * quota; // ample
+            let labels: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
+            let mut rng = Rng::new(9);
+            let parts = phi_partition(&labels, classes, clients, quota, missing, &mut rng);
+            for p in &parts {
+                let mut present = vec![false; classes];
+                for &i in p {
+                    present[labels[i] as usize] = true;
+                }
+                let held = present.iter().filter(|&&x| x).count();
+                if held > classes - missing {
+                    return Err(format!("client holds {held} > {} classes", classes - missing));
+                }
+            }
+            Ok(())
+        },
+    );
+}
