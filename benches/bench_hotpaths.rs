@@ -4,9 +4,11 @@
 //! These are the quantities the §Perf pass tracks: PJRT dispatch latency,
 //! block gather/scatter, aggregation, round planning, data synthesis.
 
+use heroes::baselines::{DenseServer, Strategy};
 use heroes::config::{ExperimentConfig, Scale};
 use heroes::coordinator::aggregate::ComposedAccumulator;
 use heroes::coordinator::assignment::{plan_round, ClientStatus, ControllerCfg};
+use heroes::coordinator::env::FlEnv;
 use heroes::coordinator::frequency::Estimates;
 use heroes::coordinator::ledger::BlockLedger;
 use heroes::data::synth_image::ImageGen;
@@ -32,6 +34,19 @@ fn main() {
         let mut counts = vec![0u32; 16];
         scatter_blocks_add(&mut sums, &mut counts, &reduced, &[1, 5, 9, 13], 8);
         sums
+    });
+
+    // HeteroFL prefix extraction/aggregation (row-copy fast path)
+    let w = Tensor::randn(&[3, 3, 64, 128], 0.1, &mut rng);
+    b.run("tensor/slice_prefix (3,3,64,128)->(3,3,32,64)", |_| {
+        w.slice_prefix(&[3, 3, 32, 64])
+    });
+    let half = w.slice_prefix(&[3, 3, 32, 64]);
+    b.run("tensor/scatter_prefix_add (3,3,32,64)", |_| {
+        let mut full = Tensor::zeros(&[3, 3, 64, 128]);
+        let mut counts = vec![0u32; full.len()];
+        full.scatter_prefix_add(&half, &mut counts);
+        full
     });
 
     let gen = ImageGen::cifar_twin();
@@ -103,6 +118,26 @@ fn main() {
             engine.execute(&name, &inputs).unwrap()
         });
     }
+    // ---- parallel round driver: 16-client fleet, workers=1 vs 4 ----
+    // The per-round wall clock should drop with workers (the simulated
+    // *virtual* time is byte-identical — see coordinator::round docs).
+    let mut cfg16 = ExperimentConfig::preset("cnn", Scale::Smoke);
+    cfg16.n_clients = 16;
+    cfg16.k_per_round = 16;
+    cfg16.samples_per_client = 32;
+    cfg16.test_samples = 64;
+    cfg16.tau_default = 2;
+    let bq = Bench::quick();
+    for workers in [1usize, 4] {
+        cfg16.workers = workers;
+        let mut env = FlEnv::build(&engine, cfg16.clone()).unwrap();
+        let mut srng = Rng::new(cfg16.seed ^ 0x5EED);
+        let mut server = DenseServer::fedavg(&info, &cfg16, &mut srng).unwrap();
+        bq.run(&format!("driver/round K=16 fedavg workers={workers}"), |_| {
+            server.run_round(&mut env).unwrap()
+        });
+    }
+
     let st = engine.stats();
     println!(
         "engine totals: {} compiles ({:.2}s), {} executions ({:.3}ms mean)",

@@ -8,14 +8,16 @@
 //!   its time dimension (DESIGN.md §Substitutions).
 //! * HeteroFL (width = Greedy, τ = Fixed): width-pruned dense sub-models
 //!   by computation power with overlap-aware aggregation [Diao'20].
+//!
+//! Round execution is delegated to the shared parallel pipeline
+//! (`coordinator::round`): this file only plans widths/τ and aggregates.
 
 use crate::baselines::Strategy;
 use crate::config::ExperimentConfig;
 use crate::coordinator::aggregate::DenseAccumulator;
-use crate::coordinator::assignment::average_wait;
-use crate::coordinator::client::run_local;
 use crate::coordinator::env::FlEnv;
 use crate::coordinator::frequency::completion_time;
+use crate::coordinator::round::{collect_round, LocalTask, RoundDriver};
 use crate::coordinator::RoundReport;
 use crate::model::DenseGlobal;
 use crate::runtime::{Manifest, ModelInfo};
@@ -46,6 +48,7 @@ pub struct DenseServer {
     scheme: &'static str,
     width: WidthPolicy,
     tau: TauPolicy,
+    driver: RoundDriver,
     family: String,
     lr: f32,
     lr_decay_rounds: usize,
@@ -68,6 +71,7 @@ impl DenseServer {
             scheme,
             width,
             tau,
+            driver: RoundDriver::new(cfg.workers),
             family: cfg.family.clone(),
             lr: cfg.lr,
             lr_decay_rounds: cfg.lr_decay_rounds,
@@ -122,7 +126,6 @@ impl Strategy for DenseServer {
         let info = env.info.clone();
         let clients = env.sample_clients();
         let statuses: Vec<_> = clients.iter().map(|&c| env.status(c)).collect();
-        let engine = env.engine;
 
         // widths + cost components
         let work: Vec<(usize, usize, f64, f64)> = statuses
@@ -145,44 +148,33 @@ impl Strategy for DenseServer {
             }
         };
 
-        let mut acc = DenseAccumulator::new(&info, &self.global);
-        let mut completion = Vec::with_capacity(work.len());
-        let mut losses = Vec::with_capacity(work.len());
-        let mut down = 0usize;
-        let mut up = 0usize;
         let lr_h = crate::coordinator::scheduled_lr(self.lr, self.round, self.lr_decay_rounds);
+        let mut tasks = Vec::with_capacity(work.len());
         for &(client, p, mu, nu) in &work {
-            let payload = self.global.reduced_inputs(&info, p)?;
-            let bytes = info.bytes_dense[&p];
-            down += bytes;
-            let exec = Manifest::train_name(&self.family, p, false);
-            let result = run_local(engine, &exec, None, payload, tau, lr_h, || {
-                env.next_batch(client)
-            })?;
-            up += bytes;
-            acc.push(p, &result.params)?;
-            completion.push(completion_time(tau, mu, nu));
-            losses.push(result.mean_loss);
+            tasks.push(LocalTask {
+                client,
+                p,
+                tau,
+                lr: lr_h,
+                train_exec: Manifest::train_name(&self.family, p, false),
+                probe_exec: None,
+                payload: self.global.reduced_inputs(&info, p)?,
+                stream: env.batch_stream(client, self.round),
+                bytes: info.bytes_dense[&p],
+                completion: completion_time(tau, mu, nu),
+            });
+        }
+
+        let outcomes = self.driver.run(env.engine, tasks)?;
+
+        // overlap-aware aggregation in assignment order
+        let mut acc = DenseAccumulator::new(&info, &self.global);
+        for o in &outcomes {
+            acc.push(o.p, &o.result.params)?;
         }
         self.global = acc.finalize()?;
 
-        env.traffic.record_down(down);
-        env.traffic.record_up(up);
-        let round_time = completion.iter().copied().fold(0.0, f64::max);
-        env.clock.advance(round_time);
-
-        let report = RoundReport {
-            round: self.round,
-            round_time,
-            avg_wait: average_wait(&completion),
-            mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
-            taus: vec![tau; work.len()],
-            widths: work.iter().map(|w| w.1).collect(),
-            down_bytes: down,
-            up_bytes: up,
-            completion_times: completion,
-            block_variance: 0.0,
-        };
+        let report = collect_round(env, self.round, &outcomes, 0.0);
         self.round += 1;
         Ok(report)
     }

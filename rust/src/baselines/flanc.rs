@@ -11,10 +11,10 @@
 
 use crate::baselines::Strategy;
 use crate::config::ExperimentConfig;
-use crate::coordinator::assignment::{assign_width, average_wait};
-use crate::coordinator::client::run_local;
+use crate::coordinator::assignment::assign_width;
 use crate::coordinator::env::FlEnv;
 use crate::coordinator::frequency::completion_time;
+use crate::coordinator::round::{collect_round, LocalTask, RoundDriver};
 use crate::coordinator::RoundReport;
 use crate::model::init_params;
 use crate::runtime::{Manifest, ModelInfo};
@@ -29,6 +29,7 @@ pub struct FlancServer {
     /// coeffs[p-1][layer]: width-p coefficient (R, b(p)·O)
     coeffs: Vec<Vec<Tensor>>,
     bias: Tensor,
+    driver: RoundDriver,
     family: String,
     lr: f32,
     lr_decay_rounds: usize,
@@ -63,6 +64,7 @@ impl FlancServer {
             bases,
             coeffs,
             bias,
+            driver: RoundDriver::new(cfg.workers),
             family: cfg.family.clone(),
             lr: cfg.lr,
             lr_decay_rounds: cfg.lr_decay_rounds,
@@ -93,9 +95,30 @@ impl Strategy for FlancServer {
         let info = env.info.clone();
         let clients = env.sample_clients();
         let statuses: Vec<_> = clients.iter().map(|&c| env.status(c)).collect();
-        let engine = env.engine;
         let l = info.layers.len();
+        let lr_h = crate::coordinator::scheduled_lr(self.lr, self.round, self.lr_decay_rounds);
 
+        let mut tasks = Vec::with_capacity(statuses.len());
+        for s in &statuses {
+            let (p, mu) = assign_width(&info, s.q_flops, self.mu_max);
+            let nu = s.link.upload_time(info.bytes_composed[&p]);
+            tasks.push(LocalTask {
+                client: s.client,
+                p,
+                tau: self.tau,
+                lr: lr_h,
+                train_exec: Manifest::train_name(&self.family, p, true),
+                probe_exec: None,
+                payload: self.payload(p),
+                stream: env.batch_stream(s.client, self.round),
+                bytes: info.bytes_composed[&p],
+                completion: completion_time(self.tau, mu, nu),
+            });
+        }
+
+        let outcomes = self.driver.run(env.engine, tasks)?;
+
+        // basis averaged over all K; coefficients within same-width groups
         let mut basis_sum: Vec<Tensor> = self.bases.iter().map(|v| Tensor::zeros(v.shape())).collect();
         let mut bias_sum = Tensor::zeros(self.bias.shape());
         let mut coeff_sum: Vec<Vec<Tensor>> = self
@@ -105,39 +128,14 @@ impl Strategy for FlancServer {
             .collect();
         let mut coeff_cnt = vec![0u32; info.cap_p];
         let mut total = 0u32;
-
-        let mut completion = Vec::new();
-        let mut losses = Vec::new();
-        let mut taus = Vec::new();
-        let mut widths = Vec::new();
-        let mut down = 0usize;
-        let mut up = 0usize;
-        let lr_h = crate::coordinator::scheduled_lr(self.lr, self.round, self.lr_decay_rounds);
-
-        for s in &statuses {
-            let (p, mu) = assign_width(&info, s.q_flops, self.mu_max);
-            let nu = s.link.upload_time(info.bytes_composed[&p]);
-            let bytes = info.bytes_composed[&p];
-            down += bytes;
-            let exec = Manifest::train_name(&self.family, p, true);
-            let client = s.client;
-            let result = run_local(engine, &exec, None, self.payload(p), self.tau, lr_h, || {
-                env.next_batch(client)
-            })?;
-            up += bytes;
-
+        for o in &outcomes {
             for i in 0..l {
-                basis_sum[i].add_assign(&result.params[2 * i]);
-                coeff_sum[p - 1][i].add_assign(&result.params[2 * i + 1]);
+                basis_sum[i].add_assign(&o.result.params[2 * i]);
+                coeff_sum[o.p - 1][i].add_assign(&o.result.params[2 * i + 1]);
             }
-            bias_sum.add_assign(&result.params[2 * l]);
-            coeff_cnt[p - 1] += 1;
+            bias_sum.add_assign(&o.result.params[2 * l]);
+            coeff_cnt[o.p - 1] += 1;
             total += 1;
-
-            completion.push(completion_time(self.tau, mu, nu));
-            losses.push(result.mean_loss);
-            taus.push(self.tau);
-            widths.push(p);
         }
 
         // basis + bias: average over all participants
@@ -163,23 +161,7 @@ impl Strategy for FlancServer {
             }
         }
 
-        env.traffic.record_down(down);
-        env.traffic.record_up(up);
-        let round_time = completion.iter().copied().fold(0.0, f64::max);
-        env.clock.advance(round_time);
-
-        let report = RoundReport {
-            round: self.round,
-            round_time,
-            avg_wait: average_wait(&completion),
-            mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
-            taus,
-            widths,
-            down_bytes: down,
-            up_bytes: up,
-            completion_times: completion,
-            block_variance: 0.0,
-        };
+        let report = collect_round(env, self.round, &outcomes, 0.0);
         self.round += 1;
         Ok(report)
     }

@@ -15,6 +15,9 @@
 pub mod dense;
 pub mod flanc;
 
+pub use dense::{DenseServer, TauPolicy, WidthPolicy};
+pub use flanc::FlancServer;
+
 use crate::coordinator::env::FlEnv;
 use crate::coordinator::RoundReport;
 use anyhow::Result;

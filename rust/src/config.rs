@@ -96,6 +96,11 @@ pub struct ExperimentConfig {
     /// communication-dominated time regime (DESIGN.md §Substitutions).
     pub up_mbps: (f64, f64),
     pub down_mbps: (f64, f64),
+    /// Worker threads for the round driver (`coordinator::round`).
+    /// 1 = the serial coordinator loop; any N yields byte-identical
+    /// results (see the driver's determinism contract), so this knob only
+    /// trades wall-clock for cores.
+    pub workers: usize,
 }
 
 impl ExperimentConfig {
@@ -146,6 +151,7 @@ impl ExperimentConfig {
             epsilon: 0.8,
             up_mbps: (1.0 / 30.0, 5.0 / 30.0),
             down_mbps: (10.0 / 30.0, 20.0 / 30.0),
+            workers: 1,
         }
     }
 
@@ -174,6 +180,7 @@ impl ExperimentConfig {
             args.get_f64("down-lo", self.down_mbps.0)?,
             args.get_f64("down-hi", self.down_mbps.1)?,
         );
+        self.workers = args.get_usize("workers", self.workers)?;
         if let Some(g) = args.get("gamma") {
             self.partition = Partition::Gamma(g.parse().map_err(|_| anyhow!("bad --gamma"))?);
         }
@@ -200,6 +207,7 @@ impl ExperimentConfig {
         c.mu_max = grab_f64("mu_max", c.mu_max);
         c.rho = grab_f64("rho", c.rho);
         c.tau_default = grab_usize("tau", c.tau_default);
+        c.workers = grab_usize("workers", c.workers);
         if let Some(g) = j.get("gamma").and_then(Json::as_f64) {
             c.partition = Partition::Gamma(g);
         }
@@ -226,6 +234,9 @@ impl ExperimentConfig {
         }
         if self.rho < 0.0 || self.mu_max <= 0.0 {
             return Err(anyhow!("budgets must be positive"));
+        }
+        if self.workers == 0 {
+            return Err(anyhow!("workers must be at least 1"));
         }
         Ok(())
     }
@@ -263,6 +274,17 @@ mod tests {
         assert_eq!(c.k_per_round, 7);
         assert_eq!(c.partition, Partition::Gamma(80.0));
         assert!((c.lr - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn workers_knob_parses_and_validates() {
+        assert_eq!(ExperimentConfig::preset("cnn", Scale::Smoke).workers, 1);
+        let args = Args::parse_from(["--workers", "4"].iter().map(|s| s.to_string()));
+        let c = ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&args).unwrap();
+        assert_eq!(c.workers, 4);
+        let mut bad = ExperimentConfig::preset("cnn", Scale::Smoke);
+        bad.workers = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

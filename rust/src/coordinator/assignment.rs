@@ -186,6 +186,21 @@ pub fn plan_round(
     RoundPlan { assignments, fastest: fastest_idx, t_l, h_star }
 }
 
+/// Reference-client selection over already-costed assignments: the index
+/// and projected completion time of the **fastest** client — the same
+/// "client l" semantics `plan_round` uses (paper §V-B ranks clients by
+/// projected total time and takes the quickest as the round's reference).
+/// The bootstrap round of `HeroesServer::plan` (no estimates yet) uses
+/// this; it previously selected the *slowest* client via `max_by`.
+pub fn fastest_reference(assignments: &[Assignment]) -> (usize, f64) {
+    assignments
+        .iter()
+        .enumerate()
+        .map(|(i, a)| (i, a.projected_t))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap_or((0, 0.0))
+}
+
 /// Average waiting time of a plan (paper Eq. 20) given the realized
 /// completion times.
 pub fn average_wait(completion_times: &[f64]) -> f64 {
@@ -303,6 +318,27 @@ mod tests {
         let p2 = plan_round(&info, &cfg(), &est(), &statuses, &mut ledger);
         // second round must pick the other (less-trained) group
         assert_ne!(p1.assignments[0].selection.groups[0], p2.assignments[0].selection.groups[0]);
+    }
+
+    #[test]
+    fn fastest_reference_picks_minimum_projected_time() {
+        // regression: the bootstrap plan used `max_by`, i.e. the slowest
+        let info = toy_info();
+        let ledger = BlockLedger::new(&info);
+        let mk = |client: usize, projected_t: f64| Assignment {
+            client,
+            p: 1,
+            mu: 0.1,
+            nu: 0.1,
+            tau: 5,
+            selection: ledger.select_for_width(&info, 1),
+            projected_t,
+        };
+        let assignments = vec![mk(0, 9.0), mk(1, 2.0), mk(2, 5.0)];
+        let (idx, t_l) = fastest_reference(&assignments);
+        assert_eq!(idx, 1, "must select the fastest client, not the slowest");
+        assert!((t_l - 2.0).abs() < 1e-12);
+        assert_eq!(fastest_reference(&[]), (0, 0.0));
     }
 
     #[test]

@@ -4,6 +4,13 @@
 //! Every scheme (Heroes and the four baselines) runs against the same
 //! `FlEnv`, so comparisons in the experiment figures differ only by the
 //! scheme logic, exactly like the paper's testbed (§VI-C).
+//!
+//! Training data is handed out as **owned** [`BatchStream`]s — one per
+//! `(client, round)`, seeded deterministically from
+//! `(cfg.seed, client, round)` — so worker threads of the parallel round
+//! driver (`coordinator::round`) pull batches without aliasing the env.
+//! Evaluation, the virtual clock and the traffic meter stay on the
+//! coordinator thread.
 
 use crate::config::{ExperimentConfig, Partition};
 use crate::coordinator::assignment::ClientStatus;
@@ -21,14 +28,53 @@ use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
 
-enum ClientLoader {
-    Image(ImageLoader),
-    Text(TextLoader),
+/// Shared training data + per-client partitions; `batch_stream` stamps
+/// out owned loaders over it on demand.
+enum TrainData {
+    Image {
+        set: Arc<ImageSet>,
+        /// per-client sample indices into `set` (cloned into each stream,
+        /// which shuffles its own copy)
+        parts: Vec<Vec<usize>>,
+    },
+    Text {
+        /// per-client token streams
+        shards: Vec<Arc<Vec<i32>>>,
+        seq_len: usize,
+    },
 }
 
 enum TestData {
     Image(Arc<ImageSet>),
     Text(Arc<TextSet>),
+}
+
+/// An owned, self-contained batch source for one client's local round.
+///
+/// The stream holds `Arc`s of the shared dataset plus its own cursor and
+/// RNG, so a worker thread can draw batches with no access to `FlEnv`.
+/// Streams for the same `(seed, client, round)` yield identical batch
+/// sequences — the determinism contract of `coordinator::round` rests on
+/// this.
+pub enum BatchStream {
+    Image(ImageLoader),
+    Text(TextLoader),
+}
+
+impl BatchStream {
+    /// Next training batch (paper: ξ ~ D_n).
+    pub fn next_batch(&mut self) -> (XData, IntTensor) {
+        match self {
+            BatchStream::Image(l) => {
+                let b = l.next_batch();
+                (XData::Image(b.x), b.y)
+            }
+            BatchStream::Text(l) => {
+                let b = l.next_batch();
+                (XData::Tokens(b.x), b.y)
+            }
+        }
+    }
 }
 
 /// The common federated world for one experiment run.
@@ -40,7 +86,7 @@ pub struct FlEnv<'e> {
     pub clock: VirtualClock,
     pub traffic: TrafficMeter,
     network: NetworkModel,
-    loaders: Vec<ClientLoader>,
+    train: TrainData,
     test: TestData,
     rng: Rng,
 }
@@ -55,7 +101,7 @@ impl<'e> FlEnv<'e> {
         let mut data_rng = rng.fork(1);
         let mut fleet_rng = rng.fork(2);
 
-        let (loaders, test) = match &info.input {
+        let (train, test) = match &info.input {
             InputInfo::Image { .. } => {
                 let gen = if cfg.family == "resnet" {
                     ImageGen::imagenet_twin()
@@ -83,16 +129,7 @@ impl<'e> FlEnv<'e> {
                         return Err(anyhow!("natural partition is text-only"));
                     }
                 };
-                let loaders = parts
-                    .into_iter()
-                    .enumerate()
-                    .map(|(i, idxs)| {
-                        ClientLoader::Image(ImageLoader::new(
-                            train.clone(), idxs, info.batch, data_rng.fork(100 + i as u64),
-                        ))
-                    })
-                    .collect();
-                (loaders, TestData::Image(test))
+                (TrainData::Image { set: train, parts }, TestData::Image(test))
             }
             InputInfo::Text { seq_len, .. } => {
                 let gen = TextGen::shakespeare_twin();
@@ -100,16 +137,8 @@ impl<'e> FlEnv<'e> {
                 let set = Arc::new(gen.generate(
                     cfg.n_clients, cfg.shard_tokens, test_tokens, cfg.seed ^ 0x7E47,
                 ));
-                let seq = *seq_len;
-                let loaders = (0..cfg.n_clients)
-                    .map(|i| {
-                        ClientLoader::Text(TextLoader::new(
-                            Arc::new(set.shards[i].clone()), info.batch, seq,
-                            data_rng.fork(200 + i as u64),
-                        ))
-                    })
-                    .collect();
-                (loaders, TestData::Text(set))
+                let shards = set.shards.iter().cloned().map(Arc::new).collect();
+                (TrainData::Text { shards, seq_len: *seq_len }, TestData::Text(set))
             }
         };
 
@@ -128,7 +157,7 @@ impl<'e> FlEnv<'e> {
             clock: VirtualClock::new(),
             traffic: TrafficMeter::new(),
             network,
-            loaders,
+            train,
             test,
             rng: rng.fork(3),
         })
@@ -146,17 +175,31 @@ impl<'e> FlEnv<'e> {
         ClientStatus { client, q_flops: q, link }
     }
 
-    /// Next training batch for a client.
-    pub fn next_batch(&mut self, client: usize) -> (XData, IntTensor) {
-        match &mut self.loaders[client] {
-            ClientLoader::Image(l) => {
-                let b = l.next_batch();
-                (XData::Image(b.x), b.y)
-            }
-            ClientLoader::Text(l) => {
-                let b = l.next_batch();
-                (XData::Tokens(b.x), b.y)
-            }
+    /// Owned batch stream for one client's local round. Deterministic in
+    /// `(cfg.seed, client, round)` and independent of every other stream,
+    /// so the round driver may run it on any worker thread.
+    pub fn batch_stream(&self, client: usize, round: usize) -> BatchStream {
+        // mix (seed, client, round) injectively enough for SplitMix64's
+        // whitening; the +1s keep client 0 / round 0 off the raw seed
+        let seed = self
+            .cfg
+            .seed
+            .wrapping_add((client as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((round as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03));
+        let rng = Rng::new(seed);
+        match &self.train {
+            TrainData::Image { set, parts } => BatchStream::Image(ImageLoader::new(
+                set.clone(),
+                parts[client].clone(),
+                self.info.batch,
+                rng,
+            )),
+            TrainData::Text { shards, seq_len } => BatchStream::Text(TextLoader::new(
+                shards[client].clone(),
+                self.info.batch,
+                *seq_len,
+                rng,
+            )),
         }
     }
 

@@ -7,6 +7,7 @@
 //! * `aggregate`  — basis averaging + block-wise coefficient aggregation (Eq. 5)
 //! * `client`     — simulated client executing Alg. 2 through PJRT
 //! * `env`        — shared federated world (data, fleet, WAN, clock, eval)
+//! * `round`      — the parallel round driver shared by every scheme
 //! * `server`     — the Heroes PS round loop (Alg. 1)
 
 pub mod aggregate;
@@ -16,6 +17,7 @@ pub mod env;
 pub mod estimator;
 pub mod frequency;
 pub mod ledger;
+pub mod round;
 pub mod server;
 
 use crate::tensor::{IntTensor, Tensor};
@@ -34,8 +36,9 @@ pub enum XData {
 }
 
 /// Per-round metrics emitted by every scheme (Heroes and baselines) —
-/// the raw series behind all paper figures.
-#[derive(Debug, Clone)]
+/// the raw series behind all paper figures. `PartialEq` so tests can pin
+/// the round driver's workers=1 ≡ workers=N determinism contract.
+#[derive(Debug, Clone, PartialEq)]
 pub struct RoundReport {
     pub round: usize,
     /// T^h (Eq. 19): synchronous round completion time, simulated seconds

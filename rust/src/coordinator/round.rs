@@ -1,0 +1,227 @@
+//! Shared parallel round pipeline — every scheme (Heroes, the dense
+//! baselines, Flanc) plans a round into [`LocalTask`]s and hands them to
+//! the [`RoundDriver`], which executes the simulated clients (possibly on
+//! several worker threads) and performs the round bookkeeping the schemes
+//! used to reimplement one by one.
+//!
+//! # Pipeline
+//!
+//! One synchronous round flows through four phases:
+//!
+//! 1. **plan** — the scheme samples participants and decides width / τ /
+//!    payload / executable per client (Alg. 1 for Heroes, the simpler
+//!    width×τ policies for the baselines), producing an ordered
+//!    `Vec<LocalTask>`. Planning runs on the coordinator thread and may
+//!    freely mutate scheme state (ledger, tracker).
+//! 2. **dispatch** — [`RoundDriver::run`] executes each task's local
+//!    training (Alg. 2, `client::run_local`) through the `Sync` PJRT
+//!    [`Engine`]. With `workers == 1` tasks run inline on the caller's
+//!    thread; with `workers == N` a `std::thread::scope` pool of N
+//!    threads pulls task indices off a shared atomic counter.
+//! 3. **collect** — each outcome lands in the slot of its task index, so
+//!    `run` returns outcomes in **assignment order** no matter which
+//!    worker finished first; if tasks failed, the error of the earliest
+//!    failed task is returned (again independent of scheduling).
+//! 4. **aggregate** — the scheme folds the ordered outcomes into its
+//!    global model (block-wise, overlap-aware or grouped averaging), then
+//!    [`collect_round`] converts the shared bookkeeping — traffic bytes,
+//!    completion times, losses, the virtual-clock advance by the
+//!    synchronous-round maximum (Eq. 19) — into the final [`RoundReport`].
+//!
+//! # Determinism contract
+//!
+//! A dispatched task touches no shared mutable state: its batch stream is
+//! owned and seeded by `(seed, client, round)` ([`FlEnv::batch_stream`]),
+//! its payload is owned, and PJRT CPU executions are deterministic
+//! functions of their inputs. Combined with assignment-order collection,
+//! a seeded run therefore produces **byte-identical `RoundReport`
+//! sequences for any `--workers N`**, and `workers == 1` reproduces the
+//! serial loop exactly (`rust/tests/integration_parallel.rs` pins this).
+
+use crate::coordinator::assignment::average_wait;
+use crate::coordinator::client::{run_local, LocalResult};
+use crate::coordinator::env::{BatchStream, FlEnv};
+use crate::coordinator::RoundReport;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One client's planned local round, fully self-contained: a worker
+/// thread needs nothing beyond the task and a `&Engine` to execute it.
+///
+/// Self-containment means the plan phase materializes all K payloads
+/// before dispatch (peak memory K reduced payloads instead of the old
+/// serial loop's one). Payloads are factorized sub-models and K is tens
+/// of clients, so this is cheap; revisit (build payloads on-worker from
+/// the read-only global) if cohorts grow orders of magnitude.
+pub struct LocalTask {
+    pub client: usize,
+    /// assigned width
+    pub p: usize,
+    /// local update frequency τ
+    pub tau: usize,
+    /// effective learning rate for this round
+    pub lr: f32,
+    pub train_exec: String,
+    /// estimation-probe executable (Heroes probing rounds only)
+    pub probe_exec: Option<String>,
+    /// parameter payload `[...]` in the executable's input layout
+    pub payload: Vec<Tensor>,
+    /// owned batch source (seeded by `(seed, client, round)`)
+    pub stream: BatchStream,
+    /// payload transfer size, counted once per direction (broadcast down,
+    /// upload up)
+    pub bytes: usize,
+    /// projected completion time τ·μ + ν (Eq. 17-18)
+    pub completion: f64,
+}
+
+/// A completed task: the plan metadata plus the local-training result.
+pub struct TaskOutcome {
+    pub client: usize,
+    pub p: usize,
+    pub tau: usize,
+    pub bytes: usize,
+    pub completion: f64,
+    pub result: LocalResult,
+}
+
+fn exec_task(engine: &Engine, task: LocalTask) -> Result<TaskOutcome> {
+    let LocalTask {
+        client, p, tau, lr, train_exec, probe_exec, payload, mut stream, bytes, completion,
+    } = task;
+    let result = run_local(
+        engine,
+        &train_exec,
+        probe_exec.as_deref(),
+        payload,
+        tau,
+        lr,
+        || stream.next_batch(),
+    )?;
+    Ok(TaskOutcome { client, p, tau, bytes, completion, result })
+}
+
+/// Dispatches a round's tasks over up to `workers` threads.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundDriver {
+    workers: usize,
+}
+
+impl RoundDriver {
+    /// `workers == 0` is treated as 1 (the serial coordinator loop).
+    pub fn new(workers: usize) -> RoundDriver {
+        RoundDriver { workers: workers.max(1) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute all tasks, returning outcomes in assignment order.
+    ///
+    /// Never spawns more threads than tasks; with one worker (or one
+    /// task) everything runs inline on the caller's thread.
+    pub fn run(&self, engine: &Engine, tasks: Vec<LocalTask>) -> Result<Vec<TaskOutcome>> {
+        let n = tasks.len();
+        let workers = self.workers.min(n.max(1));
+        if workers <= 1 {
+            return tasks.into_iter().map(|t| exec_task(engine, t)).collect();
+        }
+
+        // Work queue: a shared index + take-once task slots; outcomes land
+        // in the slot of their task index so order is scheduling-free.
+        let queue: Vec<Mutex<Option<LocalTask>>> =
+            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<TaskOutcome>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let task = queue[i]
+                        .lock()
+                        .expect("task slot poisoned")
+                        .take()
+                        .expect("task dispatched twice");
+                    let outcome = exec_task(engine, task);
+                    *slots[i].lock().expect("outcome slot poisoned") = Some(outcome);
+                });
+            }
+        });
+
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .expect("outcome slot poisoned")
+                    .expect("worker exited without filling its slot")
+            })
+            .collect()
+    }
+}
+
+/// Shared collect phase: fold a round's outcomes into the environment's
+/// traffic meter and virtual clock and assemble the `RoundReport` (the
+/// bookkeeping formerly copy-pasted across Heroes, dense and Flanc).
+pub fn collect_round(
+    env: &mut FlEnv,
+    round: usize,
+    outcomes: &[TaskOutcome],
+    block_variance: f64,
+) -> RoundReport {
+    let mut down = 0usize;
+    let mut up = 0usize;
+    let mut completion = Vec::with_capacity(outcomes.len());
+    let mut losses = Vec::with_capacity(outcomes.len());
+    for o in outcomes {
+        down += o.bytes;
+        up += o.bytes;
+        completion.push(o.completion);
+        losses.push(o.result.mean_loss);
+    }
+    env.traffic.record_down(down);
+    env.traffic.record_up(up);
+    let round_time = completion.iter().copied().fold(0.0, f64::max);
+    env.clock.advance(round_time);
+
+    RoundReport {
+        round,
+        round_time,
+        avg_wait: average_wait(&completion),
+        mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
+        taus: outcomes.iter().map(|o| o.tau).collect(),
+        widths: outcomes.iter().map(|o| o.p).collect(),
+        down_bytes: down,
+        up_bytes: up,
+        completion_times: completion,
+        block_variance,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_workers_clamps_to_serial() {
+        assert_eq!(RoundDriver::new(0).workers(), 1);
+        assert_eq!(RoundDriver::new(1).workers(), 1);
+        assert_eq!(RoundDriver::new(4).workers(), 4);
+    }
+
+    #[test]
+    fn task_types_are_send() {
+        // the scoped workers move tasks/outcomes across threads
+        fn assert_send<T: Send>() {}
+        assert_send::<LocalTask>();
+        assert_send::<TaskOutcome>();
+    }
+}

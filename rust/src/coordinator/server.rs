@@ -3,16 +3,17 @@
 //! Owns the composed global model, the block ledger and the estimate
 //! tracker; each `run_round` samples clients, plans widths / τ / blocks
 //! (`assignment::plan_round`), dispatches the simulated clients through
-//! the PJRT train executables, performs basis + block-wise aggregation
-//! and advances the virtual clock by the synchronous-round maximum.
+//! the shared parallel `RoundDriver` (`coordinator::round`), performs
+//! basis + block-wise aggregation in assignment order and advances the
+//! virtual clock by the synchronous-round maximum.
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::aggregate::ComposedAccumulator;
-use crate::coordinator::assignment::{self, average_wait, ControllerCfg, RoundPlan};
-use crate::coordinator::client::run_local;
+use crate::coordinator::assignment::{self, fastest_reference, ControllerCfg, RoundPlan};
 use crate::coordinator::env::FlEnv;
 use crate::coordinator::estimator::EstimateTracker;
 use crate::coordinator::ledger::BlockLedger;
+use crate::coordinator::round::{collect_round, LocalTask, RoundDriver};
 use crate::coordinator::RoundReport;
 use crate::model::ComposedGlobal;
 use crate::runtime::{Manifest, ModelInfo};
@@ -25,6 +26,7 @@ pub struct HeroesServer {
     pub ledger: BlockLedger,
     pub tracker: EstimateTracker,
     ctrl: ControllerCfg,
+    driver: RoundDriver,
     family: String,
     lr: f32,
     lr_decay_rounds: usize,
@@ -50,6 +52,7 @@ impl HeroesServer {
                 tau_floor: cfg.tau_default,
                 h_max: 1_000_000,
             },
+            driver: RoundDriver::new(cfg.workers),
             family: cfg.family.clone(),
             lr: cfg.lr,
             lr_decay_rounds: cfg.lr_decay_rounds,
@@ -86,78 +89,55 @@ impl HeroesServer {
                     ),
                 });
             }
-            let (fastest, t_l) = assignments
-                .iter()
-                .enumerate()
-                .map(|(i, a)| (i, a.projected_t))
-                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                .unwrap_or((0, 0.0));
+            let (fastest, t_l) = fastest_reference(&assignments);
             RoundPlan { assignments, fastest, t_l, h_star: 1 }
         }
     }
 
-    /// Execute one synchronous round (paper Alg. 1 lines 4-27).
+    /// Execute one synchronous round (paper Alg. 1 lines 4-27) through
+    /// the shared plan → dispatch → collect → aggregate pipeline.
     pub fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport> {
         let clients = env.sample_clients();
         let plan = self.plan(env, &clients);
-        let engine = env.engine;
         let info = env.info.clone();
         let probing = self.probe_every > 0 && self.round % self.probe_every.max(1) == 0;
-
-        let mut acc = ComposedAccumulator::new(&info, &self.global);
-        let mut completion = Vec::with_capacity(plan.assignments.len());
-        let mut losses = Vec::with_capacity(plan.assignments.len());
-        let mut estimates = Vec::new();
-        let mut down = 0usize;
-        let mut up = 0usize;
         let lr_h = crate::coordinator::scheduled_lr(self.lr, self.round, self.lr_decay_rounds);
 
+        // plan → tasks (assignment order)
+        let mut tasks = Vec::with_capacity(plan.assignments.len());
         for a in &plan.assignments {
-            let payload = self.global.reduced_inputs(&info, a.p, &a.selection.blocks)?;
-            let bytes = info.bytes_composed[&a.p];
-            down += bytes;
-            let train_exec = Manifest::train_name(&self.family, a.p, true);
-            let probe_exec = probing.then(|| Manifest::probe_name(&self.family, a.p));
-            let client = a.client;
-            let result = run_local(
-                engine,
-                &train_exec,
-                probe_exec.as_deref(),
-                payload,
-                a.tau,
-                lr_h,
-                || env.next_batch(client),
-            )?;
-            up += bytes;
-            acc.push(&a.selection.blocks, &result.params)?;
-            completion.push(a.projected_t);
-            losses.push(result.mean_loss);
-            if let Some(e) = result.estimates {
+            tasks.push(LocalTask {
+                client: a.client,
+                p: a.p,
+                tau: a.tau,
+                lr: lr_h,
+                train_exec: Manifest::train_name(&self.family, a.p, true),
+                probe_exec: probing.then(|| Manifest::probe_name(&self.family, a.p)),
+                payload: self.global.reduced_inputs(&info, a.p, &a.selection.blocks)?,
+                stream: env.batch_stream(a.client, self.round),
+                bytes: info.bytes_composed[&a.p],
+                completion: a.projected_t,
+            });
+        }
+
+        // dispatch + ordered collect
+        let outcomes = self.driver.run(env.engine, tasks)?;
+
+        // aggregate (Eq. 5) in assignment order
+        let mut acc = ComposedAccumulator::new(&info, &self.global);
+        let mut estimates = Vec::new();
+        for (a, o) in plan.assignments.iter().zip(&outcomes) {
+            acc.push(&a.selection.blocks, &o.result.params)?;
+            if let Some(e) = o.result.estimates {
                 estimates.push(e);
             }
         }
-
         self.global = acc.finalize()?;
-        let mean_loss = losses.iter().sum::<f64>() / losses.len().max(1) as f64;
+        let mean_loss =
+            outcomes.iter().map(|o| o.result.mean_loss).sum::<f64>() / outcomes.len().max(1) as f64;
         self.tracker.update(&estimates, mean_loss);
 
-        env.traffic.record_down(down);
-        env.traffic.record_up(up);
-        let round_time = completion.iter().copied().fold(0.0, f64::max);
-        env.clock.advance(round_time);
-
-        let report = RoundReport {
-            round: self.round,
-            round_time,
-            avg_wait: average_wait(&completion),
-            mean_loss,
-            taus: plan.assignments.iter().map(|a| a.tau).collect(),
-            widths: plan.assignments.iter().map(|a| a.p).collect(),
-            down_bytes: down,
-            up_bytes: up,
-            completion_times: completion,
-            block_variance: self.ledger.variance(),
-        };
+        let report = collect_round(env, self.round, &outcomes, self.ledger.variance());
         self.round += 1;
         Ok(report)
     }

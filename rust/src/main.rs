@@ -10,7 +10,8 @@
 //!
 //! Overrides: --clients --k --rounds --lr --seed --gamma --phi --tau
 //! --tau-max --mu-max --rho --epsilon --eval-every --samples-per-client
-//! --test-samples --up-lo/--up-hi/--down-lo/--down-hi --target.
+//! --test-samples --up-lo/--up-hi/--down-lo/--down-hi --target
+//! --workers (round-driver threads; N and 1 are byte-identical).
 
 use anyhow::{anyhow, Result};
 use heroes::baselines::ALL_SCHEMES;

@@ -6,12 +6,20 @@
 //! → `XlaComputation::from_proto` → `client.compile` → `execute`. The AOT
 //! side lowers with `return_tuple=True`, so every result is one tuple
 //! literal that we decompose against the manifest's output specs.
+//!
+//! The engine is **thread-safe** (`Sync`): the executable cache sits
+//! behind an `RwLock` (executions only take the read lock), a compile of
+//! one executable is serialized by a per-name lock without blocking
+//! executions or compiles of *other* executables, and statistics are
+//! plain atomics. `coordinator::round::RoundDriver` relies on this to run
+//! simulated clients on several worker threads against one engine.
 
 use super::manifest::{DType, ExecSpec, Manifest, TensorSpec};
 use crate::tensor::{IntTensor, Tensor};
 use anyhow::{anyhow, Context, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 /// Borrowed input value for an execution.
@@ -55,7 +63,7 @@ impl<'a> Value<'a> {
     }
 }
 
-/// Cumulative engine statistics (perf pass reads these).
+/// Cumulative engine statistics snapshot (perf pass reads these).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EngineStats {
     pub compiles: u64,
@@ -64,13 +72,27 @@ pub struct EngineStats {
     pub execute_secs: f64,
 }
 
-/// The PJRT engine. One per process; not Sync (the PJRT client is used
-/// from the coordinator thread only).
+/// Lock-free counters behind `EngineStats`; durations accumulate in
+/// nanoseconds so they stay monotone under concurrent `fetch_add`.
+#[derive(Debug, Default)]
+struct StatCells {
+    compiles: AtomicU64,
+    executions: AtomicU64,
+    compile_nanos: AtomicU64,
+    execute_nanos: AtomicU64,
+}
+
+/// The PJRT engine. One per process, shared by every worker thread — all
+/// mutable state (executable cache, stats) is internally synchronized.
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-    stats: RefCell<EngineStats>,
+    cache: RwLock<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// per-executable compile gates: the first thread to miss the cache
+    /// compiles while later threads for the *same* name wait on its gate
+    /// (and then hit the cache) instead of compiling twice
+    compiling: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+    stats: StatCells,
 }
 
 impl Engine {
@@ -82,7 +104,13 @@ impl Engine {
             client.platform_name(),
             client.device_count()
         );
-        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()), stats: RefCell::new(EngineStats::default()) })
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RwLock::new(HashMap::new()),
+            compiling: Mutex::new(HashMap::new()),
+            stats: StatCells::default(),
+        })
     }
 
     /// Engine over the default artifacts directory.
@@ -95,43 +123,54 @@ impl Engine {
     }
 
     pub fn stats(&self) -> EngineStats {
-        *self.stats.borrow()
+        EngineStats {
+            compiles: self.stats.compiles.load(Ordering::Relaxed),
+            executions: self.stats.executions.load(Ordering::Relaxed),
+            compile_secs: self.stats.compile_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            execute_secs: self.stats.execute_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
     }
 
     /// Ensure an executable is compiled (warms the cache).
     pub fn prepare(&self, name: &str) -> Result<()> {
-        self.with_compiled(name, |_| Ok(()))
+        self.compiled(name).map(|_| ())
     }
 
-    fn with_compiled<R>(
-        &self,
-        name: &str,
-        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<R>,
-    ) -> Result<R> {
-        {
-            let cache = self.cache.borrow();
-            if let Some(exe) = cache.get(name) {
-                return f(exe);
-            }
+    /// Fetch (compiling at most once per name) the executable.
+    fn compiled(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.read().expect("engine cache poisoned").get(name) {
+            return Ok(exe.clone());
+        }
+        // Miss: serialize per name so concurrent callers compile once.
+        let gate = {
+            let mut compiling = self.compiling.lock().expect("compile-gate map poisoned");
+            compiling.entry(name.to_string()).or_default().clone()
+        };
+        let _gate = gate.lock().expect("compile gate poisoned");
+        // double-check under the gate: another thread may have won the race
+        if let Some(exe) = self.cache.read().expect("engine cache poisoned").get(name) {
+            return Ok(exe.clone());
         }
         let spec = self.manifest.exec(name)?;
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&spec.file)
             .map_err(|e| anyhow!("loading {}: {e}", spec.file.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
-        {
-            let mut st = self.stats.borrow_mut();
-            st.compiles += 1;
-            st.compile_secs += t0.elapsed().as_secs_f64();
-        }
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?,
+        );
+        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .compile_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         log::debug!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
-        let mut cache = self.cache.borrow_mut();
-        let exe = cache.entry(name.to_string()).or_insert(exe);
-        f(exe)
+        self.cache
+            .write()
+            .expect("engine cache poisoned")
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
     }
 
     fn check_inputs(spec: &ExecSpec, inputs: &[Value]) -> Result<()> {
@@ -160,7 +199,8 @@ impl Engine {
     }
 
     /// Execute `name` with positional inputs, returning positional f32
-    /// outputs as host tensors (all Heroes outputs are f32).
+    /// outputs as host tensors (all Heroes outputs are f32). Safe to call
+    /// from any number of threads concurrently.
     pub fn execute(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
         // borrow, don't clone: ExecSpec holds nested Vecs and this is the
         // hot path (§Perf iteration 1)
@@ -170,19 +210,18 @@ impl Engine {
             .iter()
             .map(|v| v.to_literal())
             .collect::<Result<_>>()?;
+        let exe = self.compiled(name)?;
         let t0 = Instant::now();
-        let result = self.with_compiled(name, |exe| {
-            exe.execute::<xla::Literal>(&literals)
-                .map_err(|e| anyhow!("executing {name}: {e}"))
-        })?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
         let out_lit = result[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
-        {
-            let mut st = self.stats.borrow_mut();
-            st.executions += 1;
-            st.execute_secs += t0.elapsed().as_secs_f64();
-        }
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .execute_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let parts = out_lit
             .to_tuple()
             .map_err(|e| anyhow!("decomposing result tuple of {name}: {e}"))?;
@@ -219,9 +258,16 @@ fn literal_to_tensor(lit: xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
 #[cfg(test)]
 mod tests {
     // Engine tests that require compiled artifacts live in
-    // rust/tests/integration_runtime.rs; the Value plumbing is testable
-    // standalone.
+    // rust/tests/integration_runtime.rs and integration_parallel.rs; the
+    // Value plumbing is testable standalone.
     use super::*;
+
+    #[test]
+    fn engine_is_send_and_sync() {
+        // the whole parallel round driver rests on this bound
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
+    }
 
     #[test]
     fn value_shape_dtype() {

@@ -124,6 +124,35 @@ impl Tensor {
         s
     }
 
+    /// Walk the flat offsets (into a tensor of shape `full`) of every
+    /// contiguous innermost row of the `sub` prefix region, in row-major
+    /// order of `sub`. The innermost axis of a row-major prefix region is
+    /// contiguous, so callers move whole rows at a time instead of
+    /// decomposing a multi-index per element (§Perf: this is the HeteroFL
+    /// payload-extraction/aggregation hot path).
+    fn for_each_prefix_row(full: &[usize], sub: &[usize], mut f: impl FnMut(usize)) {
+        let rank = sub.len();
+        let row = if rank == 0 { 1 } else { sub[rank - 1] };
+        if row == 0 || sub.iter().product::<usize>() == 0 {
+            return;
+        }
+        let outer: usize = sub[..rank.saturating_sub(1)].iter().product();
+        let strides = Self::strides(full);
+        let mut idx = vec![0usize; rank.saturating_sub(1)];
+        for _ in 0..outer {
+            let off: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+            f(off);
+            // odometer increment over the outer axes of `sub`
+            for d in (0..idx.len()).rev() {
+                idx[d] += 1;
+                if idx[d] < sub[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+    }
+
     /// Copy the leading `sub` region (per-axis prefix) out of self.
     /// HeteroFL extracts width-p sub-weights this way: `w[..ci, ..co]`.
     pub fn slice_prefix(&self, sub: &[usize]) -> Tensor {
@@ -132,21 +161,13 @@ impl Tensor {
             assert!(s <= full, "prefix {sub:?} exceeds {:?}", self.shape);
         }
         let mut out = Tensor::zeros(sub);
-        let src_strides = Self::strides(&self.shape);
-        let dst_strides = Self::strides(sub);
-        let n: usize = sub.iter().product();
         let rank = sub.len();
-        let mut idx = vec![0usize; rank];
-        for flat in 0..n {
-            // decompose flat into multi-index over `sub`
-            let mut rem = flat;
-            for d in 0..rank {
-                idx[d] = rem / dst_strides[d];
-                rem %= dst_strides[d];
-            }
-            let src: usize = idx.iter().zip(&src_strides).map(|(i, s)| i * s).sum();
-            out.data[flat] = self.data[src];
-        }
+        let row = if rank == 0 { 1 } else { sub[rank - 1] };
+        let mut dst = 0usize;
+        Self::for_each_prefix_row(&self.shape, sub, |src| {
+            out.data[dst..dst + row].copy_from_slice(&self.data[src..src + row]);
+            dst += row;
+        });
         out
     }
 
@@ -156,21 +177,24 @@ impl Tensor {
     pub fn scatter_prefix_add(&mut self, sub: &Tensor, counts: &mut [u32]) {
         assert_eq!(sub.shape.len(), self.shape.len(), "rank mismatch");
         assert_eq!(counts.len(), self.data.len(), "counts length mismatch");
-        let src_strides = Self::strides(&sub.shape);
-        let dst_strides = Self::strides(&self.shape);
-        let n = sub.data.len();
-        let rank = sub.shape.len();
-        let mut idx = vec![0usize; rank];
-        for flat in 0..n {
-            let mut rem = flat;
-            for d in 0..rank {
-                idx[d] = rem / src_strides[d];
-                rem %= src_strides[d];
-            }
-            let dst: usize = idx.iter().zip(&dst_strides).map(|(i, s)| i * s).sum();
-            self.data[dst] += sub.data[flat];
-            counts[dst] += 1;
+        for (s, full) in sub.shape.iter().zip(&self.shape) {
+            assert!(s <= full, "prefix {:?} exceeds {:?}", sub.shape, self.shape);
         }
+        let rank = sub.shape.len();
+        let row = if rank == 0 { 1 } else { sub.shape[rank - 1] };
+        let mut src = 0usize;
+        let data = &mut self.data;
+        Self::for_each_prefix_row(&self.shape, &sub.shape, |dst| {
+            for ((d, c), s) in data[dst..dst + row]
+                .iter_mut()
+                .zip(&mut counts[dst..dst + row])
+                .zip(&sub.data[src..src + row])
+            {
+                *d += *s;
+                *c += 1;
+            }
+            src += row;
+        });
     }
 }
 
@@ -285,6 +309,69 @@ mod tests {
         // slice back out equals 2x the sub
         let back = full.slice_prefix(&[2, 2]);
         assert_eq!(back.data(), &[2.0, 4.0, 6.0, 8.0]);
+    }
+
+    /// Naive per-element reference for the fast row-copy implementations.
+    fn slice_prefix_ref(t: &Tensor, sub: &[usize]) -> Tensor {
+        let mut out = Tensor::zeros(sub);
+        let src_strides = Tensor::strides(t.shape());
+        let dst_strides = Tensor::strides(sub);
+        let rank = sub.len();
+        for flat in 0..out.len() {
+            let mut rem = flat;
+            let mut src = 0;
+            for d in 0..rank {
+                src += (rem / dst_strides[d]) * src_strides[d];
+                rem %= dst_strides[d];
+            }
+            out.data[flat] = t.data[src];
+        }
+        out
+    }
+
+    #[test]
+    fn prefix_slice_matches_reference_on_awkward_shapes() {
+        let mut rng = Rng::new(11);
+        for (shape, sub) in [
+            (vec![7], vec![3]),
+            (vec![7], vec![7]),
+            (vec![5, 6], vec![1, 6]),
+            (vec![5, 6], vec![5, 1]),
+            (vec![3, 3, 4, 6], vec![3, 3, 2, 3]),
+            (vec![2, 1, 3], vec![2, 1, 2]),
+            (vec![4, 4], vec![0, 4]),
+            (vec![4, 4], vec![4, 0]),
+        ] {
+            let t = Tensor::randn(&shape, 1.0, &mut rng);
+            let fast = t.slice_prefix(&sub);
+            let slow = slice_prefix_ref(&t, &sub);
+            assert_eq!(fast.shape(), slow.shape(), "{shape:?} -> {sub:?}");
+            assert_eq!(fast.data(), slow.data(), "{shape:?} -> {sub:?}");
+        }
+    }
+
+    #[test]
+    fn scatter_prefix_matches_slice_roundtrip_on_awkward_shapes() {
+        let mut rng = Rng::new(12);
+        for (shape, sub) in [
+            (vec![7], vec![3]),
+            (vec![5, 6], vec![2, 3]),
+            (vec![3, 3, 4, 6], vec![3, 3, 2, 3]),
+        ] {
+            let src = Tensor::randn(&sub, 1.0, &mut rng);
+            let mut full = Tensor::zeros(&shape);
+            let mut counts = vec![0u32; full.len()];
+            full.scatter_prefix_add(&src, &mut counts);
+            // scattering then slicing back must be the identity
+            assert_eq!(full.slice_prefix(&sub).data(), src.data(), "{shape:?} <- {sub:?}");
+            // counts: exactly the prefix region is 1, the rest 0
+            let ones: u32 = counts.iter().sum();
+            assert_eq!(ones as usize, src.len());
+            // untouched elements stay zero
+            let total: f64 = full.data().iter().map(|x| *x as f64).sum();
+            let expect: f64 = src.data().iter().map(|x| *x as f64).sum();
+            assert!((total - expect).abs() < 1e-4);
+        }
     }
 
     #[test]
