@@ -2,7 +2,7 @@
 //! (harness = false; bench-lite). Skips gracefully without artifacts.
 
 use heroes::experiments::{run_experiment, ExpCtx};
-use heroes::runtime::{Engine, Manifest};
+use heroes::runtime::{EnginePool, Manifest};
 use heroes::util::bench::Bench;
 use heroes::util::cli::Args;
 
@@ -12,7 +12,7 @@ fn main() {
         println!("(artifacts missing — run `make artifacts`)");
         return;
     }
-    let engine = Engine::new(Manifest::load(&dir).unwrap()).unwrap();
+    let pool = EnginePool::single(Manifest::load(&dir).unwrap()).unwrap();
     // miniature world: a few clients, a few rounds — the bench measures
     // the harness end-to-end, the real figures come from `heroes exp`.
     let args = Args::parse_from(
@@ -21,7 +21,7 @@ fn main() {
             .iter().map(|s| s.to_string()),
     );
     let ctx = ExpCtx {
-        engine: &engine,
+        pool: &pool,
         scale: heroes::config::Scale::Smoke,
         args,
         out_dir: std::env::temp_dir().join("heroes_bench_results"),

@@ -13,7 +13,7 @@ use heroes::coordinator::frequency::Estimates;
 use heroes::coordinator::ledger::BlockLedger;
 use heroes::data::synth_image::ImageGen;
 use heroes::model::ComposedGlobal;
-use heroes::runtime::{Engine, Manifest, Value};
+use heroes::runtime::{EnginePool, EngineStats, Manifest, Value};
 use heroes::simulation::LinkSample;
 use heroes::tensor::blocks::{gather_blocks, scatter_blocks_add};
 use heroes::tensor::Tensor;
@@ -58,14 +58,15 @@ fn main() {
         println!("(artifacts missing — run `make artifacts` for the PJRT benches)");
         return;
     }
-    let engine = Engine::new(Manifest::load(&dir).unwrap()).unwrap();
+    let pool = EnginePool::single(Manifest::load(&dir).unwrap()).unwrap();
+    let engine = pool.primary();
     let info = engine.manifest().model("cnn").unwrap().clone();
     let cfg = ExperimentConfig::preset("cnn", Scale::Smoke);
 
     // round planning
     let ctrl = ControllerCfg {
         mu_max: cfg.mu_max, rho: cfg.rho, eta: 0.1, epsilon: cfg.epsilon,
-        tau_min: 1, tau_max: 60, tau_floor: 10, h_max: 1_000_000,
+        tau_min: 1, tau_max: 60, tau_floor: 10, h_max: 1_000_000, beta_sq: 1e-3,
     };
     let est = Estimates { l: 2.0, sigma_sq: 0.5, g_sq: 1.0, loss: 2.0 };
     let statuses: Vec<ClientStatus> = (0..10)
@@ -77,7 +78,7 @@ fn main() {
         .collect();
     b.run("coordinator/plan_round K=10", |_| {
         let mut ledger = BlockLedger::new(&info);
-        plan_round(&info, &ctrl, &est, &statuses, &mut ledger)
+        plan_round(&info, &ctrl, &est, &statuses, &mut ledger).unwrap()
     });
 
     // aggregation of K=10 full-width updates
@@ -118,9 +119,12 @@ fn main() {
             engine.execute(&name, &inputs).unwrap()
         });
     }
-    // ---- parallel round driver: 16-client fleet, workers=1 vs 4 ----
-    // The per-round wall clock should drop with workers (the simulated
-    // *virtual* time is byte-identical — see coordinator::round docs).
+    // ---- parallel round driver: 16-client fleet ----
+    // workers=1 vs 4 on one shared engine, then workers=4 over a
+    // per-worker engine pool: pooled must be no slower than shared (the
+    // pool removes intra-op contention on one PJRT client). The simulated
+    // *virtual* time is byte-identical across all three — see
+    // coordinator::round docs.
     let mut cfg16 = ExperimentConfig::preset("cnn", Scale::Smoke);
     cfg16.n_clients = 16;
     cfg16.k_per_round = 16;
@@ -128,17 +132,25 @@ fn main() {
     cfg16.test_samples = 64;
     cfg16.tau_default = 2;
     let bq = Bench::quick();
-    for workers in [1usize, 4] {
+    let warm = Manifest::train_name("cnn", info.cap_p, false);
+    let mut driver_stats = Vec::new();
+    for (workers, engines) in [(1usize, 1usize), (4, 1), (4, 4)] {
         cfg16.workers = workers;
-        let mut env = FlEnv::build(&engine, cfg16.clone()).unwrap();
+        let bench_pool = EnginePool::new(Manifest::load(&dir).unwrap(), engines).unwrap();
+        bench_pool.prepare_all(&[warm.as_str()]).unwrap();
+        let mut env = FlEnv::build(&bench_pool, cfg16.clone()).unwrap();
         let mut srng = Rng::new(cfg16.seed ^ 0x5EED);
         let mut server = DenseServer::fedavg(&info, &cfg16, &mut srng).unwrap();
-        bq.run(&format!("driver/round K=16 fedavg workers={workers}"), |_| {
-            server.run_round(&mut env).unwrap()
-        });
+        bq.run(
+            &format!("driver/round K=16 fedavg workers={workers} engines={engines}"),
+            |_| server.run_round(&mut env).unwrap(),
+        );
+        driver_stats.push(bench_pool.stats());
     }
 
-    let st = engine.stats();
+    // totals over everything this bench executed: the shared micro-bench
+    // pool plus each driver config's own pool
+    let st = EngineStats::merged(std::iter::once(pool.stats()).chain(driver_stats));
     println!(
         "engine totals: {} compiles ({:.2}s), {} executions ({:.3}ms mean)",
         st.compiles,

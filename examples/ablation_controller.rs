@@ -14,16 +14,16 @@ use heroes::baselines::make_strategy;
 use heroes::baselines::Strategy;
 use heroes::config::{ExperimentConfig, Scale};
 use heroes::coordinator::env::FlEnv;
-use heroes::runtime::{Engine, Manifest};
+use heroes::runtime::{EnginePool, Manifest};
 use heroes::util::rng::Rng;
 
 fn run_variant(
-    engine: &Engine,
+    pool: &EnginePool,
     cfg: &ExperimentConfig,
     label: &str,
     scheme: &str,
 ) -> anyhow::Result<()> {
-    let mut env = FlEnv::build(engine, cfg.clone())?;
+    let mut env = FlEnv::build(pool, cfg.clone())?;
     let mut rng = Rng::new(cfg.seed ^ 0x5EED);
     let mut s = make_strategy(scheme, &env.info, cfg, &mut rng)?;
     let mut waits = Vec::new();
@@ -43,19 +43,19 @@ fn run_variant(
 
 fn main() -> anyhow::Result<()> {
     heroes::util::logging::init_from_env();
-    let engine = Engine::new(Manifest::load(&Manifest::default_dir())?)?;
+    let pool = EnginePool::single(Manifest::load(&Manifest::default_dir())?)?;
     let mut cfg = ExperimentConfig::preset("cnn", Scale::Smoke);
     cfg.rounds = 25;
 
-    run_variant(&engine, &cfg, "heroes (full)", "heroes")?;
+    run_variant(&pool, &cfg, "heroes (full)", "heroes")?;
 
     // no adaptive τ: collapse the controller's freedom to a single value
     let mut fixed = cfg.clone();
     fixed.tau_min = fixed.tau_default;
     fixed.tau_max = fixed.tau_default;
-    run_variant(&engine, &fixed, "heroes w/o adaptive τ", "heroes")?;
+    run_variant(&pool, &fixed, "heroes w/o adaptive τ", "heroes")?;
 
-    run_variant(&engine, &cfg, "flanc (original NC)", "flanc")?;
-    run_variant(&engine, &cfg, "fedavg", "fedavg")?;
+    run_variant(&pool, &cfg, "flanc (original NC)", "flanc")?;
+    run_variant(&pool, &cfg, "fedavg", "fedavg")?;
     Ok(())
 }

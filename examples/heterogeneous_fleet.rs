@@ -11,12 +11,12 @@ use heroes::baselines::make_strategy;
 use heroes::baselines::Strategy;
 use heroes::config::{ExperimentConfig, Scale};
 use heroes::coordinator::env::FlEnv;
-use heroes::runtime::{Engine, Manifest};
+use heroes::runtime::{EnginePool, Manifest};
 use heroes::simulation::DeviceClass;
 use heroes::util::rng::Rng;
 
-fn run(engine: &Engine, cfg: &ExperimentConfig, scheme: &str) -> anyhow::Result<()> {
-    let mut env = FlEnv::build(engine, cfg.clone())?;
+fn run(pool: &EnginePool, cfg: &ExperimentConfig, scheme: &str) -> anyhow::Result<()> {
+    let mut env = FlEnv::build(pool, cfg.clone())?;
 
     // Show the fleet composition once.
     if scheme == "heroes" {
@@ -55,7 +55,7 @@ fn run(engine: &Engine, cfg: &ExperimentConfig, scheme: &str) -> anyhow::Result<
 
 fn main() -> anyhow::Result<()> {
     heroes::util::logging::init_from_env();
-    let engine = Engine::new(Manifest::load(&Manifest::default_dir())?)?;
+    let pool = EnginePool::single(Manifest::load(&Manifest::default_dir())?)?;
     let mut cfg = ExperimentConfig::preset("cnn", Scale::Smoke);
     cfg.rounds = 25;
     println!(
@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         cfg.n_clients, cfg.k_per_round
     );
     for scheme in ["fedavg", "heterofl", "heroes"] {
-        run(&engine, &cfg, scheme)?;
+        run(&pool, &cfg, scheme)?;
     }
     println!("\nsame rounds — Heroes spends far less simulated time and traffic.");
     Ok(())

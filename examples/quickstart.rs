@@ -12,14 +12,14 @@ use heroes::baselines::Strategy;
 use heroes::config::{ExperimentConfig, Scale};
 use heroes::coordinator::env::FlEnv;
 use heroes::coordinator::server::HeroesServer;
-use heroes::runtime::{Engine, Manifest};
+use heroes::runtime::{EnginePool, Manifest};
 use heroes::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     heroes::util::logging::init_from_env();
 
     // 1. Load the AOT artifacts (HLO text + manifest) and start PJRT.
-    let engine = Engine::new(Manifest::load(&Manifest::default_dir())?)?;
+    let pool = EnginePool::single(Manifest::load(&Manifest::default_dir())?)?;
 
     // 2. Configure a small federated world.
     let mut cfg = ExperimentConfig::preset("cnn", Scale::Smoke);
@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     cfg.k_per_round = 5;
     cfg.samples_per_client = 40;
     cfg.rounds = 20;
-    let mut env = FlEnv::build(&engine, cfg.clone())?;
+    let mut env = FlEnv::build(&pool, cfg.clone())?;
 
     // 3. The Heroes parameter server (paper Alg. 1).
     let mut rng = Rng::new(cfg.seed);

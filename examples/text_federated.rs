@@ -13,12 +13,12 @@ use heroes::baselines::make_strategy;
 use heroes::baselines::Strategy;
 use heroes::config::{ExperimentConfig, Scale};
 use heroes::coordinator::env::FlEnv;
-use heroes::runtime::{Engine, Manifest};
+use heroes::runtime::{EnginePool, Manifest};
 use heroes::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     heroes::util::logging::init_from_env();
-    let engine = Engine::new(Manifest::load(&Manifest::default_dir())?)?;
+    let pool = EnginePool::single(Manifest::load(&Manifest::default_dir())?)?;
 
     let mut cfg = ExperimentConfig::preset("rnn", Scale::Smoke);
     cfg.n_clients = 12;
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     for scheme in ["fedavg", "flanc", "heroes"] {
-        let mut env = FlEnv::build(&engine, cfg.clone())?;
+        let mut env = FlEnv::build(&pool, cfg.clone())?;
         let mut rng = Rng::new(cfg.seed ^ 0x5EED);
         let mut s = make_strategy(scheme, &env.info, &cfg, &mut rng)?;
         let (_, acc0) = s.evaluate(&env)?;

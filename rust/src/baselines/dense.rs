@@ -17,12 +17,12 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::aggregate::DenseAccumulator;
 use crate::coordinator::env::FlEnv;
 use crate::coordinator::frequency::completion_time;
-use crate::coordinator::round::{collect_round, LocalTask, RoundDriver};
+use crate::coordinator::round::{collect_round, LocalTask, RoundDriver, TaskOutcome};
 use crate::coordinator::RoundReport;
 use crate::model::DenseGlobal;
 use crate::runtime::{Manifest, ModelInfo};
 use crate::util::rng::Rng;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 /// Width assignment policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,6 +42,15 @@ pub enum TauPolicy {
     Adaptive { round_budget: f64 },
 }
 
+/// A dense scheme's pending round: widths + the per-round identical τ,
+/// both functions of the sampled statuses only (never of the previous
+/// round's outcomes), so phase A computes them in full.
+struct PendingDense {
+    /// (client, p, μ, ν) per participant, sampling order
+    work: Vec<(usize, usize, f64, f64)>,
+    tau: usize,
+}
+
 /// Parameterized dense-model PS.
 pub struct DenseServer {
     pub global: DenseGlobal,
@@ -55,6 +64,8 @@ pub struct DenseServer {
     mu_max: f64,
     tau_bounds: (usize, usize),
     round: usize,
+    /// phase-A output awaiting `take_tasks`
+    pending: Option<PendingDense>,
 }
 
 impl DenseServer {
@@ -78,6 +89,7 @@ impl DenseServer {
             mu_max: cfg.mu_max,
             tau_bounds: (cfg.tau_min, cfg.tau_max),
             round: 0,
+            pending: None,
         })
     }
 
@@ -122,8 +134,17 @@ impl Strategy for DenseServer {
         self.scheme
     }
 
-    fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport> {
-        let info = env.info.clone();
+    fn driver(&self) -> RoundDriver {
+        self.driver
+    }
+
+    /// Phase A: sampling, statuses, widths and the per-round identical τ
+    /// — nothing here depends on previous outcomes, so the driver may run
+    /// it while the previous round drains.
+    fn plan_ahead(&mut self, env: &mut FlEnv) -> Result<()> {
+        if self.pending.is_some() {
+            return Err(anyhow!("plan_ahead called twice without take_tasks"));
+        }
         let clients = env.sample_clients();
         let statuses: Vec<_> = clients.iter().map(|&c| env.status(c)).collect();
 
@@ -131,8 +152,8 @@ impl Strategy for DenseServer {
         let work: Vec<(usize, usize, f64, f64)> = statuses
             .iter()
             .map(|s| {
-                let (p, mu) = self.assign_width(&info, s.q_flops);
-                let nu = s.link.upload_time(info.bytes_dense[&p]);
+                let (p, mu) = self.assign_width(&env.info, s.q_flops);
+                let nu = s.link.upload_time(env.info.bytes_dense[&p]);
                 (s.client, p, mu, nu)
             })
             .collect();
@@ -147,7 +168,16 @@ impl Strategy for DenseServer {
                 (t.max(1.0) as usize).clamp(self.tau_bounds.0, self.tau_bounds.1)
             }
         };
+        self.pending = Some(PendingDense { work, tau });
+        Ok(())
+    }
 
+    /// Phase B: payloads + batch streams against the current global.
+    fn take_tasks(&mut self, env: &FlEnv) -> Result<Vec<LocalTask>> {
+        let PendingDense { work, tau } = self
+            .pending
+            .take()
+            .ok_or_else(|| anyhow!("take_tasks without a preceding plan_ahead"))?;
         let lr_h = crate::coordinator::scheduled_lr(self.lr, self.round, self.lr_decay_rounds);
         let mut tasks = Vec::with_capacity(work.len());
         for &(client, p, mu, nu) in &work {
@@ -158,16 +188,18 @@ impl Strategy for DenseServer {
                 lr: lr_h,
                 train_exec: Manifest::train_name(&self.family, p, false),
                 probe_exec: None,
-                payload: self.global.reduced_inputs(&info, p)?,
+                payload: self.global.reduced_inputs(&env.info, p)?,
                 stream: env.batch_stream(client, self.round),
-                bytes: info.bytes_dense[&p],
+                bytes: env.info.bytes_dense[&p],
                 completion: completion_time(tau, mu, nu),
             });
         }
+        Ok(tasks)
+    }
 
-        let outcomes = self.driver.run(env.engine, tasks)?;
-
-        // overlap-aware aggregation in assignment order
+    /// Phase C: overlap-aware aggregation in assignment order.
+    fn finish_round(&mut self, env: &mut FlEnv, outcomes: Vec<TaskOutcome>) -> Result<RoundReport> {
+        let info = env.info.clone();
         let mut acc = DenseAccumulator::new(&info, &self.global);
         for o in &outcomes {
             acc.push(o.p, &o.result.params)?;

@@ -14,7 +14,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::assignment::assign_width;
 use crate::coordinator::env::FlEnv;
 use crate::coordinator::frequency::completion_time;
-use crate::coordinator::round::{collect_round, LocalTask, RoundDriver};
+use crate::coordinator::round::{collect_round, LocalTask, RoundDriver, TaskOutcome};
 use crate::coordinator::RoundReport;
 use crate::model::init_params;
 use crate::runtime::{Manifest, ModelInfo};
@@ -36,6 +36,8 @@ pub struct FlancServer {
     mu_max: f64,
     tau: usize,
     round: usize,
+    /// phase-A output (client, p, μ, ν) awaiting `take_tasks`
+    pending: Option<Vec<(usize, usize, f64, f64)>>,
 }
 
 impl FlancServer {
@@ -71,6 +73,7 @@ impl FlancServer {
             mu_max: cfg.mu_max,
             tau: cfg.tau_default,
             round: 0,
+            pending: None,
         })
     }
 
@@ -91,32 +94,60 @@ impl Strategy for FlancServer {
         "flanc"
     }
 
-    fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport> {
-        let info = env.info.clone();
+    fn driver(&self) -> RoundDriver {
+        self.driver
+    }
+
+    /// Phase A: sampling, statuses and widths (fixed τ, so the entire
+    /// plan is outcome-independent).
+    fn plan_ahead(&mut self, env: &mut FlEnv) -> Result<()> {
+        if self.pending.is_some() {
+            return Err(anyhow!("plan_ahead called twice without take_tasks"));
+        }
         let clients = env.sample_clients();
         let statuses: Vec<_> = clients.iter().map(|&c| env.status(c)).collect();
-        let l = info.layers.len();
-        let lr_h = crate::coordinator::scheduled_lr(self.lr, self.round, self.lr_decay_rounds);
+        let work = statuses
+            .iter()
+            .map(|s| {
+                let (p, mu) = assign_width(&env.info, s.q_flops, self.mu_max);
+                let nu = s.link.upload_time(env.info.bytes_composed[&p]);
+                (s.client, p, mu, nu)
+            })
+            .collect();
+        self.pending = Some(work);
+        Ok(())
+    }
 
-        let mut tasks = Vec::with_capacity(statuses.len());
-        for s in &statuses {
-            let (p, mu) = assign_width(&info, s.q_flops, self.mu_max);
-            let nu = s.link.upload_time(info.bytes_composed[&p]);
+    /// Phase B: payloads (basis + per-width coefficient) + streams.
+    fn take_tasks(&mut self, env: &FlEnv) -> Result<Vec<LocalTask>> {
+        let work = self
+            .pending
+            .take()
+            .ok_or_else(|| anyhow!("take_tasks without a preceding plan_ahead"))?;
+        let lr_h = crate::coordinator::scheduled_lr(self.lr, self.round, self.lr_decay_rounds);
+        let mut tasks = Vec::with_capacity(work.len());
+        for &(client, p, mu, nu) in &work {
             tasks.push(LocalTask {
-                client: s.client,
+                client,
                 p,
                 tau: self.tau,
                 lr: lr_h,
                 train_exec: Manifest::train_name(&self.family, p, true),
                 probe_exec: None,
                 payload: self.payload(p),
-                stream: env.batch_stream(s.client, self.round),
-                bytes: info.bytes_composed[&p],
+                stream: env.batch_stream(client, self.round),
+                bytes: env.info.bytes_composed[&p],
                 completion: completion_time(self.tau, mu, nu),
             });
         }
+        Ok(tasks)
+    }
 
-        let outcomes = self.driver.run(env.engine, tasks)?;
+    /// Phase C: basis averaged over all K, coefficients within
+    /// same-width groups only.
+    fn finish_round(&mut self, env: &mut FlEnv, outcomes: Vec<TaskOutcome>) -> Result<RoundReport> {
+        let info = env.info.clone();
+        let l = info.layers.len();
 
         // basis averaged over all K; coefficients within same-width groups
         let mut basis_sum: Vec<Tensor> = self.bases.iter().map(|v| Tensor::zeros(v.shape())).collect();

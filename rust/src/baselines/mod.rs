@@ -19,14 +19,50 @@ pub use dense::{DenseServer, TauPolicy, WidthPolicy};
 pub use flanc::FlancServer;
 
 use crate::coordinator::env::FlEnv;
+use crate::coordinator::round::{LocalTask, RoundDriver, TaskOutcome};
 use crate::coordinator::RoundReport;
 use anyhow::Result;
 
 /// A federated scheme driving rounds against a shared environment.
+///
+/// A round decomposes into three hook phases so the round driver can
+/// pipeline consecutive rounds (`coordinator::round`, "Overlapped
+/// execution"):
+///
+/// * [`Strategy::plan_ahead`] (phase A) samples participants, collects
+///   statuses and runs any outcome-independent width/τ planning, stashing
+///   the pending plan inside the scheme. **Contract:** phase A is the
+///   only phase that consumes the env's RNG, and it must not read state
+///   that [`Strategy::finish_round`] mutates (global model, estimate
+///   trackers, the round counter) — that is what makes `plan_ahead` for
+///   round *h+1* commute with `finish_round` for round *h*, keeping
+///   overlapped and serial execution byte-identical.
+/// * [`Strategy::take_tasks`] (phase B) materializes the pending plan
+///   into ordered dispatchable tasks against the scheme's *current*
+///   global state (payloads, batch streams, this round's lr).
+/// * [`Strategy::finish_round`] (phase C) folds the assignment-ordered
+///   outcomes into the global model, the env's meters and the scheme's
+///   trackers, emitting the round report.
+///
+/// [`Strategy::run_round`] is the serial composition A→B→dispatch→C.
 pub trait Strategy {
     fn name(&self) -> &'static str;
-    /// Execute one synchronous round.
-    fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport>;
+    /// The scheme's dispatch configuration (worker count).
+    fn driver(&self) -> RoundDriver;
+    /// Phase A — overlappable planning for the scheme's next round.
+    fn plan_ahead(&mut self, env: &mut FlEnv) -> Result<()>;
+    /// Phase B — materialize the pending plan into dispatchable tasks.
+    fn take_tasks(&mut self, env: &FlEnv) -> Result<Vec<LocalTask>>;
+    /// Phase C — aggregate assignment-ordered outcomes, emit the report.
+    fn finish_round(&mut self, env: &mut FlEnv, outcomes: Vec<TaskOutcome>) -> Result<RoundReport>;
+    /// Execute one synchronous round (A→B→dispatch→C). One definition
+    /// for every scheme — the phases are the per-scheme parts.
+    fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport> {
+        self.plan_ahead(env)?;
+        let tasks = self.take_tasks(env)?;
+        let outcomes = self.driver().run(env.pool, tasks)?;
+        self.finish_round(env, outcomes)
+    }
     /// Evaluate the current global model: (test loss, test accuracy).
     fn evaluate(&self, env: &FlEnv) -> Result<(f64, f64)>;
     /// Current block-variance diagnostic (0 for schemes without a ledger).
@@ -40,8 +76,20 @@ impl Strategy for crate::coordinator::server::HeroesServer {
         "heroes"
     }
 
-    fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport> {
-        HeroesServer::run_round(self, env)
+    fn driver(&self) -> RoundDriver {
+        HeroesServer::driver(self)
+    }
+
+    fn plan_ahead(&mut self, env: &mut FlEnv) -> Result<()> {
+        HeroesServer::plan_ahead(self, env)
+    }
+
+    fn take_tasks(&mut self, env: &FlEnv) -> Result<Vec<LocalTask>> {
+        HeroesServer::take_tasks(self, env)
+    }
+
+    fn finish_round(&mut self, env: &mut FlEnv, outcomes: Vec<TaskOutcome>) -> Result<RoundReport> {
+        HeroesServer::finish_round(self, env, outcomes)
     }
 
     fn evaluate(&self, env: &FlEnv) -> Result<(f64, f64)> {

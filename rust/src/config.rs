@@ -101,6 +101,26 @@ pub struct ExperimentConfig {
     /// results (see the driver's determinism contract), so this knob only
     /// trades wall-clock for cores.
     pub workers: usize,
+    /// PJRT engines in the pool (`runtime::pool`): one per worker avoids
+    /// intra-op contention on a single client. 0 (default) = match
+    /// `workers`; 1 = the old shared-engine behaviour. Byte-identical for
+    /// any value — engines only execute.
+    pub pool_engines: usize,
+    /// Overlap round *h+1*'s planning with round *h*'s stragglers
+    /// (`RoundDriver::run_overlapped`). Byte-identical to the
+    /// non-overlapped loop; purely a wall-clock knob.
+    pub overlap: bool,
+}
+
+/// The pool-sizing rule, shared by `ExperimentConfig::pool_size` and
+/// callers that size a pool straight from CLI flags (before any config
+/// exists): 0 requested engines means one per worker.
+pub fn resolve_pool_size(workers: usize, pool_engines: usize) -> usize {
+    if pool_engines == 0 {
+        workers
+    } else {
+        pool_engines
+    }
 }
 
 impl ExperimentConfig {
@@ -152,7 +172,15 @@ impl ExperimentConfig {
             up_mbps: (1.0 / 30.0, 5.0 / 30.0),
             down_mbps: (10.0 / 30.0, 20.0 / 30.0),
             workers: 1,
+            pool_engines: 0,
+            overlap: false,
         }
+    }
+
+    /// Engines the runtime pool should hold for this config
+    /// (`pool_engines`, defaulting to one per worker).
+    pub fn pool_size(&self) -> usize {
+        resolve_pool_size(self.workers, self.pool_engines)
     }
 
     /// Apply CLI overrides (`--clients`, `--k`, `--rounds`, `--lr`,
@@ -181,6 +209,10 @@ impl ExperimentConfig {
             args.get_f64("down-hi", self.down_mbps.1)?,
         );
         self.workers = args.get_usize("workers", self.workers)?;
+        self.pool_engines = args.get_usize("pool", self.pool_engines)?;
+        if args.flag("overlap") {
+            self.overlap = true;
+        }
         if let Some(g) = args.get("gamma") {
             self.partition = Partition::Gamma(g.parse().map_err(|_| anyhow!("bad --gamma"))?);
         }
@@ -208,6 +240,10 @@ impl ExperimentConfig {
         c.rho = grab_f64("rho", c.rho);
         c.tau_default = grab_usize("tau", c.tau_default);
         c.workers = grab_usize("workers", c.workers);
+        c.pool_engines = grab_usize("pool", c.pool_engines);
+        if let Some(o) = j.get("overlap").and_then(Json::as_bool) {
+            c.overlap = o;
+        }
         if let Some(g) = j.get("gamma").and_then(Json::as_f64) {
             c.partition = Partition::Gamma(g);
         }
@@ -285,6 +321,28 @@ mod tests {
         let mut bad = ExperimentConfig::preset("cnn", Scale::Smoke);
         bad.workers = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn pool_and_overlap_knobs() {
+        let base = ExperimentConfig::preset("cnn", Scale::Smoke);
+        assert_eq!(base.pool_engines, 0);
+        assert!(!base.overlap);
+        assert_eq!(base.pool_size(), base.workers, "pool defaults to one engine per worker");
+
+        let args = Args::parse_from(
+            ["--workers", "4", "--pool", "2", "--overlap"].iter().map(|s| s.to_string()),
+        );
+        let c = ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&args).unwrap();
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.pool_engines, 2);
+        assert_eq!(c.pool_size(), 2);
+        assert!(c.overlap);
+
+        let j = crate::util::json::parse(r#"{"workers": 3, "pool": 3, "overlap": true}"#).unwrap();
+        let c = ExperimentConfig::from_json("cnn", Scale::Smoke, &j).unwrap();
+        assert_eq!((c.workers, c.pool_size()), (3, 3));
+        assert!(c.overlap);
     }
 
     #[test]

@@ -6,9 +6,10 @@
 //!
 //! 1. **Width assignment** (l.6-11): grow every client's width while the
 //!    projected per-iteration time stays under μ^max.
-//! 2. **Fastest-client selection** (l.12-14): for each client, assume it
-//!    is the fastest, solve Eq. 27 for H* and rank by projected total
-//!    completion time.
+//! 2. **Fastest-client selection** (l.12-14): solve Eq. 27 for H* once —
+//!    it depends on the estimates, ε and the observed β² (Eq. 23's 6L²β²
+//!    floor), not on any client's (μ, ν) — then rank clients by the
+//!    projected total time to carry that horizon.
 //! 3. **Frequency + block assignment** (l.15-22): the fastest client gets
 //!    the bound-optimal τ*; everyone else gets the τ inside the Eq. 24
 //!    bracket that minimizes the block-count variance V^h; block
@@ -21,6 +22,7 @@ use crate::coordinator::frequency::{
 use crate::coordinator::ledger::{BlockLedger, Selection};
 use crate::runtime::ModelInfo;
 use crate::simulation::LinkSample;
+use anyhow::{anyhow, Result};
 
 /// Controller knobs (paper §V inputs), extracted from ExperimentConfig.
 #[derive(Debug, Clone, Copy)]
@@ -40,6 +42,12 @@ pub struct ControllerCfg {
     pub tau_floor: usize,
     /// cap for the H* search
     pub h_max: usize,
+    /// β² — the coefficient-reduction error bound of Eq. 23, whose 6L²β²
+    /// term floors the reachable convergence target. The Heroes server
+    /// feeds this from the *observed* block-training imbalance
+    /// (`BlockLedger::relative_variance`) each round; 0 recovers the
+    /// idealized no-reduction-error bound.
+    pub beta_sq: f64,
 }
 
 /// A client's observed status for the round (Alg. 1 line 4).
@@ -94,14 +102,18 @@ pub fn assign_width(info: &ModelInfo, q_flops: f64, mu_max: f64) -> (usize, f64)
 }
 
 /// Plan a full round (mutates the ledger exactly as Alg. 1 does).
+/// Errs on an empty cohort — index 0 into an empty plan would panic in
+/// every downstream consumer.
 pub fn plan_round(
     info: &ModelInfo,
     cfg: &ControllerCfg,
     est: &Estimates,
     statuses: &[ClientStatus],
     ledger: &mut BlockLedger,
-) -> RoundPlan {
-    assert!(!statuses.is_empty(), "cannot plan an empty round");
+) -> Result<RoundPlan> {
+    if statuses.is_empty() {
+        return Err(anyhow!("cannot plan a round with an empty cohort"));
+    }
 
     // 1. widths + per-round cost components
     let mut partial: Vec<(ClientStatus, usize, f64, f64)> = statuses
@@ -113,17 +125,18 @@ pub fn plan_round(
         })
         .collect();
 
-    // 2. fastest-client selection via Eq. 27
+    // 2. fastest-client selection via Eq. 27. H* depends only on the
+    // estimates / ε / β² — not on the candidate's (μ, ν) — so it is
+    // solved once, not K times; clients are then ranked by the projected
+    // total time they would need to carry that horizon.
+    let h_star = solve_rounds(est, cfg.epsilon, cfg.beta_sq, cfg.h_max);
     let mut fastest = 0;
     let mut best_total = f64::INFINITY;
-    let mut h_star = 1;
     for (i, (_, _, mu, nu)) in partial.iter().enumerate() {
-        let h_n = solve_rounds(est, cfg.epsilon, 0.0, cfg.h_max);
-        let t_n = projected_total_time(est, cfg.eta, h_n, *mu, *nu);
+        let t_n = projected_total_time(est, cfg.eta, h_star, *mu, *nu);
         if t_n < best_total {
             best_total = t_n;
             fastest = i;
-            h_star = h_n;
         }
     }
 
@@ -183,7 +196,7 @@ pub fn plan_round(
         .position(|a| a.client == s_l.client)
         .expect("fastest stays in the plan");
 
-    RoundPlan { assignments, fastest: fastest_idx, t_l, h_star }
+    Ok(RoundPlan { assignments, fastest: fastest_idx, t_l, h_star })
 }
 
 /// Reference-client selection over already-costed assignments: the index
@@ -192,13 +205,16 @@ pub fn plan_round(
 /// projected total time and takes the quickest as the round's reference).
 /// The bootstrap round of `HeroesServer::plan` (no estimates yet) uses
 /// this; it previously selected the *slowest* client via `max_by`.
-pub fn fastest_reference(assignments: &[Assignment]) -> (usize, f64) {
+///
+/// `None` on an empty cohort — the old `(0, 0.0)` sentinel let callers
+/// index assignment 0 of an empty plan and panic downstream; every
+/// caller must now surface a proper error instead.
+pub fn fastest_reference(assignments: &[Assignment]) -> Option<(usize, f64)> {
     assignments
         .iter()
         .enumerate()
         .map(|(i, a)| (i, a.projected_t))
         .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-        .unwrap_or((0, 0.0))
 }
 
 /// Average waiting time of a plan (paper Eq. 20) given the realized
@@ -227,6 +243,7 @@ mod tests {
             tau_max: 50,
             tau_floor: 1,
             h_max: 100_000,
+            beta_sq: 0.0,
         }
     }
 
@@ -264,7 +281,7 @@ mod tests {
             status(1, 2e7, 5.0),  // fast everything
             status(2, 5e6, 2.0),
         ];
-        let plan = plan_round(&info, &cfg(), &est(), &statuses, &mut ledger);
+        let plan = plan_round(&info, &cfg(), &est(), &statuses, &mut ledger).unwrap();
         assert_eq!(plan.assignments.len(), 3);
         let fast = &plan.assignments[plan.fastest];
         assert_eq!(fast.client, 1);
@@ -279,7 +296,7 @@ mod tests {
         let statuses: Vec<ClientStatus> = (0..6)
             .map(|i| status(i, 2e6 + i as f64 * 4e6, 1.0 + i as f64 * 0.7))
             .collect();
-        let plan = plan_round(&info, &cfg(), &est(), &statuses, &mut ledger);
+        let plan = plan_round(&info, &cfg(), &est(), &statuses, &mut ledger).unwrap();
         // all completion times within ρ of the reference OR pinned at τ_min
         for a in &plan.assignments {
             let slack = plan.t_l - a.projected_t;
@@ -299,7 +316,7 @@ mod tests {
         let info = toy_info();
         let mut ledger = BlockLedger::new(&info);
         let statuses = vec![status(0, 1e7, 3.0), status(1, 1e7, 3.0)];
-        let plan = plan_round(&info, &cfg(), &est(), &statuses, &mut ledger);
+        let plan = plan_round(&info, &cfg(), &est(), &statuses, &mut ledger).unwrap();
         let total: u64 = plan
             .assignments
             .iter()
@@ -314,8 +331,8 @@ mod tests {
         let info = toy_info();
         let mut ledger = BlockLedger::new(&info);
         let statuses = vec![status(0, 1e6, 1.0)]; // width 1 -> 1 block per layer
-        let p1 = plan_round(&info, &cfg(), &est(), &statuses, &mut ledger);
-        let p2 = plan_round(&info, &cfg(), &est(), &statuses, &mut ledger);
+        let p1 = plan_round(&info, &cfg(), &est(), &statuses, &mut ledger).unwrap();
+        let p2 = plan_round(&info, &cfg(), &est(), &statuses, &mut ledger).unwrap();
         // second round must pick the other (less-trained) group
         assert_ne!(p1.assignments[0].selection.groups[0], p2.assignments[0].selection.groups[0]);
     }
@@ -335,10 +352,44 @@ mod tests {
             projected_t,
         };
         let assignments = vec![mk(0, 9.0), mk(1, 2.0), mk(2, 5.0)];
-        let (idx, t_l) = fastest_reference(&assignments);
+        let (idx, t_l) = fastest_reference(&assignments).unwrap();
         assert_eq!(idx, 1, "must select the fastest client, not the slowest");
         assert!((t_l - 2.0).abs() < 1e-12);
-        assert_eq!(fastest_reference(&[]), (0, 0.0));
+    }
+
+    #[test]
+    fn empty_cohort_is_an_error_not_a_sentinel() {
+        // regression: fastest_reference(&[]) returned (0, 0.0), and the
+        // first consumer to index assignment 0 panicked
+        assert!(fastest_reference(&[]).is_none());
+        let info = toy_info();
+        let mut ledger = BlockLedger::new(&info);
+        let err = plan_round(&info, &cfg(), &est(), &[], &mut ledger).unwrap_err();
+        assert!(err.to_string().contains("empty cohort"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn h_star_grows_with_observed_beta_sq() {
+        // regression: plan_round used to pass a literal β² = 0, erasing
+        // the 6L²β² floor of Eq. 23 — the solved horizon must now grow
+        // with the observed coefficient-reduction error
+        let info = toy_info();
+        let statuses = vec![status(0, 1e7, 3.0), status(1, 5e6, 1.5)];
+        let mut h_prev = 0;
+        // β² values small enough that ε − 6L²β² stays positive and H*
+        // stays under h_max (the clamp would flatten the comparison)
+        for beta_sq in [0.0, 0.001, 0.002] {
+            let mut c = cfg();
+            c.beta_sq = beta_sq;
+            let mut ledger = BlockLedger::new(&info);
+            let plan = plan_round(&info, &c, &est(), &statuses, &mut ledger).unwrap();
+            assert!(
+                plan.h_star > h_prev,
+                "H* must grow with β²: {} !> {h_prev} at β²={beta_sq}",
+                plan.h_star
+            );
+            h_prev = plan.h_star;
+        }
     }
 
     #[test]
@@ -358,8 +409,8 @@ mod tests {
         };
         let mut l1 = BlockLedger::new(&info);
         let mut l2 = BlockLedger::new(&info);
-        let a = plan_round(&info, &cfg(), &est(), &statuses, &mut l1);
-        let b = plan_round(&info, &cfg(), &est(), &statuses, &mut l2);
+        let a = plan_round(&info, &cfg(), &est(), &statuses, &mut l1).unwrap();
+        let b = plan_round(&info, &cfg(), &est(), &statuses, &mut l2).unwrap();
         for (x, y) in a.assignments.iter().zip(&b.assignments) {
             assert_eq!(x.client, y.client);
             assert_eq!(x.tau, y.tau);

@@ -21,7 +21,7 @@ use crate::data::synth_image::ImageGen;
 use crate::data::synth_text::TextGen;
 use crate::data::{ImageSet, TextSet};
 use crate::model::{ComposedGlobal, DenseGlobal};
-use crate::runtime::{Engine, InputInfo, Manifest, ModelInfo, Value};
+use crate::runtime::{Engine, EnginePool, InputInfo, Manifest, ModelInfo, Value};
 use crate::simulation::{DeviceFleet, NetworkModel, TrafficMeter, VirtualClock};
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::rng::Rng;
@@ -78,8 +78,12 @@ impl BatchStream {
 }
 
 /// The common federated world for one experiment run.
+///
+/// Holds the per-worker [`EnginePool`]: the round driver pins worker *i*
+/// to engine *i*, while coordinator-side evaluation runs on the pool's
+/// primary engine ([`FlEnv::engine`]).
 pub struct FlEnv<'e> {
-    pub engine: &'e Engine,
+    pub pool: &'e EnginePool,
     pub info: ModelInfo,
     pub cfg: ExperimentConfig,
     pub fleet: DeviceFleet,
@@ -93,10 +97,11 @@ pub struct FlEnv<'e> {
 
 impl<'e> FlEnv<'e> {
     /// Build the world: synthesize data, partition it per the config,
-    /// draw the device fleet. Deterministic in `cfg.seed`.
-    pub fn build(engine: &'e Engine, cfg: ExperimentConfig) -> Result<FlEnv<'e>> {
+    /// draw the device fleet. Deterministic in `cfg.seed` (and
+    /// independent of the pool size — engines only execute).
+    pub fn build(pool: &'e EnginePool, cfg: ExperimentConfig) -> Result<FlEnv<'e>> {
         cfg.validate()?;
-        let info = engine.manifest().model(&cfg.family)?.clone();
+        let info = pool.manifest().model(&cfg.family)?.clone();
         let mut rng = Rng::new(cfg.seed);
         let mut data_rng = rng.fork(1);
         let mut fleet_rng = rng.fork(2);
@@ -150,7 +155,7 @@ impl<'e> FlEnv<'e> {
             down_hi_mbps: cfg.down_mbps.1,
         };
         Ok(FlEnv {
-            engine,
+            pool,
             info,
             cfg,
             fleet,
@@ -161,6 +166,11 @@ impl<'e> FlEnv<'e> {
             test,
             rng: rng.fork(3),
         })
+    }
+
+    /// The coordinator's engine (evaluation, serial dispatch).
+    pub fn engine(&self) -> &'e Engine {
+        self.pool.primary()
     }
 
     /// Randomly sample K participants (paper Alg. 1 line 5).
@@ -212,11 +222,18 @@ impl<'e> FlEnv<'e> {
         match &self.test {
             TestData::Image(set) => {
                 for (batch, real) in EvalBatches::new(set, self.info.eval_batch) {
-                    debug_assert_eq!(real, self.info.eval_batch, "test set must tile eval batches");
+                    if real < self.info.eval_batch {
+                        // The eval executable reduces over the whole
+                        // (wrap-padded) batch, so a ragged tail would
+                        // mis-scale loss/accuracy — drop it, exactly like
+                        // the text branch. (This was only a debug_assert
+                        // before: release builds silently mis-scaled.)
+                        break;
+                    }
                     let mut inputs: Vec<Value> = params.iter().map(Value::F32).collect();
                     inputs.push(Value::F32(&batch.x));
                     inputs.push(Value::I32(&batch.y));
-                    let out = self.engine.execute(exec, &inputs)?;
+                    let out = self.engine().execute(exec, &inputs)?;
                     loss_sum += out[0].data()[0] as f64;
                     correct += out[1].data()[0] as f64;
                     total += real as f64;
@@ -233,7 +250,7 @@ impl<'e> FlEnv<'e> {
                     let mut inputs: Vec<Value> = params.iter().map(Value::F32).collect();
                     inputs.push(Value::I32(&batch.x));
                     inputs.push(Value::I32(&batch.y));
-                    let out = self.engine.execute(exec, &inputs)?;
+                    let out = self.engine().execute(exec, &inputs)?;
                     loss_sum += out[0].data()[0] as f64;
                     correct += out[1].data()[0] as f64;
                     total += (real * seq_len) as f64;
@@ -241,7 +258,12 @@ impl<'e> FlEnv<'e> {
             }
         }
         if total == 0.0 {
-            return Err(anyhow!("empty test set"));
+            // distinguish "no data" from "data but no full batch" — only
+            // exactly-full batches enter the sums (ragged tails skip)
+            return Err(anyhow!(
+                "test set has no full evaluation batches (eval batch = {})",
+                self.info.eval_batch
+            ));
         }
         Ok((loss_sum / total, correct / total))
     }
@@ -257,5 +279,88 @@ impl<'e> FlEnv<'e> {
         let mut params = global.weights.clone();
         params.push(global.bias.clone());
         self.evaluate_param_list(&Manifest::eval_name(&self.cfg.family, false), &params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // In-module so the tests can graft ragged test sets onto the private
+    // `test` field; PJRT execution still needs artifacts, so each test
+    // skips gracefully without them.
+    use super::*;
+    use crate::config::Scale;
+
+    fn pool_or_skip() -> Option<EnginePool> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(EnginePool::single(Manifest::load(&dir).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn image_eval_skips_ragged_tail_batches() {
+        // regression: the image branch only debug_assert!ed exact tiling;
+        // in release builds a wrap-padded partial batch entered the sums
+        // and silently mis-scaled loss/accuracy
+        let Some(pool) = pool_or_skip() else { return };
+        let mut cfg = ExperimentConfig::preset("cnn", Scale::Smoke);
+        cfg.n_clients = 4;
+        cfg.k_per_round = 2;
+        cfg.samples_per_client = 16;
+        cfg.test_samples = 64;
+        let mut env = FlEnv::build(&pool, cfg).unwrap();
+        let global = ComposedGlobal::init(&env.info, &mut Rng::new(7)).unwrap();
+        let baseline = env.evaluate_composed(&global).unwrap();
+
+        // graft half an eval batch of duplicated samples onto the set
+        let TestData::Image(set) = &env.test else { panic!("cnn env must hold image test data") };
+        let mut bigger = (**set).clone();
+        let extra = env.info.eval_batch / 2;
+        assert!(extra > 0, "eval batch too small to form a ragged tail");
+        let ss = bigger.sample_size();
+        for i in 0..extra {
+            let row = bigger.pixels[i * ss..(i + 1) * ss].to_vec();
+            bigger.pixels.extend_from_slice(&row);
+            let label = bigger.labels[i];
+            bigger.labels.push(label);
+        }
+        env.test = TestData::Image(Arc::new(bigger));
+        let ragged = env.evaluate_composed(&global).unwrap();
+        assert_eq!(ragged, baseline, "a partial eval batch must not change image metrics");
+    }
+
+    #[test]
+    fn text_eval_skips_ragged_tail_batches() {
+        // the text branch's skip, pinned the same way: dropping the
+        // partial tail batch means a stream truncated to exactly the full
+        // batches evaluates identically
+        let Some(pool) = pool_or_skip() else { return };
+        let mut cfg = ExperimentConfig::preset("rnn", Scale::Smoke);
+        cfg.n_clients = 4;
+        cfg.k_per_round = 2;
+        cfg.samples_per_client = 16;
+        cfg.shard_tokens = 800;
+        cfg.test_samples = 50;
+        let mut env = FlEnv::build(&pool, cfg).unwrap();
+        let global = ComposedGlobal::init(&env.info, &mut Rng::new(7)).unwrap();
+        let InputInfo::Text { seq_len, .. } = env.info.input else {
+            panic!("rnn env must hold text data")
+        };
+        let stride = seq_len + 1;
+        let batch = env.info.eval_batch;
+
+        let TestData::Text(set) = &env.test else { panic!("rnn env must hold text test data") };
+        let windows = set.test.len() / stride;
+        let full = (windows / batch) * batch;
+        assert!(windows > full, "need a partial tail batch: {windows} windows, batch {batch}");
+        let mut exact = (**set).clone();
+        exact.test.truncate(full * stride);
+
+        let with_tail = env.evaluate_composed(&global).unwrap();
+        env.test = TestData::Text(Arc::new(exact));
+        let without_tail = env.evaluate_composed(&global).unwrap();
+        assert_eq!(with_tail, without_tail, "a partial eval batch must not change text metrics");
     }
 }

@@ -61,6 +61,19 @@ pub fn tau_opt(est: &Estimates, eta: f64, h: usize) -> f64 {
     (12.0 * e.loss / denom).sqrt().max(1.0)
 }
 
+/// Cap an *observed* β² proxy so the Eq. 23 floor 6L²β² never swallows
+/// ε: the proxy (block-training imbalance) is an error-bound estimate,
+/// not a certainty, and an uncapped early-training spike (CV² ≈ 1 after
+/// one skewed round) would pin H* at h_max and collapse every τ to the
+/// floor — a degenerate regime as bad as the hardcoded β² = 0 it
+/// replaces. Capping at ε/(12L²) keeps the margin ≥ ε/2, so H* grows at
+/// most 4× over the β² = 0 horizon while staying monotone in the
+/// observed imbalance.
+pub fn capped_beta_sq(observed: f64, epsilon: f64, l: f64) -> f64 {
+    let l = l.clamp(1e-3, 1e3);
+    observed.max(0.0).min(epsilon / (12.0 * l * l))
+}
+
 /// H* = smallest round count whose optimal-τ bound reaches `epsilon`
 /// (β² — the coefficient-reduction error bound — shifts the floor).
 /// Clamped to [1, h_max]: when ε is unreachable (ε ≤ 6L²β²) the best the
@@ -146,10 +159,43 @@ mod tests {
     }
 
     #[test]
+    fn solve_rounds_strictly_increases_with_beta_sq() {
+        // the 6L²β² floor of Eq. 23 shrinks the margin ε − floor, so at a
+        // fixed ε the required horizon must strictly grow with β² (until
+        // the h_max clamp)
+        let e = est();
+        let mut prev = 0;
+        for beta_sq in [0.0, 1e-3, 2e-3, 4e-3] {
+            let h = solve_rounds(&e, 0.5, beta_sq, 10_000_000);
+            assert!(h > prev, "H* not strictly increasing: {h} !> {prev} at β²={beta_sq}");
+            prev = h;
+        }
+    }
+
+    #[test]
     fn solve_rounds_caps_when_unreachable() {
         let e = est();
         // floor = 6 L² β² = 24 β²; with β²=1, floor=24 > ε
         assert_eq!(solve_rounds(&e, 0.5, 1.0, 500), 500);
+    }
+
+    #[test]
+    fn capped_beta_keeps_solver_out_of_the_degenerate_regime() {
+        // An early-training imbalance spike (CV² ≈ 1) fed raw would pin
+        // H* at h_max; through the cap the margin stays ≥ ε/2, so H* is
+        // finite (≤ 4× the β²=0 horizon) yet still grows with imbalance.
+        let e = est(); // L = 2 after sanitize
+        let (eps, h_max) = (0.5, 10_000_000);
+        let h0 = solve_rounds(&e, eps, 0.0, h_max);
+        assert_eq!(solve_rounds(&e, eps, 1.0, h_max), h_max, "raw spike saturates");
+        let capped = capped_beta_sq(1.0, eps, e.l);
+        let h_capped = solve_rounds(&e, eps, capped, h_max);
+        assert!(h_capped < h_max, "capped β² must not saturate the solver");
+        assert!(h_capped > h0, "capped β² must still lengthen the horizon");
+        assert!(h_capped <= 4 * h0 + 4, "margin ≥ ε/2 bounds the blow-up at 4×");
+        // small observations pass through untouched; negatives clamp to 0
+        assert_eq!(capped_beta_sq(1e-4, eps, e.l), 1e-4);
+        assert_eq!(capped_beta_sq(-1.0, eps, e.l), 0.0);
     }
 
     #[test]

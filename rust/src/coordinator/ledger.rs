@@ -143,15 +143,38 @@ impl BlockLedger {
         }
     }
 
-    /// V^h: mean over classes of the per-class group-count variance
-    /// (Eq. 21 at group granularity).
-    pub fn variance(&self) -> f64 {
+    /// Mean over classes of a per-class statistic of the group counts
+    /// (shared traversal of `variance` / `relative_variance`).
+    fn mean_class_stat(&self, stat: impl Fn(&[f64]) -> f64) -> f64 {
         let per_class: Vec<f64> = self
             .counts
             .iter()
-            .map(|c| stats::variance(&c.iter().map(|&x| x as f64).collect::<Vec<_>>()))
+            .map(|c| stat(&c.iter().map(|&x| x as f64).collect::<Vec<_>>()))
             .collect();
         stats::mean(&per_class)
+    }
+
+    /// V^h: mean over classes of the per-class group-count variance
+    /// (Eq. 21 at group granularity).
+    pub fn variance(&self) -> f64 {
+        self.mean_class_stat(stats::variance)
+    }
+
+    /// V^h normalized per class by the squared mean count (mean squared
+    /// coefficient of variation) — a dimensionless imbalance measure.
+    /// The controller feeds this to the H* solver as its observed β²
+    /// (Eq. 23's coefficient-reduction error bound): evenly-trained
+    /// blocks compose with little error, badly skewed training budgets
+    /// inflate it. 0 while the ledger is empty.
+    pub fn relative_variance(&self) -> f64 {
+        self.mean_class_stat(|xs| {
+            let m = stats::mean(xs);
+            if m > 0.0 {
+                stats::variance(xs) / (m * m)
+            } else {
+                0.0
+            }
+        })
     }
 
     /// Hypothetical V^h if `sel` received `tau` more iterations — the
@@ -267,6 +290,22 @@ mod tests {
         ledger.record(&sel2, 4);
         assert!((hyp - ledger.variance()).abs() < 1e-12);
         assert_eq!(ledger.variance(), 0.0); // balanced again
+    }
+
+    #[test]
+    fn relative_variance_is_dimensionless_imbalance() {
+        let info = toy_info();
+        let mut ledger = BlockLedger::new(&info);
+        // empty ledger: no imbalance signal
+        assert_eq!(ledger.relative_variance(), 0.0);
+        // counts [6, 0]: mean 3, var 9 -> CV² = 1
+        let sel = ledger.select_for_width(&info, 1);
+        ledger.record(&sel, 6);
+        assert!((ledger.relative_variance() - 1.0).abs() < 1e-12);
+        // balanced [6, 6]: imbalance vanishes even though counts grew
+        let sel2 = ledger.select_for_width(&info, 1);
+        ledger.record(&sel2, 6);
+        assert_eq!(ledger.relative_variance(), 0.0);
     }
 
     #[test]

@@ -1,52 +1,71 @@
 //! Shared parallel round pipeline — every scheme (Heroes, the dense
 //! baselines, Flanc) plans a round into [`LocalTask`]s and hands them to
 //! the [`RoundDriver`], which executes the simulated clients (possibly on
-//! several worker threads) and performs the round bookkeeping the schemes
-//! used to reimplement one by one.
+//! several worker threads over a per-worker [`EnginePool`]) and performs
+//! the round bookkeeping the schemes used to reimplement one by one.
 //!
 //! # Pipeline
 //!
-//! One synchronous round flows through four phases:
+//! A scheme's round is decomposed into the three [`Strategy`] hook phases
+//! (see `baselines::Strategy`):
 //!
-//! 1. **plan** — the scheme samples participants and decides width / τ /
-//!    payload / executable per client (Alg. 1 for Heroes, the simpler
-//!    width×τ policies for the baselines), producing an ordered
-//!    `Vec<LocalTask>`. Planning runs on the coordinator thread and may
-//!    freely mutate scheme state (ledger, tracker).
-//! 2. **dispatch** — [`RoundDriver::run`] executes each task's local
-//!    training (Alg. 2, `client::run_local`) through the `Sync` PJRT
-//!    [`Engine`]. With `workers == 1` tasks run inline on the caller's
-//!    thread; with `workers == N` a `std::thread::scope` pool of N
-//!    threads pulls task indices off a shared atomic counter.
-//! 3. **collect** — each outcome lands in the slot of its task index, so
-//!    `run` returns outcomes in **assignment order** no matter which
-//!    worker finished first; if tasks failed, the error of the earliest
-//!    failed task is returned (again independent of scheduling).
-//! 4. **aggregate** — the scheme folds the ordered outcomes into its
-//!    global model (block-wise, overlap-aware or grouped averaging), then
-//!    [`collect_round`] converts the shared bookkeeping — traffic bytes,
-//!    completion times, losses, the virtual-clock advance by the
-//!    synchronous-round maximum (Eq. 19) — into the final [`RoundReport`].
+//! * **A · plan-ahead** (`plan_ahead`) — sample participants, collect
+//!   statuses and run any outcome-independent width/τ planning. Phase A
+//!   is the only phase that consumes the environment's RNG, and it must
+//!   not read state that phase C mutates — that contract is what lets the
+//!   coordinator run it for round *h+1* while round *h* is still
+//!   executing.
+//! * **B · materialize** (`take_tasks`) — turn the pending plan into
+//!   ordered, fully self-contained [`LocalTask`]s against the scheme's
+//!   *current* global model (payloads, batch streams, executables).
+//! * **C · finish** (`finish_round`) — fold the assignment-ordered
+//!   [`TaskOutcome`]s into the global model and the environment's traffic
+//!   meter / virtual clock (Eq. 19), emitting the [`RoundReport`].
+//!
+//! Between B and C the driver **dispatches**: a task queue feeds worker
+//! threads, worker *i* pinned to engine *i* of the pool so executions
+//! never contend on one PJRT client's intra-op lock, and a completion
+//! channel carries `(task index, outcome)` pairs back to the coordinator,
+//! which files them in assignment order.
+//!
+//! # Overlapped execution
+//!
+//! [`RoundDriver::run`] drives one round (B-phase output in, ordered
+//! outcomes out). [`RoundDriver::run_overlapped`] drives a *sequence* of
+//! rounds over one persistent worker pool: while round *h*'s stragglers
+//! drain, the coordinator already runs phase A of round *h+1* (sampling,
+//! statuses, outcome-independent width/τ planning), and round *h+1*'s
+//! tasks hit the still-warm workers the moment phase C of round *h*
+//! lands — no per-round fork/join barrier, no thread respawn. Payload
+//! materialization (phase B) stays sequenced after phase C of the
+//! previous round because a synchronous-FL payload is a function of the
+//! aggregated global; overlapping *that* means semi-async aggregation,
+//! which ROADMAP.md tracks as its own item.
 //!
 //! # Determinism contract
 //!
 //! A dispatched task touches no shared mutable state: its batch stream is
 //! owned and seeded by `(seed, client, round)` ([`FlEnv::batch_stream`]),
 //! its payload is owned, and PJRT CPU executions are deterministic
-//! functions of their inputs. Combined with assignment-order collection,
-//! a seeded run therefore produces **byte-identical `RoundReport`
-//! sequences for any `--workers N`**, and `workers == 1` reproduces the
-//! serial loop exactly (`rust/tests/integration_parallel.rs` pins this).
+//! functions of their inputs — on *every* engine of the pool, since all
+//! engines compile the same HLO through the same pipeline. Combined with
+//! assignment-order collection and the phase contract above (A commutes
+//! with C, B and C are sequenced), a seeded run produces **byte-identical
+//! `RoundReport` sequences for any `--workers N`, any pool size, and for
+//! overlapped vs. non-overlapped dispatch**
+//! (`rust/tests/integration_parallel.rs` pins all three axes).
 
+use crate::baselines::Strategy;
 use crate::coordinator::assignment::average_wait;
 use crate::coordinator::client::{run_local, LocalResult};
 use crate::coordinator::env::{BatchStream, FlEnv};
 use crate::coordinator::RoundReport;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, EnginePool};
 use crate::tensor::Tensor;
-use anyhow::Result;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Condvar, Mutex};
 
 /// One client's planned local round, fully self-contained: a worker
 /// thread needs nothing beyond the task and a `&Engine` to execute it.
@@ -104,7 +123,185 @@ fn exec_task(engine: &Engine, task: LocalTask) -> Result<TaskOutcome> {
     Ok(TaskOutcome { client, p, tau, bytes, completion, result })
 }
 
-/// Dispatches a round's tasks over up to `workers` threads.
+/// A task tagged with its round sequence number and assignment index.
+struct Dispatch {
+    seq: usize,
+    index: usize,
+    task: LocalTask,
+}
+
+/// A finished task travelling back over the completion channel.
+struct Completion {
+    seq: usize,
+    index: usize,
+    outcome: Result<TaskOutcome>,
+}
+
+/// The shared work queue: coordinator pushes, workers pop (blocking until
+/// work arrives or the queue is closed).
+struct TaskQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+struct QueueState {
+    tasks: VecDeque<Dispatch>,
+    closed: bool,
+}
+
+impl TaskQueue {
+    fn new() -> TaskQueue {
+        TaskQueue {
+            state: Mutex::new(QueueState { tasks: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue one round's tasks (assignment order) under sequence `seq`.
+    fn push_round(&self, seq: usize, tasks: Vec<LocalTask>) {
+        let mut st = self.state.lock().expect("task queue poisoned");
+        for (index, task) in tasks.into_iter().enumerate() {
+            st.tasks.push_back(Dispatch { seq, index, task });
+        }
+        drop(st);
+        self.ready.notify_all();
+    }
+
+    /// No more work will ever arrive; blocked workers drain and exit.
+    fn close(&self) {
+        self.state.lock().expect("task queue poisoned").closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Next task, blocking while the queue is open but empty; `None` once
+    /// it is closed and drained.
+    fn pop(&self) -> Option<Dispatch> {
+        let mut st = self.state.lock().expect("task queue poisoned");
+        loop {
+            if let Some(d) = st.tasks.pop_front() {
+                return Some(d);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).expect("task queue poisoned");
+        }
+    }
+}
+
+/// Worker body: pull tasks, execute on the pinned engine, report on the
+/// completion channel. Exits when the queue closes or the coordinator
+/// hangs up the channel.
+///
+/// A panicking task must still produce a completion: the coordinator
+/// blocks on exactly one completion per dispatched task, and sibling
+/// workers keep their channel ends alive while parked in `pop()`, so an
+/// unwound worker would deadlock the whole scope (the overlapped queue
+/// stays open between rounds). The panic is converted into the task's
+/// error and surfaced through the ordinary earliest-failed-task path.
+fn worker_loop(engine: &Engine, queue: &TaskQueue, tx: Sender<Completion>) {
+    while let Some(Dispatch { seq, index, task }) = queue.pop() {
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exec_task(engine, task)))
+                .unwrap_or_else(|payload| {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".into());
+                    Err(anyhow!("worker task panicked: {msg}"))
+                });
+        if tx.send(Completion { seq, index, outcome }).is_err() {
+            break;
+        }
+    }
+}
+
+/// Closes the queue when dropped — **including on unwind**. Workers park
+/// in `TaskQueue::pop` while the queue is open; if the coordinator side
+/// panics without closing, `std::thread::scope` would wait forever to
+/// join them, turning a crash into a silent hang. Every dispatch path
+/// holds one of these for the lifetime of its worker scope.
+struct CloseOnDrop<'q>(&'q TaskQueue);
+
+impl Drop for CloseOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// Ordered collect: slot completions by assignment index, then surface
+/// the earliest failed task's error (independent of scheduling) or the
+/// outcomes in assignment order.
+fn into_ordered(slots: Vec<Option<Result<TaskOutcome>>>) -> Result<Vec<TaskOutcome>> {
+    let mut out = Vec::with_capacity(slots.len());
+    for slot in slots {
+        out.push(slot.expect("completion missing for a dispatched task")?);
+    }
+    Ok(out)
+}
+
+/// Collect exactly `expected` completions of round `seq`, filing each by
+/// its assignment index (shared by the single-round and overlapped
+/// dispatch paths — their collection protocol must never diverge).
+fn collect_completions(
+    rx: &std::sync::mpsc::Receiver<Completion>,
+    expected: usize,
+    seq: usize,
+) -> Result<Vec<TaskOutcome>> {
+    let mut slots: Vec<Option<Result<TaskOutcome>>> = (0..expected).map(|_| None).collect();
+    for _ in 0..expected {
+        let c = rx.recv().map_err(|_| anyhow!("worker pool died mid-round"))?;
+        assert_eq!(c.seq, seq, "completion from a round not in flight");
+        slots[c.index] = Some(c.outcome);
+    }
+    into_ordered(slots)
+}
+
+/// Coordinator body of [`RoundDriver::run_overlapped`]: plan, dispatch
+/// and collect `rounds` rounds against an already-running worker pool.
+fn drive_rounds(
+    queue: &TaskQueue,
+    rx: &std::sync::mpsc::Receiver<Completion>,
+    env: &mut FlEnv,
+    strategy: &mut dyn Strategy,
+    rounds: usize,
+    reports: &mut Vec<RoundReport>,
+) -> Result<()> {
+    // phases A + B for round 0, then dispatch immediately
+    strategy.plan_ahead(env)?;
+    let tasks = strategy.take_tasks(env)?;
+    let mut expected = tasks.len();
+    if expected == 0 {
+        return Err(anyhow!("cannot dispatch an empty cohort"));
+    }
+    queue.push_round(0, tasks);
+
+    for h in 0..rounds {
+        if h + 1 < rounds {
+            // overlap: round h+1's phase A runs while round h's
+            // stragglers are still on the workers
+            strategy.plan_ahead(env)?;
+        }
+        let outcomes = collect_completions(rx, expected, h)?;
+        reports.push(strategy.finish_round(env, outcomes)?);
+        if h + 1 < rounds {
+            // phase B for h+1 (payloads need the freshly aggregated
+            // global); workers pick tasks up as they free — no join
+            // barrier in between
+            let tasks = strategy.take_tasks(env)?;
+            expected = tasks.len();
+            if expected == 0 {
+                return Err(anyhow!("cannot dispatch an empty cohort"));
+            }
+            queue.push_round(h + 1, tasks);
+        }
+    }
+    Ok(())
+}
+
+/// Dispatches rounds' tasks over up to `workers` threads, worker *i*
+/// pinned to engine *i* of the pool.
 #[derive(Debug, Clone, Copy)]
 pub struct RoundDriver {
     workers: usize,
@@ -120,51 +317,84 @@ impl RoundDriver {
         self.workers
     }
 
-    /// Execute all tasks, returning outcomes in assignment order.
+    /// Execute one round's tasks, returning outcomes in assignment order.
     ///
-    /// Never spawns more threads than tasks; with one worker (or one
-    /// task) everything runs inline on the caller's thread.
-    pub fn run(&self, engine: &Engine, tasks: Vec<LocalTask>) -> Result<Vec<TaskOutcome>> {
+    /// Errs on an empty cohort (an empty round has no reference client
+    /// and would poison every downstream average). Never spawns more
+    /// threads than tasks; with one worker (or one task) everything runs
+    /// inline on the caller's thread against the pool's primary engine.
+    pub fn run(&self, pool: &EnginePool, tasks: Vec<LocalTask>) -> Result<Vec<TaskOutcome>> {
         let n = tasks.len();
-        let workers = self.workers.min(n.max(1));
+        if n == 0 {
+            return Err(anyhow!("cannot dispatch an empty cohort"));
+        }
+        let workers = self.workers.min(n);
         if workers <= 1 {
+            let engine = pool.primary();
             return tasks.into_iter().map(|t| exec_task(engine, t)).collect();
         }
 
-        // Work queue: a shared index + take-once task slots; outcomes land
-        // in the slot of their task index so order is scheduling-free.
-        let queue: Vec<Mutex<Option<LocalTask>>> =
-            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
-        let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<Result<TaskOutcome>>>> =
-            (0..n).map(|_| Mutex::new(None)).collect();
-
+        let queue = TaskQueue::new();
+        let (tx, rx) = channel::<Completion>();
         std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let task = queue[i]
-                        .lock()
-                        .expect("task slot poisoned")
-                        .take()
-                        .expect("task dispatched twice");
-                    let outcome = exec_task(engine, task);
-                    *slots[i].lock().expect("outcome slot poisoned") = Some(outcome);
-                });
+            for w in 0..workers {
+                let tx = tx.clone();
+                let queue = &queue;
+                let engine = pool.engine(w);
+                s.spawn(move || worker_loop(engine, queue, tx));
             }
-        });
+            drop(tx);
+            let _close = CloseOnDrop(&queue);
+            queue.push_round(0, tasks);
+            // close immediately: this is the whole dispatch, so workers
+            // drain and exit while we collect
+            queue.close();
+            collect_completions(&rx, n, 0)
+        })
+    }
 
-        slots
-            .into_iter()
-            .map(|m| {
-                m.into_inner()
-                    .expect("outcome slot poisoned")
-                    .expect("worker exited without filling its slot")
-            })
-            .collect()
+    /// Drive `rounds` consecutive rounds of `strategy` over one
+    /// persistent worker pool, overlapping round *h+1*'s plan-ahead phase
+    /// with round *h*'s stragglers (module docs, "Overlapped execution").
+    ///
+    /// Byte-identical to calling `strategy.run_round(env)` `rounds` times
+    /// — the phase contract sequences every state mutation in the serial
+    /// order — so this is purely a wall-clock optimization.
+    pub fn run_overlapped(
+        &self,
+        pool: &EnginePool,
+        env: &mut FlEnv,
+        strategy: &mut dyn Strategy,
+        rounds: usize,
+    ) -> Result<Vec<RoundReport>> {
+        if rounds == 0 {
+            return Ok(Vec::new());
+        }
+        if self.workers <= 1 {
+            // one worker: nothing drains in the background, so the plain
+            // serial loop is both simpler and identical
+            return (0..rounds).map(|_| strategy.run_round(env)).collect();
+        }
+
+        let queue = TaskQueue::new();
+        let (tx, rx) = channel::<Completion>();
+        let mut reports = Vec::with_capacity(rounds);
+        let result = std::thread::scope(|s| {
+            for w in 0..self.workers {
+                let tx = tx.clone();
+                let queue = &queue;
+                let engine = pool.engine(w);
+                s.spawn(move || worker_loop(engine, queue, tx));
+            }
+            drop(tx);
+
+            // guard, not a trailing call: a panic inside a scheme phase
+            // must still close the queue or the parked workers would
+            // never join and the scope would hang forever
+            let _close = CloseOnDrop(&queue);
+            drive_rounds(&queue, &rx, env, strategy, rounds, &mut reports)
+        });
+        result.map(|()| reports)
     }
 }
 
@@ -219,9 +449,53 @@ mod tests {
 
     #[test]
     fn task_types_are_send() {
-        // the scoped workers move tasks/outcomes across threads
+        // the queue moves tasks/outcomes across threads
         fn assert_send<T: Send>() {}
         assert_send::<LocalTask>();
         assert_send::<TaskOutcome>();
+        assert_send::<Dispatch>();
+        assert_send::<Completion>();
+    }
+
+    #[test]
+    fn queue_delivers_in_order_and_drains_on_close() {
+        use crate::data::loader::ImageLoader;
+        use crate::data::synth_image::ImageGen;
+        use crate::util::rng::Rng;
+        use std::sync::Arc;
+
+        // tasks are sequencing metadata here — they are never executed
+        let set = Arc::new(ImageGen::cifar_twin().generate(4, 1, &mut Rng::new(1)));
+        let mk = |client: usize| LocalTask {
+            client,
+            p: 1,
+            tau: 1,
+            lr: 0.1,
+            train_exec: "unused".into(),
+            probe_exec: None,
+            payload: Vec::new(),
+            stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
+            bytes: 0,
+            completion: 0.0,
+        };
+        let queue = TaskQueue::new();
+        queue.push_round(7, vec![mk(10), mk(11), mk(12)]);
+        queue.close();
+        for expect in 0..3usize {
+            let d = queue.pop().expect("queue must drain pushed tasks");
+            assert_eq!((d.seq, d.index), (7, expect), "FIFO assignment order");
+            assert_eq!(d.task.client, 10 + expect);
+        }
+        assert!(queue.pop().is_none(), "closed drained queue must yield None");
+    }
+
+    #[test]
+    fn ordered_collect_returns_earliest_error() {
+        let slots: Vec<Option<Result<TaskOutcome>>> = vec![
+            Some(Err(anyhow!("first"))),
+            Some(Err(anyhow!("second"))),
+        ];
+        let err = into_ordered(slots).unwrap_err();
+        assert_eq!(err.to_string(), "first");
     }
 }

@@ -1,24 +1,36 @@
 //! The Heroes parameter server — paper Alg. 1 end to end.
 //!
 //! Owns the composed global model, the block ledger and the estimate
-//! tracker; each `run_round` samples clients, plans widths / τ / blocks
-//! (`assignment::plan_round`), dispatches the simulated clients through
-//! the shared parallel `RoundDriver` (`coordinator::round`), performs
-//! basis + block-wise aggregation in assignment order and advances the
-//! virtual clock by the synchronous-round maximum.
+//! tracker; a round is decomposed into the `Strategy` hook phases so the
+//! round driver can pipeline rounds:
+//!
+//! * `plan_ahead` — sample clients, collect statuses (the only phase
+//!   touching the env's RNG; safe to run while the previous round's
+//!   stragglers drain).
+//! * `take_tasks` — Alg. 1 planning (`assignment::plan_round` once the
+//!   estimator is live, the predefined-τ bootstrap before) + payload /
+//!   stream materialization. β² for the H* solver (Eq. 23's 6L²β² floor)
+//!   is fed from the ledger's observed block-training imbalance here.
+//! * `finish_round` — basis + block-wise aggregation in assignment
+//!   order, estimator update, clock/traffic bookkeeping.
+//!
+//! `run_round` composes the three phases around the shared parallel
+//! `RoundDriver` (`coordinator::round`).
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::aggregate::ComposedAccumulator;
-use crate::coordinator::assignment::{self, fastest_reference, ControllerCfg, RoundPlan};
+use crate::coordinator::assignment::{
+    self, fastest_reference, ClientStatus, ControllerCfg, RoundPlan,
+};
 use crate::coordinator::env::FlEnv;
 use crate::coordinator::estimator::EstimateTracker;
 use crate::coordinator::ledger::BlockLedger;
-use crate::coordinator::round::{collect_round, LocalTask, RoundDriver};
+use crate::coordinator::round::{collect_round, LocalTask, RoundDriver, TaskOutcome};
 use crate::coordinator::RoundReport;
 use crate::model::ComposedGlobal;
 use crate::runtime::{Manifest, ModelInfo};
 use crate::util::rng::Rng;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 /// The Heroes PS state.
 pub struct HeroesServer {
@@ -34,6 +46,11 @@ pub struct HeroesServer {
     round: usize,
     /// probe every round (paper); can be thinned for speed
     pub probe_every: usize,
+    /// phase-A output (statuses) awaiting `take_tasks`
+    pending: Option<Vec<ClientStatus>>,
+    /// phase-B plan awaiting `finish_round` (aggregation needs the block
+    /// selections, which outcomes do not carry)
+    in_flight: Option<RoundPlan>,
 }
 
 impl HeroesServer {
@@ -51,6 +68,7 @@ impl HeroesServer {
                 tau_max: cfg.tau_max,
                 tau_floor: cfg.tau_default,
                 h_max: 1_000_000,
+                beta_sq: 0.0,
             },
             driver: RoundDriver::new(cfg.workers),
             family: cfg.family.clone(),
@@ -59,23 +77,35 @@ impl HeroesServer {
             tau_default: cfg.tau_default,
             round: 0,
             probe_every: 1,
+            pending: None,
+            in_flight: None,
         })
     }
 
     /// Plan the round: Alg. 1 proper once estimates exist, otherwise the
     /// predefined identical τ (h = 0 bootstrap).
-    fn plan(&mut self, env: &mut FlEnv, clients: &[usize]) -> RoundPlan {
-        let statuses: Vec<_> = clients.iter().map(|&c| env.status(c)).collect();
+    fn plan(&mut self, info: &ModelInfo, statuses: &[ClientStatus]) -> Result<RoundPlan> {
         if self.tracker.ready() {
             let est = self.tracker.current();
-            assignment::plan_round(&env.info, &self.ctrl, &est, &statuses, &mut self.ledger)
+            // Feed the observed coefficient-reduction error into the H*
+            // solver: evenly-trained blocks compose with little error, so
+            // the ledger's relative count variance is the live β² proxy
+            // (previously hardcoded 0.0, erasing Eq. 23's 6L²β² floor).
+            // Capped so an early-training imbalance spike cannot pin H*
+            // at h_max and collapse τ (see `capped_beta_sq`).
+            self.ctrl.beta_sq = crate::coordinator::frequency::capped_beta_sq(
+                self.ledger.relative_variance(),
+                self.ctrl.epsilon,
+                est.l,
+            );
+            assignment::plan_round(info, &self.ctrl, &est, statuses, &mut self.ledger)
         } else {
             // bootstrap: widths still greedy, τ identical
             let mut assignments = Vec::with_capacity(statuses.len());
-            for s in &statuses {
-                let (p, mu) = assignment::assign_width(&env.info, s.q_flops, self.ctrl.mu_max);
-                let nu = s.link.upload_time(env.info.bytes_composed[&p]);
-                let sel = self.ledger.select_for_width(&env.info, p);
+            for s in statuses {
+                let (p, mu) = assignment::assign_width(info, s.q_flops, self.ctrl.mu_max);
+                let nu = s.link.upload_time(info.bytes_composed[&p]);
+                let sel = self.ledger.select_for_width(info, p);
                 self.ledger.record(&sel, self.tau_default as u64);
                 assignments.push(assignment::Assignment {
                     client: s.client,
@@ -89,21 +119,37 @@ impl HeroesServer {
                     ),
                 });
             }
-            let (fastest, t_l) = fastest_reference(&assignments);
-            RoundPlan { assignments, fastest, t_l, h_star: 1 }
+            let (fastest, t_l) = fastest_reference(&assignments)
+                .ok_or_else(|| anyhow!("cannot plan a round with an empty cohort"))?;
+            Ok(RoundPlan { assignments, fastest, t_l, h_star: 1 })
         }
     }
 
-    /// Execute one synchronous round (paper Alg. 1 lines 4-27) through
-    /// the shared plan → dispatch → collect → aggregate pipeline.
-    pub fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport> {
+    /// Phase A: sample this round's participants and collect statuses.
+    /// Touches only the env's RNG, so the driver may run it while the
+    /// previous round is still executing.
+    pub fn plan_ahead(&mut self, env: &mut FlEnv) -> Result<()> {
+        if self.pending.is_some() {
+            return Err(anyhow!("plan_ahead called twice without take_tasks"));
+        }
         let clients = env.sample_clients();
-        let plan = self.plan(env, &clients);
-        let info = env.info.clone();
+        let statuses = clients.iter().map(|&c| env.status(c)).collect();
+        self.pending = Some(statuses);
+        Ok(())
+    }
+
+    /// Phase B: Alg. 1 planning + payload materialization against the
+    /// current global (so it is sequenced after the previous round's
+    /// aggregation).
+    pub fn take_tasks(&mut self, env: &FlEnv) -> Result<Vec<LocalTask>> {
+        let statuses = self
+            .pending
+            .take()
+            .ok_or_else(|| anyhow!("take_tasks without a preceding plan_ahead"))?;
+        let plan = self.plan(&env.info, &statuses)?;
         let probing = self.probe_every > 0 && self.round % self.probe_every.max(1) == 0;
         let lr_h = crate::coordinator::scheduled_lr(self.lr, self.round, self.lr_decay_rounds);
 
-        // plan → tasks (assignment order)
         let mut tasks = Vec::with_capacity(plan.assignments.len());
         for a in &plan.assignments {
             tasks.push(LocalTask {
@@ -113,17 +159,28 @@ impl HeroesServer {
                 lr: lr_h,
                 train_exec: Manifest::train_name(&self.family, a.p, true),
                 probe_exec: probing.then(|| Manifest::probe_name(&self.family, a.p)),
-                payload: self.global.reduced_inputs(&info, a.p, &a.selection.blocks)?,
+                payload: self.global.reduced_inputs(&env.info, a.p, &a.selection.blocks)?,
                 stream: env.batch_stream(a.client, self.round),
-                bytes: info.bytes_composed[&a.p],
+                bytes: env.info.bytes_composed[&a.p],
                 completion: a.projected_t,
             });
         }
+        self.in_flight = Some(plan);
+        Ok(tasks)
+    }
 
-        // dispatch + ordered collect
-        let outcomes = self.driver.run(env.engine, tasks)?;
-
-        // aggregate (Eq. 5) in assignment order
+    /// Phase C: aggregate (Eq. 5) in assignment order, update the
+    /// estimator, fold the round into the env's meters.
+    pub fn finish_round(
+        &mut self,
+        env: &mut FlEnv,
+        outcomes: Vec<TaskOutcome>,
+    ) -> Result<RoundReport> {
+        let plan = self
+            .in_flight
+            .take()
+            .ok_or_else(|| anyhow!("finish_round without a dispatched round"))?;
+        let info = env.info.clone();
         let mut acc = ComposedAccumulator::new(&info, &self.global);
         let mut estimates = Vec::new();
         for (a, o) in plan.assignments.iter().zip(&outcomes) {
@@ -140,5 +197,11 @@ impl HeroesServer {
         let report = collect_round(env, self.round, &outcomes, self.ledger.variance());
         self.round += 1;
         Ok(report)
+    }
+
+    /// The dispatch configuration (for the `Strategy` trait's shared
+    /// `run_round` composition).
+    pub fn driver(&self) -> RoundDriver {
+        self.driver
     }
 }

@@ -13,7 +13,7 @@ use crate::config::{ExperimentConfig, Partition, Scale};
 use crate::coordinator::env::FlEnv;
 use crate::experiments::runner::{run_scheme, run_schemes, StopCondition};
 use crate::metrics::Recorder;
-use crate::runtime::Engine;
+use crate::runtime::EnginePool;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -23,7 +23,7 @@ use std::path::PathBuf;
 
 /// Experiment context shared by all harnesses.
 pub struct ExpCtx<'e> {
-    pub engine: &'e Engine,
+    pub pool: &'e EnginePool,
     pub scale: Scale,
     pub args: Args,
     pub out_dir: PathBuf,
@@ -88,7 +88,7 @@ fn table1(ctx: &ExpCtx) -> Result<()> {
     println!("== Table I: accuracy within given resource constraints (ResNet twin) ==");
     let cfg = ctx.cfg("resnet")?;
     let schemes = ["heterofl", "flanc", "heroes"]; // MP, original NC, enhanced NC
-    let recs = run_schemes(ctx.engine, &cfg, &schemes, StopCondition::default(),
+    let recs = run_schemes(ctx.pool, &cfg, &schemes, StopCondition::default(),
         Some((&ctx.out_dir, "table1")))?;
 
     // Budgets: 50% / 100% of the *smallest* total consumption across
@@ -137,7 +137,7 @@ fn fig2(ctx: &ExpCtx) -> Result<()> {
     // full participation for the ranking round
     cfg.k_per_round = cfg.n_clients;
     let collect = |scheme: &str| -> Result<Vec<f64>> {
-        let mut env = FlEnv::build(ctx.engine, cfg.clone())?;
+        let mut env = FlEnv::build(ctx.pool, cfg.clone())?;
         let mut rng = Rng::new(cfg.seed ^ 0x5EED);
         let mut s = crate::baselines::make_strategy(scheme, &env.info, &cfg, &mut rng)?;
         // warmup rounds so heroes' estimator is live, then the measured round
@@ -173,7 +173,7 @@ fn fig2(ctx: &ExpCtx) -> Result<()> {
 fn fig4(ctx: &ExpCtx, family: &str, name: &str) -> Result<()> {
     println!("== {name}: training performance ({family}) ==");
     let cfg = ctx.cfg(family)?;
-    let recs = run_schemes(ctx.engine, &cfg, &ALL_SCHEMES, StopCondition::default(),
+    let recs = run_schemes(ctx.pool, &cfg, &ALL_SCHEMES, StopCondition::default(),
         Some((&ctx.out_dir, name)))?;
     // print accuracy at quartiles of the shortest total time
     let t_end = recs.iter().map(|r| r.samples.last().unwrap().sim_time).fold(f64::INFINITY, f64::min);
@@ -199,7 +199,7 @@ fn fig4(ctx: &ExpCtx, family: &str, name: &str) -> Result<()> {
 fn fig5(ctx: &ExpCtx, family: &str, name: &str) -> Result<()> {
     println!("== {name}: average waiting time ({family}) ==");
     let cfg = ctx.cfg(family)?;
-    let recs = run_schemes(ctx.engine, &cfg, &ALL_SCHEMES, StopCondition::default(),
+    let recs = run_schemes(ctx.pool, &cfg, &ALL_SCHEMES, StopCondition::default(),
         Some((&ctx.out_dir, name)))?;
     for r in &recs {
         println!("{:<10} mean wait {:>8.2}s", r.scheme, r.mean_wait());
@@ -218,7 +218,7 @@ fn fig_resource(ctx: &ExpCtx, family: &str, name: &str) -> Result<()> {
     let target = ctx.args.get_f64("target", default_target)?;
     println!("== {name}: resource consumption to reach {:.0}% ({family}) ==", target * 100.0);
     let stop = StopCondition { accuracy: Some(target), ..Default::default() };
-    let recs = run_schemes(ctx.engine, &cfg, &ALL_SCHEMES, stop, Some((&ctx.out_dir, name)))?;
+    let recs = run_schemes(ctx.pool, &cfg, &ALL_SCHEMES, stop, Some((&ctx.out_dir, name)))?;
     println!("{:<10} {:>12} {:>12}", "scheme", "traffic(GB)", "time(s)");
     let mut rows = BTreeMap::new();
     for r in &recs {
@@ -255,7 +255,7 @@ fn fig7(ctx: &ExpCtx, family: &str, name: &str) -> Result<()> {
         } else {
             Partition::Phi(level / 100.0)
         };
-        let recs = run_schemes(ctx.engine, &cfg, &ALL_SCHEMES, StopCondition::default(), None)?;
+        let recs = run_schemes(ctx.pool, &cfg, &ALL_SCHEMES, StopCondition::default(), None)?;
         let t_budget = recs.iter().map(|r| r.samples.last().unwrap().sim_time)
             .fold(f64::INFINITY, f64::min);
         for r in &recs {
@@ -284,7 +284,7 @@ fn fig9(ctx: &ExpCtx) -> Result<()> {
     let target = ctx.args.get_f64("target", default_target)?;
     println!("== fig9: RNN over text, target accuracy {:.0}% ==", target * 100.0);
     let stop = StopCondition { accuracy: Some(target), ..Default::default() };
-    let recs = run_schemes(ctx.engine, &cfg, &ALL_SCHEMES, stop, Some((&ctx.out_dir, "fig9")))?;
+    let recs = run_schemes(ctx.pool, &cfg, &ALL_SCHEMES, stop, Some((&ctx.out_dir, "fig9")))?;
     println!("{:<10} {:>12} {:>12} {:>10}", "scheme", "time(s)", "traffic(GB)", "final acc");
     let mut rows = BTreeMap::new();
     for r in &recs {
@@ -316,7 +316,7 @@ fn e2e(ctx: &ExpCtx) -> Result<()> {
     if ctx.args.get("rounds").is_none() {
         cfg.rounds = if ctx.scale == Scale::Smoke { 150 } else { 400 };
     }
-    let rec = run_scheme(ctx.engine, &cfg, "heroes", StopCondition::default())?;
+    let rec = run_scheme(ctx.pool, &cfg, "heroes", StopCondition::default())?;
     rec.write_files(&ctx.out_dir, "e2e")?;
     println!("{:>6} {:>10} {:>11} {:>10} {:>9}", "round", "time(s)", "traffic(GB)", "test loss", "acc");
     for s in &rec.samples {

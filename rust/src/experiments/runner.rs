@@ -1,12 +1,16 @@
 //! Generic experiment runner: drive one scheme against a fresh `FlEnv`
 //! for a budgeted number of rounds, evaluating periodically into a
 //! `Recorder`. All table/figure harnesses build on this.
+//!
+//! With `cfg.overlap` the rounds between two evaluation points run
+//! through `RoundDriver::run_overlapped` (straggler-overlapped planning
+//! over a persistent worker pool); reports are byte-identical either way.
 
 use crate::baselines::make_strategy;
 use crate::config::ExperimentConfig;
 use crate::coordinator::env::FlEnv;
 use crate::metrics::Recorder;
-use crate::runtime::Engine;
+use crate::runtime::EnginePool;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::path::Path;
@@ -36,12 +40,12 @@ impl StopCondition {
 /// final evaluation), recording the simulated clock and traffic meter at
 /// each point. Returns the full series.
 pub fn run_scheme(
-    engine: &Engine,
+    pool: &EnginePool,
     cfg: &ExperimentConfig,
     scheme: &str,
     stop: StopCondition,
 ) -> Result<Recorder> {
-    let mut env = FlEnv::build(engine, cfg.clone())?;
+    let mut env = FlEnv::build(pool, cfg.clone())?;
     let mut rng = Rng::new(cfg.seed ^ 0x5EED);
     let mut strategy = make_strategy(scheme, &env.info, cfg, &mut rng)?;
     let mut rec = Recorder::new(scheme);
@@ -49,12 +53,30 @@ pub fn run_scheme(
     let (loss0, acc0) = strategy.evaluate(&env)?;
     rec.push_eval(0, 0.0, 0.0, loss0, acc0, loss0, strategy.block_variance());
 
-    #[allow(unused_assignments)]
+    // With overlap, rounds between two evaluation points form one
+    // pipelined chunk; otherwise they run one by one. Reports (and thus
+    // every evaluation) are byte-identical across both paths. The
+    // strategy's own driver is the single source of the worker count.
+    let driver = strategy.driver();
     let mut last_train_loss = loss0;
-    for round in 1..=cfg.rounds {
-        let report = strategy.run_round(&mut env)?;
-        last_train_loss = report.mean_loss;
-        rec.push_round(&report);
+    let mut round = 0usize;
+    while round < cfg.rounds {
+        let until_eval = cfg.eval_every - round % cfg.eval_every;
+        let chunk = until_eval.min(cfg.rounds - round).max(1);
+        let reports = if cfg.overlap {
+            driver.run_overlapped(pool, &mut env, strategy.as_mut(), chunk)?
+        } else {
+            let mut out = Vec::with_capacity(chunk);
+            for _ in 0..chunk {
+                out.push(strategy.run_round(&mut env)?);
+            }
+            out
+        };
+        for report in &reports {
+            last_train_loss = report.mean_loss;
+            rec.push_round(report);
+        }
+        round += chunk;
         if round % cfg.eval_every == 0 || round == cfg.rounds {
             let (loss, acc) = strategy.evaluate(&env)?;
             let t = env.clock.now();
@@ -74,7 +96,7 @@ pub fn run_scheme(
 /// Run several schemes under identical configs; optionally persist each
 /// series under `out_dir` with the given file prefix.
 pub fn run_schemes(
-    engine: &Engine,
+    pool: &EnginePool,
     cfg: &ExperimentConfig,
     schemes: &[&str],
     stop: StopCondition,
@@ -82,7 +104,7 @@ pub fn run_schemes(
 ) -> Result<Vec<Recorder>> {
     let mut all = Vec::with_capacity(schemes.len());
     for scheme in schemes {
-        let rec = run_scheme(engine, cfg, scheme, stop)?;
+        let rec = run_scheme(pool, cfg, scheme, stop)?;
         if let Some((dir, prefix)) = out {
             rec.write_files(dir, prefix)?;
         }

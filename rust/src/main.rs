@@ -11,13 +11,15 @@
 //! Overrides: --clients --k --rounds --lr --seed --gamma --phi --tau
 //! --tau-max --mu-max --rho --epsilon --eval-every --samples-per-client
 //! --test-samples --up-lo/--up-hi/--down-lo/--down-hi --target
-//! --workers (round-driver threads; N and 1 are byte-identical).
+//! --workers (round-driver threads; N and 1 are byte-identical)
+//! --pool (PJRT engines, default one per worker) --overlap (pipeline
+//! round h+1's planning under round h's stragglers; byte-identical).
 
 use anyhow::{anyhow, Result};
 use heroes::baselines::ALL_SCHEMES;
 use heroes::config::{ExperimentConfig, Scale};
 use heroes::experiments::{run_experiment, run_scheme, ExpCtx, StopCondition, ALL_EXPERIMENTS};
-use heroes::runtime::{Engine, Manifest};
+use heroes::runtime::{EnginePool, Manifest};
 use heroes::util::cli::Args;
 use std::path::PathBuf;
 
@@ -49,7 +51,9 @@ fn run() -> Result<()> {
     }
 }
 
-fn make_engine() -> Result<Engine> {
+/// Load the AOT manifest, with a friendly error when artifacts are
+/// missing (the only guard — both commands go through here).
+fn load_manifest() -> Result<Manifest> {
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         return Err(anyhow!(
@@ -57,7 +61,16 @@ fn make_engine() -> Result<Engine> {
             dir.display()
         ));
     }
-    Engine::new(Manifest::load(&dir)?)
+    Manifest::load(&dir)
+}
+
+/// Engine pool sized from the CLI: `--pool N` engines, defaulting to one
+/// per `--workers` thread (so parallel dispatch never contends on one
+/// PJRT client).
+fn make_pool(args: &Args) -> Result<EnginePool> {
+    let workers = args.get_usize("workers", 1)?;
+    let engines = args.get_usize("pool", 0)?;
+    EnginePool::new(load_manifest()?, heroes::config::resolve_pool_size(workers, engines))
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {
@@ -67,9 +80,9 @@ fn cmd_exp(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("usage: heroes exp <id|all> [flags]"))?
         .clone();
     let scale = Scale::parse(args.get_or("scale", "smoke"))?;
-    let engine = make_engine()?;
+    let pool = make_pool(args)?;
     let ctx = ExpCtx {
-        engine: &engine,
+        pool: &pool,
         scale,
         args: args.clone(),
         out_dir: PathBuf::from(args.get_or("out", "results")),
@@ -95,13 +108,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     } else {
         ExperimentConfig::preset(&family, scale).apply_args(args)?
     };
-    let engine = make_engine()?;
+    let pool = EnginePool::new(load_manifest()?, cfg.pool_size())?;
     let stop = StopCondition {
         sim_time: args.get("time-budget").map(|v| v.parse()).transpose().map_err(|_| anyhow!("bad --time-budget"))?,
         traffic_gb: args.get("traffic-budget").map(|v| v.parse()).transpose().map_err(|_| anyhow!("bad --traffic-budget"))?,
         accuracy: args.get("target").map(|v| v.parse()).transpose().map_err(|_| anyhow!("bad --target"))?,
     };
-    let rec = run_scheme(&engine, &cfg, &scheme, stop)?;
+    let rec = run_scheme(&pool, &cfg, &scheme, stop)?;
     let out = PathBuf::from(args.get_or("out", "results"));
     rec.write_files(&out, &format!("train_{family}"))?;
     let last = rec.samples.last().unwrap();

@@ -13,6 +13,11 @@
 //! executions or compiles of *other* executables, and statistics are
 //! plain atomics. `coordinator::round::RoundDriver` relies on this to run
 //! simulated clients on several worker threads against one engine.
+//!
+//! One engine still means one PJRT client, whose intra-op parallelism can
+//! serialize concurrent executions under load; [`super::pool::EnginePool`]
+//! stacks several engines over one shared `Arc<Manifest>` so each round
+//! worker gets a private client and executable cache.
 
 use super::manifest::{DType, ExecSpec, Manifest, TensorSpec};
 use crate::tensor::{IntTensor, Tensor};
@@ -72,6 +77,20 @@ pub struct EngineStats {
     pub execute_secs: f64,
 }
 
+impl EngineStats {
+    /// Merge several snapshots into one (an [`super::pool::EnginePool`]
+    /// reports the sum over its engines).
+    pub fn merged<I: IntoIterator<Item = EngineStats>>(stats: I) -> EngineStats {
+        stats.into_iter().fold(EngineStats::default(), |mut acc, s| {
+            acc.compiles += s.compiles;
+            acc.executions += s.executions;
+            acc.compile_secs += s.compile_secs;
+            acc.execute_secs += s.execute_secs;
+            acc
+        })
+    }
+}
+
 /// Lock-free counters behind `EngineStats`; durations accumulate in
 /// nanoseconds so they stay monotone under concurrent `fetch_add`.
 #[derive(Debug, Default)]
@@ -82,11 +101,12 @@ struct StatCells {
     execute_nanos: AtomicU64,
 }
 
-/// The PJRT engine. One per process, shared by every worker thread — all
-/// mutable state (executable cache, stats) is internally synchronized.
+/// One PJRT client + executable cache. Shareable by every worker thread
+/// (all mutable state is internally synchronized); several engines can
+/// share one parsed manifest through [`Engine::with_shared`].
 pub struct Engine {
     client: xla::PjRtClient,
-    manifest: Manifest,
+    manifest: Arc<Manifest>,
     cache: RwLock<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     /// per-executable compile gates: the first thread to miss the cache
     /// compiles while later threads for the *same* name wait on its gate
@@ -98,6 +118,12 @@ pub struct Engine {
 impl Engine {
     /// Create a CPU engine over a parsed manifest.
     pub fn new(manifest: Manifest) -> Result<Engine> {
+        Engine::with_shared(Arc::new(manifest))
+    }
+
+    /// Create a CPU engine over an already-shared manifest (the
+    /// `EnginePool` path: N clients, one parsed manifest).
+    pub fn with_shared(manifest: Arc<Manifest>) -> Result<Engine> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
         log::debug!(
             "PJRT platform={} devices={}",
@@ -267,6 +293,19 @@ mod tests {
         // the whole parallel round driver rests on this bound
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<Engine>();
+    }
+
+    #[test]
+    fn stats_merge_sums_all_fields() {
+        let a = EngineStats { compiles: 2, executions: 10, compile_secs: 1.5, execute_secs: 0.25 };
+        let b = EngineStats { compiles: 1, executions: 4, compile_secs: 0.5, execute_secs: 0.75 };
+        let m = EngineStats::merged([a, b]);
+        assert_eq!(m.compiles, 3);
+        assert_eq!(m.executions, 14);
+        assert!((m.compile_secs - 2.0).abs() < 1e-12);
+        assert!((m.execute_secs - 1.0).abs() < 1e-12);
+        let empty = EngineStats::merged([]);
+        assert_eq!((empty.compiles, empty.executions), (0, 0));
     }
 
     #[test]

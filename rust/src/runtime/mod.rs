@@ -4,6 +4,8 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod pool;
 
 pub use engine::{Engine, EngineStats, Value};
 pub use manifest::{DType, ExecKind, ExecSpec, InputInfo, LayerInfo, Manifest, ModelInfo, ParamSpec, TensorSpec};
+pub use pool::EnginePool;

@@ -1,10 +1,13 @@
-//! The parallel round pipeline's two contracts (see
-//! `coordinator::round` module docs):
+//! The parallel round pipeline's contracts (see `coordinator::round` and
+//! `runtime::pool` module docs):
 //!
 //! 1. **Determinism** — a seeded run emits byte-identical `RoundReport`
-//!    sequences for `--workers 1` and `--workers 4`, for Heroes and for
-//!    the dense baselines.
-//! 2. **Thread safety** — one `Engine` serves concurrent `execute` calls
+//!    sequences for `--workers 1`, `--workers 4` (shared engine *and*
+//!    per-worker engine pool) and for overlapped dispatch, across all
+//!    three scheme families (Heroes, dense, Flanc).
+//! 2. **Engine pool** — per-engine executable caches are isolated,
+//!    merged stats sum over engines, `prepare_all` warms every shard.
+//! 3. **Thread safety** — one `Engine` serves concurrent `execute` calls
 //!    (the `Sync` bound is also pinned at compile time).
 //!
 //! PJRT-dependent tests require `make artifacts` and skip gracefully
@@ -13,18 +16,19 @@
 use heroes::baselines::{make_strategy, Strategy};
 use heroes::config::{ExperimentConfig, Scale};
 use heroes::coordinator::env::FlEnv;
+use heroes::coordinator::round::RoundDriver;
 use heroes::coordinator::RoundReport;
 use heroes::model::ComposedGlobal;
-use heroes::runtime::{Engine, Manifest};
+use heroes::runtime::{Engine, EnginePool, Manifest};
 use heroes::util::rng::Rng;
 
-fn engine_or_skip() -> Option<Engine> {
+fn pool_or_skip(engines: usize) -> Option<EnginePool> {
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         return None;
     }
-    Some(Engine::new(Manifest::load(&dir).unwrap()).unwrap())
+    Some(EnginePool::new(Manifest::load(&dir).unwrap(), engines).unwrap())
 }
 
 fn tiny_cfg(workers: usize) -> ExperimentConfig {
@@ -39,18 +43,34 @@ fn tiny_cfg(workers: usize) -> ExperimentConfig {
     cfg
 }
 
-/// Run `rounds` rounds of `scheme`, returning the report series plus the
-/// final (loss, accuracy).
+/// Run `rounds` rounds of `scheme` through the per-round (non-overlapped)
+/// path, returning the report series plus the final (loss, accuracy).
 fn run_reports(
-    engine: &Engine,
+    pool: &EnginePool,
     cfg: &ExperimentConfig,
     scheme: &str,
     rounds: usize,
 ) -> (Vec<RoundReport>, (f64, f64)) {
-    let mut env = FlEnv::build(engine, cfg.clone()).unwrap();
+    let mut env = FlEnv::build(pool, cfg.clone()).unwrap();
     let mut rng = Rng::new(cfg.seed ^ 0x5EED);
     let mut s = make_strategy(scheme, &env.info, cfg, &mut rng).unwrap();
     let reports = (0..rounds).map(|_| s.run_round(&mut env).unwrap()).collect();
+    (reports, s.evaluate(&env).unwrap())
+}
+
+/// Same rounds through `RoundDriver::run_overlapped` (straggler-
+/// overlapped planning over a persistent worker pool).
+fn run_reports_overlapped(
+    pool: &EnginePool,
+    cfg: &ExperimentConfig,
+    scheme: &str,
+    rounds: usize,
+) -> (Vec<RoundReport>, (f64, f64)) {
+    let mut env = FlEnv::build(pool, cfg.clone()).unwrap();
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut s = make_strategy(scheme, &env.info, cfg, &mut rng).unwrap();
+    let driver = RoundDriver::new(cfg.workers);
+    let reports = driver.run_overlapped(pool, &mut env, s.as_mut(), rounds).unwrap();
     (reports, s.evaluate(&env).unwrap())
 }
 
@@ -60,23 +80,47 @@ fn engine_type_is_shareable_across_threads() {
     // round driver's scoped workers rely on
     fn assert_send_sync<T: Send + Sync>() {}
     assert_send_sync::<Engine>();
+    assert_send_sync::<EnginePool>();
+}
+
+#[test]
+fn reports_identical_across_workers_pool_and_overlap() {
+    // The acceptance pin: for every scheme family, workers=1 (serial),
+    // workers=4 on a shared engine, workers=4 on a per-worker pool, and
+    // workers=4 overlapped must all produce byte-identical report series
+    // and final models.
+    let Some(shared) = pool_or_skip(1) else { return };
+    let Some(pooled) = pool_or_skip(4) else { return };
+    for scheme in ["heroes", "fedavg", "flanc"] {
+        let rounds = 3;
+        let (serial, eval_serial) = run_reports(&shared, &tiny_cfg(1), scheme, rounds);
+        let (threads, eval_threads) = run_reports(&shared, &tiny_cfg(4), scheme, rounds);
+        let (pool4, eval_pool4) = run_reports(&pooled, &tiny_cfg(4), scheme, rounds);
+        let (overlap, eval_overlap) = run_reports_overlapped(&pooled, &tiny_cfg(4), scheme, rounds);
+        assert_eq!(serial, threads, "{scheme}: workers must not change rounds");
+        assert_eq!(serial, pool4, "{scheme}: the engine pool must not change rounds");
+        assert_eq!(serial, overlap, "{scheme}: overlapped dispatch must not change rounds");
+        assert_eq!(eval_serial, eval_threads, "{scheme}: workers changed the final model");
+        assert_eq!(eval_serial, eval_pool4, "{scheme}: the pool changed the final model");
+        assert_eq!(eval_serial, eval_overlap, "{scheme}: overlap changed the final model");
+    }
 }
 
 #[test]
 fn heroes_reports_identical_for_workers_1_and_4() {
-    let Some(engine) = engine_or_skip() else { return };
-    let (serial, eval1) = run_reports(&engine, &tiny_cfg(1), "heroes", 4);
-    let (parallel, eval4) = run_reports(&engine, &tiny_cfg(4), "heroes", 4);
+    let Some(pool) = pool_or_skip(1) else { return };
+    let (serial, eval1) = run_reports(&pool, &tiny_cfg(1), "heroes", 4);
+    let (parallel, eval4) = run_reports(&pool, &tiny_cfg(4), "heroes", 4);
     assert_eq!(serial, parallel, "heroes rounds must not depend on worker count");
     assert_eq!(eval1, eval4, "final model must not depend on worker count");
 }
 
 #[test]
 fn dense_baseline_reports_identical_for_workers_1_and_4() {
-    let Some(engine) = engine_or_skip() else { return };
+    let Some(pool) = pool_or_skip(2) else { return };
     for scheme in ["fedavg", "heterofl"] {
-        let (serial, eval1) = run_reports(&engine, &tiny_cfg(1), scheme, 4);
-        let (parallel, eval4) = run_reports(&engine, &tiny_cfg(4), scheme, 4);
+        let (serial, eval1) = run_reports(&pool, &tiny_cfg(1), scheme, 4);
+        let (parallel, eval4) = run_reports(&pool, &tiny_cfg(4), scheme, 4);
         assert_eq!(serial, parallel, "{scheme} rounds must not depend on worker count");
         assert_eq!(eval1, eval4, "{scheme} final model must not depend on worker count");
     }
@@ -84,17 +128,95 @@ fn dense_baseline_reports_identical_for_workers_1_and_4() {
 
 #[test]
 fn flanc_reports_identical_for_workers_1_and_4() {
-    let Some(engine) = engine_or_skip() else { return };
-    let (serial, _) = run_reports(&engine, &tiny_cfg(1), "flanc", 3);
-    let (parallel, _) = run_reports(&engine, &tiny_cfg(4), "flanc", 3);
+    let Some(pool) = pool_or_skip(1) else { return };
+    let (serial, _) = run_reports(&pool, &tiny_cfg(1), "flanc", 3);
+    let (parallel, _) = run_reports(&pool, &tiny_cfg(4), "flanc", 3);
     assert_eq!(serial, parallel, "flanc rounds must not depend on worker count");
 }
 
 #[test]
+fn pool_caches_are_isolated_and_stats_merge() {
+    // Compiling on one engine must not touch its siblings' caches; the
+    // pool's stats are the sum of the shards.
+    let Some(pool) = pool_or_skip(2) else { return };
+    let name = Manifest::train_name("cnn", 1, true);
+    pool.engine(0).prepare(&name).unwrap();
+    let s0 = pool.engine(0).stats();
+    let s1 = pool.engine(1).stats();
+    assert!(s0.compiles >= 1, "engine 0 must have compiled {name}");
+    assert_eq!(s1.compiles, 0, "engine 1's cache must stay cold");
+    let merged = pool.stats();
+    assert_eq!(merged.compiles, s0.compiles + s1.compiles);
+    assert_eq!(merged.executions, s0.executions + s1.executions);
+
+    // prepare_all warms every shard; a second call is a no-op (cached)
+    pool.prepare_all(&[name.as_str()]).unwrap();
+    assert!(pool.engine(1).stats().compiles >= 1, "prepare_all must warm engine 1");
+    let warmed = pool.stats().compiles;
+    pool.prepare_all(&[name.as_str()]).unwrap();
+    assert_eq!(pool.stats().compiles, warmed, "warm caches must not recompile");
+}
+
+#[test]
+fn pool_engines_execute_identically() {
+    // The determinism contract's engine-independence leg: one train step
+    // with identical inputs is bit-identical on every engine of the pool
+    // (same HLO, same compile pipeline, same CPU).
+    let Some(pool) = pool_or_skip(3) else { return };
+    let info = pool.manifest().model("cnn").unwrap().clone();
+    let mut rng = Rng::new(2);
+    let global = ComposedGlobal::init(&info, &mut rng).unwrap();
+    let ledger = heroes::coordinator::ledger::BlockLedger::new(&info);
+    let sel = ledger.select_for_width(&info, 1);
+    let params = global.reduced_inputs(&info, 1, &sel.blocks).unwrap();
+
+    let ds = heroes::data::synth_image::ImageGen::cifar_twin().generate(info.batch, 7, &mut rng);
+    let ss = ds.sample_size();
+    let mut x = vec![0.0f32; info.batch * ss];
+    let mut y = vec![0i32; info.batch];
+    for i in 0..info.batch {
+        x[i * ss..(i + 1) * ss].copy_from_slice(ds.sample(i));
+        y[i] = ds.labels[i];
+    }
+    let xt = heroes::tensor::Tensor::from_vec(&[info.batch, ds.hw, ds.hw, ds.channels], x);
+    let yt = heroes::tensor::IntTensor::from_vec(&[info.batch], y);
+    let lr = heroes::tensor::Tensor::from_vec(&[1], vec![0.05]);
+
+    let name = Manifest::train_name("cnn", 1, true);
+    let outs: Vec<Vec<heroes::tensor::Tensor>> = (0..pool.len())
+        .map(|w| {
+            let mut inputs: Vec<heroes::runtime::Value> =
+                params.iter().map(heroes::runtime::Value::F32).collect();
+            inputs.push(heroes::runtime::Value::F32(&xt));
+            inputs.push(heroes::runtime::Value::I32(&yt));
+            inputs.push(heroes::runtime::Value::F32(&lr));
+            pool.engine(w).execute(&name, &inputs).unwrap()
+        })
+        .collect();
+    for (w, o) in outs.iter().enumerate().skip(1) {
+        assert_eq!(o.len(), outs[0].len());
+        for (a, b) in o.iter().zip(&outs[0]) {
+            assert_eq!(a.data(), b.data(), "engine {w} diverged from engine 0");
+        }
+    }
+}
+
+#[test]
+fn empty_cohort_dispatch_is_an_error() {
+    // no artifacts needed: the driver rejects an empty round before it
+    // ever touches an engine... but constructing an EnginePool needs a
+    // client, so gate on artifacts anyway.
+    let Some(pool) = pool_or_skip(1) else { return };
+    let driver = RoundDriver::new(4);
+    let err = driver.run(&pool, Vec::new()).unwrap_err();
+    assert!(err.to_string().contains("empty cohort"), "unexpected error: {err}");
+}
+
+#[test]
 fn two_threads_execute_on_one_engine_concurrently() {
-    let Some(engine) = engine_or_skip() else { return };
+    let Some(pool) = pool_or_skip(1) else { return };
     let cfg = tiny_cfg(1);
-    let env = FlEnv::build(&engine, cfg.clone()).unwrap();
+    let env = FlEnv::build(&pool, cfg.clone()).unwrap();
     let global = ComposedGlobal::init(&env.info, &mut Rng::new(cfg.seed)).unwrap();
 
     // serial reference, also warms the eval executable's compile cache
@@ -115,8 +237,8 @@ fn two_threads_execute_on_one_engine_concurrently() {
 
 #[test]
 fn batch_streams_are_deterministic_and_independent() {
-    let Some(engine) = engine_or_skip() else { return };
-    let env = FlEnv::build(&engine, tiny_cfg(1)).unwrap();
+    let Some(pool) = pool_or_skip(1) else { return };
+    let env = FlEnv::build(&pool, tiny_cfg(1)).unwrap();
     let grab = |client: usize, round: usize| {
         let mut s = env.batch_stream(client, round);
         let (x, y) = s.next_batch();

@@ -5,16 +5,16 @@ use heroes::baselines::Strategy;
 use heroes::config::{ExperimentConfig, Scale};
 use heroes::coordinator::env::FlEnv;
 use heroes::coordinator::server::HeroesServer;
-use heroes::runtime::{Engine, Manifest};
+use heroes::runtime::{EnginePool, Manifest};
 use heroes::util::rng::Rng;
 
-fn engine_or_skip() -> Option<Engine> {
+fn engine_or_skip() -> Option<EnginePool> {
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         return None;
     }
-    Some(Engine::new(Manifest::load(&dir).unwrap()).unwrap())
+    Some(EnginePool::single(Manifest::load(&dir).unwrap()).unwrap())
 }
 
 fn tiny_cfg(family: &str) -> ExperimentConfig {

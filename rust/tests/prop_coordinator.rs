@@ -24,6 +24,7 @@ fn ctrl() -> ControllerCfg {
         tau_max: 40,
         tau_floor: 8,
         h_max: 1_000_000,
+        beta_sq: 0.0,
     }
 }
 
@@ -59,7 +60,8 @@ fn prop_ledger_rotation_balances_counts() {
             let est = Estimates { l: 1.5, sigma_sq: 0.4, g_sq: 1.2, loss: 2.0 };
             let mut max_tau = 0u64;
             for _ in 0..*rounds {
-                let plan = plan_round(&info, &ctrl(), &est, &statuses_from(qs, ups), &mut ledger);
+                let plan = plan_round(&info, &ctrl(), &est, &statuses_from(qs, ups), &mut ledger)
+                    .map_err(|e| e.to_string())?;
                 for a in &plan.assignments {
                     max_tau = max_tau.max(a.tau as u64);
                 }
@@ -91,7 +93,8 @@ fn prop_plan_round_invariants() {
             let cfg = ctrl();
             let mut ledger = BlockLedger::new(&info);
             let est = Estimates { l: 2.0, sigma_sq: 0.3, g_sq: 1.0, loss: 2.3 };
-            let plan = plan_round(&info, &cfg, &est, &statuses_from(qs, ups), &mut ledger);
+            let plan = plan_round(&info, &cfg, &est, &statuses_from(qs, ups), &mut ledger)
+                .map_err(|e| e.to_string())?;
             if plan.assignments.len() != qs.len() {
                 return Err("lost a client".into());
             }
