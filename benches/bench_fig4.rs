@@ -1,32 +1,7 @@
-//! End-to-end bench regenerating Fig. 4a (accuracy vs time, CNN) at a miniature scale
+//! End-to-end bench regenerating Fig. 4a (accuracy vs time, CNN) at a miniature
+//! scale via the shared `util::bench::experiment_miniature` runner
 //! (harness = false; bench-lite). Skips gracefully without artifacts.
 
-use heroes::experiments::{run_experiment, ExpCtx};
-use heroes::runtime::{EnginePool, Manifest};
-use heroes::util::bench::Bench;
-use heroes::util::cli::Args;
-
 fn main() {
-    let dir = Manifest::default_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("(artifacts missing — run `make artifacts`)");
-        return;
-    }
-    let pool = EnginePool::single(Manifest::load(&dir).unwrap()).unwrap();
-    // miniature world: a few clients, a few rounds — the bench measures
-    // the harness end-to-end, the real figures come from `heroes exp`.
-    let args = Args::parse_from(
-        ["--clients", "6", "--k", "3", "--rounds", "6", "--eval-every", "3",
-         "--samples-per-client", "24", "--test-samples", "64"]
-            .iter().map(|s| s.to_string()),
-    );
-    let ctx = ExpCtx {
-        pool: &pool,
-        scale: heroes::config::Scale::Smoke,
-        args,
-        out_dir: std::env::temp_dir().join("heroes_bench_results"),
-    };
-    Bench::quick().run_once("fig4a (miniature)", || {
-        run_experiment("fig4a", &ctx).unwrap();
-    });
+    heroes::util::bench::experiment_miniature("fig4a");
 }

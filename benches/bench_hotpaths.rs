@@ -11,14 +11,18 @@ use heroes::coordinator::assignment::{plan_round, ClientStatus, ControllerCfg};
 use heroes::coordinator::env::FlEnv;
 use heroes::coordinator::frequency::Estimates;
 use heroes::coordinator::ledger::BlockLedger;
+use heroes::coordinator::round::{QuorumCfg, RoundDriver};
+use heroes::coordinator::RoundReport;
 use heroes::data::synth_image::ImageGen;
 use heroes::model::ComposedGlobal;
 use heroes::runtime::{EnginePool, EngineStats, Manifest, Value};
-use heroes::simulation::LinkSample;
+use heroes::simulation::{ClientDevice, DeviceClass, LinkSample};
 use heroes::tensor::blocks::{gather_blocks, scatter_blocks_add};
 use heroes::tensor::Tensor;
 use heroes::util::bench::Bench;
+use heroes::util::json::Json;
 use heroes::util::rng::Rng;
+use heroes::util::stats;
 
 fn main() {
     let b = Bench::default();
@@ -95,6 +99,32 @@ fn main() {
         acc.finalize().unwrap()
     });
 
+    // staleness-weighted aggregation (quorum late merges): the in-place
+    // fused axpy push vs the clone→scale→push a naive weighted merge
+    // would do — the reference materializes a scaled payload per client
+    b.run("coordinator/aggregate K=10 weighted in-place", |_| {
+        let mut acc = ComposedAccumulator::new(&info, &global);
+        for _ in 0..10 {
+            acc.push_weighted(&full.blocks, &payload, 0.5).unwrap();
+        }
+        acc.finalize().unwrap()
+    });
+    b.run("coordinator/aggregate K=10 weighted clone+scale ref", |_| {
+        let mut acc = ComposedAccumulator::new(&info, &global);
+        for _ in 0..10 {
+            let scaled: Vec<Tensor> = payload
+                .iter()
+                .map(|t| {
+                    let mut c = t.clone();
+                    c.scale(0.5);
+                    c
+                })
+                .collect();
+            acc.push_weighted(&full.blocks, &scaled, 1.0).unwrap();
+        }
+        acc.finalize().unwrap()
+    });
+
     // PJRT single train-step dispatch (p=1 and p=4)
     let ds = ImageGen::cifar_twin().generate(info.batch, 7, &mut rng);
     let mut x = vec![0.0f32; info.batch * ds.sample_size()];
@@ -146,6 +176,91 @@ fn main() {
             |_| server.run_round(&mut env).unwrap(),
         );
         driver_stats.push(bench_pool.stats());
+    }
+
+    // ---- straggler tail: full barrier vs --overlap vs --quorum K ----
+    // 16-client cohort, client 0 on a ~4.5x slower device than the rest
+    // (Laptop vs AGX Xavier — the widest spread the fleet model offers):
+    // a synchronous round's completion time T^h (Eq. 19) is pinned to the
+    // straggler, a K=12 quorum round closes at the 12th-fastest
+    // projection. Per-round wall-clock here is the *simulated* round time
+    // — the metric every figure reports; the real seconds per round are
+    // recorded alongside for the pipeline-overlap effect.
+    let mut cfg_tail = ExperimentConfig::preset("cnn", Scale::Smoke);
+    cfg_tail.n_clients = 16;
+    cfg_tail.k_per_round = 16;
+    cfg_tail.samples_per_client = 32;
+    cfg_tail.test_samples = 64;
+    cfg_tail.tau_default = 2;
+    cfg_tail.workers = 4;
+    let rounds = 4usize;
+    let skew_fleet = |env: &mut FlEnv| {
+        for (i, d) in env.fleet.devices.iter_mut().enumerate() {
+            let class = if i == 0 { DeviceClass::Laptop } else { DeviceClass::AgxXavier };
+            *d = ClientDevice::new(class, Rng::new(100 + i as u64));
+        }
+    };
+    let mean_round_time = |reports: &[RoundReport]| {
+        stats::mean(&reports.iter().map(|r| r.round_time).collect::<Vec<_>>())
+    };
+
+    let tail_pool = EnginePool::new(Manifest::load(&dir).unwrap(), 4).unwrap();
+    tail_pool.prepare_all(&[warm.as_str()]).unwrap();
+    let mut snapshot: Vec<(&str, Json)> = Vec::new();
+    for (label, quorum, overlap) in
+        [("full-barrier", 0usize, false), ("overlap", 0, true), ("quorum-12", 12, false)]
+    {
+        let mut env = FlEnv::build(&tail_pool, cfg_tail.clone()).unwrap();
+        skew_fleet(&mut env);
+        let mut srng = Rng::new(cfg_tail.seed ^ 0x5EED);
+        let mut server = DenseServer::fedavg(&info, &cfg_tail, &mut srng).unwrap();
+        let driver = RoundDriver::new(cfg_tail.workers);
+        let t0 = std::time::Instant::now();
+        let reports = if quorum > 0 {
+            driver
+                .run_quorum(
+                    &tail_pool,
+                    &mut env,
+                    &mut server,
+                    rounds,
+                    QuorumCfg { quorum, alpha: 1.0 },
+                    None,
+                )
+                .unwrap()
+        } else if overlap {
+            driver.run_overlapped(&tail_pool, &mut env, &mut server, rounds).unwrap()
+        } else {
+            (0..rounds).map(|_| server.run_round(&mut env).unwrap()).collect()
+        };
+        let real = t0.elapsed().as_secs_f64();
+        let virt = mean_round_time(&reports);
+        println!(
+            "driver/straggler-tail K=16 {label:<13} virtual {virt:8.1} s/round, real {:.3} s/round",
+            real / rounds as f64
+        );
+        snapshot.push((
+            label,
+            Json::obj(vec![
+                ("rounds", Json::Num(rounds as f64)),
+                ("round_time_virtual_mean", Json::Num(virt)),
+                ("real_secs_per_round", Json::Num(real / rounds as f64)),
+            ]),
+        ));
+    }
+    let out = Json::obj(vec![
+        ("bench", Json::Str("straggler_tail_quorum".into())),
+        ("clients", Json::Num(cfg_tail.n_clients as f64)),
+        ("quorum", Json::Num(12.0)),
+        ("configs", Json::obj(snapshot)),
+    ]);
+    // snapshot lands next to the experiment outputs (`heroes exp` writes
+    // results/ too); a read-only tree degrades to a warning, not an abort
+    let snap_path = std::path::Path::new("results").join("BENCH_quorum.json");
+    match std::fs::create_dir_all("results")
+        .and_then(|()| std::fs::write(&snap_path, out.to_string_pretty()))
+    {
+        Ok(()) => println!("  -> {}", snap_path.display()),
+        Err(e) => eprintln!("  (could not write {}: {e})", snap_path.display()),
     }
 
     // totals over everything this bench executed: the shared micro-bench

@@ -17,7 +17,9 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::aggregate::DenseAccumulator;
 use crate::coordinator::env::FlEnv;
 use crate::coordinator::frequency::completion_time;
-use crate::coordinator::round::{collect_round, LocalTask, RoundDriver, TaskOutcome};
+use crate::coordinator::round::{
+    collect_quorum_round, collect_round, LocalTask, QuorumBatch, RoundDriver, TaskOutcome,
+};
 use crate::coordinator::RoundReport;
 use crate::model::DenseGlobal;
 use crate::runtime::{Manifest, ModelInfo};
@@ -207,6 +209,26 @@ impl Strategy for DenseServer {
         self.global = acc.finalize()?;
 
         let report = collect_round(env, self.round, &outcomes, 0.0);
+        self.round += 1;
+        Ok(report)
+    }
+
+    /// Phase C, semi-async: the overlap-aware weighted average — quorum
+    /// members at weight 1, late arrivals at their staleness weight.
+    /// Dense aggregation needs only each outcome's width, so no plan
+    /// retention is required.
+    fn finish_round_quorum(&mut self, env: &mut FlEnv, batch: QuorumBatch) -> Result<RoundReport> {
+        let info = env.info.clone();
+        let mut acc = DenseAccumulator::new(&info, &self.global);
+        for o in &batch.quorum {
+            acc.push_weighted(o.p, &o.result.params, 1.0)?;
+        }
+        for late in &batch.late {
+            acc.push_weighted(late.outcome.p, &late.outcome.result.params, late.weight)?;
+        }
+        self.global = acc.finalize()?;
+
+        let report = collect_quorum_round(env, &batch, 0.0);
         self.round += 1;
         Ok(report)
     }

@@ -14,7 +14,9 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::assignment::assign_width;
 use crate::coordinator::env::FlEnv;
 use crate::coordinator::frequency::completion_time;
-use crate::coordinator::round::{collect_round, LocalTask, RoundDriver, TaskOutcome};
+use crate::coordinator::round::{
+    collect_quorum_round, collect_round, LocalTask, QuorumBatch, RoundDriver, TaskOutcome,
+};
 use crate::coordinator::RoundReport;
 use crate::model::init_params;
 use crate::runtime::{Manifest, ModelInfo};
@@ -87,6 +89,56 @@ impl FlancServer {
         out.push(self.bias.clone());
         out
     }
+
+    /// Weighted neural-composition aggregation, shared by the
+    /// synchronous (all weights 1 — bit-identical to the old integer-
+    /// count arithmetic) and quorum phase-C paths: basis + bias averaged
+    /// `Σw·x/Σw` over every folded update, coefficients within
+    /// same-width groups only; widths nobody contributed to keep state.
+    fn aggregate_weighted<'a>(&mut self, folds: impl Iterator<Item = (&'a TaskOutcome, f32)>) {
+        let l = self.bases.len();
+        let mut basis_sum: Vec<Tensor> =
+            self.bases.iter().map(|v| Tensor::zeros(v.shape())).collect();
+        let mut bias_sum = Tensor::zeros(self.bias.shape());
+        let mut coeff_sum: Vec<Vec<Tensor>> = self
+            .coeffs
+            .iter()
+            .map(|per| per.iter().map(|u| Tensor::zeros(u.shape())).collect())
+            .collect();
+        let mut coeff_w = vec![0.0f32; self.coeffs.len()];
+        let mut total_w = 0.0f32;
+        for (o, w) in folds {
+            for i in 0..l {
+                basis_sum[i].axpy(w, &o.result.params[2 * i]);
+                coeff_sum[o.p - 1][i].axpy(w, &o.result.params[2 * i + 1]);
+            }
+            bias_sum.axpy(w, &o.result.params[2 * l]);
+            coeff_w[o.p - 1] += w;
+            total_w += w;
+        }
+
+        if total_w > 0.0 {
+            let inv = 1.0 / total_w;
+            for (i, mut v) in basis_sum.into_iter().enumerate() {
+                v.scale(inv);
+                self.bases[i] = v;
+            }
+            bias_sum.scale(inv);
+            self.bias = bias_sum;
+        }
+        for (pi, (per, &wsum)) in coeff_sum.into_iter().zip(&coeff_w).enumerate() {
+            if wsum > 0.0 {
+                let inv = 1.0 / wsum;
+                self.coeffs[pi] = per
+                    .into_iter()
+                    .map(|mut u| {
+                        u.scale(inv);
+                        u
+                    })
+                    .collect();
+            }
+        }
+    }
 }
 
 impl Strategy for FlancServer {
@@ -146,53 +198,25 @@ impl Strategy for FlancServer {
     /// Phase C: basis averaged over all K, coefficients within
     /// same-width groups only.
     fn finish_round(&mut self, env: &mut FlEnv, outcomes: Vec<TaskOutcome>) -> Result<RoundReport> {
-        let info = env.info.clone();
-        let l = info.layers.len();
-
-        // basis averaged over all K; coefficients within same-width groups
-        let mut basis_sum: Vec<Tensor> = self.bases.iter().map(|v| Tensor::zeros(v.shape())).collect();
-        let mut bias_sum = Tensor::zeros(self.bias.shape());
-        let mut coeff_sum: Vec<Vec<Tensor>> = self
-            .coeffs
-            .iter()
-            .map(|per| per.iter().map(|u| Tensor::zeros(u.shape())).collect())
-            .collect();
-        let mut coeff_cnt = vec![0u32; info.cap_p];
-        let mut total = 0u32;
-        for o in &outcomes {
-            for i in 0..l {
-                basis_sum[i].add_assign(&o.result.params[2 * i]);
-                coeff_sum[o.p - 1][i].add_assign(&o.result.params[2 * i + 1]);
-            }
-            bias_sum.add_assign(&o.result.params[2 * l]);
-            coeff_cnt[o.p - 1] += 1;
-            total += 1;
-        }
-
-        // basis + bias: average over all participants
-        if total > 0 {
-            let inv = 1.0 / total as f32;
-            for (i, sum) in basis_sum.into_iter().enumerate() {
-                let mut v = sum;
-                v.scale(inv);
-                self.bases[i] = v;
-            }
-            bias_sum.scale(inv);
-            self.bias = bias_sum;
-        }
-        // coefficients: same-shape groups only; untouched widths keep state
-        for (pi, cnt) in coeff_cnt.iter().enumerate() {
-            if *cnt > 0 {
-                let inv = 1.0 / *cnt as f32;
-                for i in 0..l {
-                    let mut u = std::mem::replace(&mut coeff_sum[pi][i], Tensor::zeros(&[1]));
-                    u.scale(inv);
-                    self.coeffs[pi][i] = u;
-                }
-            }
-        }
-
+        self.aggregate_weighted(outcomes.iter().map(|o| (o, 1.0)));
         let report = collect_round(env, self.round, &outcomes, 0.0);
+        self.round += 1;
+        Ok(report)
+    }
+
+    /// Phase C, semi-async: the same aggregation with quorum members at
+    /// weight 1 and late arrivals at their staleness weight — a slow
+    /// width-group's private coefficient still receives its trainers'
+    /// updates rounds later instead of starving.
+    fn finish_round_quorum(&mut self, env: &mut FlEnv, batch: QuorumBatch) -> Result<RoundReport> {
+        self.aggregate_weighted(
+            batch
+                .quorum
+                .iter()
+                .map(|o| (o, 1.0))
+                .chain(batch.late.iter().map(|l| (&l.outcome, l.weight))),
+        );
+        let report = collect_quorum_round(env, &batch, 0.0);
         self.round += 1;
         Ok(report)
     }

@@ -19,7 +19,7 @@ pub use dense::{DenseServer, TauPolicy, WidthPolicy};
 pub use flanc::FlancServer;
 
 use crate::coordinator::env::FlEnv;
-use crate::coordinator::round::{LocalTask, RoundDriver, TaskOutcome};
+use crate::coordinator::round::{LocalTask, QuorumBatch, RoundDriver, TaskOutcome};
 use crate::coordinator::RoundReport;
 use anyhow::Result;
 
@@ -55,6 +55,13 @@ pub trait Strategy {
     fn take_tasks(&mut self, env: &FlEnv) -> Result<Vec<LocalTask>>;
     /// Phase C — aggregate assignment-ordered outcomes, emit the report.
     fn finish_round(&mut self, env: &mut FlEnv, outcomes: Vec<TaskOutcome>) -> Result<RoundReport>;
+    /// Phase C, semi-async variant (`RoundDriver::run_quorum`): fold the
+    /// quorum members' outcomes at weight 1 plus the due late arrivals at
+    /// their staleness weights into the global model. Late outcomes may
+    /// stem from *earlier* rounds' plans (`LateArrival::origin_round`) —
+    /// schemes whose aggregation needs plan state (Heroes' block
+    /// selections) must retain it until every cohort member has merged.
+    fn finish_round_quorum(&mut self, env: &mut FlEnv, batch: QuorumBatch) -> Result<RoundReport>;
     /// Execute one synchronous round (A→B→dispatch→C). One definition
     /// for every scheme — the phases are the per-scheme parts.
     fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport> {
@@ -67,6 +74,12 @@ pub trait Strategy {
     fn evaluate(&self, env: &FlEnv) -> Result<(f64, f64)>;
     /// Current block-variance diagnostic (0 for schemes without a ledger).
     fn block_variance(&self) -> f64 {
+        0.0
+    }
+    /// Fraction of recorded training lost to staleness discounts under
+    /// semi-async quorum merges (0 for schemes without a ledger, and in
+    /// synchronous / full-quorum runs).
+    fn staleness_index(&self) -> f64 {
         0.0
     }
 }
@@ -92,12 +105,20 @@ impl Strategy for crate::coordinator::server::HeroesServer {
         HeroesServer::finish_round(self, env, outcomes)
     }
 
+    fn finish_round_quorum(&mut self, env: &mut FlEnv, batch: QuorumBatch) -> Result<RoundReport> {
+        HeroesServer::finish_round_quorum(self, env, batch)
+    }
+
     fn evaluate(&self, env: &FlEnv) -> Result<(f64, f64)> {
         env.evaluate_composed(&self.global)
     }
 
     fn block_variance(&self) -> f64 {
         self.ledger.variance()
+    }
+
+    fn staleness_index(&self) -> f64 {
+        self.ledger.staleness_index()
     }
 }
 

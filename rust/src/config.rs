@@ -110,6 +110,16 @@ pub struct ExperimentConfig {
     /// (`RoundDriver::run_overlapped`). Byte-identical to the
     /// non-overlapped loop; purely a wall-clock knob.
     pub overlap: bool,
+    /// Semi-async K-of-N quorum (`RoundDriver::run_quorum`): aggregate a
+    /// round once its K virtually-fastest cohort members land and fold
+    /// stragglers into later rounds staleness-weighted. 0 (default)
+    /// disables; K ≥ the cohort size reproduces the synchronous loop
+    /// byte-identically. Takes precedence over `overlap` (it subsumes
+    /// it). Seed-deterministic for any worker/pool count.
+    pub quorum: usize,
+    /// α in the staleness weight `1/(1+s)^α` applied to late merges
+    /// (quorum mode only). 0 disables discounting.
+    pub staleness_alpha: f64,
 }
 
 /// The pool-sizing rule, shared by `ExperimentConfig::pool_size` and
@@ -174,6 +184,8 @@ impl ExperimentConfig {
             workers: 1,
             pool_engines: 0,
             overlap: false,
+            quorum: 0,
+            staleness_alpha: 1.0,
         }
     }
 
@@ -213,6 +225,8 @@ impl ExperimentConfig {
         if args.flag("overlap") {
             self.overlap = true;
         }
+        self.quorum = args.get_usize("quorum", self.quorum)?;
+        self.staleness_alpha = args.get_f64("staleness-alpha", self.staleness_alpha)?;
         if let Some(g) = args.get("gamma") {
             self.partition = Partition::Gamma(g.parse().map_err(|_| anyhow!("bad --gamma"))?);
         }
@@ -244,6 +258,8 @@ impl ExperimentConfig {
         if let Some(o) = j.get("overlap").and_then(Json::as_bool) {
             c.overlap = o;
         }
+        c.quorum = grab_usize("quorum", c.quorum);
+        c.staleness_alpha = grab_f64("staleness_alpha", c.staleness_alpha);
         if let Some(g) = j.get("gamma").and_then(Json::as_f64) {
             c.partition = Partition::Gamma(g);
         }
@@ -273,6 +289,9 @@ impl ExperimentConfig {
         }
         if self.workers == 0 {
             return Err(anyhow!("workers must be at least 1"));
+        }
+        if self.staleness_alpha.is_nan() || self.staleness_alpha < 0.0 {
+            return Err(anyhow!("staleness_alpha must be non-negative"));
         }
         Ok(())
     }
@@ -343,6 +362,29 @@ mod tests {
         let c = ExperimentConfig::from_json("cnn", Scale::Smoke, &j).unwrap();
         assert_eq!((c.workers, c.pool_size()), (3, 3));
         assert!(c.overlap);
+    }
+
+    #[test]
+    fn quorum_knobs_parse_and_validate() {
+        let base = ExperimentConfig::preset("cnn", Scale::Smoke);
+        assert_eq!(base.quorum, 0, "quorum defaults to off (full barrier)");
+        assert_eq!(base.staleness_alpha, 1.0);
+
+        let args = Args::parse_from(
+            ["--quorum", "3", "--staleness-alpha", "2.5"].iter().map(|s| s.to_string()),
+        );
+        let c = ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&args).unwrap();
+        assert_eq!(c.quorum, 3);
+        assert!((c.staleness_alpha - 2.5).abs() < 1e-12);
+
+        let j = crate::util::json::parse(r#"{"quorum": 4, "staleness_alpha": 0.5}"#).unwrap();
+        let c = ExperimentConfig::from_json("cnn", Scale::Smoke, &j).unwrap();
+        assert_eq!(c.quorum, 4);
+        assert!((c.staleness_alpha - 0.5).abs() < 1e-12);
+
+        let mut bad = ExperimentConfig::preset("cnn", Scale::Smoke);
+        bad.staleness_alpha = -1.0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -36,6 +36,17 @@ pub struct BlockLedger {
     classes: Vec<String>,
     /// counts[class_idx][group] — total local iterations (c_i analogue)
     counts: Vec<Vec<u64>>,
+    /// stale[class_idx][group] — iterations *lost* to staleness-weighted
+    /// late merges (semi-async quorum mode): a round-`h` update merged at
+    /// round `h+s` with weight `w = 1/(1+s)^α` only delivered `w·τ`
+    /// effective iterations, so `(1−w)·τ` is recorded here. `counts`
+    /// keeps driving the least-trained rotation on *planned* iterations
+    /// (plan-time behaviour is untouched, preserving the `--quorum N`
+    /// byte-identity); the stale tally discounts them after the fact so
+    /// `relative_variance` — the controller's β² proxy — sees the true
+    /// imbalance: blocks trained mostly by stragglers are systematically
+    /// under-trained even when the planned counts look balanced.
+    stale: Vec<Vec<f64>>,
     /// per layer: (in_class idx, out_class idx)
     layer_classes: Vec<(Option<usize>, Option<usize>)>,
 }
@@ -75,6 +86,7 @@ impl BlockLedger {
         BlockLedger {
             cap_p: info.cap_p,
             counts: vec![vec![0; info.cap_p]; classes.len()],
+            stale: vec![vec![0.0; info.cap_p]; classes.len()],
             classes,
             layer_classes,
         }
@@ -143,21 +155,57 @@ impl BlockLedger {
         }
     }
 
+    /// Record the staleness discount of a late merge (quorum mode): a
+    /// selection trained for `tau` iterations but folded at weight `w`
+    /// only delivered `w·τ` effective iterations; the lost `(1−w)·τ` is
+    /// tallied per group so `relative_variance` sees it.
+    pub fn record_staleness(&mut self, sel: &Selection, tau: u64, weight: f32) {
+        assert_eq!(sel.groups.len(), self.stale.len());
+        let lost = tau as f64 * (1.0 - (weight as f64).clamp(0.0, 1.0));
+        for (class_idx, groups) in sel.groups.iter().enumerate() {
+            for &g in groups {
+                self.stale[class_idx][g] += lost;
+            }
+        }
+    }
+
+    /// Fraction of all recorded iterations lost to staleness discounts
+    /// (0 in synchronous / full-quorum runs).
+    pub fn staleness_index(&self) -> f64 {
+        let total: f64 = self.counts.iter().flatten().map(|&x| x as f64).sum();
+        let lost: f64 = self.stale.iter().flatten().sum();
+        if total > 0.0 {
+            lost / total
+        } else {
+            0.0
+        }
+    }
+
     /// Mean over classes of a per-class statistic of the group counts
-    /// (shared traversal of `variance` / `relative_variance`).
-    fn mean_class_stat(&self, stat: impl Fn(&[f64]) -> f64) -> f64 {
+    /// (shared traversal of `variance` / `relative_variance`);
+    /// `effective` discounts each group's stale tally first.
+    fn mean_class_stat(&self, effective: bool, stat: impl Fn(&[f64]) -> f64) -> f64 {
         let per_class: Vec<f64> = self
             .counts
             .iter()
-            .map(|c| stat(&c.iter().map(|&x| x as f64).collect::<Vec<_>>()))
+            .zip(&self.stale)
+            .map(|(c, st)| {
+                let xs: Vec<f64> = c
+                    .iter()
+                    .zip(st)
+                    .map(|(&x, &s)| if effective { (x as f64 - s).max(0.0) } else { x as f64 })
+                    .collect();
+                stat(&xs)
+            })
             .collect();
         stats::mean(&per_class)
     }
 
     /// V^h: mean over classes of the per-class group-count variance
-    /// (Eq. 21 at group granularity).
+    /// (Eq. 21 at group granularity), on *planned* counts — the rotation
+    /// diagnostic the round reports carry.
     pub fn variance(&self) -> f64 {
-        self.mean_class_stat(stats::variance)
+        self.mean_class_stat(false, stats::variance)
     }
 
     /// V^h normalized per class by the squared mean count (mean squared
@@ -165,9 +213,13 @@ impl BlockLedger {
     /// The controller feeds this to the H* solver as its observed β²
     /// (Eq. 23's coefficient-reduction error bound): evenly-trained
     /// blocks compose with little error, badly skewed training budgets
-    /// inflate it. 0 while the ledger is empty.
+    /// inflate it. Computed over **effective** counts (planned minus the
+    /// staleness losses recorded by `record_staleness`) so semi-async
+    /// runs expose the true per-block imbalance. 0 while the ledger is
+    /// empty; identical to the raw statistic while no staleness has been
+    /// recorded.
     pub fn relative_variance(&self) -> f64 {
-        self.mean_class_stat(|xs| {
+        self.mean_class_stat(true, |xs| {
             let m = stats::mean(xs);
             if m > 0.0 {
                 stats::variance(xs) / (m * m)
@@ -306,6 +358,40 @@ mod tests {
         let sel2 = ledger.select_for_width(&info, 1);
         ledger.record(&sel2, 6);
         assert_eq!(ledger.relative_variance(), 0.0);
+    }
+
+    #[test]
+    fn staleness_discounts_effective_counts() {
+        let info = toy_info();
+        let mut ledger = BlockLedger::new(&info);
+        // two balanced selections: planned counts [6, 6] -> no imbalance
+        let sel_a = ledger.select_for_width(&info, 1);
+        ledger.record(&sel_a, 6);
+        let sel_b = ledger.select_for_width(&info, 1);
+        ledger.record(&sel_b, 6);
+        assert_eq!(ledger.relative_variance(), 0.0);
+        assert_eq!(ledger.staleness_index(), 0.0);
+
+        // group B's 6 iterations merged late at weight 1/2: effective
+        // counts become [6, 3] — the planned balance was an illusion
+        ledger.record_staleness(&sel_b, 6, 0.5);
+        assert!((ledger.staleness_index() - 0.25).abs() < 1e-12, "3 of 12 iterations lost");
+        // effective [6, 3]: mean 4.5, var 2.25 -> CV² = 1/9
+        assert!((ledger.relative_variance() - 1.0 / 9.0).abs() < 1e-12);
+        // the raw rotation diagnostic stays on planned counts
+        assert_eq!(ledger.variance(), 0.0);
+    }
+
+    #[test]
+    fn full_weight_merge_records_no_staleness() {
+        let info = toy_info();
+        let mut ledger = BlockLedger::new(&info);
+        let sel = ledger.select_for_width(&info, 1);
+        ledger.record(&sel, 5);
+        let before = ledger.relative_variance();
+        ledger.record_staleness(&sel, 5, 1.0);
+        assert_eq!(ledger.relative_variance(), before);
+        assert_eq!(ledger.staleness_index(), 0.0);
     }
 
     #[test]

@@ -39,8 +39,60 @@
 //! lands — no per-round fork/join barrier, no thread respawn. Payload
 //! materialization (phase B) stays sequenced after phase C of the
 //! previous round because a synchronous-FL payload is a function of the
-//! aggregated global; overlapping *that* means semi-async aggregation,
-//! which ROADMAP.md tracks as its own item.
+//! aggregated global.
+//!
+//! # Semi-async quorum rounds
+//!
+//! [`RoundDriver::run_quorum`] goes one step further, in the style of
+//! FedBuff-like buffered aggregation: phase C of round *h* no longer
+//! waits for the whole cohort — it fires once the **first K of N**
+//! cohort members (by *projected* completion time, Eq. 17-18) have
+//! landed, so round *h+1*'s payloads materialize and its tasks hit the
+//! workers while *h*'s stragglers are still executing. Stragglers are
+//! not discarded: a round-*h* straggler whose (virtual) upload lands
+//! before round *h'* aggregates is folded into *h'* with staleness
+//! weight `w = 1/(1+s)^α`, `s = h' − h` ([`staleness_weight`];
+//! `--staleness-alpha` configures α), via the schemes'
+//! [`Strategy::finish_round_quorum`] hook and the weighted accumulators
+//! in `coordinator::aggregate`.
+//!
+//! ```text
+//!            round h                round h+1             round h+2
+//!  A ───► B ───► dispatch ───────────────────────────────────────────►
+//!                │ c₁ ▌▌▌▌┆                  the K fastest (by
+//!                │ c₂ ▌▌▌▌▌▌┆◄─ t_q          projected completion)
+//!                │ c₃ ▌▌▌▌▌▌▌▌▌▌▌▌▌▌┆        form the quorum; C(h)
+//!                ▼        │                  fires at t_agg = t₀ + t_q
+//!                       C(h) ─► B(h+1) ─► dispatch(h+1) ...
+//!                         │                    │
+//!                         │     c₃ lands ──────┴─► merged into the
+//!                         │     (virtually) here   first C(h+s) with
+//!                         ▼                        t_agg ≥ its finish,
+//!                     late buffer ───────────────► weight 1/(1+s)^α
+//! ```
+//!
+//! Devices are serialized on the virtual clock: a cohort member still
+//! busy with an earlier round's straggling task starts its next task
+//! when that one lands (`delay_busy_clients`), so a slow client's
+//! re-sampled rounds queue up on its one device instead of running
+//! concurrently — the quorum speedup measures real straggler hiding,
+//! not impossible parallelism.
+//!
+//! **Quorum determinism contract.** Quorum membership and the merge
+//! round of every straggler are decided by the *virtual* clock — the
+//! projected completion times the plan already carries — never by which
+//! worker thread happens to finish first. Completions that race ahead
+//! of their consumption point park in a pending-completion buffer keyed
+//! by `(round, task)`; the coordinator blocks for exactly the outcomes
+//! the virtual schedule says round *h* aggregates. Hence, for a fixed
+//! seed, `--quorum K < N` is **deterministic for any worker count and
+//! pool size**, and `--quorum N` (full cohort, no stragglers, unit
+//! weights) routes through the plain phase-C hook and reproduces the
+//! serial loop **byte-identically**. Stragglers still outstanding when
+//! the run ends are drained and their *updates* dropped (their merge
+//! round never happens; their upload traffic is not billed) — but a
+//! straggler that *failed* still fails the run, exactly like the
+//! synchronous paths.
 //!
 //! # Determinism contract
 //!
@@ -53,7 +105,8 @@
 //! with C, B and C are sequenced), a seeded run produces **byte-identical
 //! `RoundReport` sequences for any `--workers N`, any pool size, and for
 //! overlapped vs. non-overlapped dispatch**
-//! (`rust/tests/integration_parallel.rs` pins all three axes).
+//! (`rust/tests/integration_parallel.rs` pins all three axes, plus the
+//! quorum contract above).
 
 use crate::baselines::Strategy;
 use crate::coordinator::assignment::average_wait;
@@ -63,8 +116,8 @@ use crate::coordinator::RoundReport;
 use crate::runtime::{Engine, EnginePool};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
-use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Sender};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Condvar, Mutex};
 
 /// One client's planned local round, fully self-contained: a worker
@@ -244,16 +297,39 @@ fn into_ordered(slots: Vec<Option<Result<TaskOutcome>>>) -> Result<Vec<TaskOutco
 /// Collect exactly `expected` completions of round `seq`, filing each by
 /// its assignment index (shared by the single-round and overlapped
 /// dispatch paths — their collection protocol must never diverge).
+///
+/// A stray completion — wrong round, out-of-range index, or a duplicate
+/// of an already-filed slot — is a proper `Err`, not a coordinator
+/// abort: on these synchronous paths at most one round is ever in
+/// flight, so anything else on the channel means the queue protocol was
+/// violated and the run must fail cleanly (workers are drained by the
+/// caller's `CloseOnDrop`). The quorum path instead *routes* cross-round
+/// completions into its pending buffer (see `QuorumState`).
 fn collect_completions(
-    rx: &std::sync::mpsc::Receiver<Completion>,
+    rx: &Receiver<Completion>,
     expected: usize,
     seq: usize,
 ) -> Result<Vec<TaskOutcome>> {
     let mut slots: Vec<Option<Result<TaskOutcome>>> = (0..expected).map(|_| None).collect();
     for _ in 0..expected {
         let c = rx.recv().map_err(|_| anyhow!("worker pool died mid-round"))?;
-        assert_eq!(c.seq, seq, "completion from a round not in flight");
-        slots[c.index] = Some(c.outcome);
+        if c.seq != seq {
+            return Err(anyhow!(
+                "stray completion from round {} while round {seq} is in flight",
+                c.seq
+            ));
+        }
+        if c.index >= expected {
+            return Err(anyhow!(
+                "completion index {} out of range for a {expected}-task round",
+                c.index
+            ));
+        }
+        let slot = &mut slots[c.index];
+        if slot.is_some() {
+            return Err(anyhow!("duplicate completion for round {seq} task {}", c.index));
+        }
+        *slot = Some(c.outcome);
     }
     into_ordered(slots)
 }
@@ -298,6 +374,335 @@ fn drive_rounds(
         }
     }
     Ok(())
+}
+
+/// Staleness weight of a late merge: `w = (1/(1+s))^α` for a round-`h`
+/// update folded at round `h+s` (FedBuff-style polynomial discounting).
+/// Positive and monotone non-increasing in `s` for any `α ≥ 0`;
+/// `w(0) = 1` and `α = 0` disables discounting entirely. Floored at
+/// `f32::MIN_POSITIVE`: an extreme α (or staleness) must degrade the
+/// merge to "negligible", never to a zero weight the accumulators would
+/// reject as invalid.
+pub fn staleness_weight(staleness: usize, alpha: f64) -> f32 {
+    ((1.0 / (1.0 + staleness as f64)).powf(alpha) as f32).max(f32::MIN_POSITIVE)
+}
+
+/// Semi-async knobs (`--quorum`, `--staleness-alpha`).
+#[derive(Debug, Clone, Copy)]
+pub struct QuorumCfg {
+    /// aggregate once this many cohort members have (virtually) landed;
+    /// 0 or ≥ cohort size ⇒ full barrier
+    pub quorum: usize,
+    /// α in the staleness weight `1/(1+s)^α`
+    pub alpha: f64,
+}
+
+/// A straggler's update folded into a later round.
+pub struct LateArrival {
+    /// the round whose plan produced this task
+    pub origin_round: usize,
+    /// rounds elapsed between origin and merge
+    pub staleness: usize,
+    /// `staleness_weight(staleness, α)`
+    pub weight: f32,
+    pub outcome: TaskOutcome,
+}
+
+/// One quorum round's phase-C input: the quorum members' outcomes
+/// (assignment order) plus the late arrivals due at this aggregation
+/// point ((origin round, assignment index) order).
+pub struct QuorumBatch {
+    pub round: usize,
+    pub quorum: Vec<TaskOutcome>,
+    pub late: Vec<LateArrival>,
+    /// broadcast bytes of this round's non-quorum cohort members (their
+    /// payloads went out at dispatch; their upload is billed at merge)
+    pub straggler_down_bytes: usize,
+}
+
+/// Per-round observer for [`RoundDriver::run_quorum`]: called after every
+/// aggregation with the freshly-emitted report; return `Ok(false)` to
+/// stop the run early (the experiment runner uses this for evaluation
+/// cadence and early-stop budgets — quorum runs cannot be chunked from
+/// outside without dropping cross-chunk stragglers).
+pub type RoundObserver<'a> =
+    &'a mut dyn FnMut(&FlEnv, &dyn Strategy, &RoundReport) -> Result<bool>;
+
+/// A dispatched-but-unmerged straggler, waiting for the aggregation
+/// point its virtual upload time lands in.
+struct PendingStraggler {
+    seq: usize,
+    index: usize,
+    client: usize,
+    /// virtual absolute time at which its upload lands
+    abs_finish: f64,
+}
+
+/// Plan facts about one dispatched round the quorum scheduler needs
+/// after the tasks themselves have moved to the workers.
+struct RoundMeta {
+    /// virtual absolute dispatch time (round start)
+    t_start: f64,
+    /// per assignment index: projected completion time (τ·μ + ν, plus
+    /// any busy-device delay — see `delay_busy_clients`)
+    completions: Vec<f64>,
+    /// per assignment index: payload transfer size
+    bytes: Vec<usize>,
+    /// per assignment index: the simulated client
+    clients: Vec<usize>,
+}
+
+impl RoundMeta {
+    fn capture(tasks: &[LocalTask], t_start: f64) -> RoundMeta {
+        RoundMeta {
+            t_start,
+            completions: tasks.iter().map(|t| t.completion).collect(),
+            bytes: tasks.iter().map(|t| t.bytes).collect(),
+            clients: tasks.iter().map(|t| t.client).collect(),
+        }
+    }
+}
+
+/// A simulated device trains one task at a time: a cohort member still
+/// (virtually) busy with an earlier round's straggling task starts its
+/// new task when that one lands, not at the round start — without this
+/// serialization a perpetual straggler re-sampled every round would
+/// train several rounds *concurrently* on one device, overstating the
+/// quorum speedup. No-op (adds exactly `0.0`) for clients with nothing
+/// pending, so full-quorum runs are untouched.
+fn delay_busy_clients(tasks: &mut [LocalTask], pending: &[PendingStraggler], t_start: f64) {
+    for task in tasks.iter_mut() {
+        let busy_until = pending
+            .iter()
+            .filter(|p| p.client == task.client)
+            .map(|p| p.abs_finish)
+            .fold(t_start, f64::max);
+        task.completion += busy_until - t_start;
+    }
+}
+
+/// The quorum members of a cohort: indices of the `k` smallest projected
+/// completion times (index tie-break), returned in assignment order.
+fn quorum_members(completions: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..completions.len()).collect();
+    idx.sort_by(|&a, &b| {
+        completions[a]
+            .partial_cmp(&completions[b])
+            .expect("non-finite projected completion time")
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+/// Completion routing for the quorum path: completions arrive in
+/// worker-race order, but the coordinator consumes them in the virtual
+/// schedule's order — anything not yet needed parks here, keyed by
+/// `(round, assignment index)`. Stray and duplicate completions are
+/// proper errors (the cross-round analogue of `collect_completions`'s
+/// validation).
+#[derive(Default)]
+struct QuorumState {
+    arrived: HashMap<(usize, usize), Result<TaskOutcome>>,
+    /// received-or-consumed flag per [seq][index], for duplicate detection
+    received: Vec<Vec<bool>>,
+    /// dispatched completions not yet received
+    outstanding: usize,
+}
+
+impl QuorumState {
+    fn register_round(&mut self, n: usize) {
+        self.received.push(vec![false; n]);
+        self.outstanding += n;
+    }
+
+    fn file(&mut self, c: Completion) -> Result<()> {
+        let Some(round) = self.received.get_mut(c.seq) else {
+            return Err(anyhow!("completion for round {} which was never dispatched", c.seq));
+        };
+        let Some(flag) = round.get_mut(c.index) else {
+            return Err(anyhow!(
+                "completion index {} out of range for round {} ({} tasks)",
+                c.index,
+                c.seq,
+                round.len()
+            ));
+        };
+        if *flag {
+            return Err(anyhow!("duplicate completion for round {} task {}", c.seq, c.index));
+        }
+        *flag = true;
+        self.outstanding -= 1;
+        self.arrived.insert((c.seq, c.index), c.outcome);
+        Ok(())
+    }
+
+    /// Shutdown barrier: wait for every dispatched task's completion and
+    /// surface the earliest-(round, index) failure among the updates that
+    /// will never merge. Their *results* are discarded by design, but a
+    /// panic or engine error in a straggler is a real fault and must fail
+    /// the run exactly as it would on the synchronous paths. Costs no
+    /// extra wall-clock: the worker scope joins on these tasks anyway.
+    fn drain(&mut self, rx: &Receiver<Completion>) -> Result<()> {
+        while self.outstanding > 0 {
+            let c = rx.recv().map_err(|_| anyhow!("worker pool died during drain"))?;
+            self.file(c)?;
+        }
+        let mut keys: Vec<(usize, usize)> = self.arrived.keys().copied().collect();
+        keys.sort_unstable();
+        for key in keys {
+            if let Some(outcome) = self.arrived.remove(&key) {
+                outcome.map_err(|e| {
+                    anyhow!("straggler of round {} (task {}) failed: {e}", key.0, key.1)
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Block until the outcome of `(seq, index)` is available, parking
+    /// everything else that drains off the channel in the meantime.
+    fn demand(
+        &mut self,
+        rx: &Receiver<Completion>,
+        seq: usize,
+        index: usize,
+    ) -> Result<TaskOutcome> {
+        loop {
+            if let Some(outcome) = self.arrived.remove(&(seq, index)) {
+                return outcome;
+            }
+            let c = rx.recv().map_err(|_| anyhow!("worker pool died mid-round"))?;
+            self.file(c)?;
+        }
+    }
+}
+
+/// Coordinator body of [`RoundDriver::run_quorum`] (module docs,
+/// "Semi-async quorum rounds").
+#[allow(clippy::too_many_arguments)]
+fn drive_quorum(
+    queue: &TaskQueue,
+    rx: &Receiver<Completion>,
+    env: &mut FlEnv,
+    strategy: &mut dyn Strategy,
+    rounds: usize,
+    qcfg: QuorumCfg,
+    mut observer: Option<RoundObserver<'_>>,
+    reports: &mut Vec<RoundReport>,
+) -> Result<()> {
+    let mut state = QuorumState::default();
+    let mut pending: Vec<PendingStraggler> = Vec::new();
+
+    // phases A + B for round 0, then dispatch immediately
+    strategy.plan_ahead(env)?;
+    let tasks = strategy.take_tasks(env)?;
+    if tasks.is_empty() {
+        return Err(anyhow!("cannot dispatch an empty cohort"));
+    }
+    let mut meta = RoundMeta::capture(&tasks, env.clock.now());
+    state.register_round(tasks.len());
+    queue.push_round(0, tasks);
+
+    for h in 0..rounds {
+        if h + 1 < rounds {
+            // overlap: round h+1's phase A runs under round h's cohort
+            strategy.plan_ahead(env)?;
+        }
+
+        let n = meta.completions.len();
+        let k = if qcfg.quorum == 0 { n } else { qcfg.quorum.clamp(1, n) };
+        let members = quorum_members(&meta.completions, k);
+        let t_q = members.iter().map(|&i| meta.completions[i]).fold(0.0f64, f64::max);
+        let t_agg = meta.t_start + t_q;
+
+        // stragglers from earlier rounds whose virtual uploads have
+        // landed by this aggregation point, oldest first
+        let (due, still): (Vec<_>, Vec<_>) =
+            pending.drain(..).partition(|p: &PendingStraggler| p.abs_finish <= t_agg);
+        pending = still;
+        let mut due = due;
+        due.sort_by(|a, b| (a.seq, a.index).cmp(&(b.seq, b.index)));
+
+        // pull exactly the outcomes the virtual schedule aggregates now;
+        // anything else racing off the channel parks in the buffer
+        let mut quorum_outcomes = Vec::with_capacity(k);
+        for &i in &members {
+            quorum_outcomes.push(state.demand(rx, h, i)?);
+        }
+        let mut late = Vec::with_capacity(due.len());
+        for p in &due {
+            let outcome = state.demand(rx, p.seq, p.index)?;
+            let staleness = h - p.seq;
+            late.push(LateArrival {
+                origin_round: p.seq,
+                staleness,
+                weight: staleness_weight(staleness, qcfg.alpha),
+                outcome,
+            });
+        }
+
+        // register this round's stragglers (their virtual finish times
+        // are plan facts, known before their results exist)
+        let mut straggler_down = 0usize;
+        {
+            let mut m = members.iter().peekable();
+            for i in 0..n {
+                if m.peek() == Some(&&i) {
+                    m.next();
+                } else {
+                    straggler_down += meta.bytes[i];
+                    pending.push(PendingStraggler {
+                        seq: h,
+                        index: i,
+                        client: meta.clients[i],
+                        abs_finish: meta.t_start + meta.completions[i],
+                    });
+                }
+            }
+        }
+
+        // full quorum with nothing due late is exactly the synchronous
+        // phase C — route through it so `--quorum N` stays byte-identical
+        // to the serial loop
+        let report = if k == n && late.is_empty() {
+            strategy.finish_round(env, quorum_outcomes)?
+        } else {
+            strategy.finish_round_quorum(
+                env,
+                QuorumBatch {
+                    round: h,
+                    quorum: quorum_outcomes,
+                    late,
+                    straggler_down_bytes: straggler_down,
+                },
+            )?
+        };
+        reports.push(report);
+        if let Some(cb) = observer.as_mut() {
+            if !cb(&*env, &*strategy, reports.last().expect("report just pushed"))? {
+                return state.drain(rx);
+            }
+        }
+
+        if h + 1 < rounds {
+            // phase B for h+1 (payloads need the quorum aggregate);
+            // round h's stragglers are still executing on the workers
+            let mut tasks = strategy.take_tasks(env)?;
+            if tasks.is_empty() {
+                return Err(anyhow!("cannot dispatch an empty cohort"));
+            }
+            let t_start = env.clock.now();
+            delay_busy_clients(&mut tasks, &pending, t_start);
+            meta = RoundMeta::capture(&tasks, t_start);
+            state.register_round(tasks.len());
+            queue.push_round(h + 1, tasks);
+        }
+    }
+    // outstanding stragglers never merge, but their failures must still
+    // surface (see QuorumState::drain)
+    state.drain(rx)
 }
 
 /// Dispatches rounds' tasks over up to `workers` threads, worker *i*
@@ -395,6 +800,98 @@ impl RoundDriver {
             drive_rounds(&queue, &rx, env, strategy, rounds, &mut reports)
         });
         result.map(|()| reports)
+    }
+
+    /// Drive `rounds` semi-async K-of-N quorum rounds of `strategy`
+    /// (module docs, "Semi-async quorum rounds"): round *h* aggregates
+    /// once its K virtually-fastest cohort members land, round *h+1*
+    /// dispatches immediately, and *h*'s stragglers fold into later
+    /// rounds staleness-weighted.
+    ///
+    /// Deterministic for a fixed seed regardless of worker count or pool
+    /// size; with `qcfg.quorum` ≥ the cohort size (or 0) every round
+    /// takes the synchronous phase-C hook and the output is byte-
+    /// identical to the serial loop. The observer, when present, runs
+    /// after each round's aggregation; returning `Ok(false)` ends the
+    /// run early. On any exit, outstanding stragglers are drained —
+    /// their updates dropped, their failures surfaced.
+    pub fn run_quorum(
+        &self,
+        pool: &EnginePool,
+        env: &mut FlEnv,
+        strategy: &mut dyn Strategy,
+        rounds: usize,
+        qcfg: QuorumCfg,
+        observer: Option<RoundObserver<'_>>,
+    ) -> Result<Vec<RoundReport>> {
+        if rounds == 0 {
+            return Ok(Vec::new());
+        }
+        // No serial special case: quorum semantics live on the virtual
+        // clock, so even one worker runs the full pipeline (it just
+        // executes the queue sequentially) and produces the same bytes.
+        let queue = TaskQueue::new();
+        let (tx, rx) = channel::<Completion>();
+        let mut reports = Vec::with_capacity(rounds);
+        let result = std::thread::scope(|s| {
+            for w in 0..self.workers {
+                let tx = tx.clone();
+                let queue = &queue;
+                let engine = pool.engine(w);
+                s.spawn(move || worker_loop(engine, queue, tx));
+            }
+            drop(tx);
+
+            let _close = CloseOnDrop(&queue);
+            drive_quorum(&queue, &rx, env, strategy, rounds, qcfg, observer, &mut reports)
+        });
+        result.map(|()| reports)
+    }
+}
+
+/// Shared phase-C bookkeeping for quorum rounds, the semi-async analogue
+/// of [`collect_round`]: the round's clock advance is the **quorum**
+/// completion time (the K-th smallest projection — the whole point of
+/// the mode), waiting time is measured within the quorum, downlink
+/// traffic covers the full cohort broadcast (stragglers received their
+/// payloads too) while uplink bills quorum members now and each
+/// straggler at its merge round, and the training-loss mean covers
+/// everything folded into this aggregate (quorum and late alike).
+pub fn collect_quorum_round(
+    env: &mut FlEnv,
+    batch: &QuorumBatch,
+    block_variance: f64,
+) -> RoundReport {
+    let mut down = batch.straggler_down_bytes;
+    let mut up = 0usize;
+    let mut completion = Vec::with_capacity(batch.quorum.len());
+    let mut losses = Vec::with_capacity(batch.quorum.len() + batch.late.len());
+    for o in &batch.quorum {
+        down += o.bytes;
+        up += o.bytes;
+        completion.push(o.completion);
+        losses.push(o.result.mean_loss);
+    }
+    for l in &batch.late {
+        up += l.outcome.bytes;
+        losses.push(l.outcome.result.mean_loss);
+    }
+    env.traffic.record_down(down);
+    env.traffic.record_up(up);
+    let round_time = completion.iter().copied().fold(0.0, f64::max);
+    env.clock.advance(round_time);
+
+    RoundReport {
+        round: batch.round,
+        round_time,
+        avg_wait: average_wait(&completion),
+        mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
+        taus: batch.quorum.iter().map(|o| o.tau).collect(),
+        widths: batch.quorum.iter().map(|o| o.p).collect(),
+        down_bytes: down,
+        up_bytes: up,
+        completion_times: completion,
+        block_variance,
     }
 }
 
@@ -497,5 +994,145 @@ mod tests {
         ];
         let err = into_ordered(slots).unwrap_err();
         assert_eq!(err.to_string(), "first");
+    }
+
+    fn dummy_outcome(client: usize) -> TaskOutcome {
+        TaskOutcome {
+            client,
+            p: 1,
+            tau: 1,
+            bytes: 0,
+            completion: 0.0,
+            result: crate::coordinator::client::LocalResult {
+                params: Vec::new(),
+                mean_loss: 0.0,
+                final_loss: 0.0,
+                mean_grad_sq: 0.0,
+                estimates: None,
+            },
+        }
+    }
+
+    #[test]
+    fn stray_completion_is_an_error_not_a_panic() {
+        // regression: a completion from a round not in flight used to hit
+        // `assert_eq!` and abort the coordinator
+        let (tx, rx) = channel::<Completion>();
+        tx.send(Completion { seq: 3, index: 0, outcome: Ok(dummy_outcome(0)) }).unwrap();
+        let err = collect_completions(&rx, 1, 0).unwrap_err();
+        assert!(err.to_string().contains("stray completion"), "unexpected error: {err}");
+
+        // duplicate slot
+        tx.send(Completion { seq: 0, index: 0, outcome: Ok(dummy_outcome(0)) }).unwrap();
+        tx.send(Completion { seq: 0, index: 0, outcome: Ok(dummy_outcome(0)) }).unwrap();
+        let err = collect_completions(&rx, 2, 0).unwrap_err();
+        assert!(err.to_string().contains("duplicate completion"), "unexpected error: {err}");
+
+        // out-of-range index
+        tx.send(Completion { seq: 0, index: 9, outcome: Ok(dummy_outcome(0)) }).unwrap();
+        let err = collect_completions(&rx, 1, 0).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn busy_clients_are_serialized_on_the_virtual_clock() {
+        use crate::data::loader::ImageLoader;
+        use crate::data::synth_image::ImageGen;
+        use crate::util::rng::Rng;
+        use std::sync::Arc;
+
+        let set = Arc::new(ImageGen::cifar_twin().generate(4, 1, &mut Rng::new(1)));
+        let mk = |client: usize, completion: f64| LocalTask {
+            client,
+            p: 1,
+            tau: 1,
+            lr: 0.1,
+            train_exec: "unused".into(),
+            probe_exec: None,
+            payload: Vec::new(),
+            stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
+            bytes: 0,
+            completion,
+        };
+        // round starts at t=10; client 3 is still busy until t=25 with a
+        // round-0 straggler, client 4 is idle
+        let pending = vec![
+            PendingStraggler { seq: 0, index: 2, client: 3, abs_finish: 25.0 },
+            PendingStraggler { seq: 0, index: 1, client: 3, abs_finish: 19.0 },
+        ];
+        let mut tasks = vec![mk(3, 5.0), mk(4, 5.0)];
+        delay_busy_clients(&mut tasks, &pending, 10.0);
+        // busy client: starts at 25, finishes 15 after round start + 5
+        assert_eq!(tasks[0].completion, 20.0);
+        // idle client: untouched (exactly +0.0)
+        assert_eq!(tasks[1].completion, 5.0);
+    }
+
+    #[test]
+    fn quorum_members_are_the_virtually_fastest() {
+        // ranked by projected completion, index tie-break, returned in
+        // assignment order
+        let completions = [5.0, 1.0, 3.0, 1.0, 9.0];
+        assert_eq!(quorum_members(&completions, 2), vec![1, 3]);
+        assert_eq!(quorum_members(&completions, 3), vec![1, 2, 3]);
+        assert_eq!(quorum_members(&completions, 5), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn staleness_weight_properties() {
+        assert_eq!(staleness_weight(0, 1.0), 1.0);
+        assert!((staleness_weight(1, 1.0) - 0.5).abs() < 1e-7);
+        assert!((staleness_weight(3, 1.0) - 0.25).abs() < 1e-7);
+        assert_eq!(staleness_weight(7, 0.0), 1.0, "α = 0 disables discounting");
+        // α sharpens the discount
+        assert!(staleness_weight(2, 2.0) < staleness_weight(2, 1.0));
+        // extreme α underflows f64→f32 — the floor keeps the weight a
+        // valid (positive) accumulator input instead of aborting the run
+        let w = staleness_weight(2, 100.0);
+        assert!(w > 0.0, "underflowed weight must stay positive, got {w}");
+    }
+
+    #[test]
+    fn quorum_state_routes_cross_round_completions() {
+        let (tx, rx) = channel::<Completion>();
+        let mut state = QuorumState::default();
+        state.register_round(2); // round 0
+        state.register_round(1); // round 1
+
+        // round 1's completion races ahead of round 0's — demand(0, ..)
+        // must park it, then demand(1, ..) must find it buffered
+        tx.send(Completion { seq: 1, index: 0, outcome: Ok(dummy_outcome(10)) }).unwrap();
+        tx.send(Completion { seq: 0, index: 1, outcome: Ok(dummy_outcome(11)) }).unwrap();
+        tx.send(Completion { seq: 0, index: 0, outcome: Ok(dummy_outcome(12)) }).unwrap();
+        assert_eq!(state.demand(&rx, 0, 0).unwrap().client, 12);
+        assert_eq!(state.demand(&rx, 0, 1).unwrap().client, 11);
+        assert_eq!(state.demand(&rx, 1, 0).unwrap().client, 10);
+
+        // never-dispatched round and duplicates are errors
+        let c = Completion { seq: 5, index: 0, outcome: Ok(dummy_outcome(0)) };
+        assert!(state.file(c).is_err());
+        let dup = Completion { seq: 1, index: 0, outcome: Ok(dummy_outcome(0)) };
+        assert!(state.file(dup).unwrap_err().to_string().contains("duplicate"));
+    }
+
+    #[test]
+    fn drain_surfaces_failed_never_merged_stragglers() {
+        // a straggler whose update would be discarded at run end must
+        // still fail the run if its task errored
+        let (tx, rx) = channel::<Completion>();
+        let mut state = QuorumState::default();
+        state.register_round(2);
+        tx.send(Completion { seq: 0, index: 0, outcome: Ok(dummy_outcome(1)) }).unwrap();
+        tx.send(Completion { seq: 0, index: 1, outcome: Err(anyhow!("engine died")) }).unwrap();
+        let err = state.drain(&rx).unwrap_err();
+        assert!(err.to_string().contains("straggler of round 0"), "unexpected error: {err}");
+        assert!(err.to_string().contains("engine died"), "unexpected error: {err}");
+
+        // all-Ok leftovers drain cleanly
+        let (tx, rx) = channel::<Completion>();
+        let mut state = QuorumState::default();
+        state.register_round(1);
+        tx.send(Completion { seq: 0, index: 0, outcome: Ok(dummy_outcome(2)) }).unwrap();
+        state.drain(&rx).unwrap();
     }
 }

@@ -13,6 +13,14 @@
 //!   is fed from the ledger's observed block-training imbalance here.
 //! * `finish_round` — basis + block-wise aggregation in assignment
 //!   order, estimator update, clock/traffic bookkeeping.
+//! * `finish_round_quorum` — the semi-async variant: quorum members fold
+//!   at weight 1, late arrivals at their staleness weight, each against
+//!   the block selections of the *plan that produced them* — so the
+//!   low-rank tensor updates of a slow client still reach exactly the
+//!   blocks only it trained, rounds later. Plans are retained in a small
+//!   deque until every cohort member has merged; the ledger records the
+//!   staleness discount per block so the controller's β² proxy sees the
+//!   true training imbalance.
 //!
 //! `run_round` composes the three phases around the shared parallel
 //! `RoundDriver` (`coordinator::round`).
@@ -20,17 +28,30 @@
 use crate::config::ExperimentConfig;
 use crate::coordinator::aggregate::ComposedAccumulator;
 use crate::coordinator::assignment::{
-    self, fastest_reference, ClientStatus, ControllerCfg, RoundPlan,
+    self, fastest_reference, Assignment, ClientStatus, ControllerCfg, RoundPlan,
 };
 use crate::coordinator::env::FlEnv;
 use crate::coordinator::estimator::EstimateTracker;
 use crate::coordinator::ledger::BlockLedger;
-use crate::coordinator::round::{collect_round, LocalTask, RoundDriver, TaskOutcome};
+use crate::coordinator::round::{
+    collect_quorum_round, collect_round, LocalTask, QuorumBatch, RoundDriver, TaskOutcome,
+};
 use crate::coordinator::RoundReport;
 use crate::model::ComposedGlobal;
 use crate::runtime::{Manifest, ModelInfo};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+
+/// A dispatched round's plan, retained until every cohort member's
+/// update has been folded (quorum mode merges stragglers rounds later,
+/// and aggregation needs their block selections).
+struct PlanSlot {
+    round: usize,
+    plan: RoundPlan,
+    /// cohort members not yet folded into any aggregate
+    remaining: usize,
+}
 
 /// The Heroes PS state.
 pub struct HeroesServer {
@@ -48,9 +69,9 @@ pub struct HeroesServer {
     pub probe_every: usize,
     /// phase-A output (statuses) awaiting `take_tasks`
     pending: Option<Vec<ClientStatus>>,
-    /// phase-B plan awaiting `finish_round` (aggregation needs the block
-    /// selections, which outcomes do not carry)
-    in_flight: Option<RoundPlan>,
+    /// phase-B plans whose outcomes are still (partly) outstanding,
+    /// oldest first; the synchronous paths hold at most one
+    in_flight: VecDeque<PlanSlot>,
 }
 
 impl HeroesServer {
@@ -78,7 +99,7 @@ impl HeroesServer {
             round: 0,
             probe_every: 1,
             pending: None,
-            in_flight: None,
+            in_flight: VecDeque::new(),
         })
     }
 
@@ -165,8 +186,26 @@ impl HeroesServer {
                 completion: a.projected_t,
             });
         }
-        self.in_flight = Some(plan);
+        let remaining = plan.assignments.len();
+        self.in_flight.push_back(PlanSlot { round: self.round, plan, remaining });
         Ok(tasks)
+    }
+
+    /// The retained plan's assignment for `client` of `round`.
+    fn assignment_of(
+        in_flight: &VecDeque<PlanSlot>,
+        round: usize,
+        client: usize,
+    ) -> Result<&Assignment> {
+        let slot = in_flight
+            .iter()
+            .find(|s| s.round == round)
+            .ok_or_else(|| anyhow!("no retained plan for round {round}"))?;
+        slot.plan
+            .assignments
+            .iter()
+            .find(|a| a.client == client)
+            .ok_or_else(|| anyhow!("client {client} was not in round {round}'s plan"))
     }
 
     /// Phase C: aggregate (Eq. 5) in assignment order, update the
@@ -176,10 +215,13 @@ impl HeroesServer {
         env: &mut FlEnv,
         outcomes: Vec<TaskOutcome>,
     ) -> Result<RoundReport> {
-        let plan = self
+        let pos = self
             .in_flight
-            .take()
+            .iter()
+            .position(|s| s.round == self.round)
             .ok_or_else(|| anyhow!("finish_round without a dispatched round"))?;
+        let slot = self.in_flight.remove(pos).expect("position just found");
+        let plan = slot.plan;
         let info = env.info.clone();
         let mut acc = ComposedAccumulator::new(&info, &self.global);
         let mut estimates = Vec::new();
@@ -197,6 +239,79 @@ impl HeroesServer {
         let report = collect_round(env, self.round, &outcomes, self.ledger.variance());
         self.round += 1;
         Ok(report)
+    }
+
+    /// Phase C, semi-async: quorum members fold at weight 1 against this
+    /// round's plan, late arrivals at their staleness weight against the
+    /// plan of their **origin** round — so a slow client's low-rank
+    /// block updates still land on exactly the blocks it trained. The
+    /// ledger books each late merge's staleness discount per block
+    /// (`BlockLedger::record_staleness`), which feeds the controller's
+    /// β² proxy next round.
+    pub fn finish_round_quorum(
+        &mut self,
+        env: &mut FlEnv,
+        batch: QuorumBatch,
+    ) -> Result<RoundReport> {
+        if batch.round != self.round {
+            return Err(anyhow!(
+                "quorum batch for round {} but server is at round {}",
+                batch.round,
+                self.round
+            ));
+        }
+        let info = env.info.clone();
+        let mut acc = ComposedAccumulator::new(&info, &self.global);
+        let mut estimates = Vec::new();
+        let mut losses = Vec::with_capacity(batch.quorum.len() + batch.late.len());
+        for o in &batch.quorum {
+            let a = Self::assignment_of(&self.in_flight, batch.round, o.client)?;
+            acc.push_weighted(&a.selection.blocks, &o.result.params, 1.0)?;
+            if let Some(e) = o.result.estimates {
+                estimates.push(e);
+            }
+            losses.push(o.result.mean_loss);
+        }
+        for late in &batch.late {
+            let a = Self::assignment_of(&self.in_flight, late.origin_round, late.outcome.client)?;
+            acc.push_weighted(&a.selection.blocks, &late.outcome.result.params, late.weight)?;
+            self.ledger.record_staleness(&a.selection, a.tau as u64, late.weight);
+            if let Some(e) = late.outcome.result.estimates {
+                estimates.push(e);
+            }
+            losses.push(late.outcome.result.mean_loss);
+        }
+        self.global = acc.finalize()?;
+
+        // retire fully-merged plans
+        for o in &batch.quorum {
+            Self::retire(&mut self.in_flight, batch.round, o.client)?;
+        }
+        for late in &batch.late {
+            Self::retire(&mut self.in_flight, late.origin_round, late.outcome.client)?;
+        }
+        self.in_flight.retain(|s| s.remaining > 0);
+
+        let mean_loss = losses.iter().sum::<f64>() / losses.len().max(1) as f64;
+        self.tracker.update(&estimates, mean_loss);
+
+        let report = collect_quorum_round(env, &batch, self.ledger.variance());
+        self.round += 1;
+        Ok(report)
+    }
+
+    /// Count one folded cohort member of `round` towards its plan's
+    /// retirement.
+    fn retire(in_flight: &mut VecDeque<PlanSlot>, round: usize, client: usize) -> Result<()> {
+        let slot = in_flight
+            .iter_mut()
+            .find(|s| s.round == round)
+            .ok_or_else(|| anyhow!("no retained plan for round {round} (client {client})"))?;
+        slot.remaining = slot
+            .remaining
+            .checked_sub(1)
+            .ok_or_else(|| anyhow!("round {round} over-merged (client {client})"))?;
+        Ok(())
     }
 
     /// The dispatch configuration (for the `Strategy` trait's shared

@@ -5,10 +5,16 @@
 //! With `cfg.overlap` the rounds between two evaluation points run
 //! through `RoundDriver::run_overlapped` (straggler-overlapped planning
 //! over a persistent worker pool); reports are byte-identical either way.
+//! With `cfg.quorum > 0` the whole budget runs as **one** semi-async
+//! `RoundDriver::run_quorum` pipeline — chunking at evaluation points
+//! would discard cross-chunk stragglers — with the evaluation cadence
+//! and early-stop budgets riding the driver's per-round observer.
 
-use crate::baselines::make_strategy;
+use crate::baselines::{make_strategy, Strategy};
 use crate::config::ExperimentConfig;
 use crate::coordinator::env::FlEnv;
+use crate::coordinator::round::QuorumCfg;
+use crate::coordinator::RoundReport;
 use crate::metrics::Recorder;
 use crate::runtime::EnginePool;
 use crate::util::rng::Rng;
@@ -32,6 +38,32 @@ impl StopCondition {
             || self.traffic_gb.map(|t| traffic_gb >= t).unwrap_or(false)
             || self.accuracy.map(|a| acc >= a).unwrap_or(false)
     }
+}
+
+/// One evaluation point, shared by the synchronous loop and the quorum
+/// observer so the two modes can never record diverging series:
+/// evaluate the global model, push the sample, log, and check the stop
+/// budgets. Returns `false` once a budget is met.
+#[allow(clippy::too_many_arguments)]
+fn eval_point(
+    env: &FlEnv,
+    strategy: &dyn Strategy,
+    rec: &mut Recorder,
+    scheme: &str,
+    round: usize,
+    last_train_loss: f64,
+    stop: StopCondition,
+) -> Result<bool> {
+    let (loss, acc) = strategy.evaluate(env)?;
+    let t = env.clock.now();
+    let gb = env.traffic.total_gb();
+    rec.push_eval(round, t, gb, loss, acc, last_train_loss, strategy.block_variance());
+    let stale = strategy.staleness_index();
+    log::info!(
+        "[{scheme}] round {round:>4}: t={t:9.1}s traffic={gb:.4}GB loss={loss:.4} \
+         acc={acc:.4} stale={stale:.3}"
+    );
+    Ok(!stop.met(t, gb, acc))
 }
 
 /// Run `scheme` on a fresh environment derived from `cfg`.
@@ -59,6 +91,26 @@ pub fn run_scheme(
     // strategy's own driver is the single source of the worker count.
     let driver = strategy.driver();
     let mut last_train_loss = loss0;
+
+    if cfg.quorum > 0 {
+        // semi-async: one continuous pipeline, evaluation + stop budgets
+        // in the observer (module docs)
+        let qcfg = QuorumCfg { quorum: cfg.quorum, alpha: cfg.staleness_alpha };
+        let total = cfg.rounds;
+        let eval_every = cfg.eval_every;
+        let mut observer = |env: &FlEnv, strategy: &dyn Strategy, report: &RoundReport| {
+            last_train_loss = report.mean_loss;
+            rec.push_round(report);
+            let done = report.round + 1;
+            if done % eval_every == 0 || done == total {
+                return eval_point(env, strategy, &mut rec, scheme, done, last_train_loss, stop);
+            }
+            Ok(true)
+        };
+        driver.run_quorum(pool, &mut env, strategy.as_mut(), total, qcfg, Some(&mut observer))?;
+        return Ok(rec);
+    }
+
     let mut round = 0usize;
     while round < cfg.rounds {
         let until_eval = cfg.eval_every - round % cfg.eval_every;
@@ -78,14 +130,9 @@ pub fn run_scheme(
         }
         round += chunk;
         if round % cfg.eval_every == 0 || round == cfg.rounds {
-            let (loss, acc) = strategy.evaluate(&env)?;
-            let t = env.clock.now();
-            let gb = env.traffic.total_gb();
-            rec.push_eval(round, t, gb, loss, acc, last_train_loss, strategy.block_variance());
-            log::info!(
-                "[{scheme}] round {round:>4}: t={t:9.1}s traffic={gb:.4}GB loss={loss:.4} acc={acc:.4}"
-            );
-            if stop.met(t, gb, acc) {
+            let go =
+                eval_point(&env, strategy.as_ref(), &mut rec, scheme, round, last_train_loss, stop)?;
+            if !go {
                 break;
             }
         }

@@ -13,7 +13,12 @@
 //! --test-samples --up-lo/--up-hi/--down-lo/--down-hi --target
 //! --workers (round-driver threads; N and 1 are byte-identical)
 //! --pool (PJRT engines, default one per worker) --overlap (pipeline
-//! round h+1's planning under round h's stragglers; byte-identical).
+//! round h+1's planning under round h's stragglers; byte-identical)
+//! --quorum K (semi-async K-of-N aggregation: a round closes once its K
+//! virtually-fastest members land, stragglers merge into later rounds
+//! staleness-weighted; K ≥ cohort ≡ the synchronous loop byte-for-byte,
+//! K < cohort is seed-deterministic for any worker count)
+//! --staleness-alpha (α in the late-merge weight 1/(1+s)^α, default 1).
 
 use anyhow::{anyhow, Result};
 use heroes::baselines::ALL_SCHEMES;

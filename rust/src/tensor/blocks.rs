@@ -68,6 +68,74 @@ pub fn scatter_blocks_add(sums: &mut Tensor, counts: &mut [u32], reduced: &Tenso
     }
 }
 
+/// Weighted block accumulation: `sums += w · reduced` block-wise, with
+/// `weights[b]` accumulating `w` per touched block. The fused in-place
+/// form of (clone → scale(w) → scatter_blocks_add): the semi-async merge
+/// path folds staleness-weighted late updates without materializing a
+/// scaled temporary. `w = 1.0` reproduces `scatter_blocks_add`
+/// bit-for-bit (multiplication by 1.0 is exact), which keeps the full-
+/// quorum path byte-identical to the synchronous aggregation.
+pub fn scatter_blocks_axpy(
+    sums: &mut Tensor,
+    weights: &mut [f32],
+    reduced: &Tensor,
+    ids: &[usize],
+    o: usize,
+    w: f32,
+) {
+    let (r, total_cols) = dims2(sums);
+    let (rr, red_cols) = dims2(reduced);
+    assert_eq!(r, rr, "rank-dim mismatch");
+    assert_eq!(red_cols, ids.len() * o, "reduced width {red_cols} != {}*{o}", ids.len());
+    assert!(total_cols % o == 0);
+    assert_eq!(weights.len(), total_cols / o, "weights must have one slot per block");
+
+    let src = reduced.data();
+    let dst = sums.data_mut();
+    for row in 0..r {
+        let dst_row = row * total_cols;
+        let src_row = row * red_cols;
+        for (slot, &id) in ids.iter().enumerate() {
+            let d = dst_row + id * o;
+            let s = src_row + slot * o;
+            for c in 0..o {
+                dst[d + c] += w * src[s + c];
+            }
+        }
+    }
+    for &id in ids {
+        weights[id] += w;
+    }
+}
+
+/// Weighted Eq. 5 finalize: blocks with accumulated weight > 0 become
+/// `sum / weight` (an affine combination — the effective per-client
+/// coefficients of every block sum to 1); weight-0 blocks carry
+/// `fallback` (the previous global coefficient). With unit weights the
+/// division is bit-identical to `finalize_block_average` (a small f32
+/// integer equals the u32 count exactly).
+pub fn finalize_block_weighted(sums: &mut Tensor, weights: &[f32], fallback: &Tensor, o: usize) {
+    let (r, total_cols) = dims2(sums);
+    assert_eq!(fallback.shape(), sums.shape(), "fallback shape mismatch");
+    assert_eq!(weights.len(), total_cols / o);
+    let prev = fallback.data();
+    let data = sums.data_mut();
+    for row in 0..r {
+        let base = row * total_cols;
+        for (b, &wsum) in weights.iter().enumerate() {
+            let off = base + b * o;
+            if wsum == 0.0 {
+                data[off..off + o].copy_from_slice(&prev[off..off + o]);
+            } else {
+                let inv = 1.0 / wsum;
+                for c in 0..o {
+                    data[off + c] *= inv;
+                }
+            }
+        }
+    }
+}
+
 /// Finish paper Eq. 5: blocks with `counts > 0` become `sum / count`;
 /// untouched blocks keep `fallback`'s value (the previous global
 /// coefficient — a block nobody trained this round is carried forward).
@@ -166,6 +234,41 @@ mod tests {
         let fallback = Tensor::from_vec(&[1, 2], vec![9.0, 7.0]);
         finalize_block_average(&mut sums, &counts, &fallback, 1);
         assert_eq!(sums.data(), &[3.0, 7.0]); // averaged block + carried-forward block
+    }
+
+    #[test]
+    fn weighted_scatter_matches_unweighted_at_unit_weight() {
+        let u = coeff(2, 4, 3);
+        let g = gather_blocks(&u, &[0, 2], 3);
+        let mut a = Tensor::zeros(&[2, 12]);
+        let mut aw = vec![0.0f32; 4];
+        scatter_blocks_axpy(&mut a, &mut aw, &g, &[0, 2], 3, 1.0);
+        let mut b = Tensor::zeros(&[2, 12]);
+        let mut bc = vec![0u32; 4];
+        scatter_blocks_add(&mut b, &mut bc, &g, &[0, 2], 3);
+        assert_eq!(a.data(), b.data());
+        assert_eq!(aw, vec![1.0, 0.0, 1.0, 0.0]);
+
+        finalize_block_weighted(&mut a, &aw, &u, 3);
+        finalize_block_average(&mut b, &bc, &u, 3);
+        assert_eq!(a.data(), b.data());
+        assert_eq!(a.data(), u.data(), "single unit-weight contribution is the identity");
+    }
+
+    #[test]
+    fn weighted_blockwise_average_is_affine() {
+        // one block, clients with values 4 and 2 at weights 1 and 1/2:
+        // (1·4 + 0.5·2)/1.5 = 10/3 — an affine combination, not a sum
+        let mut sums = Tensor::zeros(&[1, 2]);
+        let mut weights = vec![0.0f32; 2];
+        let c1 = Tensor::from_vec(&[1, 1], vec![4.0]);
+        let c2 = Tensor::from_vec(&[1, 1], vec![2.0]);
+        scatter_blocks_axpy(&mut sums, &mut weights, &c1, &[0], 1, 1.0);
+        scatter_blocks_axpy(&mut sums, &mut weights, &c2, &[0], 1, 0.5);
+        let fallback = Tensor::from_vec(&[1, 2], vec![9.0, 7.0]);
+        finalize_block_weighted(&mut sums, &weights, &fallback, 1);
+        assert!((sums.data()[0] - 10.0 / 3.0).abs() < 1e-6);
+        assert_eq!(sums.data()[1], 7.0); // untouched block carries fallback
     }
 
     #[test]

@@ -171,6 +171,36 @@ impl Tensor {
         out
     }
 
+    /// Weighted prefix accumulation: `self[..sub] += w · sub`, with
+    /// `weights` accumulating `w` per touched element. The fused in-place
+    /// form of (clone → scale(w) → scatter_prefix_add) — the quorum
+    /// merge path never materializes a scaled temporary. `w = 1.0`
+    /// reproduces `scatter_prefix_add` bit-for-bit (multiplication by 1.0
+    /// is exact), which is what keeps `--quorum N` byte-identical to the
+    /// serial loop.
+    pub fn scatter_prefix_axpy(&mut self, sub: &Tensor, weights: &mut [f32], w: f32) {
+        assert_eq!(sub.shape.len(), self.shape.len(), "rank mismatch");
+        assert_eq!(weights.len(), self.data.len(), "weights length mismatch");
+        for (s, full) in sub.shape.iter().zip(&self.shape) {
+            assert!(s <= full, "prefix {:?} exceeds {:?}", sub.shape, self.shape);
+        }
+        let rank = sub.shape.len();
+        let row = if rank == 0 { 1 } else { sub.shape[rank - 1] };
+        let mut src = 0usize;
+        let data = &mut self.data;
+        Self::for_each_prefix_row(&self.shape, &sub.shape, |dst| {
+            for ((d, c), s) in data[dst..dst + row]
+                .iter_mut()
+                .zip(&mut weights[dst..dst + row])
+                .zip(&sub.data[src..src + row])
+            {
+                *d += w * *s;
+                *c += w;
+            }
+            src += row;
+        });
+    }
+
     /// Accumulate `sub` into the leading region of self; `counts` tracks
     /// how many contributions each element has received (HeteroFL's
     /// overlap-aware averaging divides by it afterwards).
@@ -372,6 +402,43 @@ mod tests {
             let expect: f64 = src.data().iter().map(|x| *x as f64).sum();
             assert!((total - expect).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn scatter_prefix_axpy_matches_clone_scale_add() {
+        // the fused weighted scatter must equal the naive clone→scale→add
+        // reference bitwise (same multiply-then-add rounding order)
+        let mut rng = Rng::new(13);
+        for (shape, sub, w) in [
+            (vec![7], vec![3], 0.37f32),
+            (vec![5, 6], vec![2, 3], 0.62),
+            (vec![3, 3, 4, 6], vec![3, 3, 2, 3], 1.0),
+        ] {
+            let src = Tensor::randn(&sub, 1.0, &mut rng);
+            let mut fused = Tensor::randn(&shape, 1.0, &mut rng);
+            let mut naive = fused.clone();
+            let mut fw = vec![0.0f32; fused.len()];
+            fused.scatter_prefix_axpy(&src, &mut fw, w);
+
+            let mut scaled = src.clone();
+            scaled.scale(w);
+            let mut counts = vec![0u32; naive.len()];
+            naive.scatter_prefix_add(&scaled, &mut counts);
+            assert_eq!(fused.data(), naive.data(), "{shape:?} <- {sub:?} @ {w}");
+            // weights accumulate w exactly where counts accumulated 1
+            for (fwv, &c) in fw.iter().zip(&counts) {
+                assert_eq!(*fwv, c as f32 * w);
+            }
+        }
+        // w = 1.0 must reproduce the unweighted path exactly
+        let src = Tensor::randn(&[2, 3], 1.0, &mut rng);
+        let mut a = Tensor::zeros(&[4, 5]);
+        let mut b = Tensor::zeros(&[4, 5]);
+        let mut fw = vec![0.0f32; 20];
+        let mut counts = vec![0u32; 20];
+        a.scatter_prefix_axpy(&src, &mut fw, 1.0);
+        b.scatter_prefix_add(&src, &mut counts);
+        assert_eq!(a.data(), b.data());
     }
 
     #[test]

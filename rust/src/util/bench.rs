@@ -133,6 +133,39 @@ impl Bench {
     }
 }
 
+/// Shared body of the `benches/bench_fig*.rs` / `bench_table1.rs`
+/// harnesses (formerly nine copy-pasted mains): run one paper experiment
+/// end-to-end in a miniature world — a few clients, a few rounds — and
+/// time it with [`Bench::quick`]. The bench measures the harness, the
+/// real figures come from `heroes exp`. Skips gracefully without AOT
+/// artifacts, like every PJRT-dependent target.
+pub fn experiment_miniature(id: &str) {
+    use crate::experiments::{run_experiment, ExpCtx};
+    use crate::runtime::{EnginePool, Manifest};
+
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts missing — run `make artifacts`)");
+        return;
+    }
+    let pool = EnginePool::single(Manifest::load(&dir).unwrap()).unwrap();
+    let args = crate::util::cli::Args::parse_from(
+        ["--clients", "6", "--k", "3", "--rounds", "6", "--eval-every", "3",
+         "--samples-per-client", "24", "--test-samples", "64"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    let ctx = ExpCtx {
+        pool: &pool,
+        scale: crate::config::Scale::Smoke,
+        args,
+        out_dir: std::env::temp_dir().join("heroes_bench_results"),
+    };
+    Bench::quick().run_once(&format!("{id} (miniature)"), || {
+        run_experiment(id, &ctx).unwrap();
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

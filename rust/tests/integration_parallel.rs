@@ -9,6 +9,10 @@
 //!    merged stats sum over engines, `prepare_all` warms every shard.
 //! 3. **Thread safety** — one `Engine` serves concurrent `execute` calls
 //!    (the `Sync` bound is also pinned at compile time).
+//! 4. **Semi-async quorum** — `--quorum N` (full cohort) is byte-
+//!    identical to the serial loop for every scheme family; `--quorum
+//!    K<N` is seed-deterministic for any worker count and closes rounds
+//!    at the K-th projected completion instead of the cohort maximum.
 //!
 //! PJRT-dependent tests require `make artifacts` and skip gracefully
 //! otherwise.
@@ -16,7 +20,7 @@
 use heroes::baselines::{make_strategy, Strategy};
 use heroes::config::{ExperimentConfig, Scale};
 use heroes::coordinator::env::FlEnv;
-use heroes::coordinator::round::RoundDriver;
+use heroes::coordinator::round::{QuorumCfg, RoundDriver};
 use heroes::coordinator::RoundReport;
 use heroes::model::ComposedGlobal;
 use heroes::runtime::{Engine, EnginePool, Manifest};
@@ -74,6 +78,26 @@ fn run_reports_overlapped(
     (reports, s.evaluate(&env).unwrap())
 }
 
+/// Same rounds through `RoundDriver::run_quorum` (semi-async K-of-N
+/// aggregation with staleness-weighted late merges).
+fn run_reports_quorum(
+    pool: &EnginePool,
+    cfg: &ExperimentConfig,
+    scheme: &str,
+    rounds: usize,
+    quorum: usize,
+    alpha: f64,
+) -> (Vec<RoundReport>, (f64, f64)) {
+    let mut env = FlEnv::build(pool, cfg.clone()).unwrap();
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut s = make_strategy(scheme, &env.info, cfg, &mut rng).unwrap();
+    let driver = RoundDriver::new(cfg.workers);
+    let reports = driver
+        .run_quorum(pool, &mut env, s.as_mut(), rounds, QuorumCfg { quorum, alpha }, None)
+        .unwrap();
+    (reports, s.evaluate(&env).unwrap())
+}
+
 #[test]
 fn engine_type_is_shareable_across_threads() {
     // no artifacts needed: a pure compile-time pin of the Sync bound the
@@ -103,6 +127,60 @@ fn reports_identical_across_workers_pool_and_overlap() {
         assert_eq!(eval_serial, eval_threads, "{scheme}: workers changed the final model");
         assert_eq!(eval_serial, eval_pool4, "{scheme}: the pool changed the final model");
         assert_eq!(eval_serial, eval_overlap, "{scheme}: overlap changed the final model");
+    }
+}
+
+#[test]
+fn full_quorum_matches_serial_for_every_scheme_family() {
+    // The acceptance pin: `--quorum N` (K = the whole cohort) must
+    // reproduce the serial loop's RoundReport sequence and final model
+    // byte-identically for Heroes, dense and Flanc alike — no stragglers
+    // exist, so every round routes through the synchronous phase C.
+    let Some(shared) = pool_or_skip(1) else { return };
+    let Some(pooled) = pool_or_skip(4) else { return };
+    for scheme in ["heroes", "fedavg", "flanc"] {
+        let rounds = 3;
+        let (serial, eval_serial) = run_reports(&shared, &tiny_cfg(1), scheme, rounds);
+        let (quorum, eval_quorum) =
+            run_reports_quorum(&pooled, &tiny_cfg(4), scheme, rounds, 4, 1.0);
+        assert_eq!(serial, quorum, "{scheme}: full quorum must not change rounds");
+        assert_eq!(eval_serial, eval_quorum, "{scheme}: full quorum changed the final model");
+        // quorum larger than the cohort clamps to the cohort — same bytes
+        let (over, eval_over) = run_reports_quorum(&pooled, &tiny_cfg(4), scheme, rounds, 99, 1.0);
+        assert_eq!(serial, over, "{scheme}: oversized quorum must clamp to full barrier");
+        assert_eq!(eval_serial, eval_over);
+    }
+}
+
+#[test]
+fn partial_quorum_is_deterministic_for_any_worker_count() {
+    // K < N: the round closes at the K-th projected completion and
+    // stragglers merge late — deterministically, because membership and
+    // merge timing live on the virtual clock, not on thread racing.
+    let Some(shared) = pool_or_skip(1) else { return };
+    let Some(pooled) = pool_or_skip(4) else { return };
+    for scheme in ["heroes", "fedavg", "flanc"] {
+        let rounds = 4;
+        let (q1, eval1) = run_reports_quorum(&shared, &tiny_cfg(1), scheme, rounds, 2, 1.0);
+        let (q4, eval4) = run_reports_quorum(&pooled, &tiny_cfg(4), scheme, rounds, 2, 1.0);
+        let (q4b, eval4b) = run_reports_quorum(&pooled, &tiny_cfg(4), scheme, rounds, 2, 1.0);
+        assert_eq!(q1, q4, "{scheme}: quorum rounds must not depend on worker count");
+        assert_eq!(q4, q4b, "{scheme}: quorum rounds must be reproducible");
+        assert_eq!(eval1, eval4, "{scheme}: final model must not depend on worker count");
+        assert_eq!(eval4, eval4b, "{scheme}: final model must be reproducible");
+
+        // and it genuinely is semi-async: every round reports exactly K
+        // quorum completions, and round 0 (identical plans across modes)
+        // closes no later than the full barrier
+        let (serial, _) = run_reports(&shared, &tiny_cfg(1), scheme, 1);
+        assert_eq!(q1[0].completion_times.len(), 2, "{scheme}: quorum round reports K members");
+        assert!(
+            q1[0].round_time <= serial[0].round_time + 1e-12,
+            "{scheme}: quorum round 0 must close no later than the full barrier \
+             ({} > {})",
+            q1[0].round_time,
+            serial[0].round_time
+        );
     }
 }
 

@@ -6,6 +6,7 @@ use heroes::coordinator::aggregate::{ComposedAccumulator, DenseAccumulator};
 use heroes::coordinator::assignment::{plan_round, ClientStatus, ControllerCfg};
 use heroes::coordinator::frequency::{completion_time, tau_bounds, Estimates};
 use heroes::coordinator::ledger::BlockLedger;
+use heroes::coordinator::round::staleness_weight;
 use heroes::data::partition::{gamma_partition, phi_partition};
 use heroes::model::tests_support::toy_info;
 use heroes::model::{ComposedGlobal, DenseGlobal};
@@ -229,6 +230,163 @@ fn prop_dense_bias_is_plain_average() {
             let got = next.bias.data()[0];
             if (got - expect).abs() > 1e-4 {
                 return Err(format!("bias avg {got} != {expect}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_staleness_weights_positive_and_monotone() {
+    // For any α ≥ 0 the late-merge weight 1/(1+s)^α is positive, at most
+    // 1, equals 1 at s = 0, and is monotone non-increasing in s (strictly
+    // decreasing for α > 0).
+    check(
+        37,
+        200,
+        |rng| (rng.uniform_in(0.0, 4.0), rng.below(30)),
+        |&(alpha, s_max)| {
+            let w0 = staleness_weight(0, alpha);
+            if (w0 - 1.0).abs() > 1e-7 {
+                return Err(format!("w(0) = {w0} != 1"));
+            }
+            let mut prev = w0;
+            for s in 1..=s_max + 1 {
+                let w = staleness_weight(s, alpha);
+                if w <= 0.0 {
+                    return Err(format!("w({s}) = {w} not positive at α={alpha}"));
+                }
+                if w > prev + 1e-9 {
+                    return Err(format!("w({s}) = {w} > w({}) = {prev} at α={alpha}", s - 1));
+                }
+                if alpha > 0.05 && w >= prev {
+                    return Err(format!("w not strictly decreasing at s={s}, α={alpha}"));
+                }
+                prev = w;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quorum_weights_normalize_per_block() {
+    // A quorum round's aggregate is an affine combination per block: for
+    // clients pushing constant-valued updates vᵢ at weights wᵢ, every
+    // trained block must equal Σ wᵢvᵢ / Σ wᵢ (effective weights sum to
+    // 1), every untouched block must carry the previous global, and the
+    // basis must equal the all-participant weighted mean.
+    check(
+        41,
+        60,
+        |rng| {
+            let k = 1 + rng.below(5);
+            let weights: Vec<f64> = (0..k).map(|_| rng.uniform_in(0.05, 1.0)).collect();
+            let values: Vec<f64> = (0..k).map(|_| rng.uniform_in(-3.0, 3.0)).collect();
+            (weights, values, rng.next_u64())
+        },
+        |(weights, values, seed)| {
+            let info = toy_info();
+            let mut rng = Rng::new(*seed);
+            let prev = ComposedGlobal::init(&info, &mut rng).unwrap();
+            let mut ledger = BlockLedger::new(&info);
+            let mut acc = ComposedAccumulator::new(&info, &prev);
+
+            // expected per-block numerator/denominator in f64
+            let blocks_l0 = info.layers[0].blocks_total;
+            let mut num = vec![0.0f64; blocks_l0];
+            let mut den = vec![0.0f64; blocks_l0];
+            let mut basis_num = 0.0f64;
+            let mut wsum = 0.0f64;
+
+            for (i, (&w, &v)) in weights.iter().zip(values).enumerate() {
+                let p = 1 + (i % info.cap_p);
+                let sel = ledger.select_for_width(&info, p);
+                ledger.record(&sel, 1);
+                let payload: Vec<_> = prev
+                    .reduced_inputs(&info, p, &sel.blocks)
+                    .unwrap()
+                    .iter()
+                    .map(|t| Tensor::from_vec(t.shape(), vec![v as f32; t.len()]))
+                    .collect();
+                acc.push_weighted(&sel.blocks, &payload, w as f32)
+                    .map_err(|e| e.to_string())?;
+                for &b in &sel.blocks[0] {
+                    num[b] += w * v;
+                    den[b] += w;
+                }
+                basis_num += w * v;
+                wsum += w;
+            }
+            let next = acc.finalize().map_err(|e| e.to_string())?;
+
+            // layer-0 coefficient blocks: trained ⇒ Σwv/Σw, untouched ⇒ prev
+            let o = info.layers[0].o;
+            let u = next.coeffs[0].data();
+            let u_prev = prev.coeffs[0].data();
+            let cols = info.layers[0].full_coeff_shape()[1];
+            let rows = info.layers[0].full_coeff_shape()[0];
+            for b in 0..blocks_l0 {
+                for row in 0..rows {
+                    for c in 0..o {
+                        let idx = row * cols + b * o + c;
+                        if den[b] > 0.0 {
+                            let expect = num[b] / den[b];
+                            if (u[idx] as f64 - expect).abs() > 1e-4 {
+                                return Err(format!(
+                                    "block {b}: {} != Σwv/Σw = {expect}",
+                                    u[idx]
+                                ));
+                            }
+                        } else if u[idx] != u_prev[idx] {
+                            return Err(format!("untouched block {b} drifted"));
+                        }
+                    }
+                }
+            }
+            // basis: all participants train it ⇒ weighted mean everywhere
+            let expect_basis = basis_num / wsum;
+            for &x in next.bases[0].data() {
+                if (x as f64 - expect_basis).abs() > 1e-4 {
+                    return Err(format!("basis {x} != weighted mean {expect_basis}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dense_weighted_idempotent_for_any_weights() {
+    // Pushing the previous global back at arbitrary positive weights must
+    // return it unchanged — the element-wise effective weights normalize
+    // to 1 whatever the staleness discounts were.
+    check(
+        43,
+        50,
+        |rng| {
+            let k = 1 + rng.below(4);
+            let ws: Vec<f64> = (0..k).map(|_| rng.uniform_in(0.05, 1.0)).collect();
+            (ws, rng.next_u64())
+        },
+        |(ws, seed)| {
+            let info = toy_info();
+            let mut rng = Rng::new(*seed);
+            let prev = DenseGlobal::init(&info, &mut rng).unwrap();
+            let mut acc = DenseAccumulator::new(&info, &prev);
+            for (i, &w) in ws.iter().enumerate() {
+                let p = 1 + (i % info.cap_p);
+                let up = prev.reduced_inputs(&info, p).unwrap();
+                acc.push_weighted(p, &up, w as f32).map_err(|e| e.to_string())?;
+            }
+            let next = acc.finalize().map_err(|e| e.to_string())?;
+            for (a, b) in next.weights.iter().zip(&prev.weights) {
+                if a.sq_dist(b) > 1e-8 {
+                    return Err("weights drifted under identical weighted uploads".into());
+                }
+            }
+            if next.bias.sq_dist(&prev.bias) > 1e-8 {
+                return Err("bias drifted under identical weighted uploads".into());
             }
             Ok(())
         },
