@@ -5,13 +5,14 @@
 //! block gather/scatter, aggregation, round planning, data synthesis.
 
 use heroes::baselines::{DenseServer, Strategy};
-use heroes::config::{ExperimentConfig, Scale};
+use heroes::config::{ExperimentConfig, QuorumKnob, Scale};
 use heroes::coordinator::aggregate::ComposedAccumulator;
 use heroes::coordinator::assignment::{plan_round, ClientStatus, ControllerCfg};
 use heroes::coordinator::env::FlEnv;
 use heroes::coordinator::frequency::Estimates;
 use heroes::coordinator::ledger::BlockLedger;
-use heroes::coordinator::round::{QuorumCfg, RoundDriver};
+use heroes::coordinator::quorum_ctl::QuorumPolicy;
+use heroes::coordinator::round::RoundDriver;
 use heroes::coordinator::RoundReport;
 use heroes::data::synth_image::ImageGen;
 use heroes::model::ComposedGlobal;
@@ -204,64 +205,139 @@ fn main() {
         stats::mean(&reports.iter().map(|r| r.round_time).collect::<Vec<_>>())
     };
 
+    /// Dispatch mode of one straggler-tail config.
+    #[derive(Clone, Copy)]
+    enum TailMode {
+        Sync,
+        Overlap,
+        Quorum(usize),
+        /// `--quorum auto`: per-round (K, α) from the adaptive controller
+        Adaptive,
+    }
+
     let tail_pool = EnginePool::new(Manifest::load(&dir).unwrap(), 4).unwrap();
     tail_pool.prepare_all(&[warm.as_str()]).unwrap();
     let mut snapshot: Vec<(&str, Json)> = Vec::new();
-    for (label, quorum, overlap) in
-        [("full-barrier", 0usize, false), ("overlap", 0, true), ("quorum-12", 12, false)]
-    {
-        let mut env = FlEnv::build(&tail_pool, cfg_tail.clone()).unwrap();
+    let configs = [
+        ("full-barrier", TailMode::Sync),
+        ("overlap", TailMode::Overlap),
+        ("quorum-12", TailMode::Quorum(12)),
+        ("quorum-14", TailMode::Quorum(14)),
+        ("adaptive", TailMode::Adaptive),
+    ];
+    let mut virtuals: Vec<(&str, f64)> = Vec::new();
+    for (label, mode) in configs {
+        let mut cfg_run = cfg_tail.clone();
+        cfg_run.quorum = match mode {
+            TailMode::Quorum(k) => QuorumKnob::Fixed(k),
+            TailMode::Adaptive => QuorumKnob::Auto,
+            _ => QuorumKnob::Off,
+        };
+        let mut env = FlEnv::build(&tail_pool, cfg_run.clone()).unwrap();
         skew_fleet(&mut env);
-        let mut srng = Rng::new(cfg_tail.seed ^ 0x5EED);
-        let mut server = DenseServer::fedavg(&info, &cfg_tail, &mut srng).unwrap();
-        let driver = RoundDriver::new(cfg_tail.workers);
+        let mut srng = Rng::new(cfg_run.seed ^ 0x5EED);
+        let mut server = DenseServer::fedavg(&info, &cfg_run, &mut srng).unwrap();
+        let driver = RoundDriver::new(cfg_run.workers);
+        // exactly the policy a real `--quorum K`/`--quorum auto` run
+        // would build from this config — no hand-rolled duplicate of
+        // the from_config recipe to drift out of sync
+        let mut policy = QuorumPolicy::from_config(&cfg_run)
+            .unwrap_or_else(|| QuorumPolicy::fixed(0, cfg_run.staleness_alpha));
         let t0 = std::time::Instant::now();
-        let reports = if quorum > 0 {
-            driver
-                .run_quorum(
-                    &tail_pool,
-                    &mut env,
-                    &mut server,
-                    rounds,
-                    QuorumCfg { quorum, alpha: 1.0 },
-                    None,
-                )
-                .unwrap()
-        } else if overlap {
-            driver.run_overlapped(&tail_pool, &mut env, &mut server, rounds).unwrap()
-        } else {
-            (0..rounds).map(|_| server.run_round(&mut env).unwrap()).collect()
+        let reports = match mode {
+            TailMode::Quorum(_) | TailMode::Adaptive => driver
+                .run_quorum(&tail_pool, &mut env, &mut server, rounds, &mut policy, None)
+                .unwrap(),
+            TailMode::Overlap => {
+                driver.run_overlapped(&tail_pool, &mut env, &mut server, rounds).unwrap()
+            }
+            TailMode::Sync => (0..rounds).map(|_| server.run_round(&mut env).unwrap()).collect(),
         };
         let real = t0.elapsed().as_secs_f64();
         let virt = mean_round_time(&reports);
+        let mean_k = stats::mean(
+            &reports.iter().map(|r| r.completion_times.len() as f64).collect::<Vec<_>>(),
+        );
         println!(
-            "driver/straggler-tail K=16 {label:<13} virtual {virt:8.1} s/round, real {:.3} s/round",
+            "driver/straggler-tail K=16 {label:<13} virtual {virt:8.1} s/round, \
+             real {:.3} s/round, mean K {mean_k:4.1}",
             real / rounds as f64
         );
-        snapshot.push((
-            label,
-            Json::obj(vec![
-                ("rounds", Json::Num(rounds as f64)),
-                ("round_time_virtual_mean", Json::Num(virt)),
-                ("real_secs_per_round", Json::Num(real / rounds as f64)),
-            ]),
-        ));
+        virtuals.push((label, virt));
+        let mut entry = vec![
+            ("rounds", Json::Num(rounds as f64)),
+            ("round_time_virtual_mean", Json::Num(virt)),
+            ("real_secs_per_round", Json::Num(real / rounds as f64)),
+            ("mean_quorum_k", Json::Num(mean_k)),
+        ];
+        if let QuorumPolicy::Auto(ctl) = &policy {
+            entry.push(("final_alpha", Json::Num(ctl.alpha())));
+        }
+        snapshot.push((label, Json::obj(entry)));
     }
-    let out = Json::obj(vec![
-        ("bench", Json::Str("straggler_tail_quorum".into())),
-        ("clients", Json::Num(cfg_tail.n_clients as f64)),
-        ("quorum", Json::Num(12.0)),
-        ("configs", Json::obj(snapshot)),
-    ]);
-    // snapshot lands next to the experiment outputs (`heroes exp` writes
+
+    // adaptive vs the best static K (round-time comparison the ROADMAP's
+    // adaptive-quorum item asks for)
+    let virt_of = |name: &str| virtuals.iter().find(|(l, _)| *l == name).map(|(_, v)| *v);
+    let adaptive = virt_of("adaptive").unwrap_or(f64::NAN);
+    let statics = [
+        ("quorum-12", virt_of("quorum-12")),
+        ("quorum-14", virt_of("quorum-14")),
+        ("full-barrier", virt_of("full-barrier")),
+    ];
+    let (best_static, best_virt) = statics
+        .into_iter()
+        .filter_map(|(l, v)| v.map(|v| (l, v)))
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .unwrap_or(("none", f64::NAN));
+    println!(
+        "driver/straggler-tail adaptive {adaptive:.1} s/round vs best static \
+         ({best_static}) {best_virt:.1} s/round{}",
+        if adaptive <= best_virt { " — adaptive wins/ties" } else { "" }
+    );
+
+    // snapshots land next to the experiment outputs (`heroes exp` writes
     // results/ too); a read-only tree degrades to a warning, not an abort
-    let snap_path = std::path::Path::new("results").join("BENCH_quorum.json");
-    match std::fs::create_dir_all("results")
-        .and_then(|()| std::fs::write(&snap_path, out.to_string_pretty()))
-    {
-        Ok(()) => println!("  -> {}", snap_path.display()),
-        Err(e) => eprintln!("  (could not write {}: {e})", snap_path.display()),
-    }
+    let write_snap = |file: &str, out: &Json| {
+        let snap_path = std::path::Path::new("results").join(file);
+        match std::fs::create_dir_all("results")
+            .and_then(|()| std::fs::write(&snap_path, out.to_string_pretty()))
+        {
+            Ok(()) => println!("  -> {}", snap_path.display()),
+            Err(e) => eprintln!("  (could not write {}: {e})", snap_path.display()),
+        }
+    };
+    let pick = |names: &[&str]| {
+        let entries: Vec<(&str, Json)> = snapshot
+            .iter()
+            .filter(|(l, _)| names.contains(l))
+            .map(|(l, j)| (*l, j.clone()))
+            .collect();
+        Json::obj(entries)
+    };
+    // PR 3's static comparison (same three configs; entries now also
+    // carry mean_quorum_k)
+    write_snap(
+        "BENCH_quorum.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("straggler_tail_quorum".into())),
+            ("clients", Json::Num(cfg_tail.n_clients as f64)),
+            ("quorum", Json::Num(12.0)),
+            ("configs", pick(&["full-barrier", "overlap", "quorum-12"])),
+        ]),
+    );
+    // the adaptive entry vs every static K
+    write_snap(
+        "BENCH_adaptive_quorum.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("straggler_tail_adaptive_quorum".into())),
+            ("clients", Json::Num(cfg_tail.n_clients as f64)),
+            ("best_static", Json::Str(best_static.into())),
+            ("best_static_virtual", Json::Num(best_virt)),
+            ("adaptive_virtual", Json::Num(adaptive)),
+            ("configs", pick(&["full-barrier", "quorum-12", "quorum-14", "adaptive"])),
+        ]),
+    );
 
     // totals over everything this bench executed: the shared micro-bench
     // pool plus each driver config's own pool

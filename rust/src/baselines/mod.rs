@@ -19,6 +19,7 @@ pub use dense::{DenseServer, TauPolicy, WidthPolicy};
 pub use flanc::FlancServer;
 
 use crate::coordinator::env::FlEnv;
+use crate::coordinator::quorum_ctl::QuorumSignals;
 use crate::coordinator::round::{LocalTask, QuorumBatch, RoundDriver, TaskOutcome};
 use crate::coordinator::RoundReport;
 use anyhow::Result;
@@ -82,6 +83,14 @@ pub trait Strategy {
     fn staleness_index(&self) -> f64 {
         0.0
     }
+    /// Observed signals for the adaptive quorum controller
+    /// (`--quorum auto`): staleness index, β² proxy, smoothness estimate
+    /// and planned-count spread — all deterministic virtual-clock state.
+    /// Schemes without a ledger report the neutral default, leaving the
+    /// controller with the pure ε-margin budget.
+    fn quorum_signals(&self) -> QuorumSignals {
+        QuorumSignals::default()
+    }
 }
 
 impl Strategy for crate::coordinator::server::HeroesServer {
@@ -119,6 +128,10 @@ impl Strategy for crate::coordinator::server::HeroesServer {
 
     fn staleness_index(&self) -> f64 {
         self.ledger.staleness_index()
+    }
+
+    fn quorum_signals(&self) -> QuorumSignals {
+        HeroesServer::quorum_signals(self)
     }
 }
 

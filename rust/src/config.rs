@@ -51,6 +51,39 @@ impl Scale {
     }
 }
 
+/// The `--quorum` knob: full barrier, a static K, or the adaptive
+/// controller (`coordinator::quorum_ctl`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuorumKnob {
+    /// synchronous rounds (the default)
+    Off,
+    /// PR 3's static semi-async K-of-N (`--quorum K`); K ≥ the cohort
+    /// size reproduces the synchronous loop byte-identically
+    Fixed(usize),
+    /// per-round adaptive (K, α) (`--quorum auto`): smallest K whose
+    /// projected staleness penalty fits the Eq. 23 ε-margin slice
+    /// (`--quorum-margin`), floored at `--quorum-floor`
+    Auto,
+}
+
+impl QuorumKnob {
+    /// Parse the CLI/JSON value: `auto`, or an integer (0 = off).
+    pub fn parse(s: &str) -> Result<QuorumKnob> {
+        if s == "auto" {
+            return Ok(QuorumKnob::Auto);
+        }
+        let k: usize = s
+            .parse()
+            .map_err(|_| anyhow!("--quorum expects an integer or `auto`, got `{s}`"))?;
+        Ok(if k == 0 { QuorumKnob::Off } else { QuorumKnob::Fixed(k) })
+    }
+
+    /// True when rounds run through `RoundDriver::run_quorum`.
+    pub fn is_active(&self) -> bool {
+        !matches!(self, QuorumKnob::Off)
+    }
+}
+
 /// Full experiment configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -112,14 +145,22 @@ pub struct ExperimentConfig {
     pub overlap: bool,
     /// Semi-async K-of-N quorum (`RoundDriver::run_quorum`): aggregate a
     /// round once its K virtually-fastest cohort members land and fold
-    /// stragglers into later rounds staleness-weighted. 0 (default)
-    /// disables; K ≥ the cohort size reproduces the synchronous loop
-    /// byte-identically. Takes precedence over `overlap` (it subsumes
-    /// it). Seed-deterministic for any worker/pool count.
-    pub quorum: usize,
+    /// stragglers into later rounds staleness-weighted. `Off` (default)
+    /// disables; `Fixed(K ≥ cohort)` reproduces the synchronous loop
+    /// byte-identically; `Auto` hands K (and α) to the per-round
+    /// controller. Takes precedence over `overlap` (it subsumes it).
+    /// Seed-deterministic for any worker/pool count in every mode.
+    pub quorum: QuorumKnob,
     /// α in the staleness weight `1/(1+s)^α` applied to late merges
-    /// (quorum mode only). 0 disables discounting.
+    /// (quorum mode only). 0 disables discounting. Under `--quorum auto`
+    /// this is the annealing ceiling `alpha_max` (and the starting α).
     pub staleness_alpha: f64,
+    /// `--quorum-margin`: fraction of the Eq. 23 margin `ε − 6L²β²` the
+    /// adaptive controller's projected staleness penalty may consume.
+    pub quorum_margin: f64,
+    /// `--quorum-floor`: hard K floor for the adaptive controller
+    /// (clamped to the per-round cohort size).
+    pub quorum_floor: usize,
 }
 
 /// The pool-sizing rule, shared by `ExperimentConfig::pool_size` and
@@ -184,8 +225,10 @@ impl ExperimentConfig {
             workers: 1,
             pool_engines: 0,
             overlap: false,
-            quorum: 0,
+            quorum: QuorumKnob::Off,
             staleness_alpha: 1.0,
+            quorum_margin: 0.5,
+            quorum_floor: 1,
         }
     }
 
@@ -225,8 +268,12 @@ impl ExperimentConfig {
         if args.flag("overlap") {
             self.overlap = true;
         }
-        self.quorum = args.get_usize("quorum", self.quorum)?;
+        if let Some(q) = args.get("quorum") {
+            self.quorum = QuorumKnob::parse(q)?;
+        }
         self.staleness_alpha = args.get_f64("staleness-alpha", self.staleness_alpha)?;
+        self.quorum_margin = args.get_f64("quorum-margin", self.quorum_margin)?;
+        self.quorum_floor = args.get_usize("quorum-floor", self.quorum_floor)?;
         if let Some(g) = args.get("gamma") {
             self.partition = Partition::Gamma(g.parse().map_err(|_| anyhow!("bad --gamma"))?);
         }
@@ -258,8 +305,22 @@ impl ExperimentConfig {
         if let Some(o) = j.get("overlap").and_then(Json::as_bool) {
             c.overlap = o;
         }
-        c.quorum = grab_usize("quorum", c.quorum);
+        // JSON parity with the CLI: `"quorum"` is either a non-negative
+        // integer (0 = off) or the string "auto"; anything else is an
+        // error, never a silent fall-back to the synchronous default
+        match j.get("quorum") {
+            Some(Json::Str(s)) => c.quorum = QuorumKnob::parse(s)?,
+            Some(v) => {
+                let k = v
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("`quorum` expects an integer or \"auto\", got {v}"))?;
+                c.quorum = if k == 0 { QuorumKnob::Off } else { QuorumKnob::Fixed(k) };
+            }
+            None => {}
+        }
         c.staleness_alpha = grab_f64("staleness_alpha", c.staleness_alpha);
+        c.quorum_margin = grab_f64("quorum_margin", c.quorum_margin);
+        c.quorum_floor = grab_usize("quorum_floor", c.quorum_floor);
         if let Some(g) = j.get("gamma").and_then(Json::as_f64) {
             c.partition = Partition::Gamma(g);
         }
@@ -292,6 +353,15 @@ impl ExperimentConfig {
         }
         if self.staleness_alpha.is_nan() || self.staleness_alpha < 0.0 {
             return Err(anyhow!("staleness_alpha must be non-negative"));
+        }
+        if !(self.quorum_margin > 0.0 && self.quorum_margin <= 1.0) {
+            return Err(anyhow!(
+                "quorum_margin must be in (0, 1], got {}",
+                self.quorum_margin
+            ));
+        }
+        if self.quorum_floor == 0 {
+            return Err(anyhow!("quorum_floor must be at least 1"));
         }
         Ok(())
     }
@@ -367,23 +437,76 @@ mod tests {
     #[test]
     fn quorum_knobs_parse_and_validate() {
         let base = ExperimentConfig::preset("cnn", Scale::Smoke);
-        assert_eq!(base.quorum, 0, "quorum defaults to off (full barrier)");
+        assert_eq!(base.quorum, QuorumKnob::Off, "quorum defaults to off (full barrier)");
+        assert!(!base.quorum.is_active());
         assert_eq!(base.staleness_alpha, 1.0);
+        assert_eq!(base.quorum_margin, 0.5);
+        assert_eq!(base.quorum_floor, 1);
 
         let args = Args::parse_from(
             ["--quorum", "3", "--staleness-alpha", "2.5"].iter().map(|s| s.to_string()),
         );
         let c = ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&args).unwrap();
-        assert_eq!(c.quorum, 3);
+        assert_eq!(c.quorum, QuorumKnob::Fixed(3));
+        assert!(c.quorum.is_active());
         assert!((c.staleness_alpha - 2.5).abs() < 1e-12);
 
         let j = crate::util::json::parse(r#"{"quorum": 4, "staleness_alpha": 0.5}"#).unwrap();
         let c = ExperimentConfig::from_json("cnn", Scale::Smoke, &j).unwrap();
-        assert_eq!(c.quorum, 4);
+        assert_eq!(c.quorum, QuorumKnob::Fixed(4));
         assert!((c.staleness_alpha - 0.5).abs() < 1e-12);
 
         let mut bad = ExperimentConfig::preset("cnn", Scale::Smoke);
         bad.staleness_alpha = -1.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn quorum_auto_parses_from_cli_and_json() {
+        assert_eq!(QuorumKnob::parse("auto").unwrap(), QuorumKnob::Auto);
+        assert_eq!(QuorumKnob::parse("0").unwrap(), QuorumKnob::Off);
+        assert_eq!(QuorumKnob::parse("7").unwrap(), QuorumKnob::Fixed(7));
+        assert!(QuorumKnob::parse("maybe").is_err());
+
+        let args = Args::parse_from(
+            ["--quorum", "auto", "--quorum-margin", "0.3", "--quorum-floor", "2"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&args).unwrap();
+        assert_eq!(c.quorum, QuorumKnob::Auto);
+        assert!(c.quorum.is_active());
+        assert!((c.quorum_margin - 0.3).abs() < 1e-12);
+        assert_eq!(c.quorum_floor, 2);
+
+        // JSON parity: string "auto" and the two controller knobs
+        let j = crate::util::json::parse(
+            r#"{"quorum": "auto", "quorum_margin": 0.25, "quorum_floor": 3}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json("cnn", Scale::Smoke, &j).unwrap();
+        assert_eq!(c.quorum, QuorumKnob::Auto);
+        assert!((c.quorum_margin - 0.25).abs() < 1e-12);
+        assert_eq!(c.quorum_floor, 3);
+
+        // malformed JSON `quorum` values are errors, never a silent
+        // fall-back to the synchronous default
+        for bad_doc in [r#"{"quorum": true}"#, r#"{"quorum": -1}"#, r#"{"quorum": "fast"}"#] {
+            let j = crate::util::json::parse(bad_doc).unwrap();
+            assert!(
+                ExperimentConfig::from_json("cnn", Scale::Smoke, &j).is_err(),
+                "{bad_doc} must be rejected"
+            );
+        }
+
+        // controller knobs validate
+        let mut bad = ExperimentConfig::preset("cnn", Scale::Smoke);
+        bad.quorum_margin = 0.0;
+        assert!(bad.validate().is_err());
+        bad.quorum_margin = 1.5;
+        assert!(bad.validate().is_err());
+        let mut bad = ExperimentConfig::preset("cnn", Scale::Smoke);
+        bad.quorum_floor = 0;
         assert!(bad.validate().is_err());
     }
 

@@ -432,7 +432,7 @@ mod tests {
         for (i, w) in [1.0f32, 0.5, 0.25, 0.125].into_iter().enumerate() {
             let p = 1 + (i % info.cap_p);
             let sel = ledger.select_for_width(&info, p);
-            ledger.record(&sel, 1);
+            ledger.record(&sel, 1).unwrap();
             let payload = prev.reduced_inputs(&info, p, &sel.blocks).unwrap();
             acc.push_weighted(&sel.blocks, &payload, w).unwrap();
         }

@@ -146,7 +146,7 @@ pub fn plan_round(
         .clamp(cfg.tau_floor.max(cfg.tau_min), cfg.tau_max);
     let (s_l, p_l, mu_l, nu_l) = partial[fastest];
     let sel_l = ledger.select_for_width(info, p_l);
-    ledger.record(&sel_l, tau_l as u64);
+    ledger.record(&sel_l, tau_l as u64)?;
     let t_l = completion_time(tau_l, mu_l, nu_l);
 
     let mut assignments = vec![Assignment {
@@ -177,7 +177,7 @@ pub fn plan_round(
                 best_tau = tau;
             }
         }
-        ledger.record(&sel, best_tau as u64);
+        ledger.record(&sel, best_tau as u64)?;
         assignments.push(Assignment {
             client: s.client,
             p,

@@ -89,6 +89,48 @@ pub fn solve_rounds(est: &Estimates, epsilon: f64, beta_sq: f64, h_max: usize) -
     (h as usize).clamp(1, h_max)
 }
 
+/// Projected fraction of a cohort's training lost to staleness discounts
+/// if the round closes at the `k`-th of its **ascending-sorted**
+/// projected completion times: each straggler `i > k` merges roughly
+/// `⌈(t_i − t_k)/t_k⌉` rounds late (subsequent quorum rounds advance the
+/// clock by ~t_k each) at weight `1/(1+s)^α`, so `(1 − w)` of its
+/// contribution is discounted away. This is the adaptive quorum
+/// controller's per-candidate-K penalty projection — the same
+/// lost-iteration units `BlockLedger::staleness_index` reports after the
+/// fact. Non-increasing in `k` (fewer, closer stragglers) and
+/// non-decreasing in `α`; 0 at `k ≥ n` (full barrier projects no
+/// staleness).
+pub fn projected_staleness_loss(sorted_completions: &[f64], k: usize, alpha: f64) -> f64 {
+    let n = sorted_completions.len();
+    if k == 0 || k >= n {
+        return 0.0;
+    }
+    let t_k = sorted_completions[k - 1].max(1e-12);
+    sorted_completions[k..]
+        .iter()
+        .map(|&t| {
+            let s = ((t - t_k) / t_k).ceil().max(1.0);
+            1.0 - (1.0 / (1.0 + s)).powf(alpha)
+        })
+        .sum::<f64>()
+        / n as f64
+}
+
+/// The staleness budget the adaptive quorum controller may spend per
+/// round: `margin_frac` of the Eq. 23 margin `ε − 6L²β²`, expressed in
+/// the same lost-training-fraction units as `projected_staleness_loss`
+/// (an extra β² increment of that size raises the 6L²β² floor by at most
+/// the granted margin slice). β² goes through [`capped_beta_sq`] first so
+/// an early imbalance spike cannot zero the budget and pin K at N
+/// forever; the cap keeps the margin ≥ ε/2, so the budget stays positive
+/// while still shrinking monotonically as the observed imbalance grows.
+pub fn staleness_budget(epsilon: f64, l: f64, beta_sq: f64, margin_frac: f64) -> f64 {
+    let l = l.clamp(1e-3, 1e3);
+    let b = capped_beta_sq(beta_sq, epsilon, l);
+    let margin = (epsilon - 6.0 * l * l * b).max(0.0);
+    margin_frac.clamp(0.0, 1.0) * margin / (6.0 * l * l)
+}
+
 /// Projected total completion time if client (μ, ν) is the fastest
 /// (Eq. 27): T(H) = H · (τ*(H)·μ + ν).
 pub fn projected_total_time(est: &Estimates, eta: f64, h: usize, mu: f64, nu: f64) -> f64 {
@@ -196,6 +238,41 @@ mod tests {
         // small observations pass through untouched; negatives clamp to 0
         assert_eq!(capped_beta_sq(1e-4, eps, e.l), 1e-4);
         assert_eq!(capped_beta_sq(-1.0, eps, e.l), 0.0);
+    }
+
+    #[test]
+    fn projected_staleness_loss_shape() {
+        let sorted = [1.0, 1.1, 1.2, 4.5];
+        // full barrier (k = n) projects no staleness; so does k = 0
+        assert_eq!(projected_staleness_loss(&sorted, 4, 1.0), 0.0);
+        assert_eq!(projected_staleness_loss(&sorted, 0, 1.0), 0.0);
+        // k = 3: one straggler 4.5 vs t_k = 1.2 → s = ⌈2.75⌉ = 3,
+        // lost = (1 − 1/4)/4
+        let l3 = projected_staleness_loss(&sorted, 3, 1.0);
+        assert!((l3 - 0.75 / 4.0).abs() < 1e-12, "got {l3}");
+        // non-increasing in k, non-decreasing in α
+        let l1 = projected_staleness_loss(&sorted, 1, 1.0);
+        let l2 = projected_staleness_loss(&sorted, 2, 1.0);
+        assert!(l1 >= l2 && l2 >= l3, "{l1} {l2} {l3}");
+        assert!(projected_staleness_loss(&sorted, 2, 2.0) >= l2);
+        // α = 0 never discounts, so nothing is projected lost
+        assert_eq!(projected_staleness_loss(&sorted, 1, 0.0), 0.0);
+    }
+
+    #[test]
+    fn staleness_budget_shrinks_with_imbalance_but_stays_positive() {
+        let (eps, l) = (0.8, 2.0);
+        let b0 = staleness_budget(eps, l, 0.0, 0.5);
+        assert!((b0 - 0.5 * eps / (6.0 * l * l)).abs() < 1e-12);
+        let b_mid = staleness_budget(eps, l, 1e-3, 0.5);
+        assert!(b_mid < b0, "budget must shrink with observed β²");
+        // a CV² ≈ 1 spike goes through the cap: margin ≥ ε/2, budget > 0
+        let b_spike = staleness_budget(eps, l, 1.0, 0.5);
+        assert!(b_spike > 0.0, "capped β² must leave a positive budget");
+        assert!(b_spike >= 0.5 * (eps / 2.0) / (6.0 * l * l) - 1e-15);
+        // margin_frac scales linearly and clamps to [0, 1]
+        assert!((staleness_budget(eps, l, 0.0, 1.0) - 2.0 * b0).abs() < 1e-12);
+        assert_eq!(staleness_budget(eps, l, 0.0, -1.0), 0.0);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 
 use crate::runtime::ModelInfo;
 use crate::util::stats;
+use anyhow::{anyhow, Result};
 
 /// One round's selection for one client: per-class group choices plus the
 /// per-layer block ids they induce (both ascending).
@@ -145,28 +146,57 @@ impl BlockLedger {
         self.select_for_width(info, self.cap_p)
     }
 
+    /// Shape-check a selection against the ledger before recording: a
+    /// mismatched class count or an out-of-range group id is a proper
+    /// `Err` (it means the selection came from a different model's
+    /// ledger), never a coordinator abort.
+    fn check_selection(&self, sel: &Selection) -> Result<()> {
+        if sel.groups.len() != self.counts.len() {
+            return Err(anyhow!(
+                "selection has {} group classes but the ledger tracks {}",
+                sel.groups.len(),
+                self.counts.len()
+            ));
+        }
+        for (class_idx, groups) in sel.groups.iter().enumerate() {
+            if let Some(&g) = groups.iter().find(|&&g| g >= self.cap_p) {
+                return Err(anyhow!(
+                    "selection group id {g} out of range for class {} ({} groups)",
+                    self.classes[class_idx],
+                    self.cap_p
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Record `tau` local iterations on a selection (Alg. 1 l.21-22).
-    pub fn record(&mut self, sel: &Selection, tau: u64) {
-        assert_eq!(sel.groups.len(), self.counts.len());
+    /// Errs (without partial mutation) on a selection whose shape does
+    /// not match this ledger.
+    pub fn record(&mut self, sel: &Selection, tau: u64) -> Result<()> {
+        self.check_selection(sel)?;
         for (class_idx, groups) in sel.groups.iter().enumerate() {
             for &g in groups {
                 self.counts[class_idx][g] += tau;
             }
         }
+        Ok(())
     }
 
     /// Record the staleness discount of a late merge (quorum mode): a
     /// selection trained for `tau` iterations but folded at weight `w`
     /// only delivered `w·τ` effective iterations; the lost `(1−w)·τ` is
-    /// tallied per group so `relative_variance` sees it.
-    pub fn record_staleness(&mut self, sel: &Selection, tau: u64, weight: f32) {
-        assert_eq!(sel.groups.len(), self.stale.len());
+    /// tallied per group so `relative_variance` sees it. Errs (without
+    /// partial mutation) on a shape-mismatched selection.
+    pub fn record_staleness(&mut self, sel: &Selection, tau: u64, weight: f32) -> Result<()> {
+        self.check_selection(sel)?;
         let lost = tau as f64 * (1.0 - (weight as f64).clamp(0.0, 1.0));
         for (class_idx, groups) in sel.groups.iter().enumerate() {
             for &g in groups {
                 self.stale[class_idx][g] += lost;
             }
         }
+        Ok(())
     }
 
     /// Fraction of all recorded iterations lost to staleness discounts
@@ -268,6 +298,21 @@ impl BlockLedger {
             (lo, hi)
         }
     }
+
+    /// Dimensionless planned-count spread `(hi − lo)/hi` over all groups
+    /// — the straggler tail's footprint in the training books (a wide
+    /// spread means rotation is being starved by clients that keep
+    /// missing their merge rounds). One of the adaptive quorum
+    /// controller's observed signals (`quorum_ctl::QuorumSignals`); 0 on
+    /// an empty or perfectly balanced ledger.
+    pub fn spread_index(&self) -> f64 {
+        let (lo, hi) = self.count_range();
+        if hi == 0 {
+            0.0
+        } else {
+            (hi - lo) as f64 / hi as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -293,7 +338,7 @@ mod tests {
         // one class, one group picked; conv1 blocks == head blocks == group
         assert_eq!(sel.groups, vec![vec![0]]);
         assert_eq!(sel.blocks, vec![vec![0], vec![0]]);
-        ledger.record(&sel, 5);
+        ledger.record(&sel, 5).unwrap();
         // next narrow selection must rotate to the other group
         let sel2 = ledger.select_for_width(&info, 1);
         assert_eq!(sel2.groups, vec![vec![1]]);
@@ -322,7 +367,7 @@ mod tests {
         assert_eq!(ledger.classes(), &["g1".to_string(), "g2".to_string()]);
         let sel = ledger.select_for_width(&info, 1);
         assert_eq!(sel.blocks[1], vec![0]); // a=0,g=0 -> 0*2+0
-        ledger.record(&sel, 3);
+        ledger.record(&sel, 3).unwrap();
         let sel2 = ledger.select_for_width(&info, 1);
         // both classes rotate -> a=1,g=1 -> 1*2+1 = 3
         assert_eq!(sel2.blocks[1], vec![3]);
@@ -335,11 +380,11 @@ mod tests {
         let info = toy_info();
         let mut ledger = BlockLedger::new(&info);
         let sel = ledger.select_for_width(&info, 1);
-        ledger.record(&sel, 4);
+        ledger.record(&sel, 4).unwrap();
         assert!(ledger.variance() > 0.0);
         let sel2 = ledger.select_for_width(&info, 1);
         let hyp = ledger.variance_if(&sel2, 4);
-        ledger.record(&sel2, 4);
+        ledger.record(&sel2, 4).unwrap();
         assert!((hyp - ledger.variance()).abs() < 1e-12);
         assert_eq!(ledger.variance(), 0.0); // balanced again
     }
@@ -352,11 +397,11 @@ mod tests {
         assert_eq!(ledger.relative_variance(), 0.0);
         // counts [6, 0]: mean 3, var 9 -> CV² = 1
         let sel = ledger.select_for_width(&info, 1);
-        ledger.record(&sel, 6);
+        ledger.record(&sel, 6).unwrap();
         assert!((ledger.relative_variance() - 1.0).abs() < 1e-12);
         // balanced [6, 6]: imbalance vanishes even though counts grew
         let sel2 = ledger.select_for_width(&info, 1);
-        ledger.record(&sel2, 6);
+        ledger.record(&sel2, 6).unwrap();
         assert_eq!(ledger.relative_variance(), 0.0);
     }
 
@@ -366,15 +411,15 @@ mod tests {
         let mut ledger = BlockLedger::new(&info);
         // two balanced selections: planned counts [6, 6] -> no imbalance
         let sel_a = ledger.select_for_width(&info, 1);
-        ledger.record(&sel_a, 6);
+        ledger.record(&sel_a, 6).unwrap();
         let sel_b = ledger.select_for_width(&info, 1);
-        ledger.record(&sel_b, 6);
+        ledger.record(&sel_b, 6).unwrap();
         assert_eq!(ledger.relative_variance(), 0.0);
         assert_eq!(ledger.staleness_index(), 0.0);
 
         // group B's 6 iterations merged late at weight 1/2: effective
         // counts become [6, 3] — the planned balance was an illusion
-        ledger.record_staleness(&sel_b, 6, 0.5);
+        ledger.record_staleness(&sel_b, 6, 0.5).unwrap();
         assert!((ledger.staleness_index() - 0.25).abs() < 1e-12, "3 of 12 iterations lost");
         // effective [6, 3]: mean 4.5, var 2.25 -> CV² = 1/9
         assert!((ledger.relative_variance() - 1.0 / 9.0).abs() < 1e-12);
@@ -387,11 +432,46 @@ mod tests {
         let info = toy_info();
         let mut ledger = BlockLedger::new(&info);
         let sel = ledger.select_for_width(&info, 1);
-        ledger.record(&sel, 5);
+        ledger.record(&sel, 5).unwrap();
         let before = ledger.relative_variance();
-        ledger.record_staleness(&sel, 5, 1.0);
+        ledger.record_staleness(&sel, 5, 1.0).unwrap();
         assert_eq!(ledger.relative_variance(), before);
         assert_eq!(ledger.staleness_index(), 0.0);
+    }
+
+    #[test]
+    fn shape_mismatched_record_is_an_error_not_an_abort() {
+        // regression: record/record_staleness used to assert_eq! on the
+        // class count and panic-index on out-of-range groups, aborting
+        // the coordinator mid-run
+        let info = toy_info();
+        let mut ledger = BlockLedger::new(&info);
+        let wrong_classes = Selection { groups: vec![vec![0], vec![1]], blocks: vec![vec![0]] };
+        let err = ledger.record(&wrong_classes, 3).unwrap_err();
+        assert!(err.to_string().contains("group classes"), "unexpected error: {err}");
+        let oob = Selection { groups: vec![vec![7]], blocks: vec![vec![7]] };
+        let err = ledger.record(&oob, 3).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "unexpected error: {err}");
+        let err = ledger.record_staleness(&oob, 3, 0.5).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "unexpected error: {err}");
+        // nothing was partially recorded
+        assert_eq!(ledger.count_range(), (0, 0));
+        assert_eq!(ledger.staleness_index(), 0.0);
+    }
+
+    #[test]
+    fn spread_index_is_dimensionless_count_spread() {
+        let info = toy_info();
+        let mut ledger = BlockLedger::new(&info);
+        assert_eq!(ledger.spread_index(), 0.0, "empty ledger has no spread");
+        let sel = ledger.select_for_width(&info, 1);
+        ledger.record(&sel, 8).unwrap();
+        // counts [8, 0] -> spread (8-0)/8 = 1
+        assert_eq!(ledger.spread_index(), 1.0);
+        let sel2 = ledger.select_for_width(&info, 1);
+        ledger.record(&sel2, 8).unwrap();
+        // balanced [8, 8] -> 0
+        assert_eq!(ledger.spread_index(), 0.0);
     }
 
     #[test]
@@ -400,7 +480,7 @@ mod tests {
         let mut ledger = BlockLedger::new(&info);
         assert_eq!(ledger.count_range(), (0, 0));
         let sel = ledger.select_for_width(&info, 1);
-        ledger.record(&sel, 9);
+        ledger.record(&sel, 9).unwrap();
         assert_eq!(ledger.count_range(), (0, 9));
     }
 }

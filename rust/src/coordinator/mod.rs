@@ -8,6 +8,7 @@
 //! * `client`     — simulated client executing Alg. 2 through PJRT
 //! * `env`        — shared federated world (data, fleet, WAN, clock, eval)
 //! * `round`      — the parallel round driver shared by every scheme
+//! * `quorum_ctl` — adaptive quorum control: per-round (K, α) decisions
 //! * `server`     — the Heroes PS round loop (Alg. 1)
 
 pub mod aggregate;
@@ -17,6 +18,7 @@ pub mod env;
 pub mod estimator;
 pub mod frequency;
 pub mod ledger;
+pub mod quorum_ctl;
 pub mod round;
 pub mod server;
 

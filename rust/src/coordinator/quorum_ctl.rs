@@ -1,0 +1,358 @@
+//! Adaptive quorum control — closing the Alg. 1 loop over K and α.
+//!
+//! PR 3's semi-async mode made `--quorum K` and `--staleness-alpha α`
+//! static operator knobs. The paper's whole point (Alg. 1 / Eq. 23) is
+//! that the coordinator *adapts* its per-round decisions to the observed
+//! heterogeneity, so the [`QuorumController`] turns both knobs into
+//! per-round controller outputs:
+//!
+//! * **K** — each round, pick the **smallest** quorum whose projected
+//!   staleness penalty (`frequency::projected_staleness_loss`, derived
+//!   from the plan's virtual completion times) fits inside the staleness
+//!   budget — the slice of the Eq. 23 margin `ε − 6L²β²` the operator
+//!   grants to semi-asynchrony (`frequency::staleness_budget`,
+//!   `--quorum-margin`). The observed losses already on the books
+//!   ([`BlockLedger::staleness_index`]) and the ledger's count-spread
+//!   pressure consume the budget first, so **K grows as the staleness
+//!   index rises**; a widening projected-completion spread (straggler
+//!   tail) makes small K save more round time and admits it as soon as
+//!   the budget allows, so **K shrinks as the tail widens**.
+//! * **α** — annealed against the observed per-block staleness losses:
+//!   while the staleness index sits below half the budget the discount
+//!   sharpens toward `alpha_max` (late noise is cheap to suppress);
+//!   once losses bite it relaxes toward `alpha_min`, recovering the
+//!   stragglers' training signal instead of throwing it away.
+//!
+//! Every input is **virtual-clock state** — projected completion times
+//! are plan facts, the staleness index and β² proxy are deterministic
+//! ledger state — so adaptive runs stay seed-deterministic for any
+//! `--workers`/`--pool` (pinned in `tests/integration_parallel.rs`).
+//! A cohort with no straggler tail (relative completion spread below
+//! [`QuorumCtlCfg::spread_min`]) provably collapses to `K = N`, which
+//! `RoundDriver::run_quorum` routes through the synchronous phase-C
+//! hook — byte-identical to the full-barrier run.
+//!
+//! [`BlockLedger::staleness_index`]: crate::coordinator::ledger::BlockLedger::staleness_index
+
+use crate::coordinator::frequency::{projected_staleness_loss, staleness_budget};
+use crate::coordinator::round::QuorumCfg;
+
+/// Observed signals the controller reads each round, all deterministic
+/// functions of virtual-clock state. Schemes without a ledger report the
+/// default (no staleness, no imbalance, unit smoothness): for them the
+/// controller budget is purely the ε-margin slice.
+#[derive(Debug, Clone, Copy)]
+pub struct QuorumSignals {
+    /// fraction of recorded training lost to staleness discounts
+    /// (`BlockLedger::staleness_index`)
+    pub staleness_index: f64,
+    /// observed β² proxy (`BlockLedger::relative_variance`)
+    pub beta_sq: f64,
+    /// current smoothness estimate L (Eq. 23)
+    pub l: f64,
+    /// dimensionless planned-count spread (`BlockLedger::spread_index`):
+    /// the straggler tail's footprint in the training books
+    pub spread_index: f64,
+}
+
+impl Default for QuorumSignals {
+    fn default() -> QuorumSignals {
+        QuorumSignals { staleness_index: 0.0, beta_sq: 0.0, l: 1.0, spread_index: 0.0 }
+    }
+}
+
+/// Controller knobs (`--quorum auto`, `--quorum-margin`, `--quorum-floor`).
+#[derive(Debug, Clone, Copy)]
+pub struct QuorumCtlCfg {
+    /// hard floor for the chosen K (`--quorum-floor`); clamped to the
+    /// cohort size per round
+    pub k_min: usize,
+    /// fraction of the Eq. 23 margin `ε − 6L²β²` the projected staleness
+    /// penalty may consume (`--quorum-margin`)
+    pub margin_frac: f64,
+    /// minimum relative round-time saving `(t_N − t_K)/t_N` before going
+    /// semi-async is worth anything: below it the controller returns
+    /// K = N, which is what collapses homogeneous cohorts to the
+    /// full-barrier path
+    pub spread_min: f64,
+    /// convergence target ε (Eq. 23)
+    pub epsilon: f64,
+    /// α annealing range and step; `alpha_gain = 0` freezes α
+    pub alpha_min: f64,
+    pub alpha_max: f64,
+    pub alpha_gain: f64,
+}
+
+impl QuorumCtlCfg {
+    /// Knobs from the experiment surface: ε and the two CLI knobs, with
+    /// the annealing defaults (α starts at and is capped by the
+    /// configured `--staleness-alpha`).
+    pub fn new(epsilon: f64, k_min: usize, margin_frac: f64, alpha_max: f64) -> QuorumCtlCfg {
+        QuorumCtlCfg {
+            k_min: k_min.max(1),
+            margin_frac,
+            spread_min: 0.05,
+            epsilon,
+            alpha_min: 0.0,
+            alpha_max: alpha_max.max(0.0),
+            alpha_gain: 0.25,
+        }
+    }
+}
+
+/// One round's controller output.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuorumDecision {
+    /// quorum size, in `[k_min.clamp(1, n), n]`
+    pub k: usize,
+    /// α for this round's late merges
+    pub alpha: f64,
+}
+
+/// The per-run adaptive controller (module docs). One instance lives for
+/// one `RoundDriver::run_quorum` pipeline; its only mutable state is the
+/// annealed α.
+#[derive(Debug, Clone)]
+pub struct QuorumController {
+    cfg: QuorumCtlCfg,
+    alpha: f64,
+}
+
+impl QuorumController {
+    pub fn new(cfg: QuorumCtlCfg) -> QuorumController {
+        let alpha = cfg.alpha_max.max(cfg.alpha_min);
+        QuorumController { cfg, alpha }
+    }
+
+    /// The current annealed α (for post-run inspection / logging).
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Decide this round's (K, α) from the plan's projected completion
+    /// times and the observed signals. Pure virtual-clock state in,
+    /// deterministic decision out.
+    ///
+    /// Invariants (property-tested in `tests/prop_coordinator.rs`):
+    /// K ∈ `[k_min.clamp(1, n), n]`; at fixed α, K is monotone
+    /// non-decreasing in the observed staleness index; a spread-free
+    /// cohort (all completions within `spread_min` of the maximum)
+    /// always yields K = n.
+    pub fn decide(&mut self, completions: &[f64], sig: &QuorumSignals) -> QuorumDecision {
+        let n = completions.len().max(1);
+        let budget = staleness_budget(self.cfg.epsilon, sig.l, sig.beta_sq, self.cfg.margin_frac);
+
+        // anneal α against the observed per-block staleness losses
+        let target = 0.5 * budget;
+        let toward =
+            if sig.staleness_index <= target { self.cfg.alpha_max } else { self.cfg.alpha_min };
+        self.alpha = (self.alpha + self.cfg.alpha_gain * (toward - self.alpha))
+            .clamp(self.cfg.alpha_min, self.cfg.alpha_max.max(self.cfg.alpha_min));
+
+        // observed losses and the count-spread pressure consume the
+        // budget before any *new* staleness is admitted — this is what
+        // grows K back toward N when the staleness index rises
+        let budget_left = (budget / (1.0 + sig.spread_index.max(0.0))
+            - sig.staleness_index.max(0.0))
+        .max(0.0);
+
+        if completions.is_empty() {
+            // empty cohorts are rejected upstream; stay total anyway
+            return QuorumDecision { k: 1, alpha: self.alpha };
+        }
+        let mut sorted: Vec<f64> = completions.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let t_full = sorted[n - 1];
+        let k_min = self.cfg.k_min.clamp(1, n);
+
+        let mut k = n;
+        if t_full > 0.0 {
+            for cand in k_min..n {
+                let saving = (t_full - sorted[cand - 1]) / t_full;
+                if saving < self.cfg.spread_min {
+                    // savings only shrink as cand grows (sorted): no
+                    // larger candidate can pass either — full barrier
+                    break;
+                }
+                if projected_staleness_loss(&sorted, cand, self.alpha) <= budget_left {
+                    k = cand;
+                    break;
+                }
+            }
+        }
+        QuorumDecision { k, alpha: self.alpha }
+    }
+}
+
+/// Per-round quorum decision source for `RoundDriver::run_quorum`:
+/// PR 3's static knobs or the adaptive controller (`--quorum auto`).
+#[derive(Debug, Clone)]
+pub enum QuorumPolicy {
+    /// fixed K and α every round (`--quorum K`); K = 0 or ≥ the cohort
+    /// size means full barrier, exactly as before
+    Static(QuorumCfg),
+    Auto(QuorumController),
+}
+
+impl QuorumPolicy {
+    /// The static policy (`--quorum K --staleness-alpha α`).
+    pub fn fixed(quorum: usize, alpha: f64) -> QuorumPolicy {
+        QuorumPolicy::Static(QuorumCfg { quorum, alpha })
+    }
+
+    /// The policy an experiment config asks for, or `None` when quorum
+    /// mode is off (synchronous rounds).
+    pub fn from_config(cfg: &crate::config::ExperimentConfig) -> Option<QuorumPolicy> {
+        match cfg.quorum {
+            crate::config::QuorumKnob::Off => None,
+            crate::config::QuorumKnob::Fixed(k) => {
+                Some(QuorumPolicy::fixed(k, cfg.staleness_alpha))
+            }
+            crate::config::QuorumKnob::Auto => {
+                Some(QuorumPolicy::Auto(QuorumController::new(QuorumCtlCfg::new(
+                    cfg.epsilon,
+                    cfg.quorum_floor,
+                    cfg.quorum_margin,
+                    cfg.staleness_alpha,
+                ))))
+            }
+        }
+    }
+
+    /// This round's (K, α). `completions` are the round's projected
+    /// completion times (plan facts); `sig` the scheme's observed
+    /// signals. K is always clamped to `[1, completions.len()]`.
+    pub fn decide(&mut self, completions: &[f64], sig: &QuorumSignals) -> QuorumDecision {
+        self.decide_with(completions, || *sig)
+    }
+
+    /// [`QuorumPolicy::decide`] with the signals fetched lazily: a
+    /// static policy never reads them, so the driver's per-round ledger
+    /// walk is skipped entirely on the `--quorum K` path.
+    pub fn decide_with(
+        &mut self,
+        completions: &[f64],
+        sig: impl FnOnce() -> QuorumSignals,
+    ) -> QuorumDecision {
+        let n = completions.len().max(1);
+        match self {
+            QuorumPolicy::Static(cfg) => QuorumDecision {
+                k: if cfg.quorum == 0 { n } else { cfg.quorum.clamp(1, n) },
+                alpha: cfg.alpha,
+            },
+            QuorumPolicy::Auto(ctl) => {
+                let mut d = ctl.decide(completions, &sig());
+                d.k = d.k.clamp(1, n);
+                d
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl() -> QuorumController {
+        QuorumController::new(QuorumCtlCfg::new(0.8, 1, 0.5, 1.0))
+    }
+
+    /// A 16-member cohort: 15 fast clients within 7% of each other plus
+    /// one ~4.5× straggler (the bench's Laptop-vs-AGX tail).
+    fn tailed() -> Vec<f64> {
+        let mut v: Vec<f64> = (0..15).map(|i| 1.0 + 0.005 * i as f64).collect();
+        v.push(4.5);
+        v
+    }
+
+    #[test]
+    fn homogeneous_cohort_collapses_to_full_barrier() {
+        let mut c = ctl();
+        // identical completions: zero spread, K must be the cohort size
+        let d = c.decide(&[2.0; 6], &QuorumSignals::default());
+        assert_eq!(d.k, 6);
+        // spread below spread_min (5%) likewise
+        let d = c.decide(&[1.0, 1.01, 1.02, 1.03], &QuorumSignals::default());
+        assert_eq!(d.k, 4);
+        // degenerate inputs stay in range
+        let d = c.decide(&[0.0, 0.0], &QuorumSignals::default());
+        assert_eq!(d.k, 2);
+        let d = c.decide(&[3.0], &QuorumSignals::default());
+        assert_eq!(d.k, 1);
+    }
+
+    #[test]
+    fn straggler_tail_shrinks_k_within_the_budget() {
+        let mut c = ctl();
+        let d = c.decide(&tailed(), &QuorumSignals::default());
+        assert!(d.k < 16, "a 4.5x straggler must not force a full barrier (k = {})", d.k);
+        assert!(d.k >= 1);
+        // the chosen K's projected penalty fits the budget
+        let mut sorted = tailed();
+        sorted.sort_by(f64::total_cmp);
+        let budget = staleness_budget(0.8, 1.0, 0.0, 0.5);
+        assert!(projected_staleness_loss(&sorted, d.k, d.alpha) <= budget + 1e-12);
+    }
+
+    #[test]
+    fn observed_staleness_grows_k() {
+        // fixed α (gain 0) isolates the K rule: as the observed staleness
+        // index eats the budget, the feasible K rises to N
+        let mut cfg = QuorumCtlCfg::new(0.8, 1, 0.5, 1.0);
+        cfg.alpha_gain = 0.0;
+        let mut prev = 0;
+        for idx in [0.0, 0.02, 0.05, 0.2] {
+            let mut c = QuorumController::new(cfg);
+            let sig = QuorumSignals { staleness_index: idx, ..QuorumSignals::default() };
+            let d = c.decide(&tailed(), &sig);
+            assert!(d.k >= prev, "K must not shrink as staleness rises: {} < {prev}", d.k);
+            prev = d.k;
+        }
+        assert_eq!(prev, 16, "a saturated staleness index must force the full barrier");
+    }
+
+    #[test]
+    fn k_floor_is_respected() {
+        let mut cfg = QuorumCtlCfg::new(0.8, 3, 1.0, 0.1);
+        cfg.alpha_gain = 0.0;
+        let mut c = QuorumController::new(cfg);
+        // near-free staleness (tiny α, generous margin): K would be 1
+        // without the floor
+        let d = c.decide(&tailed(), &QuorumSignals::default());
+        assert!(d.k >= 3, "k = {} violates the floor", d.k);
+        // floor above the cohort size clamps to it
+        let mut c = QuorumController::new(QuorumCtlCfg::new(0.8, 99, 0.5, 1.0));
+        assert_eq!(c.decide(&tailed(), &QuorumSignals::default()).k, 16);
+    }
+
+    #[test]
+    fn alpha_anneals_within_bounds() {
+        let mut c = ctl();
+        // losses far over budget: α relaxes toward alpha_min
+        let hot = QuorumSignals { staleness_index: 0.5, ..QuorumSignals::default() };
+        let mut last = c.alpha();
+        for _ in 0..20 {
+            let d = c.decide(&tailed(), &hot);
+            assert!(d.alpha <= last + 1e-12, "α must relax under loss pressure");
+            assert!((0.0..=1.0).contains(&d.alpha));
+            last = d.alpha;
+        }
+        assert!(last < 0.05, "α must approach alpha_min, got {last}");
+        // loss-free rounds sharpen it back toward alpha_max
+        for _ in 0..20 {
+            last = c.decide(&tailed(), &QuorumSignals::default()).alpha;
+        }
+        assert!(last > 0.95, "α must recover toward alpha_max, got {last}");
+    }
+
+    #[test]
+    fn static_policy_reproduces_pr3_clamps() {
+        let mut p = QuorumPolicy::fixed(0, 1.0);
+        assert_eq!(p.decide(&[1.0, 2.0, 3.0], &QuorumSignals::default()).k, 3);
+        let mut p = QuorumPolicy::fixed(99, 0.5);
+        let d = p.decide(&[1.0, 2.0, 3.0], &QuorumSignals::default());
+        assert_eq!((d.k, d.alpha), (3, 0.5));
+        let mut p = QuorumPolicy::fixed(2, 2.0);
+        assert_eq!(p.decide(&[1.0, 2.0, 3.0], &QuorumSignals::default()).k, 2);
+    }
+}

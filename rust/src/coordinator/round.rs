@@ -78,6 +78,44 @@
 //! concurrently — the quorum speedup measures real straggler hiding,
 //! not impossible parallelism.
 //!
+//! # Adaptive quorum control (closing the Alg. 1 loop over K and α)
+//!
+//! With `--quorum auto` the per-round K and α are **controller outputs**
+//! instead of CLI constants ([`crate::coordinator::quorum_ctl`]): before
+//! each aggregation the driver feeds the round's *projected* completion
+//! times (plan facts) and the scheme's observed signals
+//! ([`Strategy::quorum_signals`]: staleness index, β² proxy, smoothness
+//! estimate, count spread) to the policy, which returns this round's
+//! `(K_h, α_h)`:
+//!
+//! ```text
+//!     plan facts (virtual)                observed (virtual)
+//!   completions τ·μ + ν ──┐       ┌── staleness_index, β², L, spread
+//!                         ▼       ▼
+//!              ┌─────────────────────────────┐
+//!              │   QuorumController::decide  │  K ∈ [K_min, N]: smallest
+//!              │  projected staleness loss   │  K whose projected loss
+//!              │  vs the Eq. 23 ε-margin     │  fits the ε-margin slice;
+//!              │  budget (--quorum-margin)   │  α annealed vs observed
+//!              └─────────────┬───────────────┘  per-block losses
+//!                            │ (K_h, α_h)
+//!     quorum_members(·, K_h) ▼
+//!   C(h) fires at t_q(K_h); late merges of this round weigh 1/(1+s)^α_h;
+//!   the resulting staleness lands in the ledger → next round's signals
+//! ```
+//!
+//! **Adaptive determinism contract.** Every controller input is
+//! virtual-clock state: projected completions are plan facts, the
+//! staleness/β²/spread signals are deterministic ledger state, and the
+//! annealed α is a pure function of that history. No wall-clock, worker
+//! or pool state ever reaches a decision, so `--quorum auto` runs are
+//! **seed-deterministic for any `--workers`/`--pool`**, exactly like the
+//! static mode. A cohort with no straggler tail (projected-completion
+//! spread under the controller's threshold) provably decides `K = N`
+//! every round, which routes through the synchronous phase-C hook — a
+//! homogeneous-cohort `--quorum auto` run is **byte-identical to the
+//! full-barrier run** (both pinned in `tests/integration_parallel.rs`).
+//!
 //! **Quorum determinism contract.** Quorum membership and the merge
 //! round of every straggler are decided by the *virtual* clock — the
 //! projected completion times the plan already carries — never by which
@@ -112,6 +150,7 @@ use crate::baselines::Strategy;
 use crate::coordinator::assignment::average_wait;
 use crate::coordinator::client::{run_local, LocalResult};
 use crate::coordinator::env::{BatchStream, FlEnv};
+use crate::coordinator::quorum_ctl::QuorumPolicy;
 use crate::coordinator::RoundReport;
 use crate::runtime::{Engine, EnginePool};
 use crate::tensor::Tensor;
@@ -351,6 +390,7 @@ fn drive_rounds(
     if expected == 0 {
         return Err(anyhow!("cannot dispatch an empty cohort"));
     }
+    validate_completions(&tasks)?;
     queue.push_round(0, tasks);
 
     for h in 0..rounds {
@@ -370,6 +410,7 @@ fn drive_rounds(
             if expected == 0 {
                 return Err(anyhow!("cannot dispatch an empty cohort"));
             }
+            validate_completions(&tasks)?;
             queue.push_round(h + 1, tasks);
         }
     }
@@ -387,7 +428,9 @@ pub fn staleness_weight(staleness: usize, alpha: f64) -> f32 {
     ((1.0 / (1.0 + staleness as f64)).powf(alpha) as f32).max(f32::MIN_POSITIVE)
 }
 
-/// Semi-async knobs (`--quorum`, `--staleness-alpha`).
+/// Static semi-async knobs (`--quorum K`, `--staleness-alpha`) — the
+/// payload of `QuorumPolicy::Static`. `--quorum auto` replaces them with
+/// the per-round `quorum_ctl::QuorumController` decisions.
 #[derive(Debug, Clone, Copy)]
 pub struct QuorumCfg {
     /// aggregate once this many cohort members have (virtually) landed;
@@ -468,29 +511,55 @@ impl RoundMeta {
 /// new task when that one lands, not at the round start — without this
 /// serialization a perpetual straggler re-sampled every round would
 /// train several rounds *concurrently* on one device, overstating the
-/// quorum speedup. No-op (adds exactly `0.0`) for clients with nothing
-/// pending, so full-quorum runs are untouched.
+/// quorum speedup. No-op for clients with nothing pending, so
+/// full-quorum runs are untouched.
+///
+/// One `busy_until` map is built up front (max `abs_finish` per pending
+/// client), so the cost is O(tasks + pending) instead of the old
+/// per-task rescan's O(tasks × pending) — same results bit for bit
+/// (reference-equivalence pinned in the tests below).
 fn delay_busy_clients(tasks: &mut [LocalTask], pending: &[PendingStraggler], t_start: f64) {
-    for task in tasks.iter_mut() {
-        let busy_until = pending
-            .iter()
-            .filter(|p| p.client == task.client)
-            .map(|p| p.abs_finish)
-            .fold(t_start, f64::max);
-        task.completion += busy_until - t_start;
+    if pending.is_empty() {
+        return;
     }
+    let mut busy_until: HashMap<usize, f64> = HashMap::with_capacity(pending.len());
+    for p in pending {
+        let e = busy_until.entry(p.client).or_insert(f64::NEG_INFINITY);
+        *e = e.max(p.abs_finish);
+    }
+    for task in tasks.iter_mut() {
+        if let Some(&until) = busy_until.get(&task.client) {
+            // the old loop folded from t_start, so a straggler landing
+            // before the round start contributes exactly 0.0
+            task.completion += until.max(t_start) - t_start;
+        }
+    }
+}
+
+/// Plan/task-construction-time validation: a non-finite projected
+/// completion time would make the quorum ranking meaningless (and used
+/// to panic the coordinator inside `quorum_members`'s comparator), so it
+/// is rejected as a proper `Err` before the round is ever dispatched.
+fn validate_completions(tasks: &[LocalTask]) -> Result<()> {
+    for t in tasks {
+        if !t.completion.is_finite() {
+            return Err(anyhow!(
+                "client {}: non-finite projected completion time {}",
+                t.client,
+                t.completion
+            ));
+        }
+    }
+    Ok(())
 }
 
 /// The quorum members of a cohort: indices of the `k` smallest projected
 /// completion times (index tie-break), returned in assignment order.
+/// Completions are validated finite at dispatch (`validate_completions`),
+/// and the comparator is total either way — no panic path.
 fn quorum_members(completions: &[f64], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..completions.len()).collect();
-    idx.sort_by(|&a, &b| {
-        completions[a]
-            .partial_cmp(&completions[b])
-            .expect("non-finite projected completion time")
-            .then(a.cmp(&b))
-    });
+    idx.sort_by(|&a, &b| completions[a].total_cmp(&completions[b]).then(a.cmp(&b)));
     idx.truncate(k);
     idx.sort_unstable();
     idx
@@ -580,7 +649,7 @@ impl QuorumState {
 }
 
 /// Coordinator body of [`RoundDriver::run_quorum`] (module docs,
-/// "Semi-async quorum rounds").
+/// "Semi-async quorum rounds" and "Adaptive quorum control").
 #[allow(clippy::too_many_arguments)]
 fn drive_quorum(
     queue: &TaskQueue,
@@ -588,7 +657,7 @@ fn drive_quorum(
     env: &mut FlEnv,
     strategy: &mut dyn Strategy,
     rounds: usize,
-    qcfg: QuorumCfg,
+    policy: &mut QuorumPolicy,
     mut observer: Option<RoundObserver<'_>>,
     reports: &mut Vec<RoundReport>,
 ) -> Result<()> {
@@ -601,6 +670,7 @@ fn drive_quorum(
     if tasks.is_empty() {
         return Err(anyhow!("cannot dispatch an empty cohort"));
     }
+    validate_completions(&tasks)?;
     let mut meta = RoundMeta::capture(&tasks, env.clock.now());
     state.register_round(tasks.len());
     queue.push_round(0, tasks);
@@ -611,8 +681,13 @@ fn drive_quorum(
             strategy.plan_ahead(env)?;
         }
 
+        // this round's (K, α): plan facts + observed virtual-clock
+        // signals in, deterministic decision out (module docs,
+        // "Adaptive quorum control"); signals are fetched lazily so the
+        // static-K path never walks the ledger
         let n = meta.completions.len();
-        let k = if qcfg.quorum == 0 { n } else { qcfg.quorum.clamp(1, n) };
+        let decision = policy.decide_with(&meta.completions, || strategy.quorum_signals());
+        let k = decision.k.clamp(1, n);
         let members = quorum_members(&meta.completions, k);
         let t_q = members.iter().map(|&i| meta.completions[i]).fold(0.0f64, f64::max);
         let t_agg = meta.t_start + t_q;
@@ -638,7 +713,7 @@ fn drive_quorum(
             late.push(LateArrival {
                 origin_round: p.seq,
                 staleness,
-                weight: staleness_weight(staleness, qcfg.alpha),
+                weight: staleness_weight(staleness, decision.alpha),
                 outcome,
             });
         }
@@ -695,6 +770,7 @@ fn drive_quorum(
             }
             let t_start = env.clock.now();
             delay_busy_clients(&mut tasks, &pending, t_start);
+            validate_completions(&tasks)?;
             meta = RoundMeta::capture(&tasks, t_start);
             state.register_round(tasks.len());
             queue.push_round(h + 1, tasks);
@@ -733,6 +809,7 @@ impl RoundDriver {
         if n == 0 {
             return Err(anyhow!("cannot dispatch an empty cohort"));
         }
+        validate_completions(&tasks)?;
         let workers = self.workers.min(n);
         if workers <= 1 {
             let engine = pool.primary();
@@ -806,22 +883,27 @@ impl RoundDriver {
     /// (module docs, "Semi-async quorum rounds"): round *h* aggregates
     /// once its K virtually-fastest cohort members land, round *h+1*
     /// dispatches immediately, and *h*'s stragglers fold into later
-    /// rounds staleness-weighted.
+    /// rounds staleness-weighted. The per-round (K, α) come from
+    /// `policy` — PR 3's static knobs (`QuorumPolicy::fixed`) or the
+    /// adaptive controller (`--quorum auto`; module docs, "Adaptive
+    /// quorum control"). The policy is borrowed mutably so callers can
+    /// inspect controller state (e.g. the annealed α) after the run.
     ///
     /// Deterministic for a fixed seed regardless of worker count or pool
-    /// size; with `qcfg.quorum` ≥ the cohort size (or 0) every round
-    /// takes the synchronous phase-C hook and the output is byte-
-    /// identical to the serial loop. The observer, when present, runs
-    /// after each round's aggregation; returning `Ok(false)` ends the
-    /// run early. On any exit, outstanding stragglers are drained —
-    /// their updates dropped, their failures surfaced.
+    /// size; whenever a round's decided K covers the whole cohort (the
+    /// static knob ≥ N or 0, or an adaptive no-straggler round) it takes
+    /// the synchronous phase-C hook and reproduces the serial loop
+    /// byte-identically. The observer, when present, runs after each
+    /// round's aggregation; returning `Ok(false)` ends the run early. On
+    /// any exit, outstanding stragglers are drained — their updates
+    /// dropped, their failures surfaced.
     pub fn run_quorum(
         &self,
         pool: &EnginePool,
         env: &mut FlEnv,
         strategy: &mut dyn Strategy,
         rounds: usize,
-        qcfg: QuorumCfg,
+        policy: &mut QuorumPolicy,
         observer: Option<RoundObserver<'_>>,
     ) -> Result<Vec<RoundReport>> {
         if rounds == 0 {
@@ -843,7 +925,7 @@ impl RoundDriver {
             drop(tx);
 
             let _close = CloseOnDrop(&queue);
-            drive_quorum(&queue, &rx, env, strategy, rounds, qcfg, observer, &mut reports)
+            drive_quorum(&queue, &rx, env, strategy, rounds, policy, observer, &mut reports)
         });
         result.map(|()| reports)
     }
@@ -1066,6 +1148,107 @@ mod tests {
         assert_eq!(tasks[0].completion, 20.0);
         // idle client: untouched (exactly +0.0)
         assert_eq!(tasks[1].completion, 5.0);
+    }
+
+    #[test]
+    fn delay_busy_clients_matches_reference_loop() {
+        use crate::data::loader::ImageLoader;
+        use crate::data::synth_image::ImageGen;
+        use crate::util::rng::Rng;
+        use std::sync::Arc;
+
+        // the old O(tasks × pending) per-task rescan, kept verbatim as
+        // the reference the busy_until-map rewrite must match bit for bit
+        fn reference(tasks: &mut [LocalTask], pending: &[PendingStraggler], t_start: f64) {
+            for task in tasks.iter_mut() {
+                let busy_until = pending
+                    .iter()
+                    .filter(|p| p.client == task.client)
+                    .map(|p| p.abs_finish)
+                    .fold(t_start, f64::max);
+                task.completion += busy_until - t_start;
+            }
+        }
+
+        let set = Arc::new(ImageGen::cifar_twin().generate(4, 1, &mut Rng::new(1)));
+        let mk = |client: usize, completion: f64| LocalTask {
+            client,
+            p: 1,
+            tau: 1,
+            lr: 0.1,
+            train_exec: "unused".into(),
+            probe_exec: None,
+            payload: Vec::new(),
+            stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
+            bytes: 0,
+            completion,
+        };
+        let mut rng = Rng::new(17);
+        for case in 0..50 {
+            let t_start = rng.uniform_in(0.0, 50.0);
+            let n_tasks = 1 + rng.below(8);
+            let n_pending = rng.below(10);
+            let mut a: Vec<LocalTask> = (0..n_tasks)
+                .map(|_| mk(rng.below(6), rng.uniform_in(0.1, 20.0)))
+                .collect();
+            let mut b: Vec<LocalTask> =
+                a.iter().map(|t| mk(t.client, t.completion)).collect();
+            let pending: Vec<PendingStraggler> = (0..n_pending)
+                .map(|i| PendingStraggler {
+                    seq: 0,
+                    index: i,
+                    client: rng.below(6),
+                    // including finishes *before* the round start, which
+                    // must contribute exactly nothing
+                    abs_finish: rng.uniform_in(-10.0, 80.0) + t_start,
+                })
+                .collect();
+            delay_busy_clients(&mut a, &pending, t_start);
+            reference(&mut b, &pending, t_start);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(
+                    x.completion.to_bits(),
+                    y.completion.to_bits(),
+                    "case {case}: client {} diverged ({} vs {})",
+                    x.client,
+                    x.completion,
+                    y.completion
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn non_finite_completions_are_rejected_at_dispatch() {
+        // regression: a NaN projected completion used to survive until
+        // quorum_members' comparator `.expect` aborted the coordinator;
+        // it is now a proper Err at plan/task-construction time
+        use crate::data::loader::ImageLoader;
+        use crate::data::synth_image::ImageGen;
+        use crate::util::rng::Rng;
+        use std::sync::Arc;
+
+        let set = Arc::new(ImageGen::cifar_twin().generate(4, 1, &mut Rng::new(1)));
+        let mk = |completion: f64| LocalTask {
+            client: 0,
+            p: 1,
+            tau: 1,
+            lr: 0.1,
+            train_exec: "unused".into(),
+            probe_exec: None,
+            payload: Vec::new(),
+            stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
+            bytes: 0,
+            completion,
+        };
+        validate_completions(&[mk(1.0), mk(0.0)]).unwrap();
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = validate_completions(&[mk(1.0), mk(bad)]).unwrap_err();
+            assert!(
+                err.to_string().contains("non-finite projected completion"),
+                "unexpected error: {err}"
+            );
+        }
     }
 
     #[test]

@@ -127,7 +127,7 @@ impl HeroesServer {
                 let (p, mu) = assignment::assign_width(info, s.q_flops, self.ctrl.mu_max);
                 let nu = s.link.upload_time(info.bytes_composed[&p]);
                 let sel = self.ledger.select_for_width(info, p);
-                self.ledger.record(&sel, self.tau_default as u64);
+                self.ledger.record(&sel, self.tau_default as u64)?;
                 assignments.push(assignment::Assignment {
                     client: s.client,
                     p,
@@ -275,7 +275,7 @@ impl HeroesServer {
         for late in &batch.late {
             let a = Self::assignment_of(&self.in_flight, late.origin_round, late.outcome.client)?;
             acc.push_weighted(&a.selection.blocks, &late.outcome.result.params, late.weight)?;
-            self.ledger.record_staleness(&a.selection, a.tau as u64, late.weight);
+            self.ledger.record_staleness(&a.selection, a.tau as u64, late.weight)?;
             if let Some(e) = late.outcome.result.estimates {
                 estimates.push(e);
             }
@@ -318,5 +318,19 @@ impl HeroesServer {
     /// `run_round` composition).
     pub fn driver(&self) -> RoundDriver {
         self.driver
+    }
+
+    /// Observed signals for the adaptive quorum controller
+    /// (`coordinator::quorum_ctl`): the ledger's staleness index, the β²
+    /// proxy the H* solver already consumes, the tracker's smoothness
+    /// estimate and the planned-count spread. All deterministic
+    /// virtual-clock state — reading them never perturbs a run.
+    pub fn quorum_signals(&self) -> crate::coordinator::quorum_ctl::QuorumSignals {
+        crate::coordinator::quorum_ctl::QuorumSignals {
+            staleness_index: self.ledger.staleness_index(),
+            beta_sq: self.ledger.relative_variance(),
+            l: if self.tracker.ready() { self.tracker.current().l } else { 1.0 },
+            spread_index: self.ledger.spread_index(),
+        }
     }
 }

@@ -5,15 +5,17 @@
 //! With `cfg.overlap` the rounds between two evaluation points run
 //! through `RoundDriver::run_overlapped` (straggler-overlapped planning
 //! over a persistent worker pool); reports are byte-identical either way.
-//! With `cfg.quorum > 0` the whole budget runs as **one** semi-async
-//! `RoundDriver::run_quorum` pipeline — chunking at evaluation points
-//! would discard cross-chunk stragglers — with the evaluation cadence
-//! and early-stop budgets riding the driver's per-round observer.
+//! With quorum mode active (`--quorum K` or `--quorum auto`) the whole
+//! budget runs as **one** semi-async `RoundDriver::run_quorum` pipeline —
+//! chunking at evaluation points would discard cross-chunk stragglers —
+//! with the evaluation cadence and early-stop budgets riding the
+//! driver's per-round observer, which also logs the (possibly adaptive)
+//! chosen K at every evaluation point.
 
 use crate::baselines::{make_strategy, Strategy};
 use crate::config::ExperimentConfig;
 use crate::coordinator::env::FlEnv;
-use crate::coordinator::round::QuorumCfg;
+use crate::coordinator::quorum_ctl::QuorumPolicy;
 use crate::coordinator::RoundReport;
 use crate::metrics::Recorder;
 use crate::runtime::EnginePool;
@@ -53,15 +55,19 @@ fn eval_point(
     round: usize,
     last_train_loss: f64,
     stop: StopCondition,
+    quorum_k: Option<usize>,
 ) -> Result<bool> {
     let (loss, acc) = strategy.evaluate(env)?;
     let t = env.clock.now();
     let gb = env.traffic.total_gb();
     rec.push_eval(round, t, gb, loss, acc, last_train_loss, strategy.block_variance());
     let stale = strategy.staleness_index();
+    // quorum modes log the K the round actually aggregated (the
+    // adaptive controller's per-round output; the static knob's clamp)
+    let k = quorum_k.map(|k| format!(" K={k}")).unwrap_or_default();
     log::info!(
         "[{scheme}] round {round:>4}: t={t:9.1}s traffic={gb:.4}GB loss={loss:.4} \
-         acc={acc:.4} stale={stale:.3}"
+         acc={acc:.4} stale={stale:.3}{k}"
     );
     Ok(!stop.met(t, gb, acc))
 }
@@ -92,10 +98,9 @@ pub fn run_scheme(
     let driver = strategy.driver();
     let mut last_train_loss = loss0;
 
-    if cfg.quorum > 0 {
+    if let Some(mut policy) = QuorumPolicy::from_config(cfg) {
         // semi-async: one continuous pipeline, evaluation + stop budgets
         // in the observer (module docs)
-        let qcfg = QuorumCfg { quorum: cfg.quorum, alpha: cfg.staleness_alpha };
         let total = cfg.rounds;
         let eval_every = cfg.eval_every;
         let mut observer = |env: &FlEnv, strategy: &dyn Strategy, report: &RoundReport| {
@@ -103,11 +108,23 @@ pub fn run_scheme(
             rec.push_round(report);
             let done = report.round + 1;
             if done % eval_every == 0 || done == total {
-                return eval_point(env, strategy, &mut rec, scheme, done, last_train_loss, stop);
+                // the round's actual quorum size: its reported
+                // completion set is exactly the K aggregated members
+                let k = report.completion_times.len();
+                return eval_point(
+                    env, strategy, &mut rec, scheme, done, last_train_loss, stop, Some(k),
+                );
             }
             Ok(true)
         };
-        driver.run_quorum(pool, &mut env, strategy.as_mut(), total, qcfg, Some(&mut observer))?;
+        driver.run_quorum(
+            pool,
+            &mut env,
+            strategy.as_mut(),
+            total,
+            &mut policy,
+            Some(&mut observer),
+        )?;
         return Ok(rec);
     }
 
@@ -130,8 +147,9 @@ pub fn run_scheme(
         }
         round += chunk;
         if round % cfg.eval_every == 0 || round == cfg.rounds {
-            let go =
-                eval_point(&env, strategy.as_ref(), &mut rec, scheme, round, last_train_loss, stop)?;
+            let go = eval_point(
+                &env, strategy.as_ref(), &mut rec, scheme, round, last_train_loss, stop, None,
+            )?;
             if !go {
                 break;
             }

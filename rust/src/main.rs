@@ -14,11 +14,20 @@
 //! --workers (round-driver threads; N and 1 are byte-identical)
 //! --pool (PJRT engines, default one per worker) --overlap (pipeline
 //! round h+1's planning under round h's stragglers; byte-identical)
-//! --quorum K (semi-async K-of-N aggregation: a round closes once its K
-//! virtually-fastest members land, stragglers merge into later rounds
-//! staleness-weighted; K ≥ cohort ≡ the synchronous loop byte-for-byte,
-//! K < cohort is seed-deterministic for any worker count)
-//! --staleness-alpha (α in the late-merge weight 1/(1+s)^α, default 1).
+//! --quorum K|auto (semi-async K-of-N aggregation: a round closes once
+//! its K virtually-fastest members land, stragglers merge into later
+//! rounds staleness-weighted; K ≥ cohort ≡ the synchronous loop
+//! byte-for-byte, K < cohort is seed-deterministic for any worker
+//! count. `auto` hands K and α to the per-round adaptive controller:
+//! smallest K whose projected staleness penalty fits the Eq. 23
+//! ε-margin slice, α annealed against the observed losses — still
+//! seed-deterministic, and byte-identical to the full barrier on
+//! cohorts with no straggler tail)
+//! --quorum-margin (fraction of the ε margin the adaptive controller
+//! may spend on staleness, default 0.5)
+//! --quorum-floor (adaptive K floor, default 1)
+//! --staleness-alpha (α in the late-merge weight 1/(1+s)^α, default 1;
+//! the annealing ceiling under --quorum auto).
 
 use anyhow::{anyhow, Result};
 use heroes::baselines::ALL_SCHEMES;

@@ -13,6 +13,10 @@
 //!    identical to the serial loop for every scheme family; `--quorum
 //!    K<N` is seed-deterministic for any worker count and closes rounds
 //!    at the K-th projected completion instead of the cohort maximum.
+//! 5. **Adaptive quorum** — `--quorum auto` is seed-deterministic for
+//!    any worker count, keeps every round's K within `[K_floor, N]`,
+//!    and on a homogeneous cohort (no straggler tail) collapses to the
+//!    full-barrier path byte-identically.
 //!
 //! PJRT-dependent tests require `make artifacts` and skip gracefully
 //! otherwise.
@@ -20,10 +24,12 @@
 use heroes::baselines::{make_strategy, Strategy};
 use heroes::config::{ExperimentConfig, Scale};
 use heroes::coordinator::env::FlEnv;
-use heroes::coordinator::round::{QuorumCfg, RoundDriver};
+use heroes::coordinator::quorum_ctl::{QuorumController, QuorumCtlCfg, QuorumPolicy};
+use heroes::coordinator::round::RoundDriver;
 use heroes::coordinator::RoundReport;
 use heroes::model::ComposedGlobal;
 use heroes::runtime::{Engine, EnginePool, Manifest};
+use heroes::simulation::{ClientDevice, DeviceClass};
 use heroes::util::rng::Rng;
 
 fn pool_or_skip(engines: usize) -> Option<EnginePool> {
@@ -78,6 +84,28 @@ fn run_reports_overlapped(
     (reports, s.evaluate(&env).unwrap())
 }
 
+/// Same rounds through `RoundDriver::run_quorum` under an arbitrary
+/// quorum policy (static K or the adaptive controller); `doctor` runs
+/// against the freshly-built env before anything executes, so tests can
+/// shape the fleet (homogeneous / skewed) identically across runs.
+fn run_reports_policy(
+    pool: &EnginePool,
+    cfg: &ExperimentConfig,
+    scheme: &str,
+    rounds: usize,
+    mut policy: QuorumPolicy,
+    doctor: impl Fn(&mut FlEnv),
+) -> (Vec<RoundReport>, (f64, f64)) {
+    let mut env = FlEnv::build(pool, cfg.clone()).unwrap();
+    doctor(&mut env);
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut s = make_strategy(scheme, &env.info, cfg, &mut rng).unwrap();
+    let driver = RoundDriver::new(cfg.workers);
+    let reports =
+        driver.run_quorum(pool, &mut env, s.as_mut(), rounds, &mut policy, None).unwrap();
+    (reports, s.evaluate(&env).unwrap())
+}
+
 /// Same rounds through `RoundDriver::run_quorum` (semi-async K-of-N
 /// aggregation with staleness-weighted late merges).
 fn run_reports_quorum(
@@ -88,14 +116,7 @@ fn run_reports_quorum(
     quorum: usize,
     alpha: f64,
 ) -> (Vec<RoundReport>, (f64, f64)) {
-    let mut env = FlEnv::build(pool, cfg.clone()).unwrap();
-    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
-    let mut s = make_strategy(scheme, &env.info, cfg, &mut rng).unwrap();
-    let driver = RoundDriver::new(cfg.workers);
-    let reports = driver
-        .run_quorum(pool, &mut env, s.as_mut(), rounds, QuorumCfg { quorum, alpha }, None)
-        .unwrap();
-    (reports, s.evaluate(&env).unwrap())
+    run_reports_policy(pool, cfg, scheme, rounds, QuorumPolicy::fixed(quorum, alpha), |_| {})
 }
 
 #[test]
@@ -181,6 +202,132 @@ fn partial_quorum_is_deterministic_for_any_worker_count() {
             q1[0].round_time,
             serial[0].round_time
         );
+    }
+}
+
+/// Serial (per-round, full-barrier) reference with the same env
+/// doctoring hook as `run_reports_policy`.
+fn run_reports_serial_doctored(
+    pool: &EnginePool,
+    cfg: &ExperimentConfig,
+    scheme: &str,
+    rounds: usize,
+    doctor: impl Fn(&mut FlEnv),
+) -> (Vec<RoundReport>, (f64, f64)) {
+    let mut env = FlEnv::build(pool, cfg.clone()).unwrap();
+    doctor(&mut env);
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut s = make_strategy(scheme, &env.info, cfg, &mut rng).unwrap();
+    let reports = (0..rounds).map(|_| s.run_round(&mut env).unwrap()).collect();
+    (reports, s.evaluate(&env).unwrap())
+}
+
+/// The adaptive policy as `--quorum auto` would build it from the smoke
+/// preset (ε = 0.8, floor 1, margin 0.5, α ceiling 1).
+fn auto_policy() -> QuorumPolicy {
+    QuorumPolicy::Auto(QuorumController::new(QuorumCtlCfg::new(0.8, 1, 0.5, 1.0)))
+}
+
+/// A provably homogeneous cohort: full participation keeps every
+/// identically-seeded device's per-round draw in lockstep, and the
+/// degenerate WAN band makes every link sample identical — so all
+/// projected completions coincide and no straggler tail can exist.
+fn homo_cfg(workers: usize) -> ExperimentConfig {
+    let mut cfg = tiny_cfg(workers);
+    cfg.k_per_round = cfg.n_clients;
+    cfg.up_mbps = (2.0 / 30.0, 2.0 / 30.0);
+    cfg.down_mbps = (15.0 / 30.0, 15.0 / 30.0);
+    // pinning the τ range makes every controller hand every
+    // identical-status client the same τ (the Eq. 24 bracket clamps to a
+    // point), so completions coincide exactly — no float-rounding edge
+    // can fabricate a spread
+    cfg.tau_min = cfg.tau_default;
+    cfg.tau_max = cfg.tau_default;
+    cfg
+}
+
+fn make_homogeneous(env: &mut FlEnv) {
+    for d in env.fleet.devices.iter_mut() {
+        *d = ClientDevice::new(DeviceClass::AgxXavier, Rng::new(7));
+    }
+}
+
+/// The bench's straggler tail: client 0 on a ~4.5× slower device.
+fn make_skewed(env: &mut FlEnv) {
+    for (i, d) in env.fleet.devices.iter_mut().enumerate() {
+        let class = if i == 0 { DeviceClass::Laptop } else { DeviceClass::AgxXavier };
+        *d = ClientDevice::new(class, Rng::new(100 + i as u64));
+    }
+}
+
+#[test]
+fn adaptive_quorum_homogeneous_cohort_matches_full_barrier() {
+    // The acceptance pin: `--quorum auto` on a cohort with no straggler
+    // tail must decide K = N every round, route through the synchronous
+    // phase-C hook, and reproduce the full-barrier run byte-identically
+    // — for every scheme family.
+    let Some(shared) = pool_or_skip(1) else { return };
+    let Some(pooled) = pool_or_skip(4) else { return };
+    for scheme in ["heroes", "fedavg", "flanc"] {
+        let rounds = 3;
+        let (serial, eval_serial) =
+            run_reports_serial_doctored(&shared, &homo_cfg(1), scheme, rounds, make_homogeneous);
+        let (adaptive, eval_adaptive) = run_reports_policy(
+            &pooled,
+            &homo_cfg(4),
+            scheme,
+            rounds,
+            auto_policy(),
+            make_homogeneous,
+        );
+        assert_eq!(
+            serial, adaptive,
+            "{scheme}: adaptive quorum on a homogeneous cohort must be the full barrier"
+        );
+        assert_eq!(
+            eval_serial, eval_adaptive,
+            "{scheme}: adaptive quorum changed the final model on a homogeneous cohort"
+        );
+        let n = homo_cfg(1).k_per_round;
+        for r in &adaptive {
+            assert_eq!(
+                r.completion_times.len(),
+                n,
+                "{scheme}: a no-tail round must aggregate the whole cohort"
+            );
+        }
+    }
+}
+
+#[test]
+fn adaptive_quorum_is_deterministic_for_any_worker_count() {
+    // Adaptive decisions read only virtual-clock state (plan facts +
+    // ledger signals), so a straggler-tailed `--quorum auto` run must be
+    // byte-identical across worker/pool counts and reproducible, with
+    // every round's K inside [floor, cohort].
+    let Some(shared) = pool_or_skip(1) else { return };
+    let Some(pooled) = pool_or_skip(4) else { return };
+    for scheme in ["heroes", "fedavg", "flanc"] {
+        let rounds = 4;
+        let (a1, e1) =
+            run_reports_policy(&shared, &tiny_cfg(1), scheme, rounds, auto_policy(), make_skewed);
+        let (a4, e4) =
+            run_reports_policy(&pooled, &tiny_cfg(4), scheme, rounds, auto_policy(), make_skewed);
+        let (a4b, e4b) =
+            run_reports_policy(&pooled, &tiny_cfg(4), scheme, rounds, auto_policy(), make_skewed);
+        assert_eq!(a1, a4, "{scheme}: adaptive rounds must not depend on worker count");
+        assert_eq!(a4, a4b, "{scheme}: adaptive rounds must be reproducible");
+        assert_eq!(e1, e4, "{scheme}: final model must not depend on worker count");
+        assert_eq!(e4, e4b, "{scheme}: final model must be reproducible");
+        let cohort = tiny_cfg(1).k_per_round;
+        for r in &a1 {
+            let k = r.completion_times.len();
+            assert!(
+                (1..=cohort).contains(&k),
+                "{scheme}: adaptive K = {k} escaped [1, {cohort}] at round {}",
+                r.round
+            );
+        }
     }
 }
 

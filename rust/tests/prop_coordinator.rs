@@ -6,6 +6,7 @@ use heroes::coordinator::aggregate::{ComposedAccumulator, DenseAccumulator};
 use heroes::coordinator::assignment::{plan_round, ClientStatus, ControllerCfg};
 use heroes::coordinator::frequency::{completion_time, tau_bounds, Estimates};
 use heroes::coordinator::ledger::BlockLedger;
+use heroes::coordinator::quorum_ctl::{QuorumController, QuorumCtlCfg, QuorumSignals};
 use heroes::coordinator::round::staleness_weight;
 use heroes::data::partition::{gamma_partition, phi_partition};
 use heroes::model::tests_support::toy_info;
@@ -182,7 +183,7 @@ fn prop_composed_aggregation_idempotent() {
             for i in 0..k {
                 let p = 1 + (i % info.cap_p);
                 let sel = ledger.select_for_width(&info, p);
-                ledger.record(&sel, 1);
+                ledger.record(&sel, 1).unwrap();
                 let payload = prev.reduced_inputs(&info, p, &sel.blocks).unwrap();
                 acc.push(&sel.blocks, &payload).unwrap();
             }
@@ -302,7 +303,7 @@ fn prop_quorum_weights_normalize_per_block() {
             for (i, (&w, &v)) in weights.iter().zip(values).enumerate() {
                 let p = 1 + (i % info.cap_p);
                 let sel = ledger.select_for_width(&info, p);
-                ledger.record(&sel, 1);
+                ledger.record(&sel, 1).unwrap();
                 let payload: Vec<_> = prev
                     .reduced_inputs(&info, p, &sel.blocks)
                     .unwrap()
@@ -387,6 +388,144 @@ fn prop_dense_weighted_idempotent_for_any_weights() {
             }
             if next.bias.sq_dist(&prev.bias) > 1e-8 {
                 return Err("bias drifted under identical weighted uploads".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_adaptive_k_stays_in_range() {
+    // For any completions, signals and knobs, the controller's K lands
+    // in [k_min.clamp(1, n), n] and its α in [alpha_min, alpha_max] —
+    // over a whole sequence of decisions, not just the first.
+    check(
+        47,
+        120,
+        |rng| {
+            let n = 1 + rng.below(20);
+            let completions: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.1, 30.0)).collect();
+            let knobs = vec![
+                rng.uniform_in(0.05, 1.0),  // margin_frac
+                rng.uniform_in(0.0, 3.0),   // alpha_max
+                rng.uniform_in(0.0, 0.6),   // staleness_index
+                rng.uniform_in(0.0, 2.0),   // beta_sq
+                rng.uniform_in(0.1, 10.0),  // l
+                rng.uniform_in(0.0, 2.0),   // spread_index
+            ];
+            (completions, knobs, 1 + rng.below(8)) // k_min
+        },
+        |(completions, knobs, k_min)| {
+            if completions.is_empty() {
+                return Ok(()); // shrinking artifact; rejected upstream
+            }
+            let n = completions.len();
+            let mut cfg = QuorumCtlCfg::new(0.8, *k_min, knobs[0], knobs[1]);
+            cfg.spread_min = 0.05;
+            let mut ctl = QuorumController::new(cfg);
+            let sig = QuorumSignals {
+                staleness_index: knobs[2],
+                beta_sq: knobs[3],
+                l: knobs[4],
+                spread_index: knobs[5],
+            };
+            let lo = (*k_min).clamp(1, n);
+            for _ in 0..5 {
+                let d = ctl.decide(completions, &sig);
+                if d.k < lo || d.k > n {
+                    return Err(format!("K = {} escaped [{lo}, {n}]", d.k));
+                }
+                if !(0.0..=knobs[1]).contains(&d.alpha) {
+                    return Err(format!("α = {} escaped [0, {}]", d.alpha, knobs[1]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_adaptive_k_monotone_in_staleness() {
+    // At fixed α (annealing frozen), the chosen K is monotone
+    // non-decreasing in the observed staleness index: losses already on
+    // the books shrink the budget, so the controller can only demand
+    // *more* synchrony, never less.
+    check(
+        53,
+        120,
+        |rng| {
+            let n = 2 + rng.below(18);
+            let completions: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.1, 30.0)).collect();
+            (completions, rng.uniform_in(0.0, 2.0))
+        },
+        |(completions, alpha)| {
+            if completions.is_empty() {
+                return Ok(()); // shrinking artifact; rejected upstream
+            }
+            let mut cfg = QuorumCtlCfg::new(0.8, 1, 0.5, *alpha);
+            cfg.alpha_gain = 0.0; // isolate the K rule
+            let mut prev = 0usize;
+            for step in 0..=10 {
+                let sig = QuorumSignals {
+                    staleness_index: step as f64 * 0.02,
+                    ..QuorumSignals::default()
+                };
+                let mut ctl = QuorumController::new(cfg);
+                let d = ctl.decide(completions, &sig);
+                if d.k < prev {
+                    return Err(format!(
+                        "K shrank from {prev} to {} as staleness rose to {}",
+                        d.k,
+                        step as f64 * 0.02
+                    ));
+                }
+                prev = d.k;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_adaptive_collapses_without_a_straggler_tail() {
+    // Any cohort whose projected completions all sit within the spread
+    // threshold of the maximum decides K = N — the provable collapse to
+    // the full-barrier path — regardless of the observed signals.
+    check(
+        59,
+        120,
+        |rng| {
+            let n = 1 + rng.below(20);
+            let base = rng.uniform_in(0.5, 20.0);
+            // all completions within 4% of the max: under spread_min 5%
+            let completions: Vec<f64> =
+                (0..n).map(|_| base * rng.uniform_in(0.96, 1.0)).collect();
+            let sig = vec![
+                rng.uniform_in(0.0, 0.5),
+                rng.uniform_in(0.0, 1.0),
+                rng.uniform_in(0.1, 10.0),
+                rng.uniform_in(0.0, 1.0),
+            ];
+            (completions, sig)
+        },
+        |(completions, s)| {
+            if completions.is_empty() {
+                return Ok(()); // shrinking artifact; rejected upstream
+            }
+            let mut ctl = QuorumController::new(QuorumCtlCfg::new(0.8, 1, 0.5, 1.0));
+            let sig = QuorumSignals {
+                staleness_index: s[0],
+                beta_sq: s[1],
+                l: s[2],
+                spread_index: s[3],
+            };
+            let d = ctl.decide(completions, &sig);
+            if d.k != completions.len() {
+                return Err(format!(
+                    "no-tail cohort decided K = {} instead of N = {}",
+                    d.k,
+                    completions.len()
+                ));
             }
             Ok(())
         },
