@@ -17,7 +17,8 @@ use heroes::coordinator::RoundReport;
 use heroes::data::synth_image::ImageGen;
 use heroes::model::ComposedGlobal;
 use heroes::runtime::{EnginePool, EngineStats, Manifest, Value};
-use heroes::simulation::{ClientDevice, DeviceClass, LinkSample};
+use heroes::experiments::{run_scheme, StopCondition};
+use heroes::simulation::{ClientDevice, DeviceClass, LinkSample, Scenario};
 use heroes::tensor::blocks::{gather_blocks, scatter_blocks_add};
 use heroes::tensor::Tensor;
 use heroes::util::bench::Bench;
@@ -336,6 +337,73 @@ fn main() {
             ("best_static_virtual", Json::Num(best_virt)),
             ("adaptive_virtual", Json::Num(adaptive)),
             ("configs", pick(&["full-barrier", "quorum-12", "quorum-14", "adaptive"])),
+        ]),
+    );
+
+    // ---- churn: Heroes vs dense vs Flanc under flash-crowd churn ----
+    // time- and traffic-to-accuracy with a third of the fleet windowed,
+    // the WAN congested in-window and 2–8% of dispatched tasks vanishing
+    // mid-round (`--scenario flash-crowd-churn --quorum auto`): the
+    // scenario engine's headline comparison, emitted as BENCH_churn.json
+    let mut cfg_churn = ExperimentConfig::preset("cnn", Scale::Smoke);
+    cfg_churn.n_clients = 16;
+    cfg_churn.k_per_round = 8;
+    cfg_churn.samples_per_client = 32;
+    cfg_churn.test_samples = 64;
+    cfg_churn.tau_default = 2;
+    cfg_churn.workers = 4;
+    cfg_churn.rounds = 6;
+    cfg_churn.eval_every = 2;
+    cfg_churn.scenario = Scenario::parse("flash-crowd-churn").unwrap();
+    cfg_churn.quorum = QuorumKnob::Auto;
+    let churn_pool = EnginePool::new(Manifest::load(&dir).unwrap(), 4).unwrap();
+    churn_pool.prepare_all(&[warm.as_str()]).unwrap();
+    let mut churn_runs = Vec::new();
+    let mut weakest_final = f64::INFINITY;
+    for scheme in ["heroes", "fedavg", "flanc"] {
+        let t0 = std::time::Instant::now();
+        let rec = run_scheme(&churn_pool, &cfg_churn, scheme, StopCondition::default()).unwrap();
+        let real = t0.elapsed().as_secs_f64();
+        weakest_final = weakest_final.min(rec.final_accuracy());
+        churn_runs.push((scheme, rec, real));
+    }
+    // shared target just under the weakest scheme's final accuracy, so
+    // every scheme has a defined time/traffic-to-accuracy entry
+    let target = (weakest_final * 0.95).max(0.0);
+    let opt_num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+    let mut churn_entries: Vec<(&str, Json)> = Vec::new();
+    for (scheme, rec, real) in &churn_runs {
+        let last = rec.samples.last().unwrap();
+        println!(
+            "driver/churn K=8-of-16 {scheme:<8} acc {:.3}, sim {:7.1} s, \
+             traffic {:.4} GB, t2a@{target:.2} {:?} s, gb2a {:?} GB, real {real:.2} s",
+            last.test_acc,
+            last.sim_time,
+            last.traffic_gb,
+            rec.time_to_accuracy(target),
+            rec.traffic_to_accuracy(target),
+        );
+        churn_entries.push((
+            scheme,
+            Json::obj(vec![
+                ("final_acc", Json::Num(last.test_acc)),
+                ("sim_time", Json::Num(last.sim_time)),
+                ("traffic_gb", Json::Num(last.traffic_gb)),
+                ("time_to_target", opt_num(rec.time_to_accuracy(target))),
+                ("traffic_to_target", opt_num(rec.traffic_to_accuracy(target))),
+                ("real_secs", Json::Num(*real)),
+            ]),
+        ));
+    }
+    write_snap(
+        "BENCH_churn.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("flash_crowd_churn_time_traffic_to_accuracy".into())),
+            ("scenario", Json::Str(cfg_churn.scenario.name().into())),
+            ("clients", Json::Num(cfg_churn.n_clients as f64)),
+            ("rounds", Json::Num(cfg_churn.rounds as f64)),
+            ("target_acc", Json::Num(target)),
+            ("schemes", Json::obj(churn_entries)),
         ]),
     );
 

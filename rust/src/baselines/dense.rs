@@ -194,6 +194,7 @@ impl Strategy for DenseServer {
                 stream: env.batch_stream(client, self.round),
                 bytes: env.info.bytes_dense[&p],
                 completion: completion_time(tau, mu, nu),
+                drop_at: None,
             });
         }
         Ok(tasks)

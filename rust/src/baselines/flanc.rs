@@ -190,6 +190,7 @@ impl Strategy for FlancServer {
                 stream: env.batch_stream(client, self.round),
                 bytes: env.info.bytes_composed[&p],
                 completion: completion_time(self.tau, mu, nu),
+                drop_at: None,
             });
         }
         Ok(tasks)

@@ -64,12 +64,17 @@ pub trait Strategy {
     /// selections) must retain it until every cohort member has merged.
     fn finish_round_quorum(&mut self, env: &mut FlEnv, batch: QuorumBatch) -> Result<RoundReport>;
     /// Execute one synchronous round (A→B→dispatch→C). One definition
-    /// for every scheme — the phases are the per-scheme parts.
+    /// for every scheme — the phases are the per-scheme parts. Scenario
+    /// churn rides the shared policy layer: dropouts are stamped at
+    /// dispatch and resolved by `round::finish_dispatched_round`
+    /// (survivors re-plan vs typed error, per `--dropout-policy`).
     fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport> {
         self.plan_ahead(env)?;
-        let tasks = self.take_tasks(env)?;
-        let outcomes = self.driver().run(env.pool, tasks)?;
-        self.finish_round(env, outcomes)
+        let mut tasks = self.take_tasks(env)?;
+        let round = env.stamp_dropouts(&mut tasks);
+        let fates = self.driver().run(env.pool, tasks)?;
+        let (survivors, dropped) = crate::coordinator::round::split_fates(fates);
+        crate::coordinator::round::finish_dispatched_round(env, self, round, survivors, dropped)
     }
     /// Evaluate the current global model: (test loss, test accuracy).
     fn evaluate(&self, env: &FlEnv) -> Result<(f64, f64)>;

@@ -7,6 +7,7 @@
 //! overrides; `Scale` presets keep smoke runs in minutes while `--scale
 //! paper` reproduces the full 100-client protocol.
 
+use crate::simulation::Scenario;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
@@ -81,6 +82,30 @@ impl QuorumKnob {
     /// True when rounds run through `RoundDriver::run_quorum`.
     pub fn is_active(&self) -> bool {
         !matches!(self, QuorumKnob::Off)
+    }
+}
+
+/// The full-barrier paths' reaction to a scenario mid-round dropout
+/// (`--dropout-policy`; the quorum path always treats dropped clients as
+/// never-arriving stragglers instead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropoutPolicy {
+    /// re-plan phase C over the survivors (the dropped client's broadcast
+    /// is billed, its update is lost); an all-dropped round is still a
+    /// typed error (`ScenarioError::EmptySurvivors`)
+    Survivors,
+    /// any mid-round dropout fails the run
+    /// (`ScenarioError::MidRoundDropout`)
+    Error,
+}
+
+impl DropoutPolicy {
+    pub fn parse(s: &str) -> Result<DropoutPolicy> {
+        match s {
+            "survivors" => Ok(DropoutPolicy::Survivors),
+            "error" => Ok(DropoutPolicy::Error),
+            other => Err(anyhow!("unknown dropout policy `{other}` (survivors|error)")),
+        }
     }
 }
 
@@ -161,6 +186,15 @@ pub struct ExperimentConfig {
     /// `--quorum-floor`: hard K floor for the adaptive controller
     /// (clamped to the per-round cohort size).
     pub quorum_floor: usize,
+    /// `--scenario`: the churn schedule driving bandwidth drift,
+    /// availability windows and mid-round dropouts
+    /// (`simulation::scenario`; `Stable` = the historical default path,
+    /// byte for byte).
+    pub scenario: Scenario,
+    /// `--dropout-policy`: how the full-barrier paths react to a
+    /// mid-round dropout (the quorum path always treats dropped clients
+    /// as never-arriving stragglers).
+    pub dropout_policy: DropoutPolicy,
 }
 
 /// The pool-sizing rule, shared by `ExperimentConfig::pool_size` and
@@ -229,6 +263,8 @@ impl ExperimentConfig {
             staleness_alpha: 1.0,
             quorum_margin: 0.5,
             quorum_floor: 1,
+            scenario: Scenario::Stable,
+            dropout_policy: DropoutPolicy::Survivors,
         }
     }
 
@@ -274,6 +310,12 @@ impl ExperimentConfig {
         self.staleness_alpha = args.get_f64("staleness-alpha", self.staleness_alpha)?;
         self.quorum_margin = args.get_f64("quorum-margin", self.quorum_margin)?;
         self.quorum_floor = args.get_usize("quorum-floor", self.quorum_floor)?;
+        if let Some(s) = args.get("scenario") {
+            self.scenario = Scenario::parse(s)?;
+        }
+        if let Some(p) = args.get("dropout-policy") {
+            self.dropout_policy = DropoutPolicy::parse(p)?;
+        }
         if let Some(g) = args.get("gamma") {
             self.partition = Partition::Gamma(g.parse().map_err(|_| anyhow!("bad --gamma"))?);
         }
@@ -321,6 +363,21 @@ impl ExperimentConfig {
         c.staleness_alpha = grab_f64("staleness_alpha", c.staleness_alpha);
         c.quorum_margin = grab_f64("quorum_margin", c.quorum_margin);
         c.quorum_floor = grab_usize("quorum_floor", c.quorum_floor);
+        // JSON parity with the CLI: catalog-name strings; anything else
+        // (wrong type, unknown name) is an error, never a silent
+        // fall-back to the stable default
+        if let Some(v) = j.get("scenario") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("`scenario` expects a catalog-name string, got {v}"))?;
+            c.scenario = Scenario::parse(s)?;
+        }
+        if let Some(v) = j.get("dropout_policy") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("`dropout_policy` expects a string, got {v}"))?;
+            c.dropout_policy = DropoutPolicy::parse(s)?;
+        }
         if let Some(g) = j.get("gamma").and_then(Json::as_f64) {
             c.partition = Partition::Gamma(g);
         }
@@ -508,6 +565,56 @@ mod tests {
         let mut bad = ExperimentConfig::preset("cnn", Scale::Smoke);
         bad.quorum_floor = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn scenario_and_dropout_policy_knobs() {
+        let base = ExperimentConfig::preset("cnn", Scale::Smoke);
+        assert_eq!(base.scenario, Scenario::Stable, "scenario defaults to stable (no churn)");
+        assert_eq!(base.dropout_policy, DropoutPolicy::Survivors);
+
+        let args = Args::parse_from(
+            ["--scenario", "correlated-dropout", "--dropout-policy", "error"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&args).unwrap();
+        assert_eq!(c.scenario.name(), "correlated-dropout");
+        assert_eq!(c.dropout_policy, DropoutPolicy::Error);
+
+        // JSON parity: catalog-name strings
+        let j = crate::util::json::parse(
+            r#"{"scenario": "flash-crowd-churn", "dropout_policy": "survivors"}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json("cnn", Scale::Smoke, &j).unwrap();
+        assert_eq!(c.scenario.name(), "flash-crowd-churn");
+        assert_eq!(c.dropout_policy, DropoutPolicy::Survivors);
+
+        // every catalog name parses through both surfaces
+        for name in crate::simulation::SCENARIO_CATALOG {
+            let args =
+                Args::parse_from(["--scenario", name].iter().map(|s| s.to_string()));
+            ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&args).unwrap();
+            let doc = crate::util::json::parse(&format!(r#"{{"scenario": "{name}"}}"#)).unwrap();
+            ExperimentConfig::from_json("cnn", Scale::Smoke, &doc).unwrap();
+        }
+
+        // malformed values are errors, never a silent fall-back
+        let bad_cli = Args::parse_from(["--scenario", "mayhem"].iter().map(|s| s.to_string()));
+        assert!(ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&bad_cli).is_err());
+        let bad_pol =
+            Args::parse_from(["--dropout-policy", "retry"].iter().map(|s| s.to_string()));
+        assert!(ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&bad_pol).is_err());
+        for bad_doc in
+            [r#"{"scenario": 3}"#, r#"{"scenario": "mayhem"}"#, r#"{"dropout_policy": true}"#]
+        {
+            let j = crate::util::json::parse(bad_doc).unwrap();
+            assert!(
+                ExperimentConfig::from_json("cnn", Scale::Smoke, &j).is_err(),
+                "{bad_doc} must be rejected"
+            );
+        }
     }
 
     #[test]

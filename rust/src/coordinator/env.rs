@@ -22,7 +22,7 @@ use crate::data::synth_text::TextGen;
 use crate::data::{ImageSet, TextSet};
 use crate::model::{ComposedGlobal, DenseGlobal};
 use crate::runtime::{Engine, EnginePool, InputInfo, Manifest, ModelInfo, Value};
-use crate::simulation::{DeviceFleet, NetworkModel, TrafficMeter, VirtualClock};
+use crate::simulation::{DeviceFleet, NetworkModel, ScenarioCtl, TrafficMeter, VirtualClock};
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
@@ -90,6 +90,9 @@ pub struct FlEnv<'e> {
     pub clock: VirtualClock,
     pub traffic: TrafficMeter,
     network: NetworkModel,
+    /// churn schedule state (`--scenario`): plan/dispatch cursors,
+    /// bandwidth trace, observed dropout totals
+    scenario: ScenarioCtl,
     train: TrainData,
     test: TestData,
     rng: Rng,
@@ -154,6 +157,7 @@ impl<'e> FlEnv<'e> {
             down_lo_mbps: cfg.down_mbps.0,
             down_hi_mbps: cfg.down_mbps.1,
         };
+        let scenario = ScenarioCtl::new(cfg.scenario, cfg.seed);
         Ok(FlEnv {
             pool,
             info,
@@ -162,6 +166,7 @@ impl<'e> FlEnv<'e> {
             clock: VirtualClock::new(),
             traffic: TrafficMeter::new(),
             network,
+            scenario,
             train,
             test,
             rng: rng.fork(3),
@@ -173,16 +178,67 @@ impl<'e> FlEnv<'e> {
         self.pool.primary()
     }
 
-    /// Randomly sample K participants (paper Alg. 1 line 5).
+    /// Randomly sample K participants (paper Alg. 1 line 5), restricted
+    /// to the clients the scenario says are attending this round. Full
+    /// availability (every scenario but churned windows) takes the exact
+    /// historical code path — same RNG consumption, byte-identical
+    /// sampling — which is what keeps `--scenario stable` equal to the
+    /// pre-scenario default.
     pub fn sample_clients(&mut self) -> Vec<usize> {
-        self.rng.sample_distinct(self.cfg.n_clients, self.cfg.k_per_round)
+        self.scenario.begin_plan_round();
+        let n = self.cfg.n_clients;
+        let available: Vec<usize> =
+            (0..n).filter(|&c| self.scenario.available_now(c)).collect();
+        if available.len() == n {
+            return self.rng.sample_distinct(n, self.cfg.k_per_round);
+        }
+        // a thinned round samples what it can; an empty availability set
+        // yields an empty cohort, which the planner rejects as a proper
+        // error downstream
+        let k = self.cfg.k_per_round.min(available.len());
+        self.rng.sample_distinct(available.len(), k).into_iter().map(|i| available[i]).collect()
     }
 
-    /// Collect a client's round status (Alg. 1 line 4).
+    /// Collect a client's round status (Alg. 1 line 4). Under a
+    /// bandwidth-drifting scenario the WAN band is scaled by the trace
+    /// multiplier of the round being planned (RNG consumption identical
+    /// to the unscaled path).
     pub fn status(&mut self, client: usize) -> ClientStatus {
         let q = self.fleet.devices[client].sample_flops();
-        let link = self.network.sample(&mut self.rng);
+        let link = match self.scenario.bandwidth_scale() {
+            None => self.network.sample(&mut self.rng),
+            Some(s) => self.network.sample_scaled(&mut self.rng, s),
+        };
         ClientStatus { client, q_flops: q, link }
+    }
+
+    /// Stamp this dispatch's scenario dropouts onto the round's tasks
+    /// (called exactly once per dispatched round by every driver path):
+    /// a dropped task's `drop_at` is set to the virtual instant the
+    /// client vanishes. Returns the dispatch-round index — the round
+    /// number the full-barrier dropout policy reports. Dropout draws are
+    /// pure functions of `(seed, round, client)`, so any worker/pool
+    /// count sees the same churn.
+    pub fn stamp_dropouts(&mut self, tasks: &mut [crate::coordinator::round::LocalTask]) -> usize {
+        let round = self.scenario.begin_dispatch_round();
+        let mut dropped = 0usize;
+        for t in tasks.iter_mut() {
+            t.drop_at = self.scenario.dropout(round, t.client).map(|frac| frac * t.completion);
+            dropped += t.drop_at.is_some() as usize;
+        }
+        self.scenario.note_dispatched(tasks.len(), dropped);
+        round
+    }
+
+    /// Observed mid-round dropout rate over everything dispatched so far
+    /// (the adaptive quorum controller's churn signal).
+    pub fn observed_dropout_rate(&self) -> f64 {
+        self.scenario.observed_dropout_rate()
+    }
+
+    /// The run's scenario state (read-only; tests and logs).
+    pub fn scenario(&self) -> &ScenarioCtl {
+        &self.scenario
     }
 
     /// Owned batch stream for one client's local round. Deterministic in

@@ -53,11 +53,27 @@ pub struct QuorumSignals {
     /// dimensionless planned-count spread (`BlockLedger::spread_index`):
     /// the straggler tail's footprint in the training books
     pub spread_index: f64,
+    /// observed mid-round dropout rate (scenario churn). Injected by the
+    /// round driver from the virtual schedule's dispatch facts
+    /// (`FlEnv::observed_dropout_rate`) — schemes always report 0 here.
+    /// A dropped straggler's training is lost outright, so churn
+    /// consumes the staleness budget like realized losses: **K grows
+    /// toward the full barrier as the dropout rate rises** (monotone,
+    /// property-tested), keeping more of the surviving cohort's signal
+    /// in the synchronous merge instead of relegating it to straggler
+    /// slots that may vanish.
+    pub dropout_rate: f64,
 }
 
 impl Default for QuorumSignals {
     fn default() -> QuorumSignals {
-        QuorumSignals { staleness_index: 0.0, beta_sq: 0.0, l: 1.0, spread_index: 0.0 }
+        QuorumSignals {
+            staleness_index: 0.0,
+            beta_sq: 0.0,
+            l: 1.0,
+            spread_index: 0.0,
+            dropout_rate: 0.0,
+        }
     }
 }
 
@@ -149,11 +165,14 @@ impl QuorumController {
         self.alpha = (self.alpha + self.cfg.alpha_gain * (toward - self.alpha))
             .clamp(self.cfg.alpha_min, self.cfg.alpha_max.max(self.cfg.alpha_min));
 
-        // observed losses and the count-spread pressure consume the
-        // budget before any *new* staleness is admitted — this is what
-        // grows K back toward N when the staleness index rises
+        // observed losses, the count-spread pressure and the observed
+        // churn consume the budget before any *new* staleness is
+        // admitted — this is what grows K back toward N when the
+        // staleness index (or the dropout rate: lost updates are
+        // realized losses too) rises
         let budget_left = (budget / (1.0 + sig.spread_index.max(0.0))
-            - sig.staleness_index.max(0.0))
+            - sig.staleness_index.max(0.0)
+            - sig.dropout_rate.max(0.0))
         .max(0.0);
 
         if completions.is_empty() {
@@ -198,6 +217,18 @@ impl QuorumPolicy {
     /// The static policy (`--quorum K --staleness-alpha α`).
     pub fn fixed(quorum: usize, alpha: f64) -> QuorumPolicy {
         QuorumPolicy::Static(QuorumCfg { quorum, alpha })
+    }
+
+    /// The quorum size a static policy *demands* (`None` for the
+    /// adaptive controller and the full-barrier 0, which both scale to
+    /// whatever survives). The round driver uses this to surface churn
+    /// that makes an explicit `--quorum K` unsatisfiable as a typed
+    /// `ScenarioError::QuorumInfeasible` instead of silently degrading.
+    pub fn required_quorum(&self) -> Option<usize> {
+        match self {
+            QuorumPolicy::Static(cfg) if cfg.quorum > 0 => Some(cfg.quorum),
+            _ => None,
+        }
     }
 
     /// The policy an experiment config asks for, or `None` when quorum
@@ -309,6 +340,31 @@ mod tests {
             prev = d.k;
         }
         assert_eq!(prev, 16, "a saturated staleness index must force the full barrier");
+    }
+
+    #[test]
+    fn observed_churn_grows_k() {
+        // the scenario engine's dropout-rate signal consumes the budget
+        // like realized staleness losses: heavier churn ⇒ more synchrony
+        let mut cfg = QuorumCtlCfg::new(0.8, 1, 0.5, 1.0);
+        cfg.alpha_gain = 0.0;
+        let mut prev = 0;
+        for rate in [0.0, 0.05, 0.15, 0.5] {
+            let mut c = QuorumController::new(cfg);
+            let sig = QuorumSignals { dropout_rate: rate, ..QuorumSignals::default() };
+            let d = c.decide(&tailed(), &sig);
+            assert!(d.k >= prev, "K must not shrink as churn rises: {} < {prev}", d.k);
+            prev = d.k;
+        }
+        assert_eq!(prev, 16, "a saturated dropout rate must force the full barrier");
+    }
+
+    #[test]
+    fn required_quorum_reports_only_explicit_static_k() {
+        assert_eq!(QuorumPolicy::fixed(12, 1.0).required_quorum(), Some(12));
+        assert_eq!(QuorumPolicy::fixed(0, 1.0).required_quorum(), None, "0 = full barrier");
+        let auto = QuorumPolicy::Auto(QuorumController::new(QuorumCtlCfg::new(0.8, 1, 0.5, 1.0)));
+        assert_eq!(auto.required_quorum(), None, "auto scales to the survivors");
     }
 
     #[test]

@@ -132,6 +132,50 @@
 //! straggler that *failed* still fails the run, exactly like the
 //! synchronous paths.
 //!
+//! # Scenario churn & mid-round dropouts
+//!
+//! Under a churn scenario (`--scenario`, `simulation::scenario`) a
+//! dispatched client may **vanish mid-round**: the coordinator stamps the
+//! scenario's dropout draws onto the round's tasks at dispatch
+//! ([`FlEnv::stamp_dropouts`] — decided on the virtual clock, never by
+//! worker racing), and a stamped task travels the completion channel as
+//! [`TaskFate::Dropped`] instead of [`TaskFate::Done`]: its broadcast is
+//! billed (the payload went out), its PJRT work is skipped (nobody can
+//! receive the result), its upload never arrives.
+//!
+//! * **Quorum path** — a dropped client is a *never-arriving straggler*:
+//!   excluded from quorum membership ([`quorum_members_surviving`]),
+//!   never admitted to the pending-straggler buffer, never merged; its
+//!   broadcast bytes bill with the round's stragglers and its client id
+//!   rides [`QuorumBatch::dropped`] so schemes can retire plan state. A
+//!   round whose every member dropped is a typed
+//!   [`ScenarioError::EmptySurvivors`]; churn that leaves fewer survivors
+//!   than a static `--quorum K` demands is a typed
+//!   [`ScenarioError::QuorumInfeasible`] — never a silent degrade. The
+//!   observed dropout rate feeds the adaptive controller as a
+//!   [`QuorumSignals::dropout_rate`] signal (lost updates consume the
+//!   staleness budget like realized losses, growing K).
+//! * **Full-barrier paths** (serial and overlapped) — governed by
+//!   `--dropout-policy` ([`finish_dispatched_round`]): `survivors`
+//!   re-plans phase C over the surviving outcomes (through the quorum
+//!   phase-C hook, which already aggregates cohort subsets; the barrier
+//!   waits for survivors only — a vanished client is detected, not
+//!   awaited), `error` fails the run with a typed
+//!   [`ScenarioError::MidRoundDropout`]. An all-dropped round errs under
+//!   either policy.
+//!
+//! Dropout decisions, like everything else here, are pure functions of
+//! `(scenario, seed, round, client)` — churn runs stay byte-identical
+//! for any `--workers`/`--pool`, and `--scenario stable` stamps nothing:
+//! every fate is `Done` and the pipeline reproduces the pre-scenario
+//! paths byte for byte.
+//!
+//! [`QuorumSignals::dropout_rate`]: crate::coordinator::quorum_ctl::QuorumSignals
+//! [`ScenarioError::EmptySurvivors`]: crate::simulation::ScenarioError
+//! [`ScenarioError::QuorumInfeasible`]: crate::simulation::ScenarioError
+//! [`ScenarioError::MidRoundDropout`]: crate::simulation::ScenarioError
+//! [`FlEnv::stamp_dropouts`]: crate::coordinator::env::FlEnv::stamp_dropouts
+//!
 //! # Determinism contract
 //!
 //! A dispatched task touches no shared mutable state: its batch stream is
@@ -147,12 +191,14 @@
 //! quorum contract above).
 
 use crate::baselines::Strategy;
+use crate::config::DropoutPolicy;
 use crate::coordinator::assignment::average_wait;
 use crate::coordinator::client::{run_local, LocalResult};
 use crate::coordinator::env::{BatchStream, FlEnv};
 use crate::coordinator::quorum_ctl::QuorumPolicy;
 use crate::coordinator::RoundReport;
 use crate::runtime::{Engine, EnginePool};
+use crate::simulation::ScenarioError;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
@@ -187,6 +233,14 @@ pub struct LocalTask {
     pub bytes: usize,
     /// projected completion time τ·μ + ν (Eq. 17-18)
     pub completion: f64,
+    /// scenario mid-round dropout: the virtual instant (relative to the
+    /// round start) at which this client vanishes. Stamped by
+    /// [`FlEnv::stamp_dropouts`] at dispatch — schemes always construct
+    /// tasks with `None`. A stamped task is executed as a no-op and
+    /// completes as [`TaskFate::Dropped`].
+    ///
+    /// [`FlEnv::stamp_dropouts`]: crate::coordinator::env::FlEnv::stamp_dropouts
+    pub drop_at: Option<f64>,
 }
 
 /// A completed task: the plan metadata plus the local-training result.
@@ -199,10 +253,34 @@ pub struct TaskOutcome {
     pub result: LocalResult,
 }
 
-fn exec_task(engine: &Engine, task: LocalTask) -> Result<TaskOutcome> {
+/// A dispatched client that vanished mid-round (module docs, "Scenario
+/// churn"): broadcast billed, PJRT work skipped, upload never arrives.
+pub struct DroppedTask {
+    pub client: usize,
+    /// broadcast bytes (billed down at aggregation, never up)
+    pub bytes: usize,
+    /// virtual instant of the vanish, relative to the round start
+    pub drop_time: f64,
+}
+
+/// What became of a dispatched task — the completion channel's payload.
+pub enum TaskFate {
+    /// the client trained and (virtually) uploaded
+    Done(TaskOutcome),
+    /// the client vanished mid-round; its update never merges
+    Dropped(DroppedTask),
+}
+
+fn exec_task(engine: &Engine, task: LocalTask) -> Result<TaskFate> {
     let LocalTask {
         client, p, tau, lr, train_exec, probe_exec, payload, mut stream, bytes, completion,
+        drop_at,
     } = task;
+    if let Some(drop_time) = drop_at {
+        // the client vanished: its broadcast is already out, its result
+        // could never be uploaded — skip the PJRT work entirely
+        return Ok(TaskFate::Dropped(DroppedTask { client, bytes, drop_time }));
+    }
     let result = run_local(
         engine,
         &train_exec,
@@ -212,7 +290,21 @@ fn exec_task(engine: &Engine, task: LocalTask) -> Result<TaskOutcome> {
         lr,
         || stream.next_batch(),
     )?;
-    Ok(TaskOutcome { client, p, tau, bytes, completion, result })
+    Ok(TaskFate::Done(TaskOutcome { client, p, tau, bytes, completion, result }))
+}
+
+/// Partition ordered fates into (survivors, dropped), both in assignment
+/// order.
+pub fn split_fates(fates: Vec<TaskFate>) -> (Vec<TaskOutcome>, Vec<DroppedTask>) {
+    let mut done = Vec::with_capacity(fates.len());
+    let mut dropped = Vec::new();
+    for fate in fates {
+        match fate {
+            TaskFate::Done(o) => done.push(o),
+            TaskFate::Dropped(d) => dropped.push(d),
+        }
+    }
+    (done, dropped)
 }
 
 /// A task tagged with its round sequence number and assignment index.
@@ -226,7 +318,7 @@ struct Dispatch {
 struct Completion {
     seq: usize,
     index: usize,
-    outcome: Result<TaskOutcome>,
+    outcome: Result<TaskFate>,
 }
 
 /// The shared work queue: coordinator pushes, workers pop (blocking until
@@ -324,8 +416,8 @@ impl Drop for CloseOnDrop<'_> {
 
 /// Ordered collect: slot completions by assignment index, then surface
 /// the earliest failed task's error (independent of scheduling) or the
-/// outcomes in assignment order.
-fn into_ordered(slots: Vec<Option<Result<TaskOutcome>>>) -> Result<Vec<TaskOutcome>> {
+/// fates in assignment order.
+fn into_ordered(slots: Vec<Option<Result<TaskFate>>>) -> Result<Vec<TaskFate>> {
     let mut out = Vec::with_capacity(slots.len());
     for slot in slots {
         out.push(slot.expect("completion missing for a dispatched task")?);
@@ -348,8 +440,8 @@ fn collect_completions(
     rx: &Receiver<Completion>,
     expected: usize,
     seq: usize,
-) -> Result<Vec<TaskOutcome>> {
-    let mut slots: Vec<Option<Result<TaskOutcome>>> = (0..expected).map(|_| None).collect();
+) -> Result<Vec<TaskFate>> {
+    let mut slots: Vec<Option<Result<TaskFate>>> = (0..expected).map(|_| None).collect();
     for _ in 0..expected {
         let c = rx.recv().map_err(|_| anyhow!("worker pool died mid-round"))?;
         if c.seq != seq {
@@ -373,6 +465,56 @@ fn collect_completions(
     into_ordered(slots)
 }
 
+/// Shared full-barrier phase C under scenario churn (module docs,
+/// "Scenario churn"): no dropouts take the plain synchronous hook
+/// (byte-identical to the pre-scenario path); with dropouts, the
+/// configured `--dropout-policy` either fails the run with a typed error
+/// or re-plans the aggregation over the survivors through the quorum
+/// phase-C hook (which already handles cohort subsets), billing the
+/// dropped clients' broadcasts and handing their ids to the scheme for
+/// plan retirement. Generic over `?Sized` so both `Strategy::run_round`
+/// (on `Self`) and the overlapped coordinator (on `dyn Strategy`) share
+/// one definition.
+pub fn finish_dispatched_round<S: Strategy + ?Sized>(
+    env: &mut FlEnv,
+    strategy: &mut S,
+    round: usize,
+    survivors: Vec<TaskOutcome>,
+    dropped: Vec<DroppedTask>,
+) -> Result<RoundReport> {
+    if dropped.is_empty() {
+        return strategy.finish_round(env, survivors);
+    }
+    for d in &dropped {
+        log::debug!(
+            "round {round}: client {} dropped {:.1}s into the round (virtual)",
+            d.client,
+            d.drop_time
+        );
+    }
+    match env.cfg.dropout_policy {
+        DropoutPolicy::Error => {
+            Err(ScenarioError::MidRoundDropout { round, client: dropped[0].client }.into())
+        }
+        DropoutPolicy::Survivors => {
+            if survivors.is_empty() {
+                return Err(ScenarioError::EmptySurvivors { round }.into());
+            }
+            let straggler_down_bytes = dropped.iter().map(|d| d.bytes).sum();
+            strategy.finish_round_quorum(
+                env,
+                QuorumBatch {
+                    round,
+                    quorum: survivors,
+                    late: Vec::new(),
+                    straggler_down_bytes,
+                    dropped: dropped.iter().map(|d| d.client).collect(),
+                },
+            )
+        }
+    }
+}
+
 /// Coordinator body of [`RoundDriver::run_overlapped`]: plan, dispatch
 /// and collect `rounds` rounds against an already-running worker pool.
 fn drive_rounds(
@@ -385,11 +527,14 @@ fn drive_rounds(
 ) -> Result<()> {
     // phases A + B for round 0, then dispatch immediately
     strategy.plan_ahead(env)?;
-    let tasks = strategy.take_tasks(env)?;
+    let mut tasks = strategy.take_tasks(env)?;
     let mut expected = tasks.len();
     if expected == 0 {
         return Err(anyhow!("cannot dispatch an empty cohort"));
     }
+    // the dispatch-round id (scenario cursor) the dropout policy reports;
+    // distinct from the chunk-local sequence number `h`
+    let mut round_id = env.stamp_dropouts(&mut tasks);
     validate_completions(&tasks)?;
     queue.push_round(0, tasks);
 
@@ -399,17 +544,19 @@ fn drive_rounds(
             // stragglers are still on the workers
             strategy.plan_ahead(env)?;
         }
-        let outcomes = collect_completions(rx, expected, h)?;
-        reports.push(strategy.finish_round(env, outcomes)?);
+        let fates = collect_completions(rx, expected, h)?;
+        let (survivors, dropped) = split_fates(fates);
+        reports.push(finish_dispatched_round(env, strategy, round_id, survivors, dropped)?);
         if h + 1 < rounds {
             // phase B for h+1 (payloads need the freshly aggregated
             // global); workers pick tasks up as they free — no join
             // barrier in between
-            let tasks = strategy.take_tasks(env)?;
+            let mut tasks = strategy.take_tasks(env)?;
             expected = tasks.len();
             if expected == 0 {
                 return Err(anyhow!("cannot dispatch an empty cohort"));
             }
+            round_id = env.stamp_dropouts(&mut tasks);
             validate_completions(&tasks)?;
             queue.push_round(h + 1, tasks);
         }
@@ -458,9 +605,15 @@ pub struct QuorumBatch {
     pub round: usize,
     pub quorum: Vec<TaskOutcome>,
     pub late: Vec<LateArrival>,
-    /// broadcast bytes of this round's non-quorum cohort members (their
-    /// payloads went out at dispatch; their upload is billed at merge)
+    /// broadcast bytes of this round's non-quorum cohort members —
+    /// surviving stragglers *and* dropped clients (their payloads went
+    /// out at dispatch; a survivor's upload is billed at merge, a
+    /// dropped client's never)
     pub straggler_down_bytes: usize,
+    /// clients of this round that vanished mid-round (assignment order):
+    /// their updates never merge — schemes retaining per-round plan
+    /// state must retire them here or leak it
+    pub dropped: Vec<usize>,
 }
 
 /// Per-round observer for [`RoundDriver::run_quorum`]: called after every
@@ -493,6 +646,9 @@ struct RoundMeta {
     bytes: Vec<usize>,
     /// per assignment index: the simulated client
     clients: Vec<usize>,
+    /// per assignment index: stamped as a scenario mid-round dropout
+    /// (never a quorum member, never a pending straggler)
+    dropped: Vec<bool>,
 }
 
 impl RoundMeta {
@@ -502,6 +658,7 @@ impl RoundMeta {
             completions: tasks.iter().map(|t| t.completion).collect(),
             bytes: tasks.iter().map(|t| t.bytes).collect(),
             clients: tasks.iter().map(|t| t.client).collect(),
+            dropped: tasks.iter().map(|t| t.drop_at.is_some()).collect(),
         }
     }
 }
@@ -565,6 +722,24 @@ fn quorum_members(completions: &[f64], k: usize) -> Vec<usize> {
     idx
 }
 
+/// [`quorum_members`] over the round's *survivors*: a scenario-dropped
+/// client can never be a quorum member (its upload never arrives), so
+/// the ranking runs on the non-dropped indices only. With nothing
+/// dropped this is exactly `quorum_members` — and dropping any client
+/// *outside* the chosen quorum leaves the member set (hence the merged
+/// bytes) unchanged, the invariance `tests/prop_coordinator.rs` pins.
+/// `drive_quorum` inlines the same filter-rank-map composition over its
+/// single prebuilt survivor list (so the K decision and the ranking can
+/// never desynchronize); this standalone form is the property-test
+/// surface.
+pub fn quorum_members_surviving(completions: &[f64], dropped: &[bool], k: usize) -> Vec<usize> {
+    debug_assert_eq!(completions.len(), dropped.len());
+    let survivors: Vec<usize> =
+        (0..completions.len()).filter(|&i| !dropped.get(i).copied().unwrap_or(false)).collect();
+    let surv_completions: Vec<f64> = survivors.iter().map(|&i| completions[i]).collect();
+    quorum_members(&surv_completions, k).into_iter().map(|j| survivors[j]).collect()
+}
+
 /// Completion routing for the quorum path: completions arrive in
 /// worker-race order, but the coordinator consumes them in the virtual
 /// schedule's order — anything not yet needed parks here, keyed by
@@ -573,7 +748,7 @@ fn quorum_members(completions: &[f64], k: usize) -> Vec<usize> {
 /// validation).
 #[derive(Default)]
 struct QuorumState {
-    arrived: HashMap<(usize, usize), Result<TaskOutcome>>,
+    arrived: HashMap<(usize, usize), Result<TaskFate>>,
     /// received-or-consumed flag per [seq][index], for duplicate detection
     received: Vec<Vec<bool>>,
     /// dispatched completions not yet received
@@ -611,8 +786,10 @@ impl QuorumState {
     /// surface the earliest-(round, index) failure among the updates that
     /// will never merge. Their *results* are discarded by design, but a
     /// panic or engine error in a straggler is a real fault and must fail
-    /// the run exactly as it would on the synchronous paths. Costs no
-    /// extra wall-clock: the worker scope joins on these tasks anyway.
+    /// the run exactly as it would on the synchronous paths. Dropped
+    /// fates drain silently — a scenario dropout is scheduled churn, not
+    /// a fault. Costs no extra wall-clock: the worker scope joins on
+    /// these tasks anyway.
     fn drain(&mut self, rx: &Receiver<Completion>) -> Result<()> {
         while self.outstanding > 0 {
             let c = rx.recv().map_err(|_| anyhow!("worker pool died during drain"))?;
@@ -630,20 +807,34 @@ impl QuorumState {
         Ok(())
     }
 
-    /// Block until the outcome of `(seq, index)` is available, parking
+    /// Block until the fate of `(seq, index)` is available, parking
     /// everything else that drains off the channel in the meantime.
-    fn demand(
-        &mut self,
-        rx: &Receiver<Completion>,
-        seq: usize,
-        index: usize,
-    ) -> Result<TaskOutcome> {
+    fn demand(&mut self, rx: &Receiver<Completion>, seq: usize, index: usize) -> Result<TaskFate> {
         loop {
             if let Some(outcome) = self.arrived.remove(&(seq, index)) {
                 return outcome;
             }
             let c = rx.recv().map_err(|_| anyhow!("worker pool died mid-round"))?;
             self.file(c)?;
+        }
+    }
+
+    /// [`QuorumState::demand`] for a merge input — quorum members and
+    /// due late arrivals are chosen among survivors, so a `Dropped` fate
+    /// here means the scheduler violated its own churn invariant.
+    fn demand_done(
+        &mut self,
+        rx: &Receiver<Completion>,
+        seq: usize,
+        index: usize,
+    ) -> Result<TaskOutcome> {
+        match self.demand(rx, seq, index)? {
+            TaskFate::Done(o) => Ok(o),
+            TaskFate::Dropped(d) => Err(anyhow!(
+                "round {seq} task {index} (client {}) was consumed as a merge input but \
+                 dropped mid-round — scheduler bug",
+                d.client
+            )),
         }
     }
 }
@@ -666,10 +857,11 @@ fn drive_quorum(
 
     // phases A + B for round 0, then dispatch immediately
     strategy.plan_ahead(env)?;
-    let tasks = strategy.take_tasks(env)?;
+    let mut tasks = strategy.take_tasks(env)?;
     if tasks.is_empty() {
         return Err(anyhow!("cannot dispatch an empty cohort"));
     }
+    env.stamp_dropouts(&mut tasks);
     validate_completions(&tasks)?;
     let mut meta = RoundMeta::capture(&tasks, env.clock.now());
     state.register_round(tasks.len());
@@ -681,14 +873,51 @@ fn drive_quorum(
             strategy.plan_ahead(env)?;
         }
 
+        // scenario churn: a dropped client can never satisfy the quorum —
+        // membership ranks survivors only, and churn that empties the
+        // round or starves a static K is a typed error (module docs,
+        // "Scenario churn"). The survivor filter is built exactly once;
+        // the K decision and the membership ranking both read it, so the
+        // two can never desynchronize.
+        let n = meta.completions.len();
+        let survivors_idx: Vec<usize> = (0..n).filter(|&i| !meta.dropped[i]).collect();
+        let n_survivors = survivors_idx.len();
+        if n_survivors == 0 {
+            return Err(ScenarioError::EmptySurvivors { round: h }.into());
+        }
+        if let Some(required) = policy.required_quorum() {
+            // the documented oversized-K clamp is against the *configured*
+            // cohort size — a round that churn (availability windows or
+            // mid-round dropouts) thinned below the demanded K is a typed
+            // error, never a silent degrade
+            let required = required.min(env.cfg.k_per_round.max(1));
+            if required > n_survivors {
+                return Err(ScenarioError::QuorumInfeasible {
+                    round: h,
+                    required,
+                    survivors: n_survivors,
+                }
+                .into());
+            }
+        }
+        let surv_completions: Vec<f64> =
+            survivors_idx.iter().map(|&i| meta.completions[i]).collect();
+
         // this round's (K, α): plan facts + observed virtual-clock
         // signals in, deterministic decision out (module docs,
         // "Adaptive quorum control"); signals are fetched lazily so the
-        // static-K path never walks the ledger
-        let n = meta.completions.len();
-        let decision = policy.decide_with(&meta.completions, || strategy.quorum_signals());
-        let k = decision.k.clamp(1, n);
-        let members = quorum_members(&meta.completions, k);
+        // static-K path never walks the ledger. The driver injects the
+        // observed dropout rate — a dispatch-time fact of the virtual
+        // schedule, not a scheme signal.
+        let churn = env.observed_dropout_rate();
+        let decision = policy.decide_with(&surv_completions, || {
+            let mut sig = strategy.quorum_signals();
+            sig.dropout_rate = churn;
+            sig
+        });
+        let k = decision.k.clamp(1, n_survivors);
+        let members: Vec<usize> =
+            quorum_members(&surv_completions, k).into_iter().map(|j| survivors_idx[j]).collect();
         let t_q = members.iter().map(|&i| meta.completions[i]).fold(0.0f64, f64::max);
         let t_agg = meta.t_start + t_q;
 
@@ -704,11 +933,11 @@ fn drive_quorum(
         // anything else racing off the channel parks in the buffer
         let mut quorum_outcomes = Vec::with_capacity(k);
         for &i in &members {
-            quorum_outcomes.push(state.demand(rx, h, i)?);
+            quorum_outcomes.push(state.demand_done(rx, h, i)?);
         }
         let mut late = Vec::with_capacity(due.len());
         for p in &due {
-            let outcome = state.demand(rx, p.seq, p.index)?;
+            let outcome = state.demand_done(rx, p.seq, p.index)?;
             let staleness = h - p.seq;
             late.push(LateArrival {
                 origin_round: p.seq,
@@ -719,13 +948,23 @@ fn drive_quorum(
         }
 
         // register this round's stragglers (their virtual finish times
-        // are plan facts, known before their results exist)
+        // are plan facts, known before their results exist); a dropped
+        // client's broadcast bills like a straggler's but it never enters
+        // the pending buffer — its upload never arrives
         let mut straggler_down = 0usize;
+        let mut dropped_clients = Vec::new();
         {
             let mut m = members.iter().peekable();
             for i in 0..n {
                 if m.peek() == Some(&&i) {
                     m.next();
+                } else if meta.dropped[i] {
+                    straggler_down += meta.bytes[i];
+                    dropped_clients.push(meta.clients[i]);
+                    log::debug!(
+                        "round {h}: client {} dropped mid-round — released, never merged",
+                        meta.clients[i]
+                    );
                 } else {
                     straggler_down += meta.bytes[i];
                     pending.push(PendingStraggler {
@@ -740,7 +979,8 @@ fn drive_quorum(
 
         // full quorum with nothing due late is exactly the synchronous
         // phase C — route through it so `--quorum N` stays byte-identical
-        // to the serial loop
+        // to the serial loop (a churned round has k < n, so it always
+        // takes the quorum hook, which books the dropped broadcasts)
         let report = if k == n && late.is_empty() {
             strategy.finish_round(env, quorum_outcomes)?
         } else {
@@ -751,6 +991,7 @@ fn drive_quorum(
                     quorum: quorum_outcomes,
                     late,
                     straggler_down_bytes: straggler_down,
+                    dropped: dropped_clients,
                 },
             )?
         };
@@ -770,6 +1011,7 @@ fn drive_quorum(
             }
             let t_start = env.clock.now();
             delay_busy_clients(&mut tasks, &pending, t_start);
+            env.stamp_dropouts(&mut tasks);
             validate_completions(&tasks)?;
             meta = RoundMeta::capture(&tasks, t_start);
             state.register_round(tasks.len());
@@ -798,13 +1040,16 @@ impl RoundDriver {
         self.workers
     }
 
-    /// Execute one round's tasks, returning outcomes in assignment order.
+    /// Execute one round's tasks, returning fates in assignment order
+    /// (scenario-stamped tasks complete as [`TaskFate::Dropped`] without
+    /// touching an engine; see `split_fates` / `finish_dispatched_round`
+    /// for the policy layer).
     ///
     /// Errs on an empty cohort (an empty round has no reference client
     /// and would poison every downstream average). Never spawns more
     /// threads than tasks; with one worker (or one task) everything runs
     /// inline on the caller's thread against the pool's primary engine.
-    pub fn run(&self, pool: &EnginePool, tasks: Vec<LocalTask>) -> Result<Vec<TaskOutcome>> {
+    pub fn run(&self, pool: &EnginePool, tasks: Vec<LocalTask>) -> Result<Vec<TaskFate>> {
         let n = tasks.len();
         if n == 0 {
             return Err(anyhow!("cannot dispatch an empty cohort"));
@@ -1032,6 +1277,8 @@ mod tests {
         fn assert_send<T: Send>() {}
         assert_send::<LocalTask>();
         assert_send::<TaskOutcome>();
+        assert_send::<TaskFate>();
+        assert_send::<DroppedTask>();
         assert_send::<Dispatch>();
         assert_send::<Completion>();
     }
@@ -1056,6 +1303,7 @@ mod tests {
             stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
             bytes: 0,
             completion: 0.0,
+            drop_at: None,
         };
         let queue = TaskQueue::new();
         queue.push_round(7, vec![mk(10), mk(11), mk(12)]);
@@ -1070,7 +1318,7 @@ mod tests {
 
     #[test]
     fn ordered_collect_returns_earliest_error() {
-        let slots: Vec<Option<Result<TaskOutcome>>> = vec![
+        let slots: Vec<Option<Result<TaskFate>>> = vec![
             Some(Err(anyhow!("first"))),
             Some(Err(anyhow!("second"))),
         ];
@@ -1095,23 +1343,66 @@ mod tests {
         }
     }
 
+    /// A `Done` fate for channel/tests plumbing.
+    fn done(client: usize) -> Result<TaskFate> {
+        Ok(TaskFate::Done(dummy_outcome(client)))
+    }
+
+    #[test]
+    fn split_fates_partitions_in_assignment_order() {
+        let fates = vec![
+            TaskFate::Done(dummy_outcome(10)),
+            TaskFate::Dropped(DroppedTask { client: 11, bytes: 7, drop_time: 0.5 }),
+            TaskFate::Done(dummy_outcome(12)),
+            TaskFate::Dropped(DroppedTask { client: 13, bytes: 9, drop_time: 1.5 }),
+        ];
+        let (survivors, dropped) = split_fates(fates);
+        assert_eq!(survivors.iter().map(|o| o.client).collect::<Vec<_>>(), vec![10, 12]);
+        assert_eq!(dropped.iter().map(|d| d.client).collect::<Vec<_>>(), vec![11, 13]);
+        assert_eq!(dropped.iter().map(|d| d.bytes).sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn quorum_members_exclude_dropped_clients() {
+        // the fastest projection is dropped: membership skips it and
+        // takes the next-fastest survivors instead
+        let completions = [5.0, 1.0, 3.0, 2.0, 9.0];
+        let no_drop = [false; 5];
+        assert_eq!(
+            quorum_members_surviving(&completions, &no_drop, 2),
+            quorum_members(&completions, 2),
+            "no churn ⇒ exactly the plain ranking"
+        );
+        let mut dropped = [false; 5];
+        dropped[1] = true;
+        assert_eq!(quorum_members_surviving(&completions, &dropped, 2), vec![2, 3]);
+        // dropping outside the chosen quorum leaves the member set alone
+        let mut outside = [false; 5];
+        outside[4] = true;
+        assert_eq!(
+            quorum_members_surviving(&completions, &outside, 2),
+            quorum_members_surviving(&completions, &no_drop, 2),
+            "a non-quorum dropout must not change the member set"
+        );
+    }
+
     #[test]
     fn stray_completion_is_an_error_not_a_panic() {
         // regression: a completion from a round not in flight used to hit
         // `assert_eq!` and abort the coordinator
         let (tx, rx) = channel::<Completion>();
-        tx.send(Completion { seq: 3, index: 0, outcome: Ok(dummy_outcome(0)) }).unwrap();
+        tx.send(Completion { seq: 3, index: 0, outcome: done(0) }).unwrap();
         let err = collect_completions(&rx, 1, 0).unwrap_err();
         assert!(err.to_string().contains("stray completion"), "unexpected error: {err}");
 
         // duplicate slot
-        tx.send(Completion { seq: 0, index: 0, outcome: Ok(dummy_outcome(0)) }).unwrap();
-        tx.send(Completion { seq: 0, index: 0, outcome: Ok(dummy_outcome(0)) }).unwrap();
+        tx.send(Completion { seq: 0, index: 0, outcome: done(0) }).unwrap();
+        tx.send(Completion { seq: 0, index: 0, outcome: done(0) }).unwrap();
         let err = collect_completions(&rx, 2, 0).unwrap_err();
         assert!(err.to_string().contains("duplicate completion"), "unexpected error: {err}");
 
         // out-of-range index
-        tx.send(Completion { seq: 0, index: 9, outcome: Ok(dummy_outcome(0)) }).unwrap();
+        tx.send(Completion { seq: 0, index: 9, outcome: done(0) }).unwrap();
         let err = collect_completions(&rx, 1, 0).unwrap_err();
         assert!(err.to_string().contains("out of range"), "unexpected error: {err}");
     }
@@ -1135,6 +1426,7 @@ mod tests {
             stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
             bytes: 0,
             completion,
+            drop_at: None,
         };
         // round starts at t=10; client 3 is still busy until t=25 with a
         // round-0 straggler, client 4 is idle
@@ -1182,6 +1474,7 @@ mod tests {
             stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
             bytes: 0,
             completion,
+            drop_at: None,
         };
         let mut rng = Rng::new(17);
         for case in 0..50 {
@@ -1240,6 +1533,7 @@ mod tests {
             stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
             bytes: 0,
             completion,
+            drop_at: None,
         };
         validate_completions(&[mk(1.0), mk(0.0)]).unwrap();
         for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
@@ -1284,18 +1578,29 @@ mod tests {
 
         // round 1's completion races ahead of round 0's — demand(0, ..)
         // must park it, then demand(1, ..) must find it buffered
-        tx.send(Completion { seq: 1, index: 0, outcome: Ok(dummy_outcome(10)) }).unwrap();
-        tx.send(Completion { seq: 0, index: 1, outcome: Ok(dummy_outcome(11)) }).unwrap();
-        tx.send(Completion { seq: 0, index: 0, outcome: Ok(dummy_outcome(12)) }).unwrap();
-        assert_eq!(state.demand(&rx, 0, 0).unwrap().client, 12);
-        assert_eq!(state.demand(&rx, 0, 1).unwrap().client, 11);
-        assert_eq!(state.demand(&rx, 1, 0).unwrap().client, 10);
+        tx.send(Completion { seq: 1, index: 0, outcome: done(10) }).unwrap();
+        tx.send(Completion { seq: 0, index: 1, outcome: done(11) }).unwrap();
+        tx.send(Completion { seq: 0, index: 0, outcome: done(12) }).unwrap();
+        assert_eq!(state.demand_done(&rx, 0, 0).unwrap().client, 12);
+        assert_eq!(state.demand_done(&rx, 0, 1).unwrap().client, 11);
+        assert_eq!(state.demand_done(&rx, 1, 0).unwrap().client, 10);
 
         // never-dispatched round and duplicates are errors
-        let c = Completion { seq: 5, index: 0, outcome: Ok(dummy_outcome(0)) };
+        let c = Completion { seq: 5, index: 0, outcome: done(0) };
         assert!(state.file(c).is_err());
-        let dup = Completion { seq: 1, index: 0, outcome: Ok(dummy_outcome(0)) };
+        let dup = Completion { seq: 1, index: 0, outcome: done(0) };
         assert!(state.file(dup).unwrap_err().to_string().contains("duplicate"));
+    }
+
+    #[test]
+    fn demanding_a_dropped_fate_as_merge_input_is_a_scheduler_bug() {
+        let (tx, rx) = channel::<Completion>();
+        let mut state = QuorumState::default();
+        state.register_round(1);
+        let fate = TaskFate::Dropped(DroppedTask { client: 4, bytes: 0, drop_time: 1.0 });
+        tx.send(Completion { seq: 0, index: 0, outcome: Ok(fate) }).unwrap();
+        let err = state.demand_done(&rx, 0, 0).unwrap_err();
+        assert!(err.to_string().contains("scheduler bug"), "unexpected error: {err}");
     }
 
     #[test]
@@ -1305,17 +1610,20 @@ mod tests {
         let (tx, rx) = channel::<Completion>();
         let mut state = QuorumState::default();
         state.register_round(2);
-        tx.send(Completion { seq: 0, index: 0, outcome: Ok(dummy_outcome(1)) }).unwrap();
+        tx.send(Completion { seq: 0, index: 0, outcome: done(1) }).unwrap();
         tx.send(Completion { seq: 0, index: 1, outcome: Err(anyhow!("engine died")) }).unwrap();
         let err = state.drain(&rx).unwrap_err();
         assert!(err.to_string().contains("straggler of round 0"), "unexpected error: {err}");
         assert!(err.to_string().contains("engine died"), "unexpected error: {err}");
 
-        // all-Ok leftovers drain cleanly
+        // all-Ok leftovers drain cleanly — including dropped fates, which
+        // are scheduled churn, not faults
         let (tx, rx) = channel::<Completion>();
         let mut state = QuorumState::default();
-        state.register_round(1);
-        tx.send(Completion { seq: 0, index: 0, outcome: Ok(dummy_outcome(2)) }).unwrap();
+        state.register_round(2);
+        tx.send(Completion { seq: 0, index: 0, outcome: done(2) }).unwrap();
+        let fate = TaskFate::Dropped(DroppedTask { client: 3, bytes: 0, drop_time: 0.2 });
+        tx.send(Completion { seq: 0, index: 1, outcome: Ok(fate) }).unwrap();
         state.drain(&rx).unwrap();
     }
 }

@@ -184,6 +184,7 @@ impl HeroesServer {
                 stream: env.batch_stream(a.client, self.round),
                 bytes: env.info.bytes_composed[&a.p],
                 completion: a.projected_t,
+                drop_at: None,
             });
         }
         let remaining = plan.assignments.len();
@@ -283,12 +284,16 @@ impl HeroesServer {
         }
         self.global = acc.finalize()?;
 
-        // retire fully-merged plans
+        // retire fully-merged plans; a scenario-dropped client's update
+        // never arrives, so its plan slot retires here or leaks forever
         for o in &batch.quorum {
             Self::retire(&mut self.in_flight, batch.round, o.client)?;
         }
         for late in &batch.late {
             Self::retire(&mut self.in_flight, late.origin_round, late.outcome.client)?;
+        }
+        for &client in &batch.dropped {
+            Self::retire(&mut self.in_flight, batch.round, client)?;
         }
         self.in_flight.retain(|s| s.remaining > 0);
 
@@ -331,6 +336,9 @@ impl HeroesServer {
             beta_sq: self.ledger.relative_variance(),
             l: if self.tracker.ready() { self.tracker.current().l } else { 1.0 },
             spread_index: self.ledger.spread_index(),
+            // the observed churn is a dispatch fact the round driver
+            // injects (`FlEnv::observed_dropout_rate`), not scheme state
+            ..Default::default()
         }
     }
 }

@@ -11,6 +11,13 @@
 //! with the evaluation cadence and early-stop budgets riding the
 //! driver's per-round observer, which also logs the (possibly adaptive)
 //! chosen K at every evaluation point.
+//!
+//! Churn scenarios (`cfg.scenario`, `simulation::scenario`) need no
+//! special handling here: the env applies availability windows and
+//! bandwidth traces while planning, the drivers stamp and police
+//! mid-round dropouts per `cfg.dropout_policy` — the runner just logs
+//! the active scenario so a churned series is never mistaken for a
+//! stable one.
 
 use crate::baselines::{make_strategy, Strategy};
 use crate::config::ExperimentConfig;
@@ -19,6 +26,7 @@ use crate::coordinator::quorum_ctl::QuorumPolicy;
 use crate::coordinator::RoundReport;
 use crate::metrics::Recorder;
 use crate::runtime::EnginePool;
+use crate::simulation::Scenario;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::path::Path;
@@ -60,7 +68,7 @@ fn eval_point(
     let (loss, acc) = strategy.evaluate(env)?;
     let t = env.clock.now();
     let gb = env.traffic.total_gb();
-    rec.push_eval(round, t, gb, loss, acc, last_train_loss, strategy.block_variance());
+    rec.push_eval(round, t, &env.traffic, loss, acc, last_train_loss, strategy.block_variance());
     let stale = strategy.staleness_index();
     // quorum modes log the K the round actually aggregated (the
     // adaptive controller's per-round output; the static knob's clamp)
@@ -87,9 +95,16 @@ pub fn run_scheme(
     let mut rng = Rng::new(cfg.seed ^ 0x5EED);
     let mut strategy = make_strategy(scheme, &env.info, cfg, &mut rng)?;
     let mut rec = Recorder::new(scheme);
+    if cfg.scenario != Scenario::Stable {
+        log::info!(
+            "[{scheme}] scenario {} (dropout policy {:?})",
+            cfg.scenario.name(),
+            cfg.dropout_policy
+        );
+    }
 
     let (loss0, acc0) = strategy.evaluate(&env)?;
-    rec.push_eval(0, 0.0, 0.0, loss0, acc0, loss0, strategy.block_variance());
+    rec.push_eval(0, 0.0, &env.traffic, loss0, acc0, loss0, strategy.block_variance());
 
     // With overlap, rounds between two evaluation points form one
     // pipelined chunk; otherwise they run one by one. Reports (and thus

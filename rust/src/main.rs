@@ -27,7 +27,16 @@
 //! may spend on staleness, default 0.5)
 //! --quorum-floor (adaptive K floor, default 1)
 //! --staleness-alpha (α in the late-merge weight 1/(1+s)^α, default 1;
-//! the annealing ceiling under --quorum auto).
+//! the annealing ceiling under --quorum auto)
+//! --scenario stable|diurnal-bandwidth|flash-crowd-churn|
+//! correlated-dropout (seed-deterministic churn schedule: trace-driven
+//! WAN drift, availability windows, mid-round dropouts —
+//! `simulation::scenario`; `stable` is byte-identical to the default
+//! path; the quorum paths treat a dropped client as a never-arriving
+//! straggler and surface infeasible static quorums as typed errors)
+//! --dropout-policy survivors|error (full-barrier reaction to a
+//! mid-round dropout: re-plan phase C over the survivors — default —
+//! or fail the run; default survivors).
 
 use anyhow::{anyhow, Result};
 use heroes::baselines::ALL_SCHEMES;

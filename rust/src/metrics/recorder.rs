@@ -1,12 +1,15 @@
 //! Time-series recorder for one scheme's run.
 //!
 //! One `Sample` per evaluation point carries the simulated clock, the
-//! cumulative traffic and the test metrics; the figure/table harnesses
-//! query derived quantities (time-to-accuracy, traffic-to-accuracy,
-//! accuracy-at-budget) from the recorded series, and experiments persist
-//! them as JSON + CSV under `results/`.
+//! cumulative traffic (total and split by direction — the CSV and JSON
+//! emitters share one schema, pinned by a round-trip test) and the test
+//! metrics; the figure/table harnesses query derived quantities
+//! (time-to-accuracy, traffic-to-accuracy, accuracy-at-budget) from the
+//! recorded series, and experiments persist them as JSON + CSV under
+//! `results/`.
 
 use crate::coordinator::RoundReport;
+use crate::simulation::TrafficMeter;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -20,6 +23,10 @@ pub struct Sample {
     pub sim_time: f64,
     /// cumulative PS↔client traffic (GB)
     pub traffic_gb: f64,
+    /// cumulative PS→client broadcast bytes
+    pub down_bytes: u64,
+    /// cumulative client→PS upload bytes
+    pub up_bytes: u64,
     pub test_loss: f64,
     pub test_acc: f64,
     /// W^h averaged since the previous sample
@@ -49,12 +56,14 @@ impl Recorder {
         self.reports += 1;
     }
 
-    /// Record an evaluation point (test metrics + current clock/traffic).
+    /// Record an evaluation point (test metrics + current clock +
+    /// traffic meter — totals and both per-direction counters come from
+    /// the same meter so the emitters can never disagree).
     pub fn push_eval(
         &mut self,
         round: usize,
         sim_time: f64,
-        traffic_gb: f64,
+        traffic: &TrafficMeter,
         test_loss: f64,
         test_acc: f64,
         mean_train_loss: f64,
@@ -65,7 +74,9 @@ impl Recorder {
         self.samples.push(Sample {
             round,
             sim_time,
-            traffic_gb,
+            traffic_gb: traffic.total_gb(),
+            down_bytes: traffic.down_bytes,
+            up_bytes: traffic.up_bytes,
             test_loss,
             test_acc,
             avg_wait,
@@ -126,6 +137,8 @@ impl Recorder {
                     ("round".into(), Json::from(s.round)),
                     ("sim_time".into(), Json::from(s.sim_time)),
                     ("traffic_gb".into(), Json::from(s.traffic_gb)),
+                    ("down_bytes".into(), Json::from(s.down_bytes as usize)),
+                    ("up_bytes".into(), Json::from(s.up_bytes as usize)),
                     ("test_loss".into(), Json::from(s.test_loss)),
                     ("test_acc".into(), Json::from(s.test_acc)),
                     ("avg_wait".into(), Json::from(s.avg_wait)),
@@ -140,15 +153,20 @@ impl Recorder {
         ])
     }
 
+    /// CSV columns; one name per [`Sample`] field, same set the JSON
+    /// emitter writes (the schema-agreement test pins this).
+    pub const CSV_HEADER: &str = "round,sim_time,traffic_gb,down_bytes,up_bytes,\
+                                          test_loss,test_acc,avg_wait,mean_train_loss,\
+                                          block_variance";
+
     pub fn to_csv(&self) -> String {
-        let mut out = String::from(
-            "round,sim_time,traffic_gb,test_loss,test_acc,avg_wait,mean_train_loss,block_variance\n",
-        );
+        let mut out = String::from(Self::CSV_HEADER);
+        out.push('\n');
         for s in &self.samples {
             out.push_str(&format!(
-                "{},{:.3},{:.6},{:.5},{:.5},{:.4},{:.5},{:.4}\n",
-                s.round, s.sim_time, s.traffic_gb, s.test_loss, s.test_acc, s.avg_wait,
-                s.mean_train_loss, s.block_variance
+                "{},{:.3},{:.6},{},{},{:.5},{:.5},{:.4},{:.5},{:.4}\n",
+                s.round, s.sim_time, s.traffic_gb, s.down_bytes, s.up_bytes, s.test_loss,
+                s.test_acc, s.avg_wait, s.mean_train_loss, s.block_variance
             ));
         }
         out
@@ -168,12 +186,20 @@ impl Recorder {
 mod tests {
     use super::*;
 
+    /// A meter holding the given per-direction byte totals.
+    fn meter(down: usize, up: usize) -> TrafficMeter {
+        let mut t = TrafficMeter::new();
+        t.record_down(down);
+        t.record_up(up);
+        t
+    }
+
     fn rec() -> Recorder {
         let mut r = Recorder::new("test");
-        // three eval points with rising accuracy
-        r.push_eval(0, 10.0, 0.1, 2.0, 0.30, 2.0, 0.0);
-        r.push_eval(5, 50.0, 0.5, 1.5, 0.55, 1.5, 1.0);
-        r.push_eval(10, 100.0, 1.0, 1.0, 0.70, 1.0, 2.0);
+        // three eval points with rising accuracy and traffic
+        r.push_eval(0, 10.0, &meter(60_000_000, 40_000_000), 2.0, 0.30, 2.0, 0.0);
+        r.push_eval(5, 50.0, &meter(300_000_000, 200_000_000), 1.5, 0.55, 1.5, 1.0);
+        r.push_eval(10, 100.0, &meter(600_000_000, 400_000_000), 1.0, 0.70, 1.0, 2.0);
         r
     }
 
@@ -205,10 +231,10 @@ mod tests {
         };
         r.push_round(&mk(2.0));
         r.push_round(&mk(4.0));
-        r.push_eval(1, 1.0, 0.0, 1.0, 0.1, 1.0, 0.0);
+        r.push_eval(1, 1.0, &TrafficMeter::new(), 1.0, 0.1, 1.0, 0.0);
         assert!((r.samples[0].avg_wait - 3.0).abs() < 1e-12);
         r.push_round(&mk(10.0));
-        r.push_eval(2, 2.0, 0.0, 1.0, 0.2, 1.0, 0.0);
+        r.push_eval(2, 2.0, &TrafficMeter::new(), 1.0, 0.2, 1.0, 0.0);
         assert!((r.samples[1].avg_wait - 10.0).abs() < 1e-12);
     }
 
@@ -223,5 +249,48 @@ mod tests {
         // round-trips through our parser
         let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.get("samples").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn csv_and_json_emitters_share_one_schema() {
+        // regression: the emitters disagreed on the per-direction byte
+        // counters (up_bytes/down_bytes existed in one surface but not
+        // the CSV header) — the column set is now pinned to be identical
+        let r = rec();
+        let header: std::collections::BTreeSet<&str> =
+            Recorder::CSV_HEADER.split(',').collect();
+        let rows = r.to_json();
+        let row = rows.get("samples").unwrap().as_arr().unwrap()[0].as_obj().unwrap();
+        let json_keys: std::collections::BTreeSet<&str> =
+            row.keys().map(String::as_str).collect();
+        assert_eq!(header, json_keys, "CSV header and JSON row keys must agree");
+        // and the CSV body has exactly one value per header column
+        let csv = r.to_csv();
+        for line in csv.lines().skip(1) {
+            assert_eq!(line.split(',').count(), header.len(), "ragged CSV row: {line}");
+        }
+    }
+
+    #[test]
+    fn per_direction_bytes_round_trip_through_both_emitters() {
+        let r = rec();
+        assert_eq!(r.samples[0].down_bytes, 60_000_000);
+        assert_eq!(r.samples[0].up_bytes, 40_000_000);
+        assert!((r.samples[0].traffic_gb - 0.1).abs() < 1e-12, "gb derives from the meter");
+
+        // JSON: parse back and compare the counters exactly
+        let parsed = crate::util::json::parse(&r.to_json().to_string_pretty()).unwrap();
+        let row = &parsed.get("samples").unwrap().as_arr().unwrap()[1];
+        assert_eq!(row.get("down_bytes").unwrap().as_usize(), Some(300_000_000));
+        assert_eq!(row.get("up_bytes").unwrap().as_usize(), Some(200_000_000));
+
+        // CSV: the byte columns are exact integers in header position
+        let csv = r.to_csv();
+        let cols: Vec<&str> = Recorder::CSV_HEADER.split(',').collect();
+        let di = cols.iter().position(|&c| c == "down_bytes").unwrap();
+        let ui = cols.iter().position(|&c| c == "up_bytes").unwrap();
+        let row2: Vec<&str> = csv.lines().nth(2).unwrap().split(',').collect();
+        assert_eq!(row2[di].parse::<u64>().unwrap(), 300_000_000);
+        assert_eq!(row2[ui].parse::<u64>().unwrap(), 200_000_000);
     }
 }

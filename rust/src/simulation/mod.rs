@@ -7,11 +7,42 @@
 //! We reproduce exactly that model: *learning* is real (PJRT executions),
 //! *time* is virtual — completion/waiting/traffic metrics integrate the
 //! simulated quantities (Eq. 17–20).
+//!
+//! # Scenarios (`--scenario`)
+//!
+//! On top of the static fluctuation model, the [`scenario`] engine layers
+//! named, seed-deterministic churn schedules: trace-driven bandwidth
+//! drift ([`NetworkTrace`] multipliers on the WAN band), per-client
+//! availability windows on the virtual clock, and mid-round dropouts
+//! (a dispatched client vanishes; its update never merges — see
+//! `coordinator::round`, "Scenario churn"). The shipped catalog is
+//! `stable` / `diurnal-bandwidth` / `flash-crowd-churn` /
+//! `correlated-dropout` ([`SCENARIO_CATALOG`]).
+//!
+//! **JSON format.** Config files select a scenario with a catalog-name
+//! string, and the full-barrier dropout reaction with a policy string:
+//!
+//! ```json
+//! { "scenario": "flash-crowd-churn", "dropout_policy": "survivors" }
+//! ```
+//!
+//! (CLI parity: `--scenario <name>`, `--dropout-policy survivors|error`.
+//! Unknown names are parse errors, never a silent fall-back.)
+//!
+//! **Determinism contract.** Every schedule quantity is a pure function
+//! of `(scenario, cfg.seed, round, client)` — one fresh RNG per event,
+//! no worker/pool/wall-clock state — so churn runs are byte-identical
+//! for any `--workers`/`--pool`, and `--scenario stable` schedules
+//! nothing at all: it reproduces the historical default path byte for
+//! byte (both pinned in `tests/integration_parallel.rs`; the schedule
+//! purity itself in `tests/prop_coordinator.rs`).
 
 pub mod clock;
 pub mod device;
 pub mod network;
+pub mod scenario;
 
 pub use clock::{TrafficMeter, VirtualClock};
 pub use device::{ClientDevice, DeviceClass, DeviceFleet};
-pub use network::{LinkSample, NetworkModel};
+pub use network::{LinkSample, NetworkModel, NetworkTrace};
+pub use scenario::{Scenario, ScenarioCtl, ScenarioError, SCENARIO_CATALOG};

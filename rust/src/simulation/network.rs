@@ -4,10 +4,38 @@
 //! [1, 5] Mb/s, per client per round. Upload dominates completion time
 //! (Eq. 18 only counts upload; downloads are an order of magnitude
 //! faster) but both directions are metered for the traffic figures.
+//!
+//! Scenarios (`simulation::scenario`) drift the band per round through a
+//! [`NetworkTrace`] of multipliers ([`NetworkModel::sample_scaled`]); the
+//! trace floor is [`MIN_BANDWIDTH_SCALE`], but transfer times are guarded
+//! anyway — a dead (0 Mb/s or non-finite) link saturates at
+//! [`MAX_TRANSFER_SECS`] instead of leaking `inf`/NaN into the virtual
+//! clock and the quorum ranking.
 
 use crate::util::rng::Rng;
 
-const MBIT: f64 = 1_000_000.0 / 8.0; // bytes per second per Mb/s
+/// bytes per second per Mb/s
+pub const MBIT: f64 = 1_000_000.0 / 8.0;
+
+/// Hard floor for trace multipliers: a scenario may starve a link, never
+/// kill it outright (a killed link is modeled as a dropout instead).
+pub const MIN_BANDWIDTH_SCALE: f64 = 0.05;
+
+/// Transfer-time saturation (~31 virtual years): the value a degenerate
+/// link (0 Mb/s, NaN, negative) yields instead of a non-finite time. Far
+/// beyond any experiment horizon, yet finite — Eq. 19 maxima and the
+/// quorum completion ranking stay total.
+pub const MAX_TRANSFER_SECS: f64 = 1e9;
+
+/// Seconds to move `bytes` over a `bps` link, saturating on degenerate
+/// bandwidth (see [`MAX_TRANSFER_SECS`]).
+fn transfer_time(bytes: usize, bps: f64) -> f64 {
+    // NaN is caught by the finiteness check, so `<= 0.0` is total here
+    if !bps.is_finite() || bps <= 0.0 {
+        return MAX_TRANSFER_SECS;
+    }
+    (bytes as f64 / bps).min(MAX_TRANSFER_SECS)
+}
 
 /// One round's sampled link for a client.
 #[derive(Debug, Clone, Copy)]
@@ -19,14 +47,16 @@ pub struct LinkSample {
 }
 
 impl LinkSample {
-    /// Seconds to upload `bytes` (paper Eq. 18).
+    /// Seconds to upload `bytes` (paper Eq. 18). Saturating: a 0 Mb/s or
+    /// non-finite link (trace-driven links can legitimately hit the
+    /// floor) yields [`MAX_TRANSFER_SECS`], never `inf`/NaN.
     pub fn upload_time(&self, bytes: usize) -> f64 {
-        bytes as f64 / self.up_bps
+        transfer_time(bytes, self.up_bps)
     }
 
-    /// Seconds to download `bytes`.
+    /// Seconds to download `bytes`. Saturating like [`LinkSample::upload_time`].
     pub fn download_time(&self, bytes: usize) -> f64 {
-        bytes as f64 / self.down_bps
+        transfer_time(bytes, self.down_bps)
     }
 }
 
@@ -52,6 +82,56 @@ impl NetworkModel {
             down_bps: rng.uniform_in(self.down_lo_mbps, self.down_hi_mbps) * MBIT,
         }
     }
+
+    /// [`NetworkModel::sample`] under a trace multiplier: both directions
+    /// scaled by `scale`. Consumes the RNG identically to the unscaled
+    /// path (the determinism contract cares about draw counts).
+    pub fn sample_scaled(&self, rng: &mut Rng, scale: f64) -> LinkSample {
+        let base = self.sample(rng);
+        LinkSample { up_bps: base.up_bps * scale, down_bps: base.down_bps * scale }
+    }
+}
+
+/// A cyclic per-round band-multiplier trace (scenario-generated).
+/// Construction clamps every entry into `[MIN_BANDWIDTH_SCALE, 1]` and
+/// replaces non-finite entries with 1.0, so a trace can starve a link but
+/// never hand the clock a degenerate value.
+#[derive(Debug, Clone)]
+pub struct NetworkTrace {
+    scales: Vec<f64>,
+}
+
+impl NetworkTrace {
+    pub fn new(scales: Vec<f64>) -> NetworkTrace {
+        let mut scales: Vec<f64> = scales
+            .into_iter()
+            .map(|s| if s.is_finite() { s.clamp(MIN_BANDWIDTH_SCALE, 1.0) } else { 1.0 })
+            .collect();
+        if scales.is_empty() {
+            scales.push(1.0);
+        }
+        NetworkTrace { scales }
+    }
+
+    /// The multiplier of `round` (cyclic).
+    pub fn scale(&self, round: usize) -> f64 {
+        self.scales[round % self.scales.len()]
+    }
+
+    pub fn len(&self) -> usize {
+        self.scales.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // construction guarantees at least one entry
+    }
+
+    /// (min, max) multiplier over the cycle.
+    pub fn bounds(&self) -> (f64, f64) {
+        let lo = self.scales.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = self.scales.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        (lo, hi)
+    }
 }
 
 #[cfg(test)]
@@ -76,5 +156,58 @@ mod tests {
         // 1 MB at 2 Mb/s = 4 s
         assert!((l.upload_time(1_000_000) - 4.0).abs() < 1e-9);
         assert!((l.download_time(1_000_000) - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_links_saturate_instead_of_inf() {
+        // regression (scenario engine): a trace-driven link at 0 Mb/s used
+        // to put `inf` into the projected completion, which the dispatch
+        // validation then rejected — saturate to a finite horizon instead
+        for bps in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let l = LinkSample { up_bps: bps, down_bps: bps };
+            assert_eq!(l.upload_time(1_000_000), MAX_TRANSFER_SECS, "up_bps {bps}");
+            assert_eq!(l.download_time(1_000_000), MAX_TRANSFER_SECS, "down_bps {bps}");
+        }
+        // 0 bytes over a dead link is still the saturation, not 0/0 = NaN
+        let dead = LinkSample { up_bps: 0.0, down_bps: 0.0 };
+        assert_eq!(dead.upload_time(0), MAX_TRANSFER_SECS);
+        // a near-dead link whose quotient overflows f64 saturates too
+        let tiny = LinkSample { up_bps: f64::MIN_POSITIVE, down_bps: f64::MIN_POSITIVE };
+        assert_eq!(tiny.upload_time(usize::MAX), MAX_TRANSFER_SECS);
+        // healthy links are untouched (bit-exact: min() with a larger cap)
+        let l = LinkSample { up_bps: 2.0 * MBIT, down_bps: 10.0 * MBIT };
+        assert_eq!(l.upload_time(1_000_000).to_bits(), (1_000_000.0 / (2.0 * MBIT)).to_bits());
+    }
+
+    #[test]
+    fn scaled_samples_shrink_both_directions() {
+        let m = NetworkModel::default();
+        let mut a = Rng::new(3);
+        let mut b = Rng::new(3);
+        for _ in 0..200 {
+            let base = m.sample(&mut a);
+            let half = m.sample_scaled(&mut b, 0.5);
+            assert_eq!(half.up_bps.to_bits(), (base.up_bps * 0.5).to_bits());
+            assert_eq!(half.down_bps.to_bits(), (base.down_bps * 0.5).to_bits());
+        }
+        // identical RNG consumption: the two streams stay in lockstep
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn trace_clamps_and_cycles() {
+        let t = NetworkTrace::new(vec![0.0, 2.0, f64::NAN, 0.5]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.scale(0), MIN_BANDWIDTH_SCALE, "0 clamps to the floor");
+        assert_eq!(t.scale(1), 1.0, "overshoot clamps to 1");
+        assert_eq!(t.scale(2), 1.0, "NaN is replaced, not propagated");
+        assert_eq!(t.scale(3), 0.5);
+        assert_eq!(t.scale(7), 0.5, "trace is cyclic");
+        let (lo, hi) = t.bounds();
+        assert!((MIN_BANDWIDTH_SCALE..=1.0).contains(&lo) && hi <= 1.0);
+        // empty traces degrade to the identity multiplier
+        let empty = NetworkTrace::new(Vec::new());
+        assert_eq!(empty.scale(0), 1.0);
+        assert!(!empty.is_empty());
     }
 }

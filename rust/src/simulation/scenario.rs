@@ -1,0 +1,490 @@
+//! Scenario engine — named, seed-deterministic schedules for the
+//! heterogeneous-edge simulator (`--scenario`, ROADMAP "handles as many
+//! scenarios as you can imagine").
+//!
+//! A [`Scenario`] drives three axes of churn on top of the paper's static
+//! fluctuation model:
+//!
+//! * **bandwidth drift** — a trace-driven [`NetworkTrace`] of per-round
+//!   band multipliers (diurnal tides, flash-crowd congestion) applied to
+//!   the WAN model's sampled links;
+//! * **availability windows** — per-client on/off windows on the round
+//!   axis of the virtual clock (a flash crowd joins for a window and
+//!   leaves again);
+//! * **mid-round dropouts** — a dispatched client vanishes at a fraction
+//!   of its projected completion time: its broadcast is already billed,
+//!   its upload never arrives, its update never merges
+//!   (`coordinator::round`, "Scenario churn").
+//!
+//! # Catalog
+//!
+//! | name                  | bandwidth         | availability      | dropouts            |
+//! |-----------------------|-------------------|-------------------|---------------------|
+//! | `stable`              | paper model       | always on         | none                |
+//! | `diurnal-bandwidth`   | 24-round tide     | always on         | none                |
+//! | `flash-crowd-churn`   | congested in-window | crowd third windowed | 2% / 8% in-window |
+//! | `correlated-dropout`  | paper model       | always on         | 2% + 50% bursts     |
+//!
+//! # JSON / CLI format
+//!
+//! CLI: `--scenario <name>`; config JSON: `"scenario": "<name>"` (same
+//! catalog names), plus `--dropout-policy survivors|error` /
+//! `"dropout_policy": "..."` for the full-barrier path's reaction to a
+//! mid-round dropout (`config::DropoutPolicy`). Unknown names are parse
+//! errors, never a silent fall-back to `stable`.
+//!
+//! # Determinism contract
+//!
+//! Every schedule quantity — the trace multiplier of a round, a client's
+//! availability, whether/when a dispatched task drops — is a **pure
+//! function of `(scenario, cfg.seed, round, client)`**: each draw uses a
+//! fresh `Rng` keyed by those values (see `event_rng`), so evaluation
+//! order, worker count, pool size and wall-clock never reach a decision.
+//! Same seed ⇒ identical schedule for any `--workers`/`--pool` (pinned in
+//! `tests/prop_coordinator.rs` and `tests/integration_parallel.rs`);
+//! `stable` schedules nothing and is byte-identical to the historical
+//! default path.
+
+use crate::simulation::network::NetworkTrace;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+/// The shippable catalog names, in `--scenario` order.
+pub const SCENARIO_CATALOG: [&str; 4] =
+    ["stable", "diurnal-bandwidth", "flash-crowd-churn", "correlated-dropout"];
+
+const TRACE_SALT: u64 = 0x9E6B_5533_D00D_0001;
+const AVAIL_SALT: u64 = 0x9E6B_5533_D00D_0002;
+const DROP_SALT: u64 = 0x9E6B_5533_D00D_0003;
+
+/// A fresh, independent RNG for one schedule event — the purity that
+/// makes schedules identical for any evaluation order (module docs,
+/// "Determinism contract"). Mixing mirrors `FlEnv::batch_stream`.
+fn event_rng(seed: u64, salt: u64, round: usize, client: usize) -> Rng {
+    let mix = salt
+        .wrapping_add((round as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add((client as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03));
+    Rng::new(seed ^ mix)
+}
+
+/// Typed churn faults surfaced by the round pipeline. `anyhow`-wrapped at
+/// the driver boundary; downcast with `err.downcast_ref::<ScenarioError>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum ScenarioError {
+    /// a participant vanished mid-round and the config said that is fatal
+    /// (`--dropout-policy error`)
+    #[error("round {round}: client {client} dropped mid-round (dropout policy: error)")]
+    MidRoundDropout { round: usize, client: usize },
+    /// every participant of the round dropped — no survivors to aggregate
+    #[error("round {round}: every participant dropped mid-round — no survivors to aggregate")]
+    EmptySurvivors { round: usize },
+    /// churn left fewer survivors than the static `--quorum K` demands
+    #[error(
+        "round {round}: quorum K={required} infeasible — only {survivors} of the cohort \
+         survived the churn"
+    )]
+    QuorumInfeasible { round: usize, required: usize, survivors: usize },
+}
+
+/// A named churn schedule (module docs). Variants carry their canonical
+/// catalog parameters; [`Scenario::Pinned`] is the surgical test hook
+/// (drop exactly one `(round, client)`) and is not in the CLI catalog.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scenario {
+    /// the historical default: no churn, byte-identical to pre-scenario runs
+    Stable,
+    /// bandwidth tide: band multiplier `1-depth ≤ m(r) ≤ 1` over a
+    /// `period`-round cycle, with seeded per-round jitter (the "trace")
+    DiurnalBandwidth { period: usize, depth: f64 },
+    /// a crowd third of the fleet attends only a per-client-jittered
+    /// window each period; during the *nominal* flash window
+    /// `[flash_start, flash_start+flash_len)` the system is overloaded —
+    /// the WAN congests and the **whole fleet** (crowd and steady alike)
+    /// drops at `flash_drop` instead of `base_drop`
+    FlashCrowdChurn {
+        period: usize,
+        flash_start: usize,
+        flash_len: usize,
+        /// clients with `client % crowd_stride == 0` are the crowd
+        crowd_stride: usize,
+        base_drop: f64,
+        flash_drop: f64,
+    },
+    /// background dropout rate plus correlated bursts (network
+    /// partitions) every `burst_every` rounds
+    CorrelatedDropout { base: f64, burst_every: usize, burst_rate: f64 },
+    /// test hook: client `client` drops at `frac` of its completion in
+    /// round `round`, nothing else ever happens
+    Pinned { round: usize, client: usize, frac: f64 },
+}
+
+impl Scenario {
+    /// Parse a catalog name (CLI `--scenario`, JSON `"scenario"`).
+    pub fn parse(s: &str) -> Result<Scenario> {
+        match s {
+            "stable" => Ok(Scenario::Stable),
+            "diurnal-bandwidth" => Ok(Scenario::DiurnalBandwidth { period: 24, depth: 0.6 }),
+            "flash-crowd-churn" => Ok(Scenario::FlashCrowdChurn {
+                period: 24,
+                flash_start: 8,
+                flash_len: 8,
+                crowd_stride: 3,
+                base_drop: 0.02,
+                flash_drop: 0.08,
+            }),
+            "correlated-dropout" => {
+                Ok(Scenario::CorrelatedDropout { base: 0.02, burst_every: 8, burst_rate: 0.5 })
+            }
+            other => Err(anyhow!(
+                "unknown scenario `{other}` (one of {})",
+                SCENARIO_CATALOG.join("|")
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Stable => "stable",
+            Scenario::DiurnalBandwidth { .. } => "diurnal-bandwidth",
+            Scenario::FlashCrowdChurn { .. } => "flash-crowd-churn",
+            Scenario::CorrelatedDropout { .. } => "correlated-dropout",
+            Scenario::Pinned { .. } => "pinned",
+        }
+    }
+
+    /// The schedule's cycle length in rounds (1 for aperiodic scenarios);
+    /// every schedule quantity repeats with this period.
+    pub fn period_rounds(&self) -> usize {
+        match *self {
+            Scenario::Stable | Scenario::Pinned { .. } => 1,
+            Scenario::DiurnalBandwidth { period, .. } => period.max(1),
+            Scenario::FlashCrowdChurn { period, .. } => period.max(1),
+            Scenario::CorrelatedDropout { burst_every, .. } => burst_every.max(1),
+        }
+    }
+
+    /// The per-round WAN band multiplier trace, if this scenario drifts
+    /// bandwidth. Seed-deterministic; every multiplier lands in
+    /// `[MIN_BANDWIDTH_SCALE, 1]` by construction.
+    pub fn bandwidth_trace(&self, seed: u64) -> Option<NetworkTrace> {
+        match *self {
+            Scenario::DiurnalBandwidth { period, depth } => {
+                let period = period.max(1);
+                let mut rng = event_rng(seed, TRACE_SALT, 0, 0);
+                let scales = (0..period)
+                    .map(|r| {
+                        let phase = std::f64::consts::TAU * r as f64 / period as f64;
+                        let base = 1.0 - depth * 0.5 * (1.0 - phase.cos());
+                        base * rng.uniform_in(0.9, 1.0)
+                    })
+                    .collect();
+                Some(NetworkTrace::new(scales))
+            }
+            Scenario::FlashCrowdChurn { period, flash_start, flash_len, .. } => {
+                // the crowd congests the WAN while its window is open
+                let period = period.max(1);
+                let scales = (0..period)
+                    .map(|r| if in_window(r, flash_start, flash_len, period) { 0.6 } else { 1.0 })
+                    .collect();
+                Some(NetworkTrace::new(scales))
+            }
+            _ => None,
+        }
+    }
+
+    /// Is `client` attending round `round`? Windows are single cyclic
+    /// intervals on the round axis — at most two availability transitions
+    /// per period, crossed in virtual-clock order (rounds are monotone on
+    /// the clock). Pinned per `(seed, client)` phase jitter staggers the
+    /// crowd's joins/leaves.
+    pub fn available(&self, seed: u64, client: usize, round: usize) -> bool {
+        match *self {
+            Scenario::Stable
+            | Scenario::DiurnalBandwidth { .. }
+            | Scenario::CorrelatedDropout { .. }
+            | Scenario::Pinned { .. } => true,
+            Scenario::FlashCrowdChurn { period, flash_start, flash_len, crowd_stride, .. } => {
+                if crowd_stride == 0 || client % crowd_stride != 0 {
+                    return true; // the steady cohort never leaves
+                }
+                let period = period.max(1);
+                let jitter =
+                    event_rng(seed, AVAIL_SALT, 0, client).below(flash_len.max(2) / 2 + 1);
+                in_window(round % period, (flash_start + jitter) % period, flash_len, period)
+            }
+        }
+    }
+
+    /// Does `client` vanish mid-round in `round`, and if so at what
+    /// fraction of its projected completion time? One fresh RNG per
+    /// `(seed, round, client)` — pure, order-independent.
+    pub fn dropout(&self, seed: u64, round: usize, client: usize) -> Option<f64> {
+        let rate = match *self {
+            Scenario::Stable | Scenario::DiurnalBandwidth { .. } => return None,
+            Scenario::Pinned { round: r, client: c, frac } => {
+                return (round == r && client == c).then_some(frac);
+            }
+            Scenario::FlashCrowdChurn {
+                period, flash_start, flash_len, base_drop, flash_drop, ..
+            } => {
+                if in_window(round % period.max(1), flash_start, flash_len, period.max(1)) {
+                    flash_drop
+                } else {
+                    base_drop
+                }
+            }
+            Scenario::CorrelatedDropout { base, burst_every, burst_rate } => {
+                if burst_every > 0 && round % burst_every == burst_every - 1 {
+                    burst_rate
+                } else {
+                    base
+                }
+            }
+        };
+        let mut rng = event_rng(seed, DROP_SALT, round, client);
+        (rng.uniform() < rate).then(|| rng.uniform_in(0.05, 0.95))
+    }
+}
+
+/// Membership of `r` in the cyclic window `[start, start+len)` mod `period`.
+fn in_window(r: usize, start: usize, len: usize, period: usize) -> bool {
+    if len == 0 {
+        return false;
+    }
+    if len >= period {
+        return true;
+    }
+    let end = start + len;
+    if end <= period {
+        (start..end).contains(&r)
+    } else {
+        r >= start || r < end - period
+    }
+}
+
+/// Per-run scenario state held by `FlEnv`: the spec, the prebuilt
+/// bandwidth trace, the plan/dispatch round cursors (every mode — serial,
+/// overlapped, quorum — plans and dispatches rounds in the same order, so
+/// the cursors are mode-independent) and the observed churn totals that
+/// feed the adaptive quorum controller's dropout-rate signal.
+#[derive(Debug, Clone)]
+pub struct ScenarioCtl {
+    spec: Scenario,
+    seed: u64,
+    trace: Option<NetworkTrace>,
+    /// the round currently being planned (phase A)
+    plan_round: usize,
+    planned_rounds: usize,
+    dispatched_rounds: usize,
+    dispatched_tasks: usize,
+    dropped_tasks: usize,
+}
+
+impl ScenarioCtl {
+    pub fn new(spec: Scenario, seed: u64) -> ScenarioCtl {
+        ScenarioCtl {
+            trace: spec.bandwidth_trace(seed),
+            spec,
+            seed,
+            plan_round: 0,
+            planned_rounds: 0,
+            dispatched_rounds: 0,
+            dispatched_tasks: 0,
+            dropped_tasks: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &Scenario {
+        &self.spec
+    }
+
+    /// Advance the plan cursor (called once per round by
+    /// `FlEnv::sample_clients`); subsequent `available_now`/
+    /// `bandwidth_scale` reads refer to this round.
+    pub fn begin_plan_round(&mut self) -> usize {
+        let r = self.planned_rounds;
+        self.planned_rounds += 1;
+        self.plan_round = r;
+        r
+    }
+
+    /// Advance the dispatch cursor (called once per dispatched round by
+    /// `FlEnv::stamp_dropouts`).
+    pub fn begin_dispatch_round(&mut self) -> usize {
+        let r = self.dispatched_rounds;
+        self.dispatched_rounds += 1;
+        r
+    }
+
+    /// The WAN band multiplier of the round being planned; `None` means
+    /// the scenario does not drift bandwidth (take the historical path).
+    pub fn bandwidth_scale(&self) -> Option<f64> {
+        self.trace.as_ref().map(|t| t.scale(self.plan_round))
+    }
+
+    /// Availability of `client` in the round being planned.
+    pub fn available_now(&self, client: usize) -> bool {
+        self.spec.available(self.seed, client, self.plan_round)
+    }
+
+    /// The dropout draw for a dispatched task.
+    pub fn dropout(&self, round: usize, client: usize) -> Option<f64> {
+        self.spec.dropout(self.seed, round, client)
+    }
+
+    /// Book one dispatched round's churn into the observed totals.
+    pub fn note_dispatched(&mut self, tasks: usize, dropped: usize) {
+        self.dispatched_tasks += tasks;
+        self.dropped_tasks += dropped;
+    }
+
+    /// Observed mid-round dropout rate over everything dispatched so far
+    /// (the adaptive quorum controller's churn signal). Deterministic
+    /// virtual-schedule state — dropouts are decided at dispatch, never
+    /// by worker racing.
+    pub fn observed_dropout_rate(&self) -> f64 {
+        if self.dispatched_tasks == 0 {
+            0.0
+        } else {
+            self.dropped_tasks as f64 / self.dispatched_tasks as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulation::network::MIN_BANDWIDTH_SCALE;
+
+    #[test]
+    fn catalog_parses_and_names_round_trip() {
+        for name in SCENARIO_CATALOG {
+            let s = Scenario::parse(name).unwrap();
+            assert_eq!(s.name(), name, "catalog name must round-trip");
+        }
+        assert!(Scenario::parse("chaos-monkey").is_err());
+        assert_eq!(Scenario::parse("stable").unwrap(), Scenario::Stable);
+    }
+
+    #[test]
+    fn stable_schedules_nothing() {
+        let s = Scenario::Stable;
+        assert!(s.bandwidth_trace(42).is_none());
+        for round in 0..50 {
+            for client in 0..20 {
+                assert!(s.available(42, client, round));
+                assert_eq!(s.dropout(42, round, client), None);
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_trace_is_bounded_and_periodic() {
+        let s = Scenario::parse("diurnal-bandwidth").unwrap();
+        let t = s.bandwidth_trace(7).unwrap();
+        let period = s.period_rounds();
+        for r in 0..3 * period {
+            let m = t.scale(r);
+            assert!((MIN_BANDWIDTH_SCALE..=1.0).contains(&m), "scale {m} out of band");
+            assert_eq!(m, t.scale(r + period), "trace must be {period}-round periodic");
+        }
+        // the tide actually moves
+        let (lo, hi) = t.bounds();
+        assert!(hi - lo > 0.2, "diurnal depth collapsed: [{lo}, {hi}]");
+    }
+
+    #[test]
+    fn flash_crowd_windows_are_single_cyclic_intervals() {
+        let s = Scenario::parse("flash-crowd-churn").unwrap();
+        let period = s.period_rounds();
+        for client in 0..24 {
+            let avail: Vec<bool> = (0..period).map(|r| s.available(5, client, r)).collect();
+            let transitions = (0..period)
+                .filter(|&r| avail[r] != avail[(r + 1) % period])
+                .count();
+            assert!(
+                transitions <= 2,
+                "client {client}: {transitions} availability transitions in one period"
+            );
+            // periodic on the round axis (monotone on the virtual clock)
+            for r in 0..period {
+                assert_eq!(s.available(5, client, r), s.available(5, client, r + period));
+            }
+        }
+        // the steady two thirds never leave
+        assert!((0..3 * period).all(|r| s.available(5, 1, r)));
+        // the crowd third does leave at some point
+        let Scenario::FlashCrowdChurn { crowd_stride, .. } = s else { unreachable!() };
+        assert!((0..period).any(|r| !s.available(5, crowd_stride, r)));
+    }
+
+    #[test]
+    fn pinned_dropout_hits_exactly_its_target() {
+        let s = Scenario::Pinned { round: 3, client: 7, frac: 0.5 };
+        assert_eq!(s.dropout(1, 3, 7), Some(0.5));
+        assert_eq!(s.dropout(1, 3, 6), None);
+        assert_eq!(s.dropout(1, 2, 7), None);
+        assert!(s.available(1, 7, 3), "pinned dropout must not touch availability");
+    }
+
+    #[test]
+    fn correlated_bursts_drop_harder() {
+        let s = Scenario::parse("correlated-dropout").unwrap();
+        let Scenario::CorrelatedDropout { burst_every, .. } = s else { unreachable!() };
+        let burst_round = burst_every - 1;
+        let rate = |round: usize| {
+            (0..2000).filter(|&c| s.dropout(11, round, c).is_some()).count() as f64 / 2000.0
+        };
+        assert!(rate(burst_round) > 0.4, "burst round must drop ~50%");
+        assert!(rate(0) < 0.06, "calm round must drop ~2%");
+    }
+
+    #[test]
+    fn schedules_are_pure_and_order_independent() {
+        // the worker-count-independence core: recomputing any schedule
+        // entry, in any order, yields identical values
+        for name in SCENARIO_CATALOG {
+            let s = Scenario::parse(name).unwrap();
+            let fwd: Vec<_> = (0..40)
+                .flat_map(|r| (0..10).map(move |c| (r, c)))
+                .map(|(r, c)| (s.available(9, c, r), s.dropout(9, r, c)))
+                .collect();
+            let rev: Vec<_> = (0..40)
+                .flat_map(|r| (0..10).map(move |c| (r, c)))
+                .rev()
+                .map(|(r, c)| (s.available(9, c, r), s.dropout(9, r, c)))
+                .rev()
+                .collect();
+            assert_eq!(fwd, rev, "{name}: schedule must not depend on evaluation order");
+        }
+    }
+
+    #[test]
+    fn ctl_tracks_cursors_and_dropout_rate() {
+        let mut ctl = ScenarioCtl::new(Scenario::Stable, 1);
+        assert_eq!(ctl.begin_plan_round(), 0);
+        assert_eq!(ctl.begin_plan_round(), 1);
+        assert_eq!(ctl.begin_dispatch_round(), 0);
+        assert_eq!(ctl.observed_dropout_rate(), 0.0, "no dispatches yet");
+        ctl.note_dispatched(8, 2);
+        assert!((ctl.observed_dropout_rate() - 0.25).abs() < 1e-12);
+        ctl.note_dispatched(8, 0);
+        assert!((ctl.observed_dropout_rate() - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn in_window_handles_wrap_and_degenerate_lengths() {
+        assert!(!in_window(3, 5, 0, 10), "empty window contains nothing");
+        assert!(in_window(3, 5, 10, 10), "full-period window contains everything");
+        // plain interval [2, 5)
+        assert!(in_window(2, 2, 3, 10) && in_window(4, 2, 3, 10));
+        assert!(!in_window(5, 2, 3, 10) && !in_window(1, 2, 3, 10));
+        // wrapping interval [8, 8+4) mod 10 = {8, 9, 0, 1}
+        for r in [8, 9, 0, 1] {
+            assert!(in_window(r, 8, 4, 10), "round {r} must be inside the wrapped window");
+        }
+        for r in [2, 7] {
+            assert!(!in_window(r, 8, 4, 10), "round {r} must be outside the wrapped window");
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Golden-trace regression harness: 2-round Heroes/dense/Flanc runs
+//! under pinned seeds fingerprint `(sim_time, traffic_gb, chosen K)` per
+//! eval point, and the fingerprints are diffed against checked-in
+//! `rust/tests/golden/*.json`.
+//!
+//! * floats are pinned as **exact bit patterns** (hex of `f64::to_bits`)
+//!   plus a human-readable value — any numerical drift in the round
+//!   pipeline, the scenario engine or the schemes fails the diff;
+//! * `HEROES_REGEN_GOLDEN=1 cargo test --test golden_traces`
+//!   regenerates the files after an intentional behavior change;
+//! * a missing golden file is **pinned on first run** (written, test
+//!   passes with a note) so the suite bootstraps itself on the first
+//!   machine that has AOT artifacts; CI diffs every run after that.
+//!
+//! Needs artifacts (`make artifacts`); skips gracefully without them,
+//! like every PJRT-dependent test.
+
+use heroes::baselines::{make_strategy, Strategy};
+use heroes::config::{ExperimentConfig, QuorumKnob, Scale};
+use heroes::coordinator::env::FlEnv;
+use heroes::coordinator::quorum_ctl::QuorumPolicy;
+use heroes::coordinator::round::RoundDriver;
+use heroes::coordinator::RoundReport;
+use heroes::runtime::{EnginePool, Manifest};
+use heroes::simulation::Scenario;
+use heroes::util::json::Json;
+use heroes::util::rng::Rng;
+use std::path::PathBuf;
+
+fn pool_or_skip() -> Option<EnginePool> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(EnginePool::new(Manifest::load(&dir).unwrap(), 2).unwrap())
+}
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+/// The pinned run shape: tiny fleet, 2 rounds, eval every round.
+fn tiny_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("cnn", Scale::Smoke);
+    cfg.n_clients = 8;
+    cfg.k_per_round = 4;
+    cfg.samples_per_client = 32;
+    cfg.test_samples = 128;
+    cfg.tau_default = 3;
+    cfg.tau_max = 12;
+    cfg.rounds = 2;
+    cfg.eval_every = 1;
+    cfg.workers = 2;
+    cfg
+}
+
+/// An f64 pinned exactly: bit pattern + readable value.
+fn pinned_f64(v: f64) -> Json {
+    Json::obj(vec![
+        ("bits", Json::Str(format!("{:016x}", v.to_bits()))),
+        ("value", Json::Num(v)),
+    ])
+}
+
+/// Fingerprint one report series: per eval point (every round here) the
+/// cumulative simulated clock, cumulative traffic and the K the round
+/// actually aggregated.
+fn fingerprint(reports: &[RoundReport]) -> Json {
+    let mut sim_time = 0.0f64;
+    let mut bytes = 0u64;
+    let rows = reports
+        .iter()
+        .map(|r| {
+            sim_time += r.round_time;
+            bytes += (r.down_bytes + r.up_bytes) as u64;
+            Json::obj(vec![
+                ("round", Json::from(r.round)),
+                ("sim_time", pinned_f64(sim_time)),
+                ("traffic_gb", pinned_f64(bytes as f64 / 1e9)),
+                ("chosen_k", Json::from(r.completion_times.len())),
+            ])
+        })
+        .collect();
+    Json::Arr(rows)
+}
+
+/// Run `scheme` for the pinned 2 rounds under `scenario`/`quorum` and
+/// fingerprint the series.
+fn run_fingerprint(pool: &EnginePool, scheme: &str, scenario: &str, quorum: QuorumKnob) -> Json {
+    let mut cfg = tiny_cfg();
+    cfg.scenario = Scenario::parse(scenario).unwrap();
+    cfg.quorum = quorum;
+    let mut env = FlEnv::build(pool, cfg.clone()).unwrap();
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut strategy = make_strategy(scheme, &env.info, &cfg, &mut rng).unwrap();
+    let driver = RoundDriver::new(cfg.workers);
+    let reports = if let Some(mut policy) = QuorumPolicy::from_config(&cfg) {
+        driver
+            .run_quorum(pool, &mut env, strategy.as_mut(), cfg.rounds, &mut policy, None)
+            .unwrap()
+    } else {
+        (0..cfg.rounds).map(|_| strategy.run_round(&mut env).unwrap()).collect()
+    };
+    fingerprint(&reports)
+}
+
+#[test]
+fn golden_traces_pin_the_round_pipeline() {
+    let Some(pool) = pool_or_skip() else { return };
+    let regen = std::env::var("HEROES_REGEN_GOLDEN").ok().as_deref() == Some("1");
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    // Self-bootstrap is allowed only when NO goldens exist yet (the
+    // growth container could not generate the seed baseline). Once any
+    // golden is committed, a missing file means accidental deletion —
+    // failing there, instead of silently re-pinning current behavior,
+    // is the whole point of the harness.
+    let bootstrap = !std::fs::read_dir(&dir).unwrap().any(|e| {
+        e.map(|e| e.path().extension().and_then(|x| x.to_str()) == Some("json"))
+            .unwrap_or(false)
+    });
+
+    for scheme in ["heroes", "fedavg", "flanc"] {
+        // one stable synchronous run and one churned adaptive-quorum run
+        // per scheme family — the two pipelines the acceptance criteria
+        // care about
+        let doc = Json::obj(vec![
+            ("scheme", Json::from(scheme)),
+            ("stable", run_fingerprint(&pool, scheme, "stable", QuorumKnob::Off)),
+            (
+                "churn_quorum_auto",
+                run_fingerprint(&pool, scheme, "correlated-dropout", QuorumKnob::Auto),
+            ),
+        ]);
+        let path = dir.join(format!("{scheme}.json"));
+        if regen || (bootstrap && !path.exists()) {
+            std::fs::write(&path, doc.to_string_pretty()).unwrap();
+            eprintln!(
+                "{} golden trace {}",
+                if regen { "regenerated" } else { "pinned new" },
+                path.display()
+            );
+            continue;
+        }
+        assert!(
+            path.exists(),
+            "golden trace {} is missing while sibling goldens exist — restore it from git, \
+             or regenerate the whole set with HEROES_REGEN_GOLDEN=1 and review the diff",
+            path.display()
+        );
+        let want = heroes::util::json::parse_file(&path).unwrap();
+        assert_eq!(
+            doc, want,
+            "{scheme}: golden trace drifted from {} — if the change is intentional, \
+             regenerate with HEROES_REGEN_GOLDEN=1 and review the diff",
+            path.display()
+        );
+    }
+}
+
+#[test]
+fn fingerprints_are_reproducible_within_a_process() {
+    // the harness's own determinism: two identical runs fingerprint
+    // identically (otherwise golden diffs would be noise)
+    let Some(pool) = pool_or_skip() else { return };
+    let a = run_fingerprint(&pool, "fedavg", "correlated-dropout", QuorumKnob::Auto);
+    let b = run_fingerprint(&pool, "fedavg", "correlated-dropout", QuorumKnob::Auto);
+    assert_eq!(a, b, "golden fingerprints must be reproducible");
+}

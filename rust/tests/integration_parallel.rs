@@ -22,14 +22,14 @@
 //! otherwise.
 
 use heroes::baselines::{make_strategy, Strategy};
-use heroes::config::{ExperimentConfig, Scale};
+use heroes::config::{DropoutPolicy, ExperimentConfig, Scale};
 use heroes::coordinator::env::FlEnv;
 use heroes::coordinator::quorum_ctl::{QuorumController, QuorumCtlCfg, QuorumPolicy};
 use heroes::coordinator::round::RoundDriver;
 use heroes::coordinator::RoundReport;
 use heroes::model::ComposedGlobal;
 use heroes::runtime::{Engine, EnginePool, Manifest};
-use heroes::simulation::{ClientDevice, DeviceClass};
+use heroes::simulation::{ClientDevice, DeviceClass, Scenario, ScenarioError};
 use heroes::util::rng::Rng;
 
 fn pool_or_skip(engines: usize) -> Option<EnginePool> {
@@ -458,6 +458,210 @@ fn two_threads_execute_on_one_engine_concurrently() {
     for r in results {
         assert_eq!(r, reference, "concurrent execution must match serial");
     }
+}
+
+#[test]
+fn scenario_stable_is_byte_identical_to_default() {
+    // The acceptance pin: `--scenario stable` (however the dropout policy
+    // is set) schedules nothing — its runs reproduce the default path's
+    // report series and final model byte for byte, through the
+    // overlapped pipeline and the quorum pipeline alike.
+    let Some(shared) = pool_or_skip(1) else { return };
+    let Some(pooled) = pool_or_skip(4) else { return };
+    for scheme in ["heroes", "fedavg", "flanc"] {
+        let rounds = 3;
+        let (default_run, eval_default) = run_reports(&shared, &tiny_cfg(1), scheme, rounds);
+        for policy in [DropoutPolicy::Survivors, DropoutPolicy::Error] {
+            let mut cfg = tiny_cfg(4);
+            cfg.scenario = Scenario::parse("stable").unwrap();
+            cfg.dropout_policy = policy;
+            let (explicit, eval_explicit) = run_reports_overlapped(&pooled, &cfg, scheme, rounds);
+            assert_eq!(
+                default_run, explicit,
+                "{scheme}: --scenario stable ({policy:?}) must not change rounds"
+            );
+            assert_eq!(
+                eval_default, eval_explicit,
+                "{scheme}: --scenario stable ({policy:?}) changed the final model"
+            );
+        }
+        let mut cfg = tiny_cfg(4);
+        cfg.scenario = Scenario::parse("stable").unwrap();
+        let (quorum, eval_quorum) =
+            run_reports_policy(&pooled, &cfg, scheme, rounds, QuorumPolicy::fixed(4, 1.0), |_| {});
+        assert_eq!(default_run, quorum, "{scheme}: stable must be inert on the quorum path");
+        assert_eq!(eval_default, eval_quorum);
+    }
+}
+
+#[test]
+fn dropout_of_non_quorum_client_changes_nothing() {
+    // The acceptance pin: a mid-round dropout of a client outside the
+    // quorum changes neither the merged model bytes nor the run's exit
+    // status. Full participation + skewed fleet puts client 0 (the
+    // ~4.5× straggler) outside every K=4-of-8 quorum; dropping it in the
+    // last round — where its late merge would fall past the run end
+    // anyway — must leave the whole series and the final model
+    // byte-identical.
+    let Some(shared) = pool_or_skip(1) else { return };
+    let Some(pooled) = pool_or_skip(4) else { return };
+    let full = |workers: usize| {
+        let mut c = tiny_cfg(workers);
+        c.k_per_round = c.n_clients;
+        c
+    };
+    let rounds = 4;
+    let quorum4 = || QuorumPolicy::fixed(4, 1.0);
+    for scheme in ["heroes", "fedavg"] {
+        let (base, eval_base) =
+            run_reports_policy(&shared, &full(1), scheme, rounds, quorum4(), make_skewed);
+        let mut cfg = full(1);
+        cfg.scenario = Scenario::Pinned { round: rounds - 1, client: 0, frac: 0.5 };
+        let (churn, eval_churn) =
+            run_reports_policy(&shared, &cfg, scheme, rounds, quorum4(), make_skewed);
+        assert_eq!(base, churn, "{scheme}: a non-quorum dropout must not change any report");
+        assert_eq!(eval_base, eval_churn, "{scheme}: a non-quorum dropout changed the model");
+
+        // and the churned run is seed-deterministic for any worker count
+        let mut cfg4 = full(4);
+        cfg4.scenario = cfg.scenario;
+        let (churn4, eval4) =
+            run_reports_policy(&pooled, &cfg4, scheme, rounds, quorum4(), make_skewed);
+        assert_eq!(churn, churn4, "{scheme}: churned rounds must not depend on worker count");
+        assert_eq!(eval_churn, eval4);
+    }
+}
+
+#[test]
+fn churn_that_breaks_quorum_feasibility_is_a_typed_error() {
+    let Some(pool) = pool_or_skip(2) else { return };
+    // static K = the whole cohort, but one member vanishes in round 1:
+    // the barrier can never fill — a typed QuorumInfeasible, not a hang
+    // or a silent degrade
+    let mut cfg = tiny_cfg(2);
+    cfg.k_per_round = cfg.n_clients; // full participation: client 0 is in every round
+    cfg.scenario = Scenario::Pinned { round: 1, client: 0, frac: 0.3 };
+    let mut env = FlEnv::build(&pool, cfg.clone()).unwrap();
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut s = make_strategy("fedavg", &env.info, &cfg, &mut rng).unwrap();
+    let mut policy = QuorumPolicy::fixed(cfg.n_clients, 1.0);
+    let err = RoundDriver::new(cfg.workers)
+        .run_quorum(&pool, &mut env, s.as_mut(), 3, &mut policy, None)
+        .unwrap_err();
+    match err.downcast_ref::<ScenarioError>() {
+        Some(&ScenarioError::QuorumInfeasible { round, required, survivors }) => {
+            assert_eq!((round, required, survivors), (1, 8, 7), "wrong infeasibility facts");
+        }
+        other => panic!("expected QuorumInfeasible, got {other:?} ({err})"),
+    }
+
+    // availability churn starves static K the same way: flash-crowd
+    // windows keep the crowd third away from rounds 0..8, so a demanded
+    // K = 8 can never fill from the ~5 attending clients — typed error,
+    // not a silent clamp to the thinned cohort
+    let mut cfg = tiny_cfg(2);
+    cfg.k_per_round = cfg.n_clients;
+    cfg.scenario = Scenario::parse("flash-crowd-churn").unwrap();
+    let mut env = FlEnv::build(&pool, cfg.clone()).unwrap();
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut s = make_strategy("fedavg", &env.info, &cfg, &mut rng).unwrap();
+    let mut policy = QuorumPolicy::fixed(cfg.n_clients, 1.0);
+    let err = RoundDriver::new(cfg.workers)
+        .run_quorum(&pool, &mut env, s.as_mut(), 2, &mut policy, None)
+        .unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<ScenarioError>(),
+            Some(&ScenarioError::QuorumInfeasible { round: 0, required: 8, .. })
+        ),
+        "an availability-thinned cohort must starve static K with a typed error: {err}"
+    );
+
+    // a round that drops everyone is EmptySurvivors on the quorum path...
+    let mut cfg = tiny_cfg(1);
+    cfg.scenario = Scenario::CorrelatedDropout { base: 1.0, burst_every: 0, burst_rate: 1.0 };
+    let mut env = FlEnv::build(&pool, cfg.clone()).unwrap();
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut s = make_strategy("fedavg", &env.info, &cfg, &mut rng).unwrap();
+    let mut policy = QuorumPolicy::fixed(2, 1.0);
+    let err = RoundDriver::new(1)
+        .run_quorum(&pool, &mut env, s.as_mut(), 2, &mut policy, None)
+        .unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<ScenarioError>(),
+        Some(&ScenarioError::EmptySurvivors { round: 0 }),
+        "unexpected error: {err}"
+    );
+
+    // ...and on the full-barrier path under the survivors policy, while
+    // the error policy surfaces the dropout itself
+    let mut env = FlEnv::build(&pool, cfg.clone()).unwrap();
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut s = make_strategy("fedavg", &env.info, &cfg, &mut rng).unwrap();
+    let err = s.run_round(&mut env).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<ScenarioError>(),
+        Some(&ScenarioError::EmptySurvivors { round: 0 }),
+        "unexpected error: {err}"
+    );
+    let mut cfg_err = cfg.clone();
+    cfg_err.dropout_policy = DropoutPolicy::Error;
+    let mut env = FlEnv::build(&pool, cfg_err.clone()).unwrap();
+    let mut rng = Rng::new(cfg_err.seed ^ 0x5EED);
+    let mut s = make_strategy("fedavg", &env.info, &cfg_err, &mut rng).unwrap();
+    let err = s.run_round(&mut env).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<ScenarioError>(),
+            Some(&ScenarioError::MidRoundDropout { round: 0, .. })
+        ),
+        "unexpected error: {err}"
+    );
+}
+
+#[test]
+fn churn_catalog_runs_are_deterministic_for_any_worker_count() {
+    // Every catalog scenario, through the adaptive quorum pipeline and
+    // the synchronous path alike, is seed-deterministic for any
+    // --workers/--pool — schedules are pure functions of
+    // (scenario, seed, round, client).
+    let Some(shared) = pool_or_skip(1) else { return };
+    let Some(pooled) = pool_or_skip(4) else { return };
+    for name in ["diurnal-bandwidth", "flash-crowd-churn", "correlated-dropout"] {
+        let mk = |workers: usize| {
+            let mut c = tiny_cfg(workers);
+            c.scenario = Scenario::parse(name).unwrap();
+            c
+        };
+        let rounds = 4;
+        let (a, ea) = run_reports_policy(&shared, &mk(1), "heroes", rounds, auto_policy(), |_| {});
+        let (b, eb) = run_reports_policy(&pooled, &mk(4), "heroes", rounds, auto_policy(), |_| {});
+        assert_eq!(a, b, "{name}: churn rounds must not depend on worker count");
+        assert_eq!(ea, eb, "{name}: final model must not depend on worker count");
+        let (s1, es1) = run_reports(&shared, &mk(1), "heroes", rounds);
+        let (s4, es4) = run_reports(&pooled, &mk(4), "heroes", rounds);
+        assert_eq!(s1, s4, "{name}: sync churn rounds must not depend on worker count");
+        assert_eq!(es1, es4);
+    }
+
+    // the survivors policy on the barrier path: a deterministic pinned
+    // dropout aggregates one fewer completion, identically across
+    // worker counts and exiting Ok
+    let mut cfg1 = tiny_cfg(1);
+    cfg1.k_per_round = cfg1.n_clients;
+    cfg1.scenario = Scenario::Pinned { round: 1, client: 2, frac: 0.4 };
+    let mut cfg4 = cfg1.clone();
+    cfg4.workers = 4;
+    let (p1, ep1) = run_reports(&shared, &cfg1, "heroes", 3);
+    let (p4, ep4) = run_reports(&pooled, &cfg4, "heroes", 3);
+    assert_eq!(p1, p4, "survivors re-plan must not depend on worker count");
+    assert_eq!(ep1, ep4);
+    assert_eq!(
+        p1[1].completion_times.len(),
+        cfg1.n_clients - 1,
+        "the dropped client must be missing from round 1's aggregation"
+    );
+    assert_eq!(p1[0].completion_times.len(), cfg1.n_clients, "round 0 is untouched");
 }
 
 #[test]

@@ -1,17 +1,21 @@
 //! Property-based tests (prop-lite) over the coordinator's pure logic:
 //! block ledger balance, round-planner invariants, aggregation
-//! conservation, partitioner correctness. None of these need artifacts.
+//! conservation, partitioner correctness, and the scenario engine's
+//! schedule invariants (trace bounds, window monotonicity, schedule
+//! purity, non-quorum-dropout merge invariance). None of these need
+//! artifacts.
 
 use heroes::coordinator::aggregate::{ComposedAccumulator, DenseAccumulator};
 use heroes::coordinator::assignment::{plan_round, ClientStatus, ControllerCfg};
 use heroes::coordinator::frequency::{completion_time, tau_bounds, Estimates};
 use heroes::coordinator::ledger::BlockLedger;
 use heroes::coordinator::quorum_ctl::{QuorumController, QuorumCtlCfg, QuorumSignals};
-use heroes::coordinator::round::staleness_weight;
+use heroes::coordinator::round::{quorum_members_surviving, staleness_weight};
 use heroes::data::partition::{gamma_partition, phi_partition};
 use heroes::model::tests_support::toy_info;
 use heroes::model::{ComposedGlobal, DenseGlobal};
-use heroes::simulation::LinkSample;
+use heroes::simulation::network::{MBIT, MIN_BANDWIDTH_SCALE};
+use heroes::simulation::{LinkSample, NetworkModel, Scenario, SCENARIO_CATALOG};
 use heroes::tensor::Tensor;
 use heroes::util::prop::check;
 use heroes::util::rng::Rng;
@@ -412,6 +416,7 @@ fn prop_adaptive_k_stays_in_range() {
                 rng.uniform_in(0.0, 2.0),   // beta_sq
                 rng.uniform_in(0.1, 10.0),  // l
                 rng.uniform_in(0.0, 2.0),   // spread_index
+                rng.uniform_in(0.0, 1.0),   // dropout_rate
             ];
             (completions, knobs, 1 + rng.below(8)) // k_min
         },
@@ -428,6 +433,7 @@ fn prop_adaptive_k_stays_in_range() {
                 beta_sq: knobs[3],
                 l: knobs[4],
                 spread_index: knobs[5],
+                dropout_rate: knobs[6],
             };
             let lo = (*k_min).clamp(1, n);
             for _ in 0..5 {
@@ -518,6 +524,7 @@ fn prop_adaptive_collapses_without_a_straggler_tail() {
                 beta_sq: s[1],
                 l: s[2],
                 spread_index: s[3],
+                ..QuorumSignals::default()
             };
             let d = ctl.decide(completions, &sig);
             if d.k != completions.len() {
@@ -526,6 +533,192 @@ fn prop_adaptive_collapses_without_a_straggler_tail() {
                     d.k,
                     completions.len()
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scenario_traces_stay_within_declared_bounds() {
+    // For any catalog scenario and seed: every trace multiplier lands in
+    // [MIN_BANDWIDTH_SCALE, 1], and a link sampled under it stays inside
+    // the scaled band — a trace can starve the WAN, never corrupt it.
+    check(
+        61,
+        60,
+        |rng| (rng.next_u64(), rng.below(SCENARIO_CATALOG.len())),
+        |&(seed, which)| {
+            let s = Scenario::parse(SCENARIO_CATALOG[which]).map_err(|e| e.to_string())?;
+            let Some(trace) = s.bandwidth_trace(seed) else {
+                return Ok(()); // scenario does not drift bandwidth
+            };
+            let model = NetworkModel::default();
+            let mut rng = heroes::util::rng::Rng::new(seed ^ 0xBEEF);
+            for round in 0..2 * s.period_rounds() {
+                let m = trace.scale(round);
+                if !(MIN_BANDWIDTH_SCALE..=1.0).contains(&m) {
+                    return Err(format!("round {round}: multiplier {m} escaped the band"));
+                }
+                let link = model.sample_scaled(&mut rng, m);
+                let (lo, hi) = (model.up_lo_mbps * MBIT * m, model.up_hi_mbps * MBIT * m);
+                // tolerance pads the band edges against multiplication
+                // rounding (the sample scales after drawing)
+                if link.up_bps < lo * (1.0 - 1e-12) || link.up_bps > hi * (1.0 + 1e-12) {
+                    return Err(format!(
+                        "round {round}: up {} outside scaled band [{lo}, {hi}]",
+                        link.up_bps
+                    ));
+                }
+                if !link.upload_time(1_000_000).is_finite() {
+                    return Err("scaled link leaked a non-finite transfer time".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scenario_availability_windows_are_monotone_on_the_clock() {
+    // Availability is a single cyclic window per period on the round
+    // axis (rounds are monotone on the virtual clock): at most two
+    // transitions per period, and the schedule repeats exactly.
+    check(
+        67,
+        60,
+        |rng| (rng.next_u64(), rng.below(SCENARIO_CATALOG.len()), rng.below(40)),
+        |&(seed, which, client)| {
+            let s = Scenario::parse(SCENARIO_CATALOG[which]).map_err(|e| e.to_string())?;
+            let period = s.period_rounds();
+            let window: Vec<bool> = (0..period).map(|r| s.available(seed, client, r)).collect();
+            let transitions =
+                (0..period).filter(|&r| window[r] != window[(r + 1) % period]).count();
+            if transitions > 2 {
+                return Err(format!(
+                    "client {client}: {transitions} transitions in one {period}-round period"
+                ));
+            }
+            for r in 0..period {
+                if s.available(seed, client, r + period) != window[r] {
+                    return Err(format!("round {r}: schedule is not {period}-round periodic"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scenario_schedule_is_pure_for_any_evaluation_order() {
+    // Same seed ⇒ identical schedule for any --workers/--pool: every
+    // schedule quantity is a pure function of (scenario, seed, round,
+    // client), so recomputing entries in a shuffled order reproduces the
+    // forward sweep exactly — there is no hidden cursor for a worker
+    // count to perturb.
+    check(
+        71,
+        40,
+        |rng| (rng.next_u64(), rng.below(SCENARIO_CATALOG.len()), rng.next_u64()),
+        |&(seed, which, shuffle_seed)| {
+            let s = Scenario::parse(SCENARIO_CATALOG[which]).map_err(|e| e.to_string())?;
+            let cells: Vec<(usize, usize)> =
+                (0..30).flat_map(|r| (0..8).map(move |c| (r, c))).collect();
+            let forward: Vec<_> = cells
+                .iter()
+                .map(|&(r, c)| (s.available(seed, c, r), s.dropout(seed, r, c)))
+                .collect();
+            let mut order: Vec<usize> = (0..cells.len()).collect();
+            heroes::util::rng::Rng::new(shuffle_seed).shuffle(&mut order);
+            for &i in &order {
+                let (r, c) = cells[i];
+                let again = (s.available(seed, c, r), s.dropout(seed, r, c));
+                if again != forward[i] {
+                    return Err(format!(
+                        "(round {r}, client {c}): schedule changed on re-evaluation"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dropout_of_non_quorum_member_never_changes_the_merge() {
+    // The quorum member set — and therefore the merged bytes, which are
+    // a function of exactly the members' updates (aggregation props
+    // above) — is invariant under dropping any client outside it.
+    check(
+        73,
+        120,
+        |rng| {
+            let n = 2 + rng.below(18);
+            let completions: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.1, 30.0)).collect();
+            (completions, rng.next_u64(), 1 + rng.below(8))
+        },
+        |(completions, mask_seed, k)| {
+            let n = completions.len();
+            if n == 0 {
+                return Ok(()); // shrinking artifact; rejected upstream
+            }
+            let k = (*k).clamp(1, n);
+            let none = vec![false; n];
+            let members = quorum_members_surviving(completions, &none, k);
+            // drop a random subset of the NON-members only
+            let mut rng = heroes::util::rng::Rng::new(*mask_seed);
+            let mut mask = vec![false; n];
+            for i in 0..n {
+                if !members.contains(&i) && rng.uniform() < 0.5 {
+                    mask[i] = true;
+                }
+            }
+            let with_churn = quorum_members_surviving(completions, &mask, k);
+            if with_churn != members {
+                return Err(format!(
+                    "members changed under non-member churn: {members:?} -> {with_churn:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_adaptive_k_monotone_in_dropout_rate() {
+    // At fixed α, the controller's K is monotone non-decreasing in the
+    // observed dropout rate: churn consumes the staleness budget like
+    // realized losses, so the controller can only demand more synchrony.
+    check(
+        79,
+        120,
+        |rng| {
+            let n = 2 + rng.below(18);
+            let completions: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.1, 30.0)).collect();
+            (completions, rng.uniform_in(0.0, 2.0))
+        },
+        |(completions, alpha)| {
+            if completions.is_empty() {
+                return Ok(()); // shrinking artifact; rejected upstream
+            }
+            let mut cfg = QuorumCtlCfg::new(0.8, 1, 0.5, *alpha);
+            cfg.alpha_gain = 0.0; // isolate the K rule
+            let mut prev = 0usize;
+            for step in 0..=10 {
+                let sig = QuorumSignals {
+                    dropout_rate: step as f64 * 0.05,
+                    ..QuorumSignals::default()
+                };
+                let mut ctl = QuorumController::new(cfg);
+                let d = ctl.decide(completions, &sig);
+                if d.k < prev {
+                    return Err(format!(
+                        "K shrank from {prev} to {} as the dropout rate rose to {}",
+                        d.k,
+                        step as f64 * 0.05
+                    ));
+                }
+                prev = d.k;
             }
             Ok(())
         },
