@@ -2,7 +2,9 @@
 //! no criterion in the offline vendor set — see util::bench).
 //!
 //! These are the quantities the §Perf pass tracks: PJRT dispatch latency,
-//! block gather/scatter, aggregation, round planning, data synthesis.
+//! block gather/scatter, aggregation, round planning, data synthesis,
+//! and the lazy population model's O(cohort) round cost across
+//! population scales.
 
 use heroes::baselines::{DenseServer, Strategy};
 use heroes::config::{ExperimentConfig, QuorumKnob, Scale};
@@ -18,7 +20,10 @@ use heroes::data::synth_image::ImageGen;
 use heroes::model::ComposedGlobal;
 use heroes::runtime::{EnginePool, EngineStats, Manifest, Value};
 use heroes::experiments::{run_scheme, StopCondition};
-use heroes::simulation::{ClientDevice, DeviceClass, LinkSample, Scenario};
+use heroes::simulation::{
+    ClientDevice, DeviceClass, LazyCache, LinkSample, NetworkModel, Population, PopulationSpec,
+    Scenario,
+};
 use heroes::tensor::blocks::{gather_blocks, scatter_blocks_add};
 use heroes::tensor::Tensor;
 use heroes::util::bench::Bench;
@@ -57,6 +62,84 @@ fn main() {
 
     let gen = ImageGen::cifar_twin();
     b.run("data/synthesize 64 images", |i| gen.generate(64, i, &mut Rng::new(i)));
+
+    // ---- population scale: O(cohort) round cost from 1e3 to 1e6 ----
+    // The lazy population model's acceptance bench: per-round planning
+    // work (cohort sampling + per-member device/link/shard derivations
+    // through a bounded cache) must stay flat as the population grows
+    // 1000x — nothing on this path may enumerate clients. Emitted as
+    // BENCH_population.json; a super-linear blow-up (worst scale > 8x
+    // the smallest) fails the bench, which CI runs as a named step.
+    let net = NetworkModel::default();
+    let pop_rounds = 50usize;
+    let pop_k = 16usize;
+    let mut pop_entries: Vec<(&str, Json)> = Vec::new();
+    let mut per_round: Vec<f64> = Vec::new();
+    for (label, n) in
+        [("1e3", 1_000usize), ("1e4", 10_000), ("1e5", 100_000), ("1e6", 1_000_000)]
+    {
+        let pop = Population::new(PopulationSpec::default_mix(n, 42));
+        let mut cache: LazyCache<u64> = LazyCache::new(4 * pop_k);
+        let mut sink = 0u64;
+        let round_work = |round: usize, cache: &mut LazyCache<u64>, sink: &mut u64| {
+            let cohort = pop.sample_cohort(round, pop_k, |_| true);
+            assert_eq!(cohort.len(), pop_k, "population {n}: short cohort");
+            for &c in &cohort {
+                let q = pop.flops(c, round);
+                let link = net.sample(&mut pop.link_rng(c, round));
+                let spec = pop.shard_spec(c, 60);
+                *sink ^= cache.get_or_insert_with(c, || spec.seed ^ spec.quota as u64);
+                *sink ^= q.to_bits() ^ link.up_bps.to_bits();
+            }
+        };
+        // one untimed warmup round per scale (allocator + map warm-up)
+        round_work(pop_rounds, &mut cache, &mut sink);
+        let t0 = std::time::Instant::now();
+        for round in 0..pop_rounds {
+            round_work(round, &mut cache, &mut sink);
+        }
+        let secs = t0.elapsed().as_secs_f64() / pop_rounds as f64;
+        std::hint::black_box(sink);
+        let st = cache.stats().clone();
+        println!(
+            "population/round K={pop_k} n={label:<4} {:9.2} µs/round, \
+             {} materializations, peak resident {}",
+            1e6 * secs,
+            st.materializations,
+            st.peak_resident
+        );
+        per_round.push(secs);
+        pop_entries.push((
+            label,
+            Json::obj(vec![
+                ("clients", Json::Num(n as f64)),
+                ("round_secs", Json::Num(secs)),
+                ("materializations", Json::Num(st.materializations as f64)),
+                ("peak_resident", Json::Num(st.peak_resident as f64)),
+                ("evictions", Json::Num(st.evictions as f64)),
+            ]),
+        ));
+    }
+    let floor = per_round.iter().copied().fold(f64::INFINITY, f64::min);
+    let worst = per_round.iter().copied().fold(0.0f64, f64::max);
+    let ratio = worst / floor.max(1e-9);
+    write_snap(
+        "BENCH_population.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("population_scale_round_cost".into())),
+            ("k_per_round", Json::Num(pop_k as f64)),
+            ("rounds", Json::Num(pop_rounds as f64)),
+            ("worst_over_best", Json::Num(ratio)),
+            ("scales", Json::obj(pop_entries)),
+        ]),
+    );
+    if ratio > 8.0 {
+        eprintln!(
+            "population/round cost is not flat: worst scale is {ratio:.1}x the best \
+             (bound 8x) — an O(population) step leaked onto the round path"
+        );
+        std::process::exit(1);
+    }
 
     // manifest-dependent paths
     let dir = Manifest::default_dir();
@@ -297,17 +380,6 @@ fn main() {
         if adaptive <= best_virt { " — adaptive wins/ties" } else { "" }
     );
 
-    // snapshots land next to the experiment outputs (`heroes exp` writes
-    // results/ too); a read-only tree degrades to a warning, not an abort
-    let write_snap = |file: &str, out: &Json| {
-        let snap_path = std::path::Path::new("results").join(file);
-        match std::fs::create_dir_all("results")
-            .and_then(|()| std::fs::write(&snap_path, out.to_string_pretty()))
-        {
-            Ok(()) => println!("  -> {}", snap_path.display()),
-            Err(e) => eprintln!("  (could not write {}: {e})", snap_path.display()),
-        }
-    };
     let pick = |names: &[&str]| {
         let entries: Vec<(&str, Json)> = snapshot
             .iter()
@@ -417,4 +489,16 @@ fn main() {
         st.executions,
         1e3 * st.execute_secs / st.executions.max(1) as f64
     );
+}
+
+/// Snapshots land next to the experiment outputs (`heroes exp` writes
+/// results/ too); a read-only tree degrades to a warning, not an abort.
+fn write_snap(file: &str, out: &Json) {
+    let snap_path = std::path::Path::new("results").join(file);
+    match std::fs::create_dir_all("results")
+        .and_then(|()| std::fs::write(&snap_path, out.to_string_pretty()))
+    {
+        Ok(()) => println!("  -> {}", snap_path.display()),
+        Err(e) => eprintln!("  (could not write {}: {e})", snap_path.display()),
+    }
 }

@@ -15,8 +15,10 @@
 use crate::baselines::Strategy;
 use crate::config::ExperimentConfig;
 use crate::coordinator::aggregate::DenseAccumulator;
+use crate::coordinator::assignment::cohort_statuses;
 use crate::coordinator::env::FlEnv;
 use crate::coordinator::frequency::completion_time;
+use crate::coordinator::hierarchy::HierarchyCfg;
 use crate::coordinator::round::{
     collect_quorum_round, collect_round, LocalTask, QuorumBatch, RoundDriver, TaskOutcome,
 };
@@ -84,7 +86,7 @@ impl DenseServer {
             scheme,
             width,
             tau,
-            driver: RoundDriver::new(cfg.workers),
+            driver: RoundDriver::new(cfg.workers).with_hierarchy(HierarchyCfg::from_config(cfg)),
             family: cfg.family.clone(),
             lr: cfg.lr,
             lr_decay_rounds: cfg.lr_decay_rounds,
@@ -148,7 +150,7 @@ impl Strategy for DenseServer {
             return Err(anyhow!("plan_ahead called twice without take_tasks"));
         }
         let clients = env.sample_clients();
-        let statuses: Vec<_> = clients.iter().map(|&c| env.status(c)).collect();
+        let statuses = cohort_statuses(env, &clients);
 
         // widths + cost components
         let work: Vec<(usize, usize, f64, f64)> = statuses

@@ -11,9 +11,10 @@
 
 use crate::baselines::Strategy;
 use crate::config::ExperimentConfig;
-use crate::coordinator::assignment::assign_width;
+use crate::coordinator::assignment::{assign_width, cohort_statuses};
 use crate::coordinator::env::FlEnv;
 use crate::coordinator::frequency::completion_time;
+use crate::coordinator::hierarchy::HierarchyCfg;
 use crate::coordinator::round::{
     collect_quorum_round, collect_round, LocalTask, QuorumBatch, RoundDriver, TaskOutcome,
 };
@@ -68,7 +69,7 @@ impl FlancServer {
             bases,
             coeffs,
             bias,
-            driver: RoundDriver::new(cfg.workers),
+            driver: RoundDriver::new(cfg.workers).with_hierarchy(HierarchyCfg::from_config(cfg)),
             family: cfg.family.clone(),
             lr: cfg.lr,
             lr_decay_rounds: cfg.lr_decay_rounds,
@@ -157,7 +158,7 @@ impl Strategy for FlancServer {
             return Err(anyhow!("plan_ahead called twice without take_tasks"));
         }
         let clients = env.sample_clients();
-        let statuses: Vec<_> = clients.iter().map(|&c| env.status(c)).collect();
+        let statuses = cohort_statuses(env, &clients);
         let work = statuses
             .iter()
             .map(|s| {

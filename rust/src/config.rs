@@ -109,6 +109,36 @@ impl DropoutPolicy {
     }
 }
 
+/// The `--population` knob: how `FlEnv` holds the client world.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PopulationMode {
+    /// enumerate every client at build time (fleet + full dataset +
+    /// partition) — the historical default, byte-identical to itself
+    Eager,
+    /// the parametric `simulation::population` world: clients are priors,
+    /// per-client state is derived from `(seed, client)` on first touch
+    /// and memoized in a bounded cache — O(cohort) round cost and
+    /// resident memory at any population size
+    Lazy,
+}
+
+impl PopulationMode {
+    pub fn parse(s: &str) -> Result<PopulationMode> {
+        match s {
+            "eager" => Ok(PopulationMode::Eager),
+            "lazy" => Ok(PopulationMode::Lazy),
+            other => Err(anyhow!("unknown population mode `{other}` (eager|lazy)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PopulationMode::Eager => "eager",
+            PopulationMode::Lazy => "lazy",
+        }
+    }
+}
+
 /// Full experiment configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -195,6 +225,17 @@ pub struct ExperimentConfig {
     /// mid-round dropout (the quorum path always treats dropped clients
     /// as never-arriving stragglers).
     pub dropout_policy: DropoutPolicy,
+    /// `--population`: eager (default; historical byte-identical world)
+    /// or lazy (parametric population, O(cohort) rounds at millions of
+    /// clients — see `simulation::population`).
+    pub population: PopulationMode,
+    /// `--hierarchy E`: number of edge aggregators between the cohort and
+    /// the parameter server (quorum mode only). 0 or 1 = flat (the
+    /// historical single-level path, byte for byte); E > 1 splits each
+    /// round's cohort round-robin over E edges, each edge closes its own
+    /// sub-quorum and forwards **one** composed update over the backhaul,
+    /// and the root quorums over edge arrivals (`coordinator::hierarchy`).
+    pub hierarchy: usize,
 }
 
 /// The pool-sizing rule, shared by `ExperimentConfig::pool_size` and
@@ -265,6 +306,8 @@ impl ExperimentConfig {
             quorum_floor: 1,
             scenario: Scenario::Stable,
             dropout_policy: DropoutPolicy::Survivors,
+            population: PopulationMode::Eager,
+            hierarchy: 0,
         }
     }
 
@@ -316,6 +359,10 @@ impl ExperimentConfig {
         if let Some(p) = args.get("dropout-policy") {
             self.dropout_policy = DropoutPolicy::parse(p)?;
         }
+        if let Some(p) = args.get("population") {
+            self.population = PopulationMode::parse(p)?;
+        }
+        self.hierarchy = args.get_usize("hierarchy", self.hierarchy)?;
         if let Some(g) = args.get("gamma") {
             self.partition = Partition::Gamma(g.parse().map_err(|_| anyhow!("bad --gamma"))?);
         }
@@ -378,6 +425,15 @@ impl ExperimentConfig {
                 .ok_or_else(|| anyhow!("`dropout_policy` expects a string, got {v}"))?;
             c.dropout_policy = DropoutPolicy::parse(s)?;
         }
+        // JSON parity with the CLI: `"population"` is "eager"|"lazy";
+        // anything else is an error, never a silent fall-back
+        if let Some(v) = j.get("population") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("`population` expects \"eager\" or \"lazy\", got {v}"))?;
+            c.population = PopulationMode::parse(s)?;
+        }
+        c.hierarchy = grab_usize("hierarchy", c.hierarchy);
         if let Some(g) = j.get("gamma").and_then(Json::as_f64) {
             c.partition = Partition::Gamma(g);
         }
@@ -419,6 +475,21 @@ impl ExperimentConfig {
         }
         if self.quorum_floor == 0 {
             return Err(anyhow!("quorum_floor must be at least 1"));
+        }
+        if self.hierarchy > 1 && !self.quorum.is_active() {
+            return Err(anyhow!(
+                "hierarchy {} needs quorum aggregation (--quorum K|auto): edge \
+                 aggregators reuse the quorum/staleness machinery per level",
+                self.hierarchy
+            ));
+        }
+        if self.hierarchy > self.k_per_round {
+            return Err(anyhow!(
+                "hierarchy {} exceeds the cohort size {} — every edge needs at \
+                 least one member",
+                self.hierarchy,
+                self.k_per_round
+            ));
         }
         Ok(())
     }
@@ -615,6 +686,58 @@ mod tests {
                 "{bad_doc} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn population_and_hierarchy_knobs() {
+        let base = ExperimentConfig::preset("cnn", Scale::Smoke);
+        assert_eq!(base.population, PopulationMode::Eager, "population defaults to eager");
+        assert_eq!(base.hierarchy, 0, "hierarchy defaults to flat");
+
+        assert_eq!(PopulationMode::parse("eager").unwrap(), PopulationMode::Eager);
+        assert_eq!(PopulationMode::parse("lazy").unwrap(), PopulationMode::Lazy);
+        assert_eq!(PopulationMode::Lazy.name(), "lazy");
+        assert!(PopulationMode::parse("huge").is_err());
+
+        let args = Args::parse_from(
+            ["--population", "lazy", "--hierarchy", "4", "--quorum", "auto", "--clients", "100000"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&args).unwrap();
+        assert_eq!(c.population, PopulationMode::Lazy);
+        assert_eq!(c.hierarchy, 4);
+        assert_eq!(c.n_clients, 100_000);
+
+        // JSON parity
+        let j = crate::util::json::parse(
+            r#"{"population": "lazy", "hierarchy": 2, "quorum": "auto"}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json("cnn", Scale::Smoke, &j).unwrap();
+        assert_eq!(c.population, PopulationMode::Lazy);
+        assert_eq!(c.hierarchy, 2);
+
+        // malformed values are errors, never a silent fall-back
+        let bad_cli = Args::parse_from(["--population", "huge"].iter().map(|s| s.to_string()));
+        assert!(ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&bad_cli).is_err());
+        for bad_doc in [r#"{"population": 3}"#, r#"{"population": "huge"}"#] {
+            let j = crate::util::json::parse(bad_doc).unwrap();
+            assert!(
+                ExperimentConfig::from_json("cnn", Scale::Smoke, &j).is_err(),
+                "{bad_doc} must be rejected"
+            );
+        }
+
+        // hierarchy without quorum is rejected (edges reuse the quorum
+        // machinery), as is an edge tree wider than the cohort
+        let mut bad = ExperimentConfig::preset("cnn", Scale::Smoke);
+        bad.hierarchy = 2;
+        assert!(bad.validate().is_err());
+        bad.quorum = QuorumKnob::Auto;
+        bad.validate().unwrap();
+        bad.hierarchy = bad.k_per_round + 1;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -87,6 +87,20 @@ pub struct RoundPlan {
     pub h_star: usize,
 }
 
+/// Collect round statuses for exactly the sampled cohort (Alg. 1 line 4).
+///
+/// This is the planner's only status entry point, and it is O(cohort):
+/// one `FlEnv::status` draw per sampled client, nothing per population
+/// member. With `--population lazy` each draw is a keyed RNG derivation,
+/// so planning a K-client round costs the same at 100 clients as at a
+/// million.
+pub fn cohort_statuses(
+    env: &mut crate::coordinator::env::FlEnv,
+    clients: &[usize],
+) -> Vec<ClientStatus> {
+    clients.iter().map(|&c| env.status(c)).collect()
+}
+
 /// Width assignment (Alg. 1 lines 6-11): largest p with μ(p) ≤ μ^max.
 pub fn assign_width(info: &ModelInfo, q_flops: f64, mu_max: f64) -> (usize, f64) {
     let mut p = 1;

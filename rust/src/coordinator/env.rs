@@ -12,35 +12,59 @@
 //! Evaluation, the virtual clock and the traffic meter stay on the
 //! coordinator thread.
 
-use crate::config::{ExperimentConfig, Partition};
+use crate::config::{ExperimentConfig, Partition, PopulationMode};
 use crate::coordinator::assignment::ClientStatus;
 use crate::coordinator::XData;
 use crate::data::loader::{EvalBatches, ImageLoader, TextEvalBatches, TextLoader};
-use crate::data::partition::{gamma_partition, phi_partition};
+use crate::data::partition::{gamma_partition, phi_partition, PartitionPlan};
 use crate::data::synth_image::ImageGen;
-use crate::data::synth_text::TextGen;
+use crate::data::synth_text::{LazyTextGen, TextGen};
 use crate::data::{ImageSet, TextSet};
 use crate::model::{ComposedGlobal, DenseGlobal};
 use crate::runtime::{Engine, EnginePool, InputInfo, Manifest, ModelInfo, Value};
-use crate::simulation::{DeviceFleet, NetworkModel, ScenarioCtl, TrafficMeter, VirtualClock};
+use crate::simulation::{
+    CacheStats, DeviceFleet, LazyCache, NetworkModel, Population, PopulationSpec, ScenarioCtl,
+    TrafficMeter, VirtualClock,
+};
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Shared training data + per-client partitions; `batch_stream` stamps
-/// out owned loaders over it on demand.
+/// out owned loaders over it on demand. The `Lazy*` variants hold no
+/// per-client state at all — a sampled client's shard is synthesized
+/// from its `Population::shard_spec` on first touch and memoized in a
+/// bounded [`LazyCache`] (O(cohort) resident, counters observable via
+/// [`FlEnv::shard_cache_stats`]).
 enum TrainData {
     Image {
         set: Arc<ImageSet>,
-        /// per-client sample indices into `set` (cloned into each stream,
-        /// which shuffles its own copy)
-        parts: Vec<Vec<usize>>,
+        /// per-client shard descriptors into `set` (`client_indices`
+        /// materializes a cohort member's index list on demand; each
+        /// stream shuffles its own copy)
+        plan: PartitionPlan,
     },
     Text {
         /// per-client token streams
         shards: Vec<Arc<Vec<i32>>>,
         seq_len: usize,
+    },
+    /// `--population lazy`, image families: shards are pure functions of
+    /// `(partition prior, shard seed)`
+    LazyImage {
+        gen: ImageGen,
+        seed_protos: u64,
+        partition: Partition,
+        classes: usize,
+        cache: Mutex<LazyCache<Arc<ImageSet>>>,
+    },
+    /// `--population lazy`, text family: style chain + stream per client
+    /// from the frozen global chain
+    LazyText {
+        gen: Arc<LazyTextGen>,
+        seq_len: usize,
+        cache: Mutex<LazyCache<Arc<Vec<i32>>>>,
     },
 }
 
@@ -96,14 +120,28 @@ pub struct FlEnv<'e> {
     train: TrainData,
     test: TestData,
     rng: Rng,
+    /// `--population lazy`: the parametric client world (None on the
+    /// eager path — which then behaves byte-identically to its
+    /// historical self)
+    population: Option<Population>,
+    /// the round index `sample_clients` most recently planned — the key
+    /// for the lazy mode's per-round status draws
+    plan_round: usize,
 }
 
 impl<'e> FlEnv<'e> {
     /// Build the world: synthesize data, partition it per the config,
     /// draw the device fleet. Deterministic in `cfg.seed` (and
     /// independent of the pool size — engines only execute).
+    ///
+    /// `--population lazy` routes to [`Self::build_lazy`] instead: no
+    /// per-client state is enumerated, so build cost is O(test split)
+    /// and round cost is O(cohort) at any `n_clients`.
     pub fn build(pool: &'e EnginePool, cfg: ExperimentConfig) -> Result<FlEnv<'e>> {
         cfg.validate()?;
+        if cfg.population == PopulationMode::Lazy {
+            return Self::build_lazy(pool, cfg);
+        }
         let info = pool.manifest().model(&cfg.family)?.clone();
         let mut rng = Rng::new(cfg.seed);
         let mut data_rng = rng.fork(1);
@@ -122,7 +160,7 @@ impl<'e> FlEnv<'e> {
                 let train = Arc::new(gen.generate(n_train, cfg.seed ^ 0xDA7A, &mut data_rng));
                 let test = Arc::new(gen.generate(n_test, cfg.seed ^ 0xDA7A, &mut data_rng));
                 let labels = &train.labels;
-                let parts = match cfg.partition {
+                let plan = match cfg.partition {
                     Partition::Gamma(g) => gamma_partition(
                         labels, info.classes, cfg.n_clients, cfg.samples_per_client, g, &mut data_rng,
                     ),
@@ -137,7 +175,7 @@ impl<'e> FlEnv<'e> {
                         return Err(anyhow!("natural partition is text-only"));
                     }
                 };
-                (TrainData::Image { set: train, parts }, TestData::Image(test))
+                (TrainData::Image { set: train, plan }, TestData::Image(test))
             }
             InputInfo::Text { seq_len, .. } => {
                 let gen = TextGen::shakespeare_twin();
@@ -170,6 +208,91 @@ impl<'e> FlEnv<'e> {
             train,
             test,
             rng: rng.fork(3),
+            population: None,
+            plan_round: 0,
+        })
+    }
+
+    /// Build the `--population lazy` world: a [`Population`] of priors
+    /// instead of an enumerated fleet/dataset. Only the test split is
+    /// synthesized eagerly (from its own keyed RNG — O(test), not
+    /// O(population)); every per-client quantity is derived from
+    /// `(seed, client[, round])` on first touch and shard state is
+    /// memoized in a bounded cache, so resident memory and per-round
+    /// cost are O(cohort) at any `n_clients`.
+    fn build_lazy(pool: &'e EnginePool, cfg: ExperimentConfig) -> Result<FlEnv<'e>> {
+        let info = pool.manifest().model(&cfg.family)?.clone();
+        let population = Population::new(PopulationSpec::default_mix(cfg.n_clients, cfg.seed));
+        // a few cohorts' worth of shards stay resident so overlap/quorum
+        // stragglers re-hit their shard while it is still warm
+        let cache_cap = (4 * cfg.k_per_round).max(32);
+        let (train, test) = match &info.input {
+            InputInfo::Image { .. } => {
+                if matches!(cfg.partition, Partition::Natural) {
+                    return Err(anyhow!("natural partition is text-only"));
+                }
+                let gen = if cfg.family == "resnet" {
+                    ImageGen::imagenet_twin()
+                } else {
+                    ImageGen::cifar_twin()
+                };
+                let n_test = (cfg.test_samples / info.eval_batch).max(1) * info.eval_batch;
+                // same prototype seed as every client shard, so the test
+                // split shares the class structure
+                let mut trng = Rng::new(cfg.seed ^ 0x7E57_DA7A);
+                let test = Arc::new(gen.generate(n_test, cfg.seed ^ 0xDA7A, &mut trng));
+                (
+                    TrainData::LazyImage {
+                        gen,
+                        seed_protos: cfg.seed ^ 0xDA7A,
+                        partition: cfg.partition,
+                        classes: info.classes,
+                        cache: Mutex::new(LazyCache::new(cache_cap)),
+                    },
+                    TestData::Image(test),
+                )
+            }
+            InputInfo::Text { seq_len, .. } => {
+                let gen = Arc::new(TextGen::shakespeare_twin().lazy(cfg.seed ^ 0x7E47));
+                let test_tokens = 4_000.max(cfg.test_samples * (seq_len + 1));
+                let test = Arc::new(TextSet {
+                    vocab: gen.vocab(),
+                    shards: Vec::new(),
+                    test: gen.global_stream(test_tokens, cfg.seed ^ 0x7E57_EEEE),
+                });
+                (
+                    TrainData::LazyText {
+                        gen,
+                        seq_len: *seq_len,
+                        cache: Mutex::new(LazyCache::new(cache_cap)),
+                    },
+                    TestData::Text(test),
+                )
+            }
+        };
+        let network = NetworkModel {
+            up_lo_mbps: cfg.up_mbps.0,
+            up_hi_mbps: cfg.up_mbps.1,
+            down_lo_mbps: cfg.down_mbps.0,
+            down_hi_mbps: cfg.down_mbps.1,
+        };
+        let scenario = ScenarioCtl::new(cfg.scenario, cfg.seed);
+        Ok(FlEnv {
+            pool,
+            info,
+            cfg,
+            // no enumerated fleet exists in lazy mode: device draws come
+            // from the population's keyed RNGs
+            fleet: DeviceFleet { devices: Vec::new() },
+            clock: VirtualClock::new(),
+            traffic: TrafficMeter::new(),
+            network,
+            scenario,
+            train,
+            test,
+            rng: Rng::new(cfg.seed ^ 0x909D),
+            population: Some(population),
+            plan_round: 0,
         })
     }
 
@@ -184,8 +307,17 @@ impl<'e> FlEnv<'e> {
     /// historical code path — same RNG consumption, byte-identical
     /// sampling — which is what keeps `--scenario stable` equal to the
     /// pre-scenario default.
+    /// In `--population lazy` mode the cohort comes from the population's
+    /// sparse sampler instead: O(K) work and memory regardless of
+    /// `n_clients`, keyed by `(seed, round)` so the draw is independent
+    /// of the shared cursor RNG and of materialization history.
     pub fn sample_clients(&mut self) -> Vec<usize> {
-        self.scenario.begin_plan_round();
+        let round = self.scenario.begin_plan_round();
+        self.plan_round = round;
+        if let Some(pop) = &self.population {
+            let scenario = &self.scenario;
+            return pop.sample_cohort(round, self.cfg.k_per_round, |c| scenario.available_now(c));
+        }
         let n = self.cfg.n_clients;
         let available: Vec<usize> =
             (0..n).filter(|&c| self.scenario.available_now(c)).collect();
@@ -203,7 +335,19 @@ impl<'e> FlEnv<'e> {
     /// bandwidth-drifting scenario the WAN band is scaled by the trace
     /// multiplier of the round being planned (RNG consumption identical
     /// to the unscaled path).
+    /// In `--population lazy` mode both draws are keyed by
+    /// `(seed, client, plan round)` — no fleet entry or shared RNG cursor
+    /// is touched, so status collection is O(1) per cohort member.
     pub fn status(&mut self, client: usize) -> ClientStatus {
+        if let Some(pop) = &self.population {
+            let q = pop.flops(client, self.plan_round);
+            let mut lrng = pop.link_rng(client, self.plan_round);
+            let link = match self.scenario.bandwidth_scale() {
+                None => self.network.sample(&mut lrng),
+                Some(s) => self.network.sample_scaled(&mut lrng, s),
+            };
+            return ClientStatus { client, q_flops: q, link };
+        }
         let q = self.fleet.devices[client].sample_flops();
         let link = match self.scenario.bandwidth_scale() {
             None => self.network.sample(&mut self.rng),
@@ -254,9 +398,9 @@ impl<'e> FlEnv<'e> {
             .wrapping_add((round as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03));
         let rng = Rng::new(seed);
         match &self.train {
-            TrainData::Image { set, parts } => BatchStream::Image(ImageLoader::new(
+            TrainData::Image { set, plan } => BatchStream::Image(ImageLoader::new(
                 set.clone(),
-                parts[client].clone(),
+                plan.client_indices(client),
                 self.info.batch,
                 rng,
             )),
@@ -266,6 +410,47 @@ impl<'e> FlEnv<'e> {
                 *seq_len,
                 rng,
             )),
+            TrainData::LazyImage { gen, seed_protos, partition, classes, cache } => {
+                let pop = self.population.as_ref().expect("lazy train data without a population");
+                let spec = pop.shard_spec(client, self.cfg.samples_per_client);
+                let set = cache.lock().unwrap().get_or_insert_with(client, || {
+                    let mut srng = Rng::new(spec.seed);
+                    let labels =
+                        lazy_shard_labels(*partition, *classes, client, spec.quota, &mut srng);
+                    Arc::new(gen.generate_labeled(labels, *seed_protos, &mut srng))
+                });
+                let indices: Vec<usize> = (0..set.len()).collect();
+                BatchStream::Image(ImageLoader::new(set, indices, self.info.batch, rng))
+            }
+            TrainData::LazyText { gen, seq_len, cache } => {
+                let pop = self.population.as_ref().expect("lazy train data without a population");
+                let spec = pop.shard_spec(client, self.cfg.shard_tokens);
+                // a loader needs strictly more than seq_len+1 tokens; pad
+                // tiny jittered quotas up to two full windows
+                let tokens = spec.quota.max(2 * (*seq_len + 1) + 2);
+                let stream = cache
+                    .lock()
+                    .unwrap()
+                    .get_or_insert_with(client, || Arc::new(gen.shard(tokens, spec.seed)));
+                BatchStream::Text(TextLoader::new(stream, self.info.batch, *seq_len, rng))
+            }
+        }
+    }
+
+    /// The lazy population, if this env was built with `--population
+    /// lazy` (tests and benches inspect priors and cohort draws).
+    pub fn population(&self) -> Option<&Population> {
+        self.population.as_ref()
+    }
+
+    /// Shard-cache counters for the lazy data path (`None` on the eager
+    /// path). The O(cohort) property tests assert on `materializations`
+    /// and `peak_resident` here.
+    pub fn shard_cache_stats(&self) -> Option<CacheStats> {
+        match &self.train {
+            TrainData::LazyImage { cache, .. } => Some(cache.lock().unwrap().stats().clone()),
+            TrainData::LazyText { cache, .. } => Some(cache.lock().unwrap().stats().clone()),
+            _ => None,
         }
     }
 
@@ -336,6 +521,55 @@ impl<'e> FlEnv<'e> {
         params.push(global.bias.clone());
         self.evaluate_param_list(&Manifest::eval_name(&self.cfg.family, false), &params)
     }
+}
+
+/// Label vector for one lazily synthesized image shard, drawn from the
+/// partition *prior* instead of an eager global pool: Γ keeps `gamma_pct`
+/// of the quota on the client's dominant class (`client % classes`, the
+/// eager scheme's assignment) and spreads the rest evenly; Φ removes
+/// `missing_frac` of the classes (a shard-keyed draw) and balances the
+/// quota over the kept ones. Pure in `(partition, classes, client, quota)`
+/// plus the RNG's seed, so a shard is identical no matter when — or how
+/// often — it is materialized.
+fn lazy_shard_labels(
+    partition: Partition,
+    classes: usize,
+    client: usize,
+    quota: usize,
+    rng: &mut Rng,
+) -> Vec<i32> {
+    let mut labels: Vec<i32> = Vec::with_capacity(quota);
+    match partition {
+        Partition::Gamma(gamma_pct) => {
+            let frac = (gamma_pct / 100.0).clamp(0.0, 1.0);
+            let dom = client % classes;
+            let n_dom = ((quota as f64 * frac).round() as usize).min(quota);
+            labels.extend(std::iter::repeat(dom as i32).take(n_dom));
+            let others: Vec<usize> = (0..classes).filter(|&c| c != dom).collect();
+            if others.is_empty() {
+                labels.extend(std::iter::repeat(dom as i32).take(quota - n_dom));
+            } else {
+                let rest = quota - n_dom;
+                for (j, &c) in others.iter().enumerate() {
+                    let share = rest / others.len() + usize::from(j < rest % others.len());
+                    labels.extend(std::iter::repeat(c as i32).take(share));
+                }
+            }
+        }
+        Partition::Phi(missing_frac) => {
+            let missing = ((classes as f64 * missing_frac).round() as usize).min(classes - 1);
+            let keep = classes - missing;
+            let kept = rng.sample_distinct(classes, keep);
+            for (j, &c) in kept.iter().enumerate() {
+                let share = quota / keep + usize::from(j < quota % keep);
+                labels.extend(std::iter::repeat(c as i32).take(share));
+            }
+        }
+        // build_lazy rejects Natural for image families up front
+        Partition::Natural => unreachable!("natural partition is text-only"),
+    }
+    rng.shuffle(&mut labels);
+    labels
 }
 
 #[cfg(test)]

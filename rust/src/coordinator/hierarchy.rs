@@ -1,0 +1,315 @@
+//! Hierarchical quorum aggregation — an edge-aggregator tier between the
+//! cohort and the cloud (`--hierarchy E`).
+//!
+//! At million-client populations a single coordinator ingesting every
+//! member upload is the WAN bottleneck, so the cohort is split
+//! round-robin over `E` edge aggregators. Each edge runs the *same*
+//! K-of-N quorum rule as the flat driver over its sub-cohort (a clone of
+//! the run's [`QuorumPolicy`], so edge decisions share the rule without
+//! advancing the adaptive controller's annealed α), composes its quorum
+//! members' low-rank updates into **one** update, and forwards that over
+//! the edge→cloud backhaul. The root then runs the quorum rule once more
+//! — with the *real* policy, so α anneals exactly once per round — over
+//! the edge **arrival** times, and aggregates the edges that land in its
+//! quorum.
+//!
+//! ```text
+//!   clients ──┬─ edge 0 ─ K₀-of-N₀ ─┐ one composed update each,
+//!             ├─ edge 1 ─ K₁-of-N₁ ─┤ max-member bytes over the
+//!             └─ edge 2 ─ K₂-of-N₂ ─┘ backhaul (not the member sum)
+//!                                   ▼
+//!                        root: K-of-E over arrivals
+//! ```
+//!
+//! Everything here is a pure function of plan facts — projected
+//! completion times, payload sizes, the deterministic policy — so
+//! hierarchical rounds keep the driver's determinism contract: no
+//! worker/pool state ever reaches a decision. Two latencies fall out of
+//! the plan instead of being simulated per member:
+//!
+//! * a client that missed its **edge** quorum is forwarded individually,
+//!   landing at `completion + bytes/backhaul`;
+//! * an **edge** that missed the root quorum lands *as a unit* at its
+//!   own arrival instant — its quorum members become stragglers of the
+//!   round together.
+//!
+//! Both re-enter the flat driver's pending-straggler machinery and merge
+//! staleness-weighted like any late arrival, so the hierarchy composes
+//! with the semi-async pipeline instead of replacing it.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::quorum_ctl::{QuorumPolicy, QuorumSignals};
+use crate::coordinator::round::quorum_members;
+use crate::simulation::network::MBIT;
+
+/// Edge-tier shape, carried by `RoundDriver` (off when `None`).
+#[derive(Debug, Clone, Copy)]
+pub struct HierarchyCfg {
+    /// number of edge aggregators (≥ 2; `--hierarchy`)
+    pub edges: usize,
+    /// edge→cloud backhaul throughput, in `LinkSample::up_bps` units
+    /// (bytes per second)
+    pub backhaul_bps: f64,
+}
+
+/// Wired edges are provisioned links, not client WAN: the backhaul runs
+/// at this multiple of the top of the client uplink band.
+const BACKHAUL_UPLINK_MULT: f64 = 8.0;
+
+impl HierarchyCfg {
+    /// The tier an experiment config asks for: `Some` when
+    /// `--hierarchy E` with `E > 1` (validation has already required an
+    /// active quorum mode alongside it). The backhaul is a deterministic
+    /// plan constant — no RNG — so enabling the tier never perturbs the
+    /// flat path's draw sequence.
+    pub fn from_config(cfg: &ExperimentConfig) -> Option<HierarchyCfg> {
+        (cfg.hierarchy > 1).then(|| HierarchyCfg {
+            edges: cfg.hierarchy,
+            backhaul_bps: BACKHAUL_UPLINK_MULT * cfg.up_mbps.1 * MBIT,
+        })
+    }
+}
+
+/// One edge aggregator's round: its quorum over its sub-cohort and the
+/// single composed update it forwards.
+#[derive(Debug)]
+pub struct EdgePlan {
+    /// edge id (round-robin residue)
+    pub edge: usize,
+    /// caller-index space (survivor positions), ascending
+    pub members: Vec<usize>,
+    /// when the edge quorum is complete (relative to round start)
+    pub t_edge: f64,
+    /// when the composed update lands at the root
+    pub arrival: f64,
+    /// WAN bytes of the composed update: the *widest member's* payload,
+    /// not the member sum — neural composition merges the sub-cohort's
+    /// low-rank factors into one update of the largest assigned width
+    pub up_bytes: usize,
+}
+
+/// The whole round's hierarchical schedule.
+#[derive(Debug)]
+pub struct HierarchyPlan {
+    /// non-empty edges, in edge-id order
+    pub edges: Vec<EdgePlan>,
+    /// positions into `edges` the root aggregates now, ascending
+    pub root_quorum: Vec<usize>,
+    /// union of the root-quorum edges' members (caller-index space,
+    /// ascending) — the round's effective quorum
+    pub members: Vec<usize>,
+    /// root aggregation instant relative to round start: the slowest
+    /// root-quorum edge's arrival
+    pub t_q: f64,
+    /// WAN uplink billed at aggregation: Σ composed-update bytes over
+    /// the root quorum (replaces the flat path's per-member sum)
+    pub wan_up_bytes: usize,
+    /// α of the root decision (late merges of this round)
+    pub alpha: f64,
+    /// every non-member's landing instant relative to round start,
+    /// `(caller index, relative finish)` in index order
+    pub deferred: Vec<(usize, f64)>,
+}
+
+/// Plan one hierarchical round over the survivors' plan facts.
+///
+/// `completions`/`bytes` are indexed by survivor position; `policy` is
+/// the run's quorum policy (mutated only by the root decision);
+/// `signals` is fetched lazily — a static policy never reads it, exactly
+/// like the flat path.
+pub fn plan_hierarchy(
+    completions: &[f64],
+    bytes: &[usize],
+    cfg: &HierarchyCfg,
+    policy: &mut QuorumPolicy,
+    signals: impl Fn() -> QuorumSignals,
+) -> HierarchyPlan {
+    let n = completions.len();
+    debug_assert_eq!(n, bytes.len());
+    debug_assert!(cfg.backhaul_bps > 0.0, "backhaul must carry traffic");
+    let e_cnt = cfg.edges.max(2).min(n.max(1));
+
+    // round-robin sub-cohorts: survivor i reports to edge i % E — a pure
+    // function of the index, so membership never depends on RNG state
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); e_cnt];
+    for i in 0..n {
+        groups[i % e_cnt].push(i);
+    }
+
+    let mut edges: Vec<EdgePlan> = Vec::with_capacity(e_cnt);
+    for (e, group) in groups.into_iter().enumerate() {
+        if group.is_empty() {
+            continue;
+        }
+        let gc: Vec<f64> = group.iter().map(|&i| completions[i]).collect();
+        // a clone decides so an edge-tier decision can't advance the
+        // root controller's annealed α E times per round
+        let mut edge_policy = policy.clone();
+        let d = edge_policy.decide_with(&gc, &signals);
+        let k = d.k.clamp(1, group.len());
+        let members: Vec<usize> = quorum_members(&gc, k).into_iter().map(|j| group[j]).collect();
+        let t_edge = members.iter().map(|&i| completions[i]).fold(0.0f64, f64::max);
+        let up_bytes = members.iter().map(|&i| bytes[i]).max().unwrap_or(0);
+        let arrival = t_edge + up_bytes as f64 / cfg.backhaul_bps;
+        edges.push(EdgePlan { edge: e, members, t_edge, arrival, up_bytes });
+    }
+
+    // the REAL policy decides the root quorum over edge arrivals — one α
+    // anneal step per round, same as the flat driver
+    let arrivals: Vec<f64> = edges.iter().map(|ep| ep.arrival).collect();
+    let d = policy.decide_with(&arrivals, &signals);
+    let k_root = d.k.clamp(1, edges.len().max(1));
+    let root_quorum = quorum_members(&arrivals, k_root);
+
+    let mut members: Vec<usize> =
+        root_quorum.iter().flat_map(|&e| edges[e].members.iter().copied()).collect();
+    members.sort_unstable();
+    let t_q = root_quorum.iter().map(|&e| edges[e].arrival).fold(0.0f64, f64::max);
+    let wan_up_bytes = root_quorum.iter().map(|&e| edges[e].up_bytes).sum();
+
+    // non-members: a root-deferred edge lands as a unit at its arrival;
+    // an edge straggler is forwarded individually over the backhaul
+    let mut edge_member = vec![false; n];
+    let mut deferred: Vec<(usize, f64)> = Vec::new();
+    for (pos, ep) in edges.iter().enumerate() {
+        for &i in &ep.members {
+            edge_member[i] = true;
+        }
+        if root_quorum.binary_search(&pos).is_err() {
+            deferred.extend(ep.members.iter().map(|&i| (i, ep.arrival)));
+        }
+    }
+    for (i, member) in edge_member.iter().enumerate() {
+        if !member {
+            deferred.push((i, completions[i] + bytes[i] as f64 / cfg.backhaul_bps));
+        }
+    }
+    deferred.sort_by(|a, b| a.0.cmp(&b.0));
+
+    HierarchyPlan { edges, root_quorum, members, t_q, wan_up_bytes, alpha: d.alpha, deferred }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(edges: usize) -> HierarchyCfg {
+        // 1000 bytes/s keeps transfer arithmetic easy to eyeball
+        HierarchyCfg { edges, backhaul_bps: 1000.0 }
+    }
+
+    #[test]
+    fn full_barrier_policy_keeps_every_member_and_compresses_wan() {
+        let completions = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let bytes = [100, 200, 300, 400, 500, 600];
+        let mut policy = QuorumPolicy::fixed(0, 1.0); // full barrier everywhere
+        let plan = plan_hierarchy(&completions, &bytes, &cfg(2), &mut policy, QuorumSignals::default);
+        assert_eq!(plan.edges.len(), 2);
+        // round-robin: edge 0 = {0,2,4}, edge 1 = {1,3,5}
+        assert_eq!(plan.edges[0].members, vec![0, 2, 4]);
+        assert_eq!(plan.edges[1].members, vec![1, 3, 5]);
+        assert_eq!(plan.members, vec![0, 1, 2, 3, 4, 5], "full barrier keeps everyone");
+        assert!(plan.deferred.is_empty());
+        // WAN forwards one composed update per edge: max member bytes,
+        // far below the flat path's 2100-byte member sum
+        assert_eq!(plan.wan_up_bytes, 500 + 600);
+        // edge 1 completes at 6.0 and lands 600/1000 s later
+        assert_eq!(plan.edges[1].t_edge, 6.0);
+        assert!((plan.edges[1].arrival - 6.6).abs() < 1e-12);
+        assert!((plan.t_q - 6.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_edge_quorum_defers_edge_stragglers_individually() {
+        let completions = [1.0, 2.0, 10.0, 20.0];
+        let bytes = [100, 100, 500, 500];
+        let mut policy = QuorumPolicy::fixed(1, 1.0); // fastest-of-each
+        let plan = plan_hierarchy(&completions, &bytes, &cfg(2), &mut policy, QuorumSignals::default);
+        // edge 0 = {0, 2} keeps 0; edge 1 = {1, 3} keeps 1
+        assert_eq!(plan.edges[0].members, vec![0]);
+        assert_eq!(plan.edges[1].members, vec![1]);
+        // root: static K=1 keeps only the earliest-arriving edge (edge 0,
+        // arrival 1.1 vs 2.1) — edge 1's quorum defers as a unit
+        assert_eq!(plan.root_quorum, vec![0]);
+        assert_eq!(plan.members, vec![0]);
+        assert_eq!(plan.wan_up_bytes, 100);
+        // deferred: client 1 at edge 1's arrival, clients 2 and 3
+        // forwarded individually at completion + bytes/backhaul
+        let expect = vec![(1usize, 2.0 + 0.1), (2, 10.0 + 0.5), (3, 20.0 + 0.5)];
+        assert_eq!(plan.deferred.len(), expect.len());
+        for ((i, t), (ei, et)) in plan.deferred.iter().zip(&expect) {
+            assert_eq!(i, ei);
+            assert!((t - et).abs() < 1e-12, "client {i}: {t} vs {et}");
+        }
+    }
+
+    #[test]
+    fn cohort_smaller_than_edges_still_plans() {
+        let completions = [3.0];
+        let bytes = [64];
+        let mut policy = QuorumPolicy::fixed(0, 1.0);
+        let plan = plan_hierarchy(&completions, &bytes, &cfg(8), &mut policy, QuorumSignals::default);
+        assert_eq!(plan.edges.len(), 1);
+        assert_eq!(plan.members, vec![0]);
+        assert_eq!(plan.wan_up_bytes, 64);
+        assert!((plan.t_q - (3.0 + 0.064)).abs() < 1e-12);
+        assert!(plan.deferred.is_empty());
+    }
+
+    #[test]
+    fn plans_are_pure_in_their_inputs() {
+        let completions: Vec<f64> = (0..13).map(|i| 1.0 + 0.7 * i as f64).collect();
+        let bytes: Vec<usize> = (0..13).map(|i| 100 + 37 * i).collect();
+        let mk = || QuorumPolicy::fixed(2, 0.5);
+        let (mut p1, mut p2) = (mk(), mk());
+        let a = plan_hierarchy(&completions, &bytes, &cfg(3), &mut p1, QuorumSignals::default);
+        let b = plan_hierarchy(&completions, &bytes, &cfg(3), &mut p2, QuorumSignals::default);
+        assert_eq!(a.members, b.members);
+        assert_eq!(a.root_quorum, b.root_quorum);
+        assert_eq!(a.wan_up_bytes, b.wan_up_bytes);
+        assert_eq!(a.t_q.to_bits(), b.t_q.to_bits());
+        let da: Vec<(usize, u64)> = a.deferred.iter().map(|&(i, t)| (i, t.to_bits())).collect();
+        let db: Vec<(usize, u64)> = b.deferred.iter().map(|&(i, t)| (i, t.to_bits())).collect();
+        assert_eq!(da, db);
+    }
+
+    #[test]
+    fn edge_clones_do_not_advance_the_root_alpha() {
+        use crate::coordinator::quorum_ctl::{QuorumController, QuorumCtlCfg};
+        // a hot staleness signal relaxes α on every adaptive decision; the
+        // hierarchy must take exactly ONE anneal step per round (the root
+        // decision), no matter how many edges decided with clones
+        let hot = QuorumSignals { staleness_index: 0.5, ..QuorumSignals::default() };
+        let completions: Vec<f64> = (0..12).map(|i| 1.0 + 0.5 * i as f64).collect();
+        let bytes = vec![100usize; 12];
+
+        let mut hier = QuorumPolicy::Auto(QuorumController::new(QuorumCtlCfg::new(0.8, 1, 0.5, 1.0)));
+        let _ = plan_hierarchy(&completions, &bytes, &cfg(4), &mut hier, || hot);
+
+        let mut flat = QuorumPolicy::Auto(QuorumController::new(QuorumCtlCfg::new(0.8, 1, 0.5, 1.0)));
+        let _ = flat.decide_with(&completions, || hot);
+
+        let alpha = |p: &QuorumPolicy| match p {
+            QuorumPolicy::Auto(c) => c.alpha(),
+            QuorumPolicy::Static(_) => unreachable!(),
+        };
+        assert_eq!(
+            alpha(&hier).to_bits(),
+            alpha(&flat).to_bits(),
+            "hierarchy advanced α a different number of times than one flat decision"
+        );
+    }
+
+    #[test]
+    fn from_config_gates_on_the_knob() {
+        use crate::config::{ExperimentConfig, Scale};
+        let mut c = ExperimentConfig::preset("cnn", Scale::Smoke);
+        assert!(HierarchyCfg::from_config(&c).is_none(), "default is flat");
+        c.hierarchy = 1;
+        assert!(HierarchyCfg::from_config(&c).is_none(), "a 1-edge tier is the flat path");
+        c.hierarchy = 4;
+        let h = HierarchyCfg::from_config(&c).expect("explicit tier");
+        assert_eq!(h.edges, 4);
+        assert!((h.backhaul_bps - BACKHAUL_UPLINK_MULT * c.up_mbps.1 * MBIT).abs() < 1e-9);
+    }
+}

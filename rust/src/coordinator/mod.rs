@@ -9,7 +9,20 @@
 //! * `env`        — shared federated world (data, fleet, WAN, clock, eval)
 //! * `round`      — the parallel round driver shared by every scheme
 //! * `quorum_ctl` — adaptive quorum control: per-round (K, α) decisions
+//! * `hierarchy`  — edge-tier quorum aggregation (`--hierarchy E`)
 //! * `server`     — the Heroes PS round loop (Alg. 1)
+//!
+//! # Population scale
+//!
+//! The coordinator itself is population-agnostic: every phase operates
+//! on the *sampled cohort* only. Under `--population lazy` the env hands
+//! out per-client state derived on demand from `(seed, client_id)`
+//! (`simulation::population`), so a round costs O(cohort) regardless of
+//! the nominal population size; under `--hierarchy E` the round driver
+//! additionally splits the cohort across E edge aggregators, each
+//! running the same quorum machinery over its sub-cohort and forwarding
+//! one composed update upward (`hierarchy`), keeping the root's
+//! aggregation fan-in at O(E) instead of O(cohort).
 
 pub mod aggregate;
 pub mod assignment;
@@ -17,6 +30,7 @@ pub mod client;
 pub mod env;
 pub mod estimator;
 pub mod frequency;
+pub mod hierarchy;
 pub mod ledger;
 pub mod quorum_ctl;
 pub mod round;

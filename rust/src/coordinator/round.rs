@@ -176,6 +176,27 @@
 //! [`ScenarioError::MidRoundDropout`]: crate::simulation::ScenarioError
 //! [`FlEnv::stamp_dropouts`]: crate::coordinator::env::FlEnv::stamp_dropouts
 //!
+//! # Hierarchical aggregation
+//!
+//! With `--hierarchy E` (≥ 2; quorum mode only) the quorum decision runs
+//! **twice**, once per tier ([`crate::coordinator::hierarchy`]): the
+//! round's survivors are split round-robin across E edge aggregators,
+//! each edge runs a *clone* of the quorum policy over its sub-cohort and
+//! forwards **one composed update** (its largest member payload) upward
+//! over a backhaul link, and the real policy then decides a root quorum
+//! over the E edge arrivals. The round aggregates the union of the
+//! root-quorum edges' member sets at `t_q` = the slowest root-quorum
+//! edge's *arrival* (backhaul included — [`QuorumBatch::round_time`]),
+//! bills the WAN exactly Σ forwarded-update bytes
+//! ([`QuorumBatch::wan_up_bytes`]) instead of per-member uploads, and
+//! treats everyone else as a straggler: a late *edge* lands as a unit at
+//! its arrival instant, an edge-local straggler is forwarded
+//! individually at completion + backhaul. The plan is a pure function of
+//! `(completions, bytes, cfg, policy state)` — no RNG, no wall clock —
+//! so hierarchical runs inherit the full `--workers`/`--pool`
+//! determinism contract, and `--hierarchy 1` (the default) leaves every
+//! flat path byte-identical.
+//!
 //! # Determinism contract
 //!
 //! A dispatched task touches no shared mutable state: its batch stream is
@@ -195,6 +216,7 @@ use crate::config::DropoutPolicy;
 use crate::coordinator::assignment::average_wait;
 use crate::coordinator::client::{run_local, LocalResult};
 use crate::coordinator::env::{BatchStream, FlEnv};
+use crate::coordinator::hierarchy::{plan_hierarchy, HierarchyCfg};
 use crate::coordinator::quorum_ctl::QuorumPolicy;
 use crate::coordinator::RoundReport;
 use crate::runtime::{Engine, EnginePool};
@@ -509,6 +531,8 @@ pub fn finish_dispatched_round<S: Strategy + ?Sized>(
                     late: Vec::new(),
                     straggler_down_bytes,
                     dropped: dropped.iter().map(|d| d.client).collect(),
+                    wan_up_bytes: None,
+                    round_time: None,
                 },
             )
         }
@@ -614,6 +638,17 @@ pub struct QuorumBatch {
     /// their updates never merge — schemes retaining per-round plan
     /// state must retire them here or leak it
     pub dropped: Vec<usize>,
+    /// hierarchical rounds only (`--hierarchy`): the WAN uplink actually
+    /// billed at this aggregation — Σ composed-update bytes over the
+    /// root-quorum edges, which replaces the flat path's per-member sum
+    /// (each edge forwards ONE composed update). `None` on every flat
+    /// path, which bills member uploads individually as before.
+    pub wan_up_bytes: Option<usize>,
+    /// hierarchical rounds only: the root aggregation instant relative
+    /// to the round start — the slowest root-quorum edge's *arrival*,
+    /// backhaul included. `None` ⇒ the quorum members' max completion
+    /// (the flat rule).
+    pub round_time: Option<f64>,
 }
 
 /// Per-round observer for [`RoundDriver::run_quorum`]: called after every
@@ -713,8 +748,10 @@ fn validate_completions(tasks: &[LocalTask]) -> Result<()> {
 /// The quorum members of a cohort: indices of the `k` smallest projected
 /// completion times (index tie-break), returned in assignment order.
 /// Completions are validated finite at dispatch (`validate_completions`),
-/// and the comparator is total either way — no panic path.
-fn quorum_members(completions: &[f64], k: usize) -> Vec<usize> {
+/// and the comparator is total either way — no panic path. Crate-visible
+/// so the hierarchical planner ranks edge sub-cohorts (and edge
+/// arrivals) with exactly this rule.
+pub(crate) fn quorum_members(completions: &[f64], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..completions.len()).collect();
     idx.sort_by(|&a, &b| completions[a].total_cmp(&completions[b]).then(a.cmp(&b)));
     idx.truncate(k);
@@ -849,6 +886,7 @@ fn drive_quorum(
     strategy: &mut dyn Strategy,
     rounds: usize,
     policy: &mut QuorumPolicy,
+    hierarchy: Option<HierarchyCfg>,
     mut observer: Option<RoundObserver<'_>>,
     reports: &mut Vec<RoundReport>,
 ) -> Result<()> {
@@ -908,17 +946,43 @@ fn drive_quorum(
         // "Adaptive quorum control"); signals are fetched lazily so the
         // static-K path never walks the ledger. The driver injects the
         // observed dropout rate — a dispatch-time fact of the virtual
-        // schedule, not a scheme signal.
+        // schedule, not a scheme signal. With `--hierarchy` the same
+        // policy drives the edge tier instead (module docs,
+        // "Hierarchical aggregation"): `members` becomes the union of
+        // the root-quorum edges' quorums, `t_q` the slowest root-quorum
+        // edge's arrival, and non-members get plan-deferred landing
+        // instants (whole late edges and individually-forwarded edge
+        // stragglers) instead of their raw completions.
         let churn = env.observed_dropout_rate();
-        let decision = policy.decide_with(&surv_completions, || {
+        let signals = || {
             let mut sig = strategy.quorum_signals();
             sig.dropout_rate = churn;
             sig
-        });
-        let k = decision.k.clamp(1, n_survivors);
-        let members: Vec<usize> =
-            quorum_members(&surv_completions, k).into_iter().map(|j| survivors_idx[j]).collect();
-        let t_q = members.iter().map(|&i| meta.completions[i]).fold(0.0f64, f64::max);
+        };
+        let (members, t_q, wan_up_bytes, alpha, deferred): (
+            Vec<usize>,
+            f64,
+            Option<usize>,
+            f64,
+            HashMap<usize, f64>,
+        ) = if let Some(hcfg) = &hierarchy {
+            let surv_bytes: Vec<usize> = survivors_idx.iter().map(|&i| meta.bytes[i]).collect();
+            let plan = plan_hierarchy(&surv_completions, &surv_bytes, hcfg, policy, signals);
+            let members: Vec<usize> =
+                plan.members.iter().map(|&j| survivors_idx[j]).collect();
+            let deferred: HashMap<usize, f64> =
+                plan.deferred.iter().map(|&(j, t)| (survivors_idx[j], t)).collect();
+            (members, plan.t_q, Some(plan.wan_up_bytes), plan.alpha, deferred)
+        } else {
+            let decision = policy.decide_with(&surv_completions, signals);
+            let k = decision.k.clamp(1, n_survivors);
+            let members: Vec<usize> = quorum_members(&surv_completions, k)
+                .into_iter()
+                .map(|j| survivors_idx[j])
+                .collect();
+            let t_q = members.iter().map(|&i| meta.completions[i]).fold(0.0f64, f64::max);
+            (members, t_q, None, decision.alpha, HashMap::new())
+        };
         let t_agg = meta.t_start + t_q;
 
         // stragglers from earlier rounds whose virtual uploads have
@@ -931,7 +995,7 @@ fn drive_quorum(
 
         // pull exactly the outcomes the virtual schedule aggregates now;
         // anything else racing off the channel parks in the buffer
-        let mut quorum_outcomes = Vec::with_capacity(k);
+        let mut quorum_outcomes = Vec::with_capacity(members.len());
         for &i in &members {
             quorum_outcomes.push(state.demand_done(rx, h, i)?);
         }
@@ -942,7 +1006,7 @@ fn drive_quorum(
             late.push(LateArrival {
                 origin_round: p.seq,
                 staleness,
-                weight: staleness_weight(staleness, decision.alpha),
+                weight: staleness_weight(staleness, alpha),
                 outcome,
             });
         }
@@ -950,7 +1014,9 @@ fn drive_quorum(
         // register this round's stragglers (their virtual finish times
         // are plan facts, known before their results exist); a dropped
         // client's broadcast bills like a straggler's but it never enters
-        // the pending buffer — its upload never arrives
+        // the pending buffer — its upload never arrives. A hierarchical
+        // round overrides the landing instant with the plan's deferred
+        // arrival (late edge as a unit, or individual backhaul forward).
         let mut straggler_down = 0usize;
         let mut dropped_clients = Vec::new();
         {
@@ -967,11 +1033,12 @@ fn drive_quorum(
                     );
                 } else {
                     straggler_down += meta.bytes[i];
+                    let rel_finish = deferred.get(&i).copied().unwrap_or(meta.completions[i]);
                     pending.push(PendingStraggler {
                         seq: h,
                         index: i,
                         client: meta.clients[i],
-                        abs_finish: meta.t_start + meta.completions[i],
+                        abs_finish: meta.t_start + rel_finish,
                     });
                 }
             }
@@ -980,8 +1047,10 @@ fn drive_quorum(
         // full quorum with nothing due late is exactly the synchronous
         // phase C — route through it so `--quorum N` stays byte-identical
         // to the serial loop (a churned round has k < n, so it always
-        // takes the quorum hook, which books the dropped broadcasts)
-        let report = if k == n && late.is_empty() {
+        // takes the quorum hook, which books the dropped broadcasts).
+        // Hierarchical rounds always take the quorum hook: their WAN
+        // uplink is the composed-update sum, never the member sum.
+        let report = if wan_up_bytes.is_none() && members.len() == n && late.is_empty() {
             strategy.finish_round(env, quorum_outcomes)?
         } else {
             strategy.finish_round_quorum(
@@ -992,6 +1061,8 @@ fn drive_quorum(
                     late,
                     straggler_down_bytes: straggler_down,
                     dropped: dropped_clients,
+                    wan_up_bytes,
+                    round_time: wan_up_bytes.is_some().then_some(t_q),
                 },
             )?
         };
@@ -1028,12 +1099,28 @@ fn drive_quorum(
 #[derive(Debug, Clone, Copy)]
 pub struct RoundDriver {
     workers: usize,
+    /// `--hierarchy`: edge-aggregator tier for quorum rounds (see
+    /// `coordinator::hierarchy`); `None` is the flat path, byte-identical
+    /// to its historical self
+    hierarchy: Option<HierarchyCfg>,
 }
 
 impl RoundDriver {
     /// `workers == 0` is treated as 1 (the serial coordinator loop).
     pub fn new(workers: usize) -> RoundDriver {
-        RoundDriver { workers: workers.max(1) }
+        RoundDriver { workers: workers.max(1), hierarchy: None }
+    }
+
+    /// Attach (or detach) the edge-aggregator tier. Only `run_quorum`
+    /// reads it — the hierarchy is a quorum-round feature and config
+    /// validation rejects `--hierarchy` without an active quorum mode.
+    pub fn with_hierarchy(mut self, hierarchy: Option<HierarchyCfg>) -> RoundDriver {
+        self.hierarchy = hierarchy;
+        self
+    }
+
+    pub fn hierarchy(&self) -> Option<HierarchyCfg> {
+        self.hierarchy
     }
 
     pub fn workers(&self) -> usize {
@@ -1170,7 +1257,17 @@ impl RoundDriver {
             drop(tx);
 
             let _close = CloseOnDrop(&queue);
-            drive_quorum(&queue, &rx, env, strategy, rounds, policy, observer, &mut reports)
+            drive_quorum(
+                &queue,
+                &rx,
+                env,
+                strategy,
+                rounds,
+                policy,
+                self.hierarchy,
+                observer,
+                &mut reports,
+            )
         });
         result.map(|()| reports)
     }
@@ -1190,22 +1287,28 @@ pub fn collect_quorum_round(
     block_variance: f64,
 ) -> RoundReport {
     let mut down = batch.straggler_down_bytes;
-    let mut up = 0usize;
+    let mut member_up = 0usize;
     let mut completion = Vec::with_capacity(batch.quorum.len());
     let mut losses = Vec::with_capacity(batch.quorum.len() + batch.late.len());
     for o in &batch.quorum {
         down += o.bytes;
-        up += o.bytes;
+        member_up += o.bytes;
         completion.push(o.completion);
         losses.push(o.result.mean_loss);
     }
+    // hierarchical rounds bill the edges' composed updates on the WAN
+    // instead of the member sum (each edge forwards one update); late
+    // merges still bill individually at their merge round either way
+    let mut up = batch.wan_up_bytes.unwrap_or(member_up);
     for l in &batch.late {
         up += l.outcome.bytes;
         losses.push(l.outcome.result.mean_loss);
     }
     env.traffic.record_down(down);
     env.traffic.record_up(up);
-    let round_time = completion.iter().copied().fold(0.0, f64::max);
+    let round_time = batch
+        .round_time
+        .unwrap_or_else(|| completion.iter().copied().fold(0.0, f64::max));
     env.clock.advance(round_time);
 
     RoundReport {

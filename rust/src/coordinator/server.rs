@@ -28,10 +28,11 @@
 use crate::config::ExperimentConfig;
 use crate::coordinator::aggregate::ComposedAccumulator;
 use crate::coordinator::assignment::{
-    self, fastest_reference, Assignment, ClientStatus, ControllerCfg, RoundPlan,
+    self, cohort_statuses, fastest_reference, Assignment, ClientStatus, ControllerCfg, RoundPlan,
 };
 use crate::coordinator::env::FlEnv;
 use crate::coordinator::estimator::EstimateTracker;
+use crate::coordinator::hierarchy::HierarchyCfg;
 use crate::coordinator::ledger::BlockLedger;
 use crate::coordinator::round::{
     collect_quorum_round, collect_round, LocalTask, QuorumBatch, RoundDriver, TaskOutcome,
@@ -91,7 +92,7 @@ impl HeroesServer {
                 h_max: 1_000_000,
                 beta_sq: 0.0,
             },
-            driver: RoundDriver::new(cfg.workers),
+            driver: RoundDriver::new(cfg.workers).with_hierarchy(HierarchyCfg::from_config(cfg)),
             family: cfg.family.clone(),
             lr: cfg.lr,
             lr_decay_rounds: cfg.lr_decay_rounds,
@@ -154,8 +155,7 @@ impl HeroesServer {
             return Err(anyhow!("plan_ahead called twice without take_tasks"));
         }
         let clients = env.sample_clients();
-        let statuses = clients.iter().map(|&c| env.status(c)).collect();
-        self.pending = Some(statuses);
+        self.pending = Some(cohort_statuses(env, &clients));
         Ok(())
     }
 

@@ -6,9 +6,20 @@
 //! * `phi_partition` — ImageNet-100 scheme: each client *lacks* φ% of the
 //!   classes; volume is equal across the classes it does hold. φ = 0 is IID.
 //!
-//! Both return per-client index lists into the dataset, never duplicate an
-//! index, and use every sample at most once (invariants property-tested in
-//! rust/tests/prop_coordinator.rs).
+//! Both return a [`PartitionPlan`]: per-client **shard descriptors**
+//! (class + slice into a shared shuffled pool) instead of eagerly
+//! allocated `Vec<Vec<usize>>` index lists for every client. The plan
+//! holds one flat copy of the shuffled per-class pools (O(samples) total,
+//! shared by all clients) plus O(classes) slice records per client;
+//! actual index lists are materialized per *cohort* client on demand via
+//! [`PartitionPlan::client_indices`], reproducing byte for byte the index
+//! order the historical eager partitioner emitted (pools were drained
+//! from the tail, so a descriptor `(class, start, len)` names exactly the
+//! elements a drain of the same count-state would have yielded, in the
+//! same order — pinned by the reference-equivalence test below).
+//!
+//! Plans never duplicate an index and use every sample at most once
+//! (invariants property-tested in rust/tests/prop_coordinator.rs).
 
 use crate::util::rng::Rng;
 
@@ -19,6 +30,86 @@ fn by_class(labels: &[i32], classes: usize) -> Vec<Vec<usize>> {
         pools[l as usize].push(i);
     }
     pools
+}
+
+/// One contiguous run of a client's shard: `len` samples of class
+/// `class`, living at `pool[class][start..start + len]` of the plan's
+/// shuffled pools.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSlice {
+    pub class: usize,
+    pub start: usize,
+    pub len: usize,
+}
+
+/// A partition as per-client descriptors over shared shuffled pools.
+///
+/// Memory is O(samples + n_clients · classes) — no per-client index
+/// vectors exist until [`Self::client_indices`] materializes one
+/// (O(quota)) for a sampled cohort member.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    /// shuffled per-class index pools (immutable after planning)
+    pools: Vec<Vec<usize>>,
+    /// per-client slice descriptors, in the order the eager partitioner
+    /// appended them
+    shards: Vec<Vec<ShardSlice>>,
+}
+
+impl PartitionPlan {
+    pub fn n_clients(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Number of samples assigned to `client`.
+    pub fn shard_len(&self, client: usize) -> usize {
+        self.shards[client].iter().map(|s| s.len).sum()
+    }
+
+    /// The client's raw slice descriptors (sizes + pool offsets).
+    pub fn slices(&self, client: usize) -> &[ShardSlice] {
+        &self.shards[client]
+    }
+
+    /// Materialize the client's sample indices (O(quota)); identical
+    /// values and order to the historical eager partition.
+    pub fn client_indices(&self, client: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.shard_len(client));
+        for s in &self.shards[client] {
+            out.extend_from_slice(&self.pools[s.class][s.start..s.start + s.len]);
+        }
+        out
+    }
+
+    /// Materialize every client (tests/diagnostics only — this is the
+    /// O(population) allocation the plan exists to avoid).
+    pub fn materialize_all(&self) -> Vec<Vec<usize>> {
+        (0..self.n_clients()).map(|c| self.client_indices(c)).collect()
+    }
+
+    /// Total samples assigned across all clients.
+    pub fn total_assigned(&self) -> usize {
+        (0..self.n_clients()).map(|c| self.shard_len(c)).sum()
+    }
+}
+
+/// Record a take of up to `want` samples of `class` in count space:
+/// the eager code drained from the pool tail, so the taken elements are
+/// `pool[class][remaining - take..remaining]` (drain yields them in
+/// ascending position order).
+fn take_slice(
+    remaining: &mut [usize],
+    class: usize,
+    want: usize,
+    slices: &mut Vec<ShardSlice>,
+    have: &mut usize,
+) {
+    let take = want.min(remaining[class]);
+    if take > 0 {
+        remaining[class] -= take;
+        slices.push(ShardSlice { class, start: remaining[class], len: take });
+        *have += take;
+    }
 }
 
 /// Γ-scheme (dominant-class). `gamma_pct` in [0,100]; each client draws
@@ -34,36 +125,38 @@ pub fn gamma_partition(
     quota: usize,
     gamma_pct: f64,
     rng: &mut Rng,
-) -> Vec<Vec<usize>> {
+) -> PartitionPlan {
     assert!(n_clients * quota <= labels.len(), "not enough samples: need {} have {}", n_clients * quota, labels.len());
     let mut pools = by_class(labels, classes);
     for p in pools.iter_mut() {
         rng.shuffle(p);
     }
+    let mut remaining: Vec<usize> = pools.iter().map(Vec::len).collect();
     let frac = (gamma_pct / 100.0).clamp(0.0, 1.0);
-    let mut out = Vec::with_capacity(n_clients);
+    let mut shards = Vec::with_capacity(n_clients);
     for client in 0..n_clients {
         let dom = client % classes;
         let n_dom = ((quota as f64) * frac).round() as usize;
-        let mut idxs = Vec::with_capacity(quota);
-        take_from(&mut pools, dom, n_dom.min(quota), &mut idxs, rng);
+        let mut slices = Vec::new();
+        let mut have = 0usize;
+        take_slice(&mut remaining, dom, n_dom.min(quota), &mut slices, &mut have);
         // even spread over the other classes
-        let rest = quota - idxs.len();
+        let rest = quota - have;
         let others: Vec<usize> = (0..classes).filter(|&c| c != dom).collect();
         for (j, &c) in others.iter().enumerate() {
             // distribute remainder as evenly as integer division allows
             let share = rest / others.len() + usize::from(j < rest % others.len());
-            take_from(&mut pools, c, share, &mut idxs, rng);
+            take_slice(&mut remaining, c, share, &mut slices, &mut have);
         }
         // top up from any non-empty pool if some pools dried out
-        while idxs.len() < quota {
-            let Some(c) = (0..classes).find(|&c| !pools[c].is_empty()) else { break };
-            take_from(&mut pools, c, quota - idxs.len(), &mut idxs, rng);
+        while have < quota {
+            let Some(c) = (0..classes).find(|&c| remaining[c] > 0) else { break };
+            take_slice(&mut remaining, c, quota - have, &mut slices, &mut have);
         }
-        assert_eq!(idxs.len(), quota, "client {client} quota unmet");
-        out.push(idxs);
+        assert_eq!(have, quota, "client {client} quota unmet");
+        shards.push(slices);
     }
-    out
+    PartitionPlan { pools, shards }
 }
 
 /// φ-scheme (missing-class). Each client holds `classes - missing` classes
@@ -75,36 +168,32 @@ pub fn phi_partition(
     quota: usize,
     missing: usize,
     rng: &mut Rng,
-) -> Vec<Vec<usize>> {
+) -> PartitionPlan {
     assert!(missing < classes, "cannot miss all classes");
     assert!(n_clients * quota <= labels.len(), "not enough samples");
     let mut pools = by_class(labels, classes);
     for p in pools.iter_mut() {
         rng.shuffle(p);
     }
+    let mut remaining: Vec<usize> = pools.iter().map(Vec::len).collect();
     let keep = classes - missing;
-    let mut out = Vec::with_capacity(n_clients);
+    let mut shards = Vec::with_capacity(n_clients);
     for client in 0..n_clients {
         let kept = rng.sample_distinct(classes, keep);
-        let mut idxs = Vec::with_capacity(quota);
+        let mut slices = Vec::new();
+        let mut have = 0usize;
         for (j, &c) in kept.iter().enumerate() {
             let share = quota / keep + usize::from(j < quota % keep);
-            take_from(&mut pools, c, share, &mut idxs, rng);
+            take_slice(&mut remaining, c, share, &mut slices, &mut have);
         }
-        while idxs.len() < quota {
-            let Some(c) = (0..classes).find(|&c| !pools[c].is_empty()) else { break };
-            take_from(&mut pools, c, quota - idxs.len(), &mut idxs, rng);
+        while have < quota {
+            let Some(c) = (0..classes).find(|&c| remaining[c] > 0) else { break };
+            take_slice(&mut remaining, c, quota - have, &mut slices, &mut have);
         }
-        assert_eq!(idxs.len(), quota, "client {client} quota unmet");
-        out.push(idxs);
+        assert_eq!(have, quota, "client {client} quota unmet");
+        shards.push(slices);
     }
-    out
-}
-
-fn take_from(pools: &mut [Vec<usize>], class: usize, want: usize, out: &mut Vec<usize>, _rng: &mut Rng) {
-    let pool = &mut pools[class];
-    let take = want.min(pool.len());
-    out.extend(pool.drain(pool.len() - take..));
+    PartitionPlan { pools, shards }
 }
 
 /// Measure the dominant-class fraction of a partition (diagnostics + tests).
@@ -129,16 +218,78 @@ mod tests {
         (0..n).map(|i| (i % classes) as i32).collect()
     }
 
+    /// The pre-plan eager Γ partitioner, verbatim semantics (actual pool
+    /// drains): the oracle `client_indices` must reproduce byte for byte.
+    fn eager_gamma_reference(
+        labels: &[i32],
+        classes: usize,
+        n_clients: usize,
+        quota: usize,
+        gamma_pct: f64,
+        rng: &mut Rng,
+    ) -> Vec<Vec<usize>> {
+        let mut pools = by_class(labels, classes);
+        for p in pools.iter_mut() {
+            rng.shuffle(p);
+        }
+        let drain = |pools: &mut [Vec<usize>], class: usize, want: usize, out: &mut Vec<usize>| {
+            let pool = &mut pools[class];
+            let take = want.min(pool.len());
+            out.extend(pool.drain(pool.len() - take..));
+        };
+        let frac = (gamma_pct / 100.0).clamp(0.0, 1.0);
+        let mut out = Vec::with_capacity(n_clients);
+        for client in 0..n_clients {
+            let dom = client % classes;
+            let n_dom = ((quota as f64) * frac).round() as usize;
+            let mut idxs = Vec::with_capacity(quota);
+            drain(&mut pools, dom, n_dom.min(quota), &mut idxs);
+            let rest = quota - idxs.len();
+            let others: Vec<usize> = (0..classes).filter(|&c| c != dom).collect();
+            for (j, &c) in others.iter().enumerate() {
+                let share = rest / others.len() + usize::from(j < rest % others.len());
+                drain(&mut pools, c, share, &mut idxs);
+            }
+            while idxs.len() < quota {
+                let Some(c) = (0..classes).find(|&c| !pools[c].is_empty()) else { break };
+                drain(&mut pools, c, quota - idxs.len(), &mut idxs);
+            }
+            out.push(idxs);
+        }
+        out
+    }
+
+    #[test]
+    fn plan_matches_eager_reference_bit_for_bit() {
+        // satellite contract: descriptors + on-demand materialization must
+        // be indistinguishable from the historical eager index lists —
+        // same RNG consumption (same seed in, same state out), same
+        // indices, same order
+        let l = labels(2000, 10);
+        for seed in [1u64, 9, 77] {
+            let mut plan_rng = Rng::new(seed);
+            let plan = gamma_partition(&l, 10, 20, 50, 40.0, &mut plan_rng);
+            let mut ref_rng = Rng::new(seed);
+            let reference = eager_gamma_reference(&l, 10, 20, 50, 40.0, &mut ref_rng);
+            assert_eq!(plan.materialize_all(), reference);
+            // identical downstream RNG state: the plan consumed exactly
+            // the draws the eager code did
+            assert_eq!(plan_rng.next_u64(), ref_rng.next_u64());
+        }
+    }
+
     #[test]
     fn gamma_no_duplicates_and_quota() {
         let l = labels(2000, 10);
         let mut rng = Rng::new(1);
-        let parts = gamma_partition(&l, 10, 20, 50, 40.0, &mut rng);
-        assert_eq!(parts.len(), 20);
+        let plan = gamma_partition(&l, 10, 20, 50, 40.0, &mut rng);
+        assert_eq!(plan.n_clients(), 20);
         let mut seen = std::collections::HashSet::new();
-        for p in &parts {
+        for c in 0..plan.n_clients() {
+            let p = plan.client_indices(c);
             assert_eq!(p.len(), 50);
-            for &i in p {
+            assert_eq!(plan.shard_len(c), 50);
+            for &i in &p {
                 assert!(seen.insert(i), "duplicate index {i}");
             }
         }
@@ -149,12 +300,11 @@ mod tests {
         let l = labels(5000, 10);
         let f = |g: f64| {
             let mut rng = Rng::new(2);
-            let parts = gamma_partition(&l, 10, 10, 100, g, &mut rng);
-            let avg: f64 = parts
-                .iter()
-                .map(|p| dominant_fraction(p, &l, 10))
+            let plan = gamma_partition(&l, 10, 10, 100, g, &mut rng);
+            let avg: f64 = (0..plan.n_clients())
+                .map(|c| dominant_fraction(&plan.client_indices(c), &l, 10))
                 .sum::<f64>()
-                / parts.len() as f64;
+                / plan.n_clients() as f64;
             avg
         };
         let iid = f(10.0);
@@ -169,10 +319,11 @@ mod tests {
         let l = labels(4000, 20);
         let mut rng = Rng::new(3);
         let missing = 8; // 40%
-        let parts = phi_partition(&l, 20, 10, 100, missing, &mut rng);
-        for p in &parts {
+        let plan = phi_partition(&l, 20, 10, 100, missing, &mut rng);
+        for c in 0..plan.n_clients() {
+            let p = plan.client_indices(c);
             let mut present = vec![false; 20];
-            for &i in p {
+            for &i in &p {
                 present[l[i] as usize] = true;
             }
             let held = present.iter().filter(|&&x| x).count();
@@ -184,9 +335,9 @@ mod tests {
     fn phi_zero_is_iid_like() {
         let l = labels(4000, 20);
         let mut rng = Rng::new(4);
-        let parts = phi_partition(&l, 20, 10, 200, 0, &mut rng);
-        for p in &parts {
-            let dom = dominant_fraction(p, &l, 20);
+        let plan = phi_partition(&l, 20, 10, 200, 0, &mut rng);
+        for c in 0..plan.n_clients() {
+            let dom = dominant_fraction(&plan.client_indices(c), &l, 20);
             assert!(dom < 0.10, "IID partition too skewed: {dom}");
         }
     }
@@ -195,8 +346,7 @@ mod tests {
     fn exhausts_gracefully_at_capacity() {
         let l = labels(500, 10);
         let mut rng = Rng::new(5);
-        let parts = gamma_partition(&l, 10, 10, 50, 80.0, &mut rng);
-        let total: usize = parts.iter().map(|p| p.len()).sum();
-        assert_eq!(total, 500);
+        let plan = gamma_partition(&l, 10, 10, 50, 80.0, &mut rng);
+        assert_eq!(plan.total_assigned(), 500);
     }
 }

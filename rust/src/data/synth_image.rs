@@ -75,12 +75,23 @@ impl ImageGen {
     /// The same `seed_protos` must be used for train and test so they
     /// share the class structure.
     pub fn generate(&self, n: usize, seed_protos: u64, rng: &mut Rng) -> ImageSet {
+        let mut labels: Vec<i32> = (0..n).map(|i| (i % self.classes) as i32).collect();
+        rng.shuffle(&mut labels);
+        self.generate_labeled(labels, seed_protos, rng)
+    }
+
+    /// Generate samples for a caller-provided label sequence — the lazy
+    /// population path synthesizes a client's non-IID shard by building
+    /// its label vector from the partition prior (dominant-class share,
+    /// missing classes) and a shard-keyed RNG, then calling this with
+    /// the same `seed_protos` as every other client and the test split
+    /// (prototypes are pure in `seed_protos`, so all shards share the
+    /// class structure without any global dataset existing).
+    pub fn generate_labeled(&self, labels: Vec<i32>, seed_protos: u64, rng: &mut Rng) -> ImageSet {
         let mut prng = Rng::new(seed_protos);
         let protos = self.prototypes(&mut prng);
         let size = self.hw * self.hw * self.channels;
-        let mut labels: Vec<i32> = (0..n).map(|i| (i % self.classes) as i32).collect();
-        rng.shuffle(&mut labels);
-        let mut pixels = vec![0.0f32; n * size];
+        let mut pixels = vec![0.0f32; labels.len() * size];
         let mix = self.mix as f32;
         for (i, &lab) in labels.iter().enumerate() {
             let gain = rng.uniform_in(0.8, 1.2) as f32;
@@ -123,6 +134,29 @@ mod tests {
         let b = gen.generate(20, 42, &mut Rng::new(7));
         assert_eq!(a.pixels, b.pixels);
         assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn generate_labeled_composes_to_generate() {
+        // the eager entry point is exactly shuffle + generate_labeled, so
+        // the lazy shard path shares every downstream byte
+        let gen = ImageGen::cifar_twin();
+        let a = gen.generate(30, 42, &mut Rng::new(7));
+        let mut rng = Rng::new(7);
+        let mut labels: Vec<i32> = (0..30).map(|i| (i % gen.classes) as i32).collect();
+        rng.shuffle(&mut labels);
+        let b = gen.generate_labeled(labels, 42, &mut rng);
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn generate_labeled_respects_labels_and_shares_protos() {
+        let gen = ImageGen::cifar_twin();
+        let skewed: Vec<i32> = (0..40).map(|i| if i < 32 { 3 } else { (i % 10) as i32 }).collect();
+        let ds = gen.generate_labeled(skewed.clone(), 42, &mut Rng::new(11));
+        assert_eq!(ds.labels, skewed);
+        assert_eq!(ds.pixels.len(), 40 * gen.hw * gen.hw * gen.channels);
     }
 
     #[test]

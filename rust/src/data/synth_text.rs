@@ -94,6 +94,42 @@ impl TextGen {
         let test = self.sample_stream(&global, None, test_len, &mut trng);
         TextSet { vocab: self.vocab, shards: out_shards, test }
     }
+
+    /// Freeze the global transition structure once (pure in `chain_seed`)
+    /// so per-client shards can be synthesized lazily, one at a time.
+    pub fn lazy(self, chain_seed: u64) -> LazyTextGen {
+        let mut rng = Rng::new(chain_seed);
+        let global = self.chain(&mut rng);
+        LazyTextGen { gen: self, global }
+    }
+}
+
+/// Lazy per-client text synthesis: the global chain is built once, each
+/// client's style chain + stream come from an independent keyed RNG. No
+/// per-population shard vector ever exists — a shard is a pure function
+/// of `(chain_seed, client_seed)`, synthesized on first touch.
+#[derive(Debug, Clone)]
+pub struct LazyTextGen {
+    gen: TextGen,
+    global: Vec<Vec<(i32, f64)>>,
+}
+
+impl LazyTextGen {
+    pub fn vocab(&self) -> usize {
+        self.gen.vocab
+    }
+
+    /// One client's shard: style chain + token stream from `client_seed`.
+    pub fn shard(&self, shard_len: usize, client_seed: u64) -> Vec<i32> {
+        let mut srng = Rng::new(client_seed);
+        let style = self.gen.chain(&mut srng);
+        self.gen.sample_stream(&self.global, Some(&style), shard_len, &mut srng)
+    }
+
+    /// A global-chain-only stream (the test split's distribution).
+    pub fn global_stream(&self, len: usize, seed: u64) -> Vec<i32> {
+        self.gen.sample_stream(&self.global, None, len, &mut Rng::new(seed))
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +155,29 @@ mod tests {
         let b = gen.generate(3, 100, 100, 5);
         assert_eq!(a.shards, b.shards);
         assert_eq!(a.test, b.test);
+    }
+
+    #[test]
+    fn lazy_shards_are_pure_and_styled() {
+        let lazy = TextGen::shakespeare_twin().lazy(21);
+        let a = lazy.shard(400, 77);
+        assert_eq!(a, lazy.shard(400, 77), "shard must be pure in its seed");
+        assert_eq!(a.len(), 400);
+        assert!(a.iter().all(|&t| (0..64).contains(&t)));
+        assert_ne!(a, lazy.shard(400, 78), "different clients get different styles");
+        // materialization order is unobservable
+        let other = TextGen::shakespeare_twin().lazy(21);
+        let _ = other.shard(400, 78);
+        assert_eq!(a, other.shard(400, 77));
+    }
+
+    #[test]
+    fn lazy_global_stream_is_pure() {
+        let lazy = TextGen::shakespeare_twin().lazy(21);
+        let t = lazy.global_stream(600, 5);
+        assert_eq!(t, lazy.global_stream(600, 5));
+        assert_eq!(t.len(), 600);
+        assert_eq!(lazy.vocab(), 64);
     }
 
     #[test]

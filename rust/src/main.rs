@@ -36,7 +36,19 @@
 //! straggler and surface infeasible static quorums as typed errors)
 //! --dropout-policy survivors|error (full-barrier reaction to a
 //! mid-round dropout: re-plan phase C over the survivors — default —
-//! or fail the run; default survivors).
+//! or fail the run; default survivors)
+//! --population eager|lazy (client-state model: `eager` — default,
+//! byte-identical to every prior release — materializes all N clients'
+//! data/devices/links up front; `lazy` derives per-client state on
+//! demand from `(seed, client_id)` via `simulation::population`, so a
+//! round costs O(cohort) in time and memory and `--clients 1000000`
+//! is practical; lazy is its own deterministic world, not bit-equal
+//! to eager)
+//! --hierarchy E (quorum mode only, default 1 = flat: split each
+//! round's cohort across E edge aggregators, each running the quorum
+//! policy over its sub-cohort and forwarding one composed update over
+//! a backhaul link; the root quorums over the E arrivals —
+//! `coordinator::hierarchy`. Requires --quorum and E ≤ --k).
 
 use anyhow::{anyhow, Result};
 use heroes::baselines::ALL_SCHEMES;

@@ -36,13 +36,33 @@
 //! nothing at all: it reproduces the historical default path byte for
 //! byte (both pinned in `tests/integration_parallel.rs`; the schedule
 //! purity itself in `tests/prop_coordinator.rs`).
+//!
+//! # Population model (`--population lazy`)
+//!
+//! The [`population`] module scales the same world to millions of
+//! clients: instead of enumerating a fleet and a dataset per client,
+//! a [`Population`] holds only the *priors* (capability-tier mix,
+//! data-size prior + jitter, availability via the scenario engine) and
+//! derives any client's device class, per-round throughput/link draws
+//! and shard descriptor as pure functions of `(seed, client, round)` —
+//! the same per-event-RNG idiom as the scenario schedules, so
+//! materialization order and caching are unobservable. Cohorts are
+//! sampled in O(K) by a sparse partial Fisher–Yates that replays
+//! `Rng::sample_distinct`'s exact draw sequence, and per-client state is
+//! memoized in a bounded, counting [`LazyCache`] whose stats let tests
+//! pin the O(cohort) bound at 1e5+ populations. The eager path stays the
+//! default and is byte-identical to its historical self; the sampling
+//! contract for cohorts, links and shards is documented on the
+//! [`population`] module itself.
 
 pub mod clock;
 pub mod device;
 pub mod network;
+pub mod population;
 pub mod scenario;
 
 pub use clock::{TrafficMeter, VirtualClock};
 pub use device::{ClientDevice, DeviceClass, DeviceFleet};
 pub use network::{LinkSample, NetworkModel, NetworkTrace};
+pub use population::{CacheStats, LazyCache, Population, PopulationSpec, ShardSpec};
 pub use scenario::{Scenario, ScenarioCtl, ScenarioError, SCENARIO_CATALOG};

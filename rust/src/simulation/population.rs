@@ -1,0 +1,448 @@
+//! Parametric population model: O(cohort) rounds at O(million) clients.
+//!
+//! The eager `FlEnv` world enumerates every client up front — device
+//! fleet, data shards, partitions — so building it and planning a round
+//! both cost O(population) even when only a K-client cohort participates.
+//! This module replaces enumeration with a **distribution**: a
+//! [`Population`] holds only the priors (capability-tier mix, data-size
+//! prior + jitter, the seed) and derives any individual client's state as
+//! a *pure function of `(seed, client_id)`* on first touch.
+//!
+//! # Lazy-materialization keys (determinism contract)
+//!
+//! Every per-client quantity gets its own salted RNG, exactly like the
+//! scenario engine's per-event RNGs — one fresh generator per
+//! `(salt, round, client)` key, never a shared cursor — so derivations
+//! are independent of materialization *order* and *count*: touching
+//! client 7 first or last, once or twice, caching it or not, yields the
+//! same bytes. That is what makes a bounded cache a pure optimization.
+//!
+//! | quantity            | key                              |
+//! |---------------------|----------------------------------|
+//! | device class        | `(CLASS, 0, client)`             |
+//! | per-round FLOP/s    | `(FLOPS, round, client)`         |
+//! | per-round WAN link  | `(LINK, round, client)`          |
+//! | cohort draw         | `(COHORT, round, 0)`             |
+//! | shard quota + seed  | `(SHARD, 0, client)`             |
+//!
+//! # Cohort sampling contract
+//!
+//! [`Population::sample_cohort`] consumes exactly the `below(n - i)`
+//! draw sequence of [`Rng::sample_distinct`], but runs the partial
+//! Fisher–Yates over a sparse displacement map instead of a
+//! `(0..population)` vector — O(k) time and memory, bit-identical output
+//! ([`sparse_sample_distinct`]; equivalence property-tested in
+//! rust/tests/prop_coordinator.rs). Unavailable picks (scenario windows)
+//! are then replaced by bounded keyed rejection draws, so a windowed
+//! round still fills its cohort without an O(population) availability
+//! scan.
+//!
+//! Per-client *state* (synthesized shards, loaders) is memoized in a
+//! bounded [`LazyCache`] whose [`CacheStats`] counters let tests assert
+//! the O(cohort) bound: materializations ≤ rounds·K and resident entries
+//! ≤ capacity, independent of population size.
+
+use crate::simulation::device::{DeviceClass, DeviceFleet};
+use crate::util::rng::Rng;
+use std::collections::{HashMap, HashSet};
+
+/// Key-mix salts for per-client/per-round derivations (same idiom as the
+/// scenario engine's event salts — distinct constants per quantity).
+const POP_SALT_CLASS: u64 = 0x9E6B_5533_D00D_0010;
+const POP_SALT_FLOPS: u64 = 0x9E6B_5533_D00D_0011;
+const POP_SALT_LINK: u64 = 0x9E6B_5533_D00D_0012;
+const POP_SALT_COHORT: u64 = 0x9E6B_5533_D00D_0013;
+const POP_SALT_SHARD: u64 = 0x9E6B_5533_D00D_0014;
+
+/// One fresh generator per `(salt, a, b)` key: mixes the key injectively
+/// enough for SplitMix64's whitening (the +1s keep index 0 off the raw
+/// salt).
+fn keyed_rng(seed: u64, salt: u64, a: u64, b: u64) -> Rng {
+    let mix = salt
+        .wrapping_add((a.wrapping_add(1)).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add((b.wrapping_add(1)).wrapping_mul(0xD1B5_4A32_D192_ED03));
+    Rng::new(seed ^ mix)
+}
+
+/// The priors a population is drawn from.
+#[derive(Debug, Clone)]
+pub struct PopulationSpec {
+    pub n_clients: usize,
+    pub seed: u64,
+    /// capability-tier mix (device class, weight)
+    pub mix: Vec<(DeviceClass, f64)>,
+    /// ± fractional jitter on per-client shard size around the base quota
+    pub size_jitter: f64,
+}
+
+impl PopulationSpec {
+    /// The paper-like default mix at a given scale.
+    pub fn default_mix(n_clients: usize, seed: u64) -> PopulationSpec {
+        PopulationSpec {
+            n_clients,
+            seed,
+            mix: DeviceFleet::DEFAULT_MIX.to_vec(),
+            size_jitter: 0.25,
+        }
+    }
+}
+
+/// A sampled client's data shard, as a descriptor: synthesize `quota`
+/// samples from `seed` on first touch — never an index list into a
+/// population-sized dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub client: usize,
+    pub quota: usize,
+    pub seed: u64,
+}
+
+/// A parametric client population. Holds O(1) state; every query is a
+/// pure function of `(spec.seed, client, round)`.
+#[derive(Debug, Clone)]
+pub struct Population {
+    spec: PopulationSpec,
+    weights: Vec<f64>,
+}
+
+impl Population {
+    pub fn new(spec: PopulationSpec) -> Population {
+        assert!(spec.n_clients > 0, "population must be non-empty");
+        assert!(!spec.mix.is_empty(), "population mix must be non-empty");
+        let weights = spec.mix.iter().map(|(_, w)| *w).collect();
+        Population { spec, weights }
+    }
+
+    pub fn len(&self) -> usize {
+        self.spec.n_clients
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spec.n_clients == 0
+    }
+
+    pub fn spec(&self) -> &PopulationSpec {
+        &self.spec
+    }
+
+    /// The client's capability tier — same weighted draw the eager
+    /// `DeviceFleet` makes, keyed instead of sequential.
+    pub fn device_class(&self, client: usize) -> DeviceClass {
+        let mut rng = keyed_rng(self.spec.seed, POP_SALT_CLASS, 0, client as u64);
+        self.spec.mix[rng.weighted(&self.weights)].0
+    }
+
+    /// Per-round sustained throughput draw — the `ClientDevice` Gaussian
+    /// (mean/cv per class, clamped to [0.4, 1.8]·mean), keyed by
+    /// `(round, client)`.
+    pub fn flops(&self, client: usize, round: usize) -> f64 {
+        let class = self.device_class(client);
+        let mean = class.mean_flops();
+        let std = mean * class.cv();
+        let mut rng = keyed_rng(self.spec.seed, POP_SALT_FLOPS, round as u64, client as u64);
+        rng.normal_ms(mean, std).clamp(mean * 0.4, mean * 1.8)
+    }
+
+    /// Fresh generator for the client's WAN link draw this round (the
+    /// caller feeds it to `NetworkModel::sample[_scaled]`).
+    pub fn link_rng(&self, client: usize, round: usize) -> Rng {
+        keyed_rng(self.spec.seed, POP_SALT_LINK, round as u64, client as u64)
+    }
+
+    /// The client's data-size prior draw: base quota jittered by
+    /// ±`size_jitter`, plus the seed its shard is synthesized from.
+    pub fn shard_spec(&self, client: usize, base_quota: usize) -> ShardSpec {
+        let mut rng = keyed_rng(self.spec.seed, POP_SALT_SHARD, 0, client as u64);
+        let j = self.spec.size_jitter.clamp(0.0, 0.9);
+        let scale = rng.uniform_in(1.0 - j, 1.0 + j);
+        let quota = ((base_quota as f64 * scale).round() as usize).max(1);
+        ShardSpec { client, quota, seed: rng.next_u64() }
+    }
+
+    /// This round's cohort generator (exposed so tests can replay the
+    /// exact draw stream against the dense reference sampler).
+    pub fn cohort_rng(&self, round: usize) -> Rng {
+        keyed_rng(self.spec.seed, POP_SALT_COHORT, round as u64, 0)
+    }
+
+    /// Sample a K-client cohort for `round`, O(k) in time and memory.
+    ///
+    /// With full availability this is exactly
+    /// `cohort_rng(round).sample_distinct(n, k)` (bit-identical, see
+    /// [`sparse_sample_distinct`]). Unavailable picks are replaced by
+    /// bounded rejection draws from the same generator; if availability
+    /// is too thin the cohort comes back short (downstream planners
+    /// already treat a thin or empty cohort as a typed condition).
+    pub fn sample_cohort(
+        &self,
+        round: usize,
+        k: usize,
+        available: impl Fn(usize) -> bool,
+    ) -> Vec<usize> {
+        let n = self.spec.n_clients;
+        let k = k.min(n);
+        let mut rng = self.cohort_rng(round);
+        let mut picked = sparse_sample_distinct(n, k, &mut rng);
+        picked.retain(|&c| available(c));
+        if picked.len() == k {
+            return picked;
+        }
+        // top up around unavailable picks: keyed rejection, bounded so a
+        // near-empty availability window terminates with a short cohort
+        let mut chosen: HashSet<usize> = picked.iter().copied().collect();
+        let budget = 64 * k + 256;
+        for _ in 0..budget {
+            if picked.len() == k {
+                break;
+            }
+            let c = rng.below(n);
+            if chosen.insert(c) && available(c) {
+                picked.push(c);
+            }
+        }
+        picked
+    }
+}
+
+/// Partial Fisher–Yates over a sparse displacement map: bit-identical to
+/// [`Rng::sample_distinct`] (same `below(n - i)` draw per step, same
+/// output prefix) without ever allocating the `(0..n)` vector — O(k)
+/// instead of O(population).
+pub fn sparse_sample_distinct(n: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
+    assert!(k <= n, "cannot sample {k} from {n}");
+    // map[i] = value currently at virtual position i (identity if absent)
+    let mut map: HashMap<usize, usize> = HashMap::with_capacity(2 * k);
+    let at = |map: &HashMap<usize, usize>, i: usize| map.get(&i).copied().unwrap_or(i);
+    let mut out = Vec::with_capacity(k);
+    for i in 0..k {
+        let j = i + rng.below(n - i);
+        let vi = at(&map, i);
+        let vj = at(&map, j);
+        out.push(vj);
+        map.insert(j, vi);
+        map.insert(i, vj);
+    }
+    out
+}
+
+/// Materialization counters for a [`LazyCache`] — the observable the
+/// O(cohort) acceptance tests pin.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// values built from scratch (cache misses)
+    pub materializations: usize,
+    /// lookups served from the cache
+    pub hits: usize,
+    /// values evicted to respect the capacity bound
+    pub evictions: usize,
+    /// high-water mark of resident entries
+    pub peak_resident: usize,
+}
+
+/// A bounded, counting memo for lazily materialized per-client state
+/// (synthesized shards, device profiles). Eviction is least-recently-used
+/// with a linear scan — capacity is O(cohort), so the scan is too.
+///
+/// Values are handed out by clone; callers store `Arc`s so an evicted
+/// shard stays alive for any in-flight stream that still holds it.
+#[derive(Debug)]
+pub struct LazyCache<T> {
+    capacity: usize,
+    tick: u64,
+    map: HashMap<usize, (u64, T)>,
+    stats: CacheStats,
+}
+
+impl<T: Clone> LazyCache<T> {
+    pub fn new(capacity: usize) -> LazyCache<T> {
+        assert!(capacity > 0, "cache capacity must be positive");
+        LazyCache { capacity, tick: 0, map: HashMap::new(), stats: CacheStats::default() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn resident(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// Fetch `key`, materializing it with `build` on a miss. Because
+    /// every cached quantity is a pure function of its key, eviction and
+    /// rebuild are invisible to callers (bit-identical values).
+    pub fn get_or_insert_with(&mut self, key: usize, build: impl FnOnce() -> T) -> T {
+        self.tick += 1;
+        if let Some((used, v)) = self.map.get_mut(&key) {
+            *used = self.tick;
+            self.stats.hits += 1;
+            return v.clone();
+        }
+        if self.map.len() >= self.capacity {
+            // evict the least-recently-used entry
+            if let Some((&old, _)) = self.map.iter().min_by_key(|(_, (used, _))| *used) {
+                self.map.remove(&old);
+                self.stats.evictions += 1;
+            }
+        }
+        let v = build();
+        self.map.insert(key, (self.tick, v.clone()));
+        self.stats.materializations += 1;
+        self.stats.peak_resident = self.stats.peak_resident.max(self.map.len());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_matches_dense_sample_distinct() {
+        for seed in 0..20u64 {
+            let n = 10 + (seed as usize * 37) % 400;
+            let k = 1 + (seed as usize * 13) % n.min(40);
+            let mut a = Rng::new(seed ^ 0xC0FFEE);
+            let mut b = a.clone();
+            let dense = a.sample_distinct(n, k);
+            let sparse = sparse_sample_distinct(n, k, &mut b);
+            assert_eq!(sparse, dense, "n={n} k={k}");
+            // identical residual RNG state too
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn sparse_full_permutation() {
+        let mut a = Rng::new(3);
+        let mut b = a.clone();
+        assert_eq!(sparse_sample_distinct(64, 64, &mut b), a.sample_distinct(64, 64));
+    }
+
+    #[test]
+    fn derivations_are_order_independent() {
+        let pop = Population::new(PopulationSpec::default_mix(1000, 42));
+        // touch in one order...
+        let fwd: Vec<_> = (0..100).map(|c| (pop.device_class(c), pop.flops(c, 3))).collect();
+        // ...and the reverse; same bytes
+        let mut rev: Vec<_> =
+            (0..100).rev().map(|c| (pop.device_class(c), pop.flops(c, 3))).collect();
+        rev.reverse();
+        assert_eq!(
+            fwd.iter().map(|(c, f)| (c.name(), f.to_bits())).collect::<Vec<_>>(),
+            rev.iter().map(|(c, f)| (c.name(), f.to_bits())).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn class_mix_matches_priors() {
+        let pop = Population::new(PopulationSpec::default_mix(4000, 9));
+        let frac = |want: DeviceClass| {
+            (0..4000).filter(|&c| pop.device_class(c) == want).count() as f64 / 4000.0
+        };
+        assert!((frac(DeviceClass::Laptop) - 0.4).abs() < 0.05);
+        assert!((frac(DeviceClass::AgxXavier) - 0.1).abs() < 0.03);
+    }
+
+    #[test]
+    fn flops_stay_in_class_band() {
+        let pop = Population::new(PopulationSpec::default_mix(100, 7));
+        for c in 0..100 {
+            let mean = pop.device_class(c).mean_flops();
+            for r in 0..5 {
+                let q = pop.flops(c, r);
+                assert!(q >= mean * 0.4 && q <= mean * 1.8, "q={q} mean={mean}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_spec_jitters_around_base() {
+        let pop = Population::new(PopulationSpec::default_mix(500, 11));
+        let mut sum = 0.0;
+        for c in 0..500 {
+            let s = pop.shard_spec(c, 60);
+            assert!(s.quota >= 45 && s.quota <= 75, "quota {} outside ±25%", s.quota);
+            assert_eq!(s, pop.shard_spec(c, 60), "shard spec must be pure");
+            sum += s.quota as f64;
+        }
+        let mean = sum / 500.0;
+        assert!((mean - 60.0).abs() < 2.0, "jitter not centered: {mean}");
+    }
+
+    #[test]
+    fn cohort_is_distinct_in_range_and_deterministic() {
+        let pop = Population::new(PopulationSpec::default_mix(100_000, 5));
+        for round in 0..4 {
+            let a = pop.sample_cohort(round, 16, |_| true);
+            let b = pop.sample_cohort(round, 16, |_| true);
+            assert_eq!(a, b);
+            assert_eq!(a.len(), 16);
+            let mut s = a.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 16);
+            assert!(s.iter().all(|&c| c < 100_000));
+        }
+        // different rounds draw different cohorts (overwhelmingly)
+        assert_ne!(pop.sample_cohort(0, 16, |_| true), pop.sample_cohort(1, 16, |_| true));
+    }
+
+    #[test]
+    fn cohort_respects_availability() {
+        let pop = Population::new(PopulationSpec::default_mix(10_000, 6));
+        let avail = |c: usize| c % 3 == 0;
+        let cohort = pop.sample_cohort(2, 32, avail);
+        assert_eq!(cohort.len(), 32);
+        assert!(cohort.iter().all(|&c| avail(c)));
+        let mut s = cohort.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 32);
+    }
+
+    #[test]
+    fn cohort_thin_availability_comes_back_short_not_hung() {
+        let pop = Population::new(PopulationSpec::default_mix(1000, 8));
+        let cohort = pop.sample_cohort(0, 16, |c| c == 17);
+        assert!(cohort.len() <= 1);
+        assert!(cohort.iter().all(|&c| c == 17));
+    }
+
+    #[test]
+    fn cache_counts_and_bounds() {
+        let mut cache: LazyCache<usize> = LazyCache::new(4);
+        for round in 0..10 {
+            for key in [round, round + 1, round + 2] {
+                let v = cache.get_or_insert_with(key, || key * 10);
+                assert_eq!(v, key * 10);
+            }
+            assert!(cache.resident() <= 4);
+        }
+        let st = cache.stats().clone();
+        assert!(st.peak_resident <= 4);
+        assert!(st.hits > 0);
+        // keys 0..=11 each materialized at least once; two of each round's
+        // three keys are re-hits from the previous round
+        assert!(st.materializations >= 12);
+        assert_eq!(st.materializations, st.evictions + cache.resident());
+    }
+
+    #[test]
+    fn cache_rebuild_after_eviction_is_invisible() {
+        let mut cache: LazyCache<u64> = LazyCache::new(2);
+        let build = |k: usize| Rng::new(k as u64).next_u64();
+        let first = cache.get_or_insert_with(7, || build(7));
+        // push 7 out...
+        cache.get_or_insert_with(1, || build(1));
+        cache.get_or_insert_with(2, || build(2));
+        cache.get_or_insert_with(3, || build(3));
+        // ...and rebuild: pure keys ⇒ identical value
+        let again = cache.get_or_insert_with(7, || build(7));
+        assert_eq!(first, again);
+        assert!(cache.stats().evictions >= 2);
+    }
+}

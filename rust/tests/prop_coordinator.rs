@@ -1,8 +1,10 @@
 //! Property-based tests (prop-lite) over the coordinator's pure logic:
 //! block ledger balance, round-planner invariants, aggregation
-//! conservation, partitioner correctness, and the scenario engine's
+//! conservation, partitioner correctness, the scenario engine's
 //! schedule invariants (trace bounds, window monotonicity, schedule
-//! purity, non-quorum-dropout merge invariance). None of these need
+//! purity, non-quorum-dropout merge invariance), and the lazy
+//! population model (sparse ≡ dense cohort sampling, derivation
+//! purity, the O(cohort) materialization bound). None of these need
 //! artifacts.
 
 use heroes::coordinator::aggregate::{ComposedAccumulator, DenseAccumulator};
@@ -15,7 +17,10 @@ use heroes::data::partition::{gamma_partition, phi_partition};
 use heroes::model::tests_support::toy_info;
 use heroes::model::{ComposedGlobal, DenseGlobal};
 use heroes::simulation::network::{MBIT, MIN_BANDWIDTH_SCALE};
-use heroes::simulation::{LinkSample, NetworkModel, Scenario, SCENARIO_CATALOG};
+use heroes::simulation::population::sparse_sample_distinct;
+use heroes::simulation::{
+    LazyCache, LinkSample, NetworkModel, Population, PopulationSpec, Scenario, SCENARIO_CATALOG,
+};
 use heroes::tensor::Tensor;
 use heroes::util::prop::check;
 use heroes::util::rng::Rng;
@@ -742,13 +747,17 @@ fn prop_gamma_partition_invariants() {
             let n = classes * clients * quota; // plenty of samples
             let labels: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
             let mut rng = Rng::new(7);
-            let parts = gamma_partition(&labels, classes, clients, quota, *gamma, &mut rng);
+            let plan = gamma_partition(&labels, classes, clients, quota, *gamma, &mut rng);
+            if plan.n_clients() != clients {
+                return Err("lost a client".into());
+            }
             let mut seen = std::collections::HashSet::new();
-            for p in &parts {
-                if p.len() != quota {
+            for c in 0..plan.n_clients() {
+                let p = plan.client_indices(c);
+                if p.len() != quota || plan.shard_len(c) != quota {
                     return Err("quota violated".into());
                 }
-                for &i in p {
+                for &i in &p {
                     if !seen.insert(i) {
                         return Err(format!("duplicate sample {i}"));
                     }
@@ -778,16 +787,139 @@ fn prop_phi_partition_missing_classes() {
             let n = classes * clients * quota; // ample
             let labels: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
             let mut rng = Rng::new(9);
-            let parts = phi_partition(&labels, classes, clients, quota, missing, &mut rng);
-            for p in &parts {
+            let plan = phi_partition(&labels, classes, clients, quota, missing, &mut rng);
+            for c in 0..plan.n_clients() {
                 let mut present = vec![false; classes];
-                for &i in p {
+                for &i in &plan.client_indices(c) {
                     present[labels[i] as usize] = true;
                 }
                 let held = present.iter().filter(|&&x| x).count();
                 if held > classes - missing {
                     return Err(format!("client holds {held} > {} classes", classes - missing));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sparse_cohort_sampler_is_bit_identical_to_dense() {
+    // The O(k) sparse Fisher–Yates consumes exactly the `below(n - i)`
+    // draw sequence of Rng::sample_distinct: for any (n, k, seed) the
+    // output AND the residual RNG state are identical — the population
+    // sampler is a pure optimization, not a new distribution.
+    check(
+        83,
+        200,
+        |rng| {
+            let n = 1 + rng.below(5000);
+            let k = rng.below(n + 1).min(64);
+            (n, k, rng.next_u64())
+        },
+        |&(n, k, seed)| {
+            let mut dense_rng = Rng::new(seed ^ 0x5EED);
+            let mut sparse_rng = Rng::new(seed ^ 0x5EED);
+            let dense = dense_rng.sample_distinct(n, k);
+            let sparse = sparse_sample_distinct(n, k, &mut sparse_rng);
+            if sparse != dense {
+                return Err(format!("n={n} k={k}: sparse {sparse:?} != dense {dense:?}"));
+            }
+            if dense_rng.next_u64() != sparse_rng.next_u64() {
+                return Err(format!("n={n} k={k}: residual RNG state diverged"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_population_derivations_are_pure_for_any_evaluation_order() {
+    // Every per-client quantity is a fresh keyed RNG — no shared cursor —
+    // so re-deriving (class, flops, link draw, shard spec) in a shuffled
+    // order, with repeats, reproduces the forward sweep bit for bit.
+    // This is the invariant that makes the bounded cache's evictions
+    // invisible and lazy runs independent of cohort touch order.
+    check(
+        89,
+        40,
+        |rng| (rng.next_u64(), rng.next_u64(), 2 + rng.below(6)),
+        |&(seed, shuffle_seed, rounds)| {
+            let pop = Population::new(PopulationSpec::default_mix(100_000, seed));
+            let net = NetworkModel::default();
+            let cells: Vec<(usize, usize)> = (0..rounds)
+                .flat_map(|r| pop.sample_cohort(r, 8, |_| true).into_iter().map(move |c| (r, c)))
+                .collect();
+            let derive = |&(r, c): &(usize, usize)| {
+                let link = net.sample(&mut pop.link_rng(c, r));
+                (
+                    pop.device_class(c).name(),
+                    pop.flops(c, r).to_bits(),
+                    link.up_bps.to_bits(),
+                    pop.shard_spec(c, 60),
+                )
+            };
+            let forward: Vec<_> = cells.iter().map(derive).collect();
+            let mut order: Vec<usize> = (0..cells.len()).collect();
+            Rng::new(shuffle_seed).shuffle(&mut order);
+            for &i in order.iter().chain(order.iter().rev()) {
+                if derive(&cells[i]) != forward[i] {
+                    return Err(format!(
+                        "(round {}, client {}): derivation changed on re-evaluation",
+                        cells[i].0, cells[i].1
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lazy_rounds_materialize_o_cohort_not_o_population() {
+    // The acceptance bound behind `--population lazy`: driving R rounds
+    // of K-client cohorts against a 100 000-client population through a
+    // bounded LazyCache touches at most R·K client states (at most one
+    // materialization per cohort slot — re-sampled clients may hit) and
+    // never holds more than the O(cohort) capacity resident. Nothing
+    // here depends on the population size, which is the point.
+    check(
+        97,
+        20,
+        |rng| (rng.next_u64(), 2 + rng.below(4), 4 + rng.below(29)),
+        |&(seed, rounds, k)| {
+            let population = 100_000usize;
+            let pop = Population::new(PopulationSpec::default_mix(population, seed));
+            let capacity = 4 * k;
+            let mut cache: LazyCache<u64> = LazyCache::new(capacity);
+            for round in 0..rounds {
+                let cohort = pop.sample_cohort(round, k, |_| true);
+                if cohort.len() != k {
+                    return Err(format!("round {round}: cohort {} != {k}", cohort.len()));
+                }
+                for &c in &cohort {
+                    // stand-in for shard synthesis: a pure function of the
+                    // client's shard spec (cheap, so 20 cases stay fast)
+                    let spec = pop.shard_spec(c, 60);
+                    let v = cache.get_or_insert_with(c, || spec.seed ^ spec.quota as u64);
+                    if v != spec.seed ^ spec.quota as u64 {
+                        return Err(format!("client {c}: cache returned a foreign value"));
+                    }
+                }
+                if cache.resident() > capacity {
+                    return Err(format!("resident {} > capacity {capacity}", cache.resident()));
+                }
+            }
+            let st = cache.stats();
+            if st.materializations > rounds * k {
+                return Err(format!(
+                    "{} materializations > rounds·K = {} at population {population}",
+                    st.materializations,
+                    rounds * k
+                ));
+            }
+            if st.peak_resident > capacity {
+                return Err(format!("peak resident {} > capacity {capacity}", st.peak_resident));
             }
             Ok(())
         },
