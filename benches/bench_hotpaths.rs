@@ -7,6 +7,8 @@
 //! population scales.
 
 use heroes::baselines::{DenseServer, Strategy};
+use heroes::codec::json::Json;
+use heroes::codec::{self, CodecCfg, Encoding, FrameMeta};
 use heroes::config::{ExperimentConfig, QuorumKnob, Scale};
 use heroes::coordinator::aggregate::ComposedAccumulator;
 use heroes::coordinator::assignment::{plan_round, ClientStatus, ControllerCfg};
@@ -27,121 +29,63 @@ use heroes::simulation::{
 use heroes::tensor::blocks::{gather_blocks, scatter_blocks_add};
 use heroes::tensor::Tensor;
 use heroes::util::bench::Bench;
-use heroes::util::json::Json;
 use heroes::util::rng::Rng;
 use heroes::util::stats;
 
 fn main() {
     let b = Bench::default();
 
+    // `HEROES_BENCH_ONLY=<section>` restricts the run to one section
+    // (micro | population | codec | driver) so CI can run each
+    // acceptance bench as its own named step; unset runs everything.
+    let only = std::env::var("HEROES_BENCH_ONLY").ok();
+    let run_section = |name: &str| only.as_deref().map_or(true, |o| o == name);
+
     // ---- pure-rust substrate paths (always available) ----
-    let mut rng = Rng::new(1);
-    let u = Tensor::randn(&[8, 128], 0.1, &mut rng);
-    b.run("blocks/gather 4-of-16 (R=8,O=8)", |_| gather_blocks(&u, &[1, 5, 9, 13], 8));
+    if run_section("micro") {
+        let mut rng = Rng::new(1);
+        let u = Tensor::randn(&[8, 128], 0.1, &mut rng);
+        b.run("blocks/gather 4-of-16 (R=8,O=8)", |_| gather_blocks(&u, &[1, 5, 9, 13], 8));
 
-    let reduced = gather_blocks(&u, &[1, 5, 9, 13], 8);
-    b.run("blocks/scatter+count", |_| {
-        let mut sums = Tensor::zeros(&[8, 128]);
-        let mut counts = vec![0u32; 16];
-        scatter_blocks_add(&mut sums, &mut counts, &reduced, &[1, 5, 9, 13], 8);
-        sums
-    });
+        let reduced = gather_blocks(&u, &[1, 5, 9, 13], 8);
+        b.run("blocks/scatter+count", |_| {
+            let mut sums = Tensor::zeros(&[8, 128]);
+            let mut counts = vec![0u32; 16];
+            scatter_blocks_add(&mut sums, &mut counts, &reduced, &[1, 5, 9, 13], 8);
+            sums
+        });
 
-    // HeteroFL prefix extraction/aggregation (row-copy fast path)
-    let w = Tensor::randn(&[3, 3, 64, 128], 0.1, &mut rng);
-    b.run("tensor/slice_prefix (3,3,64,128)->(3,3,32,64)", |_| {
-        w.slice_prefix(&[3, 3, 32, 64])
-    });
-    let half = w.slice_prefix(&[3, 3, 32, 64]);
-    b.run("tensor/scatter_prefix_add (3,3,32,64)", |_| {
-        let mut full = Tensor::zeros(&[3, 3, 64, 128]);
-        let mut counts = vec![0u32; full.len()];
-        full.scatter_prefix_add(&half, &mut counts);
-        full
-    });
+        // HeteroFL prefix extraction/aggregation (row-copy fast path)
+        let w = Tensor::randn(&[3, 3, 64, 128], 0.1, &mut rng);
+        b.run("tensor/slice_prefix (3,3,64,128)->(3,3,32,64)", |_| {
+            w.slice_prefix(&[3, 3, 32, 64])
+        });
+        let half = w.slice_prefix(&[3, 3, 32, 64]);
+        b.run("tensor/scatter_prefix_add (3,3,32,64)", |_| {
+            let mut full = Tensor::zeros(&[3, 3, 64, 128]);
+            let mut counts = vec![0u32; full.len()];
+            full.scatter_prefix_add(&half, &mut counts);
+            full
+        });
 
-    let gen = ImageGen::cifar_twin();
-    b.run("data/synthesize 64 images", |i| gen.generate(64, i, &mut Rng::new(i)));
+        let gen = ImageGen::cifar_twin();
+        b.run("data/synthesize 64 images", |i| gen.generate(64, i, &mut Rng::new(i)));
+    }
+
+    // ---- codec: wire-format encode/decode throughput + ratio ----
+    if run_section("codec") {
+        codec_bench(&b);
+    }
 
     // ---- population scale: O(cohort) round cost from 1e3 to 1e6 ----
-    // The lazy population model's acceptance bench: per-round planning
-    // work (cohort sampling + per-member device/link/shard derivations
-    // through a bounded cache) must stay flat as the population grows
-    // 1000x — nothing on this path may enumerate clients. Emitted as
-    // BENCH_population.json; a super-linear blow-up (worst scale > 8x
-    // the smallest) fails the bench, which CI runs as a named step.
-    let net = NetworkModel::default();
-    let pop_rounds = 50usize;
-    let pop_k = 16usize;
-    let mut pop_entries: Vec<(&str, Json)> = Vec::new();
-    let mut per_round: Vec<f64> = Vec::new();
-    for (label, n) in
-        [("1e3", 1_000usize), ("1e4", 10_000), ("1e5", 100_000), ("1e6", 1_000_000)]
-    {
-        let pop = Population::new(PopulationSpec::default_mix(n, 42));
-        let mut cache: LazyCache<u64> = LazyCache::new(4 * pop_k);
-        let mut sink = 0u64;
-        let round_work = |round: usize, cache: &mut LazyCache<u64>, sink: &mut u64| {
-            let cohort = pop.sample_cohort(round, pop_k, |_| true);
-            assert_eq!(cohort.len(), pop_k, "population {n}: short cohort");
-            for &c in &cohort {
-                let q = pop.flops(c, round);
-                let link = net.sample(&mut pop.link_rng(c, round));
-                let spec = pop.shard_spec(c, 60);
-                *sink ^= cache.get_or_insert_with(c, || spec.seed ^ spec.quota as u64);
-                *sink ^= q.to_bits() ^ link.up_bps.to_bits();
-            }
-        };
-        // one untimed warmup round per scale (allocator + map warm-up)
-        round_work(pop_rounds, &mut cache, &mut sink);
-        let t0 = std::time::Instant::now();
-        for round in 0..pop_rounds {
-            round_work(round, &mut cache, &mut sink);
-        }
-        let secs = t0.elapsed().as_secs_f64() / pop_rounds as f64;
-        std::hint::black_box(sink);
-        let st = cache.stats().clone();
-        println!(
-            "population/round K={pop_k} n={label:<4} {:9.2} µs/round, \
-             {} materializations, peak resident {}",
-            1e6 * secs,
-            st.materializations,
-            st.peak_resident
-        );
-        per_round.push(secs);
-        pop_entries.push((
-            label,
-            Json::obj(vec![
-                ("clients", Json::Num(n as f64)),
-                ("round_secs", Json::Num(secs)),
-                ("materializations", Json::Num(st.materializations as f64)),
-                ("peak_resident", Json::Num(st.peak_resident as f64)),
-                ("evictions", Json::Num(st.evictions as f64)),
-            ]),
-        ));
-    }
-    let floor = per_round.iter().copied().fold(f64::INFINITY, f64::min);
-    let worst = per_round.iter().copied().fold(0.0f64, f64::max);
-    let ratio = worst / floor.max(1e-9);
-    write_snap(
-        "BENCH_population.json",
-        &Json::obj(vec![
-            ("bench", Json::Str("population_scale_round_cost".into())),
-            ("k_per_round", Json::Num(pop_k as f64)),
-            ("rounds", Json::Num(pop_rounds as f64)),
-            ("worst_over_best", Json::Num(ratio)),
-            ("scales", Json::obj(pop_entries)),
-        ]),
-    );
-    if ratio > 8.0 {
-        eprintln!(
-            "population/round cost is not flat: worst scale is {ratio:.1}x the best \
-             (bound 8x) — an O(population) step leaked onto the round path"
-        );
-        std::process::exit(1);
+    if run_section("population") {
+        population_bench();
     }
 
     // manifest-dependent paths
+    if !run_section("driver") {
+        return;
+    }
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         println!("(artifacts missing — run `make artifacts` for the PJRT benches)");
@@ -156,6 +100,7 @@ fn main() {
     let ctrl = ControllerCfg {
         mu_max: cfg.mu_max, rho: cfg.rho, eta: 0.1, epsilon: cfg.epsilon,
         tau_min: 1, tau_max: 60, tau_floor: 10, h_max: 1_000_000, beta_sq: 1e-3,
+        codec: CodecCfg::Analytic,
     };
     let est = Estimates { l: 2.0, sigma_sq: 0.5, g_sq: 1.0, loss: 2.0 };
     let statuses: Vec<ClientStatus> = (0..10)
@@ -488,6 +433,159 @@ fn main() {
         st.compile_secs,
         st.executions,
         1e3 * st.execute_secs / st.executions.max(1) as f64
+    );
+}
+
+/// The lazy population model's acceptance bench: per-round planning
+/// work (cohort sampling + per-member device/link/shard derivations
+/// through a bounded cache) must stay flat as the population grows
+/// 1000x — nothing on this path may enumerate clients. Emitted as
+/// BENCH_population.json; a super-linear blow-up (worst scale > 8x
+/// the smallest) fails the bench, which CI runs as a named step.
+fn population_bench() {
+    let net = NetworkModel::default();
+    let pop_rounds = 50usize;
+    let pop_k = 16usize;
+    let mut pop_entries: Vec<(&str, Json)> = Vec::new();
+    let mut per_round: Vec<f64> = Vec::new();
+    for (label, n) in
+        [("1e3", 1_000usize), ("1e4", 10_000), ("1e5", 100_000), ("1e6", 1_000_000)]
+    {
+        let pop = Population::new(PopulationSpec::default_mix(n, 42));
+        let mut cache: LazyCache<u64> = LazyCache::new(4 * pop_k);
+        let mut sink = 0u64;
+        let round_work = |round: usize, cache: &mut LazyCache<u64>, sink: &mut u64| {
+            let cohort = pop.sample_cohort(round, pop_k, |_| true);
+            assert_eq!(cohort.len(), pop_k, "population {n}: short cohort");
+            for &c in &cohort {
+                let q = pop.flops(c, round);
+                let link = net.sample(&mut pop.link_rng(c, round));
+                let spec = pop.shard_spec(c, 60);
+                *sink ^= cache.get_or_insert_with(c, || spec.seed ^ spec.quota as u64);
+                *sink ^= q.to_bits() ^ link.up_bps.to_bits();
+            }
+        };
+        // one untimed warmup round per scale (allocator + map warm-up)
+        round_work(pop_rounds, &mut cache, &mut sink);
+        let t0 = std::time::Instant::now();
+        for round in 0..pop_rounds {
+            round_work(round, &mut cache, &mut sink);
+        }
+        let secs = t0.elapsed().as_secs_f64() / pop_rounds as f64;
+        std::hint::black_box(sink);
+        let st = cache.stats().clone();
+        println!(
+            "population/round K={pop_k} n={label:<4} {:9.2} µs/round, \
+             {} materializations, peak resident {}",
+            1e6 * secs,
+            st.materializations,
+            st.peak_resident
+        );
+        per_round.push(secs);
+        pop_entries.push((
+            label,
+            Json::obj(vec![
+                ("clients", Json::Num(n as f64)),
+                ("round_secs", Json::Num(secs)),
+                ("materializations", Json::Num(st.materializations as f64)),
+                ("peak_resident", Json::Num(st.peak_resident as f64)),
+                ("evictions", Json::Num(st.evictions as f64)),
+            ]),
+        ));
+    }
+    let floor = per_round.iter().copied().fold(f64::INFINITY, f64::min);
+    let worst = per_round.iter().copied().fold(0.0f64, f64::max);
+    let ratio = worst / floor.max(1e-9);
+    write_snap(
+        "BENCH_population.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("population_scale_round_cost".into())),
+            ("k_per_round", Json::Num(pop_k as f64)),
+            ("rounds", Json::Num(pop_rounds as f64)),
+            ("worst_over_best", Json::Num(ratio)),
+            ("scales", Json::obj(pop_entries)),
+        ]),
+    );
+    if ratio > 8.0 {
+        eprintln!(
+            "population/round cost is not flat: worst scale is {ratio:.1}x the best \
+             (bound 8x) — an O(population) step leaked onto the round path"
+        );
+        std::process::exit(1);
+    }
+}
+
+/// HWU1 codec throughput + compression ratio, pure rust (no artifacts
+/// needed): a synthetic composed-payload update at widths P ∈ {1, 4} is
+/// framed and read back under each `--codec wire*` mode. Reports encode
+/// and decode MB/s (of raw f32 payload) and the encoded-to-raw byte
+/// ratio; emitted as BENCH_codec.json, which CI runs as a named step.
+fn codec_bench(b: &Bench) {
+    let modes: [(&str, Encoding); 3] = [
+        ("raw", Encoding { q8: false, topk: None }),
+        ("q8", Encoding { q8: true, topk: None }),
+        ("q8+topk0.25", Encoding { q8: true, topk: Some(0.25) }),
+    ];
+    let mut entries: Vec<(String, Json)> = Vec::new();
+    for p in [1usize, 4] {
+        // the composed-update silhouette of a small conv family at
+        // width p: per-layer [v_l, û_l] pairs plus a bias vector
+        let shapes: Vec<Vec<usize>> = vec![
+            vec![9, 16, 8 * p],
+            vec![8 * p, 16 * p],
+            vec![9, 16 * p, 8 * p],
+            vec![8 * p, 32 * p],
+            vec![64 * p, 10],
+            vec![10],
+        ];
+        let mut rng = Rng::new(0xC0DEC ^ p as u64);
+        let tensors: Vec<Tensor> =
+            shapes.iter().map(|s| Tensor::randn(s, 0.1, &mut rng)).collect();
+        let raw_bytes: usize = tensors.iter().map(|t| 4 * t.len()).sum();
+        let meta = FrameMeta { scheme: codec::scheme_id::HEROES, round: 0, client: 7 };
+        for (mode, enc) in modes {
+            let frame_bytes =
+                codec::frame_len_for_shapes(shapes.iter().map(Vec::as_slice), enc);
+            let mut buf = Vec::with_capacity(frame_bytes);
+            codec::encode_update(&mut buf, &meta, enc, &tensors).unwrap();
+            assert_eq!(buf.len(), frame_bytes, "planned frame length drifted");
+
+            let e = b.run(&format!("codec/encode p={p} {mode}"), |_| {
+                let mut out = Vec::with_capacity(frame_bytes);
+                codec::encode_update(&mut out, &meta, enc, &tensors).unwrap();
+                out
+            });
+            let d = b.run(&format!("codec/decode p={p} {mode}"), |_| {
+                codec::decode_update(&buf).unwrap()
+            });
+            let enc_mbs = raw_bytes as f64 / e.median() / 1e6;
+            let dec_mbs = raw_bytes as f64 / d.median() / 1e6;
+            let ratio = frame_bytes as f64 / raw_bytes as f64;
+            println!(
+                "codec/p={p} {mode:<12} {enc_mbs:8.1} MB/s enc, {dec_mbs:8.1} MB/s dec, \
+                 {frame_bytes} B frame ({:.1}% of raw)",
+                100.0 * ratio
+            );
+            entries.push((
+                format!("p{p}/{mode}"),
+                Json::obj(vec![
+                    ("raw_bytes", Json::from(raw_bytes)),
+                    ("frame_bytes", Json::from(frame_bytes)),
+                    ("ratio_vs_raw", Json::Num(ratio)),
+                    ("encode_mb_per_s", Json::Num(enc_mbs)),
+                    ("decode_mb_per_s", Json::Num(dec_mbs)),
+                ]),
+            ));
+        }
+    }
+    let entries: Vec<(&str, Json)> =
+        entries.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    write_snap(
+        "BENCH_codec.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("codec_wire_throughput_and_ratio".into())),
+            ("configs", Json::obj(entries)),
+        ]),
     );
 }
 

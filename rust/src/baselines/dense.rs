@@ -13,6 +13,7 @@
 //! (`coordinator::round`): this file only plans widths/τ and aggregates.
 
 use crate::baselines::Strategy;
+use crate::codec::{scheme_id, CodecCfg};
 use crate::config::ExperimentConfig;
 use crate::coordinator::aggregate::DenseAccumulator;
 use crate::coordinator::assignment::cohort_statuses;
@@ -21,6 +22,7 @@ use crate::coordinator::frequency::completion_time;
 use crate::coordinator::hierarchy::HierarchyCfg;
 use crate::coordinator::round::{
     collect_quorum_round, collect_round, LocalTask, QuorumBatch, RoundDriver, TaskOutcome,
+    WireTask,
 };
 use crate::coordinator::RoundReport;
 use crate::model::DenseGlobal;
@@ -67,6 +69,7 @@ pub struct DenseServer {
     lr_decay_rounds: usize,
     mu_max: f64,
     tau_bounds: (usize, usize),
+    codec: CodecCfg,
     round: usize,
     /// phase-A output awaiting `take_tasks`
     pending: Option<PendingDense>,
@@ -92,6 +95,7 @@ impl DenseServer {
             lr_decay_rounds: cfg.lr_decay_rounds,
             mu_max: cfg.mu_max,
             tau_bounds: (cfg.tau_min, cfg.tau_max),
+            codec: cfg.codec,
             round: 0,
             pending: None,
         })
@@ -157,7 +161,12 @@ impl Strategy for DenseServer {
             .iter()
             .map(|s| {
                 let (p, mu) = self.assign_width(&env.info, s.q_flops);
-                let nu = s.link.upload_time(env.info.bytes_dense[&p]);
+                let up = crate::codec::upload_bytes(
+                    &env.info.dense_params[&p],
+                    env.info.bytes_dense[&p],
+                    self.codec,
+                );
+                let nu = s.link.upload_time(up);
                 (s.client, p, mu, nu)
             })
             .collect();
@@ -195,6 +204,16 @@ impl Strategy for DenseServer {
                 payload: self.global.reduced_inputs(&env.info, p)?,
                 stream: env.batch_stream(client, self.round),
                 bytes: env.info.bytes_dense[&p],
+                up_bytes: crate::codec::upload_bytes(
+                    &env.info.dense_params[&p],
+                    env.info.bytes_dense[&p],
+                    self.codec,
+                ),
+                wire: self.codec.encoding().map(|enc| WireTask {
+                    scheme: scheme_id::DENSE,
+                    round: self.round as u32,
+                    enc,
+                }),
                 completion: completion_time(tau, mu, nu),
                 drop_at: None,
             });

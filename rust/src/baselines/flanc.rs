@@ -10,6 +10,7 @@
 //! same-width group only; the global model evaluated at width P.
 
 use crate::baselines::Strategy;
+use crate::codec::{scheme_id, CodecCfg};
 use crate::config::ExperimentConfig;
 use crate::coordinator::assignment::{assign_width, cohort_statuses};
 use crate::coordinator::env::FlEnv;
@@ -17,6 +18,7 @@ use crate::coordinator::frequency::completion_time;
 use crate::coordinator::hierarchy::HierarchyCfg;
 use crate::coordinator::round::{
     collect_quorum_round, collect_round, LocalTask, QuorumBatch, RoundDriver, TaskOutcome,
+    WireTask,
 };
 use crate::coordinator::RoundReport;
 use crate::model::init_params;
@@ -38,6 +40,7 @@ pub struct FlancServer {
     lr_decay_rounds: usize,
     mu_max: f64,
     tau: usize,
+    codec: CodecCfg,
     round: usize,
     /// phase-A output (client, p, μ, ν) awaiting `take_tasks`
     pending: Option<Vec<(usize, usize, f64, f64)>>,
@@ -75,6 +78,7 @@ impl FlancServer {
             lr_decay_rounds: cfg.lr_decay_rounds,
             mu_max: cfg.mu_max,
             tau: cfg.tau_default,
+            codec: cfg.codec,
             round: 0,
             pending: None,
         })
@@ -163,7 +167,12 @@ impl Strategy for FlancServer {
             .iter()
             .map(|s| {
                 let (p, mu) = assign_width(&env.info, s.q_flops, self.mu_max);
-                let nu = s.link.upload_time(env.info.bytes_composed[&p]);
+                let up = crate::codec::upload_bytes(
+                    &env.info.composed_params[&p],
+                    env.info.bytes_composed[&p],
+                    self.codec,
+                );
+                let nu = s.link.upload_time(up);
                 (s.client, p, mu, nu)
             })
             .collect();
@@ -190,6 +199,16 @@ impl Strategy for FlancServer {
                 payload: self.payload(p),
                 stream: env.batch_stream(client, self.round),
                 bytes: env.info.bytes_composed[&p],
+                up_bytes: crate::codec::upload_bytes(
+                    &env.info.composed_params[&p],
+                    env.info.bytes_composed[&p],
+                    self.codec,
+                ),
+                wire: self.codec.encoding().map(|enc| WireTask {
+                    scheme: scheme_id::FLANC,
+                    round: self.round as u32,
+                    enc,
+                }),
                 completion: completion_time(self.tau, mu, nu),
                 drop_at: None,
             });

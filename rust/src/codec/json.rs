@@ -1,0 +1,65 @@
+//! The one text layer: every JSON touchpoint — experiment configs,
+//! metrics emission, golden traces, bench snapshots, the artifact
+//! manifest — goes through this facade. The backing value type and
+//! parser live in `util::json` (now `pub(crate)`); nothing outside
+//! `codec/` constructs or walks those internals directly.
+//!
+//! Serialization streams into any `io::Write` sink (lil-json idiom —
+//! an edge client writes frames and text the same way); the
+//! `Json::to_string_*` conveniences remain for in-memory use.
+//!
+//! Fidelity contract (pinned in `util::json` tests): every emitted
+//! `f64` reparses to identical bits, and `u64` counters take the
+//! lossless `Json::Uint` path — see the backend docs.
+
+pub use crate::util::json::{parse, parse_file, Json, JsonError};
+
+use std::io::{self, Write};
+use std::path::Path;
+
+/// Stream a compact document into `w`.
+pub fn to_writer<W: Write>(w: &mut W, v: &Json) -> io::Result<()> {
+    v.write_to(w, 0, 0)
+}
+
+/// Stream a pretty document (2-space indent) into `w`.
+pub fn to_writer_pretty<W: Write>(w: &mut W, v: &Json) -> io::Result<()> {
+    v.write_to(w, 2, 0)
+}
+
+/// Write a pretty document to `path` (the snapshot/golden writer).
+pub fn write_file(path: &Path, v: &Json) -> io::Result<()> {
+    let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+    to_writer_pretty(&mut f, v)?;
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_sinks_match_the_string_serializers() {
+        let v = parse(r#"{"a":[1,2.5,null],"big":18446744073709551615,"s":"x"}"#).unwrap();
+        let mut compact = Vec::new();
+        to_writer(&mut compact, &v).unwrap();
+        assert_eq!(String::from_utf8(compact).unwrap(), v.to_string_compact());
+        let mut pretty = Vec::new();
+        to_writer_pretty(&mut pretty, &v).unwrap();
+        assert_eq!(String::from_utf8(pretty).unwrap(), v.to_string_pretty());
+    }
+
+    #[test]
+    fn write_file_round_trips_through_parse_file() {
+        let v = Json::obj(vec![
+            ("counter", Json::from(5_000_000_000u64)),
+            ("pi", Json::from(std::f64::consts::PI)),
+        ]);
+        let dir = std::env::temp_dir().join("heroes_codec_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.json");
+        write_file(&path, &v).unwrap();
+        assert_eq!(parse_file(&path).unwrap(), v);
+        let _ = std::fs::remove_file(&path);
+    }
+}

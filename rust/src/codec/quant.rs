@@ -1,0 +1,98 @@
+//! AnycostFL-style compression primitives: per-tensor uint8 affine
+//! quantization and magnitude top-k sparsification (PAPERS.md).
+//!
+//! Both are **pure functions of the tensor data** — no RNG, no
+//! wall-clock — which is what lets the wire layer promise that encoded
+//! bytes are a pure function of `(plan, update, cfg)`.
+
+/// Per-tensor affine q8: `v ≈ lo + scale·q`, `q ∈ 0..=255`, with
+/// `lo = min(v)` and `scale = (max − min)/255`. A constant tensor
+/// (`max == min`, including the empty one) encodes with `scale = 0` and
+/// all-zero codes, reconstructing exactly.
+pub fn quantize_q8(data: &[f32]) -> (f32, f32, Vec<u8>) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in data {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if data.is_empty() || lo >= hi {
+        return (if data.is_empty() { 0.0 } else { lo }, 0.0, vec![0; data.len()]);
+    }
+    let scale = ((hi as f64 - lo as f64) / 255.0) as f32;
+    let q = data
+        .iter()
+        .map(|&v| ((v as f64 - lo as f64) / scale as f64).round().clamp(0.0, 255.0) as u8)
+        .collect();
+    (lo, scale, q)
+}
+
+/// Inverse of [`quantize_q8`] for one code.
+pub fn dequantize_q8(lo: f32, scale: f32, q: u8) -> f32 {
+    lo + scale * q as f32
+}
+
+/// The k kept by top-k at `rate` over a `len`-element tensor:
+/// `clamp(ceil(rate·len), 1, len)` (0 only for the empty tensor).
+pub fn k_of(len: usize, rate: f64) -> usize {
+    if len == 0 {
+        return 0;
+    }
+    ((rate * len as f64).ceil() as usize).clamp(1, len)
+}
+
+/// Indices of the k largest-|v| entries, returned **ascending** (the
+/// wire order). Ties break toward the lower index; `total_cmp` keeps
+/// the order total (and thus deterministic) even for NaN payloads.
+pub fn top_k_indices(data: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..data.len()).collect();
+    idx.sort_by(|&a, &b| data[b].abs().total_cmp(&data[a].abs()).then(a.cmp(&b)));
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q8_error_is_bounded_by_half_a_step() {
+        let data: Vec<f32> = (0..1000).map(|i| ((i * 2654435761u64 as usize) % 997) as f32 / 99.7 - 5.0).collect();
+        let (lo, scale, q) = quantize_q8(&data);
+        for (&v, &code) in data.iter().zip(&q) {
+            let err = (v - dequantize_q8(lo, scale, code)).abs();
+            assert!(
+                err <= 0.5001 * scale + 1e-6,
+                "q8 error {err} exceeds scale/2 = {}",
+                scale / 2.0
+            );
+        }
+    }
+
+    #[test]
+    fn q8_constant_and_empty_tensors_reconstruct_exactly() {
+        let (lo, scale, q) = quantize_q8(&[2.5; 7]);
+        assert_eq!(scale, 0.0);
+        assert!(q.iter().all(|&c| dequantize_q8(lo, scale, c) == 2.5));
+        assert_eq!(quantize_q8(&[]), (0.0, 0.0, vec![]));
+    }
+
+    #[test]
+    fn top_k_picks_magnitudes_with_stable_ties() {
+        let data = [0.1f32, -3.0, 0.5, 3.0, -0.5, 2.0];
+        // |−3| ties |3| → lower index 1 wins first, both still kept at k=3
+        assert_eq!(top_k_indices(&data, 3), vec![1, 3, 5]);
+        assert_eq!(top_k_indices(&data, 1), vec![1]);
+        // |0.5| ties |−0.5| → index 2 beats 4
+        assert_eq!(top_k_indices(&data, 5), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn k_of_clamps_to_at_least_one_and_at_most_len() {
+        assert_eq!(k_of(0, 0.5), 0);
+        assert_eq!(k_of(10, 0.001), 1);
+        assert_eq!(k_of(10, 0.25), 3); // ceil(2.5)
+        assert_eq!(k_of(10, 1.0), 10);
+    }
+}

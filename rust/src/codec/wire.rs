@@ -1,0 +1,397 @@
+//! The `HWU1` framed update payload: streaming writer into any
+//! `io::Write` sink, exact-round-trip reader with typed [`CodecError`]s.
+//! Byte layout and determinism contract: see the module docs in
+//! [`crate::codec`].
+
+use super::{quant, CodecError, Encoding};
+use crate::tensor::Tensor;
+use std::io::Write;
+
+pub const MAGIC: [u8; 4] = *b"HWU1";
+pub const VERSION: u8 = 1;
+/// Fixed frame header length in bytes.
+pub const HEADER_LEN: usize = 32;
+
+/// Plan-side identity stamped into a frame header.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameMeta {
+    pub scheme: u8,
+    pub round: u32,
+    pub client: u64,
+}
+
+/// A parsed frame header.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameHeader {
+    pub scheme: u8,
+    pub flags: u8,
+    pub round: u32,
+    pub client: u64,
+    pub tensors: u32,
+    pub body_len: u64,
+}
+
+/// Shape/encoding facts of one decoded section (`stored` = entries
+/// physically carried: `len` for raw/q8, `k` for top-k).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SectionInfo {
+    pub tag: u8,
+    pub dims: Vec<usize>,
+    pub stored: usize,
+}
+
+/// A fully decoded frame: header, per-section facts, and the
+/// reconstructed (dequantized, densified) tensors ready for the
+/// aggregation accumulators.
+#[derive(Debug)]
+pub struct DecodedUpdate {
+    pub header: FrameHeader,
+    pub sections: Vec<SectionInfo>,
+    pub tensors: Vec<Tensor>,
+}
+
+/// Body length of one tensor section (everything after tag/rank/dims).
+fn body_len(len: usize, enc: Encoding) -> usize {
+    match (enc.topk, enc.q8) {
+        (None, false) => 4 * len,
+        (None, true) => 8 + len,
+        (Some(r), false) => {
+            let k = quant::k_of(len, r);
+            4 + 4 * k + 4 * k
+        }
+        (Some(r), true) => {
+            let k = quant::k_of(len, r);
+            4 + 8 + 4 * k + k
+        }
+    }
+}
+
+/// Encoded length of one tensor section — a pure function of shape and
+/// encoding (top-k's k depends only on `len`), never of the data.
+pub fn section_len(shape: &[usize], enc: Encoding) -> usize {
+    4 + 4 * shape.len() + body_len(shape.iter().product(), enc)
+}
+
+/// Total frame length for an update whose tensors have these shapes.
+/// This is what the planner bills ν and the traffic meter from *before*
+/// training; [`encode_update`] is guaranteed to produce exactly this
+/// many bytes.
+pub fn frame_len_for_shapes<'a, I>(shapes: I, enc: Encoding) -> usize
+where
+    I: IntoIterator<Item = &'a [usize]>,
+{
+    HEADER_LEN + shapes.into_iter().map(|s| section_len(s, enc)).sum::<usize>()
+}
+
+/// Stream one update frame into `w`; returns the frame length written.
+pub fn encode_update<W: Write>(
+    w: &mut W,
+    meta: &FrameMeta,
+    enc: Encoding,
+    tensors: &[Tensor],
+) -> Result<usize, CodecError> {
+    let body: u64 = tensors.iter().map(|t| section_len(t.shape(), enc) as u64).sum();
+    w.write_all(&MAGIC)?;
+    w.write_all(&[VERSION, meta.scheme, enc.flags(), 0])?;
+    w.write_all(&meta.round.to_le_bytes())?;
+    w.write_all(&meta.client.to_le_bytes())?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    w.write_all(&body.to_le_bytes())?;
+    for t in tensors {
+        write_section(w, t, enc)?;
+    }
+    Ok(HEADER_LEN + body as usize)
+}
+
+fn write_section<W: Write>(w: &mut W, t: &Tensor, enc: Encoding) -> Result<(), CodecError> {
+    let shape = t.shape();
+    let data = t.data();
+    // tag mirrors the header flag bits: bit0 q8, bit1 topk
+    w.write_all(&[enc.flags(), shape.len() as u8, 0, 0])?;
+    for &d in shape {
+        w.write_all(&(d as u32).to_le_bytes())?;
+    }
+    match (enc.topk, enc.q8) {
+        (None, false) => {
+            for &v in data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        (None, true) => {
+            let (lo, scale, q) = quant::quantize_q8(data);
+            w.write_all(&lo.to_le_bytes())?;
+            w.write_all(&scale.to_le_bytes())?;
+            w.write_all(&q)?;
+        }
+        (Some(r), false) => {
+            let idx = quant::top_k_indices(data, quant::k_of(data.len(), r));
+            w.write_all(&(idx.len() as u32).to_le_bytes())?;
+            for &i in &idx {
+                w.write_all(&(i as u32).to_le_bytes())?;
+            }
+            for &i in &idx {
+                w.write_all(&data[i].to_le_bytes())?;
+            }
+        }
+        (Some(r), true) => {
+            let idx = quant::top_k_indices(data, quant::k_of(data.len(), r));
+            let kept: Vec<f32> = idx.iter().map(|&i| data[i]).collect();
+            let (lo, scale, q) = quant::quantize_q8(&kept);
+            w.write_all(&(idx.len() as u32).to_le_bytes())?;
+            w.write_all(&lo.to_le_bytes())?;
+            w.write_all(&scale.to_le_bytes())?;
+            for &i in &idx {
+                w.write_all(&(i as u32).to_le_bytes())?;
+            }
+            w.write_all(&q)?;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// reading
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.pos + n > self.b.len() {
+            return Err(CodecError::Truncated {
+                offset: self.pos,
+                needed: n,
+                have: self.b.len(),
+            });
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+/// Parse and validate just the 32-byte header.
+pub fn read_header(bytes: &[u8]) -> Result<FrameHeader, CodecError> {
+    let mut r = Reader { b: bytes, pos: 0 };
+    let magic: [u8; 4] = r.take(4)?.try_into().unwrap();
+    if magic != MAGIC {
+        return Err(CodecError::BadMagic { found: magic });
+    }
+    let version = r.u8()?;
+    if version != VERSION {
+        return Err(CodecError::BadVersion(version));
+    }
+    let scheme = r.u8()?;
+    let flags = r.u8()?;
+    let _reserved = r.u8()?;
+    let round = r.u32()?;
+    let client = r.u64()?;
+    let tensors = r.u32()?;
+    let body_len = r.u64()?;
+    Ok(FrameHeader { scheme, flags, round, client, tensors, body_len })
+}
+
+/// Decode one frame back into dense f32 tensors (dequantizing q8,
+/// densifying top-k with zeros at the dropped positions). Exact
+/// round-trip for raw sections.
+pub fn decode_update(bytes: &[u8]) -> Result<DecodedUpdate, CodecError> {
+    let header = read_header(bytes)?;
+    let actual = (bytes.len() - HEADER_LEN.min(bytes.len())) as u64;
+    if header.body_len != actual {
+        return Err(CodecError::LengthMismatch { declared: header.body_len, actual });
+    }
+    let mut r = Reader { b: bytes, pos: HEADER_LEN };
+    let mut sections = Vec::with_capacity(header.tensors as usize);
+    let mut tensors = Vec::with_capacity(header.tensors as usize);
+    for _ in 0..header.tensors {
+        let tag = r.u8()?;
+        let rank = r.u8()? as usize;
+        let _reserved = r.take(2)?;
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(r.u32()? as usize);
+        }
+        let len: usize = dims.iter().product();
+        let (data, stored) = match tag {
+            0 => {
+                let mut v = Vec::with_capacity(len);
+                for _ in 0..len {
+                    v.push(r.f32()?);
+                }
+                (v, len)
+            }
+            1 => {
+                let lo = r.f32()?;
+                let scale = r.f32()?;
+                let codes = r.take(len)?;
+                (codes.iter().map(|&q| quant::dequantize_q8(lo, scale, q)).collect(), len)
+            }
+            2 | 3 => {
+                let k = r.u32()? as usize;
+                if k > len {
+                    return Err(CodecError::BadTopK { k, len });
+                }
+                let mut v = vec![0.0f32; len];
+                if tag == 3 {
+                    let lo = r.f32()?;
+                    let scale = r.f32()?;
+                    let mut idx = Vec::with_capacity(k);
+                    for _ in 0..k {
+                        let i = r.u32()? as usize;
+                        if i >= len {
+                            return Err(CodecError::BadTopK { k: i, len });
+                        }
+                        idx.push(i);
+                    }
+                    let codes = r.take(k)?;
+                    for (&i, &q) in idx.iter().zip(codes) {
+                        v[i] = quant::dequantize_q8(lo, scale, q);
+                    }
+                } else {
+                    let mut idx = Vec::with_capacity(k);
+                    for _ in 0..k {
+                        let i = r.u32()? as usize;
+                        if i >= len {
+                            return Err(CodecError::BadTopK { k: i, len });
+                        }
+                        idx.push(i);
+                    }
+                    for &i in &idx {
+                        v[i] = r.f32()?;
+                    }
+                }
+                (v, k)
+            }
+            t => return Err(CodecError::BadSectionTag(t)),
+        };
+        sections.push(SectionInfo { tag, dims: dims.clone(), stored });
+        tensors.push(Tensor::from_vec(&dims, data));
+    }
+    if r.pos != bytes.len() {
+        // sections ended before the declared body did — the header lied
+        return Err(CodecError::LengthMismatch {
+            declared: header.body_len,
+            actual: (r.pos - HEADER_LEN) as u64,
+        });
+    }
+    Ok(DecodedUpdate { header, sections, tensors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn meta() -> FrameMeta {
+        FrameMeta { scheme: 1, round: 7, client: 42 }
+    }
+
+    fn payload(rng: &mut Rng) -> Vec<Tensor> {
+        vec![
+            Tensor::randn(&[9, 2, 3], 0.5, rng),
+            Tensor::randn(&[3, 8], 0.5, rng),
+            Tensor::randn(&[5], 0.5, rng),
+        ]
+    }
+
+    #[test]
+    fn raw_round_trip_is_bit_exact_and_lengths_agree() {
+        let mut rng = Rng::new(3);
+        let ts = payload(&mut rng);
+        let enc = Encoding::default();
+        let mut buf = Vec::new();
+        let n = encode_update(&mut buf, &meta(), enc, &ts).unwrap();
+        assert_eq!(n, buf.len());
+        assert_eq!(n, frame_len_for_shapes(ts.iter().map(|t| t.shape()), enc));
+        let d = decode_update(&buf).unwrap();
+        assert_eq!(d.header.scheme, 1);
+        assert_eq!(d.header.round, 7);
+        assert_eq!(d.header.client, 42);
+        assert_eq!(d.header.body_len as usize, buf.len() - HEADER_LEN);
+        for (a, b) in ts.iter().zip(&d.tensors) {
+            assert_eq!(a.shape(), b.shape());
+            assert_eq!(a.data(), b.data(), "raw sections must round-trip bit-exactly");
+        }
+    }
+
+    #[test]
+    fn encoding_is_deterministic_for_identical_inputs() {
+        let mut rng = Rng::new(9);
+        let ts = payload(&mut rng);
+        for enc in [
+            Encoding::default(),
+            Encoding { q8: true, topk: None },
+            Encoding { q8: true, topk: Some(0.2) },
+        ] {
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            encode_update(&mut a, &meta(), enc, &ts).unwrap();
+            encode_update(&mut b, &meta(), enc, &ts).unwrap();
+            assert_eq!(a, b, "{enc:?}: same (plan, update, cfg) must give same bytes");
+        }
+    }
+
+    #[test]
+    fn q8_and_topk_sections_report_their_stored_counts() {
+        let mut rng = Rng::new(5);
+        let ts = payload(&mut rng);
+        let enc = Encoding { q8: true, topk: Some(0.25) };
+        let mut buf = Vec::new();
+        encode_update(&mut buf, &meta(), enc, &ts).unwrap();
+        let d = decode_update(&buf).unwrap();
+        for (t, s) in ts.iter().zip(&d.sections) {
+            assert_eq!(s.tag, 3);
+            assert_eq!(s.stored, quant::k_of(t.len(), 0.25));
+        }
+    }
+
+    #[test]
+    fn typed_errors_for_malformed_frames() {
+        let mut rng = Rng::new(11);
+        let ts = payload(&mut rng);
+        let mut buf = Vec::new();
+        encode_update(&mut buf, &meta(), Encoding::default(), &ts).unwrap();
+
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(matches!(decode_update(&bad), Err(CodecError::BadMagic { .. })));
+
+        let mut bad = buf.clone();
+        bad[4] = 9;
+        assert!(matches!(decode_update(&bad), Err(CodecError::BadVersion(9))));
+
+        assert!(matches!(
+            decode_update(&buf[..HEADER_LEN - 3]),
+            Err(CodecError::Truncated { .. })
+        ));
+
+        // chop the body: header still declares the full body_len
+        assert!(matches!(
+            decode_update(&buf[..buf.len() - 5]),
+            Err(CodecError::LengthMismatch { .. })
+        ));
+
+        // corrupt a section tag
+        let mut bad = buf.clone();
+        bad[HEADER_LEN] = 200;
+        assert!(matches!(decode_update(&bad), Err(CodecError::BadSectionTag(200))));
+    }
+}

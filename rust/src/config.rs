@@ -7,9 +7,10 @@
 //! overrides; `Scale` presets keep smoke runs in minutes while `--scale
 //! paper` reproduces the full 100-client protocol.
 
+use crate::codec::json::Json;
+use crate::codec::CodecCfg;
 use crate::simulation::Scenario;
 use crate::util::cli::Args;
-use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
 /// Non-IID partition scheme (paper §VI-A2).
@@ -236,6 +237,13 @@ pub struct ExperimentConfig {
     /// sub-quorum and forwards **one** composed update over the backhaul,
     /// and the root quorums over edge arrivals (`coordinator::hierarchy`).
     pub hierarchy: usize,
+    /// `--codec`: how update uploads are represented and billed
+    /// (`codec::CodecCfg`). `Analytic` (default) bills tensor-shape
+    /// byte counts — byte-identical to the pre-codec repo; `wire` modes
+    /// encode real `HWU1` frames (optionally q8-quantized / top-k
+    /// sparsified) and bill the meter, ν and the hierarchy backhaul
+    /// from measured frame lengths.
+    pub codec: CodecCfg,
 }
 
 /// The pool-sizing rule, shared by `ExperimentConfig::pool_size` and
@@ -308,6 +316,7 @@ impl ExperimentConfig {
             dropout_policy: DropoutPolicy::Survivors,
             population: PopulationMode::Eager,
             hierarchy: 0,
+            codec: CodecCfg::Analytic,
         }
     }
 
@@ -363,6 +372,9 @@ impl ExperimentConfig {
             self.population = PopulationMode::parse(p)?;
         }
         self.hierarchy = args.get_usize("hierarchy", self.hierarchy)?;
+        if let Some(c) = args.get("codec") {
+            self.codec = CodecCfg::parse(c)?;
+        }
         if let Some(g) = args.get("gamma") {
             self.partition = Partition::Gamma(g.parse().map_err(|_| anyhow!("bad --gamma"))?);
         }
@@ -434,6 +446,15 @@ impl ExperimentConfig {
             c.population = PopulationMode::parse(s)?;
         }
         c.hierarchy = grab_usize("hierarchy", c.hierarchy);
+        // JSON parity with the CLI: `"codec"` is a knob string
+        // (`analytic` | `wire` | `wire:q8` | `wire:q8,topk=R`); anything
+        // else is an error, never a silent fall-back to analytic
+        if let Some(v) = j.get("codec") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("`codec` expects a codec-knob string, got {v}"))?;
+            c.codec = CodecCfg::parse(s)?;
+        }
         if let Some(g) = j.get("gamma").and_then(Json::as_f64) {
             c.partition = Partition::Gamma(g);
         }
@@ -556,7 +577,7 @@ mod tests {
         assert_eq!(c.pool_size(), 2);
         assert!(c.overlap);
 
-        let j = crate::util::json::parse(r#"{"workers": 3, "pool": 3, "overlap": true}"#).unwrap();
+        let j = crate::codec::json::parse(r#"{"workers": 3, "pool": 3, "overlap": true}"#).unwrap();
         let c = ExperimentConfig::from_json("cnn", Scale::Smoke, &j).unwrap();
         assert_eq!((c.workers, c.pool_size()), (3, 3));
         assert!(c.overlap);
@@ -579,7 +600,7 @@ mod tests {
         assert!(c.quorum.is_active());
         assert!((c.staleness_alpha - 2.5).abs() < 1e-12);
 
-        let j = crate::util::json::parse(r#"{"quorum": 4, "staleness_alpha": 0.5}"#).unwrap();
+        let j = crate::codec::json::parse(r#"{"quorum": 4, "staleness_alpha": 0.5}"#).unwrap();
         let c = ExperimentConfig::from_json("cnn", Scale::Smoke, &j).unwrap();
         assert_eq!(c.quorum, QuorumKnob::Fixed(4));
         assert!((c.staleness_alpha - 0.5).abs() < 1e-12);
@@ -608,7 +629,7 @@ mod tests {
         assert_eq!(c.quorum_floor, 2);
 
         // JSON parity: string "auto" and the two controller knobs
-        let j = crate::util::json::parse(
+        let j = crate::codec::json::parse(
             r#"{"quorum": "auto", "quorum_margin": 0.25, "quorum_floor": 3}"#,
         )
         .unwrap();
@@ -620,7 +641,7 @@ mod tests {
         // malformed JSON `quorum` values are errors, never a silent
         // fall-back to the synchronous default
         for bad_doc in [r#"{"quorum": true}"#, r#"{"quorum": -1}"#, r#"{"quorum": "fast"}"#] {
-            let j = crate::util::json::parse(bad_doc).unwrap();
+            let j = crate::codec::json::parse(bad_doc).unwrap();
             assert!(
                 ExperimentConfig::from_json("cnn", Scale::Smoke, &j).is_err(),
                 "{bad_doc} must be rejected"
@@ -654,7 +675,7 @@ mod tests {
         assert_eq!(c.dropout_policy, DropoutPolicy::Error);
 
         // JSON parity: catalog-name strings
-        let j = crate::util::json::parse(
+        let j = crate::codec::json::parse(
             r#"{"scenario": "flash-crowd-churn", "dropout_policy": "survivors"}"#,
         )
         .unwrap();
@@ -667,7 +688,7 @@ mod tests {
             let args =
                 Args::parse_from(["--scenario", name].iter().map(|s| s.to_string()));
             ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&args).unwrap();
-            let doc = crate::util::json::parse(&format!(r#"{{"scenario": "{name}"}}"#)).unwrap();
+            let doc = crate::codec::json::parse(&format!(r#"{{"scenario": "{name}"}}"#)).unwrap();
             ExperimentConfig::from_json("cnn", Scale::Smoke, &doc).unwrap();
         }
 
@@ -680,7 +701,7 @@ mod tests {
         for bad_doc in
             [r#"{"scenario": 3}"#, r#"{"scenario": "mayhem"}"#, r#"{"dropout_policy": true}"#]
         {
-            let j = crate::util::json::parse(bad_doc).unwrap();
+            let j = crate::codec::json::parse(bad_doc).unwrap();
             assert!(
                 ExperimentConfig::from_json("cnn", Scale::Smoke, &j).is_err(),
                 "{bad_doc} must be rejected"
@@ -710,7 +731,7 @@ mod tests {
         assert_eq!(c.n_clients, 100_000);
 
         // JSON parity
-        let j = crate::util::json::parse(
+        let j = crate::codec::json::parse(
             r#"{"population": "lazy", "hierarchy": 2, "quorum": "auto"}"#,
         )
         .unwrap();
@@ -722,7 +743,7 @@ mod tests {
         let bad_cli = Args::parse_from(["--population", "huge"].iter().map(|s| s.to_string()));
         assert!(ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&bad_cli).is_err());
         for bad_doc in [r#"{"population": 3}"#, r#"{"population": "huge"}"#] {
-            let j = crate::util::json::parse(bad_doc).unwrap();
+            let j = crate::codec::json::parse(bad_doc).unwrap();
             assert!(
                 ExperimentConfig::from_json("cnn", Scale::Smoke, &j).is_err(),
                 "{bad_doc} must be rejected"
@@ -741,6 +762,33 @@ mod tests {
     }
 
     #[test]
+    fn codec_knob_parses_from_cli_and_json() {
+        use crate::codec::{CodecCfg, Encoding};
+        let base = ExperimentConfig::preset("cnn", Scale::Smoke);
+        assert_eq!(base.codec, CodecCfg::Analytic, "codec defaults to analytic billing");
+
+        let args = Args::parse_from(["--codec", "wire:q8,topk=0.25"].iter().map(|s| s.to_string()));
+        let c = ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&args).unwrap();
+        assert_eq!(c.codec, CodecCfg::Wire(Encoding { q8: true, topk: Some(0.25) }));
+
+        // JSON parity: the same knob grammar as the CLI
+        let j = crate::codec::json::parse(r#"{"codec": "wire:q8"}"#).unwrap();
+        let c = ExperimentConfig::from_json("cnn", Scale::Smoke, &j).unwrap();
+        assert_eq!(c.codec, CodecCfg::Wire(Encoding { q8: true, topk: None }));
+
+        // malformed values are errors, never a silent fall-back
+        let bad_cli = Args::parse_from(["--codec", "zip"].iter().map(|s| s.to_string()));
+        assert!(ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&bad_cli).is_err());
+        for bad_doc in [r#"{"codec": 3}"#, r#"{"codec": "wire:topk=2"}"#] {
+            let j = crate::codec::json::parse(bad_doc).unwrap();
+            assert!(
+                ExperimentConfig::from_json("cnn", Scale::Smoke, &j).is_err(),
+                "{bad_doc} must be rejected"
+            );
+        }
+    }
+
+    #[test]
     fn validation_rejects_bad_k() {
         let mut c = ExperimentConfig::preset("cnn", Scale::Smoke);
         c.k_per_round = c.n_clients + 1;
@@ -749,7 +797,7 @@ mod tests {
 
     #[test]
     fn json_config() {
-        let j = crate::util::json::parse(r#"{"clients": 12, "k": 3, "phi": 60}"#).unwrap();
+        let j = crate::codec::json::parse(r#"{"clients": 12, "k": 3, "phi": 60}"#).unwrap();
         let c = ExperimentConfig::from_json("resnet", Scale::Smoke, &j).unwrap();
         assert_eq!(c.n_clients, 12);
         assert_eq!(c.partition, Partition::Phi(0.6));

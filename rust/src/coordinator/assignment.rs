@@ -16,6 +16,7 @@
 //!    selections are the least-trained ones at assignment time, and the
 //!    ledger is updated client-by-client exactly as in the paper.
 
+use crate::codec::CodecCfg;
 use crate::coordinator::frequency::{
     completion_time, projected_total_time, solve_rounds, tau_bounds, tau_opt, Estimates,
 };
@@ -48,6 +49,12 @@ pub struct ControllerCfg {
     /// (`BlockLedger::relative_variance`) each round; 0 recovers the
     /// idealized no-reduction-error bound.
     pub beta_sq: f64,
+    /// Upload-payload codec. ν (Eq. 18) is priced from the bytes the
+    /// client will *actually* send: the analytic float count by default,
+    /// or the measured wire-frame length in `wire` modes — so a
+    /// quantized/sparsified upload shortens the planned tail exactly as
+    /// it shortens the simulated one.
+    pub codec: CodecCfg,
 }
 
 /// A client's observed status for the round (Alg. 1 line 4).
@@ -134,7 +141,12 @@ pub fn plan_round(
         .iter()
         .map(|s| {
             let (p, mu) = assign_width(info, s.q_flops, cfg.mu_max);
-            let nu = s.link.upload_time(info.bytes_composed[&p]);
+            let up = crate::codec::upload_bytes(
+                &info.composed_params[&p],
+                info.bytes_composed[&p],
+                cfg.codec,
+            );
+            let nu = s.link.upload_time(up);
             (*s, p, mu, nu)
         })
         .collect();
@@ -258,6 +270,7 @@ mod tests {
             tau_floor: 1,
             h_max: 100_000,
             beta_sq: 0.0,
+            codec: CodecCfg::Analytic,
         }
     }
 

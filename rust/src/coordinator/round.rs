@@ -210,8 +210,19 @@
 //! overlapped vs. non-overlapped dispatch**
 //! (`rust/tests/integration_parallel.rs` pins all three axes, plus the
 //! quorum contract above).
+//!
+//! The wire codec preserves this contract: under `--codec wire*` a
+//! worker frames each trained update (`crate::codec`), and the encoded
+//! bytes are a pure function of `(plan, update, cfg)` — no RNG, clock
+//! or thread state — while the frame *length* is a pure function of the
+//! payload shapes and the encoding alone, which is how the plan can
+//! bill ν and `up_bytes` before training and the worker can verify the
+//! realized frame against them ([`CodecError::PlannedSizeDrift`]).
+//! `--codec analytic` (the default) never constructs a frame and leaves
+//! every path byte-identical to the pre-codec repo.
 
 use crate::baselines::Strategy;
+use crate::codec::{self, CodecError, Encoding, FrameMeta};
 use crate::config::DropoutPolicy;
 use crate::coordinator::assignment::average_wait;
 use crate::coordinator::client::{run_local, LocalResult};
@@ -250,9 +261,19 @@ pub struct LocalTask {
     pub payload: Vec<Tensor>,
     /// owned batch source (seeded by `(seed, client, round)`)
     pub stream: BatchStream,
-    /// payload transfer size, counted once per direction (broadcast down,
-    /// upload up)
+    /// broadcast (downlink) transfer size — the analytic payload float
+    /// count in every codec mode (the server sends the model out as-is;
+    /// only the *update upload* is wire-framed)
     pub bytes: usize,
+    /// upload (uplink) transfer size: equal to `bytes` under
+    /// `--codec analytic`, the measured `HWU1` frame length
+    /// ([`crate::codec::upload_bytes`]) under the wire modes — the same
+    /// number the planner priced ν from
+    pub up_bytes: usize,
+    /// wire-mode frame identity; `None` under `--codec analytic`, where
+    /// the update never touches the codec and the run stays
+    /// byte-identical to the pre-codec repo
+    pub wire: Option<WireTask>,
     /// projected completion time τ·μ + ν (Eq. 17-18)
     pub completion: f64,
     /// scenario mid-round dropout: the virtual instant (relative to the
@@ -265,12 +286,29 @@ pub struct LocalTask {
     pub drop_at: Option<f64>,
 }
 
+/// Wire-mode metadata a task carries to its encode point: the frame
+/// header identity plus the encoding. Stamped by the scheme's
+/// `take_tasks` whenever the codec is a wire mode; the worker encodes
+/// the trained update into an `HWU1` frame, verifies the frame length
+/// against the planned [`LocalTask::up_bytes`], and decodes it back —
+/// so quantization/sparsification error honestly enters aggregation.
+#[derive(Debug, Clone, Copy)]
+pub struct WireTask {
+    /// `codec::scheme_id::*` of the producing scheme
+    pub scheme: u8,
+    pub round: u32,
+    pub enc: Encoding,
+}
+
 /// A completed task: the plan metadata plus the local-training result.
 pub struct TaskOutcome {
     pub client: usize,
     pub p: usize,
     pub tau: usize,
+    /// broadcast (downlink) bytes — see [`LocalTask::bytes`]
     pub bytes: usize,
+    /// upload (uplink) bytes actually billed — see [`LocalTask::up_bytes`]
+    pub up_bytes: usize,
     pub completion: f64,
     pub result: LocalResult,
 }
@@ -295,15 +333,15 @@ pub enum TaskFate {
 
 fn exec_task(engine: &Engine, task: LocalTask) -> Result<TaskFate> {
     let LocalTask {
-        client, p, tau, lr, train_exec, probe_exec, payload, mut stream, bytes, completion,
-        drop_at,
+        client, p, tau, lr, train_exec, probe_exec, payload, mut stream, bytes, up_bytes, wire,
+        completion, drop_at,
     } = task;
     if let Some(drop_time) = drop_at {
         // the client vanished: its broadcast is already out, its result
         // could never be uploaded — skip the PJRT work entirely
         return Ok(TaskFate::Dropped(DroppedTask { client, bytes, drop_time }));
     }
-    let result = run_local(
+    let mut result = run_local(
         engine,
         &train_exec,
         probe_exec.as_deref(),
@@ -312,7 +350,20 @@ fn exec_task(engine: &Engine, task: LocalTask) -> Result<TaskFate> {
         lr,
         || stream.next_batch(),
     )?;
-    Ok(TaskFate::Done(TaskOutcome { client, p, tau, bytes, completion, result }))
+    if let Some(w) = wire {
+        // the client's (virtual) upload actually travels the wire: frame
+        // the update, verify the realized length against what the plan
+        // billed, and aggregate from the *decoded* tensors so q8/top-k
+        // error honestly reaches the accumulators
+        let meta = FrameMeta { scheme: w.scheme, round: w.round, client: client as u64 };
+        let mut buf = Vec::with_capacity(up_bytes);
+        let n = codec::encode_update(&mut buf, &meta, w.enc, &result.params)?;
+        if n != up_bytes {
+            return Err(CodecError::PlannedSizeDrift { planned: up_bytes, actual: n }.into());
+        }
+        result.params = codec::decode_update(&buf)?.tensors;
+    }
+    Ok(TaskFate::Done(TaskOutcome { client, p, tau, bytes, up_bytes, completion, result }))
 }
 
 /// Partition ordered fates into (survivors, dropped), both in assignment
@@ -677,8 +728,11 @@ struct RoundMeta {
     /// per assignment index: projected completion time (τ·μ + ν, plus
     /// any busy-device delay — see `delay_busy_clients`)
     completions: Vec<f64>,
-    /// per assignment index: payload transfer size
+    /// per assignment index: broadcast (downlink) transfer size
     bytes: Vec<usize>,
+    /// per assignment index: upload (uplink) transfer size — analytic or
+    /// measured wire-frame length, whatever the plan billed ν from
+    up_bytes: Vec<usize>,
     /// per assignment index: the simulated client
     clients: Vec<usize>,
     /// per assignment index: stamped as a scenario mid-round dropout
@@ -692,6 +746,7 @@ impl RoundMeta {
             t_start,
             completions: tasks.iter().map(|t| t.completion).collect(),
             bytes: tasks.iter().map(|t| t.bytes).collect(),
+            up_bytes: tasks.iter().map(|t| t.up_bytes).collect(),
             clients: tasks.iter().map(|t| t.client).collect(),
             dropped: tasks.iter().map(|t| t.drop_at.is_some()).collect(),
         }
@@ -966,7 +1021,10 @@ fn drive_quorum(
             f64,
             HashMap<usize, f64>,
         ) = if let Some(hcfg) = &hierarchy {
-            let surv_bytes: Vec<usize> = survivors_idx.iter().map(|&i| meta.bytes[i]).collect();
+            // the hierarchy plans WAN forwards from *upload* sizes — in a
+            // wire mode an edge's composed forward is a measured frame
+            let surv_bytes: Vec<usize> =
+                survivors_idx.iter().map(|&i| meta.up_bytes[i]).collect();
             let plan = plan_hierarchy(&surv_completions, &surv_bytes, hcfg, policy, signals);
             let members: Vec<usize> =
                 plan.members.iter().map(|&j| survivors_idx[j]).collect();
@@ -1292,7 +1350,7 @@ pub fn collect_quorum_round(
     let mut losses = Vec::with_capacity(batch.quorum.len() + batch.late.len());
     for o in &batch.quorum {
         down += o.bytes;
-        member_up += o.bytes;
+        member_up += o.up_bytes;
         completion.push(o.completion);
         losses.push(o.result.mean_loss);
     }
@@ -1301,7 +1359,7 @@ pub fn collect_quorum_round(
     // merges still bill individually at their merge round either way
     let mut up = batch.wan_up_bytes.unwrap_or(member_up);
     for l in &batch.late {
-        up += l.outcome.bytes;
+        up += l.outcome.up_bytes;
         losses.push(l.outcome.result.mean_loss);
     }
     env.traffic.record_down(down);
@@ -1340,7 +1398,7 @@ pub fn collect_round(
     let mut losses = Vec::with_capacity(outcomes.len());
     for o in outcomes {
         down += o.bytes;
-        up += o.bytes;
+        up += o.up_bytes;
         completion.push(o.completion);
         losses.push(o.result.mean_loss);
     }
@@ -1405,6 +1463,8 @@ mod tests {
             payload: Vec::new(),
             stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
             bytes: 0,
+            up_bytes: 0,
+            wire: None,
             completion: 0.0,
             drop_at: None,
         };
@@ -1435,6 +1495,7 @@ mod tests {
             p: 1,
             tau: 1,
             bytes: 0,
+            up_bytes: 0,
             completion: 0.0,
             result: crate::coordinator::client::LocalResult {
                 params: Vec::new(),
@@ -1528,6 +1589,8 @@ mod tests {
             payload: Vec::new(),
             stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
             bytes: 0,
+            up_bytes: 0,
+            wire: None,
             completion,
             drop_at: None,
         };
@@ -1576,6 +1639,8 @@ mod tests {
             payload: Vec::new(),
             stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
             bytes: 0,
+            up_bytes: 0,
+            wire: None,
             completion,
             drop_at: None,
         };
@@ -1635,6 +1700,8 @@ mod tests {
             payload: Vec::new(),
             stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
             bytes: 0,
+            up_bytes: 0,
+            wire: None,
             completion,
             drop_at: None,
         };

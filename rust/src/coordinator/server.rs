@@ -34,8 +34,10 @@ use crate::coordinator::env::FlEnv;
 use crate::coordinator::estimator::EstimateTracker;
 use crate::coordinator::hierarchy::HierarchyCfg;
 use crate::coordinator::ledger::BlockLedger;
+use crate::codec::scheme_id;
 use crate::coordinator::round::{
     collect_quorum_round, collect_round, LocalTask, QuorumBatch, RoundDriver, TaskOutcome,
+    WireTask,
 };
 use crate::coordinator::RoundReport;
 use crate::model::ComposedGlobal;
@@ -91,6 +93,7 @@ impl HeroesServer {
                 tau_floor: cfg.tau_default,
                 h_max: 1_000_000,
                 beta_sq: 0.0,
+                codec: cfg.codec,
             },
             driver: RoundDriver::new(cfg.workers).with_hierarchy(HierarchyCfg::from_config(cfg)),
             family: cfg.family.clone(),
@@ -126,7 +129,12 @@ impl HeroesServer {
             let mut assignments = Vec::with_capacity(statuses.len());
             for s in statuses {
                 let (p, mu) = assignment::assign_width(info, s.q_flops, self.ctrl.mu_max);
-                let nu = s.link.upload_time(info.bytes_composed[&p]);
+                let up = crate::codec::upload_bytes(
+                    &info.composed_params[&p],
+                    info.bytes_composed[&p],
+                    self.ctrl.codec,
+                );
+                let nu = s.link.upload_time(up);
                 let sel = self.ledger.select_for_width(info, p);
                 self.ledger.record(&sel, self.tau_default as u64)?;
                 assignments.push(assignment::Assignment {
@@ -183,6 +191,16 @@ impl HeroesServer {
                 payload: self.global.reduced_inputs(&env.info, a.p, &a.selection.blocks)?,
                 stream: env.batch_stream(a.client, self.round),
                 bytes: env.info.bytes_composed[&a.p],
+                up_bytes: crate::codec::upload_bytes(
+                    &env.info.composed_params[&a.p],
+                    env.info.bytes_composed[&a.p],
+                    self.ctrl.codec,
+                ),
+                wire: self.ctrl.codec.encoding().map(|enc| WireTask {
+                    scheme: scheme_id::HEROES,
+                    round: self.round as u32,
+                    enc,
+                }),
                 completion: a.projected_t,
                 drop_at: None,
             });

@@ -14,8 +14,8 @@ use crate::coordinator::env::FlEnv;
 use crate::experiments::runner::{run_scheme, run_schemes, StopCondition};
 use crate::metrics::Recorder;
 use crate::runtime::EnginePool;
+use crate::codec::json::Json;
 use crate::util::cli::Args;
-use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -34,7 +34,7 @@ impl<'e> ExpCtx<'e> {
     /// (JSON, same keys) <- CLI flags.
     pub fn cfg(&self, family: &str) -> Result<ExperimentConfig> {
         let base = if let Some(path) = self.args.get("config") {
-            let doc = crate::util::json::parse_file(std::path::Path::new(path))?;
+            let doc = crate::codec::json::parse_file(std::path::Path::new(path))?;
             ExperimentConfig::from_json(family, self.scale, &doc)?
         } else {
             ExperimentConfig::preset(family, self.scale)

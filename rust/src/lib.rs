@@ -18,6 +18,7 @@
 //! PJRT CPU client (`runtime`); python never runs inside the round loop.
 
 pub mod baselines;
+pub mod codec;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -49,6 +49,17 @@
 //! policy over its sub-cohort and forwarding one composed update over
 //! a backhaul link; the root quorums over the E arrivals —
 //! `coordinator::hierarchy`. Requires --quorum and E ≤ --k).
+//! --codec analytic|wire|wire:q8|wire:q8,topk=R (update-upload codec,
+//! `codec` module: `analytic` — default, byte-identical to every prior
+//! release — bills the float-count estimate and never frames a payload;
+//! the `wire` modes encode each trained update into the `HWU1` frame
+//! format and bill ν / TrafficMeter / WAN bytes from the *measured*
+//! frame length — `q8` adds per-tensor uint8 affine quantization,
+//! `topk=R` magnitude sparsification keeping a fraction R ∈ (0, 1] of
+//! each tensor, and the decoded — dequantized, densified — update is
+//! what aggregates, so compression error honestly reaches the global
+//! model. Encoded bytes are a pure function of (plan, update, cfg):
+//! wire runs stay seed-deterministic for any --workers/--pool).
 
 use anyhow::{anyhow, Result};
 use heroes::baselines::ALL_SCHEMES;
@@ -138,7 +149,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let scheme = args.get_or("scheme", "heroes").to_string();
     let scale = Scale::parse(args.get_or("scale", "smoke"))?;
     let cfg = if let Some(path) = args.get("config") {
-        let doc = heroes::util::json::parse_file(std::path::Path::new(path))?;
+        let doc = heroes::codec::json::parse_file(std::path::Path::new(path))?;
         ExperimentConfig::from_json(&family, scale, &doc)?.apply_args(args)?
     } else {
         ExperimentConfig::preset(&family, scale).apply_args(args)?

@@ -8,9 +8,9 @@
 //! recorded series, and experiments persist them as JSON + CSV under
 //! `results/`.
 
+use crate::codec::json::Json;
 use crate::coordinator::RoundReport;
 use crate::simulation::TrafficMeter;
-use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -137,8 +137,10 @@ impl Recorder {
                     ("round".into(), Json::from(s.round)),
                     ("sim_time".into(), Json::from(s.sim_time)),
                     ("traffic_gb".into(), Json::from(s.traffic_gb)),
-                    ("down_bytes".into(), Json::from(s.down_bytes as usize)),
-                    ("up_bytes".into(), Json::from(s.up_bytes as usize)),
+                    // u64 counters take the lossless Json::Uint path —
+                    // the old `as usize` + f64 route truncated > 2^53
+                    ("down_bytes".into(), Json::from(s.down_bytes)),
+                    ("up_bytes".into(), Json::from(s.up_bytes)),
                     ("test_loss".into(), Json::from(s.test_loss)),
                     ("test_acc".into(), Json::from(s.test_acc)),
                     ("avg_wait".into(), Json::from(s.avg_wait)),
@@ -247,7 +249,7 @@ mod tests {
         assert_eq!(j.get("scheme").unwrap().as_str(), Some("test"));
         assert_eq!(j.get("samples").unwrap().as_arr().unwrap().len(), 3);
         // round-trips through our parser
-        let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        let parsed = crate::codec::json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.get("samples").unwrap().as_arr().unwrap().len(), 3);
     }
 
@@ -279,7 +281,7 @@ mod tests {
         assert!((r.samples[0].traffic_gb - 0.1).abs() < 1e-12, "gb derives from the meter");
 
         // JSON: parse back and compare the counters exactly
-        let parsed = crate::util::json::parse(&r.to_json().to_string_pretty()).unwrap();
+        let parsed = crate::codec::json::parse(&r.to_json().to_string_pretty()).unwrap();
         let row = &parsed.get("samples").unwrap().as_arr().unwrap()[1];
         assert_eq!(row.get("down_bytes").unwrap().as_usize(), Some(300_000_000));
         assert_eq!(row.get("up_bytes").unwrap().as_usize(), Some(200_000_000));
@@ -292,5 +294,30 @@ mod tests {
         let row2: Vec<&str> = csv.lines().nth(2).unwrap().split(',').collect();
         assert_eq!(row2[di].parse::<u64>().unwrap(), 300_000_000);
         assert_eq!(row2[ui].parse::<u64>().unwrap(), 200_000_000);
+    }
+
+    #[test]
+    fn counters_above_4gib_survive_the_json_round_trip() {
+        // regression: `Json::from(s.down_bytes as usize)` routed the
+        // counters through f64 — exact here, but the same From<usize>
+        // truncated anything above 2^53, and a long simulated campaign's
+        // cumulative traffic gets there. The counters now ride
+        // Json::Uint; pin a > 4 GiB (and a > 2^53) value end to end.
+        let mut r = Recorder::new("big");
+        let big_down = 9_007_199_254_740_995u64; // 2^53 + 3: not f64-representable
+        let big_up = 5_000_000_000u64; // > 4 GiB
+        r.push_eval(
+            1,
+            1.0,
+            &meter(big_down as usize, big_up as usize),
+            1.0,
+            0.5,
+            1.0,
+            0.0,
+        );
+        let parsed = crate::codec::json::parse(&r.to_json().to_string_pretty()).unwrap();
+        let row = &parsed.get("samples").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.get("down_bytes").unwrap().as_u64(), Some(big_down));
+        assert_eq!(row.get("up_bytes").unwrap().as_u64(), Some(big_up));
     }
 }

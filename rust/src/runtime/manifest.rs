@@ -7,7 +7,7 @@
 //! FLOPs / transfer-bytes cost model the simulator plugs into the paper's
 //! Eq. 17-18.
 
-use crate::util::json::{self, Json};
+use crate::codec::json::{self, Json};
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

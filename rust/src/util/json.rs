@@ -1,24 +1,75 @@
-//! Minimal JSON parser / serializer (substrate — no serde in the offline
-//! vendor set; see DESIGN.md).
+//! Minimal JSON parser / serializer backend (substrate — no serde in the
+//! offline vendor set; see DESIGN.md).
+//!
+//! This module is `pub(crate)`: the public entry point is the
+//! [`crate::codec::json`] facade, which re-exports the value type and the
+//! parser and adds the streaming `io::Write` serializers. Call sites
+//! outside the crate (benches, integration tests, the binary) go through
+//! the facade; nothing outside `codec/` should walk these internals.
 //!
 //! Supports the full JSON grammar (objects, arrays, strings with escapes,
 //! numbers incl. exponents, bools, null). Object key order is preserved so
-//! serialized configs/results diff cleanly. Used for `artifacts/manifest.json`,
-//! experiment configs and results emission.
+//! serialized configs/results diff cleanly.
+//!
+//! Number fidelity contract (pinned by tests here and in `codec::json`):
+//!
+//! * every `f64` the serializer emits reparses to the **identical bits**
+//!   (Rust's `{}` formatting is shortest-round-trip; the integer fast
+//!   path is exact below 1e15 and excludes `-0.0`, which serializes as
+//!   `-0` through the float path);
+//! * non-negative integer literals parse as [`Json::Uint`], a lossless
+//!   `u64` path for cumulative counters that overflow `f64`'s 2^53
+//!   integer range (>4 GiB traffic meters at population scale);
+//! * `Num` and `Uint` compare equal when they denote the same integer,
+//!   so `parse("42") == Json::Num(42.0)` and round-trips through the
+//!   serializer (which emits the same text for both) stay `==`.
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io::{self, Write};
 
 /// A parsed JSON value.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// Lossless non-negative integer. The parser produces this for every
+    /// plain integer literal that fits; `From<u64>`/`From<usize>` land
+    /// here so byte counters never round through `f64`.
+    Uint(u64),
     Str(String),
     Arr(Vec<Json>),
     /// BTreeMap keeps deterministic ordering for serialization.
     Obj(BTreeMap<String, Json>),
+}
+
+/// `Num(f)` and `Uint(u)` denote the same JSON number iff `f` is a
+/// non-negative integer exactly representable as that `u64` — and the
+/// conversion is exact in both directions (above 2^53 a `u64` has no
+/// exact `f64` twin, so `Uint(2^53+1) != Num((2^53+1) as f64)`).
+fn uint_eq_f64(u: u64, f: f64) -> bool {
+    f >= 0.0
+        && f < 18_446_744_073_709_551_616.0 // 2^64: `f as u64` would saturate
+        && f.fract() == 0.0
+        && f as u64 == u
+        && u as f64 == f
+}
+
+impl PartialEq for Json {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            (Json::Uint(a), Json::Uint(b)) => a == b,
+            (Json::Num(f), Json::Uint(u)) | (Json::Uint(u), Json::Num(f)) => uint_eq_f64(*u, *f),
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 /// Error with byte offset into the source text.
@@ -35,16 +86,33 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            Json::Uint(u) => Some(*u as f64),
+            _ => None,
+        }
+    }
+
+    /// Lossless `u64` view: `Uint` directly, `Num` only when it denotes
+    /// an exactly-representable non-negative integer.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Uint(u) => Some(*u),
+            Json::Num(n) if uint_eq_f64(*n as u64, *n) => Some(*n as u64),
             _ => None,
         }
     }
 
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().map(|n| n as i64)
+        match self {
+            Json::Uint(u) => i64::try_from(*u).ok(),
+            _ => self.as_f64().map(|n| n as i64),
+        }
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().and_then(|n| if n >= 0.0 { Some(n as usize) } else { None })
+        match self {
+            Json::Uint(u) => usize::try_from(*u).ok(),
+            _ => self.as_f64().and_then(|n| if n >= 0.0 { Some(n as usize) } else { None }),
+        }
     }
 
     pub fn as_bool(&self) -> Option<bool> {
@@ -99,6 +167,12 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("json field `{key}` is not a number"))
     }
 
+    pub fn req_u64(&self, key: &str) -> anyhow::Result<u64> {
+        self.req(key)?
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("json field `{key}` is not a u64-exact integer"))
+    }
+
     pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
         self.req(key)?
             .as_usize()
@@ -146,9 +220,14 @@ impl From<f64> for Json {
         Json::Num(v)
     }
 }
+impl From<u64> for Json {
+    fn from(v: u64) -> Self {
+        Json::Uint(v)
+    }
+}
 impl From<usize> for Json {
     fn from(v: usize) -> Self {
-        Json::Num(v as f64)
+        Json::Uint(v as u64)
     }
 }
 impl From<&str> for Json {
@@ -367,6 +446,7 @@ impl<'a> Parser<'a> {
         while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
             self.pos += 1;
         }
+        let plain_int_end = self.pos; // no '.', no exponent yet
         if self.peek() == Some(b'.') {
             self.pos += 1;
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
@@ -383,6 +463,15 @@ impl<'a> Parser<'a> {
             }
         }
         let s = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        // Non-negative plain-integer literals take the lossless u64 path
+        // (counters above 2^53 round-trip exactly); everything else —
+        // negatives, fractions, exponents, > u64::MAX — is f64, which
+        // Rust parses correctly rounded.
+        if self.pos == plain_int_end && self.b[start] != b'-' {
+            if let Ok(u) = s.parse::<u64>() {
+                return Ok(Json::Uint(u));
+            }
+        }
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))
@@ -390,36 +479,43 @@ impl<'a> Parser<'a> {
 }
 
 // ------------------------------------------------------------------------
-// serialization
+// serialization — streams into any `io::Write` sink (lil-json idiom);
+// the `to_string_*` conveniences wrap an in-memory Vec.
 
-fn esc(s: &str, out: &mut String) {
-    out.push('"');
+fn esc<W: Write>(s: &str, out: &mut W) -> io::Result<()> {
+    out.write_all(b"\"")?;
     for c in s.chars() {
         match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
+            '"' => out.write_all(b"\\\"")?,
+            '\\' => out.write_all(b"\\\\")?,
+            '\n' => out.write_all(b"\\n")?,
+            '\r' => out.write_all(b"\\r")?,
+            '\t' => out.write_all(b"\\t")?,
+            c if (c as u32) < 0x20 => write!(out, "\\u{:04x}", c as u32)?,
+            c => write!(out, "{c}")?,
         }
     }
-    out.push('"');
+    out.write_all(b"\"")
 }
 
-fn fmt_num(n: f64, out: &mut String) {
-    if n.is_finite() && n == n.trunc() && n.abs() < 1e15 {
-        out.push_str(&format!("{}", n as i64));
+fn fmt_num<W: Write>(n: f64, out: &mut W) -> io::Result<()> {
+    let neg_zero = n == 0.0 && n.is_sign_negative();
+    if n.is_finite() && n == n.trunc() && n.abs() < 1e15 && !neg_zero {
+        // exact integer fast path; -0.0 must not take it (the sign bit
+        // would be lost on reparse)
+        write!(out, "{}", n as i64)
     } else if n.is_finite() {
-        out.push_str(&format!("{n}"));
+        // Rust's `{}` for f64 is shortest-round-trip and never uses
+        // exponent notation, so the text is valid JSON and reparses to
+        // identical bits (incl. "-0" -> -0.0)
+        write!(out, "{n}")
     } else {
-        out.push_str("null"); // JSON has no NaN/Inf
+        out.write_all(b"null") // JSON has no NaN/Inf
     }
 }
 
 impl Json {
-    fn write(&self, out: &mut String, indent: usize, cur: usize) {
+    pub(crate) fn write_to<W: Write>(&self, out: &mut W, indent: usize, cur: usize) -> io::Result<()> {
         let (nl, pad, pad2): (String, String, String) = if indent > 0 {
             (
                 "\n".into(),
@@ -430,66 +526,66 @@ impl Json {
             (String::new(), String::new(), String::new())
         };
         match self {
-            Json::Null => out.push_str("null"),
-            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => fmt_num(*n, out),
-            Json::Str(s) => esc(s, out),
+            Json::Null => out.write_all(b"null")?,
+            Json::Bool(b) => out.write_all(if *b { b"true" } else { b"false" })?,
+            Json::Num(n) => fmt_num(*n, out)?,
+            Json::Uint(u) => write!(out, "{u}")?,
+            Json::Str(s) => esc(s, out)?,
             Json::Arr(a) => {
                 if a.is_empty() {
-                    out.push_str("[]");
-                    return;
+                    return out.write_all(b"[]");
                 }
-                out.push('[');
+                out.write_all(b"[")?;
                 for (i, v) in a.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        out.write_all(b",")?;
                     }
-                    out.push_str(&nl);
-                    out.push_str(&pad);
-                    v.write(out, indent, cur + indent);
+                    out.write_all(nl.as_bytes())?;
+                    out.write_all(pad.as_bytes())?;
+                    v.write_to(out, indent, cur + indent)?;
                 }
-                out.push_str(&nl);
-                out.push_str(&pad2);
-                out.push(']');
+                out.write_all(nl.as_bytes())?;
+                out.write_all(pad2.as_bytes())?;
+                out.write_all(b"]")?;
             }
             Json::Obj(o) => {
                 if o.is_empty() {
-                    out.push_str("{}");
-                    return;
+                    return out.write_all(b"{}");
                 }
-                out.push('{');
+                out.write_all(b"{")?;
                 for (i, (k, v)) in o.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        out.write_all(b",")?;
                     }
-                    out.push_str(&nl);
-                    out.push_str(&pad);
-                    esc(k, out);
-                    out.push(':');
+                    out.write_all(nl.as_bytes())?;
+                    out.write_all(pad.as_bytes())?;
+                    esc(k, out)?;
+                    out.write_all(b":")?;
                     if indent > 0 {
-                        out.push(' ');
+                        out.write_all(b" ")?;
                     }
-                    v.write(out, indent, cur + indent);
+                    v.write_to(out, indent, cur + indent)?;
                 }
-                out.push_str(&nl);
-                out.push_str(&pad2);
-                out.push('}');
+                out.write_all(nl.as_bytes())?;
+                out.write_all(pad2.as_bytes())?;
+                out.write_all(b"}")?;
             }
         }
+        Ok(())
     }
 
     /// Compact serialization.
     pub fn to_string_compact(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, 0, 0);
-        s
+        let mut buf = Vec::new();
+        self.write_to(&mut buf, 0, 0).expect("Vec<u8> write is infallible");
+        String::from_utf8(buf).expect("serializer emits UTF-8")
     }
 
     /// Pretty serialization with 2-space indent.
     pub fn to_string_pretty(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, 2, 0);
-        s
+        let mut buf = Vec::new();
+        self.write_to(&mut buf, 2, 0).expect("Vec<u8> write is infallible");
+        String::from_utf8(buf).expect("serializer emits UTF-8")
     }
 }
 
@@ -567,10 +663,83 @@ mod tests {
     }
 
     #[test]
+    fn uint_is_lossless_above_f64_integer_range() {
+        // 2^53 + 1 has no exact f64 twin: the old `usize as f64` path
+        // silently rounded it to 2^53. The Uint path round-trips it.
+        let big = (1u64 << 53) + 1;
+        let v = Json::from(big);
+        assert_eq!(v.to_string_compact(), "9007199254740993");
+        assert_eq!(parse("9007199254740993").unwrap().as_u64(), Some(big));
+        assert_ne!(parse("9007199254740993").unwrap(), Json::Num(big as f64));
+        // u64::MAX round-trips; u64::MAX as f64 rounds to 2^64, which is
+        // NOT equal to Uint(u64::MAX)
+        let v = Json::from(u64::MAX);
+        assert_eq!(parse(&v.to_string_compact()).unwrap().as_u64(), Some(u64::MAX));
+        assert_ne!(Json::Uint(u64::MAX), Json::Num(u64::MAX as f64));
+    }
+
+    #[test]
+    fn num_uint_cross_equality() {
+        // the serializer emits identical text for Num(4.0) and Uint(4),
+        // so equality must identify them
+        assert_eq!(Json::Num(4.0), Json::Uint(4));
+        assert_eq!(Json::Uint(0), Json::Num(0.0));
+        // IEEE equality: -0.0 == 0.0, so cross-equality identifies them
+        // too (keeps PartialEq transitive with Num(0.0) == Num(-0.0));
+        // bit-level pinning goes through the goldens' hex bit patterns
+        assert_eq!(Json::Uint(0), Json::Num(-0.0));
+        assert_ne!(Json::Num(4.5), Json::Uint(4));
+        assert_ne!(Json::Num(-4.0), Json::Uint(4));
+        // exact at the 2^53 boundary, distinct just above it
+        assert_eq!(Json::Num(9007199254740992.0), Json::Uint(1 << 53));
+        assert_ne!(Json::Num((1u64 << 53) as f64), Json::Uint((1 << 53) + 1));
+    }
+
+    #[test]
+    fn every_emitted_f64_reparses_to_identical_bits() {
+        // the golden traces pin f64s as bit patterns; the emitter must
+        // never lose bits. Covers the integer fast path, shortest-
+        // round-trip decimals, subnormals, extremes, and -0.0 (which
+        // used to serialize as "0", dropping the sign bit).
+        let cases = [
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            0.1,
+            1.0 / 3.0,
+            -2.5e-7,
+            1e15,          // just past the integer fast path
+            999999999999999.0, // the last integer inside it
+            1e300,
+            1e-300,
+            f64::MAX,
+            f64::MIN_POSITIVE,
+            5e-324, // smallest subnormal
+            std::f64::consts::PI,
+            (1u64 << 53) as f64,
+        ];
+        for v in cases {
+            let text = Json::Num(v).to_string_compact();
+            let back = match parse(&text).unwrap() {
+                Json::Num(n) => n,
+                Json::Uint(u) => u as f64, // integer text may parse as Uint
+                other => panic!("{text} parsed as {other:?}"),
+            };
+            assert_eq!(
+                back.to_bits(),
+                v.to_bits(),
+                "f64 {v:?} serialized as {text} reparsed to different bits"
+            );
+        }
+    }
+
+    #[test]
     fn accessors_and_req() {
         let v = parse(r#"{"s":"x","n":3,"b":true,"a":[4,5]}"#).unwrap();
         assert_eq!(v.req_str("s").unwrap(), "x");
         assert_eq!(v.req_usize("n").unwrap(), 3);
+        assert_eq!(v.req_u64("n").unwrap(), 3);
         assert!(v.req_bool("b").unwrap());
         assert_eq!(v.req_arr("a").unwrap().len(), 2);
         assert_eq!(v.get("a").unwrap().usize_vec().unwrap(), vec![4, 5]);

@@ -4,7 +4,9 @@
 
 pub mod bench;
 pub mod cli;
-pub mod json;
+/// crate-private: the public JSON surface is the `crate::codec::json`
+/// facade (re-exported value type + parser, streaming writers)
+pub(crate) mod json;
 pub mod logging;
 pub mod prop;
 pub mod rng;

@@ -16,6 +16,8 @@
 //! like every PJRT-dependent test.
 
 use heroes::baselines::{make_strategy, Strategy};
+use heroes::codec::json::Json;
+use heroes::codec::CodecCfg;
 use heroes::config::{ExperimentConfig, QuorumKnob, Scale};
 use heroes::coordinator::env::FlEnv;
 use heroes::coordinator::quorum_ctl::QuorumPolicy;
@@ -23,7 +25,6 @@ use heroes::coordinator::round::RoundDriver;
 use heroes::coordinator::RoundReport;
 use heroes::runtime::{EnginePool, Manifest};
 use heroes::simulation::Scenario;
-use heroes::util::json::Json;
 use heroes::util::rng::Rng;
 use std::path::PathBuf;
 
@@ -85,12 +86,19 @@ fn fingerprint(reports: &[RoundReport]) -> Json {
     Json::Arr(rows)
 }
 
-/// Run `scheme` for the pinned 2 rounds under `scenario`/`quorum` and
-/// fingerprint the series.
-fn run_fingerprint(pool: &EnginePool, scheme: &str, scenario: &str, quorum: QuorumKnob) -> Json {
+/// Run `scheme` for the pinned 2 rounds under `scenario`/`quorum`/
+/// `codec` and fingerprint the series.
+fn run_fingerprint(
+    pool: &EnginePool,
+    scheme: &str,
+    scenario: &str,
+    quorum: QuorumKnob,
+    codec: CodecCfg,
+) -> Json {
     let mut cfg = tiny_cfg();
     cfg.scenario = Scenario::parse(scenario).unwrap();
     cfg.quorum = quorum;
+    cfg.codec = codec;
     let mut env = FlEnv::build(pool, cfg.clone()).unwrap();
     let mut rng = Rng::new(cfg.seed ^ 0x5EED);
     let mut strategy = make_strategy(scheme, &env.info, &cfg, &mut rng).unwrap();
@@ -127,10 +135,19 @@ fn golden_traces_pin_the_round_pipeline() {
         // care about
         let doc = Json::obj(vec![
             ("scheme", Json::from(scheme)),
-            ("stable", run_fingerprint(&pool, scheme, "stable", QuorumKnob::Off)),
+            (
+                "stable",
+                run_fingerprint(&pool, scheme, "stable", QuorumKnob::Off, CodecCfg::Analytic),
+            ),
             (
                 "churn_quorum_auto",
-                run_fingerprint(&pool, scheme, "correlated-dropout", QuorumKnob::Auto),
+                run_fingerprint(
+                    &pool,
+                    scheme,
+                    "correlated-dropout",
+                    QuorumKnob::Auto,
+                    CodecCfg::Analytic,
+                ),
             ),
         ]);
         let path = dir.join(format!("{scheme}.json"));
@@ -149,7 +166,7 @@ fn golden_traces_pin_the_round_pipeline() {
              or regenerate the whole set with HEROES_REGEN_GOLDEN=1 and review the diff",
             path.display()
         );
-        let want = heroes::util::json::parse_file(&path).unwrap();
+        let want = heroes::codec::json::parse_file(&path).unwrap();
         assert_eq!(
             doc, want,
             "{scheme}: golden trace drifted from {} — if the change is intentional, \
@@ -160,11 +177,103 @@ fn golden_traces_pin_the_round_pipeline() {
 }
 
 #[test]
+fn wire_q8_golden_trace_pins_the_codec_path() {
+    // the quantized wire pipeline gets its own golden: same fingerprint
+    // schema, `--codec wire:q8` billing. Bootstraps **per file** — this
+    // golden was introduced after the original set, so it must pin
+    // itself on the first artifact-bearing machine even when sibling
+    // goldens already exist (the all-or-nothing bootstrap above only
+    // fires on a pristine tree).
+    let Some(pool) = pool_or_skip() else { return };
+    let regen = std::env::var("HEROES_REGEN_GOLDEN").ok().as_deref() == Some("1");
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let q8 = CodecCfg::parse("wire:q8").unwrap();
+    let doc = Json::obj(vec![
+        ("scheme", Json::from("heroes")),
+        ("codec", Json::from(q8.name().as_str())),
+        ("stable", run_fingerprint(&pool, "heroes", "stable", QuorumKnob::Off, q8)),
+        (
+            "churn_quorum_auto",
+            run_fingerprint(&pool, "heroes", "correlated-dropout", QuorumKnob::Auto, q8),
+        ),
+    ]);
+    let path = dir.join("heroes_wire_q8.json");
+    if regen || !path.exists() {
+        std::fs::write(&path, doc.to_string_pretty()).unwrap();
+        eprintln!(
+            "{} golden trace {}",
+            if regen { "regenerated" } else { "pinned new" },
+            path.display()
+        );
+        return;
+    }
+    let want = heroes::codec::json::parse_file(&path).unwrap();
+    assert_eq!(
+        doc, want,
+        "wire:q8 golden trace drifted from {} — if the change is intentional, \
+         regenerate with HEROES_REGEN_GOLDEN=1 and review the diff",
+        path.display()
+    );
+}
+
+/// Cumulative traffic (GB) at the last fingerprinted eval point.
+fn final_traffic_gb(fp: &Json) -> f64 {
+    fp.as_arr()
+        .unwrap()
+        .last()
+        .unwrap()
+        .get("traffic_gb")
+        .unwrap()
+        .get("value")
+        .unwrap()
+        .as_f64()
+        .unwrap()
+}
+
+#[test]
+fn wire_q8_bills_strictly_less_traffic_than_analytic() {
+    // the acceptance criterion in one test: same seed, same plan shape,
+    // but the q8 frames are smaller than the analytic float count, so
+    // the meter must bill strictly less
+    let Some(pool) = pool_or_skip() else { return };
+    let analytic =
+        run_fingerprint(&pool, "heroes", "stable", QuorumKnob::Off, CodecCfg::Analytic);
+    let q8 = run_fingerprint(
+        &pool,
+        "heroes",
+        "stable",
+        QuorumKnob::Off,
+        CodecCfg::parse("wire:q8").unwrap(),
+    );
+    let (a, w) = (final_traffic_gb(&analytic), final_traffic_gb(&q8));
+    assert!(w < a, "wire:q8 must bill strictly less than analytic ({w} !< {a})");
+}
+
+#[test]
 fn fingerprints_are_reproducible_within_a_process() {
     // the harness's own determinism: two identical runs fingerprint
     // identically (otherwise golden diffs would be noise)
     let Some(pool) = pool_or_skip() else { return };
-    let a = run_fingerprint(&pool, "fedavg", "correlated-dropout", QuorumKnob::Auto);
-    let b = run_fingerprint(&pool, "fedavg", "correlated-dropout", QuorumKnob::Auto);
+    let a = run_fingerprint(
+        &pool,
+        "fedavg",
+        "correlated-dropout",
+        QuorumKnob::Auto,
+        CodecCfg::Analytic,
+    );
+    let b = run_fingerprint(
+        &pool,
+        "fedavg",
+        "correlated-dropout",
+        QuorumKnob::Auto,
+        CodecCfg::Analytic,
+    );
     assert_eq!(a, b, "golden fingerprints must be reproducible");
+
+    // and the wire pipeline inherits the same reproducibility
+    let q8 = CodecCfg::parse("wire:q8").unwrap();
+    let c = run_fingerprint(&pool, "heroes", "stable", QuorumKnob::Off, q8);
+    let d = run_fingerprint(&pool, "heroes", "stable", QuorumKnob::Off, q8);
+    assert_eq!(c, d, "wire:q8 fingerprints must be reproducible");
 }

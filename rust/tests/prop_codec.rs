@@ -1,0 +1,208 @@
+//! Property-based tests (prop-lite) over the `HWU1` update codec: exact
+//! raw round-trips, the q8 error bound, top-k's stored-entry count, the
+//! header/frame length agreement, encoder purity (the size-and-bytes-
+//! are-a-pure-function contract behind `--workers`/`--pool`
+//! determinism), and decode-never-panics under truncation. Pure rust —
+//! none of these need artifacts.
+
+use heroes::codec::{self, quant, wire, Encoding, FrameMeta};
+use heroes::tensor::Tensor;
+use heroes::util::prop::check;
+use heroes::util::rng::Rng;
+
+fn meta() -> FrameMeta {
+    FrameMeta { scheme: codec::scheme_id::HEROES, round: 3, client: 11 }
+}
+
+/// A random update silhouette: 1–4 tensors of rank 1–3, dims 0–9 (zero
+/// dims included on purpose — empty tensors must round-trip too).
+fn gen_case(rng: &mut Rng) -> (Vec<Vec<usize>>, u64) {
+    let n = 1 + rng.below(4);
+    let shapes = (0..n)
+        .map(|_| {
+            let rank = 1 + rng.below(3);
+            (0..rank).map(|_| rng.below(10)).collect()
+        })
+        .collect();
+    (shapes, rng.next_u64())
+}
+
+fn tensors_from(shapes: &[Vec<usize>], seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    shapes.iter().map(|s| Tensor::randn(s, 1.0, &mut rng)).collect()
+}
+
+/// Every encoding mode a `--codec wire*` knob can produce.
+fn all_encodings() -> Vec<Encoding> {
+    let mut out = vec![Encoding::default(), Encoding { q8: true, topk: None }];
+    for rate in [0.05, 0.25, 1.0] {
+        out.push(Encoding { q8: false, topk: Some(rate) });
+        out.push(Encoding { q8: true, topk: Some(rate) });
+    }
+    out
+}
+
+#[test]
+fn prop_raw_frames_round_trip_bit_exactly() {
+    check(101, 80, gen_case, |(shapes, seed)| {
+        let ts = tensors_from(shapes, *seed);
+        let mut buf = Vec::new();
+        codec::encode_update(&mut buf, &meta(), Encoding::default(), &ts)
+            .map_err(|e| e.to_string())?;
+        let d = codec::decode_update(&buf).map_err(|e| e.to_string())?;
+        for (i, (a, b)) in ts.iter().zip(&d.tensors).enumerate() {
+            if a.shape() != b.shape() {
+                return Err(format!("tensor {i}: shape {:?} != {:?}", a.shape(), b.shape()));
+            }
+            if a.data() != b.data() {
+                return Err(format!("tensor {i}: raw data must round-trip bit-exactly"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_q8_error_is_bounded_by_the_per_tensor_scale() {
+    check(102, 80, gen_case, |(shapes, seed)| {
+        let ts = tensors_from(shapes, *seed);
+        let enc = Encoding { q8: true, topk: None };
+        let mut buf = Vec::new();
+        codec::encode_update(&mut buf, &meta(), enc, &ts).map_err(|e| e.to_string())?;
+        let d = codec::decode_update(&buf).map_err(|e| e.to_string())?;
+        for (i, (a, b)) in ts.iter().zip(&d.tensors).enumerate() {
+            // the affine grid rounds to the nearest step, so the
+            // reconstruction error is at most half the tensor's scale
+            let (_, scale, _) = quant::quantize_q8(a.data());
+            for (&x, &y) in a.data().iter().zip(b.data()) {
+                let err = (x - y).abs();
+                if err > 0.5001 * scale + 1e-6 {
+                    return Err(format!(
+                        "tensor {i}: q8 error {err} exceeds scale/2 = {}",
+                        scale / 2.0
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_stores_exactly_k_entries() {
+    check(103, 80, gen_case, |(shapes, seed)| {
+        let ts = tensors_from(shapes, *seed);
+        for rate in [0.05, 0.3, 1.0] {
+            for q8 in [false, true] {
+                let enc = Encoding { q8, topk: Some(rate) };
+                let mut buf = Vec::new();
+                codec::encode_update(&mut buf, &meta(), enc, &ts)
+                    .map_err(|e| e.to_string())?;
+                let d = codec::decode_update(&buf).map_err(|e| e.to_string())?;
+                for (i, (t, s)) in ts.iter().zip(&d.sections).enumerate() {
+                    let k = quant::k_of(t.len(), rate);
+                    if s.stored != k {
+                        return Err(format!(
+                            "tensor {i} (len {}, rate {rate}, q8 {q8}): stored {} != k {k}",
+                            t.len(),
+                            s.stored
+                        ));
+                    }
+                    let dense = d.tensors[i].data().iter().filter(|v| **v != 0.0).count();
+                    if dense > k {
+                        return Err(format!(
+                            "tensor {i}: {dense} nonzero reconstructed entries > k {k}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_declared_length_matches_the_actual_frame() {
+    check(104, 60, gen_case, |(shapes, seed)| {
+        let ts = tensors_from(shapes, *seed);
+        for enc in all_encodings() {
+            let mut buf = Vec::new();
+            let n = codec::encode_update(&mut buf, &meta(), enc, &ts)
+                .map_err(|e| e.to_string())?;
+            let planned = codec::frame_len_for_shapes(
+                shapes.iter().map(|s| s.as_slice()),
+                enc,
+            );
+            if n != buf.len() || n != planned {
+                return Err(format!(
+                    "{enc:?}: returned {n}, wrote {}, planned {planned}",
+                    buf.len()
+                ));
+            }
+            let h = wire::read_header(&buf).map_err(|e| e.to_string())?;
+            if wire::HEADER_LEN + h.body_len as usize != buf.len() {
+                return Err(format!(
+                    "{enc:?}: header declares {} body bytes, frame carries {}",
+                    h.body_len,
+                    buf.len() - wire::HEADER_LEN
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_encoded_bytes_are_pure_and_size_is_a_shape_function() {
+    // the determinism contract behind `--workers`/`--pool` invariance:
+    // the same (plan, update, cfg) always frames to the same bytes, and
+    // the frame *length* ignores the data entirely — so billed traffic
+    // cannot depend on scheduling
+    check(105, 60, gen_case, |(shapes, seed)| {
+        let ts = tensors_from(shapes, *seed);
+        let other = tensors_from(shapes, seed.wrapping_add(1));
+        for enc in all_encodings() {
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            codec::encode_update(&mut a, &meta(), enc, &ts).map_err(|e| e.to_string())?;
+            codec::encode_update(&mut b, &meta(), enc, &ts).map_err(|e| e.to_string())?;
+            if a != b {
+                return Err(format!("{enc:?}: two encodes of one update differ"));
+            }
+            let mut c = Vec::new();
+            codec::encode_update(&mut c, &meta(), enc, &other).map_err(|e| e.to_string())?;
+            if a.len() != c.len() {
+                return Err(format!(
+                    "{enc:?}: same shapes, different data changed the frame length \
+                     ({} vs {})",
+                    a.len(),
+                    c.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncated_frames_error_instead_of_panicking() {
+    check(106, 60, gen_case, |(shapes, seed)| {
+        let ts = tensors_from(shapes, *seed);
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        for enc in all_encodings() {
+            let mut buf = Vec::new();
+            codec::encode_update(&mut buf, &meta(), enc, &ts).map_err(|e| e.to_string())?;
+            for _ in 0..8 {
+                let cut = rng.below(buf.len());
+                if codec::decode_update(&buf[..cut]).is_ok() {
+                    return Err(format!(
+                        "{enc:?}: decoding a {cut}-byte prefix of a {}-byte frame \
+                         succeeded",
+                        buf.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -36,6 +36,7 @@ fn ctrl() -> ControllerCfg {
         tau_floor: 8,
         h_max: 1_000_000,
         beta_sq: 0.0,
+        codec: heroes::codec::CodecCfg::Analytic,
     }
 }
 
