@@ -36,7 +36,7 @@ fn main() {
     let b = Bench::default();
 
     // `HEROES_BENCH_ONLY=<section>` restricts the run to one section
-    // (micro | population | codec | driver) so CI can run each
+    // (micro | population | codec | faults | driver) so CI can run each
     // acceptance bench as its own named step; unset runs everything.
     let only = std::env::var("HEROES_BENCH_ONLY").ok();
     let run_section = |name: &str| only.as_deref().map_or(true, |o| o == name);
@@ -80,6 +80,11 @@ fn main() {
     // ---- population scale: O(cohort) round cost from 1e3 to 1e6 ----
     if run_section("population") {
         population_bench();
+    }
+
+    // ---- fault pressure: recovery overhead vs rate, retry vs replan ----
+    if run_section("faults") {
+        faults_bench(&b);
     }
 
     // manifest-dependent paths
@@ -513,6 +518,109 @@ fn population_bench() {
         );
         std::process::exit(1);
     }
+}
+
+/// Fault-pressure acceptance bench, pure rust (no artifacts needed):
+/// a synthetic 64-client cohort's completion plan is stamped under
+/// rising fault rates with the `retry` and `replan` policies, measuring
+/// what recovery actually costs — the mean round-closing completion
+/// inflation (retry pays backoff delays, replan pays lost members) and
+/// the fraction of the cohort each policy abandons. Also times the
+/// stamp hot path itself (one draw + resolution per dispatched task —
+/// it rides every round dispatch, so it must stay microseconds-cheap).
+/// Emitted as BENCH_faults.json, which CI runs as a named step.
+fn faults_bench(b: &Bench) {
+    use heroes::coordinator::resilience::{FaultPolicyCfg, FaultsCtl};
+    use heroes::simulation::FaultsCfg;
+
+    let cohort = 64usize;
+    let rounds = 40usize;
+    // a heterogeneous completion plan: client i finishes in 30..90 s
+    let completions: Vec<f64> = {
+        let mut rng = Rng::new(0xFA_0175);
+        (0..cohort).map(|_| rng.uniform_in(30.0, 90.0)).collect()
+    };
+    let baseline_close: f64 =
+        completions.iter().copied().fold(0.0, f64::max);
+
+    // stamp hot-path cost at a representative mixed rate
+    let hot = FaultsCfg::parse("exec=0.1,corrupt=0.05,partition=0.1").unwrap();
+    b.run("faults/stamp 64-task round (mixed 25%)", |i| {
+        let mut ctl = FaultsCtl::new(hot, FaultPolicyCfg::default(), 7);
+        ctl.note_dispatched(cohort);
+        for (client, c) in completions.iter().enumerate() {
+            ctl.stamp_one(i as usize, client, *c, false).unwrap();
+        }
+        *ctl.ledger()
+    });
+
+    let policies: [(&str, FaultPolicyCfg); 2] = [
+        ("retry", FaultPolicyCfg::default()),
+        ("replan", FaultPolicyCfg::parse("replan").unwrap()),
+    ];
+    let mut entries: Vec<(String, Json)> = Vec::new();
+    for rate in [0.05f64, 0.1, 0.2, 0.4] {
+        let cfg = FaultsCfg { exec: rate, corrupt: rate, partition: rate };
+        for (policy_name, policy) in policies {
+            // per round: the closing time is the max surviving
+            // completion after stamping; abandoned members are lost
+            let mut overhead = 0.0f64;
+            let mut lost = 0u64;
+            let mut ctl = FaultsCtl::new(cfg, policy, 11);
+            for round in 0..rounds {
+                ctl.note_dispatched(cohort);
+                let mut close = 0.0f64;
+                for (client, c) in completions.iter().enumerate() {
+                    let stamped = ctl.stamp_one(round, client, *c, false).unwrap();
+                    match stamped {
+                        Some((stamp, _)) if !stamp.recovered => lost += 1,
+                        Some((_, new_completion)) => close = close.max(new_completion),
+                        None => close = close.max(*c),
+                    }
+                }
+                overhead += close / baseline_close - 1.0;
+            }
+            let ledger = *ctl.ledger();
+            let mean_overhead = overhead / rounds as f64;
+            let lost_frac = lost as f64 / (cohort * rounds) as f64;
+            println!(
+                "faults/pressure rate={rate:<4} {policy_name:<6} \
+                 recovery overhead {:6.2}% of round time, {:5.2}% of cohort lost, \
+                 observed rate {:.3}",
+                100.0 * mean_overhead,
+                100.0 * lost_frac,
+                ledger.observed_rate()
+            );
+            entries.push((
+                format!("rate{rate}/{policy_name}"),
+                Json::obj(vec![
+                    ("injection_rate_per_class", Json::Num(rate)),
+                    ("mean_recovery_overhead", Json::Num(mean_overhead)),
+                    ("cohort_lost_frac", Json::Num(lost_frac)),
+                    ("observed_fault_rate", Json::Num(ledger.observed_rate())),
+                    (
+                        "retried",
+                        Json::Num(
+                            (ledger.exec.retried
+                                + ledger.corrupt.retried
+                                + ledger.partition.retried) as f64,
+                        ),
+                    ),
+                ]),
+            ));
+        }
+    }
+    let entries: Vec<(&str, Json)> =
+        entries.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    write_snap(
+        "BENCH_faults.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("fault_pressure_recovery_overhead".into())),
+            ("cohort", Json::Num(cohort as f64)),
+            ("rounds", Json::Num(rounds as f64)),
+            ("configs", Json::obj(entries)),
+        ]),
+    );
 }
 
 /// HWU1 codec throughput + compression ratio, pure rust (no artifacts

@@ -216,6 +216,7 @@ impl Strategy for DenseServer {
                 }),
                 completion: completion_time(tau, mu, nu),
                 drop_at: None,
+                fault: None,
             });
         }
         Ok(tasks)

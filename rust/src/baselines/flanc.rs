@@ -211,6 +211,7 @@ impl Strategy for FlancServer {
                 }),
                 completion: completion_time(self.tau, mu, nu),
                 drop_at: None,
+                fault: None,
             });
         }
         Ok(tasks)

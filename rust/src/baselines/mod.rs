@@ -65,16 +65,21 @@ pub trait Strategy {
     fn finish_round_quorum(&mut self, env: &mut FlEnv, batch: QuorumBatch) -> Result<RoundReport>;
     /// Execute one synchronous round (A→B→dispatch→C). One definition
     /// for every scheme — the phases are the per-scheme parts. Scenario
-    /// churn rides the shared policy layer: dropouts are stamped at
-    /// dispatch and resolved by `round::finish_dispatched_round`
-    /// (survivors re-plan vs typed error, per `--dropout-policy`).
+    /// churn and fault injection ride the shared policy layer: dropouts
+    /// and fault stamps land at dispatch and are resolved by
+    /// `round::finish_dispatched_round` (survivors re-plan vs typed
+    /// error, per `--dropout-policy`; faulted tasks were already
+    /// resolved by `--fault-policy` at stamp time).
     fn run_round(&mut self, env: &mut FlEnv) -> Result<RoundReport> {
         self.plan_ahead(env)?;
         let mut tasks = self.take_tasks(env)?;
         let round = env.stamp_dropouts(&mut tasks);
+        env.stamp_faults(&mut tasks, round)?;
         let fates = self.driver().run(env.pool, tasks)?;
-        let (survivors, dropped) = crate::coordinator::round::split_fates(fates);
-        crate::coordinator::round::finish_dispatched_round(env, self, round, survivors, dropped)
+        let (survivors, dropped, faulted) = crate::coordinator::round::split_fates(fates);
+        crate::coordinator::round::finish_dispatched_round(
+            env, self, round, survivors, dropped, faulted,
+        )
     }
     /// Evaluate the current global model: (test loss, test accuracy).
     fn evaluate(&self, env: &FlEnv) -> Result<(f64, f64)>;

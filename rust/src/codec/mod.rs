@@ -202,6 +202,26 @@ pub fn upload_bytes(specs: &[ParamSpec], analytic_bytes: usize, codec: CodecCfg)
     }
 }
 
+/// Number of frame-prefix bits [`corrupt_frame`] targets: the 4-byte
+/// magic plus the version byte.
+pub const CORRUPTIBLE_PREFIX_BITS: u64 = 40;
+
+/// Flip one bit of an encoded frame's magic/version prefix — the
+/// fault-injection layer's `corrupt` class (`simulation::faults`). The
+/// drawn `bit` is reduced `mod` [`CORRUPTIBLE_PREFIX_BITS`], so *any*
+/// u64 draw lands inside the 5 prefix bytes and the subsequent
+/// [`decode_update`] is guaranteed to fail with a typed
+/// [`CodecError::BadMagic`] or [`CodecError::BadVersion`] — never a
+/// silent mis-decode. No-op on a frame shorter than the prefix (the
+/// reader already rejects those as truncated).
+pub fn corrupt_frame(frame: &mut [u8], bit: u64) {
+    let bit = (bit % CORRUPTIBLE_PREFIX_BITS) as usize;
+    let (byte, shift) = (bit / 8, bit % 8);
+    if let Some(b) = frame.get_mut(byte) {
+        *b ^= 1 << shift;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,6 +257,33 @@ mod tests {
             let c = CodecCfg::parse(s).unwrap();
             assert_eq!(CodecCfg::parse(&c.name()).unwrap(), c, "{s}");
             assert_eq!(c.name(), s);
+        }
+    }
+
+    #[test]
+    fn every_corruptible_bit_surfaces_a_typed_decode_error() {
+        // the corrupt fault class must *demonstrably* exercise the typed
+        // decode-error path: whatever u64 the fault schedule draws, the
+        // flipped prefix bit makes the reader reject the frame
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(11);
+        let ts = vec![crate::tensor::Tensor::randn(&[4, 3], 0.5, &mut rng)];
+        let meta = FrameMeta { scheme: scheme_id::HEROES, round: 2, client: 9 };
+        let mut clean = Vec::new();
+        encode_update(&mut clean, &meta, Encoding::default(), &ts).unwrap();
+        for bit in 0..CORRUPTIBLE_PREFIX_BITS {
+            // offset by a multiple of the modulus: reduction must land on
+            // the same prefix bit for any draw
+            for draw in [bit, bit + 5 * CORRUPTIBLE_PREFIX_BITS] {
+                let mut poisoned = clean.clone();
+                corrupt_frame(&mut poisoned, draw);
+                assert_ne!(poisoned, clean, "bit {draw} must change the frame");
+                let err = decode_update(&poisoned).expect_err("corrupted frame must not decode");
+                assert!(
+                    matches!(err, CodecError::BadMagic { .. } | CodecError::BadVersion(_)),
+                    "bit {draw}: want BadMagic/BadVersion, got {err}"
+                );
+            }
         }
     }
 

@@ -9,7 +9,8 @@
 
 use crate::codec::json::Json;
 use crate::codec::CodecCfg;
-use crate::simulation::Scenario;
+use crate::coordinator::resilience::FaultPolicyCfg;
+use crate::simulation::{FaultsCfg, Scenario};
 use crate::util::cli::Args;
 use anyhow::{anyhow, Result};
 
@@ -244,6 +245,16 @@ pub struct ExperimentConfig {
     /// sparsified) and bill the meter, ν and the hierarchy backhaul
     /// from measured frame lengths.
     pub codec: CodecCfg,
+    /// `--faults`: per-class engine-level fault rates
+    /// (`simulation::faults::FaultsCfg`; `off` = the default, which
+    /// stamps nothing, consumes no RNG and is byte-identical to the
+    /// pre-fault repo).
+    pub faults: FaultsCfg,
+    /// `--fault-policy`: what the coordinator does about each drawn
+    /// fault class — retry (bounded, exponential virtual-clock backoff),
+    /// re-plan (abandon + survivors re-plan) or fail typed
+    /// (`coordinator::resilience::FaultPolicyCfg`).
+    pub fault_policy: FaultPolicyCfg,
 }
 
 /// The pool-sizing rule, shared by `ExperimentConfig::pool_size` and
@@ -317,6 +328,8 @@ impl ExperimentConfig {
             population: PopulationMode::Eager,
             hierarchy: 0,
             codec: CodecCfg::Analytic,
+            faults: FaultsCfg::default(),
+            fault_policy: FaultPolicyCfg::default(),
         }
     }
 
@@ -374,6 +387,12 @@ impl ExperimentConfig {
         self.hierarchy = args.get_usize("hierarchy", self.hierarchy)?;
         if let Some(c) = args.get("codec") {
             self.codec = CodecCfg::parse(c)?;
+        }
+        if let Some(f) = args.get("faults") {
+            self.faults = FaultsCfg::parse(f)?;
+        }
+        if let Some(p) = args.get("fault-policy") {
+            self.fault_policy = FaultPolicyCfg::parse(p)?;
         }
         if let Some(g) = args.get("gamma") {
             self.partition = Partition::Gamma(g.parse().map_err(|_| anyhow!("bad --gamma"))?);
@@ -454,6 +473,22 @@ impl ExperimentConfig {
                 .as_str()
                 .ok_or_else(|| anyhow!("`codec` expects a codec-knob string, got {v}"))?;
             c.codec = CodecCfg::parse(s)?;
+        }
+        // JSON parity with the CLI: `"faults"` and `"fault_policy"` are
+        // knob strings (`off` | `exec=R,corrupt=R,partition=R`;
+        // `retry` | `exec=retry,...,budget=N,backoff=S`); anything else
+        // is an error, never a silent fall-back to fault-free
+        if let Some(v) = j.get("faults") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("`faults` expects a fault-knob string, got {v}"))?;
+            c.faults = FaultsCfg::parse(s)?;
+        }
+        if let Some(v) = j.get("fault_policy") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("`fault_policy` expects a policy-knob string, got {v}"))?;
+            c.fault_policy = FaultPolicyCfg::parse(s)?;
         }
         if let Some(g) = j.get("gamma").and_then(Json::as_f64) {
             c.partition = Partition::Gamma(g);
@@ -780,6 +815,50 @@ mod tests {
         let bad_cli = Args::parse_from(["--codec", "zip"].iter().map(|s| s.to_string()));
         assert!(ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&bad_cli).is_err());
         for bad_doc in [r#"{"codec": 3}"#, r#"{"codec": "wire:topk=2"}"#] {
+            let j = crate::codec::json::parse(bad_doc).unwrap();
+            assert!(
+                ExperimentConfig::from_json("cnn", Scale::Smoke, &j).is_err(),
+                "{bad_doc} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn fault_knobs_parse_from_cli_and_json() {
+        use crate::coordinator::resilience::FaultAction;
+        let base = ExperimentConfig::preset("cnn", Scale::Smoke);
+        assert!(base.faults.is_off(), "faults default to off (byte-identical runs)");
+        assert_eq!(base.fault_policy, FaultPolicyCfg::default());
+
+        let args = Args::parse_from(
+            ["--faults", "exec=0.1,corrupt=0.05", "--fault-policy", "exec=retry,corrupt=replan,budget=3"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&args).unwrap();
+        assert!((c.faults.rate(crate::simulation::FaultClass::Exec) - 0.1).abs() < 1e-12);
+        assert!((c.faults.rate(crate::simulation::FaultClass::Corrupt) - 0.05).abs() < 1e-12);
+        assert_eq!(c.fault_policy.corrupt, FaultAction::Replan);
+        assert_eq!(c.fault_policy.budget, 3);
+
+        // JSON parity: the same knob grammar as the CLI
+        let j = crate::codec::json::parse(
+            r#"{"faults": "partition=0.2", "fault_policy": "fail"}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json("cnn", Scale::Smoke, &j).unwrap();
+        assert!((c.faults.rate(crate::simulation::FaultClass::Partition) - 0.2).abs() < 1e-12);
+        assert_eq!(c.fault_policy.exec, FaultAction::Fail);
+
+        // malformed values are errors, never a silent fall-back to off
+        let bad_cli = Args::parse_from(["--faults", "gamma=0.1"].iter().map(|s| s.to_string()));
+        assert!(ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&bad_cli).is_err());
+        let bad_pol =
+            Args::parse_from(["--fault-policy", "panic"].iter().map(|s| s.to_string()));
+        assert!(ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&bad_pol).is_err());
+        for bad_doc in
+            [r#"{"faults": 3}"#, r#"{"faults": "exec=2.0"}"#, r#"{"fault_policy": true}"#]
+        {
             let j = crate::codec::json::parse(bad_doc).unwrap();
             assert!(
                 ExperimentConfig::from_json("cnn", Scale::Smoke, &j).is_err(),

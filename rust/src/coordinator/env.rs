@@ -14,6 +14,7 @@
 
 use crate::config::{ExperimentConfig, Partition, PopulationMode};
 use crate::coordinator::assignment::ClientStatus;
+use crate::coordinator::resilience::{FaultsCtl, ResilienceLedger};
 use crate::coordinator::XData;
 use crate::data::loader::{EvalBatches, ImageLoader, TextEvalBatches, TextLoader};
 use crate::data::partition::{gamma_partition, phi_partition, PartitionPlan};
@@ -117,6 +118,9 @@ pub struct FlEnv<'e> {
     /// churn schedule state (`--scenario`): plan/dispatch cursors,
     /// bandwidth trace, observed dropout totals
     scenario: ScenarioCtl,
+    /// fault schedule + policy state (`--faults`/`--fault-policy`):
+    /// per-class draws, stamp-time resolutions and the resilience ledger
+    faults: FaultsCtl,
     train: TrainData,
     test: TestData,
     rng: Rng,
@@ -196,6 +200,7 @@ impl<'e> FlEnv<'e> {
             down_hi_mbps: cfg.down_mbps.1,
         };
         let scenario = ScenarioCtl::new(cfg.scenario, cfg.seed);
+        let faults = FaultsCtl::new(cfg.faults, cfg.fault_policy, cfg.seed);
         Ok(FlEnv {
             pool,
             info,
@@ -205,6 +210,7 @@ impl<'e> FlEnv<'e> {
             traffic: TrafficMeter::new(),
             network,
             scenario,
+            faults,
             train,
             test,
             rng: rng.fork(3),
@@ -277,6 +283,7 @@ impl<'e> FlEnv<'e> {
             down_hi_mbps: cfg.down_mbps.1,
         };
         let scenario = ScenarioCtl::new(cfg.scenario, cfg.seed);
+        let faults = FaultsCtl::new(cfg.faults, cfg.fault_policy, cfg.seed);
         Ok(FlEnv {
             pool,
             info,
@@ -288,6 +295,7 @@ impl<'e> FlEnv<'e> {
             traffic: TrafficMeter::new(),
             network,
             scenario,
+            faults,
             train,
             test,
             rng: Rng::new(cfg.seed ^ 0x909D),
@@ -374,10 +382,57 @@ impl<'e> FlEnv<'e> {
         round
     }
 
+    /// Stamp this dispatch's engine-level faults onto the round's tasks
+    /// (called once per dispatched round by every driver path, right
+    /// after [`Self::stamp_dropouts`] with the round index it returned).
+    /// Every fault is drawn *and resolved* here, at stamp time
+    /// (`coordinator::resilience`): a recovered fault delays the task's
+    /// projected completion by its retry/stall cost, an unrecovered one
+    /// attaches the stamp that makes the task complete as
+    /// `TaskFate::Faulted`, and a `fail`-policy fault aborts with a typed
+    /// `ResilienceError::FaultAbort`. A scenario-dropped task masks its
+    /// fault draw (the client is gone before the engine ever runs).
+    /// Draws are pure functions of `(seed, round, client)` and the
+    /// ledger is an order-independent sum, so any worker/pool count sees
+    /// the same faults; `--faults off` stamps nothing and consumes no
+    /// RNG.
+    pub fn stamp_faults(
+        &mut self,
+        tasks: &mut [crate::coordinator::round::LocalTask],
+        round: usize,
+    ) -> Result<()> {
+        if self.faults.is_off() {
+            return Ok(());
+        }
+        self.faults.note_dispatched(tasks.len());
+        for t in tasks.iter_mut() {
+            if let Some((stamp, completion)) =
+                self.faults.stamp_one(round, t.client, t.completion, t.drop_at.is_some())?
+            {
+                t.fault = Some(stamp);
+                t.completion = completion;
+            }
+        }
+        Ok(())
+    }
+
     /// Observed mid-round dropout rate over everything dispatched so far
     /// (the adaptive quorum controller's churn signal).
     pub fn observed_dropout_rate(&self) -> f64 {
         self.scenario.observed_dropout_rate()
+    }
+
+    /// Observed engine-fault rate over everything dispatched so far (the
+    /// adaptive quorum controller's fault-pressure signal; 0 while
+    /// `--faults off`).
+    pub fn observed_fault_rate(&self) -> f64 {
+        self.faults.observed_fault_rate()
+    }
+
+    /// The run's resilience ledger (read-only; the recorder attaches it
+    /// to the run output, tests pin its counts).
+    pub fn resilience(&self) -> &ResilienceLedger {
+        self.faults.ledger()
     }
 
     /// The run's scenario state (read-only; tests and logs).

@@ -8,6 +8,7 @@
 //! * `client`     — simulated client executing Alg. 2 through PJRT
 //! * `env`        — shared federated world (data, fleet, WAN, clock, eval)
 //! * `round`      — the parallel round driver shared by every scheme
+//! * `resilience` — fault policies (retry/re-plan/fail) + resilience ledger
 //! * `quorum_ctl` — adaptive quorum control: per-round (K, α) decisions
 //! * `hierarchy`  — edge-tier quorum aggregation (`--hierarchy E`)
 //! * `server`     — the Heroes PS round loop (Alg. 1)
@@ -33,6 +34,7 @@ pub mod frequency;
 pub mod hierarchy;
 pub mod ledger;
 pub mod quorum_ctl;
+pub mod resilience;
 pub mod round;
 pub mod server;
 

@@ -63,6 +63,14 @@ pub struct QuorumSignals {
     /// in the synchronous merge instead of relegating it to straggler
     /// slots that may vanish.
     pub dropout_rate: f64,
+    /// observed engine-fault rate (`--faults`; injected by the round
+    /// driver from `FlEnv::observed_fault_rate` — schemes always report
+    /// 0 here). An unrecovered fault loses its update exactly like a
+    /// dropout, and a recovered one stretched the straggler tail, so
+    /// fault pressure consumes the staleness budget the same way churn
+    /// does: **K grows toward the full barrier as the fault rate rises**
+    /// (monotone, property-tested in `tests/prop_faults.rs`).
+    pub fault_rate: f64,
 }
 
 impl Default for QuorumSignals {
@@ -73,6 +81,7 @@ impl Default for QuorumSignals {
             l: 1.0,
             spread_index: 0.0,
             dropout_rate: 0.0,
+            fault_rate: 0.0,
         }
     }
 }
@@ -166,13 +175,14 @@ impl QuorumController {
             .clamp(self.cfg.alpha_min, self.cfg.alpha_max.max(self.cfg.alpha_min));
 
         // observed losses, the count-spread pressure and the observed
-        // churn consume the budget before any *new* staleness is
-        // admitted — this is what grows K back toward N when the
-        // staleness index (or the dropout rate: lost updates are
-        // realized losses too) rises
+        // churn/fault rates consume the budget before any *new*
+        // staleness is admitted — this is what grows K back toward N
+        // when the staleness index (or the dropout/fault rate: lost
+        // updates are realized losses too) rises
         let budget_left = (budget / (1.0 + sig.spread_index.max(0.0))
             - sig.staleness_index.max(0.0)
-            - sig.dropout_rate.max(0.0))
+            - sig.dropout_rate.max(0.0)
+            - sig.fault_rate.max(0.0))
         .max(0.0);
 
         if completions.is_empty() {
@@ -357,6 +367,23 @@ mod tests {
             prev = d.k;
         }
         assert_eq!(prev, 16, "a saturated dropout rate must force the full barrier");
+    }
+
+    #[test]
+    fn observed_faults_grow_k() {
+        // the fault-injection ledger's observed rate consumes the budget
+        // exactly like churn: heavier fault pressure ⇒ more synchrony
+        let mut cfg = QuorumCtlCfg::new(0.8, 1, 0.5, 1.0);
+        cfg.alpha_gain = 0.0;
+        let mut prev = 0;
+        for rate in [0.0, 0.05, 0.15, 0.5] {
+            let mut c = QuorumController::new(cfg);
+            let sig = QuorumSignals { fault_rate: rate, ..QuorumSignals::default() };
+            let d = c.decide(&tailed(), &sig);
+            assert!(d.k >= prev, "K must not shrink as faults rise: {} < {prev}", d.k);
+            prev = d.k;
+        }
+        assert_eq!(prev, 16, "a saturated fault rate must force the full barrier");
     }
 
     #[test]

@@ -1,0 +1,571 @@
+//! Fault policies and the resilience ledger (`--fault-policy`).
+//!
+//! `simulation::faults` draws *what* goes wrong — this layer decides
+//! *what the coordinator does about it*, per fault class:
+//!
+//! * [`FaultAction::Retry`] — pay for the failed attempts on the
+//!   virtual clock: each of the event's `severity` attempts burns
+//!   `frac · completion` of wasted work plus an exponential backoff
+//!   (`backoff · 2^i`), all added to the task's completion. At most
+//!   `budget` retries are paid per client per round; a severity beyond
+//!   the budget abandons the task (it re-plans like a dropout). A
+//!   transient partition under `Retry` simply waits the stall out.
+//! * [`FaultAction::Replan`] — don't wait: the task is abandoned the
+//!   moment the fault manifests and the round re-plans over the
+//!   survivor set through the existing dropout machinery
+//!   (`finish_dispatched_round` / the quorum never-arriving-straggler
+//!   path).
+//! * [`FaultAction::Fail`] — any observed fault of the class aborts the
+//!   run with a typed [`ResilienceError::FaultAbort`].
+//!
+//! Every decision here is resolved **at stamp time**, before any worker
+//! touches the task: retry counts, backoff delays and abandon instants
+//! are plan facts derived from `(fault schedule, policy)`, never from
+//! worker timing — so faulted runs stay byte-identical across
+//! `--workers`/`--pool`/`--overlap` and the whole subsystem inherits
+//! the scenario engine's determinism contract. A task that the dropout
+//! schedule already kills *masks* its fault draw (the dropout wins; the
+//! ledger books the event as injected-but-unobserved).
+//!
+//! The [`ResilienceLedger`] counts injected / observed / retried /
+//! recovered / abandoned per class; it feeds the recorder's run output
+//! and the observed fault rate the adaptive quorum controller consumes
+//! ([`QuorumSignals::fault_rate`](crate::coordinator::quorum_ctl::QuorumSignals)).
+
+use crate::codec::json::Json;
+use crate::simulation::{FaultClass, FaultEvent, FaultsCfg, FAULT_CLASSES};
+use anyhow::{anyhow, Result};
+
+/// Typed resilience errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum ResilienceError {
+    #[error(
+        "round {round}: client {client} hit a `{}` fault under the `fail` policy",
+        .class.name()
+    )]
+    FaultAbort { round: usize, client: usize, class: FaultClass },
+}
+
+/// Per-class reaction to an observed fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// bounded retries with virtual-clock exponential backoff
+    Retry,
+    /// abandon the task and re-plan over the survivor set
+    Replan,
+    /// abort the run with a typed error
+    Fail,
+}
+
+impl FaultAction {
+    pub fn parse(s: &str) -> Result<FaultAction> {
+        match s {
+            "retry" => Ok(FaultAction::Retry),
+            "replan" => Ok(FaultAction::Replan),
+            "fail" => Ok(FaultAction::Fail),
+            other => Err(anyhow!("unknown fault action `{other}` (retry|replan|fail)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultAction::Retry => "retry",
+            FaultAction::Replan => "replan",
+            FaultAction::Fail => "fail",
+        }
+    }
+}
+
+/// The `--fault-policy` knob: per-class actions plus the retry knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPolicyCfg {
+    pub exec: FaultAction,
+    pub corrupt: FaultAction,
+    pub partition: FaultAction,
+    /// retries paid per client per round before a `Retry`-class fault
+    /// is abandoned
+    pub budget: u32,
+    /// base backoff (virtual seconds); attempt i waits `backoff · 2^i`
+    pub backoff: f64,
+}
+
+impl Default for FaultPolicyCfg {
+    fn default() -> FaultPolicyCfg {
+        FaultPolicyCfg {
+            exec: FaultAction::Retry,
+            corrupt: FaultAction::Retry,
+            partition: FaultAction::Retry,
+            budget: 2,
+            backoff: 5.0,
+        }
+    }
+}
+
+impl FaultPolicyCfg {
+    /// Parse a single action applied to every class (`retry` | `replan`
+    /// | `fail`), or comma-separated `<class>=<action>` /
+    /// `budget=<N>` / `backoff=<secs>` items, e.g.
+    /// `exec=retry,corrupt=replan,budget=3,backoff=2.5`. Unlisted
+    /// classes keep their defaults; malformed items are typed errors.
+    pub fn parse(s: &str) -> Result<FaultPolicyCfg> {
+        let mut cfg = FaultPolicyCfg::default();
+        if let Ok(action) = FaultAction::parse(s) {
+            cfg.exec = action;
+            cfg.corrupt = action;
+            cfg.partition = action;
+            return Ok(cfg);
+        }
+        if s.is_empty() {
+            return Err(anyhow!(
+                "empty --fault-policy (expect retry|replan|fail or <class>=<action>,...)"
+            ));
+        }
+        for item in s.split(',') {
+            let Some((key, val)) = item.split_once('=') else {
+                return Err(anyhow!(
+                    "bad --fault-policy item `{item}` in `{s}` (expect <class>=<action>, \
+                     budget=<N> or backoff=<secs>)"
+                ));
+            };
+            match key {
+                "exec" => cfg.exec = FaultAction::parse(val)?,
+                "corrupt" => cfg.corrupt = FaultAction::parse(val)?,
+                "partition" => cfg.partition = FaultAction::parse(val)?,
+                "budget" => {
+                    cfg.budget = val
+                        .parse()
+                        .map_err(|_| anyhow!("bad retry budget `{val}` in `{s}`"))?;
+                }
+                "backoff" => {
+                    let b: f64 = val
+                        .parse()
+                        .map_err(|_| anyhow!("bad backoff `{val}` in `{s}`"))?;
+                    if !(b.is_finite() && b >= 0.0) {
+                        return Err(anyhow!("backoff must be a finite non-negative number"));
+                    }
+                    cfg.backoff = b;
+                }
+                other => {
+                    return Err(anyhow!(
+                        "unknown --fault-policy key `{other}` in `{s}` \
+                         (exec|corrupt|partition|budget|backoff)"
+                    ))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn action(&self, class: FaultClass) -> FaultAction {
+        match class {
+            FaultClass::Exec => self.exec,
+            FaultClass::Corrupt => self.corrupt,
+            FaultClass::Partition => self.partition,
+        }
+    }
+}
+
+/// A fault resolved onto a dispatched task — the policy decision plus
+/// its virtual-clock consequences, fixed at stamp time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultStamp {
+    pub event: FaultEvent,
+    pub action: FaultAction,
+    /// retry attempts actually paid for (≤ the policy budget)
+    pub retries: u32,
+    /// true: the task completes anyway (its completion already carries
+    /// the retry/stall delay); false: the task is lost at `fault_time`
+    pub recovered: bool,
+    /// virtual seconds into the round at which an unrecovered task is
+    /// declared lost (0 when recovered)
+    pub fault_time: f64,
+}
+
+/// How one stamped task resolves.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultResolution {
+    /// the dropout schedule already killed the task; the fault never
+    /// manifests
+    Masked,
+    /// the task completes at `new_completion` (retry/stall paid)
+    Recovered { stamp: FaultStamp, new_completion: f64 },
+    /// the task is lost at `stamp.fault_time`
+    Abandoned { stamp: FaultStamp },
+}
+
+/// Resolve one drawn event under a policy — pure in `(event, policy,
+/// completion, dropped)`. `completion` is the task's unfaulted virtual
+/// completion; `dropped` is whether the dropout schedule already
+/// stamped the task. `Err` only under the `fail` action.
+pub fn resolve_fault(
+    event: FaultEvent,
+    policy: &FaultPolicyCfg,
+    round: usize,
+    client: usize,
+    completion: f64,
+    dropped: bool,
+) -> Result<FaultResolution> {
+    if dropped {
+        return Ok(FaultResolution::Masked);
+    }
+    let action = policy.action(event.class);
+    // time one failed attempt wastes before the fault manifests
+    let attempt = event.frac * completion;
+    // cumulative exponential backoff over n retries: backoff · (2^n − 1)
+    let backoff_sum = |n: u32| policy.backoff * ((1u64 << n) - 1) as f64;
+    let resolution = match action {
+        FaultAction::Fail => {
+            return Err(ResilienceError::FaultAbort { round, client, class: event.class }.into())
+        }
+        FaultAction::Replan => FaultResolution::Abandoned {
+            stamp: FaultStamp {
+                event,
+                action,
+                retries: 0,
+                recovered: false,
+                fault_time: attempt,
+            },
+        },
+        FaultAction::Retry => match event.class {
+            // a transient partition delays delivery; retrying means
+            // waiting the stall out
+            FaultClass::Partition => FaultResolution::Recovered {
+                stamp: FaultStamp { event, action, retries: 0, recovered: true, fault_time: 0.0 },
+                new_completion: completion + event.stall,
+            },
+            FaultClass::Exec | FaultClass::Corrupt => {
+                if event.severity <= policy.budget {
+                    // severity failed attempts, then a clean run: pay
+                    // severity wasted attempts + backoffs on top of the
+                    // full completion
+                    let delay = event.severity as f64 * attempt + backoff_sum(event.severity);
+                    FaultResolution::Recovered {
+                        stamp: FaultStamp {
+                            event,
+                            action,
+                            retries: event.severity,
+                            recovered: true,
+                            fault_time: 0.0,
+                        },
+                        new_completion: completion + delay,
+                    }
+                } else {
+                    // budget exhausted: budget+1 failed attempts and
+                    // budget backoffs, then give up
+                    let spent =
+                        (policy.budget + 1) as f64 * attempt + backoff_sum(policy.budget);
+                    FaultResolution::Abandoned {
+                        stamp: FaultStamp {
+                            event,
+                            action,
+                            retries: policy.budget,
+                            recovered: false,
+                            fault_time: spent,
+                        },
+                    }
+                }
+            }
+        },
+    };
+    Ok(resolution)
+}
+
+/// Per-class fault counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ClassCounts {
+    /// events the schedule drew for dispatched tasks
+    pub injected: u64,
+    /// injected minus dropout-masked: faults that actually perturbed
+    /// the round
+    pub observed: u64,
+    /// retry attempts paid on the virtual clock
+    pub retried: u64,
+    /// observed faults whose task still completed
+    pub recovered: u64,
+    /// observed faults whose task was lost (retry budget exhausted or
+    /// re-planned away)
+    pub abandoned: u64,
+}
+
+/// Run-level fault accounting, folded at stamp time (plan facts — the
+/// totals are order-independent sums over tasks, so any dispatch
+/// interleaving books the same ledger).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ResilienceLedger {
+    pub exec: ClassCounts,
+    pub corrupt: ClassCounts,
+    pub partition: ClassCounts,
+    /// tasks dispatched while fault injection was on (rate denominator)
+    pub dispatched: u64,
+}
+
+impl ResilienceLedger {
+    pub fn counts(&self, class: FaultClass) -> &ClassCounts {
+        match class {
+            FaultClass::Exec => &self.exec,
+            FaultClass::Corrupt => &self.corrupt,
+            FaultClass::Partition => &self.partition,
+        }
+    }
+
+    fn counts_mut(&mut self, class: FaultClass) -> &mut ClassCounts {
+        match class {
+            FaultClass::Exec => &mut self.exec,
+            FaultClass::Corrupt => &mut self.corrupt,
+            FaultClass::Partition => &mut self.partition,
+        }
+    }
+
+    /// Observed faults per dispatched task, cumulative — the pressure
+    /// signal the adaptive quorum controller consumes.
+    pub fn observed_rate(&self) -> f64 {
+        if self.dispatched == 0 {
+            return 0.0;
+        }
+        let observed: u64 = FAULT_CLASSES.iter().map(|c| self.counts(*c).observed).sum();
+        observed as f64 / self.dispatched as f64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        *self == ResilienceLedger::default()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let class_obj = |c: &ClassCounts| {
+            Json::obj(vec![
+                ("injected", Json::from(c.injected)),
+                ("observed", Json::from(c.observed)),
+                ("retried", Json::from(c.retried)),
+                ("recovered", Json::from(c.recovered)),
+                ("abandoned", Json::from(c.abandoned)),
+            ])
+        };
+        Json::obj(vec![
+            ("exec", class_obj(&self.exec)),
+            ("corrupt", class_obj(&self.corrupt)),
+            ("partition", class_obj(&self.partition)),
+            ("dispatched", Json::from(self.dispatched)),
+            ("observed_fault_rate", Json::from(self.observed_rate())),
+        ])
+    }
+}
+
+/// The per-run fault controller `FlEnv` holds: the schedule, the
+/// policy, and the ledger they fold into.
+#[derive(Debug, Clone)]
+pub struct FaultsCtl {
+    cfg: FaultsCfg,
+    policy: FaultPolicyCfg,
+    seed: u64,
+    ledger: ResilienceLedger,
+}
+
+impl FaultsCtl {
+    pub fn new(cfg: FaultsCfg, policy: FaultPolicyCfg, seed: u64) -> FaultsCtl {
+        FaultsCtl { cfg, policy, seed, ledger: ResilienceLedger::default() }
+    }
+
+    pub fn is_off(&self) -> bool {
+        self.cfg.is_off()
+    }
+
+    pub fn ledger(&self) -> &ResilienceLedger {
+        &self.ledger
+    }
+
+    pub fn observed_fault_rate(&self) -> f64 {
+        self.ledger.observed_rate()
+    }
+
+    /// Count one round's dispatch into the rate denominator (no-op
+    /// while faults are off, preserving the byte-identical ledger).
+    pub fn note_dispatched(&mut self, tasks: usize) {
+        if !self.is_off() {
+            self.ledger.dispatched += tasks as u64;
+        }
+    }
+
+    /// Draw and resolve the fault (if any) for one dispatched task,
+    /// folding the ledger and returning the stamp plus the possibly
+    /// delayed completion. The decision is a pure function of
+    /// `(cfg, policy, seed, round, client, completion, dropped)`; the
+    /// ledger is an order-independent sum of those decisions.
+    pub fn stamp_one(
+        &mut self,
+        round: usize,
+        client: usize,
+        completion: f64,
+        dropped: bool,
+    ) -> Result<Option<(FaultStamp, f64)>> {
+        let Some(event) = self.cfg.draw(self.seed, round, client) else {
+            return Ok(None);
+        };
+        let counts = self.ledger.counts_mut(event.class);
+        counts.injected += 1;
+        let resolution = resolve_fault(event, &self.policy, round, client, completion, dropped)?;
+        match resolution {
+            FaultResolution::Masked => Ok(None),
+            FaultResolution::Recovered { stamp, new_completion } => {
+                counts.observed += 1;
+                counts.retried += stamp.retries as u64;
+                counts.recovered += 1;
+                Ok(Some((stamp, new_completion)))
+            }
+            FaultResolution::Abandoned { stamp } => {
+                counts.observed += 1;
+                counts.retried += stamp.retries as u64;
+                counts.abandoned += 1;
+                Ok(Some((stamp, completion)))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn event(class: FaultClass, severity: u32) -> FaultEvent {
+        FaultEvent { class, severity, frac: 0.5, stall: 10.0, bit: 7 }
+    }
+
+    #[test]
+    fn policy_parses_the_documented_grammar() {
+        let d = FaultPolicyCfg::default();
+        assert_eq!(d.exec, FaultAction::Retry);
+        assert_eq!(FaultPolicyCfg::parse("replan").unwrap().corrupt, FaultAction::Replan);
+        let c = FaultPolicyCfg::parse("exec=retry,corrupt=replan,budget=3,backoff=2.5").unwrap();
+        assert_eq!(c.exec, FaultAction::Retry);
+        assert_eq!(c.corrupt, FaultAction::Replan);
+        assert_eq!(c.partition, FaultAction::Retry, "unlisted classes keep their default");
+        assert_eq!(c.budget, 3);
+        assert!((c.backoff - 2.5).abs() < 1e-12);
+        for bad in ["", "panic", "exec=panic", "budget=x", "backoff=-1", "fuse=retry"] {
+            assert!(FaultPolicyCfg::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn retry_recovers_within_budget_and_abandons_beyond_it() {
+        let policy = FaultPolicyCfg { budget: 2, backoff: 4.0, ..FaultPolicyCfg::default() };
+        // severity 2 ≤ budget 2: recovered, completion carries 2 wasted
+        // attempts (2 · 0.5 · 100) plus backoff 4·(2²−1) = 12
+        let r = resolve_fault(event(FaultClass::Exec, 2), &policy, 0, 3, 100.0, false).unwrap();
+        match r {
+            FaultResolution::Recovered { stamp, new_completion } => {
+                assert!(stamp.recovered);
+                assert_eq!(stamp.retries, 2);
+                assert!((new_completion - 212.0).abs() < 1e-9, "got {new_completion}");
+            }
+            other => panic!("expected recovery, got {other:?}"),
+        }
+        // severity 3 > budget 2: abandoned after budget+1 attempts and
+        // budget backoffs: 3 · 50 + 4·(2²−1) = 162
+        let r = resolve_fault(event(FaultClass::Corrupt, 3), &policy, 0, 3, 100.0, false).unwrap();
+        match r {
+            FaultResolution::Abandoned { stamp } => {
+                assert!(!stamp.recovered);
+                assert_eq!(stamp.retries, policy.budget, "retries never exceed the budget");
+                assert!((stamp.fault_time - 162.0).abs() < 1e-9, "got {}", stamp.fault_time);
+            }
+            other => panic!("expected abandonment, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn partition_retry_waits_the_stall_out() {
+        let policy = FaultPolicyCfg::default();
+        let r =
+            resolve_fault(event(FaultClass::Partition, 1), &policy, 0, 0, 100.0, false).unwrap();
+        assert_eq!(
+            r,
+            FaultResolution::Recovered {
+                stamp: FaultStamp {
+                    event: event(FaultClass::Partition, 1),
+                    action: FaultAction::Retry,
+                    retries: 0,
+                    recovered: true,
+                    fault_time: 0.0,
+                },
+                new_completion: 110.0,
+            }
+        );
+    }
+
+    #[test]
+    fn replan_abandons_at_the_manifest_instant() {
+        let policy = FaultPolicyCfg::parse("replan").unwrap();
+        let r = resolve_fault(event(FaultClass::Exec, 4), &policy, 0, 0, 100.0, false).unwrap();
+        match r {
+            FaultResolution::Abandoned { stamp } => {
+                assert_eq!(stamp.retries, 0);
+                assert!((stamp.fault_time - 50.0).abs() < 1e-12);
+            }
+            other => panic!("expected abandonment, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fail_surfaces_a_typed_abort_and_dropouts_mask_faults() {
+        let policy = FaultPolicyCfg::parse("fail").unwrap();
+        let err =
+            resolve_fault(event(FaultClass::Exec, 1), &policy, 4, 9, 100.0, false).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ResilienceError>(),
+            Some(&ResilienceError::FaultAbort { round: 4, client: 9, class: FaultClass::Exec })
+        );
+        // a dropout-stamped task masks its fault — even under `fail`
+        let r = resolve_fault(event(FaultClass::Exec, 1), &policy, 4, 9, 100.0, true).unwrap();
+        assert_eq!(r, FaultResolution::Masked);
+    }
+
+    #[test]
+    fn ledger_books_stamp_decisions_order_independently() {
+        let cfg = FaultsCfg::parse("exec=0.4,corrupt=0.3,partition=0.4").unwrap();
+        let run = |order: &[usize]| {
+            let mut ctl = FaultsCtl::new(cfg, FaultPolicyCfg::default(), 11);
+            ctl.note_dispatched(order.len());
+            for &client in order {
+                ctl.stamp_one(0, client, 50.0 + client as f64, false).unwrap();
+            }
+            *ctl.ledger()
+        };
+        let fwd: Vec<usize> = (0..64).collect();
+        let rev: Vec<usize> = (0..64).rev().collect();
+        let a = run(&fwd);
+        assert_eq!(a, run(&rev), "ledger must be evaluation-order independent");
+        assert!(a.dispatched == 64 && !a.is_empty());
+        for class in FAULT_CLASSES {
+            let c = a.counts(class);
+            assert_eq!(c.observed, c.recovered + c.abandoned, "{class:?}: {c:?}");
+            assert!(c.observed <= c.injected);
+        }
+        assert!(a.observed_rate() > 0.0 && a.observed_rate() <= 1.0);
+        // off-ledger: stays default-empty and free of RNG draws
+        let mut off = FaultsCtl::new(FaultsCfg::default(), FaultPolicyCfg::default(), 11);
+        off.note_dispatched(64);
+        for client in 0..64 {
+            assert!(off.stamp_one(0, client, 50.0, false).unwrap().is_none());
+        }
+        assert!(off.ledger().is_empty(), "off must book nothing");
+    }
+
+    #[test]
+    fn ledger_json_carries_every_counter() {
+        let mut ctl = FaultsCtl::new(
+            FaultsCfg::parse("exec=1").unwrap(),
+            FaultPolicyCfg::default(),
+            3,
+        );
+        ctl.note_dispatched(4);
+        for client in 0..4 {
+            ctl.stamp_one(0, client, 10.0, client == 0).unwrap();
+        }
+        let j = ctl.ledger().to_json();
+        let exec = j.get("exec").unwrap();
+        assert_eq!(exec.get("injected").unwrap().as_u64(), Some(4));
+        assert_eq!(exec.get("observed").unwrap().as_u64(), Some(3), "client 0 is masked");
+        assert_eq!(j.get("dispatched").unwrap().as_u64(), Some(4));
+        assert!(j.get("observed_fault_rate").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -176,6 +176,51 @@
 //! [`ScenarioError::MidRoundDropout`]: crate::simulation::ScenarioError
 //! [`FlEnv::stamp_dropouts`]: crate::coordinator::env::FlEnv::stamp_dropouts
 //!
+//! # Engine-level fault injection
+//!
+//! On top of scheduled churn, `--faults` injects **engine-level**
+//! failures (`simulation::faults`: `exec` execute errors, `corrupt`
+//! bit-flipped upload frames, `partition` delivery stalls) and
+//! `--fault-policy` (`coordinator::resilience`) decides per class
+//! whether the run retries, re-plans or fails. Like dropouts, **faults
+//! are seeded schedule facts**: [`FlEnv::stamp_faults`] draws and
+//! *resolves* each fault at dispatch — retry delays and backoffs land
+//! on the task's virtual completion, abandoned tasks carry an
+//! unrecovered [`FaultStamp`] and travel the channel as
+//! [`TaskFate::Faulted`] (PJRT work skipped, like a dropout), and the
+//! `fail` action aborts at the stamp with a typed
+//! [`ResilienceError::FaultAbort`] — so no worker timing ever enters a
+//! fault decision and faulted runs stay byte-identical across
+//! `--workers`/`--pool`/`--overlap`.
+//!
+//! * **Quorum path** — an unrecovered fault marks its task in
+//!   [`RoundMeta`] exactly like a dropout: excluded from membership,
+//!   never merged, retired via [`QuorumBatch::dropped`]; its fate is a
+//!   scheduled fact the drain ignores. The observed fault rate feeds
+//!   the adaptive controller as [`QuorumSignals::fault_rate`], growing
+//!   K under fault pressure the same way churn does.
+//! * **Full-barrier paths** — [`finish_dispatched_round`] re-plans
+//!   phase C over the survivor set: faulted tasks always take the
+//!   survivors route (their policy already spoke at stamp time;
+//!   `--dropout-policy error` governs scenario dropouts only).
+//! * **Recovered faults** complete as plain [`TaskFate::Done`] — their
+//!   cost is the stamped completion delay. A recovered `corrupt` fault
+//!   in a wire mode additionally flips the drawn bit in the encoded
+//!   `HWU1` frame ([`crate::codec::corrupt_frame`]), *verifies* the
+//!   decode surfaces a typed `CodecError`, and recovers by decoding the
+//!   clean frame (the retransmission the retry paid for).
+//!
+//! The per-class injected/observed/retried/recovered/abandoned counts
+//! fold into the env's [`ResilienceLedger`], which the runner attaches
+//! to the recorder output. `--faults off` (the default) stamps nothing,
+//! consumes no RNG and leaves every path byte-identical.
+//!
+//! [`QuorumSignals::fault_rate`]: crate::coordinator::quorum_ctl::QuorumSignals
+//! [`FaultStamp`]: crate::coordinator::resilience::FaultStamp
+//! [`ResilienceError::FaultAbort`]: crate::coordinator::resilience::ResilienceError
+//! [`ResilienceLedger`]: crate::coordinator::resilience::ResilienceLedger
+//! [`FlEnv::stamp_faults`]: crate::coordinator::env::FlEnv::stamp_faults
+//!
 //! # Hierarchical aggregation
 //!
 //! With `--hierarchy E` (≥ 2; quorum mode only) the quorum decision runs
@@ -229,9 +274,10 @@ use crate::coordinator::client::{run_local, LocalResult};
 use crate::coordinator::env::{BatchStream, FlEnv};
 use crate::coordinator::hierarchy::{plan_hierarchy, HierarchyCfg};
 use crate::coordinator::quorum_ctl::QuorumPolicy;
+use crate::coordinator::resilience::FaultStamp;
 use crate::coordinator::RoundReport;
-use crate::runtime::{Engine, EnginePool};
-use crate::simulation::ScenarioError;
+use crate::runtime::{Engine, EnginePanic, EnginePool};
+use crate::simulation::{FaultClass, ScenarioError};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
@@ -284,6 +330,15 @@ pub struct LocalTask {
     ///
     /// [`FlEnv::stamp_dropouts`]: crate::coordinator::env::FlEnv::stamp_dropouts
     pub drop_at: Option<f64>,
+    /// injected engine-level fault, resolved under the fault policy at
+    /// dispatch (module docs, "Engine-level fault injection"). Stamped
+    /// by [`FlEnv::stamp_faults`] — schemes always construct tasks with
+    /// `None`. A recovered stamp already adjusted `completion`; an
+    /// unrecovered one makes the task complete as [`TaskFate::Faulted`]
+    /// with its PJRT work skipped.
+    ///
+    /// [`FlEnv::stamp_faults`]: crate::coordinator::env::FlEnv::stamp_faults
+    pub fault: Option<FaultStamp>,
 }
 
 /// Wire-mode metadata a task carries to its encode point: the frame
@@ -323,23 +378,55 @@ pub struct DroppedTask {
     pub drop_time: f64,
 }
 
+/// A dispatched client lost to an unrecovered engine-level fault
+/// (module docs, "Engine-level fault injection"): broadcast billed,
+/// PJRT work skipped, upload never arrives — the fault analogue of
+/// [`DroppedTask`], with the class/retry provenance attached.
+pub struct FaultedTask {
+    pub client: usize,
+    /// broadcast bytes (billed down at aggregation, never up)
+    pub bytes: usize,
+    pub class: FaultClass,
+    /// retry attempts paid before the coordinator gave up
+    pub retries: u32,
+    /// virtual instant the task was declared lost, relative to the
+    /// round start
+    pub fault_time: f64,
+}
+
 /// What became of a dispatched task — the completion channel's payload.
 pub enum TaskFate {
     /// the client trained and (virtually) uploaded
     Done(TaskOutcome),
     /// the client vanished mid-round; its update never merges
     Dropped(DroppedTask),
+    /// an unrecovered engine-level fault; its update never merges
+    Faulted(FaultedTask),
 }
 
 fn exec_task(engine: &Engine, task: LocalTask) -> Result<TaskFate> {
     let LocalTask {
         client, p, tau, lr, train_exec, probe_exec, payload, mut stream, bytes, up_bytes, wire,
-        completion, drop_at,
+        completion, drop_at, fault,
     } = task;
     if let Some(drop_time) = drop_at {
         // the client vanished: its broadcast is already out, its result
         // could never be uploaded — skip the PJRT work entirely
         return Ok(TaskFate::Dropped(DroppedTask { client, bytes, drop_time }));
+    }
+    if let Some(stamp) = fault {
+        if !stamp.recovered {
+            // the fault policy gave this task up at stamp time (retry
+            // budget exhausted, or `replan`): like a dropout, nobody
+            // can receive the result — skip the PJRT work
+            return Ok(TaskFate::Faulted(FaultedTask {
+                client,
+                bytes,
+                class: stamp.event.class,
+                retries: stamp.retries,
+                fault_time: stamp.fault_time,
+            }));
+        }
     }
     let mut result = run_local(
         engine,
@@ -361,23 +448,42 @@ fn exec_task(engine: &Engine, task: LocalTask) -> Result<TaskFate> {
         if n != up_bytes {
             return Err(CodecError::PlannedSizeDrift { planned: up_bytes, actual: n }.into());
         }
+        if let Some(stamp) = fault {
+            if stamp.recovered && stamp.event.class == FaultClass::Corrupt {
+                // the recovered corrupt fault's first transmission: flip
+                // the drawn bit and verify the reader rejects the frame
+                // with a typed CodecError — then recover by decoding the
+                // clean frame (the retransmission the retry paid for)
+                let mut poisoned = buf.clone();
+                codec::corrupt_frame(&mut poisoned, stamp.event.bit);
+                if codec::decode_update(&poisoned).is_ok() {
+                    return Err(anyhow!(
+                        "client {client}: corrupted frame (bit {}) decoded cleanly — \
+                         the corrupt-fault injection must surface a typed CodecError",
+                        stamp.event.bit
+                    ));
+                }
+            }
+        }
         result.params = codec::decode_update(&buf)?.tensors;
     }
     Ok(TaskFate::Done(TaskOutcome { client, p, tau, bytes, up_bytes, completion, result }))
 }
 
-/// Partition ordered fates into (survivors, dropped), both in assignment
-/// order.
-pub fn split_fates(fates: Vec<TaskFate>) -> (Vec<TaskOutcome>, Vec<DroppedTask>) {
+/// Partition ordered fates into (survivors, dropped, faulted), each in
+/// assignment order.
+pub fn split_fates(fates: Vec<TaskFate>) -> (Vec<TaskOutcome>, Vec<DroppedTask>, Vec<FaultedTask>) {
     let mut done = Vec::with_capacity(fates.len());
     let mut dropped = Vec::new();
+    let mut faulted = Vec::new();
     for fate in fates {
         match fate {
             TaskFate::Done(o) => done.push(o),
             TaskFate::Dropped(d) => dropped.push(d),
+            TaskFate::Faulted(f) => faulted.push(f),
         }
     }
-    (done, dropped)
+    (done, dropped, faulted)
 }
 
 /// A task tagged with its round sequence number and assignment index.
@@ -454,20 +560,14 @@ impl TaskQueue {
 /// blocks on exactly one completion per dispatched task, and sibling
 /// workers keep their channel ends alive while parked in `pop()`, so an
 /// unwound worker would deadlock the whole scope (the overlapped queue
-/// stays open between rounds). The panic is converted into the task's
-/// error and surfaced through the ordinary earliest-failed-task path.
-fn worker_loop(engine: &Engine, queue: &TaskQueue, tx: Sender<Completion>) {
+/// stays open between rounds). The panic is converted into a typed
+/// [`EnginePanic`] carrying the worker's pool index and surfaced through
+/// the ordinary earliest-failed-task path.
+fn worker_loop(worker: usize, engine: &Engine, queue: &TaskQueue, tx: Sender<Completion>) {
     while let Some(Dispatch { seq, index, task }) = queue.pop() {
         let outcome =
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exec_task(engine, task)))
-                .unwrap_or_else(|payload| {
-                    let msg = payload
-                        .downcast_ref::<&str>()
-                        .map(|s| s.to_string())
-                        .or_else(|| payload.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "non-string panic payload".into());
-                    Err(anyhow!("worker task panicked: {msg}"))
-                });
+                .unwrap_or_else(|payload| Err(EnginePanic::from_payload(worker, payload).into()));
         if tx.send(Completion { seq, index, outcome }).is_err() {
             break;
         }
@@ -538,24 +638,31 @@ fn collect_completions(
     into_ordered(slots)
 }
 
-/// Shared full-barrier phase C under scenario churn (module docs,
-/// "Scenario churn"): no dropouts take the plain synchronous hook
-/// (byte-identical to the pre-scenario path); with dropouts, the
-/// configured `--dropout-policy` either fails the run with a typed error
-/// or re-plans the aggregation over the survivors through the quorum
-/// phase-C hook (which already handles cohort subsets), billing the
-/// dropped clients' broadcasts and handing their ids to the scheme for
-/// plan retirement. Generic over `?Sized` so both `Strategy::run_round`
-/// (on `Self`) and the overlapped coordinator (on `dyn Strategy`) share
-/// one definition.
+/// Shared full-barrier phase C under scenario churn and fault injection
+/// (module docs, "Scenario churn" / "Engine-level fault injection"): no
+/// losses take the plain synchronous hook (byte-identical to the
+/// pre-scenario path); with losses, the aggregation re-plans over the
+/// survivors through the quorum phase-C hook (which already handles
+/// cohort subsets), billing the lost clients' broadcasts and handing
+/// their ids to the scheme for plan retirement.
+///
+/// `--dropout-policy error` governs **scenario dropouts only**: it fails
+/// the run with a typed [`ScenarioError::MidRoundDropout`] carrying the
+/// full dropped-client list. Faulted tasks always take the survivors
+/// route — their per-class policy already spoke at stamp time (a `fail`
+/// action aborted there; an unrecovered retry/re-plan is a planned
+/// loss). Generic over `?Sized` so both `Strategy::run_round` (on
+/// `Self`) and the overlapped coordinator (on `dyn Strategy`) share one
+/// definition.
 pub fn finish_dispatched_round<S: Strategy + ?Sized>(
     env: &mut FlEnv,
     strategy: &mut S,
     round: usize,
     survivors: Vec<TaskOutcome>,
     dropped: Vec<DroppedTask>,
+    faulted: Vec<FaultedTask>,
 ) -> Result<RoundReport> {
-    if dropped.is_empty() {
+    if dropped.is_empty() && faulted.is_empty() {
         return strategy.finish_round(env, survivors);
     }
     for d in &dropped {
@@ -565,29 +672,42 @@ pub fn finish_dispatched_round<S: Strategy + ?Sized>(
             d.drop_time
         );
     }
-    match env.cfg.dropout_policy {
-        DropoutPolicy::Error => {
-            Err(ScenarioError::MidRoundDropout { round, client: dropped[0].client }.into())
-        }
-        DropoutPolicy::Survivors => {
-            if survivors.is_empty() {
-                return Err(ScenarioError::EmptySurvivors { round }.into());
-            }
-            let straggler_down_bytes = dropped.iter().map(|d| d.bytes).sum();
-            strategy.finish_round_quorum(
-                env,
-                QuorumBatch {
-                    round,
-                    quorum: survivors,
-                    late: Vec::new(),
-                    straggler_down_bytes,
-                    dropped: dropped.iter().map(|d| d.client).collect(),
-                    wan_up_bytes: None,
-                    round_time: None,
-                },
-            )
-        }
+    for f in &faulted {
+        log::debug!(
+            "round {round}: client {} lost to an unrecovered {} fault {:.1}s into the \
+             round (virtual, {} retries)",
+            f.client,
+            f.class.name(),
+            f.fault_time,
+            f.retries
+        );
     }
+    if !dropped.is_empty() && env.cfg.dropout_policy == DropoutPolicy::Error {
+        return Err(ScenarioError::MidRoundDropout {
+            round,
+            dropped: dropped.iter().map(|d| d.client).collect(),
+        }
+        .into());
+    }
+    if survivors.is_empty() {
+        return Err(ScenarioError::EmptySurvivors { round }.into());
+    }
+    let straggler_down_bytes =
+        dropped.iter().map(|d| d.bytes).sum::<usize>() + faulted.iter().map(|f| f.bytes).sum::<usize>();
+    let mut lost: Vec<usize> = dropped.iter().map(|d| d.client).collect();
+    lost.extend(faulted.iter().map(|f| f.client));
+    strategy.finish_round_quorum(
+        env,
+        QuorumBatch {
+            round,
+            quorum: survivors,
+            late: Vec::new(),
+            straggler_down_bytes,
+            dropped: lost,
+            wan_up_bytes: None,
+            round_time: None,
+        },
+    )
 }
 
 /// Coordinator body of [`RoundDriver::run_overlapped`]: plan, dispatch
@@ -610,6 +730,7 @@ fn drive_rounds(
     // the dispatch-round id (scenario cursor) the dropout policy reports;
     // distinct from the chunk-local sequence number `h`
     let mut round_id = env.stamp_dropouts(&mut tasks);
+    env.stamp_faults(&mut tasks, round_id)?;
     validate_completions(&tasks)?;
     queue.push_round(0, tasks);
 
@@ -620,8 +741,10 @@ fn drive_rounds(
             strategy.plan_ahead(env)?;
         }
         let fates = collect_completions(rx, expected, h)?;
-        let (survivors, dropped) = split_fates(fates);
-        reports.push(finish_dispatched_round(env, strategy, round_id, survivors, dropped)?);
+        let (survivors, dropped, faulted) = split_fates(fates);
+        reports.push(finish_dispatched_round(
+            env, strategy, round_id, survivors, dropped, faulted,
+        )?);
         if h + 1 < rounds {
             // phase B for h+1 (payloads need the freshly aggregated
             // global); workers pick tasks up as they free — no join
@@ -632,6 +755,7 @@ fn drive_rounds(
                 return Err(anyhow!("cannot dispatch an empty cohort"));
             }
             round_id = env.stamp_dropouts(&mut tasks);
+            env.stamp_faults(&mut tasks, round_id)?;
             validate_completions(&tasks)?;
             queue.push_round(h + 1, tasks);
         }
@@ -735,8 +859,9 @@ struct RoundMeta {
     up_bytes: Vec<usize>,
     /// per assignment index: the simulated client
     clients: Vec<usize>,
-    /// per assignment index: stamped as a scenario mid-round dropout
-    /// (never a quorum member, never a pending straggler)
+    /// per assignment index: stamped as a scenario mid-round dropout OR
+    /// an unrecovered engine-level fault — either way the upload never
+    /// arrives (never a quorum member, never a pending straggler)
     dropped: Vec<bool>,
 }
 
@@ -748,7 +873,10 @@ impl RoundMeta {
             bytes: tasks.iter().map(|t| t.bytes).collect(),
             up_bytes: tasks.iter().map(|t| t.up_bytes).collect(),
             clients: tasks.iter().map(|t| t.client).collect(),
-            dropped: tasks.iter().map(|t| t.drop_at.is_some()).collect(),
+            dropped: tasks
+                .iter()
+                .map(|t| t.drop_at.is_some() || t.fault.map_or(false, |s| !s.recovered))
+                .collect(),
         }
     }
 }
@@ -878,10 +1006,10 @@ impl QuorumState {
     /// surface the earliest-(round, index) failure among the updates that
     /// will never merge. Their *results* are discarded by design, but a
     /// panic or engine error in a straggler is a real fault and must fail
-    /// the run exactly as it would on the synchronous paths. Dropped
-    /// fates drain silently — a scenario dropout is scheduled churn, not
-    /// a fault. Costs no extra wall-clock: the worker scope joins on
-    /// these tasks anyway.
+    /// the run exactly as it would on the synchronous paths. Dropped and
+    /// Faulted fates drain silently — scheduled churn and policy-resolved
+    /// fault losses are facts of the plan, not failures. Costs no extra
+    /// wall-clock: the worker scope joins on these tasks anyway.
     fn drain(&mut self, rx: &Receiver<Completion>) -> Result<()> {
         while self.outstanding > 0 {
             let c = rx.recv().map_err(|_| anyhow!("worker pool died during drain"))?;
@@ -912,8 +1040,10 @@ impl QuorumState {
     }
 
     /// [`QuorumState::demand`] for a merge input — quorum members and
-    /// due late arrivals are chosen among survivors, so a `Dropped` fate
-    /// here means the scheduler violated its own churn invariant.
+    /// due late arrivals are chosen among survivors, so a `Dropped` or
+    /// `Faulted` fate here means the scheduler violated its own churn
+    /// invariant: a typed [`ScenarioError::PhantomMerge`], matching the
+    /// rest of the dropout machinery.
     fn demand_done(
         &mut self,
         rx: &Receiver<Completion>,
@@ -922,11 +1052,20 @@ impl QuorumState {
     ) -> Result<TaskOutcome> {
         match self.demand(rx, seq, index)? {
             TaskFate::Done(o) => Ok(o),
-            TaskFate::Dropped(d) => Err(anyhow!(
-                "round {seq} task {index} (client {}) was consumed as a merge input but \
-                 dropped mid-round — scheduler bug",
-                d.client
-            )),
+            TaskFate::Dropped(d) => Err(ScenarioError::PhantomMerge {
+                round: seq,
+                index,
+                client: d.client,
+                fate: "dropped mid-round",
+            }
+            .into()),
+            TaskFate::Faulted(f) => Err(ScenarioError::PhantomMerge {
+                round: seq,
+                index,
+                client: f.client,
+                fate: "lost to an unrecovered fault",
+            }
+            .into()),
         }
     }
 }
@@ -954,7 +1093,8 @@ fn drive_quorum(
     if tasks.is_empty() {
         return Err(anyhow!("cannot dispatch an empty cohort"));
     }
-    env.stamp_dropouts(&mut tasks);
+    let round_id = env.stamp_dropouts(&mut tasks);
+    env.stamp_faults(&mut tasks, round_id)?;
     validate_completions(&tasks)?;
     let mut meta = RoundMeta::capture(&tasks, env.clock.now());
     state.register_round(tasks.len());
@@ -1009,9 +1149,11 @@ fn drive_quorum(
         // instants (whole late edges and individually-forwarded edge
         // stragglers) instead of their raw completions.
         let churn = env.observed_dropout_rate();
+        let faults = env.observed_fault_rate();
         let signals = || {
             let mut sig = strategy.quorum_signals();
             sig.dropout_rate = churn;
+            sig.fault_rate = faults;
             sig
         };
         let (members, t_q, wan_up_bytes, alpha, deferred): (
@@ -1086,7 +1228,8 @@ fn drive_quorum(
                     straggler_down += meta.bytes[i];
                     dropped_clients.push(meta.clients[i]);
                     log::debug!(
-                        "round {h}: client {} dropped mid-round — released, never merged",
+                        "round {h}: client {} lost mid-round (dropout or unrecovered \
+                         fault) — released, never merged",
                         meta.clients[i]
                     );
                 } else {
@@ -1140,7 +1283,8 @@ fn drive_quorum(
             }
             let t_start = env.clock.now();
             delay_busy_clients(&mut tasks, &pending, t_start);
-            env.stamp_dropouts(&mut tasks);
+            let round_id = env.stamp_dropouts(&mut tasks);
+            env.stamp_faults(&mut tasks, round_id)?;
             validate_completions(&tasks)?;
             meta = RoundMeta::capture(&tasks, t_start);
             state.register_round(tasks.len());
@@ -1213,7 +1357,7 @@ impl RoundDriver {
                 let tx = tx.clone();
                 let queue = &queue;
                 let engine = pool.engine(w);
-                s.spawn(move || worker_loop(engine, queue, tx));
+                s.spawn(move || worker_loop(w, engine, queue, tx));
             }
             drop(tx);
             let _close = CloseOnDrop(&queue);
@@ -1256,7 +1400,7 @@ impl RoundDriver {
                 let tx = tx.clone();
                 let queue = &queue;
                 let engine = pool.engine(w);
-                s.spawn(move || worker_loop(engine, queue, tx));
+                s.spawn(move || worker_loop(w, engine, queue, tx));
             }
             drop(tx);
 
@@ -1310,7 +1454,7 @@ impl RoundDriver {
                 let tx = tx.clone();
                 let queue = &queue;
                 let engine = pool.engine(w);
-                s.spawn(move || worker_loop(engine, queue, tx));
+                s.spawn(move || worker_loop(w, engine, queue, tx));
             }
             drop(tx);
 
@@ -1440,6 +1584,7 @@ mod tests {
         assert_send::<TaskOutcome>();
         assert_send::<TaskFate>();
         assert_send::<DroppedTask>();
+        assert_send::<FaultedTask>();
         assert_send::<Dispatch>();
         assert_send::<Completion>();
     }
@@ -1467,6 +1612,7 @@ mod tests {
             wire: None,
             completion: 0.0,
             drop_at: None,
+            fault: None,
         };
         let queue = TaskQueue::new();
         queue.push_round(7, vec![mk(10), mk(11), mk(12)]);
@@ -1518,12 +1664,22 @@ mod tests {
             TaskFate::Done(dummy_outcome(10)),
             TaskFate::Dropped(DroppedTask { client: 11, bytes: 7, drop_time: 0.5 }),
             TaskFate::Done(dummy_outcome(12)),
+            TaskFate::Faulted(FaultedTask {
+                client: 14,
+                bytes: 3,
+                class: FaultClass::Exec,
+                retries: 2,
+                fault_time: 2.0,
+            }),
             TaskFate::Dropped(DroppedTask { client: 13, bytes: 9, drop_time: 1.5 }),
         ];
-        let (survivors, dropped) = split_fates(fates);
+        let (survivors, dropped, faulted) = split_fates(fates);
         assert_eq!(survivors.iter().map(|o| o.client).collect::<Vec<_>>(), vec![10, 12]);
         assert_eq!(dropped.iter().map(|d| d.client).collect::<Vec<_>>(), vec![11, 13]);
         assert_eq!(dropped.iter().map(|d| d.bytes).sum::<usize>(), 16);
+        assert_eq!(faulted.iter().map(|f| f.client).collect::<Vec<_>>(), vec![14]);
+        assert_eq!(faulted[0].class, FaultClass::Exec);
+        assert_eq!(faulted[0].retries, 2);
     }
 
     #[test]
@@ -1593,6 +1749,7 @@ mod tests {
             wire: None,
             completion,
             drop_at: None,
+            fault: None,
         };
         // round starts at t=10; client 3 is still busy until t=25 with a
         // round-0 straggler, client 4 is idle
@@ -1643,6 +1800,7 @@ mod tests {
             wire: None,
             completion,
             drop_at: None,
+            fault: None,
         };
         let mut rng = Rng::new(17);
         for case in 0..50 {
@@ -1704,6 +1862,7 @@ mod tests {
             wire: None,
             completion,
             drop_at: None,
+            fault: None,
         };
         validate_completions(&[mk(1.0), mk(0.0)]).unwrap();
         for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
@@ -1766,11 +1925,32 @@ mod tests {
     fn demanding_a_dropped_fate_as_merge_input_is_a_scheduler_bug() {
         let (tx, rx) = channel::<Completion>();
         let mut state = QuorumState::default();
-        state.register_round(1);
+        state.register_round(2);
         let fate = TaskFate::Dropped(DroppedTask { client: 4, bytes: 0, drop_time: 1.0 });
         tx.send(Completion { seq: 0, index: 0, outcome: Ok(fate) }).unwrap();
         let err = state.demand_done(&rx, 0, 0).unwrap_err();
+        match err.downcast_ref::<ScenarioError>() {
+            Some(&ScenarioError::PhantomMerge { round: 0, index: 0, client: 4, .. }) => {}
+            other => panic!("expected a typed PhantomMerge, got {other:?} ({err})"),
+        }
         assert!(err.to_string().contains("scheduler bug"), "unexpected error: {err}");
+
+        // an unrecovered fault demanded for merge is the same class of bug
+        let fate = TaskFate::Faulted(FaultedTask {
+            client: 7,
+            bytes: 0,
+            class: FaultClass::Partition,
+            retries: 1,
+            fault_time: 3.0,
+        });
+        tx.send(Completion { seq: 0, index: 1, outcome: Ok(fate) }).unwrap();
+        let err = state.demand_done(&rx, 0, 1).unwrap_err();
+        match err.downcast_ref::<ScenarioError>() {
+            Some(&ScenarioError::PhantomMerge { round: 0, index: 1, client: 7, fate }) => {
+                assert!(fate.contains("fault"), "fate string should name the fault: {fate}");
+            }
+            other => panic!("expected a typed PhantomMerge, got {other:?} ({err})"),
+        }
     }
 
     #[test]

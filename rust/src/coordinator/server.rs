@@ -203,6 +203,7 @@ impl HeroesServer {
                 }),
                 completion: a.projected_t,
                 drop_at: None,
+                fault: None,
             });
         }
         let remaining = plan.assignments.len();

@@ -102,6 +102,9 @@ pub fn run_scheme(
             cfg.dropout_policy
         );
     }
+    if !cfg.faults.is_off() {
+        log::info!("[{scheme}] fault injection {} (policy {:?})", cfg.faults.name(), cfg.fault_policy);
+    }
 
     let (loss0, acc0) = strategy.evaluate(&env)?;
     rec.push_eval(0, 0.0, &env.traffic, loss0, acc0, loss0, strategy.block_variance());
@@ -140,6 +143,9 @@ pub fn run_scheme(
             &mut policy,
             Some(&mut observer),
         )?;
+        if !cfg.faults.is_off() {
+            rec.set_resilience(*env.resilience());
+        }
         return Ok(rec);
     }
 
@@ -169,6 +175,11 @@ pub fn run_scheme(
                 break;
             }
         }
+    }
+    if !cfg.faults.is_off() {
+        // attach the run's fault accounting; fault-free runs keep the
+        // pre-fault output schema byte for byte
+        rec.set_resilience(*env.resilience());
     }
     Ok(rec)
 }

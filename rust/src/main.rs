@@ -60,6 +60,23 @@
 //! what aggregates, so compression error honestly reaches the global
 //! model. Encoded bytes are a pure function of (plan, update, cfg):
 //! wire runs stay seed-deterministic for any --workers/--pool).
+//! --faults off|exec=R,corrupt=R,partition=R (seeded engine-level
+//! fault injection, `simulation::faults`: per-(round, client) draws of
+//! typed faults — `exec` engine/worker failures, `corrupt` HWU1 frame
+//! corruption caught as typed codec errors, `partition` transient
+//! network loss. Faults are schedule facts, pure in
+//! `(seed, round, client)`: a faulted run is bit-identical for any
+//! --workers/--pool/--overlap, and `off` — the default — is
+//! byte-identical to every prior release)
+//! --fault-policy retry|replan|fail or per-class
+//! exec=A,corrupt=A,partition=A[,budget=N][,backoff=S] (how the
+//! coordinator answers each injected fault: `retry` re-runs the task
+//! up to `budget` times at `backoff` simulated seconds per attempt —
+//! the default, budget 2, backoff 5 — `replan` abandons the client
+//! for the round and lets phase C re-plan over the survivors, `fail`
+//! aborts the run with a typed error; per-run accounting lands in the
+//! recorder output as the `resilience` ledger, and the adaptive
+//! quorum controller reads the observed fault rate as churn)
 
 use anyhow::{anyhow, Result};
 use heroes::baselines::ALL_SCHEMES;

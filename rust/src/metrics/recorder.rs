@@ -9,6 +9,7 @@
 //! `results/`.
 
 use crate::codec::json::Json;
+use crate::coordinator::resilience::ResilienceLedger;
 use crate::coordinator::RoundReport;
 use crate::simulation::TrafficMeter;
 use anyhow::{Context, Result};
@@ -40,6 +41,11 @@ pub struct Sample {
 pub struct Recorder {
     pub scheme: String,
     pub samples: Vec<Sample>,
+    /// fault-injection ledger (`--faults`): per-class
+    /// injected/observed/retried/recovered/abandoned counts attached by
+    /// the runner at the end of a faulted run. `None` (fault-free runs)
+    /// leaves the JSON output byte-identical to the pre-fault schema.
+    resilience: Option<ResilienceLedger>,
     // accumulators between eval points
     waits: Vec<f64>,
     reports: usize,
@@ -47,7 +53,19 @@ pub struct Recorder {
 
 impl Recorder {
     pub fn new(scheme: &str) -> Recorder {
-        Recorder { scheme: scheme.to_string(), samples: Vec::new(), waits: Vec::new(), reports: 0 }
+        Recorder {
+            scheme: scheme.to_string(),
+            samples: Vec::new(),
+            resilience: None,
+            waits: Vec::new(),
+            reports: 0,
+        }
+    }
+
+    /// Attach the run's resilience ledger (fault-injection runs only —
+    /// see the field docs).
+    pub fn set_resilience(&mut self, ledger: ResilienceLedger) {
+        self.resilience = Some(ledger);
     }
 
     /// Fold in a round report (between evaluation points).
@@ -149,10 +167,17 @@ impl Recorder {
                 ]))
             })
             .collect();
-        Json::obj(vec![
+        let mut fields = vec![
             ("scheme", Json::from(self.scheme.clone())),
             ("samples", Json::Arr(rows)),
-        ])
+        ];
+        if let Some(ledger) = &self.resilience {
+            // run-level key, not a per-sample column: the ledger is a
+            // whole-run sum, and the CSV/JSON sample schemas stay in
+            // agreement (the schema test inspects sample rows only)
+            fields.push(("resilience", ledger.to_json()));
+        }
+        Json::obj(fields)
     }
 
     /// CSV columns; one name per [`Sample`] field, same set the JSON
@@ -294,6 +319,32 @@ mod tests {
         let row2: Vec<&str> = csv.lines().nth(2).unwrap().split(',').collect();
         assert_eq!(row2[di].parse::<u64>().unwrap(), 300_000_000);
         assert_eq!(row2[ui].parse::<u64>().unwrap(), 200_000_000);
+    }
+
+    #[test]
+    fn resilience_ledger_is_a_run_level_json_key() {
+        // fault-free runs keep the pre-fault schema byte for byte;
+        // faulted runs gain one run-level key (never a sample column, so
+        // the CSV/JSON schema-agreement test is untouched)
+        let mut r = rec();
+        assert!(r.to_json().get("resilience").is_none());
+
+        let mut ledger = ResilienceLedger::default();
+        ledger.dispatched = 10;
+        ledger.exec.injected = 3;
+        ledger.exec.observed = 2;
+        ledger.exec.retried = 4;
+        ledger.exec.recovered = 1;
+        ledger.exec.abandoned = 1;
+        r.set_resilience(ledger);
+        let parsed = crate::codec::json::parse(&r.to_json().to_string_pretty()).unwrap();
+        let res = parsed.get("resilience").expect("faulted runs carry the ledger");
+        assert_eq!(res.get("dispatched").unwrap().as_u64(), Some(10));
+        let exec = res.get("exec").unwrap();
+        assert_eq!(exec.get("injected").unwrap().as_u64(), Some(3));
+        assert_eq!(exec.get("observed").unwrap().as_u64(), Some(2));
+        assert_eq!(exec.get("retried").unwrap().as_u64(), Some(4));
+        assert!((res.get("observed_fault_rate").unwrap().as_f64().unwrap() - 0.2).abs() < 1e-12);
     }
 
     #[test]

@@ -8,4 +8,4 @@ pub mod pool;
 
 pub use engine::{Engine, EngineStats, Value};
 pub use manifest::{DType, ExecKind, ExecSpec, InputInfo, LayerInfo, Manifest, ModelInfo, ParamSpec, TensorSpec};
-pub use pool::EnginePool;
+pub use pool::{EnginePanic, EnginePool};

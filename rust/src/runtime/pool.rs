@@ -29,6 +29,33 @@ use super::manifest::Manifest;
 use anyhow::Result;
 use std::sync::Arc;
 
+/// A worker thread's panic converted into a typed error. The round
+/// driver catches unwinds (a panicking task must still produce a
+/// completion — see `coordinator::round::worker_loop`) and
+/// [`EnginePool::prepare_all`] joins its per-engine compile threads;
+/// both paths surface this instead of a stringly error or a process
+/// abort, so callers can downcast and tests can pin the contract.
+#[derive(Debug, thiserror::Error)]
+#[error("engine {engine}: worker panicked: {msg}")]
+pub struct EnginePanic {
+    /// pool index of the engine the panicking thread was pinned to
+    pub engine: usize,
+    /// the panic payload, stringified when possible
+    pub msg: String,
+}
+
+impl EnginePanic {
+    /// Convert a `catch_unwind`/`join` payload into the typed error.
+    pub fn from_payload(engine: usize, payload: Box<dyn std::any::Any + Send>) -> EnginePanic {
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".into());
+        EnginePanic { engine, msg }
+    }
+}
+
 /// N PJRT CPU clients over one shared manifest (see module docs).
 pub struct EnginePool {
     engines: Vec<Engine>,
@@ -97,8 +124,8 @@ impl EnginePool {
                     })
                 })
                 .collect();
-            for h in handles {
-                h.join().expect("prepare worker panicked")?;
+            for (engine, h) in handles.into_iter().enumerate() {
+                h.join().map_err(|p| EnginePanic::from_payload(engine, p))??;
             }
             Ok(())
         })
@@ -112,6 +139,17 @@ mod tests {
     // across pool sizes) live in rust/tests/integration_parallel.rs and
     // skip without artifacts. The pure pieces are pinned here.
     use super::*;
+
+    #[test]
+    fn panic_payloads_stringify() {
+        let e = EnginePanic::from_payload(2, Box::new("boom"));
+        assert_eq!((e.engine, e.msg.as_str()), (2, "boom"));
+        assert!(e.to_string().contains("engine 2"));
+        let e = EnginePanic::from_payload(0, Box::new(String::from("heap boom")));
+        assert_eq!(e.msg, "heap boom");
+        let e = EnginePanic::from_payload(1, Box::new(42u32));
+        assert_eq!(e.msg, "non-string panic payload");
+    }
 
     #[test]
     fn pool_is_send_and_sync() {

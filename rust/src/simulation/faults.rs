@@ -1,0 +1,327 @@
+//! Seeded engine-level fault schedules (`--faults`).
+//!
+//! Scenario dropouts ([`scenario`](super::scenario)) model *scheduled*
+//! churn: a client cleanly vanishes on the virtual clock. Real edge
+//! fleets fail in more ways — an execute errors mid-round, a payload
+//! arrives corrupted, a link stalls without dying. This module draws
+//! those **engine-level faults as seeded schedule facts**: every fault
+//! is a pure function of `(faults cfg, seed, round, client)` through a
+//! per-event keyed RNG (the `stamp_dropouts` discipline — one fresh RNG
+//! per `(class, round, client)` event, no shared cursor), so fault runs
+//! are byte-identical for any `--workers`/`--pool`/`--overlap` count and
+//! `--faults off` draws nothing at all: it never even constructs an RNG.
+//!
+//! # Fault classes
+//!
+//! * [`FaultClass::Exec`] — the client's PJRT execute errors on round h.
+//!   `severity` consecutive attempts fail before one would succeed; the
+//!   retry policy decides whether the coordinator pays for them.
+//! * [`FaultClass::Corrupt`] — the client's encoded `HWU1` upload frame
+//!   arrives bit-flipped. In wire mode the round driver actually flips
+//!   the drawn bit ([`crate::codec::corrupt_frame`]) and observes the
+//!   codec's typed `CodecError` before recovering; in analytic mode
+//!   (nothing is serialized) only the retry time cost applies.
+//! * [`FaultClass::Partition`] — a transient network partition: the
+//!   link *delays* delivery by a drawn `stall` rather than dropping.
+//!
+//! At most one fault is drawn per `(round, client)` task, with the fixed
+//! precedence exec > corrupt > partition (each class still burns only
+//! its own keyed RNG, so schedules stay pure under any evaluation
+//! order). What happens to a drawn fault — retry with virtual-clock
+//! backoff, re-plan the survivor set, or fail the run typed — is the
+//! `--fault-policy` layer's job (`coordinator::resilience`).
+
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+// Per-class schedule salts, continuing the scenario engine's family
+// (`TRACE`/`AVAIL`/`DROP` = …0001/…0002/…0003).
+const EXEC_SALT: u64 = 0x9E6B_5533_D00D_0004;
+const CORRUPT_SALT: u64 = 0x9E6B_5533_D00D_0005;
+const PARTITION_SALT: u64 = 0x9E6B_5533_D00D_0006;
+
+/// Retry attempts a drawn exec/corrupt fault can burn at most — the
+/// geometric severity draw is capped here so `severity` stays small and
+/// enumerable in tests.
+pub const MAX_SEVERITY: u32 = 4;
+
+/// One fresh RNG per schedule event, keyed on `(seed, salt, round,
+/// client)` — the same mixing discipline as the scenario engine, so no
+/// schedule quantity shares a cursor with any other.
+fn event_rng(seed: u64, salt: u64, round: usize, client: usize) -> Rng {
+    let mix = salt
+        .wrapping_add((round as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add((client as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03));
+    Rng::new(seed ^ mix)
+}
+
+/// Typed fault classes (see the module docs for semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    /// PJRT execute error on round h
+    Exec,
+    /// bit-flipped `HWU1` upload frame (typed `CodecError` on decode)
+    Corrupt,
+    /// transient partition: delivery delayed by a stall, not dropped
+    Partition,
+}
+
+/// Every class, in schedule-precedence order.
+pub const FAULT_CLASSES: [FaultClass; 3] =
+    [FaultClass::Exec, FaultClass::Corrupt, FaultClass::Partition];
+
+impl FaultClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultClass::Exec => "exec",
+            FaultClass::Corrupt => "corrupt",
+            FaultClass::Partition => "partition",
+        }
+    }
+
+    fn salt(self) -> u64 {
+        match self {
+            FaultClass::Exec => EXEC_SALT,
+            FaultClass::Corrupt => CORRUPT_SALT,
+            FaultClass::Partition => PARTITION_SALT,
+        }
+    }
+}
+
+/// One drawn fault event — a schedule fact, not an outcome. The policy
+/// layer (`coordinator::resilience`) turns it into a retry delay, a
+/// lost task or a typed abort.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub class: FaultClass,
+    /// consecutive failing attempts before one would succeed
+    /// (exec/corrupt; always 1 for partition), in `1..=MAX_SEVERITY`
+    pub severity: u32,
+    /// fraction of the task's unfaulted completion spent before the
+    /// fault manifests, in `[0.05, 0.95)`
+    pub frac: f64,
+    /// partition stall (virtual seconds; 0 for other classes)
+    pub stall: f64,
+    /// corrupt-payload bit draw — the injection site flips bit
+    /// `bit % 40` of the frame (the magic+version prefix, so decode
+    /// always surfaces a typed error); 0 for other classes
+    pub bit: u64,
+}
+
+/// The `--faults` knob: per-class injection rates. All-zero (the
+/// parse of `off`, and the default) schedules nothing and consumes no
+/// RNG — byte-identical to the pre-fault repo.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultsCfg {
+    pub exec: f64,
+    pub corrupt: f64,
+    pub partition: f64,
+}
+
+impl FaultsCfg {
+    /// Parse `off` | comma-separated `<class>=<rate>` items, e.g.
+    /// `exec=0.1,corrupt=0.05,partition=0.2` (order-free, each class at
+    /// most once, rates in (0, 1]). Unknown classes, bad rates and
+    /// repeats are typed errors, never a silent fall-back.
+    pub fn parse(s: &str) -> Result<FaultsCfg> {
+        if s == "off" {
+            return Ok(FaultsCfg::default());
+        }
+        let mut cfg = FaultsCfg::default();
+        if s.is_empty() {
+            return Err(anyhow!("empty --faults (expect off | exec=R,corrupt=R,partition=R)"));
+        }
+        for item in s.split(',') {
+            let Some((class, rate)) = item.split_once('=') else {
+                return Err(anyhow!(
+                    "bad --faults item `{item}` in `{s}` (expect <class>=<rate>)"
+                ));
+            };
+            let rate: f64 = rate
+                .parse()
+                .map_err(|_| anyhow!("bad fault rate `{rate}` in `{s}`"))?;
+            if !(rate > 0.0 && rate <= 1.0) {
+                return Err(anyhow!("fault rate must be in (0, 1], got {rate} in `{s}`"));
+            }
+            let slot = match class {
+                "exec" => &mut cfg.exec,
+                "corrupt" => &mut cfg.corrupt,
+                "partition" => &mut cfg.partition,
+                other => {
+                    return Err(anyhow!(
+                        "unknown fault class `{other}` in `{s}` (exec|corrupt|partition)"
+                    ))
+                }
+            };
+            if *slot != 0.0 {
+                return Err(anyhow!("fault class `{class}` repeated in `{s}`"));
+            }
+            *slot = rate;
+        }
+        Ok(cfg)
+    }
+
+    /// Canonical knob string (inverse of [`FaultsCfg::parse`]).
+    pub fn name(&self) -> String {
+        if self.is_off() {
+            return "off".into();
+        }
+        FAULT_CLASSES
+            .iter()
+            .filter(|c| self.rate(**c) > 0.0)
+            .map(|c| format!("{}={}", c.name(), self.rate(*c)))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// True when no class can fire — the byte-identical default.
+    pub fn is_off(&self) -> bool {
+        self.exec == 0.0 && self.corrupt == 0.0 && self.partition == 0.0
+    }
+
+    pub fn rate(&self, class: FaultClass) -> f64 {
+        match class {
+            FaultClass::Exec => self.exec,
+            FaultClass::Corrupt => self.corrupt,
+            FaultClass::Partition => self.partition,
+        }
+    }
+
+    /// Draw the fault (if any) for one `(round, client)` task — a pure,
+    /// stateless function of `(self, seed, round, client)`. Classes roll
+    /// independently on their own keyed RNGs and the first firing class
+    /// in precedence order wins, so at most one fault rides a task and
+    /// shuffled evaluation can never change a draw. When `self.is_off()`
+    /// no RNG is ever constructed.
+    pub fn draw(&self, seed: u64, round: usize, client: usize) -> Option<FaultEvent> {
+        for class in FAULT_CLASSES {
+            let rate = self.rate(class);
+            if rate <= 0.0 {
+                continue;
+            }
+            let mut rng = event_rng(seed, class.salt(), round, client);
+            if rng.uniform() >= rate {
+                continue;
+            }
+            let frac = rng.uniform_in(0.05, 0.95);
+            let mut ev = FaultEvent { class, severity: 1, frac, stall: 0.0, bit: 0 };
+            match class {
+                FaultClass::Exec | FaultClass::Corrupt => {
+                    // geometric severity, capped: most faults clear on
+                    // the first retry, a tail needs several
+                    while ev.severity < MAX_SEVERITY && rng.uniform() < 0.4 {
+                        ev.severity += 1;
+                    }
+                    if class == FaultClass::Corrupt {
+                        ev.bit = rng.next_u64();
+                    }
+                }
+                FaultClass::Partition => ev.stall = rng.uniform_in(2.0, 30.0),
+            }
+            return Some(ev);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knob_parses_the_documented_grammar() {
+        assert_eq!(FaultsCfg::parse("off").unwrap(), FaultsCfg::default());
+        let c = FaultsCfg::parse("exec=0.1,corrupt=0.05,partition=0.2").unwrap();
+        assert_eq!(c, FaultsCfg { exec: 0.1, corrupt: 0.05, partition: 0.2 });
+        let c = FaultsCfg::parse("partition=1").unwrap();
+        assert_eq!(c, FaultsCfg { exec: 0.0, corrupt: 0.0, partition: 1.0 });
+        for bad in [
+            "",
+            "on",
+            "exec",
+            "exec=",
+            "exec=0",
+            "exec=1.5",
+            "exec=x",
+            "flake=0.1",
+            "exec=0.1,exec=0.2",
+        ] {
+            assert!(FaultsCfg::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn knob_name_is_parse_inverse() {
+        for s in ["off", "exec=0.1", "corrupt=0.05", "exec=0.1,partition=0.2"] {
+            let c = FaultsCfg::parse(s).unwrap();
+            assert_eq!(c.name(), s);
+            assert_eq!(FaultsCfg::parse(&c.name()).unwrap(), c, "{s}");
+        }
+    }
+
+    #[test]
+    fn off_draws_nothing() {
+        let off = FaultsCfg::default();
+        assert!(off.is_off());
+        for round in 0..20 {
+            for client in 0..20 {
+                assert_eq!(off.draw(42, round, client), None);
+            }
+        }
+    }
+
+    #[test]
+    fn schedules_are_pure_and_order_independent() {
+        // the determinism contract: a draw depends only on
+        // (cfg, seed, round, client) — re-evaluating the grid in any
+        // order reproduces it exactly
+        let cfg = FaultsCfg::parse("exec=0.3,corrupt=0.25,partition=0.3").unwrap();
+        let grid: Vec<((usize, usize), Option<FaultEvent>)> = (0..12)
+            .flat_map(|r| (0..12).map(move |c| ((r, c), cfg.draw(7, r, c))))
+            .collect();
+        let mut shuffled: Vec<(usize, usize)> = grid.iter().map(|(k, _)| *k).collect();
+        Rng::new(99).shuffle(&mut shuffled);
+        for (r, c) in shuffled {
+            let want = grid.iter().find(|(k, _)| *k == (r, c)).unwrap().1;
+            assert_eq!(cfg.draw(7, r, c), want, "draw ({r}, {c}) not pure");
+        }
+    }
+
+    #[test]
+    fn draws_hit_their_class_rates_and_bounds() {
+        let cfg = FaultsCfg::parse("exec=0.15,corrupt=0.1,partition=0.2").unwrap();
+        let (mut n, mut fired) = (0usize, [0usize; 3]);
+        for round in 0..60 {
+            for client in 0..60 {
+                n += 1;
+                let Some(ev) = cfg.draw(1234, round, client) else { continue };
+                fired[FAULT_CLASSES.iter().position(|c| *c == ev.class).unwrap()] += 1;
+                assert!((1..=MAX_SEVERITY).contains(&ev.severity), "severity {}", ev.severity);
+                assert!((0.05..0.95).contains(&ev.frac), "frac {}", ev.frac);
+                match ev.class {
+                    FaultClass::Partition => {
+                        assert!((2.0..30.0).contains(&ev.stall), "stall {}", ev.stall);
+                        assert_eq!(ev.severity, 1);
+                    }
+                    FaultClass::Exec => assert_eq!((ev.stall, ev.bit), (0.0, 0)),
+                    FaultClass::Corrupt => assert_eq!(ev.stall, 0.0),
+                }
+            }
+        }
+        // exec rolls first so its observed rate is its nominal rate;
+        // later classes are shadowed by precedence, so only a loose
+        // lower bound applies
+        let exec_rate = fired[0] as f64 / n as f64;
+        assert!((exec_rate - 0.15).abs() < 0.03, "exec rate {exec_rate}");
+        assert!(fired[1] > 0 && fired[2] > 0, "shadowed classes must still fire: {fired:?}");
+    }
+
+    #[test]
+    fn precedence_allows_at_most_one_fault_per_task() {
+        // rate-1 classes: exec always wins the precedence order
+        let cfg = FaultsCfg::parse("exec=1,corrupt=1,partition=1").unwrap();
+        for client in 0..20 {
+            assert_eq!(cfg.draw(5, 0, client).unwrap().class, FaultClass::Exec);
+        }
+    }
+}

@@ -37,6 +37,23 @@
 //! byte (both pinned in `tests/integration_parallel.rs`; the schedule
 //! purity itself in `tests/prop_coordinator.rs`).
 //!
+//! # Fault injection (`--faults`)
+//!
+//! The [`faults`] module layers *engine-level* failures on top of the
+//! scenario engine's scheduled churn: typed fault classes — `exec`
+//! (PJRT execute errors), `corrupt` (bit-flipped `HWU1` upload frames
+//! surfacing as typed `CodecError`s) and `partition` (links that delay
+//! delivery by a drawn stall rather than dropping) — drawn per
+//! `(round, client)` behind per-class rates (`--faults
+//! exec=R,corrupt=R,partition=R`; `off` is the default). **Faults are
+//! seeded schedule facts**: every draw is a pure function of
+//! `(cfg, seed, round, client)` through a per-event keyed RNG — never a
+//! wall-clock race — so faulted runs are byte-identical for any
+//! `--workers`/`--pool`/`--overlap` and `--faults off` consumes no RNG
+//! at all (byte-identical to the pre-fault repo). What the coordinator
+//! does about a drawn fault — retry, re-plan, or fail typed — is the
+//! `--fault-policy` layer (`coordinator::resilience`).
+//!
 //! # Population model (`--population lazy`)
 //!
 //! The [`population`] module scales the same world to millions of
@@ -57,12 +74,14 @@
 
 pub mod clock;
 pub mod device;
+pub mod faults;
 pub mod network;
 pub mod population;
 pub mod scenario;
 
 pub use clock::{TrafficMeter, VirtualClock};
 pub use device::{ClientDevice, DeviceClass, DeviceFleet};
+pub use faults::{FaultClass, FaultEvent, FaultsCfg, FAULT_CLASSES, MAX_SEVERITY};
 pub use network::{LinkSample, NetworkModel, NetworkTrace};
 pub use population::{CacheStats, LazyCache, Population, PopulationSpec, ShardSpec};
 pub use scenario::{Scenario, ScenarioCtl, ScenarioError, SCENARIO_CATALOG};

@@ -69,12 +69,18 @@ fn event_rng(seed: u64, salt: u64, round: usize, client: usize) -> Rng {
 
 /// Typed churn faults surfaced by the round pipeline. `anyhow`-wrapped at
 /// the driver boundary; downcast with `err.downcast_ref::<ScenarioError>()`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+/// (Not `Copy`: `MidRoundDropout` carries the full dropped-client list.)
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
 pub enum ScenarioError {
-    /// a participant vanished mid-round and the config said that is fatal
-    /// (`--dropout-policy error`)
-    #[error("round {round}: client {client} dropped mid-round (dropout policy: error)")]
-    MidRoundDropout { round: usize, client: usize },
+    /// one or more participants vanished mid-round and the config said
+    /// that is fatal (`--dropout-policy error`). Carries *every* dropped
+    /// client of the round (assignment order), not just the first — an
+    /// operator diagnosing a correlated burst needs the whole set.
+    #[error(
+        "round {round}: {} client(s) dropped mid-round (dropout policy: error): {dropped:?}",
+        .dropped.len()
+    )]
+    MidRoundDropout { round: usize, dropped: Vec<usize> },
     /// every participant of the round dropped — no survivors to aggregate
     #[error("round {round}: every participant dropped mid-round — no survivors to aggregate")]
     EmptySurvivors { round: usize },
@@ -84,6 +90,14 @@ pub enum ScenarioError {
          survived the churn"
     )]
     QuorumInfeasible { round: usize, required: usize, survivors: usize },
+    /// a task whose fate was `Dropped`/`Faulted` was consumed as a merge
+    /// input — quorum members and due late arrivals are chosen among
+    /// survivors, so this is a scheduler bug, never a user error
+    #[error(
+        "round {round} task {index} (client {client}) was consumed as a merge input but \
+         was {fate} — scheduler bug"
+    )]
+    PhantomMerge { round: usize, index: usize, client: usize, fate: &'static str },
 }
 
 /// A named churn schedule (module docs). Variants carry their canonical

@@ -217,6 +217,72 @@ fn wire_q8_golden_trace_pins_the_codec_path() {
     );
 }
 
+/// `run_fingerprint` with a fault schedule riding the run: the pinned
+/// retry policy keeps its budget at the severity cap so every
+/// retry-class fault recovers (the golden exercises recovery delays,
+/// not cohort loss), and `workers` is explicit so the golden can assert
+/// its own worker-count invariance before pinning bytes.
+fn run_faulted_fingerprint(pool: &EnginePool, workers: usize) -> Json {
+    use heroes::coordinator::resilience::FaultPolicyCfg;
+    use heroes::simulation::{FaultsCfg, MAX_SEVERITY};
+    let mut cfg = tiny_cfg();
+    cfg.workers = workers;
+    cfg.faults = FaultsCfg::parse("exec=0.4,corrupt=0.3,partition=0.4").unwrap();
+    cfg.fault_policy = FaultPolicyCfg { budget: MAX_SEVERITY, ..FaultPolicyCfg::default() };
+    let mut env = FlEnv::build(pool, cfg.clone()).unwrap();
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut strategy = make_strategy("heroes", &env.info, &cfg, &mut rng).unwrap();
+    let driver = RoundDriver::new(cfg.workers);
+    let reports: Vec<RoundReport> =
+        (0..cfg.rounds).map(|_| strategy.run_round(&mut env).unwrap()).collect();
+    let mut doc = fingerprint(&reports);
+    // the resilience ledger is part of the pinned surface: counter
+    // drift (a fault drawn or resolved differently) fails the diff
+    if let Json::Arr(rows) = &mut doc {
+        rows.push(Json::obj(vec![("resilience", env.resilience().to_json())]));
+    }
+    doc
+}
+
+#[test]
+fn faulted_golden_trace_pins_the_resilience_path() {
+    // the fault-injection pipeline gets its own golden: the pinned
+    // fingerprint plus the run's resilience ledger. Bootstraps per file
+    // (same discipline as the wire:q8 golden — introduced after the
+    // original set), and asserts worker-count invariance *before*
+    // pinning, so the golden can never freeze a racy byte.
+    let Some(pool) = pool_or_skip() else { return };
+    let regen = std::env::var("HEROES_REGEN_GOLDEN").ok().as_deref() == Some("1");
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let w1 = run_faulted_fingerprint(&pool, 1);
+    let w2 = run_faulted_fingerprint(&pool, 2);
+    assert_eq!(w1, w2, "a faulted run's fingerprint must not depend on the worker count");
+    let doc = Json::obj(vec![
+        ("scheme", Json::from("heroes")),
+        ("faults", Json::from("exec=0.4,corrupt=0.3,partition=0.4")),
+        ("fault_policy", Json::from("retry, budget=MAX_SEVERITY")),
+        ("stable", w1),
+    ]);
+    let path = dir.join("heroes_faulted.json");
+    if regen || !path.exists() {
+        std::fs::write(&path, doc.to_string_pretty()).unwrap();
+        eprintln!(
+            "{} golden trace {}",
+            if regen { "regenerated" } else { "pinned new" },
+            path.display()
+        );
+        return;
+    }
+    let want = heroes::codec::json::parse_file(&path).unwrap();
+    assert_eq!(
+        doc, want,
+        "faulted golden trace drifted from {} — if the change is intentional, \
+         regenerate with HEROES_REGEN_GOLDEN=1 and review the diff",
+        path.display()
+    );
+}
+
 /// Cumulative traffic (GB) at the last fingerprinted eval point.
 fn final_traffic_gb(fp: &Json) -> f64 {
     fp.as_arr()

@@ -440,6 +440,7 @@ fn prop_adaptive_k_stays_in_range() {
                 l: knobs[4],
                 spread_index: knobs[5],
                 dropout_rate: knobs[6],
+                fault_rate: 0.0,
             };
             let lo = (*k_min).clamp(1, n);
             for _ in 0..5 {

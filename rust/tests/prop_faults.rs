@@ -1,0 +1,501 @@
+//! The fault-injection subsystem's contracts (`simulation::faults`,
+//! `coordinator::resilience` — see both module docs):
+//!
+//! 1. **Schedule purity** — a fault draw is a pure function of
+//!    `(cfg, seed, round, client)`: re-evaluating the grid in any
+//!    shuffled order reproduces every draw bit for bit, and `--faults
+//!    off` never constructs an RNG, draws nothing, stamps nothing.
+//! 2. **Retry budget** — no resolution ever pays more retries than the
+//!    policy budget; recovered tasks only ever get *later* completions;
+//!    abandoned tasks are lost at a positive fault instant.
+//! 3. **Ledger** — the resilience ledger is an order-independent fold
+//!    of per-task stamp decisions, with per-class conservation
+//!    (observed = recovered + abandoned ≤ injected).
+//! 4. **Policy paths** — every fault class demonstrably exercises its
+//!    retry / replan / fail path with the matching ledger counts, using
+//!    rate-1 schedules so nothing is left to sampling luck.
+//! 5. **Quorum coupling** — the adaptive controller's chosen K is
+//!    monotone non-decreasing in the observed fault rate.
+//! 6. **Pipeline determinism** (artifacts-gated) — a faulted run's
+//!    report series is bit-identical across `--workers`/`--pool`/
+//!    `--overlap`, faults genuinely perturb the off-run bytes, and the
+//!    `fail` policy aborts a real run with the typed error.
+//!
+//! PJRT-dependent tests require `make artifacts` and skip gracefully
+//! otherwise (the same discipline as `tests/integration_parallel.rs`).
+
+use heroes::baselines::make_strategy;
+use heroes::config::{ExperimentConfig, Scale};
+use heroes::coordinator::env::FlEnv;
+use heroes::coordinator::quorum_ctl::{QuorumController, QuorumCtlCfg, QuorumPolicy, QuorumSignals};
+use heroes::coordinator::resilience::{
+    resolve_fault, FaultAction, FaultPolicyCfg, FaultResolution, FaultsCtl, ResilienceError,
+};
+use heroes::coordinator::round::RoundDriver;
+use heroes::coordinator::RoundReport;
+use heroes::runtime::{EnginePool, Manifest};
+use heroes::simulation::{FaultClass, FaultEvent, FaultsCfg, FAULT_CLASSES, MAX_SEVERITY};
+use heroes::util::prop::check;
+use heroes::util::rng::Rng;
+
+// ---------------------------------------------------------------- purity
+
+#[test]
+fn prop_fault_schedules_are_pure_under_shuffled_evaluation() {
+    // The determinism contract: the full (round, client) draw grid is
+    // reproduced exactly when re-evaluated in a shuffled order — no
+    // draw can depend on a shared cursor or evaluation history.
+    check(
+        71,
+        40,
+        |rng| {
+            let rates: Vec<f64> = (0..3).map(|_| rng.uniform_in(0.05, 0.9)).collect();
+            let seed = rng.next_u64();
+            (rates, seed)
+        },
+        |(rates, seed)| {
+            if rates.len() < 3 {
+                return Ok(()); // shrinking artifact; generator emits 3
+            }
+            let cfg = FaultsCfg { exec: rates[0], corrupt: rates[1], partition: rates[2] };
+            let grid: Vec<((usize, usize), Option<FaultEvent>)> = (0..10)
+                .flat_map(|r| (0..10).map(move |c| ((r, c), cfg.draw(*seed, r, c))))
+                .collect();
+            let mut order: Vec<usize> = (0..grid.len()).collect();
+            Rng::new(seed ^ 0xF00D).shuffle(&mut order);
+            for i in order {
+                let ((r, c), want) = grid[i];
+                if cfg.draw(*seed, r, c) != want {
+                    return Err(format!("draw ({r}, {c}) changed under re-evaluation"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn off_stamps_nothing_and_books_nothing() {
+    // `--faults off` (the default) is inert at the stamp layer: no
+    // draw, no stamp, no completion change, an empty ledger — the
+    // byte-identity half of the acceptance gate that needs no PJRT.
+    let mut ctl = FaultsCtl::new(FaultsCfg::default(), FaultPolicyCfg::default(), 9);
+    ctl.note_dispatched(100);
+    for round in 0..10 {
+        for client in 0..10 {
+            let r = ctl.stamp_one(round, client, 42.0, false).unwrap();
+            assert_eq!(r, None, "off stamped ({round}, {client})");
+        }
+    }
+    assert!(ctl.ledger().is_empty(), "off must keep the default ledger");
+    assert_eq!(ctl.observed_fault_rate(), 0.0);
+}
+
+// ------------------------------------------------------------ resolution
+
+#[test]
+fn prop_retry_budget_is_never_exceeded() {
+    // Over random events, budgets and backoffs: retries ≤ budget,
+    // recovery only delays completions, abandonment happens at a
+    // positive instant, and a dropout always masks the event.
+    check(
+        73,
+        300,
+        |rng| {
+            let class = FAULT_CLASSES[rng.below(3)];
+            let ev = FaultEvent {
+                class,
+                severity: 1 + rng.below(MAX_SEVERITY as usize) as u32,
+                frac: rng.uniform_in(0.05, 0.95),
+                stall: if class == FaultClass::Partition { rng.uniform_in(2.0, 30.0) } else { 0.0 },
+                bit: rng.next_u64(),
+            };
+            let knobs = vec![
+                rng.below(6) as f64,          // budget
+                rng.uniform_in(0.0, 10.0),    // backoff
+                rng.uniform_in(1.0, 500.0),   // completion
+                rng.below(2) as f64,          // dropped?
+            ];
+            (vec![ev.severity as f64, ev.frac, ev.stall, ev.bit as f64], knobs, class_idx(class))
+        },
+        |(ev_raw, knobs, class_i)| {
+            if ev_raw.len() < 4 || knobs.len() < 4 || *class_i >= FAULT_CLASSES.len() {
+                return Ok(()); // shrinking artifact; generator emits full tuples
+            }
+            let class = FAULT_CLASSES[*class_i];
+            let event = FaultEvent {
+                class,
+                severity: ev_raw[0] as u32,
+                frac: ev_raw[1],
+                stall: ev_raw[2],
+                bit: ev_raw[3] as u64,
+            };
+            if event.severity == 0 || event.frac <= 0.0 || knobs[2] <= 0.0 {
+                return Ok(()); // shrinking artifacts; the generator's
+                               // ranges keep all three positive
+            }
+            let policy = FaultPolicyCfg {
+                budget: knobs[0] as u32,
+                backoff: knobs[1],
+                ..FaultPolicyCfg::default()
+            };
+            let completion = knobs[2];
+            let dropped = knobs[3] != 0.0;
+            let r = resolve_fault(event, &policy, 3, 5, completion, dropped)
+                .map_err(|e| e.to_string())?;
+            match r {
+                FaultResolution::Masked => {
+                    if !dropped {
+                        return Err("masked without a dropout".into());
+                    }
+                }
+                FaultResolution::Recovered { stamp, new_completion } => {
+                    if stamp.retries > policy.budget {
+                        return Err(format!(
+                            "retries {} exceed budget {}",
+                            stamp.retries, policy.budget
+                        ));
+                    }
+                    if !stamp.recovered || new_completion < completion {
+                        return Err(format!(
+                            "recovery must only delay: {completion} -> {new_completion}"
+                        ));
+                    }
+                }
+                FaultResolution::Abandoned { stamp } => {
+                    if stamp.retries > policy.budget {
+                        return Err(format!(
+                            "retries {} exceed budget {}",
+                            stamp.retries, policy.budget
+                        ));
+                    }
+                    if stamp.recovered || stamp.fault_time <= 0.0 {
+                        return Err(format!("bad abandonment stamp: {stamp:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn class_idx(class: FaultClass) -> usize {
+    FAULT_CLASSES.iter().position(|c| *c == class).unwrap()
+}
+
+// ---------------------------------------------------------------- ledger
+
+#[test]
+fn prop_ledger_is_an_order_independent_fold() {
+    // Stamping the same task set in any permutation books the same
+    // ledger, and per class observed = recovered + abandoned ≤ injected.
+    check(
+        79,
+        40,
+        |rng| {
+            let n = 8 + rng.below(40);
+            let seed = rng.next_u64();
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            (order, seed)
+        },
+        |(order, seed)| {
+            let cfg = FaultsCfg { exec: 0.35, corrupt: 0.3, partition: 0.35 };
+            let run = |clients: &[usize]| {
+                let mut ctl = FaultsCtl::new(cfg, FaultPolicyCfg::default(), *seed);
+                ctl.note_dispatched(clients.len());
+                for &client in clients {
+                    ctl.stamp_one(1, client, 30.0 + client as f64, client % 7 == 0).unwrap();
+                }
+                *ctl.ledger()
+            };
+            let sorted: Vec<usize> = {
+                let mut v = order.clone();
+                v.sort_unstable();
+                v
+            };
+            let a = run(order);
+            let b = run(&sorted);
+            if a != b {
+                return Err(format!("ledger depends on stamp order: {a:?} vs {b:?}"));
+            }
+            for class in FAULT_CLASSES {
+                let c = a.counts(class);
+                if c.observed != c.recovered + c.abandoned || c.observed > c.injected {
+                    return Err(format!("{class:?} counts violate conservation: {c:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------- policy paths
+
+#[test]
+fn every_class_exercises_its_policy_path_with_ledger_counts() {
+    // Rate-1 single-class schedules leave nothing to sampling luck:
+    // each class × action pair lands in exactly the ledger bucket its
+    // policy promises.
+    let one = |class: &str| FaultsCfg::parse(&format!("{class}=1")).unwrap();
+
+    // exec + retry with the budget at the severity cap: every fault
+    // recovers, every retry is booked
+    let mut ctl = FaultsCtl::new(
+        one("exec"),
+        FaultPolicyCfg { budget: MAX_SEVERITY, ..FaultPolicyCfg::default() },
+        21,
+    );
+    ctl.note_dispatched(16);
+    for client in 0..16 {
+        let (stamp, new_completion) = ctl.stamp_one(0, client, 50.0, false).unwrap().unwrap();
+        assert!(stamp.recovered, "budget ≥ MAX_SEVERITY must always recover");
+        assert!(new_completion > 50.0, "recovery must pay the retry delay");
+        assert_eq!(stamp.event.class, FaultClass::Exec);
+    }
+    let l = ctl.ledger();
+    assert_eq!((l.exec.injected, l.exec.observed, l.exec.recovered), (16, 16, 16));
+    assert_eq!(l.exec.abandoned, 0);
+    assert!(l.exec.retried >= 16, "each fault pays ≥ 1 retry, got {}", l.exec.retried);
+    assert_eq!(ctl.observed_fault_rate(), 1.0);
+
+    // exec + retry with budget 0: severity ≥ 1 always exhausts it —
+    // every fault abandons, after exactly 0 paid retries
+    let mut ctl = FaultsCtl::new(
+        one("exec"),
+        FaultPolicyCfg { budget: 0, ..FaultPolicyCfg::default() },
+        21,
+    );
+    ctl.note_dispatched(16);
+    for client in 0..16 {
+        let (stamp, _) = ctl.stamp_one(0, client, 50.0, false).unwrap().unwrap();
+        assert!(!stamp.recovered && stamp.fault_time > 0.0);
+    }
+    let l = ctl.ledger();
+    assert_eq!((l.exec.abandoned, l.exec.recovered, l.exec.retried), (16, 0, 0));
+
+    // corrupt + replan: abandoned at the manifest instant, no retries
+    let mut ctl = FaultsCtl::new(
+        one("corrupt"),
+        FaultPolicyCfg::parse("corrupt=replan").unwrap(),
+        22,
+    );
+    ctl.note_dispatched(8);
+    for client in 0..8 {
+        let (stamp, _) = ctl.stamp_one(0, client, 50.0, false).unwrap().unwrap();
+        assert_eq!(stamp.action, FaultAction::Replan);
+        assert!(!stamp.recovered && stamp.retries == 0);
+    }
+    assert_eq!(ctl.ledger().corrupt.abandoned, 8);
+
+    // partition + retry: always recovered by waiting the stall out
+    let mut ctl = FaultsCtl::new(one("partition"), FaultPolicyCfg::default(), 23);
+    ctl.note_dispatched(8);
+    for client in 0..8 {
+        let (stamp, new_completion) = ctl.stamp_one(0, client, 50.0, false).unwrap().unwrap();
+        assert!(stamp.recovered);
+        assert!((new_completion - 50.0 - stamp.event.stall).abs() < 1e-12);
+    }
+    assert_eq!(ctl.ledger().partition.recovered, 8);
+
+    // any class + fail: the first stamp aborts typed
+    let mut ctl = FaultsCtl::new(one("exec"), FaultPolicyCfg::parse("fail").unwrap(), 24);
+    ctl.note_dispatched(1);
+    let err = ctl.stamp_one(4, 9, 50.0, false).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<ResilienceError>(),
+        Some(&ResilienceError::FaultAbort { round: 4, client: 9, class: FaultClass::Exec })
+    );
+
+    // a scenario dropout masks even a rate-1 fault (injected, never
+    // observed)
+    let mut ctl = FaultsCtl::new(one("exec"), FaultPolicyCfg::parse("fail").unwrap(), 24);
+    ctl.note_dispatched(1);
+    assert_eq!(ctl.stamp_one(4, 9, 50.0, true).unwrap(), None);
+    let l = ctl.ledger();
+    assert_eq!((l.exec.injected, l.exec.observed), (1, 0));
+}
+
+// --------------------------------------------------------- quorum signal
+
+#[test]
+fn prop_adaptive_k_is_monotone_in_the_fault_rate() {
+    // Observed faults are churn: at fixed α, a rising fault rate can
+    // only grow the chosen K, never shrink it.
+    check(
+        83,
+        120,
+        |rng| {
+            let n = 2 + rng.below(18);
+            let completions: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.1, 30.0)).collect();
+            (completions, rng.uniform_in(0.0, 2.0))
+        },
+        |(completions, alpha)| {
+            if completions.is_empty() {
+                return Ok(()); // shrinking artifact; rejected upstream
+            }
+            let mut cfg = QuorumCtlCfg::new(0.8, 1, 0.5, *alpha);
+            cfg.alpha_gain = 0.0; // isolate the K rule
+            let mut prev = 0usize;
+            for step in 0..=10 {
+                let sig = QuorumSignals {
+                    fault_rate: step as f64 * 0.05,
+                    ..QuorumSignals::default()
+                };
+                let mut ctl = QuorumController::new(cfg);
+                let d = ctl.decide(completions, &sig);
+                if d.k < prev {
+                    return Err(format!(
+                        "K shrank from {prev} to {} as the fault rate rose to {}",
+                        d.k,
+                        step as f64 * 0.05
+                    ));
+                }
+                prev = d.k;
+            }
+            Ok(())
+        },
+    );
+}
+
+// --------------------------------------------- pipeline (artifacts-gated)
+
+fn pool_or_skip(engines: usize) -> Option<EnginePool> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(EnginePool::new(Manifest::load(&dir).unwrap(), engines).unwrap())
+}
+
+fn faulted_cfg(workers: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("cnn", Scale::Smoke);
+    cfg.n_clients = 8;
+    cfg.k_per_round = 4;
+    cfg.samples_per_client = 32;
+    cfg.test_samples = 128;
+    cfg.tau_default = 3;
+    cfg.tau_max = 12;
+    cfg.workers = workers;
+    cfg.faults = FaultsCfg::parse("exec=0.5,corrupt=0.4,partition=0.5").unwrap();
+    // the budget at the severity cap: every retry-class fault recovers,
+    // so no round can lose its whole cohort to abandonment
+    cfg.fault_policy =
+        FaultPolicyCfg { budget: MAX_SEVERITY, ..FaultPolicyCfg::default() };
+    cfg
+}
+
+/// Per-round (full-barrier) reports plus the run's resilience ledger.
+fn run_faulted(
+    pool: &EnginePool,
+    cfg: &ExperimentConfig,
+    rounds: usize,
+) -> (Vec<RoundReport>, heroes::coordinator::resilience::ResilienceLedger, (f64, f64)) {
+    let mut env = FlEnv::build(pool, cfg.clone()).unwrap();
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut s = make_strategy("heroes", &env.info, cfg, &mut rng).unwrap();
+    let reports = (0..rounds).map(|_| s.run_round(&mut env).unwrap()).collect();
+    let eval = s.evaluate(&env).unwrap();
+    (reports, *env.resilience(), eval)
+}
+
+fn run_faulted_overlapped(
+    pool: &EnginePool,
+    cfg: &ExperimentConfig,
+    rounds: usize,
+) -> (Vec<RoundReport>, heroes::coordinator::resilience::ResilienceLedger, (f64, f64)) {
+    let mut env = FlEnv::build(pool, cfg.clone()).unwrap();
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut s = make_strategy("heroes", &env.info, cfg, &mut rng).unwrap();
+    let driver = RoundDriver::new(cfg.workers);
+    let reports = driver.run_overlapped(pool, &mut env, s.as_mut(), rounds).unwrap();
+    let eval = s.evaluate(&env).unwrap();
+    (reports, *env.resilience(), eval)
+}
+
+#[test]
+fn faulted_runs_are_identical_across_workers_pool_and_overlap() {
+    // The acceptance pin: retry outcomes are plan facts, so a faulted
+    // run's report series, ledger and final model are bit-identical for
+    // workers=1, workers=4 (shared engine and per-worker pool) and
+    // overlapped dispatch.
+    let Some(shared) = pool_or_skip(1) else { return };
+    let Some(pooled) = pool_or_skip(4) else { return };
+    let rounds = 3;
+    let (serial, ledger1, eval1) = run_faulted(&shared, &faulted_cfg(1), rounds);
+    let (threads, ledger4, eval4) = run_faulted(&shared, &faulted_cfg(4), rounds);
+    let (pool4, ledger4p, eval4p) = run_faulted(&pooled, &faulted_cfg(4), rounds);
+    let (overlap, ledger_o, eval_o) = run_faulted_overlapped(&pooled, &faulted_cfg(4), rounds);
+    assert_eq!(serial, threads, "workers must not change faulted rounds");
+    assert_eq!(serial, pool4, "the engine pool must not change faulted rounds");
+    assert_eq!(serial, overlap, "overlap must not change faulted rounds");
+    assert_eq!(ledger1, ledger4, "the ledger is a plan fact");
+    assert_eq!(ledger1, ledger4p);
+    assert_eq!(ledger1, ledger_o);
+    assert_eq!(eval1, eval4, "workers changed the faulted final model");
+    assert_eq!(eval1, eval4p);
+    assert_eq!(eval1, eval_o);
+
+    // the schedule genuinely fired (combined rate ≈ 0.86 over 12 tasks)
+    // and every observed fault recovered under the capped budget
+    assert!(ledger1.dispatched >= 12 && !ledger1.is_empty(), "no faults drawn: {ledger1:?}");
+    for class in FAULT_CLASSES {
+        let c = ledger1.counts(class);
+        assert_eq!(c.abandoned, 0, "{class:?}: budget = MAX_SEVERITY cannot abandon");
+        assert_eq!(c.recovered, c.observed);
+    }
+
+    // and the injection is real: the same seed with faults off produces
+    // different bytes (retry/stall delays move completion times)
+    let mut off = faulted_cfg(1);
+    off.faults = FaultsCfg::default();
+    let (clean, ledger_off, _) = run_faulted(&shared, &off, rounds);
+    assert!(ledger_off.is_empty(), "off run must book nothing");
+    assert_ne!(serial, clean, "a faulted run must not reproduce the clean bytes");
+}
+
+#[test]
+fn faulted_quorum_runs_are_deterministic_and_report_the_fault_rate() {
+    // The semi-async path under fault pressure: deterministic for any
+    // worker count, and the adaptive controller sees a non-zero
+    // observed fault rate (the ledger feeds QuorumSignals::fault_rate).
+    let Some(shared) = pool_or_skip(1) else { return };
+    let Some(pooled) = pool_or_skip(4) else { return };
+    let rounds = 4;
+    let run = |pool: &EnginePool, workers: usize| {
+        let cfg = faulted_cfg(workers);
+        let mut env = FlEnv::build(pool, cfg.clone()).unwrap();
+        let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+        let mut s = make_strategy("heroes", &env.info, &cfg, &mut rng).unwrap();
+        let driver = RoundDriver::new(cfg.workers);
+        let mut policy = QuorumPolicy::fixed(2, 1.0);
+        let reports =
+            driver.run_quorum(pool, &mut env, s.as_mut(), rounds, &mut policy, None).unwrap();
+        (reports, *env.resilience(), s.evaluate(&env).unwrap())
+    };
+    let (q1, l1, e1) = run(&shared, 1);
+    let (q4, l4, e4) = run(&pooled, 4);
+    assert_eq!(q1, q4, "faulted quorum rounds must not depend on worker count");
+    assert_eq!(l1, l4, "the quorum-path ledger is a plan fact");
+    assert_eq!(e1, e4);
+    assert!(l1.observed_rate() > 0.0, "fault pressure must be visible to the controller");
+}
+
+#[test]
+fn fail_policy_aborts_a_real_run_with_the_typed_error() {
+    // `--fault-policy fail` + a rate-1 exec schedule: round 0's first
+    // stamp aborts before any engine work, and the error downcasts.
+    let Some(pool) = pool_or_skip(1) else { return };
+    let mut cfg = faulted_cfg(1);
+    cfg.faults = FaultsCfg::parse("exec=1").unwrap();
+    cfg.fault_policy = FaultPolicyCfg::parse("fail").unwrap();
+    let mut env = FlEnv::build(&pool, cfg.clone()).unwrap();
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut s = make_strategy("heroes", &env.info, &cfg, &mut rng).unwrap();
+    let err = s.run_round(&mut env).unwrap_err();
+    match err.downcast_ref::<ResilienceError>() {
+        Some(&ResilienceError::FaultAbort { round: 0, class: FaultClass::Exec, .. }) => {}
+        other => panic!("expected a typed FaultAbort, got {other:?} ({err})"),
+    }
+}
