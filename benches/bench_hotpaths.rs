@@ -6,6 +6,11 @@
 //! and the lazy population model's O(cohort) round cost across
 //! population scales.
 
+// Test/bench/example code: panicking on setup failure is idiomatic
+// (CONTRIBUTING.md — the error-handling contract binds library code).
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::indexing_slicing)]
+
+
 use heroes::baselines::{DenseServer, Strategy};
 use heroes::codec::json::Json;
 use heroes::codec::{self, CodecCfg, Encoding, FrameMeta};
@@ -116,15 +121,15 @@ fn main() {
         })
         .collect();
     b.run("coordinator/plan_round K=10", |_| {
-        let mut ledger = BlockLedger::new(&info);
+        let mut ledger = BlockLedger::new(&info).unwrap();
         plan_round(&info, &ctrl, &est, &statuses, &mut ledger).unwrap()
     });
 
     // aggregation of K=10 full-width updates
     let mut rng = Rng::new(2);
     let global = ComposedGlobal::init(&info, &mut rng).unwrap();
-    let mut ledger = BlockLedger::new(&info);
-    let full = ledger.full_selection(&info);
+    let mut ledger = BlockLedger::new(&info).unwrap();
+    let full = ledger.full_selection(&info).unwrap();
     let payload = global.reduced_inputs(&info, info.cap_p, &full.blocks).unwrap();
     b.run("coordinator/aggregate K=10 full-width", |_| {
         let mut acc = ComposedAccumulator::new(&info, &global);
@@ -172,7 +177,7 @@ fn main() {
     let yt = heroes::tensor::IntTensor::from_vec(&[info.batch], y);
     let lr = Tensor::from_vec(&[1], vec![0.05]);
     for p in [1, info.cap_p] {
-        let sel = ledger.select_for_width(&info, p);
+        let sel = ledger.select_for_width(&info, p).unwrap();
         let params = global.reduced_inputs(&info, p, &sel.blocks).unwrap();
         let name = Manifest::train_name("cnn", p, true);
         engine.prepare(&name).unwrap();
@@ -456,8 +461,8 @@ fn population_bench() {
     for (label, n) in
         [("1e3", 1_000usize), ("1e4", 10_000), ("1e5", 100_000), ("1e6", 1_000_000)]
     {
-        let pop = Population::new(PopulationSpec::default_mix(n, 42));
-        let mut cache: LazyCache<u64> = LazyCache::new(4 * pop_k);
+        let pop = Population::new(PopulationSpec::default_mix(n, 42)).unwrap();
+        let mut cache: LazyCache<u64> = LazyCache::new(4 * pop_k).unwrap();
         let mut sink = 0u64;
         let round_work = |round: usize, cache: &mut LazyCache<u64>, sink: &mut u64| {
             let cohort = pop.sample_cohort(round, pop_k, |_| true);

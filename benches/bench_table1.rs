@@ -2,6 +2,11 @@
 //! scale via the shared `util::bench::experiment_miniature` runner
 //! (harness = false; bench-lite). Skips gracefully without artifacts.
 
+// Test/bench/example code: panicking on setup failure is idiomatic
+// (CONTRIBUTING.md — the error-handling contract binds library code).
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::indexing_slicing)]
+
+
 fn main() {
     heroes::util::bench::experiment_miniature("table1");
 }

@@ -8,6 +8,11 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
+// Test/bench/example code: panicking on setup failure is idiomatic
+// (CONTRIBUTING.md — the error-handling contract binds library code).
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::indexing_slicing)]
+
+
 use heroes::baselines::Strategy;
 use heroes::config::{ExperimentConfig, Scale};
 use heroes::coordinator::env::FlEnv;

@@ -202,13 +202,15 @@ impl Strategy for DenseServer {
                 train_exec: Manifest::train_name(&self.family, p, false),
                 probe_exec: None,
                 payload: self.global.reduced_inputs(&env.info, p)?,
-                stream: env.batch_stream(client, self.round),
+                stream: env.batch_stream(client, self.round)?,
                 bytes: env.info.bytes_dense[&p],
                 up_bytes: crate::codec::upload_bytes(
                     &env.info.dense_params[&p],
                     env.info.bytes_dense[&p],
                     self.codec,
                 ),
+                rebill_bytes: 0,
+),
                 wire: self.codec.encoding().map(|enc| WireTask {
                     scheme: scheme_id::DENSE,
                     round: self.round as u32,

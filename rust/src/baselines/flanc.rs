@@ -197,13 +197,15 @@ impl Strategy for FlancServer {
                 train_exec: Manifest::train_name(&self.family, p, true),
                 probe_exec: None,
                 payload: self.payload(p),
-                stream: env.batch_stream(client, self.round),
+                stream: env.batch_stream(client, self.round)?,
                 bytes: env.info.bytes_composed[&p],
                 up_bytes: crate::codec::upload_bytes(
                     &env.info.composed_params[&p],
                     env.info.bytes_composed[&p],
                     self.codec,
                 ),
+                rebill_bytes: 0,
+),
                 wire: self.codec.encoding().map(|enc| WireTask {
                     scheme: scheme_id::FLANC,
                     round: self.round as u32,

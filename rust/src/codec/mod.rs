@@ -61,6 +61,12 @@
 //! the upload path and is byte-identical to the pre-codec repo — the
 //! PR 5/6 goldens keep pinning it.
 
+// The determinism layers promise typed errors, never panics: promote
+// slice-index panics to clippy warnings here (CI denies warnings);
+// hlint rule P1 enforces the same contract with per-line reasons.
+#![warn(clippy::indexing_slicing)]
+
+
 pub mod json;
 pub mod quant;
 pub mod wire;
@@ -198,7 +204,9 @@ pub mod scheme_id {
 pub fn upload_bytes(specs: &[ParamSpec], analytic_bytes: usize, codec: CodecCfg) -> usize {
     match codec {
         CodecCfg::Analytic => analytic_bytes,
-        CodecCfg::Wire(enc) => wire::frame_len_for_shapes(specs.iter().map(|s| &s.shape[..]), enc),
+        CodecCfg::Wire(enc) => {
+            wire::frame_len_for_shapes(specs.iter().map(|s| s.shape.as_slice()), enc)
+        }
     }
 }
 

@@ -44,6 +44,8 @@ pub fn k_of(len: usize, rate: f64) -> usize {
 /// Indices of the k largest-|v| entries, returned **ascending** (the
 /// wire order). Ties break toward the lower index; `total_cmp` keeps
 /// the order total (and thus deterministic) even for NaN payloads.
+#[allow(clippy::indexing_slicing)]
+// hlint::allow(panic_path, item): the sort comparator only sees indices drawn from `0..data.len()`
 pub fn top_k_indices(data: &[f32], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..data.len()).collect();
     idx.sort_by(|&a, &b| data[b].abs().total_cmp(&data[a].abs()).then(a.cmp(&b)));

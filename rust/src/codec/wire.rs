@@ -103,6 +103,8 @@ pub fn encode_update<W: Write>(
     Ok(HEADER_LEN + body as usize)
 }
 
+#[allow(clippy::indexing_slicing)]
+// hlint::allow(panic_path, item): every `data[i]` draws i from `top_k_indices`, which returns indices < data.len() by contract (pinned in quant's tests)
 fn write_section<W: Write>(w: &mut W, t: &Tensor, enc: Encoding) -> Result<(), CodecError> {
     let shape = t.shape();
     let data = t.data();
@@ -158,6 +160,7 @@ struct Reader<'a> {
 }
 
 impl<'a> Reader<'a> {
+    #[allow(clippy::indexing_slicing)]
     fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
         if self.pos + n > self.b.len() {
             return Err(CodecError::Truncated {
@@ -166,32 +169,42 @@ impl<'a> Reader<'a> {
                 have: self.b.len(),
             });
         }
+        // hlint::allow(panic_path): range is in bounds by the check above — the only Truncated exit for the whole reader
         let s = &self.b[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
+    /// Fixed-width take: the typed-error twin of `take` for integer
+    /// fields — `take(N)` returns exactly N bytes, so the array copy is
+    /// total and no `try_into().unwrap()` is needed.
+    fn take_n<const N: usize>(&mut self) -> Result<[u8; N], CodecError> {
+        let mut out = [0u8; N];
+        out.copy_from_slice(self.take(N)?);
+        Ok(out)
+    }
+
     fn u8(&mut self) -> Result<u8, CodecError> {
-        Ok(self.take(1)?[0])
+        Ok(self.take_n::<1>()?[0])
     }
 
     fn u32(&mut self) -> Result<u32, CodecError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take_n()?))
     }
 
     fn u64(&mut self) -> Result<u64, CodecError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take_n()?))
     }
 
     fn f32(&mut self) -> Result<f32, CodecError> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(f32::from_le_bytes(self.take_n()?))
     }
 }
 
 /// Parse and validate just the 32-byte header.
 pub fn read_header(bytes: &[u8]) -> Result<FrameHeader, CodecError> {
     let mut r = Reader { b: bytes, pos: 0 };
-    let magic: [u8; 4] = r.take(4)?.try_into().unwrap();
+    let magic: [u8; 4] = r.take_n()?;
     if magic != MAGIC {
         return Err(CodecError::BadMagic { found: magic });
     }
@@ -212,6 +225,7 @@ pub fn read_header(bytes: &[u8]) -> Result<FrameHeader, CodecError> {
 /// Decode one frame back into dense f32 tensors (dequantizing q8,
 /// densifying top-k with zeros at the dropped positions). Exact
 /// round-trip for raw sections.
+#[allow(clippy::indexing_slicing)]
 pub fn decode_update(bytes: &[u8]) -> Result<DecodedUpdate, CodecError> {
     let header = read_header(bytes)?;
     let actual = (bytes.len() - HEADER_LEN.min(bytes.len())) as u64;
@@ -263,6 +277,7 @@ pub fn decode_update(bytes: &[u8]) -> Result<DecodedUpdate, CodecError> {
                     }
                     let codes = r.take(k)?;
                     for (&i, &q) in idx.iter().zip(codes) {
+                        // hlint::allow(panic_path): i < len validated above (BadTopK otherwise)
                         v[i] = quant::dequantize_q8(lo, scale, q);
                     }
                 } else {
@@ -275,6 +290,7 @@ pub fn decode_update(bytes: &[u8]) -> Result<DecodedUpdate, CodecError> {
                         idx.push(i);
                     }
                     for &i in &idx {
+                        // hlint::allow(panic_path): i < len validated above (BadTopK otherwise)
                         v[i] = r.f32()?;
                     }
                 }

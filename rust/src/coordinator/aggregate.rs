@@ -70,6 +70,8 @@ impl<'a> ComposedAccumulator<'a> {
     /// `push` with contribution weight `w` (quorum members 1.0, late
     /// arrivals their staleness weight). Accumulates in place — no scaled
     /// temporary.
+    #[allow(clippy::indexing_slicing)]
+    // hlint::allow(panic_path, item): every index is bounded by the arity checks at fn entry (`updated.len() == 2l+1`, `selections.len() == l`) and the accumulator vectors were sized from the same `info.layers` in `new`
     pub fn push_weighted(
         &mut self,
         selections: &[Vec<usize>],
@@ -114,6 +116,8 @@ impl<'a> ComposedAccumulator<'a> {
     }
 
     /// Produce the next global model (paper Alg. 1 line 26).
+    #[allow(clippy::indexing_slicing)]
+    // hlint::allow(panic_path, item): `coeff_sums`/`coeff_weights` were sized from `info.layers` in `new`, and `prev` is the previous round's global built from the same manifest
     pub fn finalize(mut self) -> Result<ComposedGlobal> {
         if self.clients == 0 {
             return Err(anyhow!("no client updates to aggregate"));
@@ -166,6 +170,8 @@ impl<'a> DenseAccumulator<'a> {
     }
 
     /// `push` with contribution weight `w`, accumulated in place.
+    #[allow(clippy::indexing_slicing)]
+    // hlint::allow(panic_path, item): every index is bounded by the arity checks at fn entry (`updated.len() == l+1`, `specs.len() == l`) and the accumulator vectors were sized from `prev.weights` in `new`
     pub fn push_weighted(&mut self, p: usize, updated: &[Tensor], w: f32) -> Result<()> {
         if w.is_nan() || w <= 0.0 {
             return Err(anyhow!("contribution weight must be positive, got {w}"));
@@ -179,6 +185,11 @@ impl<'a> DenseAccumulator<'a> {
             .dense_params
             .get(&p)
             .ok_or_else(|| anyhow!("no dense params at p={p}"))?;
+        if specs.len() != l {
+            // manifest input: a spec list that disagrees with the layer
+            // count is a typed error, not an index panic below
+            return Err(anyhow!("dense params at p={p} list {} specs for {l} layers", specs.len()));
+        }
         for idx in 0..l {
             if updated[idx].shape() != specs[idx].shape.as_slice() {
                 return Err(anyhow!(
@@ -202,6 +213,8 @@ impl<'a> DenseAccumulator<'a> {
 
     /// Element-wise overlap-aware weighted average; untouched elements
     /// carry the previous global value (HeteroFL).
+    #[allow(clippy::indexing_slicing)]
+    // hlint::allow(panic_path, item): `weight_sums`/`elem_weights` were sized element-for-element from `prev.weights` in `new`, so the zipped per-element walk stays in bounds
     pub fn finalize(mut self) -> Result<DenseGlobal> {
         if self.clients == 0 {
             return Err(anyhow!("no client updates to aggregate"));
@@ -428,10 +441,10 @@ mod tests {
         let info = toy_info();
         let prev = ComposedGlobal::init(&info, &mut Rng::new(10)).unwrap();
         let mut acc = ComposedAccumulator::new(&info, &prev);
-        let mut ledger = crate::coordinator::ledger::BlockLedger::new(&info);
+        let mut ledger = crate::coordinator::ledger::BlockLedger::new(&info).unwrap();
         for (i, w) in [1.0f32, 0.5, 0.25, 0.125].into_iter().enumerate() {
             let p = 1 + (i % info.cap_p);
-            let sel = ledger.select_for_width(&info, p);
+            let sel = ledger.select_for_width(&info, p).unwrap();
             ledger.record(&sel, 1).unwrap();
             let payload = prev.reduced_inputs(&info, p, &sel.blocks).unwrap();
             acc.push_weighted(&sel.blocks, &payload, w).unwrap();

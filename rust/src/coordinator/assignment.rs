@@ -109,22 +109,30 @@ pub fn cohort_statuses(
 }
 
 /// Width assignment (Alg. 1 lines 6-11): largest p with μ(p) ≤ μ^max.
+///
+/// Total over malformed manifests: a missing width in the cost map stops
+/// the growth (same choice the in-bounds loop makes), and a manifest
+/// without even width 1 yields `μ = ∞` — which the dispatch validation
+/// rejects as a non-finite projected completion, instead of a panic here.
 pub fn assign_width(info: &ModelInfo, q_flops: f64, mu_max: f64) -> (usize, f64) {
     let mut p = 1;
+    let mut mu = info.flops_composed.get(&1).map_or(f64::INFINITY, |&f| f / q_flops);
     while p < info.cap_p {
-        let mu_next = info.flops_composed[&(p + 1)] / q_flops;
-        if mu_next <= mu_max {
-            p += 1;
-        } else {
-            break;
+        match info.flops_composed.get(&(p + 1)) {
+            Some(&f) if f / q_flops <= mu_max => {
+                p += 1;
+                mu = f / q_flops;
+            }
+            _ => break,
         }
     }
-    (p, info.flops_composed[&p] / q_flops)
+    (p, mu)
 }
 
 /// Plan a full round (mutates the ledger exactly as Alg. 1 does).
 /// Errs on an empty cohort — index 0 into an empty plan would panic in
 /// every downstream consumer.
+#[allow(clippy::indexing_slicing)]
 pub fn plan_round(
     info: &ModelInfo,
     cfg: &ControllerCfg,
@@ -142,14 +150,14 @@ pub fn plan_round(
         .map(|s| {
             let (p, mu) = assign_width(info, s.q_flops, cfg.mu_max);
             let up = crate::codec::upload_bytes(
-                &info.composed_params[&p],
-                info.bytes_composed[&p],
+                info.composed_params_of(p)?,
+                info.bytes_composed_of(p)?,
                 cfg.codec,
             );
             let nu = s.link.upload_time(up);
-            (*s, p, mu, nu)
+            Ok((*s, p, mu, nu))
         })
-        .collect();
+        .collect::<Result<_>>()?;
 
     // 2. fastest-client selection via Eq. 27. H* depends only on the
     // estimates / ε / β² — not on the candidate's (μ, ν) — so it is
@@ -170,8 +178,9 @@ pub fn plan_round(
     // blocks, ledger update
     let tau_l = (tau_opt(est, cfg.eta, h_star).round() as usize)
         .clamp(cfg.tau_floor.max(cfg.tau_min), cfg.tau_max);
+    // hlint::allow(panic_path): `fastest` came from enumerating `partial`, which is non-empty (checked at entry)
     let (s_l, p_l, mu_l, nu_l) = partial[fastest];
-    let sel_l = ledger.select_for_width(info, p_l);
+    let sel_l = ledger.select_for_width(info, p_l)?;
     ledger.record(&sel_l, tau_l as u64)?;
     let t_l = completion_time(tau_l, mu_l, nu_l);
 
@@ -189,8 +198,9 @@ pub fn plan_round(
     // Keep original order except the fastest moved to front of processing.
     let rest: Vec<usize> = (0..partial.len()).filter(|&i| i != fastest).collect();
     for i in rest {
+        // hlint::allow(panic_path): `rest` enumerates `0..partial.len()`
         let (s, p, mu, nu) = partial[i];
-        let sel = ledger.select_for_width(info, p);
+        let sel = ledger.select_for_width(info, p)?;
         let (lo, hi) = tau_bounds(t_l, mu, nu, cfg.rho, cfg.tau_min, cfg.tau_max);
         let mut best_tau = lo;
         let mut best_var = f64::INFINITY;
@@ -220,7 +230,7 @@ pub fn plan_round(
     let fastest_idx = assignments
         .iter()
         .position(|a| a.client == s_l.client)
-        .expect("fastest stays in the plan");
+        .ok_or_else(|| anyhow!("fastest client {} vanished from its own plan", s_l.client))?;
 
     Ok(RoundPlan { assignments, fastest: fastest_idx, t_l, h_star })
 }
@@ -240,7 +250,7 @@ pub fn fastest_reference(assignments: &[Assignment]) -> Option<(usize, f64)> {
         .iter()
         .enumerate()
         .map(|(i, a)| (i, a.projected_t))
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
 }
 
 /// Average waiting time of a plan (paper Eq. 20) given the realized
@@ -302,7 +312,7 @@ mod tests {
     #[test]
     fn plan_prefers_fast_client_as_reference() {
         let info = toy_info();
-        let mut ledger = BlockLedger::new(&info);
+        let mut ledger = BlockLedger::new(&info).unwrap();
         let statuses = vec![
             status(0, 1e6, 1.0),  // slow compute, slow link
             status(1, 2e7, 5.0),  // fast everything
@@ -319,7 +329,7 @@ mod tests {
     #[test]
     fn plan_balances_completion_times() {
         let info = toy_info();
-        let mut ledger = BlockLedger::new(&info);
+        let mut ledger = BlockLedger::new(&info).unwrap();
         let statuses: Vec<ClientStatus> = (0..6)
             .map(|i| status(i, 2e6 + i as f64 * 4e6, 1.0 + i as f64 * 0.7))
             .collect();
@@ -341,7 +351,7 @@ mod tests {
     #[test]
     fn plan_updates_ledger_with_taus() {
         let info = toy_info();
-        let mut ledger = BlockLedger::new(&info);
+        let mut ledger = BlockLedger::new(&info).unwrap();
         let statuses = vec![status(0, 1e7, 3.0), status(1, 1e7, 3.0)];
         let plan = plan_round(&info, &cfg(), &est(), &statuses, &mut ledger).unwrap();
         let total: u64 = plan
@@ -356,7 +366,7 @@ mod tests {
     #[test]
     fn block_selection_rotates_across_rounds() {
         let info = toy_info();
-        let mut ledger = BlockLedger::new(&info);
+        let mut ledger = BlockLedger::new(&info).unwrap();
         let statuses = vec![status(0, 1e6, 1.0)]; // width 1 -> 1 block per layer
         let p1 = plan_round(&info, &cfg(), &est(), &statuses, &mut ledger).unwrap();
         let p2 = plan_round(&info, &cfg(), &est(), &statuses, &mut ledger).unwrap();
@@ -368,14 +378,14 @@ mod tests {
     fn fastest_reference_picks_minimum_projected_time() {
         // regression: the bootstrap plan used `max_by`, i.e. the slowest
         let info = toy_info();
-        let ledger = BlockLedger::new(&info);
+        let ledger = BlockLedger::new(&info).unwrap();
         let mk = |client: usize, projected_t: f64| Assignment {
             client,
             p: 1,
             mu: 0.1,
             nu: 0.1,
             tau: 5,
-            selection: ledger.select_for_width(&info, 1),
+            selection: ledger.select_for_width(&info, 1).unwrap(),
             projected_t,
         };
         let assignments = vec![mk(0, 9.0), mk(1, 2.0), mk(2, 5.0)];
@@ -390,7 +400,7 @@ mod tests {
         // first consumer to index assignment 0 panicked
         assert!(fastest_reference(&[]).is_none());
         let info = toy_info();
-        let mut ledger = BlockLedger::new(&info);
+        let mut ledger = BlockLedger::new(&info).unwrap();
         let err = plan_round(&info, &cfg(), &est(), &[], &mut ledger).unwrap_err();
         assert!(err.to_string().contains("empty cohort"), "unexpected error: {err}");
     }
@@ -408,7 +418,7 @@ mod tests {
         for beta_sq in [0.0, 0.001, 0.002] {
             let mut c = cfg();
             c.beta_sq = beta_sq;
-            let mut ledger = BlockLedger::new(&info);
+            let mut ledger = BlockLedger::new(&info).unwrap();
             let plan = plan_round(&info, &c, &est(), &statuses, &mut ledger).unwrap();
             assert!(
                 plan.h_star > h_prev,
@@ -434,8 +444,8 @@ mod tests {
             let mut rng = Rng::new(5);
             (0..5).map(|i| status(i, rng.uniform_in(1e6, 2e7), rng.uniform_in(1.0, 5.0))).collect()
         };
-        let mut l1 = BlockLedger::new(&info);
-        let mut l2 = BlockLedger::new(&info);
+        let mut l1 = BlockLedger::new(&info).unwrap();
+        let mut l2 = BlockLedger::new(&info).unwrap();
         let a = plan_round(&info, &cfg(), &est(), &statuses, &mut l1).unwrap();
         let b = plan_round(&info, &cfg(), &est(), &statuses, &mut l2).unwrap();
         for (x, y) in a.assignments.iter().zip(&b.assignments) {

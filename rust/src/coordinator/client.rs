@@ -68,7 +68,12 @@ pub fn run_local(
     lr: f32,
     mut next_batch: impl FnMut() -> (XData, IntTensor),
 ) -> Result<LocalResult> {
-    assert!(tau >= 1, "tau must be at least 1");
+    if tau == 0 {
+        // τ comes from the planner's frequency assignment — a zero here
+        // is a controller bug, surfaced as a typed error (the loop below
+        // would otherwise silently upload the payload unchanged)
+        return Err(anyhow!("{train_exec}: tau must be at least 1"));
+    }
     let n_params = payload.len();
 
     // Estimation probes need a fixed batch ξ₁ reused at start and end
@@ -106,8 +111,16 @@ pub fn run_local(
                     out.len()
                 ));
             }
-            let gsq = out.pop().unwrap().data()[0] as f64;
-            let loss = out.pop().unwrap().data()[0] as f64;
+            // the arity check above guarantees the two scalar tails, but
+            // their *shapes* come from the compiled artifact — typed Err
+            let scalar = |t: Option<Tensor>, what: &str| -> Result<f64> {
+                t.as_ref()
+                    .and_then(|t| t.data().first())
+                    .map(|&v| f64::from(v))
+                    .ok_or_else(|| anyhow!("{train_exec}: {what} output is not a scalar"))
+            };
+            let gsq = scalar(out.pop(), "grad-norm")?;
+            let loss = scalar(out.pop(), "loss")?;
             if !loss.is_finite() {
                 if attempt == 0 {
                     log::debug!("{train_exec}: non-finite loss, retrying at lr/4");

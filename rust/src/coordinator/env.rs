@@ -14,7 +14,7 @@
 
 use crate::config::{ExperimentConfig, Partition, PopulationMode};
 use crate::coordinator::assignment::ClientStatus;
-use crate::coordinator::resilience::{FaultsCtl, ResilienceLedger};
+use crate::coordinator::resilience::{rebill_for, FaultsCtl, ResilienceLedger};
 use crate::coordinator::XData;
 use crate::data::loader::{EvalBatches, ImageLoader, TextEvalBatches, TextLoader};
 use crate::data::partition::{gamma_partition, phi_partition, PartitionPlan};
@@ -123,6 +123,7 @@ pub struct FlEnv<'e> {
     faults: FaultsCtl,
     train: TrainData,
     test: TestData,
+    // hlint::allow(unkeyed_rng): the eager path's historical shared cursor — coordinator-thread-only by construction (worker threads receive owned streams), kept for byte-identity with pre-lazy runs
     rng: Rng,
     /// `--population lazy`: the parametric client world (None on the
     /// eager path — which then behaves byte-identically to its
@@ -228,7 +229,7 @@ impl<'e> FlEnv<'e> {
     /// cost are O(cohort) at any `n_clients`.
     fn build_lazy(pool: &'e EnginePool, cfg: ExperimentConfig) -> Result<FlEnv<'e>> {
         let info = pool.manifest().model(&cfg.family)?.clone();
-        let population = Population::new(PopulationSpec::default_mix(cfg.n_clients, cfg.seed));
+        let population = Population::new(PopulationSpec::default_mix(cfg.n_clients, cfg.seed))?;
         // a few cohorts' worth of shards stay resident so overlap/quorum
         // stragglers re-hit their shard while it is still warm
         let cache_cap = (4 * cfg.k_per_round).max(32);
@@ -253,7 +254,7 @@ impl<'e> FlEnv<'e> {
                         seed_protos: cfg.seed ^ 0xDA7A,
                         partition: cfg.partition,
                         classes: info.classes,
-                        cache: Mutex::new(LazyCache::new(cache_cap)),
+                        cache: Mutex::new(LazyCache::new(cache_cap)?),
                     },
                     TestData::Image(test),
                 )
@@ -270,7 +271,7 @@ impl<'e> FlEnv<'e> {
                     TrainData::LazyText {
                         gen,
                         seq_len: *seq_len,
-                        cache: Mutex::new(LazyCache::new(cache_cap)),
+                        cache: Mutex::new(LazyCache::new(cache_cap)?),
                     },
                     TestData::Text(test),
                 )
@@ -319,6 +320,7 @@ impl<'e> FlEnv<'e> {
     /// sparse sampler instead: O(K) work and memory regardless of
     /// `n_clients`, keyed by `(seed, round)` so the draw is independent
     /// of the shared cursor RNG and of materialization history.
+    #[allow(clippy::indexing_slicing)] // `sample_distinct` indices are `< available.len()` (hlint reason at the site)
     pub fn sample_clients(&mut self) -> Vec<usize> {
         let round = self.scenario.begin_plan_round();
         self.plan_round = round;
@@ -336,6 +338,7 @@ impl<'e> FlEnv<'e> {
         // yields an empty cohort, which the planner rejects as a proper
         // error downstream
         let k = self.cfg.k_per_round.min(available.len());
+        // hlint::allow(panic_path): `sample_distinct(available.len(), k)` yields indices strictly below `available.len()`
         self.rng.sample_distinct(available.len(), k).into_iter().map(|i| available[i]).collect()
     }
 
@@ -346,6 +349,7 @@ impl<'e> FlEnv<'e> {
     /// In `--population lazy` mode both draws are keyed by
     /// `(seed, client, plan round)` — no fleet entry or shared RNG cursor
     /// is touched, so status collection is O(1) per cohort member.
+    #[allow(clippy::indexing_slicing)] // eager fleet enumerates all clients (hlint reason at the site)
     pub fn status(&mut self, client: usize) -> ClientStatus {
         if let Some(pop) = &self.population {
             let q = pop.flops(client, self.plan_round);
@@ -356,6 +360,7 @@ impl<'e> FlEnv<'e> {
             };
             return ClientStatus { client, q_flops: q, link };
         }
+        // hlint::allow(panic_path): the eager fleet enumerates all `n_clients` devices and cohorts are sampled from `0..n_clients`
         let q = self.fleet.devices[client].sample_flops();
         let link = match self.scenario.bandwidth_scale() {
             None => self.network.sample(&mut self.rng),
@@ -409,6 +414,15 @@ impl<'e> FlEnv<'e> {
             if let Some((stamp, completion)) =
                 self.faults.stamp_one(round, t.client, t.completion, t.drop_at.is_some())?
             {
+                // a recovered corrupt fault re-sent the upload frame on
+                // every retry: bill the retransmitted bytes onto the task
+                // (exec_task folds them into `TaskOutcome::up_bytes`) and
+                // into the resilience ledger
+                let rebill = rebill_for(&stamp, t.up_bytes);
+                if rebill > 0 {
+                    t.rebill_bytes = rebill;
+                    self.faults.note_rebilled(rebill as u64);
+                }
                 t.fault = Some(stamp);
                 t.completion = completion;
             }
@@ -442,8 +456,11 @@ impl<'e> FlEnv<'e> {
 
     /// Owned batch stream for one client's local round. Deterministic in
     /// `(cfg.seed, client, round)` and independent of every other stream,
-    /// so the round driver may run it on any worker thread.
-    pub fn batch_stream(&self, client: usize, round: usize) -> BatchStream {
+    /// so the round driver may run it on any worker thread. Errs on a
+    /// client outside the partition (a planner bug surfaced as a typed
+    /// error, not an index panic); a poisoned shard-cache lock is
+    /// recovered, since every cached value is pure in its key.
+    pub fn batch_stream(&self, client: usize, round: usize) -> Result<BatchStream> {
         // mix (seed, client, round) injectively enough for SplitMix64's
         // whitening; the +1s keep client 0 / round 0 off the raw seed
         let seed = self
@@ -452,44 +469,54 @@ impl<'e> FlEnv<'e> {
             .wrapping_add((client as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
             .wrapping_add((round as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03));
         let rng = Rng::new(seed);
-        match &self.train {
+        let stream = match &self.train {
             TrainData::Image { set, plan } => BatchStream::Image(ImageLoader::new(
                 set.clone(),
                 plan.client_indices(client),
                 self.info.batch,
                 rng,
             )),
-            TrainData::Text { shards, seq_len } => BatchStream::Text(TextLoader::new(
-                shards[client].clone(),
-                self.info.batch,
-                *seq_len,
-                rng,
-            )),
+            TrainData::Text { shards, seq_len } => {
+                let shard = shards
+                    .get(client)
+                    .ok_or_else(|| anyhow!("client {client} outside the text partition"))?;
+                BatchStream::Text(TextLoader::new(shard.clone(), self.info.batch, *seq_len, rng))
+            }
             TrainData::LazyImage { gen, seed_protos, partition, classes, cache } => {
-                let pop = self.population.as_ref().expect("lazy train data without a population");
+                let pop = self
+                    .population
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("lazy train data without a population"))?;
                 let spec = pop.shard_spec(client, self.cfg.samples_per_client);
-                let set = cache.lock().unwrap().get_or_insert_with(client, || {
-                    let mut srng = Rng::new(spec.seed);
-                    let labels =
-                        lazy_shard_labels(*partition, *classes, client, spec.quota, &mut srng);
-                    Arc::new(gen.generate_labeled(labels, *seed_protos, &mut srng))
-                });
+                let set = cache
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
+                    .get_or_insert_with(client, || {
+                        let mut srng = Rng::new(spec.seed);
+                        let labels =
+                            lazy_shard_labels(*partition, *classes, client, spec.quota, &mut srng);
+                        Arc::new(gen.generate_labeled(labels, *seed_protos, &mut srng))
+                    });
                 let indices: Vec<usize> = (0..set.len()).collect();
                 BatchStream::Image(ImageLoader::new(set, indices, self.info.batch, rng))
             }
             TrainData::LazyText { gen, seq_len, cache } => {
-                let pop = self.population.as_ref().expect("lazy train data without a population");
+                let pop = self
+                    .population
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("lazy train data without a population"))?;
                 let spec = pop.shard_spec(client, self.cfg.shard_tokens);
                 // a loader needs strictly more than seq_len+1 tokens; pad
                 // tiny jittered quotas up to two full windows
                 let tokens = spec.quota.max(2 * (*seq_len + 1) + 2);
                 let stream = cache
                     .lock()
-                    .unwrap()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
                     .get_or_insert_with(client, || Arc::new(gen.shard(tokens, spec.seed)));
                 BatchStream::Text(TextLoader::new(stream, self.info.batch, *seq_len, rng))
             }
-        }
+        };
+        Ok(stream)
     }
 
     /// The lazy population, if this env was built with `--population
@@ -502,16 +529,32 @@ impl<'e> FlEnv<'e> {
     /// path). The O(cohort) property tests assert on `materializations`
     /// and `peak_resident` here.
     pub fn shard_cache_stats(&self) -> Option<CacheStats> {
+        // a poisoned lock is recovered: the stats are plain counters and
+        // every cached value is pure in its key
+        use std::sync::PoisonError;
         match &self.train {
-            TrainData::LazyImage { cache, .. } => Some(cache.lock().unwrap().stats().clone()),
-            TrainData::LazyText { cache, .. } => Some(cache.lock().unwrap().stats().clone()),
+            TrainData::LazyImage { cache, .. } => {
+                Some(cache.lock().unwrap_or_else(PoisonError::into_inner).stats().clone())
+            }
+            TrainData::LazyText { cache, .. } => {
+                Some(cache.lock().unwrap_or_else(PoisonError::into_inner).stats().clone())
+            }
             _ => None,
         }
     }
 
     /// Evaluate a parameter list with the given eval executable over the
-    /// full test split; returns (mean loss, accuracy).
+    /// full test split; returns (mean loss, accuracy). The eval
+    /// executables return `[loss_sum, correct]` scalars; their arity and
+    /// shapes come from the compiled artifact — external input — so a
+    /// missing output is a typed error, not an index panic.
     pub fn evaluate_param_list(&self, exec: &str, params: &[Tensor]) -> Result<(f64, f64)> {
+        fn scalar(out: &[Tensor], idx: usize, exec: &str) -> Result<f64> {
+            out.get(idx)
+                .and_then(|t| t.data().first())
+                .map(|&v| f64::from(v))
+                .ok_or_else(|| anyhow!("{exec}: eval executable returned no scalar output {idx}"))
+        }
         let mut loss_sum = 0.0f64;
         let mut correct = 0.0f64;
         let mut total = 0.0f64;
@@ -530,8 +573,8 @@ impl<'e> FlEnv<'e> {
                     inputs.push(Value::F32(&batch.x));
                     inputs.push(Value::I32(&batch.y));
                     let out = self.engine().execute(exec, &inputs)?;
-                    loss_sum += out[0].data()[0] as f64;
-                    correct += out[1].data()[0] as f64;
+                    loss_sum += scalar(&out, 0, exec)?;
+                    correct += scalar(&out, 1, exec)?;
                     total += real as f64;
                 }
             }
@@ -547,8 +590,8 @@ impl<'e> FlEnv<'e> {
                     inputs.push(Value::I32(&batch.x));
                     inputs.push(Value::I32(&batch.y));
                     let out = self.engine().execute(exec, &inputs)?;
-                    loss_sum += out[0].data()[0] as f64;
-                    correct += out[1].data()[0] as f64;
+                    loss_sum += scalar(&out, 0, exec)?;
+                    correct += scalar(&out, 1, exec)?;
                     total += (real * seq_len) as f64;
                 }
             }
@@ -586,6 +629,7 @@ impl<'e> FlEnv<'e> {
 /// quota over the kept ones. Pure in `(partition, classes, client, quota)`
 /// plus the RNG's seed, so a shard is identical no matter when — or how
 /// often — it is materialized.
+// hlint::allow(unkeyed_rng, item): callers construct a fresh `Rng::new(spec.seed)` per shard — the parameter is the per-shard keyed RNG, not a shared cursor
 fn lazy_shard_labels(
     partition: Partition,
     classes: usize,
@@ -620,7 +664,7 @@ fn lazy_shard_labels(
                 labels.extend(std::iter::repeat(c as i32).take(share));
             }
         }
-        // build_lazy rejects Natural for image families up front
+        // hlint::allow(panic_path): provably dead — `build_lazy` rejects `Natural` for image families before any shard is materialized
         Partition::Natural => unreachable!("natural partition is text-only"),
     }
     rng.shuffle(&mut labels);

@@ -100,6 +100,8 @@ pub fn solve_rounds(est: &Estimates, epsilon: f64, beta_sq: f64, h_max: usize) -
 /// fact. Non-increasing in `k` (fewer, closer stragglers) and
 /// non-decreasing in `α`; 0 at `k ≥ n` (full barrier projects no
 /// staleness).
+#[allow(clippy::indexing_slicing)]
+// hlint::allow(panic_path, item): the `k == 0 || k >= n` guard pins `k` to `1..n`, so both `[k - 1]` and `[k..]` are in bounds
 pub fn projected_staleness_loss(sorted_completions: &[f64], k: usize, alpha: f64) -> f64 {
     let n = sorted_completions.len();
     if k == 0 || k >= n {

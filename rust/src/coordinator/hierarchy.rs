@@ -117,6 +117,8 @@ pub struct HierarchyPlan {
 /// the run's quorum policy (mutated only by the root decision);
 /// `signals` is fetched lazily — a static policy never reads it, exactly
 /// like the flat path.
+#[allow(clippy::indexing_slicing)]
+// hlint::allow(panic_path, item): every index is a survivor position `< n = completions.len()` or an edge position `< edges.len()` produced by the round-robin split / quorum selection right above its use
 pub fn plan_hierarchy(
     completions: &[f64],
     bytes: &[usize],
@@ -150,7 +152,8 @@ pub fn plan_hierarchy(
         let members: Vec<usize> = quorum_members(&gc, k).into_iter().map(|j| group[j]).collect();
         let t_edge = members.iter().map(|&i| completions[i]).fold(0.0f64, f64::max);
         let up_bytes = members.iter().map(|&i| bytes[i]).max().unwrap_or(0);
-        let arrival = t_edge + up_bytes as f64 / cfg.backhaul_bps;
+        let arrival =
+            t_edge + crate::util::cast::bytes_to_f64(up_bytes as u64) / cfg.backhaul_bps;
         edges.push(EdgePlan { edge: e, members, t_edge, arrival, up_bytes });
     }
 
@@ -181,7 +184,8 @@ pub fn plan_hierarchy(
     }
     for (i, member) in edge_member.iter().enumerate() {
         if !member {
-            deferred.push((i, completions[i] + bytes[i] as f64 / cfg.backhaul_bps));
+            let fwd = crate::util::cast::bytes_to_f64(bytes[i] as u64) / cfg.backhaul_bps;
+            deferred.push((i, completions[i] + fwd));
         }
     }
     deferred.sort_by(|a, b| a.0.cmp(&b.0));

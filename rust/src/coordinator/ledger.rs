@@ -53,9 +53,12 @@ pub struct BlockLedger {
 }
 
 impl BlockLedger {
-    pub fn new(info: &ModelInfo) -> BlockLedger {
+    /// Build the ledger for a model family. Errs on a malformed layer
+    /// spec (a scale flag without its class name — manifest input, so a
+    /// typed error, not an assert).
+    pub fn new(info: &ModelInfo) -> Result<BlockLedger> {
         let mut classes: Vec<String> = Vec::new();
-        let idx_of = |name: &Option<String>, classes: &mut Vec<String>| -> Option<usize> {
+        let mut idx_of = |name: &Option<String>| -> Option<usize> {
             name.as_ref().map(|n| {
                 if let Some(i) = classes.iter().position(|c| c == n) {
                     i
@@ -65,44 +68,39 @@ impl BlockLedger {
                 }
             })
         };
-        let layer_classes: Vec<(Option<usize>, Option<usize>)> = info
-            .layers
-            .iter()
-            .map(|l| {
-                assert_eq!(
-                    l.s_in,
-                    l.in_class.is_some(),
-                    "layer {}: s_in must come with an in_class",
-                    l.name
-                );
-                assert_eq!(
-                    l.s_out,
-                    l.out_class.is_some(),
-                    "layer {}: s_out must come with an out_class",
-                    l.name
-                );
-                (idx_of(&l.in_class, &mut classes), idx_of(&l.out_class, &mut classes))
-            })
-            .collect();
-        BlockLedger {
+        let mut layer_classes: Vec<(Option<usize>, Option<usize>)> =
+            Vec::with_capacity(info.layers.len());
+        for l in &info.layers {
+            if l.s_in != l.in_class.is_some() {
+                return Err(anyhow!("layer {}: s_in must come with an in_class", l.name));
+            }
+            if l.s_out != l.out_class.is_some() {
+                return Err(anyhow!("layer {}: s_out must come with an out_class", l.name));
+            }
+            layer_classes.push((idx_of(&l.in_class), idx_of(&l.out_class)));
+        }
+        Ok(BlockLedger {
             cap_p: info.cap_p,
             counts: vec![vec![0; info.cap_p]; classes.len()],
             stale: vec![vec![0.0; info.cap_p]; classes.len()],
             classes,
             layer_classes,
-        }
+        })
     }
 
     pub fn classes(&self) -> &[String] {
         &self.classes
     }
 
+    /// Group counters of one class (empty for an unknown class index).
     pub fn class_counts(&self, class_idx: usize) -> &[u64] {
-        &self.counts[class_idx]
+        self.counts.get(class_idx).map_or(&[], Vec::as_slice)
     }
 
     /// The `want` least-trained groups of a class, ascending id order
     /// (count-sorted, id tie-break — the paper's least-trained rule).
+    #[allow(clippy::indexing_slicing)]
+    // hlint::allow(panic_path, item): private — `class_idx` enumerates `self.classes` and `want = p ≤ cap_p` is validated by `select_for_width`, the only caller
     fn select_groups(&self, class_idx: usize, want: usize) -> Vec<usize> {
         let c = &self.counts[class_idx];
         assert!(want <= c.len(), "want {want} of {} groups", c.len());
@@ -114,6 +112,8 @@ impl BlockLedger {
     }
 
     /// Blocks of one layer induced by per-class group selections.
+    #[allow(clippy::indexing_slicing)]
+    // hlint::allow(panic_path, item): private — `layer_idx` enumerates `info.layers` and the class indices were derived from the same layer list at construction
     fn layer_blocks(&self, layer_idx: usize, groups: &[Vec<usize>]) -> Vec<usize> {
         let (ic, oc) = self.layer_classes[layer_idx];
         match (ic, oc) {
@@ -132,17 +132,20 @@ impl BlockLedger {
         }
     }
 
-    /// Full selection for a width-p client.
-    pub fn select_for_width(&self, info: &ModelInfo, p: usize) -> Selection {
-        assert!(p >= 1 && p <= self.cap_p);
+    /// Full selection for a width-p client. Errs on a width outside
+    /// `1..=cap_p` — a planner bug surfaced as a typed error.
+    pub fn select_for_width(&self, info: &ModelInfo, p: usize) -> Result<Selection> {
+        if p < 1 || p > self.cap_p {
+            return Err(anyhow!("width {p} outside 1..={} for this ledger", self.cap_p));
+        }
         let groups: Vec<Vec<usize>> =
             (0..self.classes.len()).map(|c| self.select_groups(c, p)).collect();
         let blocks = (0..info.layers.len()).map(|l| self.layer_blocks(l, &groups)).collect();
-        Selection { groups, blocks }
+        Ok(Selection { groups, blocks })
     }
 
     /// The all-groups selection (width P) — identity block layout.
-    pub fn full_selection(&self, info: &ModelInfo) -> Selection {
+    pub fn full_selection(&self, info: &ModelInfo) -> Result<Selection> {
         self.select_for_width(info, self.cap_p)
     }
 
@@ -160,9 +163,9 @@ impl BlockLedger {
         }
         for (class_idx, groups) in sel.groups.iter().enumerate() {
             if let Some(&g) = groups.iter().find(|&&g| g >= self.cap_p) {
+                let class = self.classes.get(class_idx).map_or("?", String::as_str);
                 return Err(anyhow!(
-                    "selection group id {g} out of range for class {} ({} groups)",
-                    self.classes[class_idx],
+                    "selection group id {g} out of range for class {class} ({} groups)",
                     self.cap_p
                 ));
             }
@@ -173,6 +176,8 @@ impl BlockLedger {
     /// Record `tau` local iterations on a selection (Alg. 1 l.21-22).
     /// Errs (without partial mutation) on a selection whose shape does
     /// not match this ledger.
+    #[allow(clippy::indexing_slicing)]
+    // hlint::allow(panic_path, item): `check_selection` has validated the class count and every group id
     pub fn record(&mut self, sel: &Selection, tau: u64) -> Result<()> {
         self.check_selection(sel)?;
         for (class_idx, groups) in sel.groups.iter().enumerate() {
@@ -188,6 +193,8 @@ impl BlockLedger {
     /// only delivered `w·τ` effective iterations; the lost `(1−w)·τ` is
     /// tallied per group so `relative_variance` sees it. Errs (without
     /// partial mutation) on a shape-mismatched selection.
+    #[allow(clippy::indexing_slicing)]
+    // hlint::allow(panic_path, item): `check_selection` has validated the class count and every group id
     pub fn record_staleness(&mut self, sel: &Selection, tau: u64, weight: f32) -> Result<()> {
         self.check_selection(sel)?;
         let lost = tau as f64 * (1.0 - (weight as f64).clamp(0.0, 1.0));
@@ -261,13 +268,16 @@ impl BlockLedger {
 
     /// Hypothetical V^h if `sel` received `tau` more iterations — the
     /// controller's τ search (Alg. 1 line 19) uses this without mutating.
+    /// A selection with fewer classes than the ledger (foreign ledger)
+    /// contributes no hypothetical additions for the missing classes.
     pub fn variance_if(&self, sel: &Selection, tau: u64) -> f64 {
+        const NO_GROUPS: &[usize] = &[];
         let per_class: Vec<f64> = self
             .counts
             .iter()
             .enumerate()
             .map(|(class_idx, c)| {
-                let groups = &sel.groups[class_idx];
+                let groups = sel.groups.get(class_idx).map_or(NO_GROUPS, Vec::as_slice);
                 let xs: Vec<f64> = c
                     .iter()
                     .enumerate()
@@ -325,7 +335,7 @@ mod tests {
     #[test]
     fn classes_derived_from_layers() {
         let info = toy_info();
-        let ledger = BlockLedger::new(&info);
+        let ledger = BlockLedger::new(&info).unwrap();
         assert_eq!(ledger.classes(), &["g1".to_string()]);
         assert_eq!(ledger.class_counts(0), &[0, 0]);
     }
@@ -333,14 +343,14 @@ mod tests {
     #[test]
     fn selection_is_shared_across_tied_layers() {
         let info = toy_info();
-        let mut ledger = BlockLedger::new(&info);
-        let sel = ledger.select_for_width(&info, 1);
+        let mut ledger = BlockLedger::new(&info).unwrap();
+        let sel = ledger.select_for_width(&info, 1).unwrap();
         // one class, one group picked; conv1 blocks == head blocks == group
         assert_eq!(sel.groups, vec![vec![0]]);
         assert_eq!(sel.blocks, vec![vec![0], vec![0]]);
         ledger.record(&sel, 5).unwrap();
         // next narrow selection must rotate to the other group
-        let sel2 = ledger.select_for_width(&info, 1);
+        let sel2 = ledger.select_for_width(&info, 1).unwrap();
         assert_eq!(sel2.groups, vec![vec![1]]);
         assert_eq!(sel2.blocks, vec![vec![1], vec![1]]);
     }
@@ -348,8 +358,8 @@ mod tests {
     #[test]
     fn full_selection_is_identity_layout() {
         let info = toy_info();
-        let ledger = BlockLedger::new(&info);
-        let sel = ledger.full_selection(&info);
+        let ledger = BlockLedger::new(&info).unwrap();
+        let sel = ledger.full_selection(&info).unwrap();
         assert_eq!(sel.groups, vec![vec![0, 1]]);
         assert_eq!(sel.blocks, vec![vec![0, 1], vec![0, 1]]);
     }
@@ -363,26 +373,26 @@ mod tests {
         info.layers[1].in_class = Some("g1".into());
         info.layers[1].out_class = Some("g2".into());
         info.layers[1].blocks_total = 4;
-        let mut ledger = BlockLedger::new(&info);
+        let mut ledger = BlockLedger::new(&info).unwrap();
         assert_eq!(ledger.classes(), &["g1".to_string(), "g2".to_string()]);
-        let sel = ledger.select_for_width(&info, 1);
+        let sel = ledger.select_for_width(&info, 1).unwrap();
         assert_eq!(sel.blocks[1], vec![0]); // a=0,g=0 -> 0*2+0
         ledger.record(&sel, 3).unwrap();
-        let sel2 = ledger.select_for_width(&info, 1);
+        let sel2 = ledger.select_for_width(&info, 1).unwrap();
         // both classes rotate -> a=1,g=1 -> 1*2+1 = 3
         assert_eq!(sel2.blocks[1], vec![3]);
-        let full = ledger.select_for_width(&info, 2);
+        let full = ledger.select_for_width(&info, 2).unwrap();
         assert_eq!(full.blocks[1], vec![0, 1, 2, 3]);
     }
 
     #[test]
     fn variance_and_variance_if_agree() {
         let info = toy_info();
-        let mut ledger = BlockLedger::new(&info);
-        let sel = ledger.select_for_width(&info, 1);
+        let mut ledger = BlockLedger::new(&info).unwrap();
+        let sel = ledger.select_for_width(&info, 1).unwrap();
         ledger.record(&sel, 4).unwrap();
         assert!(ledger.variance() > 0.0);
-        let sel2 = ledger.select_for_width(&info, 1);
+        let sel2 = ledger.select_for_width(&info, 1).unwrap();
         let hyp = ledger.variance_if(&sel2, 4);
         ledger.record(&sel2, 4).unwrap();
         assert!((hyp - ledger.variance()).abs() < 1e-12);
@@ -392,15 +402,15 @@ mod tests {
     #[test]
     fn relative_variance_is_dimensionless_imbalance() {
         let info = toy_info();
-        let mut ledger = BlockLedger::new(&info);
+        let mut ledger = BlockLedger::new(&info).unwrap();
         // empty ledger: no imbalance signal
         assert_eq!(ledger.relative_variance(), 0.0);
         // counts [6, 0]: mean 3, var 9 -> CV² = 1
-        let sel = ledger.select_for_width(&info, 1);
+        let sel = ledger.select_for_width(&info, 1).unwrap();
         ledger.record(&sel, 6).unwrap();
         assert!((ledger.relative_variance() - 1.0).abs() < 1e-12);
         // balanced [6, 6]: imbalance vanishes even though counts grew
-        let sel2 = ledger.select_for_width(&info, 1);
+        let sel2 = ledger.select_for_width(&info, 1).unwrap();
         ledger.record(&sel2, 6).unwrap();
         assert_eq!(ledger.relative_variance(), 0.0);
     }
@@ -408,11 +418,11 @@ mod tests {
     #[test]
     fn staleness_discounts_effective_counts() {
         let info = toy_info();
-        let mut ledger = BlockLedger::new(&info);
+        let mut ledger = BlockLedger::new(&info).unwrap();
         // two balanced selections: planned counts [6, 6] -> no imbalance
-        let sel_a = ledger.select_for_width(&info, 1);
+        let sel_a = ledger.select_for_width(&info, 1).unwrap();
         ledger.record(&sel_a, 6).unwrap();
-        let sel_b = ledger.select_for_width(&info, 1);
+        let sel_b = ledger.select_for_width(&info, 1).unwrap();
         ledger.record(&sel_b, 6).unwrap();
         assert_eq!(ledger.relative_variance(), 0.0);
         assert_eq!(ledger.staleness_index(), 0.0);
@@ -430,8 +440,8 @@ mod tests {
     #[test]
     fn full_weight_merge_records_no_staleness() {
         let info = toy_info();
-        let mut ledger = BlockLedger::new(&info);
-        let sel = ledger.select_for_width(&info, 1);
+        let mut ledger = BlockLedger::new(&info).unwrap();
+        let sel = ledger.select_for_width(&info, 1).unwrap();
         ledger.record(&sel, 5).unwrap();
         let before = ledger.relative_variance();
         ledger.record_staleness(&sel, 5, 1.0).unwrap();
@@ -445,7 +455,7 @@ mod tests {
         // class count and panic-index on out-of-range groups, aborting
         // the coordinator mid-run
         let info = toy_info();
-        let mut ledger = BlockLedger::new(&info);
+        let mut ledger = BlockLedger::new(&info).unwrap();
         let wrong_classes = Selection { groups: vec![vec![0], vec![1]], blocks: vec![vec![0]] };
         let err = ledger.record(&wrong_classes, 3).unwrap_err();
         assert!(err.to_string().contains("group classes"), "unexpected error: {err}");
@@ -462,13 +472,13 @@ mod tests {
     #[test]
     fn spread_index_is_dimensionless_count_spread() {
         let info = toy_info();
-        let mut ledger = BlockLedger::new(&info);
+        let mut ledger = BlockLedger::new(&info).unwrap();
         assert_eq!(ledger.spread_index(), 0.0, "empty ledger has no spread");
-        let sel = ledger.select_for_width(&info, 1);
+        let sel = ledger.select_for_width(&info, 1).unwrap();
         ledger.record(&sel, 8).unwrap();
         // counts [8, 0] -> spread (8-0)/8 = 1
         assert_eq!(ledger.spread_index(), 1.0);
-        let sel2 = ledger.select_for_width(&info, 1);
+        let sel2 = ledger.select_for_width(&info, 1).unwrap();
         ledger.record(&sel2, 8).unwrap();
         // balanced [8, 8] -> 0
         assert_eq!(ledger.spread_index(), 0.0);
@@ -477,9 +487,9 @@ mod tests {
     #[test]
     fn count_range_tracks_extremes() {
         let info = toy_info();
-        let mut ledger = BlockLedger::new(&info);
+        let mut ledger = BlockLedger::new(&info).unwrap();
         assert_eq!(ledger.count_range(), (0, 0));
-        let sel = ledger.select_for_width(&info, 1);
+        let sel = ledger.select_for_width(&info, 1).unwrap();
         ledger.record(&sel, 9).unwrap();
         assert_eq!(ledger.count_range(), (0, 9));
     }

@@ -25,6 +25,12 @@
 //! one composed update upward (`hierarchy`), keeping the root's
 //! aggregation fan-in at O(E) instead of O(cohort).
 
+// The determinism layers promise typed errors, never panics: promote
+// slice-index panics to clippy warnings here (CI denies warnings);
+// hlint rule P1 enforces the same contract with per-line reasons.
+#![warn(clippy::indexing_slicing)]
+
+
 pub mod aggregate;
 pub mod assignment;
 pub mod client;

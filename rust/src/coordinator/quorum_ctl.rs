@@ -163,6 +163,8 @@ impl QuorumController {
     /// non-decreasing in the observed staleness index; a spread-free
     /// cohort (all completions within `spread_min` of the maximum)
     /// always yields K = n.
+    #[allow(clippy::indexing_slicing)]
+    // hlint::allow(panic_path, item): `sorted` has `n = completions.len()` entries (the empty case returns early) and every candidate index stays in `k_min.clamp(1, n)..n`
     pub fn decide(&mut self, completions: &[f64], sig: &QuorumSignals) -> QuorumDecision {
         let n = completions.len().max(1);
         let budget = staleness_budget(self.cfg.epsilon, sig.l, sig.beta_sq, self.cfg.margin_frac);

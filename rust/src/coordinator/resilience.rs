@@ -270,6 +270,21 @@ pub fn resolve_fault(
     Ok(resolution)
 }
 
+/// Upload bytes a stamped fault re-bills on top of the planned frame: a
+/// *recovered* `corrupt` fault means the client's upload frame failed its
+/// integrity check and every retry re-sent the full frame, so the task's
+/// measured traffic grows by `retries × up_bytes`. Exec retries re-run
+/// compute without re-uploading, partitions stall delivery of the one
+/// frame already in flight, and an unrecovered fault never completes its
+/// upload — all of those re-bill nothing.
+pub fn rebill_for(stamp: &FaultStamp, up_bytes: usize) -> usize {
+    if stamp.recovered && stamp.event.class == FaultClass::Corrupt {
+        up_bytes.saturating_mul(stamp.retries as usize)
+    } else {
+        0
+    }
+}
+
 /// Per-class fault counters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct ClassCounts {
@@ -297,6 +312,9 @@ pub struct ResilienceLedger {
     pub partition: ClassCounts,
     /// tasks dispatched while fault injection was on (rate denominator)
     pub dispatched: u64,
+    /// upload bytes re-billed for corrupt-frame retransmissions
+    /// ([`rebill_for`]) — the traffic accounts' share of fault recovery
+    pub rebilled_bytes: u64,
 }
 
 impl ResilienceLedger {
@@ -345,6 +363,7 @@ impl ResilienceLedger {
             ("corrupt", class_obj(&self.corrupt)),
             ("partition", class_obj(&self.partition)),
             ("dispatched", Json::from(self.dispatched)),
+            ("rebilled_bytes", Json::from(self.rebilled_bytes)),
             ("observed_fault_rate", Json::from(self.observed_rate())),
         ])
     }
@@ -383,6 +402,13 @@ impl FaultsCtl {
         if !self.is_off() {
             self.ledger.dispatched += tasks as u64;
         }
+    }
+
+    /// Book corrupt-retransmission traffic ([`rebill_for`]) into the
+    /// ledger. An order-independent sum like every other counter, so any
+    /// dispatch interleaving books the same total.
+    pub fn note_rebilled(&mut self, bytes: u64) {
+        self.ledger.rebilled_bytes += bytes;
     }
 
     /// Draw and resolve the fault (if any) for one dispatched task,

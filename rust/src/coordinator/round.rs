@@ -316,6 +316,15 @@ pub struct LocalTask {
     /// ([`crate::codec::upload_bytes`]) under the wire modes — the same
     /// number the planner priced ν from
     pub up_bytes: usize,
+    /// extra upload bytes billed for fault-recovery retransmissions:
+    /// a recovered `corrupt` fault re-sends the frame once per retry, and
+    /// each retransmission is real uplink traffic (PR 8 follow-up).
+    /// Stamped by [`FlEnv::stamp_faults`] (`retries × up_bytes` for a
+    /// recovered corrupt stamp, 0 otherwise) — schemes always construct
+    /// tasks with 0. Kept separate from [`LocalTask::up_bytes`] so the
+    /// planned-frame-length check ([`CodecError::PlannedSizeDrift`])
+    /// still compares single-frame sizes.
+    pub rebill_bytes: usize,
     /// wire-mode frame identity; `None` under `--codec analytic`, where
     /// the update never touches the codec and the run stays
     /// byte-identical to the pre-codec repo
@@ -362,7 +371,9 @@ pub struct TaskOutcome {
     pub tau: usize,
     /// broadcast (downlink) bytes — see [`LocalTask::bytes`]
     pub bytes: usize,
-    /// upload (uplink) bytes actually billed — see [`LocalTask::up_bytes`]
+    /// upload (uplink) bytes actually billed: the planned frame
+    /// ([`LocalTask::up_bytes`]) plus any fault-recovery retransmissions
+    /// ([`LocalTask::rebill_bytes`])
     pub up_bytes: usize,
     pub completion: f64,
     pub result: LocalResult,
@@ -406,8 +417,8 @@ pub enum TaskFate {
 
 fn exec_task(engine: &Engine, task: LocalTask) -> Result<TaskFate> {
     let LocalTask {
-        client, p, tau, lr, train_exec, probe_exec, payload, mut stream, bytes, up_bytes, wire,
-        completion, drop_at, fault,
+        client, p, tau, lr, train_exec, probe_exec, payload, mut stream, bytes, up_bytes,
+        rebill_bytes, wire, completion, drop_at, fault,
     } = task;
     if let Some(drop_time) = drop_at {
         // the client vanished: its broadcast is already out, its result
@@ -467,6 +478,9 @@ fn exec_task(engine: &Engine, task: LocalTask) -> Result<TaskFate> {
         }
         result.params = codec::decode_update(&buf)?.tensors;
     }
+    // billed upload = the planned frame plus any fault-recovery
+    // retransmissions stamped onto the task (PR 8 follow-up)
+    let up_bytes = up_bytes + rebill_bytes;
     Ok(TaskFate::Done(TaskOutcome { client, p, tau, bytes, up_bytes, completion, result }))
 }
 
@@ -521,8 +535,13 @@ impl TaskQueue {
     }
 
     /// Enqueue one round's tasks (assignment order) under sequence `seq`.
+    ///
+    /// Lock poisoning is recovered, not propagated: a worker panicking
+    /// with the queue lock held leaves `QueueState` (a plain deque +
+    /// flag) fully valid, and the panic itself already travels the
+    /// completion channel as a typed [`EnginePanic`].
     fn push_round(&self, seq: usize, tasks: Vec<LocalTask>) {
-        let mut st = self.state.lock().expect("task queue poisoned");
+        let mut st = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         for (index, task) in tasks.into_iter().enumerate() {
             st.tasks.push_back(Dispatch { seq, index, task });
         }
@@ -532,14 +551,14 @@ impl TaskQueue {
 
     /// No more work will ever arrive; blocked workers drain and exit.
     fn close(&self) {
-        self.state.lock().expect("task queue poisoned").closed = true;
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner).closed = true;
         self.ready.notify_all();
     }
 
     /// Next task, blocking while the queue is open but empty; `None` once
     /// it is closed and drained.
     fn pop(&self) -> Option<Dispatch> {
-        let mut st = self.state.lock().expect("task queue poisoned");
+        let mut st = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         loop {
             if let Some(d) = st.tasks.pop_front() {
                 return Some(d);
@@ -547,7 +566,7 @@ impl TaskQueue {
             if st.closed {
                 return None;
             }
-            st = self.ready.wait(st).expect("task queue poisoned");
+            st = self.ready.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
         }
     }
 }
@@ -592,8 +611,8 @@ impl Drop for CloseOnDrop<'_> {
 /// fates in assignment order.
 fn into_ordered(slots: Vec<Option<Result<TaskFate>>>) -> Result<Vec<TaskFate>> {
     let mut out = Vec::with_capacity(slots.len());
-    for slot in slots {
-        out.push(slot.expect("completion missing for a dispatched task")?);
+    for (index, slot) in slots.into_iter().enumerate() {
+        out.push(slot.ok_or_else(|| anyhow!("completion missing for dispatched task {index}"))??);
     }
     Ok(out)
 }
@@ -623,13 +642,12 @@ fn collect_completions(
                 c.seq
             ));
         }
-        if c.index >= expected {
+        let Some(slot) = slots.get_mut(c.index) else {
             return Err(anyhow!(
                 "completion index {} out of range for a {expected}-task round",
                 c.index
             ));
-        }
-        let slot = &mut slots[c.index];
+        };
         if slot.is_some() {
             return Err(anyhow!("duplicate completion for round {seq} task {}", c.index));
         }
@@ -934,6 +952,8 @@ fn validate_completions(tasks: &[LocalTask]) -> Result<()> {
 /// and the comparator is total either way — no panic path. Crate-visible
 /// so the hierarchical planner ranks edge sub-cohorts (and edge
 /// arrivals) with exactly this rule.
+#[allow(clippy::indexing_slicing)]
+// hlint::allow(panic_path, item): the sort comparator only sees indices drawn from `0..completions.len()`
 pub(crate) fn quorum_members(completions: &[f64], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..completions.len()).collect();
     idx.sort_by(|&a, &b| completions[a].total_cmp(&completions[b]).then(a.cmp(&b)));
@@ -952,6 +972,8 @@ pub(crate) fn quorum_members(completions: &[f64], k: usize) -> Vec<usize> {
 /// single prebuilt survivor list (so the K decision and the ranking can
 /// never desynchronize); this standalone form is the property-test
 /// surface.
+#[allow(clippy::indexing_slicing)]
+// hlint::allow(panic_path, item): `survivors` holds indices into `completions`, and `quorum_members` returns indices into its own input
 pub fn quorum_members_surviving(completions: &[f64], dropped: &[bool], k: usize) -> Vec<usize> {
     debug_assert_eq!(completions.len(), dropped.len());
     let survivors: Vec<usize> =
@@ -968,7 +990,13 @@ pub fn quorum_members_surviving(completions: &[f64], dropped: &[bool], k: usize)
 /// validation).
 #[derive(Default)]
 struct QuorumState {
-    arrived: HashMap<(usize, usize), Result<TaskFate>>,
+    /// `BTreeMap`, not `HashMap`: `drain` walks this map to surface the
+    /// earliest-(round, index) straggler failure, and an ordered map
+    /// makes that walk deterministic by construction (hlint rule D3) —
+    /// no collect-and-sort step whose omission could silently reintroduce
+    /// hash-order dependence. Arrival-order independence is pinned by
+    /// `quorum_state_drain_order_is_arrival_independent`.
+    arrived: std::collections::BTreeMap<(usize, usize), Result<TaskFate>>,
     /// received-or-consumed flag per [seq][index], for duplicate detection
     received: Vec<Vec<bool>>,
     /// dispatched completions not yet received
@@ -1015,14 +1043,12 @@ impl QuorumState {
             let c = rx.recv().map_err(|_| anyhow!("worker pool died during drain"))?;
             self.file(c)?;
         }
-        let mut keys: Vec<(usize, usize)> = self.arrived.keys().copied().collect();
-        keys.sort_unstable();
-        for key in keys {
-            if let Some(outcome) = self.arrived.remove(&key) {
-                outcome.map_err(|e| {
-                    anyhow!("straggler of round {} (task {}) failed: {e}", key.0, key.1)
-                })?;
-            }
+        // ordered iteration replaces the old collect-and-sort: same
+        // earliest-(round, index) failure, by map invariant
+        for (key, outcome) in std::mem::take(&mut self.arrived) {
+            outcome.map_err(|e| {
+                anyhow!("straggler of round {} (task {}) failed: {e}", key.0, key.1)
+            })?;
         }
         Ok(())
     }
@@ -1072,7 +1098,8 @@ impl QuorumState {
 
 /// Coordinator body of [`RoundDriver::run_quorum`] (module docs,
 /// "Semi-async quorum rounds" and "Adaptive quorum control").
-#[allow(clippy::too_many_arguments)]
+// hlint::allow(panic_path, item): every index below is either `i < n = meta.*.len()` (RoundMeta's parallel vectors) or drawn from `survivors_idx`, whose entries are `0..n` by construction
+#[allow(clippy::too_many_arguments, clippy::indexing_slicing)]
 fn drive_quorum(
     queue: &TaskQueue,
     rx: &Receiver<Completion>,
@@ -1268,8 +1295,8 @@ fn drive_quorum(
             )?
         };
         reports.push(report);
-        if let Some(cb) = observer.as_mut() {
-            if !cb(&*env, &*strategy, reports.last().expect("report just pushed"))? {
+        if let (Some(cb), Some(report)) = (observer.as_mut(), reports.last()) {
+            if !cb(&*env, &*strategy, report)? {
                 return state.drain(rx);
             }
         }
@@ -1609,6 +1636,7 @@ mod tests {
             stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
             bytes: 0,
             up_bytes: 0,
+            rebill_bytes: 0,
             wire: None,
             completion: 0.0,
             drop_at: None,
@@ -1746,6 +1774,7 @@ mod tests {
             stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
             bytes: 0,
             up_bytes: 0,
+            rebill_bytes: 0,
             wire: None,
             completion,
             drop_at: None,
@@ -1797,6 +1826,7 @@ mod tests {
             stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
             bytes: 0,
             up_bytes: 0,
+            rebill_bytes: 0,
             wire: None,
             completion,
             drop_at: None,
@@ -1859,6 +1889,7 @@ mod tests {
             stream: BatchStream::Image(ImageLoader::new(set.clone(), vec![0, 1], 2, Rng::new(2))),
             bytes: 0,
             up_bytes: 0,
+            rebill_bytes: 0,
             wire: None,
             completion,
             drop_at: None,
@@ -1975,5 +2006,37 @@ mod tests {
         let fate = TaskFate::Dropped(DroppedTask { client: 3, bytes: 0, drop_time: 0.2 });
         tx.send(Completion { seq: 0, index: 1, outcome: Ok(fate) }).unwrap();
         state.drain(&rx).unwrap();
+    }
+
+    #[test]
+    fn quorum_state_drain_order_is_arrival_independent() {
+        // bit-exactness pin for the HashMap → BTreeMap conversion of
+        // `QuorumState::arrived`: with two failed stragglers, drain must
+        // surface the earliest-(round, index) failure no matter which
+        // arrival order filed them. Under the old HashMap this held only
+        // because of an explicit collect-and-sort; the BTreeMap makes it
+        // structural — this test keeps anyone from regressing it back to
+        // an unordered map.
+        let run = |arrivals: &[(usize, usize)]| -> String {
+            let (tx, rx) = channel::<Completion>();
+            let mut state = QuorumState::default();
+            state.register_round(2); // round 0
+            state.register_round(2); // round 1
+            for &(seq, index) in arrivals {
+                let outcome = if seq == 0 && index == 0 {
+                    done(9)
+                } else {
+                    Err(anyhow!("straggler {seq}/{index} died"))
+                };
+                tx.send(Completion { seq, index, outcome }).unwrap();
+            }
+            state.drain(&rx).unwrap_err().to_string()
+        };
+        let forward = run(&[(0, 0), (0, 1), (1, 0), (1, 1)]);
+        let reversed = run(&[(1, 1), (1, 0), (0, 1), (0, 0)]);
+        let shuffled = run(&[(1, 0), (0, 0), (1, 1), (0, 1)]);
+        assert!(forward.contains("straggler of round 0 (task 1)"), "got: {forward}");
+        assert_eq!(forward, reversed);
+        assert_eq!(forward, shuffled);
     }
 }

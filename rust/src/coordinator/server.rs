@@ -78,10 +78,11 @@ pub struct HeroesServer {
 }
 
 impl HeroesServer {
+    // hlint::allow(unkeyed_rng): construction-time model init draws from the run-seed cursor once — per-round draws go through the env's keyed RNGs
     pub fn new(info: &ModelInfo, cfg: &ExperimentConfig, rng: &mut Rng) -> Result<HeroesServer> {
         Ok(HeroesServer {
             global: ComposedGlobal::init(info, rng)?,
-            ledger: BlockLedger::new(info),
+            ledger: BlockLedger::new(info)?,
             tracker: EstimateTracker::new(0.3),
             ctrl: ControllerCfg {
                 mu_max: cfg.mu_max,
@@ -130,12 +131,12 @@ impl HeroesServer {
             for s in statuses {
                 let (p, mu) = assignment::assign_width(info, s.q_flops, self.ctrl.mu_max);
                 let up = crate::codec::upload_bytes(
-                    &info.composed_params[&p],
-                    info.bytes_composed[&p],
+                    info.composed_params_of(p)?,
+                    info.bytes_composed_of(p)?,
                     self.ctrl.codec,
                 );
                 let nu = s.link.upload_time(up);
-                let sel = self.ledger.select_for_width(info, p);
+                let sel = self.ledger.select_for_width(info, p)?;
                 self.ledger.record(&sel, self.tau_default as u64)?;
                 assignments.push(assignment::Assignment {
                     client: s.client,
@@ -189,13 +190,14 @@ impl HeroesServer {
                 train_exec: Manifest::train_name(&self.family, a.p, true),
                 probe_exec: probing.then(|| Manifest::probe_name(&self.family, a.p)),
                 payload: self.global.reduced_inputs(&env.info, a.p, &a.selection.blocks)?,
-                stream: env.batch_stream(a.client, self.round),
-                bytes: env.info.bytes_composed[&a.p],
+                stream: env.batch_stream(a.client, self.round)?,
+                bytes: env.info.bytes_composed_of(a.p)?,
                 up_bytes: crate::codec::upload_bytes(
-                    &env.info.composed_params[&a.p],
-                    env.info.bytes_composed[&a.p],
+                    env.info.composed_params_of(a.p)?,
+                    env.info.bytes_composed_of(a.p)?,
                     self.ctrl.codec,
                 ),
+                rebill_bytes: 0,
                 wire: self.ctrl.codec.encoding().map(|enc| WireTask {
                     scheme: scheme_id::HEROES,
                     round: self.round as u32,
@@ -240,7 +242,10 @@ impl HeroesServer {
             .iter()
             .position(|s| s.round == self.round)
             .ok_or_else(|| anyhow!("finish_round without a dispatched round"))?;
-        let slot = self.in_flight.remove(pos).expect("position just found");
+        let slot = self
+            .in_flight
+            .remove(pos)
+            .ok_or_else(|| anyhow!("finish_round without a dispatched round"))?;
         let plan = slot.plan;
         let info = env.info.clone();
         let mut acc = ComposedAccumulator::new(&info, &self.global);

@@ -78,6 +78,11 @@
 //! recorder output as the `resilience` ledger, and the adaptive
 //! quorum controller reads the observed fault rate as churn)
 
+// Outside the determinism layers (CONTRIBUTING.md): CLI surface,
+// report generation and dev tooling may panic on programmer error.
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+
 use anyhow::{anyhow, Result};
 use heroes::baselines::ALL_SCHEMES;
 use heroes::config::{ExperimentConfig, Scale};

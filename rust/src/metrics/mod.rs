@@ -2,6 +2,12 @@
 //! test accuracy, average waiting time, completion time (to target
 //! accuracy) and network traffic.
 
+// The determinism layers promise typed errors, never panics: promote
+// slice-index panics to clippy warnings here (CI denies warnings);
+// hlint rule P1 enforces the same contract with per-line reasons.
+#![warn(clippy::indexing_slicing)]
+
+
 pub mod recorder;
 
 pub use recorder::{Recorder, Sample};

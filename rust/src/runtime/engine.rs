@@ -164,17 +164,20 @@ impl Engine {
 
     /// Fetch (compiling at most once per name) the executable.
     fn compiled(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.read().expect("engine cache poisoned").get(name) {
+        // poisoned locks are recovered, not propagated: the guarded state
+        // (compile cache, gate map) stays valid across a panicking reader
+        use std::sync::PoisonError;
+        if let Some(exe) = self.cache.read().unwrap_or_else(PoisonError::into_inner).get(name) {
             return Ok(exe.clone());
         }
         // Miss: serialize per name so concurrent callers compile once.
         let gate = {
-            let mut compiling = self.compiling.lock().expect("compile-gate map poisoned");
+            let mut compiling = self.compiling.lock().unwrap_or_else(PoisonError::into_inner);
             compiling.entry(name.to_string()).or_default().clone()
         };
-        let _gate = gate.lock().expect("compile gate poisoned");
+        let _gate = gate.lock().unwrap_or_else(PoisonError::into_inner);
         // double-check under the gate: another thread may have won the race
-        if let Some(exe) = self.cache.read().expect("engine cache poisoned").get(name) {
+        if let Some(exe) = self.cache.read().unwrap_or_else(PoisonError::into_inner).get(name) {
             return Ok(exe.clone());
         }
         let spec = self.manifest.exec(name)?;
@@ -194,7 +197,7 @@ impl Engine {
         log::debug!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
         self.cache
             .write()
-            .expect("engine cache poisoned")
+            .unwrap_or_else(PoisonError::into_inner)
             .insert(name.to_string(), exe.clone());
         Ok(exe)
     }
@@ -241,7 +244,10 @@ impl Engine {
         let result = exe
             .execute::<xla::Literal>(&literals)
             .map_err(|e| anyhow!("executing {name}: {e}"))?;
-        let out_lit = result[0][0]
+        let out_lit = result
+            .first()
+            .and_then(|device| device.first())
+            .ok_or_else(|| anyhow!("{name}: runtime returned no output buffer"))?
             .to_literal_sync()
             .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
         self.stats.executions.fetch_add(1, Ordering::Relaxed);

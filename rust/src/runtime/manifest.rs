@@ -150,6 +150,25 @@ impl ModelInfo {
             .find(|l| l.name == name)
             .ok_or_else(|| anyhow!("no layer `{name}` in {}", self.family))
     }
+
+    /// Composed-model param specs at width `p` — the fallible accessor
+    /// the planners use instead of indexing [`ModelInfo::composed_params`]
+    /// (a width outside `1..=cap_p` is a planner bug surfaced as a typed
+    /// error, not a panic).
+    pub fn composed_params_of(&self, p: usize) -> Result<&[ParamSpec]> {
+        self.composed_params
+            .get(&p)
+            .map(Vec::as_slice)
+            .ok_or_else(|| anyhow!("no composed params for width {p} in {}", self.family))
+    }
+
+    /// Composed upload bytes at width `p` (see [`ModelInfo::composed_params_of`]).
+    pub fn bytes_composed_of(&self, p: usize) -> Result<usize> {
+        self.bytes_composed
+            .get(&p)
+            .copied()
+            .ok_or_else(|| anyhow!("no composed byte size for width {p} in {}", self.family))
+    }
 }
 
 /// Parsed manifest: all families + all executables.

@@ -2,6 +2,12 @@
 //! artifacts (`artifacts/*.hlo.txt`). See DESIGN.md — rust owns the entire
 //! request path; python only ever ran at `make artifacts` time.
 
+// The determinism layers promise typed errors, never panics: promote
+// slice-index panics to clippy warnings here (CI denies warnings);
+// hlint rule P1 enforces the same contract with per-line reasons.
+#![warn(clippy::indexing_slicing)]
+
+
 pub mod engine;
 pub mod manifest;
 pub mod pool;

@@ -88,17 +88,23 @@ impl EnginePool {
 
     /// The engine pinned to round worker `worker` (wraps when the pool is
     /// smaller than the worker count).
+    #[allow(clippy::indexing_slicing)]
     pub fn engine(&self, worker: usize) -> &Engine {
+        // hlint::allow(panic_path): index is `% len` and construction guarantees ≥ 1 engine
         &self.engines[worker % self.engines.len()]
     }
 
     /// The coordinator's engine (evaluation, serial dispatch, benches).
+    #[allow(clippy::indexing_slicing)]
     pub fn primary(&self) -> &Engine {
+        // hlint::allow(panic_path): construction guarantees ≥ 1 engine
         &self.engines[0]
     }
 
     /// The shared manifest.
+    #[allow(clippy::indexing_slicing)]
     pub fn manifest(&self) -> &Manifest {
+        // hlint::allow(panic_path): construction guarantees ≥ 1 engine
         self.engines[0].manifest()
     }
 

@@ -22,6 +22,7 @@ impl VirtualClock {
 
     /// Advance by `dt` seconds (panics on negative dt — a scheduling bug).
     pub fn advance(&mut self, dt: f64) {
+        // hlint::allow(panic_path): a backwards clock is a scheduler bug, not a recoverable input — pinned by `clock_rejects_negative`
         assert!(dt >= 0.0, "clock moved backwards by {dt}");
         self.now += dt;
     }
@@ -52,7 +53,7 @@ impl TrafficMeter {
     }
 
     pub fn total_gb(&self) -> f64 {
-        self.total_bytes() as f64 / 1e9
+        crate::util::cast::bytes_to_f64(self.total_bytes()) / 1e9
     }
 }
 

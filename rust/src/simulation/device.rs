@@ -52,10 +52,12 @@ impl DeviceClass {
 #[derive(Debug, Clone)]
 pub struct ClientDevice {
     pub class: DeviceClass,
+    // hlint::allow(unkeyed_rng): the eager fleet's per-client cursor, forked once from the run seed at construction — byte-compat with the pre-population goldens; the lazy path derives keyed RNGs instead
     rng: Rng,
 }
 
 impl ClientDevice {
+    // hlint::allow(unkeyed_rng): constructor takes ownership of the forked per-client cursor (see field note above)
     pub fn new(class: DeviceClass, rng: Rng) -> ClientDevice {
         ClientDevice { class, rng }
     }
@@ -91,10 +93,13 @@ impl DeviceFleet {
         (DeviceClass::AgxXavier, 0.1),
     ];
 
+    #[allow(clippy::indexing_slicing)]
+    // hlint::allow(unkeyed_rng): eager-fleet construction draws the class mix from the run-seed cursor once, up front — byte-compat pinned by the pre-population goldens
     pub fn new(n_clients: usize, mix: &[(DeviceClass, f64)], rng: &mut Rng) -> DeviceFleet {
         let weights: Vec<f64> = mix.iter().map(|(_, w)| *w).collect();
         let devices = (0..n_clients)
             .map(|i| {
+                // hlint::allow(panic_path): `Rng::weighted` returns an index < weights.len() == mix.len() by contract
                 let class = mix[rng.weighted(&weights)].0;
                 ClientDevice::new(class, rng.fork(i as u64))
             })
@@ -102,6 +107,7 @@ impl DeviceFleet {
         DeviceFleet { devices }
     }
 
+    // hlint::allow(unkeyed_rng): thin wrapper over `new` — same construction-time contract
     pub fn default_fleet(n_clients: usize, rng: &mut Rng) -> DeviceFleet {
         Self::new(n_clients, &Self::DEFAULT_MIX, rng)
     }

@@ -72,6 +72,12 @@
 //! contract for cohorts, links and shards is documented on the
 //! [`population`] module itself.
 
+// The determinism layers promise typed errors, never panics: promote
+// slice-index panics to clippy warnings here (CI denies warnings);
+// hlint rule P1 enforces the same contract with per-line reasons.
+#![warn(clippy::indexing_slicing)]
+
+
 pub mod clock;
 pub mod device;
 pub mod faults;

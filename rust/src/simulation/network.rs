@@ -34,7 +34,7 @@ fn transfer_time(bytes: usize, bps: f64) -> f64 {
     if !bps.is_finite() || bps <= 0.0 {
         return MAX_TRANSFER_SECS;
     }
-    (bytes as f64 / bps).min(MAX_TRANSFER_SECS)
+    (crate::util::cast::bytes_to_f64(bytes as u64) / bps).min(MAX_TRANSFER_SECS)
 }
 
 /// One round's sampled link for a client.
@@ -76,6 +76,7 @@ impl Default for NetworkModel {
 }
 
 impl NetworkModel {
+    // hlint::allow(unkeyed_rng): the eager fleet path threads per-client forked cursors here; the lazy path passes a per-event keyed link RNG — byte-compat pinned by goldens
     pub fn sample(&self, rng: &mut Rng) -> LinkSample {
         LinkSample {
             up_bps: rng.uniform_in(self.up_lo_mbps, self.up_hi_mbps) * MBIT,
@@ -86,6 +87,7 @@ impl NetworkModel {
     /// [`NetworkModel::sample`] under a trace multiplier: both directions
     /// scaled by `scale`. Consumes the RNG identically to the unscaled
     /// path (the determinism contract cares about draw counts).
+    // hlint::allow(unkeyed_rng): same cursor-threading contract as `sample` — the caller owns keying; draw-count lockstep is the pinned invariant
     pub fn sample_scaled(&self, rng: &mut Rng, scale: f64) -> LinkSample {
         let base = self.sample(rng);
         LinkSample { up_bps: base.up_bps * scale, down_bps: base.down_bps * scale }
@@ -114,7 +116,9 @@ impl NetworkTrace {
     }
 
     /// The multiplier of `round` (cyclic).
+    #[allow(clippy::indexing_slicing)]
     pub fn scale(&self, round: usize) -> f64 {
+        // hlint::allow(panic_path): index is `% len` and construction guarantees a non-empty trace
         self.scales[round % self.scales.len()]
     }
 

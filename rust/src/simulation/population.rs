@@ -44,7 +44,8 @@
 
 use crate::simulation::device::{DeviceClass, DeviceFleet};
 use crate::util::rng::Rng;
-use std::collections::{HashMap, HashSet};
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 /// Key-mix salts for per-client/per-round derivations (same idiom as the
 /// scenario engine's event salts — distinct constants per quantity).
@@ -106,11 +107,15 @@ pub struct Population {
 }
 
 impl Population {
-    pub fn new(spec: PopulationSpec) -> Population {
-        assert!(spec.n_clients > 0, "population must be non-empty");
-        assert!(!spec.mix.is_empty(), "population mix must be non-empty");
+    pub fn new(spec: PopulationSpec) -> Result<Population> {
+        if spec.n_clients == 0 {
+            return Err(anyhow!("population must be non-empty"));
+        }
+        if spec.mix.is_empty() {
+            return Err(anyhow!("population mix must be non-empty"));
+        }
         let weights = spec.mix.iter().map(|(_, w)| *w).collect();
-        Population { spec, weights }
+        Ok(Population { spec, weights })
     }
 
     pub fn len(&self) -> usize {
@@ -127,8 +132,10 @@ impl Population {
 
     /// The client's capability tier — same weighted draw the eager
     /// `DeviceFleet` makes, keyed instead of sequential.
+    #[allow(clippy::indexing_slicing)]
     pub fn device_class(&self, client: usize) -> DeviceClass {
         let mut rng = keyed_rng(self.spec.seed, POP_SALT_CLASS, 0, client as u64);
+        // hlint::allow(panic_path): `Rng::weighted` returns an index < weights.len() == mix.len() by contract
         self.spec.mix[rng.weighted(&self.weights)].0
     }
 
@@ -208,19 +215,21 @@ impl Population {
 /// [`Rng::sample_distinct`] (same `below(n - i)` draw per step, same
 /// output prefix) without ever allocating the `(0..n)` vector — O(k)
 /// instead of O(population).
+// hlint::allow(unkeyed_rng): callers pass the per-round keyed cohort RNG — this fn mirrors `Rng::sample_distinct`'s draw-stream contract and owns no cursor
 pub fn sparse_sample_distinct(n: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
+    // hlint::allow(panic_path): mirrors `Rng::sample_distinct`'s own contract — callers clamp k ≤ n, so a violation is a caller bug, not input
     assert!(k <= n, "cannot sample {k} from {n}");
-    // map[i] = value currently at virtual position i (identity if absent)
-    let mut map: HashMap<usize, usize> = HashMap::with_capacity(2 * k);
-    let at = |map: &HashMap<usize, usize>, i: usize| map.get(&i).copied().unwrap_or(i);
+    // disp[i] = value currently at virtual position i (identity if absent)
+    let mut disp: HashMap<usize, usize> = HashMap::with_capacity(2 * k);
+    let at = |disp: &HashMap<usize, usize>, i: usize| disp.get(&i).copied().unwrap_or(i);
     let mut out = Vec::with_capacity(k);
     for i in 0..k {
         let j = i + rng.below(n - i);
-        let vi = at(&map, i);
-        let vj = at(&map, j);
+        let vi = at(&disp, i);
+        let vj = at(&disp, j);
         out.push(vj);
-        map.insert(j, vi);
-        map.insert(i, vj);
+        disp.insert(j, vi);
+        disp.insert(i, vj);
     }
     out
 }
@@ -245,18 +254,25 @@ pub struct CacheStats {
 ///
 /// Values are handed out by clone; callers store `Arc`s so an evicted
 /// shard stays alive for any in-flight stream that still holds it.
+///
+/// Keyed by `BTreeMap` (hlint D3): access ticks are unique so the LRU
+/// victim is unique either way (pinned by the reference-model test
+/// below), but the ordered map keeps the eviction scan — and any future
+/// iteration — deterministic by construction rather than by accident.
 #[derive(Debug)]
 pub struct LazyCache<T> {
     capacity: usize,
     tick: u64,
-    map: HashMap<usize, (u64, T)>,
+    map: BTreeMap<usize, (u64, T)>,
     stats: CacheStats,
 }
 
 impl<T: Clone> LazyCache<T> {
-    pub fn new(capacity: usize) -> LazyCache<T> {
-        assert!(capacity > 0, "cache capacity must be positive");
-        LazyCache { capacity, tick: 0, map: HashMap::new(), stats: CacheStats::default() }
+    pub fn new(capacity: usize) -> Result<LazyCache<T>> {
+        if capacity == 0 {
+            return Err(anyhow!("cache capacity must be positive"));
+        }
+        Ok(LazyCache { capacity, tick: 0, map: BTreeMap::new(), stats: CacheStats::default() })
     }
 
     pub fn capacity(&self) -> usize {
@@ -324,7 +340,7 @@ mod tests {
 
     #[test]
     fn derivations_are_order_independent() {
-        let pop = Population::new(PopulationSpec::default_mix(1000, 42));
+        let pop = Population::new(PopulationSpec::default_mix(1000, 42)).unwrap();
         // touch in one order...
         let fwd: Vec<_> = (0..100).map(|c| (pop.device_class(c), pop.flops(c, 3))).collect();
         // ...and the reverse; same bytes
@@ -339,7 +355,7 @@ mod tests {
 
     #[test]
     fn class_mix_matches_priors() {
-        let pop = Population::new(PopulationSpec::default_mix(4000, 9));
+        let pop = Population::new(PopulationSpec::default_mix(4000, 9)).unwrap();
         let frac = |want: DeviceClass| {
             (0..4000).filter(|&c| pop.device_class(c) == want).count() as f64 / 4000.0
         };
@@ -349,7 +365,7 @@ mod tests {
 
     #[test]
     fn flops_stay_in_class_band() {
-        let pop = Population::new(PopulationSpec::default_mix(100, 7));
+        let pop = Population::new(PopulationSpec::default_mix(100, 7)).unwrap();
         for c in 0..100 {
             let mean = pop.device_class(c).mean_flops();
             for r in 0..5 {
@@ -361,7 +377,7 @@ mod tests {
 
     #[test]
     fn shard_spec_jitters_around_base() {
-        let pop = Population::new(PopulationSpec::default_mix(500, 11));
+        let pop = Population::new(PopulationSpec::default_mix(500, 11)).unwrap();
         let mut sum = 0.0;
         for c in 0..500 {
             let s = pop.shard_spec(c, 60);
@@ -375,7 +391,7 @@ mod tests {
 
     #[test]
     fn cohort_is_distinct_in_range_and_deterministic() {
-        let pop = Population::new(PopulationSpec::default_mix(100_000, 5));
+        let pop = Population::new(PopulationSpec::default_mix(100_000, 5)).unwrap();
         for round in 0..4 {
             let a = pop.sample_cohort(round, 16, |_| true);
             let b = pop.sample_cohort(round, 16, |_| true);
@@ -393,7 +409,7 @@ mod tests {
 
     #[test]
     fn cohort_respects_availability() {
-        let pop = Population::new(PopulationSpec::default_mix(10_000, 6));
+        let pop = Population::new(PopulationSpec::default_mix(10_000, 6)).unwrap();
         let avail = |c: usize| c % 3 == 0;
         let cohort = pop.sample_cohort(2, 32, avail);
         assert_eq!(cohort.len(), 32);
@@ -406,7 +422,7 @@ mod tests {
 
     #[test]
     fn cohort_thin_availability_comes_back_short_not_hung() {
-        let pop = Population::new(PopulationSpec::default_mix(1000, 8));
+        let pop = Population::new(PopulationSpec::default_mix(1000, 8)).unwrap();
         let cohort = pop.sample_cohort(0, 16, |c| c == 17);
         assert!(cohort.len() <= 1);
         assert!(cohort.iter().all(|&c| c == 17));
@@ -414,7 +430,7 @@ mod tests {
 
     #[test]
     fn cache_counts_and_bounds() {
-        let mut cache: LazyCache<usize> = LazyCache::new(4);
+        let mut cache: LazyCache<usize> = LazyCache::new(4).unwrap();
         for round in 0..10 {
             for key in [round, round + 1, round + 2] {
                 let v = cache.get_or_insert_with(key, || key * 10);
@@ -433,7 +449,7 @@ mod tests {
 
     #[test]
     fn cache_rebuild_after_eviction_is_invisible() {
-        let mut cache: LazyCache<u64> = LazyCache::new(2);
+        let mut cache: LazyCache<u64> = LazyCache::new(2).unwrap();
         let build = |k: usize| Rng::new(k as u64).next_u64();
         let first = cache.get_or_insert_with(7, || build(7));
         // push 7 out...
@@ -444,5 +460,51 @@ mod tests {
         let again = cache.get_or_insert_with(7, || build(7));
         assert_eq!(first, again);
         assert!(cache.stats().evictions >= 2);
+    }
+
+    #[test]
+    fn lru_eviction_matches_reference_model() {
+        // bit-exactness pin for the HashMap → BTreeMap conversion: access
+        // ticks are unique, so the LRU victim — and with it every hit,
+        // miss and eviction downstream — must match a naive reference
+        // implementation step for step, independent of map internals
+        struct RefLru {
+            cap: usize,
+            tick: u64,
+            entries: Vec<(usize, u64, usize)>, // (key, last_used, value)
+        }
+        impl RefLru {
+            fn get(&mut self, key: usize, build: impl FnOnce() -> usize) -> (usize, bool) {
+                self.tick += 1;
+                if let Some(e) = self.entries.iter_mut().find(|e| e.0 == key) {
+                    e.1 = self.tick;
+                    return (e.2, true);
+                }
+                if self.entries.len() >= self.cap {
+                    let (pos, _) =
+                        self.entries.iter().enumerate().min_by_key(|(_, e)| e.1).unwrap();
+                    self.entries.remove(pos);
+                }
+                let v = build();
+                self.entries.push((key, self.tick, v));
+                (v, false)
+            }
+        }
+        let mut cache: LazyCache<usize> = LazyCache::new(3).unwrap();
+        let mut reference = RefLru { cap: 3, tick: 0, entries: Vec::new() };
+        let mut ref_hits = 0usize;
+        let mut rng = Rng::new(0xE41C);
+        for step in 0..500 {
+            let key = rng.below(8);
+            let (want, hit) = reference.get(key, || key * 1000 + 7);
+            let got = cache.get_or_insert_with(key, || key * 1000 + 7);
+            assert_eq!(got, want, "step {step} key {key}");
+            ref_hits += usize::from(hit);
+        }
+        let st = cache.stats();
+        assert_eq!(st.hits, ref_hits, "eviction victims diverged from the reference LRU");
+        assert_eq!(st.materializations, 500 - ref_hits);
+        assert_eq!(cache.resident(), reference.entries.len());
+        assert_eq!(st.materializations, st.evictions + cache.resident());
     }
 }

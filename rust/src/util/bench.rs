@@ -6,6 +6,11 @@
 //! criterion-like one-line format. Also used by the EXPERIMENTS.md §Perf
 //! iteration loop to keep before/after numbers comparable.
 
+// Outside the determinism layers (CONTRIBUTING.md): CLI surface,
+// report generation and dev tooling may panic on programmer error.
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+
 use std::time::{Duration, Instant};
 
 /// One benchmark's collected samples (seconds per iteration).

@@ -1,0 +1,33 @@
+//! Audited numeric casts for byte counters.
+//!
+//! Traffic accounting keeps byte counts in `u64` end to end (the PR 7
+//! recorder bug was exactly a counter narrowing through an unchecked
+//! `as` cast — hlint rule C1 now flags that class). The one legitimate
+//! exit from the u64 domain is a *value-preserving* conversion to `f64`
+//! for rate math and reporting, and it lives here so the cast sites are
+//! auditable in one place.
+
+/// Exact `f64` view of a byte counter.
+///
+/// `f64` holds every integer up to 2^53 exactly — about 9 petabytes,
+/// far above any traffic total this simulator can book (a debug build
+/// checks the bound). Use this instead of `as f64` on `*_bytes` /
+/// traffic counters; widening casts (`usize as u64`) stay legal.
+pub fn bytes_to_f64(bytes: u64) -> f64 {
+    debug_assert!(bytes <= (1u64 << 53), "byte counter exceeds exact f64 range");
+    // hlint::allow(truncating_cast): this is the audited conversion point — value-preserving below 2^53, checked above
+    bytes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_at_boundaries() {
+        assert_eq!(bytes_to_f64(0), 0.0);
+        assert_eq!(bytes_to_f64(1), 1.0);
+        assert_eq!(bytes_to_f64((1 << 53) - 1), 9_007_199_254_740_991.0);
+        assert_eq!(bytes_to_f64(123_456_789_012), 123_456_789_012.0);
+    }
+}

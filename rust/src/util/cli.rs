@@ -4,6 +4,11 @@
 //! positional arguments. The launcher (`rust/src/main.rs`), every example
 //! and every bench use this.
 
+// Outside the determinism layers (CONTRIBUTING.md): CLI surface,
+// report generation and dev tooling may panic on programmer error.
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+
 use std::collections::BTreeMap;
 
 /// Parsed command line: positionals + `--key value` options.

@@ -24,6 +24,11 @@
 //!   so `parse("42") == Json::Num(42.0)` and round-trips through the
 //!   serializer (which emits the same text for both) stay `==`.
 
+// Outside the determinism layers (CONTRIBUTING.md): CLI surface,
+// report generation and dev tooling may panic on programmer error.
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+
 use std::collections::BTreeMap;
 use std::fmt;
 use std::io::{self, Write};

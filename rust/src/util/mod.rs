@@ -3,6 +3,7 @@
 //! bench-lite and prop-lite.
 
 pub mod bench;
+pub mod cast;
 pub mod cli;
 /// crate-private: the public JSON surface is the `crate::codec::json`
 /// facade (re-exported value type + parser, streaming writers)

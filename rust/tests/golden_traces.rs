@@ -15,6 +15,11 @@
 //! Needs artifacts (`make artifacts`); skips gracefully without them,
 //! like every PJRT-dependent test.
 
+// Test/bench/example code: panicking on setup failure is idiomatic
+// (CONTRIBUTING.md — the error-handling contract binds library code).
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::indexing_slicing)]
+
+
 use heroes::baselines::{make_strategy, Strategy};
 use heroes::codec::json::Json;
 use heroes::codec::CodecCfg;

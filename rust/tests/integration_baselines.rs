@@ -2,6 +2,11 @@
 //! skips gracefully otherwise), plus cross-scheme comparisons that
 //! encode the paper's qualitative claims at miniature scale.
 
+// Test/bench/example code: panicking on setup failure is idiomatic
+// (CONTRIBUTING.md — the error-handling contract binds library code).
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::indexing_slicing)]
+
+
 use heroes::baselines::{make_strategy, Strategy};
 use heroes::config::{ExperimentConfig, Scale};
 use heroes::coordinator::env::FlEnv;

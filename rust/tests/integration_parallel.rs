@@ -21,6 +21,11 @@
 //! PJRT-dependent tests require `make artifacts` and skip gracefully
 //! otherwise.
 
+// Test/bench/example code: panicking on setup failure is idiomatic
+// (CONTRIBUTING.md — the error-handling contract binds library code).
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::indexing_slicing)]
+
+
 use heroes::baselines::{make_strategy, Strategy};
 use heroes::config::{DropoutPolicy, ExperimentConfig, Scale};
 use heroes::coordinator::env::FlEnv;
@@ -391,8 +396,8 @@ fn pool_engines_execute_identically() {
     let info = pool.manifest().model("cnn").unwrap().clone();
     let mut rng = Rng::new(2);
     let global = ComposedGlobal::init(&info, &mut rng).unwrap();
-    let ledger = heroes::coordinator::ledger::BlockLedger::new(&info);
-    let sel = ledger.select_for_width(&info, 1);
+    let ledger = heroes::coordinator::ledger::BlockLedger::new(&info).unwrap();
+    let sel = ledger.select_for_width(&info, 1).unwrap();
     let params = global.reduced_inputs(&info, 1, &sel.blocks).unwrap();
 
     let ds = heroes::data::synth_image::ImageGen::cifar_twin().generate(info.batch, 7, &mut rng);
@@ -669,7 +674,7 @@ fn batch_streams_are_deterministic_and_independent() {
     let Some(pool) = pool_or_skip(1) else { return };
     let env = FlEnv::build(&pool, tiny_cfg(1)).unwrap();
     let grab = |client: usize, round: usize| {
-        let mut s = env.batch_stream(client, round);
+        let mut s = env.batch_stream(client, round).unwrap();
         let (x, y) = s.next_batch();
         let xs = match x {
             heroes::coordinator::XData::Image(t) => t.data().to_vec(),

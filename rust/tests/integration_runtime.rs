@@ -3,6 +3,11 @@
 //! Requires `make artifacts` (skipped gracefully when absent so plain
 //! `cargo test` in a fresh checkout still passes the rest of the suite).
 
+// Test/bench/example code: panicking on setup failure is idiomatic
+// (CONTRIBUTING.md — the error-handling contract binds library code).
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::indexing_slicing)]
+
+
 use heroes::data::loader::{Batch, ImageLoader, TextLoader};
 use heroes::data::synth_image::ImageGen;
 use heroes::data::synth_text::TextGen;

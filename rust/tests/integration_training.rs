@@ -1,6 +1,11 @@
 //! Integration: the Heroes server end-to-end on tiny federated worlds.
 //! Requires `make artifacts` (skips gracefully otherwise).
 
+// Test/bench/example code: panicking on setup failure is idiomatic
+// (CONTRIBUTING.md — the error-handling contract binds library code).
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::indexing_slicing)]
+
+
 use heroes::baselines::Strategy;
 use heroes::config::{ExperimentConfig, Scale};
 use heroes::coordinator::env::FlEnv;

@@ -5,6 +5,11 @@
 //! determinism), and decode-never-panics under truncation. Pure rust —
 //! none of these need artifacts.
 
+// Test/bench/example code: panicking on setup failure is idiomatic
+// (CONTRIBUTING.md — the error-handling contract binds library code).
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::indexing_slicing)]
+
+
 use heroes::codec::{self, quant, wire, Encoding, FrameMeta};
 use heroes::tensor::Tensor;
 use heroes::util::prop::check;

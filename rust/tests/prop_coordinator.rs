@@ -7,6 +7,11 @@
 //! purity, the O(cohort) materialization bound). None of these need
 //! artifacts.
 
+// Test/bench/example code: panicking on setup failure is idiomatic
+// (CONTRIBUTING.md — the error-handling contract binds library code).
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::indexing_slicing)]
+
+
 use heroes::coordinator::aggregate::{ComposedAccumulator, DenseAccumulator};
 use heroes::coordinator::assignment::{plan_round, ClientStatus, ControllerCfg};
 use heroes::coordinator::frequency::{completion_time, tau_bounds, Estimates};
@@ -68,7 +73,7 @@ fn prop_ledger_rotation_balances_counts() {
         },
         |(qs, ups, rounds)| {
             let info = toy_info();
-            let mut ledger = BlockLedger::new(&info);
+            let mut ledger = BlockLedger::new(&info).unwrap();
             let est = Estimates { l: 1.5, sigma_sq: 0.4, g_sq: 1.2, loss: 2.0 };
             let mut max_tau = 0u64;
             for _ in 0..*rounds {
@@ -103,7 +108,7 @@ fn prop_plan_round_invariants() {
         |(qs, ups)| {
             let info = toy_info();
             let cfg = ctrl();
-            let mut ledger = BlockLedger::new(&info);
+            let mut ledger = BlockLedger::new(&info).unwrap();
             let est = Estimates { l: 2.0, sigma_sq: 0.3, g_sq: 1.0, loss: 2.3 };
             let plan = plan_round(&info, &cfg, &est, &statuses_from(qs, ups), &mut ledger)
                 .map_err(|e| e.to_string())?;
@@ -188,11 +193,11 @@ fn prop_composed_aggregation_idempotent() {
             let info = toy_info();
             let mut rng = Rng::new(seed);
             let prev = ComposedGlobal::init(&info, &mut rng).unwrap();
-            let mut ledger = BlockLedger::new(&info);
+            let mut ledger = BlockLedger::new(&info).unwrap();
             let mut acc = ComposedAccumulator::new(&info, &prev);
             for i in 0..k {
                 let p = 1 + (i % info.cap_p);
-                let sel = ledger.select_for_width(&info, p);
+                let sel = ledger.select_for_width(&info, p).unwrap();
                 ledger.record(&sel, 1).unwrap();
                 let payload = prev.reduced_inputs(&info, p, &sel.blocks).unwrap();
                 acc.push(&sel.blocks, &payload).unwrap();
@@ -300,7 +305,7 @@ fn prop_quorum_weights_normalize_per_block() {
             let info = toy_info();
             let mut rng = Rng::new(*seed);
             let prev = ComposedGlobal::init(&info, &mut rng).unwrap();
-            let mut ledger = BlockLedger::new(&info);
+            let mut ledger = BlockLedger::new(&info).unwrap();
             let mut acc = ComposedAccumulator::new(&info, &prev);
 
             // expected per-block numerator/denominator in f64
@@ -312,7 +317,7 @@ fn prop_quorum_weights_normalize_per_block() {
 
             for (i, (&w, &v)) in weights.iter().zip(values).enumerate() {
                 let p = 1 + (i % info.cap_p);
-                let sel = ledger.select_for_width(&info, p);
+                let sel = ledger.select_for_width(&info, p).unwrap();
                 ledger.record(&sel, 1).unwrap();
                 let payload: Vec<_> = prev
                     .reduced_inputs(&info, p, &sel.blocks)
@@ -847,7 +852,7 @@ fn prop_population_derivations_are_pure_for_any_evaluation_order() {
         40,
         |rng| (rng.next_u64(), rng.next_u64(), 2 + rng.below(6)),
         |&(seed, shuffle_seed, rounds)| {
-            let pop = Population::new(PopulationSpec::default_mix(100_000, seed));
+            let pop = Population::new(PopulationSpec::default_mix(100_000, seed)).unwrap();
             let net = NetworkModel::default();
             let cells: Vec<(usize, usize)> = (0..rounds)
                 .flat_map(|r| pop.sample_cohort(r, 8, |_| true).into_iter().map(move |c| (r, c)))
@@ -891,9 +896,9 @@ fn prop_lazy_rounds_materialize_o_cohort_not_o_population() {
         |rng| (rng.next_u64(), 2 + rng.below(4), 4 + rng.below(29)),
         |&(seed, rounds, k)| {
             let population = 100_000usize;
-            let pop = Population::new(PopulationSpec::default_mix(population, seed));
+            let pop = Population::new(PopulationSpec::default_mix(population, seed)).unwrap();
             let capacity = 4 * k;
-            let mut cache: LazyCache<u64> = LazyCache::new(capacity);
+            let mut cache: LazyCache<u64> = LazyCache::new(capacity).unwrap();
             for round in 0..rounds {
                 let cohort = pop.sample_cohort(round, k, |_| true);
                 if cohort.len() != k {

@@ -24,12 +24,18 @@
 //! PJRT-dependent tests require `make artifacts` and skip gracefully
 //! otherwise (the same discipline as `tests/integration_parallel.rs`).
 
+// Test/bench/example code: panicking on setup failure is idiomatic
+// (CONTRIBUTING.md — the error-handling contract binds library code).
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::indexing_slicing)]
+
+
 use heroes::baselines::make_strategy;
 use heroes::config::{ExperimentConfig, Scale};
 use heroes::coordinator::env::FlEnv;
 use heroes::coordinator::quorum_ctl::{QuorumController, QuorumCtlCfg, QuorumPolicy, QuorumSignals};
 use heroes::coordinator::resilience::{
-    resolve_fault, FaultAction, FaultPolicyCfg, FaultResolution, FaultsCtl, ResilienceError,
+    rebill_for, resolve_fault, FaultAction, FaultPolicyCfg, FaultResolution, FaultStamp,
+    FaultsCtl, ResilienceError,
 };
 use heroes::coordinator::round::RoundDriver;
 use heroes::coordinator::RoundReport;
@@ -314,6 +320,57 @@ fn every_class_exercises_its_policy_path_with_ledger_counts() {
     assert_eq!(ctl.stamp_one(4, 9, 50.0, true).unwrap(), None);
     let l = ctl.ledger();
     assert_eq!((l.exec.injected, l.exec.observed), (1, 0));
+}
+
+#[test]
+fn recovered_corrupt_retries_rebill_upload_traffic() {
+    // PR 8 follow-up: a recovered `corrupt` fault re-sent its upload
+    // frame on every retry, so the retransmitted bytes are billed on
+    // top of the planned frame — and only in that case.
+    let stamp = |class: FaultClass, retries: u32, recovered: bool| FaultStamp {
+        event: FaultEvent { class, severity: retries.max(1), frac: 0.5, stall: 0.0, bit: 3 },
+        action: FaultAction::Retry,
+        retries,
+        recovered,
+        fault_time: if recovered { 0.0 } else { 7.5 },
+    };
+
+    // the one re-billing case: recovered corrupt, retries × frame bytes
+    assert_eq!(rebill_for(&stamp(FaultClass::Corrupt, 2, true), 1000), 2000);
+    assert_eq!(rebill_for(&stamp(FaultClass::Corrupt, 1, true), 64), 64);
+    // zero-retry recovery re-sent nothing
+    assert_eq!(rebill_for(&stamp(FaultClass::Corrupt, 0, true), 1000), 0);
+    // exec retries re-run compute, partitions stall one frame in flight
+    assert_eq!(rebill_for(&stamp(FaultClass::Exec, 3, true), 1000), 0);
+    assert_eq!(rebill_for(&stamp(FaultClass::Partition, 0, true), 1000), 0);
+    // an unrecovered corrupt never completed its upload
+    assert_eq!(rebill_for(&stamp(FaultClass::Corrupt, 2, false), 1000), 0);
+    // saturation, not overflow, on absurd inputs
+    assert_eq!(rebill_for(&stamp(FaultClass::Corrupt, u32::MAX, true), usize::MAX), usize::MAX);
+
+    // the ledger books re-billed bytes as an order-independent sum and
+    // exports them in the run output JSON
+    let mut ctl = FaultsCtl::new(
+        FaultsCfg::parse("corrupt=1").unwrap(),
+        FaultPolicyCfg { budget: MAX_SEVERITY, ..FaultPolicyCfg::default() },
+        31,
+    );
+    ctl.note_dispatched(8);
+    let mut expected = 0u64;
+    for client in 0..8 {
+        let (stamp, _) = ctl.stamp_one(0, client, 50.0, false).unwrap().unwrap();
+        assert!(stamp.recovered, "budget ≥ MAX_SEVERITY must always recover");
+        let rebill = rebill_for(&stamp, 500);
+        assert_eq!(rebill, 500 * stamp.retries as usize);
+        if rebill > 0 {
+            ctl.note_rebilled(rebill as u64);
+            expected += rebill as u64;
+        }
+    }
+    assert!(expected > 0, "rate-1 corrupt with severities ≥ 1 must re-bill something");
+    assert_eq!(ctl.ledger().rebilled_bytes, expected);
+    let j = ctl.ledger().to_json();
+    assert_eq!(j.get("rebilled_bytes").unwrap().as_u64(), Some(expected));
 }
 
 // --------------------------------------------------------- quorum signal

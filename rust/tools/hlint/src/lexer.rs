@@ -1,0 +1,318 @@
+//! A minimal Rust lexer — just enough structure for token-level lint
+//! rules.
+//!
+//! This is deliberately *not* a full Rust lexer (and deliberately not
+//! `syn`: the linter must build with zero dependencies in offline /
+//! vendored environments). It classifies identifiers, single-character
+//! punctuation, literals and lifetimes, tracks line numbers, and pulls
+//! comments out of band so the suppression engine can see
+//! `// hlint::allow(...)` markers. The only hard requirements are that
+//! quotes inside strings / chars / raw strings never open a literal,
+//! that nested block comments terminate, and that line numbers are
+//! right — everything else (float vs. int, keyword vs. ident) is left
+//! to the rules, which work on token *shape*, not semantics.
+
+/// Token classification. Multi-character operators (`::`, `->`, `=>`)
+/// are emitted as consecutive single-character [`TokKind::Punct`]
+/// tokens; rules that care look at neighbors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Lit,
+    Lifetime,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    /// Comment body without the `//` / `/* */` delimiters.
+    pub text: String,
+    /// True when nothing but whitespace precedes the comment on its
+    /// line: an own-line `hlint::allow` scopes to the *next* code line
+    /// (or item), a trailing one to its own line.
+    pub own_line: bool,
+}
+
+/// Lex `src` into code tokens plus an out-of-band comment list.
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut line_has_code = false;
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            line_has_code = false;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // line comment (incl. `///` and `//!` doc comments)
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            comments.push(Comment {
+                line,
+                text: b[start..j].iter().collect(),
+                own_line: !line_has_code,
+            });
+            i = j;
+            continue;
+        }
+        // block comment, nesting honored
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start_line = line;
+            let text_start = i + 2;
+            let mut depth = 1u32;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let text_end = if depth == 0 { j.saturating_sub(2) } else { j };
+            comments.push(Comment {
+                line: start_line,
+                text: b[text_start..text_end.max(text_start)].iter().collect(),
+                own_line: !line_has_code,
+            });
+            i = j;
+            continue;
+        }
+        line_has_code = true;
+        // raw string: r"..." / r#"..."# / r##"..."## ...
+        if c == 'r' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '#') {
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                let mut k = j + 1;
+                while k < n {
+                    if b[k] == '\n' {
+                        line += 1;
+                        k += 1;
+                        continue;
+                    }
+                    if b[k] == '"' {
+                        let mut h = 0usize;
+                        while h < hashes && k + 1 + h < n && b[k + 1 + h] == '#' {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            k += 1 + hashes;
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lit,
+                    text: String::from("r\"..\""),
+                    line,
+                });
+                i = k;
+                continue;
+            }
+            // `r` not followed by a raw string: fall through as an ident
+        }
+        if c == '"' {
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '"' {
+                    break;
+                }
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Lit,
+                text: String::from("\"..\""),
+                line,
+            });
+            i = if j < n { j + 1 } else { n };
+            continue;
+        }
+        if c == '\'' {
+            // `'a'` is a char literal; `'a` / `'static` is a lifetime.
+            if i + 1 < n && (b[i + 1].is_alphabetic() || b[i + 1] == '_') {
+                let mut j = i + 1;
+                while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                if j < n && b[j] == '\'' && j == i + 2 {
+                    toks.push(Tok {
+                        kind: TokKind::Lit,
+                        text: b[i..=j].iter().collect(),
+                        line,
+                    });
+                    i = j + 1;
+                    continue;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: b[i..j].iter().collect(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            // escaped or symbolic char literal: scan to the closing '
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '\'' {
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Lit,
+                text: String::from("'..'"),
+                line,
+            });
+            i = if j < n { j + 1 } else { n };
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: b[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '.' || b[j] == '_') {
+                // `1.0` continues the literal; `1.max(..)` / `0..n` do not
+                if b[j] == '.' && (j + 1 >= n || !b[j + 1].is_ascii_digit()) {
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Lit,
+                text: b[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+
+    (toks, comments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(toks: &[Tok]) -> Vec<&str> {
+        toks.iter().map(|t| t.text.as_str()).collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_lines() {
+        let (toks, _) = lex("fn f() {\n    x.y\n}\n");
+        assert_eq!(texts(&toks), ["fn", "f", "(", ")", "{", "x", ".", "y", "}"]);
+        assert_eq!(toks[5].line, 2); // `x`
+        assert_eq!(toks[8].line, 3); // `}`
+    }
+
+    #[test]
+    fn strings_do_not_leak_tokens() {
+        let (toks, _) = lex(r#"let s = "a.unwrap() [0]"; s"#);
+        // no `unwrap` ident token may come out of the string literal
+        assert!(toks.iter().all(|t| t.text != "unwrap"));
+        assert_eq!(toks.last().map(|t| t.text.as_str()), Some("s"));
+    }
+
+    #[test]
+    fn raw_string_with_hashes() {
+        let (toks, _) = lex(r###"let s = r#"quote " inside"#; done"###);
+        assert_eq!(toks.last().map(|t| t.text.as_str()), Some("done"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let (toks, _) = lex("let c = 'x'; fn f<'a>(v: &'a str) {}");
+        assert!(toks.iter().any(|t| t.kind == TokKind::Lit && t.text == "'x'"));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "'a"));
+    }
+
+    #[test]
+    fn comments_out_of_band() {
+        let (toks, comments) = lex("x; // trailing note\n// own line\ny;\n");
+        assert_eq!(texts(&toks), ["x", ";", "y", ";"]);
+        assert_eq!(comments.len(), 2);
+        assert!(!comments[0].own_line);
+        assert_eq!(comments[0].text.trim(), "trailing note");
+        assert!(comments[1].own_line);
+        assert_eq!(comments[1].line, 2);
+    }
+
+    #[test]
+    fn nested_block_comment_terminates() {
+        let (toks, comments) = lex("/* a /* b */ c */ z");
+        assert_eq!(texts(&toks), ["z"]);
+        assert_eq!(comments.len(), 1);
+    }
+
+    #[test]
+    fn numeric_literal_method_call() {
+        let (toks, _) = lex("let x = 1.max(2) + 3.5;");
+        assert!(toks.iter().any(|t| t.text == "max"));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Lit && t.text == "3.5"));
+    }
+}

@@ -1,0 +1,20 @@
+//! hlint — the Heroes repo's determinism & error-handling analyzer.
+//!
+//! Mechanizes the invariants every PR since PR 1 has enforced by
+//! review: runs are pure functions of `(seed, cfg)` — no wall-clock
+//! reads, no shared-cursor RNGs, no hash-order iteration on
+//! deterministic paths — and failures surface as typed `Err`s, never
+//! panics; byte counters never narrow through lossy casts. See
+//! CONTRIBUTING.md for the rule table and the `hlint::allow`
+//! suppression grammar, and `src/rules.rs` for the rule semantics.
+//!
+//! The library entry point is [`lint_source`], which takes a *virtual*
+//! path (relative to `rust/src/`) so the fixture suite can exercise
+//! rule scoping without touching the real tree. The binary
+//! (`cargo run -p hlint -- --deny`) walks `rust/src/**` and applies it
+//! per file.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{canonical_rule, lint_source, Finding, LintOutcome, BAD_SUPPRESSION, RULE_NAMES};

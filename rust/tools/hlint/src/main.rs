@@ -1,0 +1,198 @@
+//! hlint CLI: walk `rust/src/**`, apply the rule set, report findings.
+//!
+//! ```text
+//! cargo run -p hlint -- [--deny] [--json] [--rule NAME]... [--root DIR]
+//! ```
+//!
+//! `--deny` exits 1 when any unsuppressed finding remains (the CI
+//! gate); `--json` emits a machine-readable findings object on stdout;
+//! `--rule` restricts the pass to the named rule(s) (repeatable;
+//! default: all). `--root` points at the repo root (default: walk up
+//! from the current directory until `rust/src` is found).
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use hlint::{canonical_rule, lint_source, Finding, RULE_NAMES};
+
+struct Opts {
+    deny: bool,
+    json: bool,
+    rules: Vec<&'static str>,
+    root: Option<PathBuf>,
+}
+
+fn usage() -> &'static str {
+    "usage: hlint [--deny] [--json] [--rule NAME]... [--root DIR]\n\
+     rules: wall_clock unkeyed_rng map_iteration panic_path truncating_cast"
+}
+
+fn parse_opts() -> Result<Opts, String> {
+    let mut opts = Opts { deny: false, json: false, rules: Vec::new(), root: None };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--deny" => opts.deny = true,
+            "--json" => opts.json = true,
+            "--rule" => {
+                let name = args.next().ok_or("--rule needs a rule name")?;
+                let rule = canonical_rule(&name)
+                    .ok_or_else(|| format!("unknown rule `{name}`\n{}", usage()))?;
+                if !opts.rules.contains(&rule) {
+                    opts.rules.push(rule);
+                }
+            }
+            "--root" => {
+                let dir = args.next().ok_or("--root needs a directory")?;
+                opts.root = Some(PathBuf::from(dir));
+            }
+            "-h" | "--help" => return Err(usage().to_string()),
+            other => return Err(format!("unknown argument `{other}`\n{}", usage())),
+        }
+    }
+    if opts.rules.is_empty() {
+        opts.rules = RULE_NAMES.to_vec();
+    }
+    Ok(opts)
+}
+
+/// Locate `<repo>/rust/src`: `--root` wins, otherwise walk up from cwd.
+fn find_src_root(opts: &Opts) -> Result<PathBuf, String> {
+    if let Some(root) = &opts.root {
+        let candidate = root.join("rust").join("src");
+        if candidate.is_dir() {
+            return Ok(candidate);
+        }
+        if root.is_dir() {
+            return Ok(root.clone());
+        }
+        return Err(format!("--root `{}` is not a directory", root.display()));
+    }
+    let mut dir = std::env::current_dir().map_err(|e| format!("cwd: {e}"))?;
+    loop {
+        let candidate = dir.join("rust").join("src");
+        if candidate.is_dir() {
+            return Ok(candidate);
+        }
+        if !dir.pop() {
+            return Err("no rust/src found walking up from the current directory; pass --root".to_string());
+        }
+    }
+}
+
+/// Deterministic (sorted) recursive walk collecting `.rs` files.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        paths.push(entry.path());
+    }
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn emit_json(root: &Path, rules: &[&str], active: &[Finding], suppressed: usize) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"root\": \"{}\",", json_escape(&root.display().to_string()));
+    let rule_list: Vec<String> = rules.iter().map(|r| format!("\"{r}\"")).collect();
+    let _ = writeln!(s, "  \"rules\": [{}],", rule_list.join(", "));
+    let _ = writeln!(s, "  \"suppressed\": {suppressed},");
+    s.push_str("  \"findings\": [\n");
+    for (i, f) in active.iter().enumerate() {
+        let sep = if i + 1 == active.len() { "" } else { "," };
+        let _ = writeln!(
+            s,
+            "    {{\"file\": \"rust/src/{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}{}",
+            json_escape(&f.file),
+            f.line,
+            f.rule,
+            json_escape(&f.message),
+            sep
+        );
+    }
+    s.push_str("  ]\n}");
+    println!("{s}");
+}
+
+fn run() -> Result<ExitCode, String> {
+    let opts = parse_opts()?;
+    let src_root = find_src_root(&opts)?;
+
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+
+    let mut active: Vec<Finding> = Vec::new();
+    let mut suppressed = 0usize;
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .map_err(|e| format!("strip_prefix: {e}"))?
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let outcome = lint_source(&rel, &src, &opts.rules);
+        suppressed += outcome.suppressed.len();
+        active.extend(outcome.active);
+    }
+    active.sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
+
+    if opts.json {
+        emit_json(&src_root, &opts.rules, &active, suppressed);
+    } else {
+        for f in &active {
+            println!("rust/src/{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+        }
+    }
+    eprintln!(
+        "hlint: {} finding(s) ({} suppressed) across {} file(s)",
+        active.len(),
+        suppressed,
+        files.len()
+    );
+
+    if opts.deny && !active.is_empty() {
+        return Ok(ExitCode::from(1));
+    }
+    Ok(ExitCode::SUCCESS)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(msg) => {
+            eprintln!("{msg}");
+            ExitCode::from(2)
+        }
+    }
+}

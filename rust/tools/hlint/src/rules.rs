@@ -1,0 +1,581 @@
+//! The five repo invariants as token-level rules, plus the
+//! `hlint::allow` suppression engine.
+//!
+//! Paths are *virtual*: rules scope on the path **relative to
+//! `rust/src/`** (e.g. `coordinator/round.rs`), so the fixture suite
+//! can lint snippets under any directory it wants to exercise. Rules
+//! are heuristic by design — they work on token shape, not on resolved
+//! types — and the contract (see CONTRIBUTING.md) is: a false positive
+//! gets a reasoned `hlint::allow`, a false negative gets a sharper
+//! rule, and the tree stays at zero unsuppressed findings.
+
+use crate::lexer::{lex, Tok, TokKind};
+
+/// The user-selectable rules, in reporting order.
+pub const RULE_NAMES: [&str; 5] = [
+    "wall_clock",      // D1
+    "unkeyed_rng",     // D2
+    "map_iteration",   // D3
+    "panic_path",      // P1
+    "truncating_cast", // C1
+];
+
+/// Internal rule for malformed / reason-less `hlint::allow` markers.
+/// Always on, never suppressible.
+pub const BAD_SUPPRESSION: &str = "bad_suppression";
+
+/// D1: files (relative to `rust/src/`) that may read the wall clock.
+const WALL_CLOCK_ALLOWLIST: [&str; 3] = ["runtime/engine.rs", "util/bench.rs", "util/logging.rs"];
+
+const D2_DIRS: [&str; 2] = ["simulation", "coordinator"];
+const D3_DIRS: [&str; 4] = ["coordinator", "simulation", "codec", "metrics"];
+const P1_DIRS: [&str; 4] = ["coordinator", "codec", "simulation", "runtime"];
+
+const PANIC_MACROS: [&str; 7] = [
+    "panic",
+    "unreachable",
+    "todo",
+    "unimplemented",
+    "assert",
+    "assert_eq",
+    "assert_ne",
+];
+const ITER_METHODS: [&str; 9] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "drain",
+    "into_keys",
+    "into_values",
+];
+const CAST_TARGETS: [&str; 3] = ["usize", "u32", "f64"];
+/// Keywords that can directly precede `[` without forming an index
+/// expression (`as [T; 2]` cannot, but being conservative here only
+/// costs false negatives on exotic code, never false positives).
+const NON_INDEX_PRECEDERS: [&str; 13] = [
+    "mut", "in", "as", "return", "else", "match", "if", "box", "dyn", "impl", "where", "for",
+    "let",
+];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Virtual path the source was linted under (relative to `rust/src/`).
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct LintOutcome {
+    /// Findings that survived suppression — these fail `--deny`.
+    pub active: Vec<Finding>,
+    /// Findings silenced by a well-formed `hlint::allow`.
+    pub suppressed: Vec<Finding>,
+}
+
+/// Map a user-supplied rule name onto its canonical `&'static str`.
+pub fn canonical_rule(name: &str) -> Option<&'static str> {
+    RULE_NAMES.iter().copied().find(|r| *r == name)
+}
+
+fn enabled(rules: &[&'static str], name: &str) -> bool {
+    rules.iter().any(|r| *r == name)
+}
+
+fn in_dirs(rel: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| rel.starts_with(&format!("{d}/")))
+}
+
+/// Inclusive line ranges covered by `#[test]` / `#[cfg(test)]` items.
+fn test_ranges(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let is_attr_open = toks[i].text == "#"
+            && toks.get(i + 1).map(|t| t.text.as_str()) == Some("[");
+        if !is_attr_open {
+            i += 1;
+            continue;
+        }
+        // collect every ident inside the (possibly nested) attribute
+        let mut j = i + 2;
+        let mut depth = 1u32;
+        let mut words: Vec<&str> = Vec::new();
+        while j < toks.len() && depth > 0 {
+            match toks[j].text.as_str() {
+                "[" => depth += 1,
+                "]" => depth -= 1,
+                _ => {
+                    if toks[j].kind == TokKind::Ident {
+                        words.push(toks[j].text.as_str());
+                    }
+                }
+            }
+            j += 1;
+        }
+        let is_test = words.iter().any(|w| *w == "test") && !words.iter().any(|w| *w == "not");
+        if !is_test {
+            i = j;
+            continue;
+        }
+        // skip any further attributes / signature up to the item body,
+        // then cover the brace-matched block (or a `;`-terminated item)
+        let mut m = j;
+        while m < toks.len() && toks[m].text != "{" && toks[m].text != ";" {
+            m += 1;
+        }
+        if m < toks.len() && toks[m].text == "{" {
+            let mut d = 1u32;
+            let mut p = m + 1;
+            while p < toks.len() && d > 0 {
+                match toks[p].text.as_str() {
+                    "{" => d += 1,
+                    "}" => d -= 1,
+                    _ => {}
+                }
+                p += 1;
+            }
+            let end_line = toks
+                .get(p.saturating_sub(1))
+                .map(|t| t.line)
+                .unwrap_or(toks[i].line);
+            out.push((toks[i].line, end_line));
+            i = p;
+        } else {
+            i = m.saturating_add(1);
+        }
+    }
+    out
+}
+
+fn in_test(ranges: &[(u32, u32)], line: u32) -> bool {
+    ranges.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+// ---------------------------------------------------------------- rules
+
+/// D1 — wall-clock reads (`Instant`, `SystemTime`) outside the
+/// allowlisted timing/logging modules.
+fn rule_wall_clock(rel: &str, toks: &[Tok], tests: &[(u32, u32)], out: &mut Vec<Finding>) {
+    if WALL_CLOCK_ALLOWLIST.contains(&rel) {
+        return;
+    }
+    for t in toks {
+        if t.kind == TokKind::Ident
+            && (t.text == "Instant" || t.text == "SystemTime")
+            && !in_test(tests, t.line)
+        {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "wall_clock",
+                message: format!(
+                    "`{}` outside the wall-clock allowlist — schedule facts must come from the virtual clock",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+/// D2 — shared-cursor `Rng` bindings (fields / params typed `Rng`) in
+/// `simulation/` and `coordinator/`. A `: Rng` type ascription is the
+/// smell; `Rng::new(key)` path expressions (per-event keyed
+/// construction) are exactly the sanctioned alternative and are not
+/// flagged.
+fn rule_unkeyed_rng(rel: &str, toks: &[Tok], tests: &[(u32, u32)], out: &mut Vec<Finding>) {
+    if !in_dirs(rel, &D2_DIRS) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || t.text != "Rng" || in_test(tests, t.line) {
+            continue;
+        }
+        // `Rng::...` is a path expression, not a type ascription
+        if toks.get(i + 1).map(|t| t.text.as_str()) == Some(":")
+            && toks.get(i + 2).map(|t| t.text.as_str()) == Some(":")
+        {
+            continue;
+        }
+        // walk back over `&`, `mut` and lifetimes to the ascription colon
+        let mut j = i;
+        while j > 0 {
+            let prev = &toks[j - 1];
+            if prev.text == "&" || prev.text == "mut" || prev.kind == TokKind::Lifetime {
+                j -= 1;
+            } else {
+                break;
+            }
+        }
+        if j == 0 {
+            continue;
+        }
+        let colon = toks[j - 1].text == ":";
+        let path_sep = j >= 2 && toks[j - 2].text == ":";
+        if colon && !path_sep {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "unkeyed_rng",
+                message: "shared-cursor `Rng` binding (field/param) — derive a per-event keyed RNG instead".to_string(),
+            });
+        }
+    }
+}
+
+/// D3 — iteration over `HashMap` / `HashSet` bindings in deterministic
+/// modules. Tracks idents ascribed or assigned a hash collection, then
+/// flags order-dependent method calls (`iter`, `keys`, `drain`, ...)
+/// and `for .. in` loops over them. `get` / `insert` / `contains_key`
+/// stay legal. Receiver matching covers `x.iter()` and `self.x.iter()`;
+/// a field of some *other* struct (`plan.x.iter()`) is out of scope —
+/// that binding is tracked where it is declared.
+fn rule_map_iteration(rel: &str, toks: &[Tok], tests: &[(u32, u32)], out: &mut Vec<Finding>) {
+    if !in_dirs(rel, &D3_DIRS) {
+        return;
+    }
+    let mut tracked: Vec<&str> = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+            continue;
+        }
+        let mut j = i;
+        while j > 0 && (toks[j - 1].text == "&" || toks[j - 1].text == "mut") {
+            j -= 1;
+        }
+        if j == 0 {
+            continue;
+        }
+        let prev = &toks[j - 1];
+        // `name: HashMap<..>` ascription (field, param, or let)
+        if prev.text == ":" && !(j >= 2 && toks[j - 2].text == ":") {
+            if j >= 2 && toks[j - 2].kind == TokKind::Ident {
+                tracked.push(toks[j - 2].text.as_str());
+            }
+            continue;
+        }
+        // `let name = HashMap::new()` / `with_capacity(..)`
+        if prev.text == "=" && j >= 2 && toks[j - 2].kind == TokKind::Ident {
+            tracked.push(toks[j - 2].text.as_str());
+        }
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || in_test(tests, t.line) {
+            continue;
+        }
+        // receiver.method( where method is order-dependent
+        if ITER_METHODS.contains(&t.text.as_str())
+            && i >= 2
+            && toks[i - 1].text == "."
+            && toks.get(i + 1).map(|t| t.text.as_str()) == Some("(")
+        {
+            let recv = &toks[i - 2];
+            if recv.kind == TokKind::Ident && tracked.contains(&recv.text.as_str()) {
+                // `self.recv.method()` is ours; `other.recv.method()` is
+                // a different binding that happens to share the name
+                let through_field = i >= 4 && toks[i - 3].text == ".";
+                let not_ours = through_field
+                    && toks.get(i - 4).map(|t| t.text.as_str()) != Some("self");
+                if !not_ours {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line: t.line,
+                        rule: "map_iteration",
+                        message: format!(
+                            "`{}.{}()` iterates a Hash{{Map,Set}} — order is unstable; use BTreeMap or a sorted collect",
+                            recv.text, t.text
+                        ),
+                    });
+                }
+            }
+        }
+        // `for .. in [&][mut] tracked {`
+        if t.text == "in" {
+            let mut j = i + 1;
+            while j < toks.len() && (toks[j].text == "&" || toks[j].text == "mut") {
+                j += 1;
+            }
+            let direct_loop = toks.get(j).map(|t| t.kind) == Some(TokKind::Ident)
+                && tracked.contains(&toks[j].text.as_str())
+                && toks.get(j + 1).map(|t| t.text.as_str()) == Some("{");
+            if direct_loop {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: t.line,
+                    rule: "map_iteration",
+                    message: format!(
+                        "for-loop over Hash{{Map,Set}} `{}` — order is unstable; use BTreeMap or a sorted collect",
+                        toks[j].text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// P1 — panic paths in non-test code: `.unwrap()` / `.expect()`, panic
+/// macros (`panic!`, `assert!`, `unreachable!`, ... — `debug_assert*`
+/// is deliberately legal), and slice-index expressions (`x[i]` after an
+/// ident, `)` or `]`; type positions like `&[f64]` don't match).
+fn rule_panic_path(rel: &str, toks: &[Tok], tests: &[(u32, u32)], out: &mut Vec<Finding>) {
+    if !in_dirs(rel, &P1_DIRS) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if in_test(tests, t.line) {
+            continue;
+        }
+        if t.kind == TokKind::Ident
+            && (t.text == "unwrap" || t.text == "expect")
+            && i >= 1
+            && toks[i - 1].text == "."
+            && toks.get(i + 1).map(|t| t.text.as_str()) == Some("(")
+        {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "panic_path",
+                message: format!("`.{}()` in non-test code — return a typed `Err` instead", t.text),
+            });
+        }
+        if t.kind == TokKind::Ident
+            && PANIC_MACROS.contains(&t.text.as_str())
+            && toks.get(i + 1).map(|t| t.text.as_str()) == Some("!")
+        {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "panic_path",
+                message: format!("`{}!` in non-test code — return a typed `Err` instead", t.text),
+            });
+        }
+        if t.text == "[" && i >= 1 {
+            let prev = &toks[i - 1];
+            let after_ident =
+                prev.kind == TokKind::Ident && !NON_INDEX_PRECEDERS.contains(&prev.text.as_str());
+            let after_close = prev.text == "]" || prev.text == ")";
+            if after_ident || after_close {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: t.line,
+                    rule: "panic_path",
+                    message: "slice-index expression can panic — use `.get()` and surface a typed `Err`"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// C1 — numeric casts on byte counters (the PR 7 recorder bug class):
+/// `x as usize` / `as u32` / `as f64` where the nearest preceding ident
+/// (skipping one call-paren group) is `bytes`, `*_bytes` or `*traffic*`.
+/// Widening to `u64` / `u128` stays legal; `util::cast::bytes_to_f64`
+/// is the audited f64 exit.
+fn rule_truncating_cast(rel: &str, toks: &[Tok], tests: &[(u32, u32)], out: &mut Vec<Finding>) {
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || t.text != "as" || in_test(tests, t.line) {
+            continue;
+        }
+        let Some(target) = toks.get(i + 1) else { continue };
+        if target.kind != TokKind::Ident || !CAST_TARGETS.contains(&target.text.as_str()) {
+            continue;
+        }
+        // nearest preceding ident, skipping one `( .. )` group so that
+        // `total_bytes() as f64` resolves to `total_bytes`
+        let mut j = i;
+        if j >= 1 && toks[j - 1].text == ")" {
+            let mut depth = 1u32;
+            j -= 1;
+            while j > 0 && depth > 0 {
+                j -= 1;
+                match toks[j].text.as_str() {
+                    ")" => depth += 1,
+                    "(" => depth -= 1,
+                    _ => {}
+                }
+            }
+        }
+        if j == 0 {
+            continue;
+        }
+        let src = &toks[j - 1];
+        if src.kind != TokKind::Ident {
+            continue;
+        }
+        let name = src.text.as_str();
+        if name == "bytes" || name.ends_with("_bytes") || name.to_lowercase().contains("traffic") {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "truncating_cast",
+                message: format!(
+                    "`{} as {}` narrows/reshapes a byte counter — widen to u64 or go through util::cast",
+                    name, target.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------- suppression engine
+
+#[derive(Debug)]
+struct Allow {
+    rule: &'static str,
+    start: u32,
+    end: u32,
+}
+
+/// End line of the item whose first token is `toks[k]`: the matching
+/// `}` of the first `{` (or a `;` met at depth 0 for block-less items).
+fn item_end_line(toks: &[Tok], k: usize) -> u32 {
+    let mut depth = 0u32;
+    for t in toks.iter().skip(k) {
+        match t.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return t.line;
+                }
+            }
+            ";" if depth == 0 => return t.line,
+            _ => {}
+        }
+    }
+    toks.last().map(|t| t.line).unwrap_or(0)
+}
+
+/// Parse every `hlint::allow` marker in `comments`; return the resolved
+/// allow ranges plus `bad_suppression` findings for malformed ones.
+fn collect_allows(
+    rel: &str,
+    toks: &[Tok],
+    comments: &[crate::lexer::Comment],
+) -> (Vec<Allow>, Vec<Finding>) {
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    let mut push_bad = |line: u32, msg: String| {
+        bad.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: BAD_SUPPRESSION,
+            message: msg,
+        });
+    };
+    for c in comments {
+        let Some(pos) = c.text.find("hlint::allow") else {
+            continue;
+        };
+        let rest = c.text[pos + "hlint::allow".len()..].trim_start();
+        let Some(stripped) = rest.strip_prefix('(') else {
+            push_bad(c.line, "malformed `hlint::allow` — expected `(rule[, item]): reason`".to_string());
+            continue;
+        };
+        let Some(close) = stripped.find(')') else {
+            push_bad(c.line, "malformed `hlint::allow` — unclosed `(`".to_string());
+            continue;
+        };
+        let inside = &stripped[..close];
+        let after = stripped[close + 1..].trim_start();
+        let mut parts = inside.split(',').map(str::trim);
+        let rule_name = parts.next().unwrap_or_default();
+        let Some(rule) = canonical_rule(rule_name) else {
+            push_bad(c.line, format!("`hlint::allow` names unknown rule `{rule_name}`"));
+            continue;
+        };
+        let scope = parts.next();
+        let item_scope = match scope {
+            None => false,
+            Some("item") => true,
+            Some(other) => {
+                push_bad(c.line, format!("`hlint::allow` scope must be `item`, got `{other}`"));
+                continue;
+            }
+        };
+        if parts.next().is_some() {
+            push_bad(c.line, "`hlint::allow` takes at most `(rule, item)`".to_string());
+            continue;
+        }
+        let Some(reason) = after.strip_prefix(':') else {
+            push_bad(
+                c.line,
+                format!("`hlint::allow({rule_name})` without a reason — write `: <why this is sound>`"),
+            );
+            continue;
+        };
+        if reason.trim().is_empty() {
+            push_bad(
+                c.line,
+                format!("`hlint::allow({rule_name})` with an empty reason — write `: <why this is sound>`"),
+            );
+            continue;
+        }
+        if !c.own_line {
+            // trailing comment: suppress its own line
+            allows.push(Allow { rule, start: c.line, end: c.line });
+            continue;
+        }
+        // own-line comment: suppress the next code line (or whole item)
+        let Some(k) = toks.iter().position(|t| t.line > c.line) else {
+            push_bad(c.line, "`hlint::allow` with no following code".to_string());
+            continue;
+        };
+        let start = toks[k].line;
+        let end = if item_scope { item_end_line(toks, k).max(start) } else { start };
+        allows.push(Allow { rule, start, end });
+    }
+    (allows, bad)
+}
+
+// ----------------------------------------------------------- entry point
+
+/// Lint one source file under a virtual path (relative to `rust/src/`).
+///
+/// `rules` holds canonical rule names (see [`canonical_rule`]); pass
+/// `&RULE_NAMES` for everything. `bad_suppression` findings are always
+/// produced and never suppressible.
+pub fn lint_source(virtual_path: &str, src: &str, rules: &[&'static str]) -> LintOutcome {
+    let rel = virtual_path.replace('\\', "/");
+    let (toks, comments) = lex(src);
+    let tests = test_ranges(&toks);
+
+    let mut raw: Vec<Finding> = Vec::new();
+    if enabled(rules, "wall_clock") {
+        rule_wall_clock(&rel, &toks, &tests, &mut raw);
+    }
+    if enabled(rules, "unkeyed_rng") {
+        rule_unkeyed_rng(&rel, &toks, &tests, &mut raw);
+    }
+    if enabled(rules, "map_iteration") {
+        rule_map_iteration(&rel, &toks, &tests, &mut raw);
+    }
+    if enabled(rules, "panic_path") {
+        rule_panic_path(&rel, &toks, &tests, &mut raw);
+    }
+    if enabled(rules, "truncating_cast") {
+        rule_truncating_cast(&rel, &toks, &tests, &mut raw);
+    }
+
+    let (allows, bad) = collect_allows(&rel, &toks, &comments);
+    let mut out = LintOutcome::default();
+    for f in raw {
+        let hit = allows
+            .iter()
+            .any(|a| a.rule == f.rule && a.start <= f.line && f.line <= a.end);
+        if hit {
+            out.suppressed.push(f);
+        } else {
+            out.active.push(f);
+        }
+    }
+    out.active.extend(bad);
+    out.active.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out.suppressed.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}

@@ -1,0 +1,122 @@
+//! hlint self-test over the fixture corpus: every bad fixture triggers
+//! exactly its rule, every good fixture is clean, the `hlint::allow`
+//! grammar round-trips (line, next-line and item scopes), and a
+//! reason-less allow is rejected.
+//!
+//! Fixtures are linted under *virtual* paths (e.g.
+//! `coordinator/fixture.rs`) so the directory-scoped rules fire without
+//! the snippets living in the real tree; the files under
+//! `tests/fixtures/` are data, not compile targets.
+
+// test-only assertions; failure output beats typed errors here
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use hlint::{lint_source, Finding, LintOutcome, BAD_SUPPRESSION, RULE_NAMES};
+
+fn read_fixture(name: &str) -> String {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+fn lint(name: &str, vpath: &str) -> LintOutcome {
+    lint_source(vpath, &read_fixture(name), &RULE_NAMES)
+}
+
+fn rules_of(fs: &[Finding]) -> Vec<&'static str> {
+    fs.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn bad_fixtures_trigger_exactly_their_rule() {
+    let cases = [
+        ("d1_wall_clock_bad.rs", "metrics/fixture.rs", "wall_clock", 2),
+        ("d2_unkeyed_rng_bad.rs", "simulation/fixture.rs", "unkeyed_rng", 2),
+        ("d3_map_iteration_bad.rs", "coordinator/fixture.rs", "map_iteration", 1),
+        ("p1_panic_path_bad.rs", "coordinator/fixture.rs", "panic_path", 3),
+        ("c1_truncating_cast_bad.rs", "metrics/fixture.rs", "truncating_cast", 2),
+    ];
+    for (file, vpath, rule, count) in cases {
+        let out = lint(file, vpath);
+        assert!(out.suppressed.is_empty(), "{file}: unexpected suppressions");
+        assert_eq!(out.active.len(), count, "{file}: {:?}", rules_of(&out.active));
+        for f in &out.active {
+            assert_eq!(f.rule, rule, "{file}: stray finding {f:?}");
+            assert_eq!(f.file, vpath, "{file}: finding must carry its span");
+            assert!(f.line > 0, "{file}: finding must carry its span");
+        }
+    }
+}
+
+#[test]
+fn good_fixtures_are_clean() {
+    let cases = [
+        ("d1_wall_clock_good.rs", "metrics/fixture.rs"),
+        ("d2_unkeyed_rng_good.rs", "simulation/fixture.rs"),
+        ("d3_map_iteration_good.rs", "coordinator/fixture.rs"),
+        ("p1_panic_path_good.rs", "coordinator/fixture.rs"),
+        ("c1_truncating_cast_good.rs", "metrics/fixture.rs"),
+    ];
+    for (file, vpath) in cases {
+        let out = lint(file, vpath);
+        assert!(out.active.is_empty(), "{file}: {:?}", out.active);
+        assert!(out.suppressed.is_empty(), "{file}: {:?}", out.suppressed);
+    }
+}
+
+#[test]
+fn rule_selection_gates_the_pass() {
+    // the D1 bad fixture is clean when only C1 runs
+    let src = read_fixture("d1_wall_clock_bad.rs");
+    let out = lint_source("metrics/fixture.rs", &src, &["truncating_cast"]);
+    assert!(out.active.is_empty(), "{:?}", out.active);
+}
+
+#[test]
+fn directory_scoping_gates_the_pass() {
+    // the same panic-path source is legal outside the enforced dirs
+    let src = read_fixture("p1_panic_path_bad.rs");
+    let out = lint_source("util/fixture.rs", &src, &RULE_NAMES);
+    assert!(out.active.is_empty(), "{:?}", out.active);
+}
+
+#[test]
+fn suppression_round_trip() {
+    // trailing-line, next-line and item scopes each silence their finding
+    let out = lint("suppress_ok.rs", "coordinator/fixture.rs");
+    assert!(out.active.is_empty(), "{:?}", out.active);
+    assert_eq!(out.suppressed.len(), 3, "{:?}", rules_of(&out.suppressed));
+    assert!(out.suppressed.iter().all(|f| f.rule == "panic_path"));
+}
+
+#[test]
+fn missing_reason_suppression_rejected() {
+    let out = lint("suppress_missing_reason.rs", "coordinator/fixture.rs");
+    assert!(out.suppressed.is_empty(), "a reason-less allow must not suppress");
+    let rules = rules_of(&out.active);
+    assert!(rules.contains(&"panic_path"), "{rules:?}");
+    assert!(rules.contains(&BAD_SUPPRESSION), "{rules:?}");
+}
+
+#[test]
+fn unknown_rule_and_bad_scope_rejected() {
+    let src = "pub fn f(v: &[f64]) -> f64 {\n    v[0] // hlint::allow(no_such_rule): reason\n}\n";
+    let out = lint_source("coordinator/fixture.rs", src, &RULE_NAMES);
+    assert!(rules_of(&out.active).contains(&BAD_SUPPRESSION), "{:?}", out.active);
+
+    let src = "pub fn f(v: &[f64]) -> f64 {\n    v[0] // hlint::allow(panic_path, fn): reason\n}\n";
+    let out = lint_source("coordinator/fixture.rs", src, &RULE_NAMES);
+    assert!(rules_of(&out.active).contains(&BAD_SUPPRESSION), "{:?}", out.active);
+    // the rejected allow must not silence the real finding either
+    assert!(rules_of(&out.active).contains(&"panic_path"), "{:?}", out.active);
+}
+
+#[test]
+fn allow_only_covers_its_rule() {
+    // a panic_path allow does not silence a truncating_cast on the line
+    let src = "pub fn f(total_bytes: u64) -> f64 {\n    total_bytes as f64 // hlint::allow(panic_path): wrong rule\n}\n";
+    let out = lint_source("coordinator/fixture.rs", src, &RULE_NAMES);
+    assert!(rules_of(&out.active).contains(&"truncating_cast"), "{:?}", out.active);
+    assert!(out.suppressed.is_empty());
+}

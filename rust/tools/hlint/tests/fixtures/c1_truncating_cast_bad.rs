@@ -1,0 +1,4 @@
+// fixture: C1 bad — byte counters narrowed through lossy casts
+pub fn gb(total_bytes: u64, traffic_up: u64) -> (f64, usize) {
+    (total_bytes as f64 / 1e9, traffic_up as usize)
+}

@@ -1,0 +1,7 @@
+// fixture: C1 good — widening is legal, and the audited f64 exit is
+// util::cast::bytes_to_f64
+use crate::util::cast::bytes_to_f64;
+
+pub fn gb(frame_len: usize, total_bytes: u64) -> (u64, f64) {
+    (frame_len as u64, bytes_to_f64(total_bytes) / 1e9)
+}

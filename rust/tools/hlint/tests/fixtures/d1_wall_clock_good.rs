@@ -1,0 +1,4 @@
+// fixture: D1 good — schedule facts come from the virtual clock
+pub fn stamp(sim_time: f64, dt: f64) -> f64 {
+    sim_time + dt
+}

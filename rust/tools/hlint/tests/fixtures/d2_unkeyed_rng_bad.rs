@@ -1,0 +1,12 @@
+// fixture: D2 bad — shared-cursor Rng field and parameter
+use crate::util::rng::Rng;
+
+pub struct Sampler {
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn draw(&mut self, rng: &mut Rng) -> f64 {
+        rng.uniform()
+    }
+}

@@ -1,0 +1,7 @@
+// fixture: D2 good — per-event keyed RNG, derived and dropped in place
+use crate::util::rng::Rng;
+
+pub fn draw(seed: u64, round: u64, client: u64) -> f64 {
+    let mut rng = Rng::new(seed ^ (round << 20) ^ client);
+    rng.uniform()
+}

@@ -1,0 +1,10 @@
+// fixture: D3 bad — iterating a HashMap on a deterministic path
+use std::collections::HashMap;
+
+pub fn sum_all(m: &HashMap<usize, u64>) -> u64 {
+    let mut total = 0;
+    for (_k, v) in m.iter() {
+        total += *v;
+    }
+    total
+}

@@ -1,0 +1,13 @@
+// fixture: D3 good — BTreeMap iteration is ordered; HashMap get/insert
+// stays legal
+use std::collections::{BTreeMap, HashMap};
+
+pub fn sum_all(m: &BTreeMap<usize, u64>) -> u64 {
+    m.values().sum()
+}
+
+pub fn bump(m: &mut HashMap<usize, u64>, k: usize) -> u64 {
+    let v = m.get(&k).copied().unwrap_or(0) + 1;
+    m.insert(k, v);
+    v
+}

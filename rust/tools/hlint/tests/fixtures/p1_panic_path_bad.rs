@@ -1,0 +1,19 @@
+// fixture: P1 bad — unwrap, panic macro and slice-index in non-test
+// code; the #[cfg(test)] module at the bottom must NOT be flagged
+pub fn first(v: &[f64]) -> f64 {
+    v[0]
+}
+
+pub fn must(o: Option<u32>) -> u32 {
+    assert!(o.is_some());
+    o.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_here() {
+        let v = vec![1.0f64];
+        assert_eq!(v[0], Some(1.0f64).unwrap());
+    }
+}

@@ -1,0 +1,10 @@
+// fixture: P1 good — typed errors instead of panics
+use anyhow::{anyhow, Result};
+
+pub fn first(v: &[f64]) -> Result<f64> {
+    v.first().copied().ok_or_else(|| anyhow!("empty slice"))
+}
+
+pub fn must(o: Option<u32>) -> Result<u32> {
+    o.ok_or_else(|| anyhow!("missing value"))
+}

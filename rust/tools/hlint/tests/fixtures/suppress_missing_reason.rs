@@ -1,0 +1,5 @@
+// fixture: reason-less suppression — the allow must be rejected (the
+// finding stays active AND a bad_suppression finding is raised)
+pub fn first(v: &[f64]) -> f64 {
+    v[0] // hlint::allow(panic_path)
+}

@@ -1,0 +1,19 @@
+// fixture: well-formed suppressions — a trailing line allow, an
+// own-line allow, and an item-scoped allow; all carry reasons
+pub fn first(v: &[f64]) -> f64 {
+    v[0] // hlint::allow(panic_path): fixture pin — caller guarantees non-empty
+}
+
+pub fn second(v: &[f64]) -> f64 {
+    // hlint::allow(panic_path): fixture pin — caller guarantees len >= 2
+    v[1]
+}
+
+// hlint::allow(panic_path, item): dense kernel, loop-bounded indices
+pub fn sum(v: &[f64]) -> f64 {
+    let mut t = 0.0;
+    for i in 0..v.len() {
+        t += v[i];
+    }
+    t
+}

@@ -1,0 +1,57 @@
+//! The `--deny` CI gate as a plain cargo test: the checked-in
+//! `rust/src/**` tree must carry zero unsuppressed hlint findings.
+//! Every `hlint::allow` in the tree must be well-formed (reason
+//! required) — a malformed one surfaces here as `bad_suppression`.
+
+// test-only assertions; failure output beats typed errors here
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use std::path::{Path, PathBuf};
+
+use hlint::{lint_source, Finding, RULE_NAMES};
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("read_dir {}: {e}", dir.display()))
+        .map(|e| e.expect("dir entry").path())
+        .collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+}
+
+#[test]
+fn tree_has_zero_unsuppressed_findings() {
+    let src_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../src");
+    let src_root = src_root.canonicalize().expect("rust/src exists");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files);
+    assert!(!files.is_empty(), "no sources under {}", src_root.display());
+
+    let mut active: Vec<Finding> = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .expect("walked from src_root")
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(path).expect("readable source");
+        active.extend(lint_source(&rel, &src, &RULE_NAMES).active);
+    }
+    assert!(
+        active.is_empty(),
+        "unsuppressed hlint findings:\n{}",
+        active
+            .iter()
+            .map(|f| format!("  rust/src/{}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
