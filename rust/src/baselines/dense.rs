@@ -203,14 +203,13 @@ impl Strategy for DenseServer {
                 probe_exec: None,
                 payload: self.global.reduced_inputs(&env.info, p)?,
                 stream: env.batch_stream(client, self.round)?,
-                bytes: env.info.bytes_dense[&p],
+                bytes: env.info.bytes_dense[&p] as u64,
                 up_bytes: crate::codec::upload_bytes(
                     &env.info.dense_params[&p],
                     env.info.bytes_dense[&p],
                     self.codec,
                 ),
                 rebill_bytes: 0,
-),
                 wire: self.codec.encoding().map(|enc| WireTask {
                     scheme: scheme_id::DENSE,
                     round: self.round as u32,

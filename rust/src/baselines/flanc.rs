@@ -198,14 +198,13 @@ impl Strategy for FlancServer {
                 probe_exec: None,
                 payload: self.payload(p),
                 stream: env.batch_stream(client, self.round)?,
-                bytes: env.info.bytes_composed[&p],
+                bytes: env.info.bytes_composed[&p] as u64,
                 up_bytes: crate::codec::upload_bytes(
                     &env.info.composed_params[&p],
                     env.info.bytes_composed[&p],
                     self.codec,
                 ),
                 rebill_bytes: 0,
-),
                 wire: self.codec.encoding().map(|enc| WireTask {
                     scheme: scheme_id::FLANC,
                     round: self.round as u32,

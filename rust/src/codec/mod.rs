@@ -96,7 +96,9 @@ pub enum CodecError {
     #[error("top-k section declares k={k} over a {len}-element tensor")]
     BadTopK { k: usize, len: usize },
     #[error("encoded frame is {actual} bytes but the plan billed {planned} — the encoder broke the size-is-a-pure-shape-function contract")]
-    PlannedSizeDrift { planned: usize, actual: usize },
+    PlannedSizeDrift { planned: u64, actual: u64 },
+    #[error("frame declares {declared} bytes but the stream reader's buffer cap is {cap}")]
+    FrameTooLarge { declared: u64, cap: u64 },
     #[error("wire i/o: {0}")]
     Io(#[from] std::io::Error),
 }
@@ -200,12 +202,14 @@ pub mod scheme_id {
 /// count in `analytic` mode, the exact `HWU1` frame length in `wire`
 /// modes. Pure in `(specs, codec)` — the same function prices the plan's
 /// ν, the dispatched task and the traffic meter, so they can never
-/// disagree.
-pub fn upload_bytes(specs: &[ParamSpec], analytic_bytes: usize, codec: CodecCfg) -> usize {
+/// disagree. Returns `u64`: this is the boundary where in-memory shape
+/// counts become *billed* bytes, and billed bytes never truncate.
+// hlint::allow(truncating_cast): the `usize` param is the *entry* to the billed-byte domain — an in-memory analytic shape count, widened to u64 on every return path below
+pub fn upload_bytes(specs: &[ParamSpec], analytic_bytes: usize, codec: CodecCfg) -> u64 {
     match codec {
-        CodecCfg::Analytic => analytic_bytes,
+        CodecCfg::Analytic => analytic_bytes as u64,
         CodecCfg::Wire(enc) => {
-            wire::frame_len_for_shapes(specs.iter().map(|s| s.shape.as_slice()), enc)
+            wire::frame_len_for_shapes(specs.iter().map(|s| s.shape.as_slice()), enc) as u64
         }
     }
 }

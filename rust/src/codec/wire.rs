@@ -5,7 +5,7 @@
 
 use super::{quant, CodecError, Encoding};
 use crate::tensor::Tensor;
-use std::io::Write;
+use std::io::{Read, Write};
 
 pub const MAGIC: [u8; 4] = *b"HWU1";
 pub const VERSION: u8 = 1;
@@ -311,6 +311,91 @@ pub fn decode_update(bytes: &[u8]) -> Result<DecodedUpdate, CodecError> {
     Ok(DecodedUpdate { header, sections, tensors })
 }
 
+// ---------------------------------------------------------------------
+// streaming sources
+//
+// A TCP segment, a pipe buffer or a throttled socket hands the reader
+// the frame in arbitrary chunks — possibly split mid-header or
+// mid-section. The functions below accumulate exactly one frame and
+// then delegate to the slice path above, so every typed error a
+// one-shot `decode_update` of the same bytes would produce is produced
+// here too (parity pinned in `tests/prop_codec.rs`). The single
+// deliberate difference: trailing bytes after the declared body belong
+// to the *next* frame on a stream and are left unread, where a one-shot
+// slice treats them as `LengthMismatch`.
+
+/// Read up to `buf.len()` bytes from `r`, tolerating short reads;
+/// returns the count actually read (short only on clean EOF).
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<usize, CodecError> {
+    let mut got = 0usize;
+    loop {
+        let Some(rest) = buf.get_mut(got..) else { break };
+        if rest.is_empty() {
+            break;
+        }
+        match r.read(rest) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(CodecError::Io(e)),
+        }
+    }
+    Ok(got)
+}
+
+/// Read exactly one `HWU1` frame (header + body) from a byte stream.
+///
+/// `cap` bounds the total frame this reader will buffer
+/// ([`CodecError::FrameTooLarge`] otherwise) — the network transport's
+/// per-connection backpressure bound. A stream that ends early yields
+/// the same typed error a one-shot [`decode_update`] of the bytes
+/// received so far would.
+pub fn read_frame_from<R: Read>(r: &mut R, cap: u64) -> Result<Vec<u8>, CodecError> {
+    let mut head = [0u8; HEADER_LEN];
+    let got = read_full(r, &mut head)?;
+    if got < HEADER_LEN {
+        // delegate the typed error to the slice path: a 32-byte header
+        // cannot parse from fewer bytes, so this always errors — but
+        // with the same BadMagic/BadVersion/Truncated a one-shot gives
+        return match read_header(head.get(..got).unwrap_or(&[])) {
+            Err(e) => Err(e),
+            Ok(_) => Err(CodecError::Truncated { offset: got, needed: HEADER_LEN, have: got }),
+        };
+    }
+    let header = read_header(&head)?;
+    let total = (HEADER_LEN as u64).saturating_add(header.body_len);
+    if total > cap {
+        return Err(CodecError::FrameTooLarge { declared: total, cap });
+    }
+    let total = usize::try_from(total)
+        .map_err(|_| CodecError::FrameTooLarge { declared: total, cap })?;
+    let mut frame = vec![0u8; total];
+    let (head_buf, body_buf) = frame.split_at_mut(HEADER_LEN);
+    head_buf.copy_from_slice(&head);
+    let body_got = read_full(r, body_buf)?;
+    if (body_got as u64) < header.body_len {
+        // early EOF mid-body: same LengthMismatch as a one-shot decode
+        // of the received prefix
+        frame.truncate(HEADER_LEN + body_got);
+        return match decode_update(&frame) {
+            Err(e) => Err(e),
+            Ok(_) => Err(CodecError::LengthMismatch {
+                declared: header.body_len,
+                actual: body_got as u64,
+            }),
+        };
+    }
+    Ok(frame)
+}
+
+/// Streaming decode: [`read_frame_from`] + [`decode_update`]. Consumes
+/// exactly one frame; bytes after it stay on the stream for the next
+/// call.
+pub fn decode_update_from<R: Read>(r: &mut R, cap: u64) -> Result<DecodedUpdate, CodecError> {
+    let frame = read_frame_from(r, cap)?;
+    decode_update(&frame)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -409,5 +494,110 @@ mod tests {
         let mut bad = buf.clone();
         bad[HEADER_LEN] = 200;
         assert!(matches!(decode_update(&bad), Err(CodecError::BadSectionTag(200))));
+    }
+
+    /// A reader that hands out its bytes `chunk` at a time — the worst
+    /// case a TCP stream can legally present.
+    struct Chunked<'a> {
+        data: &'a [u8],
+        pos: usize,
+        chunk: usize,
+    }
+
+    impl Read for Chunked<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = self.chunk.min(buf.len()).min(self.data.len() - self.pos);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn chunked_reads_match_one_shot_decoding() {
+        let mut rng = Rng::new(21);
+        let ts = payload(&mut rng);
+        for enc in [
+            Encoding::default(),
+            Encoding { q8: true, topk: None },
+            Encoding { q8: true, topk: Some(0.25) },
+        ] {
+            let mut buf = Vec::new();
+            encode_update(&mut buf, &meta(), enc, &ts).unwrap();
+            let one = decode_update(&buf).unwrap();
+            // chunk sizes spanning "split mid-header" through "one read"
+            for chunk in [1, 3, 7, 31, HEADER_LEN, 1024, buf.len()] {
+                let mut r = Chunked { data: &buf, pos: 0, chunk };
+                let strm = decode_update_from(&mut r, u64::MAX).unwrap();
+                assert_eq!(strm.header, one.header, "{enc:?} chunk {chunk}");
+                assert_eq!(strm.sections, one.sections, "{enc:?} chunk {chunk}");
+                for (a, b) in one.tensors.iter().zip(&strm.tensors) {
+                    assert_eq!(a.shape(), b.shape());
+                    assert_eq!(a.data(), b.data(), "{enc:?} chunk {chunk}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_truncation_yields_the_one_shot_typed_errors() {
+        let mut rng = Rng::new(23);
+        let ts = payload(&mut rng);
+        let mut buf = Vec::new();
+        encode_update(&mut buf, &meta(), Encoding::default(), &ts).unwrap();
+        // cut mid-magic, mid-header, at the body boundary and mid-body:
+        // the streaming reader must surface exactly the one-shot error
+        for cut in [0, 1, HEADER_LEN - 3, HEADER_LEN, HEADER_LEN + 9, buf.len() - 5] {
+            let one = decode_update(&buf[..cut]).unwrap_err();
+            let mut r = Chunked { data: &buf[..cut], pos: 0, chunk: 2 };
+            let strm = decode_update_from(&mut r, u64::MAX).unwrap_err();
+            assert_eq!(format!("{one:?}"), format!("{strm:?}"), "cut {cut}");
+        }
+        // malformed-but-complete frames error identically through a stream
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        let mut r = Chunked { data: &bad, pos: 0, chunk: 5 };
+        assert!(matches!(
+            decode_update_from(&mut r, u64::MAX),
+            Err(CodecError::BadMagic { .. })
+        ));
+    }
+
+    #[test]
+    fn frame_cap_bounds_the_stream_buffer() {
+        let mut rng = Rng::new(27);
+        let ts = payload(&mut rng);
+        let mut buf = Vec::new();
+        let n = encode_update(&mut buf, &meta(), Encoding::default(), &ts).unwrap();
+        let mut r = Chunked { data: &buf, pos: 0, chunk: 64 };
+        assert!(matches!(
+            read_frame_from(&mut r, (n - 1) as u64),
+            Err(CodecError::FrameTooLarge { .. })
+        ));
+        // an exact cap is enough
+        let mut r = Chunked { data: &buf, pos: 0, chunk: 64 };
+        assert_eq!(read_frame_from(&mut r, n as u64).unwrap(), buf);
+    }
+
+    #[test]
+    fn back_to_back_frames_read_one_at_a_time() {
+        // trailing bytes belong to the next frame on a stream: two frames
+        // concatenated decode sequentially, where the one-shot slice path
+        // would (correctly) reject the pair as a LengthMismatch
+        let mut rng = Rng::new(29);
+        let ts = payload(&mut rng);
+        let mut buf = Vec::new();
+        encode_update(&mut buf, &meta(), Encoding::default(), &ts).unwrap();
+        let first_len = buf.len();
+        let meta2 = FrameMeta { scheme: 2, round: 8, client: 43 };
+        encode_update(&mut buf, &meta2, Encoding::default(), &ts).unwrap();
+        assert!(matches!(decode_update(&buf), Err(CodecError::LengthMismatch { .. })));
+        let mut r = Chunked { data: &buf, pos: 0, chunk: 13 };
+        let a = decode_update_from(&mut r, u64::MAX).unwrap();
+        let b = decode_update_from(&mut r, u64::MAX).unwrap();
+        assert_eq!(r.pos, buf.len(), "both frames fully consumed");
+        assert_eq!(a.header.client, 42);
+        assert_eq!(b.header.client, 43);
+        assert_eq!(a.header.body_len as usize, first_len - HEADER_LEN);
     }
 }

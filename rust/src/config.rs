@@ -11,6 +11,7 @@ use crate::codec::json::Json;
 use crate::codec::CodecCfg;
 use crate::coordinator::resilience::FaultPolicyCfg;
 use crate::simulation::{FaultsCfg, Scenario};
+use crate::transport::TransportCfg;
 use crate::util::cli::Args;
 use anyhow::{anyhow, Result};
 
@@ -255,6 +256,14 @@ pub struct ExperimentConfig {
     /// re-plan (abandon + survivors re-plan) or fail typed
     /// (`coordinator::resilience::FaultPolicyCfg`).
     pub fault_policy: FaultPolicyCfg,
+    /// `--transport`: which backend executes dispatched tasks
+    /// (`transport::TransportCfg`). `sim` (default) is the in-process
+    /// worker pool, byte-identical to the pre-transport repo;
+    /// `tcp:<addr>` binds a localhost server and dispatches over real
+    /// sockets (requires the `net` cargo feature). Decisions are
+    /// transport-independent (see `transport` module docs), so both
+    /// backends must produce identical results.
+    pub transport: TransportCfg,
 }
 
 /// The pool-sizing rule, shared by `ExperimentConfig::pool_size` and
@@ -330,6 +339,7 @@ impl ExperimentConfig {
             codec: CodecCfg::Analytic,
             faults: FaultsCfg::default(),
             fault_policy: FaultPolicyCfg::default(),
+            transport: TransportCfg::Sim,
         }
     }
 
@@ -393,6 +403,9 @@ impl ExperimentConfig {
         }
         if let Some(p) = args.get("fault-policy") {
             self.fault_policy = FaultPolicyCfg::parse(p)?;
+        }
+        if let Some(t) = args.get("transport") {
+            self.transport = TransportCfg::parse(t)?;
         }
         if let Some(g) = args.get("gamma") {
             self.partition = Partition::Gamma(g.parse().map_err(|_| anyhow!("bad --gamma"))?);
@@ -489,6 +502,15 @@ impl ExperimentConfig {
                 .as_str()
                 .ok_or_else(|| anyhow!("`fault_policy` expects a policy-knob string, got {v}"))?;
             c.fault_policy = FaultPolicyCfg::parse(s)?;
+        }
+        // JSON parity with the CLI: `"transport"` is a knob string
+        // (`sim` | `tcp:<addr>`); anything else is an error, never a
+        // silent fall-back to the in-process pool
+        if let Some(v) = j.get("transport") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("`transport` expects \"sim\" or \"tcp:<addr>\", got {v}"))?;
+            c.transport = TransportCfg::parse(s)?;
         }
         if let Some(g) = j.get("gamma").and_then(Json::as_f64) {
             c.partition = Partition::Gamma(g);
@@ -859,6 +881,35 @@ mod tests {
         for bad_doc in
             [r#"{"faults": 3}"#, r#"{"faults": "exec=2.0"}"#, r#"{"fault_policy": true}"#]
         {
+            let j = crate::codec::json::parse(bad_doc).unwrap();
+            assert!(
+                ExperimentConfig::from_json("cnn", Scale::Smoke, &j).is_err(),
+                "{bad_doc} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn transport_knob_parses_from_cli_and_json() {
+        let base = ExperimentConfig::preset("cnn", Scale::Smoke);
+        assert!(base.transport.is_sim(), "transport defaults to the in-process pool");
+
+        let args =
+            Args::parse_from(["--transport", "tcp:127.0.0.1:0"].iter().map(|s| s.to_string()));
+        let c = ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&args).unwrap();
+        assert_eq!(c.transport, TransportCfg::Tcp("127.0.0.1:0".into()));
+
+        // JSON parity: the same knob grammar as the CLI
+        let j = crate::codec::json::parse(r#"{"transport": "tcp:127.0.0.1:4477"}"#).unwrap();
+        let c = ExperimentConfig::from_json("cnn", Scale::Smoke, &j).unwrap();
+        assert_eq!(c.transport, TransportCfg::Tcp("127.0.0.1:4477".into()));
+        let j = crate::codec::json::parse(r#"{"transport": "sim"}"#).unwrap();
+        assert!(ExperimentConfig::from_json("cnn", Scale::Smoke, &j).unwrap().transport.is_sim());
+
+        // malformed values are errors, never a silent fall-back to sim
+        let bad_cli = Args::parse_from(["--transport", "udp:x"].iter().map(|s| s.to_string()));
+        assert!(ExperimentConfig::preset("cnn", Scale::Smoke).apply_args(&bad_cli).is_err());
+        for bad_doc in [r#"{"transport": 3}"#, r#"{"transport": "tcp:"}"#] {
             let j = crate::codec::json::parse(bad_doc).unwrap();
             assert!(
                 ExperimentConfig::from_json("cnn", Scale::Smoke, &j).is_err(),

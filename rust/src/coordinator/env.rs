@@ -84,6 +84,11 @@ enum TestData {
 pub enum BatchStream {
     Image(ImageLoader),
     Text(TextLoader),
+    /// A pre-drawn batch schedule (the networked dispatch path): the
+    /// coordinator draws a task's worst-case consumption from the live
+    /// stream at dispatch and ships it, so a remote executor replays
+    /// exactly the sequence the simulation would have drawn.
+    Fixed(FixedBatches),
 }
 
 impl BatchStream {
@@ -98,7 +103,44 @@ impl BatchStream {
                 let b = l.next_batch();
                 (XData::Tokens(b.x), b.y)
             }
+            BatchStream::Fixed(f) => f.next(),
         }
+    }
+}
+
+/// The payload of [`BatchStream::Fixed`]: an owned, pre-drawn batch
+/// sequence, nonempty by construction.
+///
+/// `run_local` consumes at most `2τ + 2` batches (two probe batches plus
+/// up to two attempts of τ batches on the divergence-retry path), so a
+/// schedule of that length replays bit-identically to the live stream it
+/// was drawn from in every execution path. Polling past the end cycles
+/// back to the first batch rather than panicking — a correctly sized
+/// schedule never reaches that.
+pub struct FixedBatches {
+    first: (XData, IntTensor),
+    rest: Vec<(XData, IntTensor)>,
+    cursor: usize,
+}
+
+impl FixedBatches {
+    /// `None` on an empty schedule — a batch source must produce, and
+    /// holding the first batch out of band keeps `next` panic-free.
+    pub fn new(mut batches: Vec<(XData, IntTensor)>) -> Option<FixedBatches> {
+        if batches.is_empty() {
+            return None;
+        }
+        let first = batches.remove(0);
+        Some(FixedBatches { first, rest: batches, cursor: 0 })
+    }
+
+    fn next(&mut self) -> (XData, IntTensor) {
+        let i = self.cursor;
+        self.cursor += 1;
+        if i == 0 {
+            return self.first.clone();
+        }
+        self.rest.get(i - 1).cloned().unwrap_or_else(|| self.first.clone())
     }
 }
 
@@ -421,7 +463,7 @@ impl<'e> FlEnv<'e> {
                 let rebill = rebill_for(&stamp, t.up_bytes);
                 if rebill > 0 {
                     t.rebill_bytes = rebill;
-                    self.faults.note_rebilled(rebill as u64);
+                    self.faults.note_rebilled(rebill);
                 }
                 t.fault = Some(stamp);
                 t.completion = completion;

@@ -84,8 +84,10 @@ pub struct EdgePlan {
     pub arrival: f64,
     /// WAN bytes of the composed update: the *widest member's* payload,
     /// not the member sum — neural composition merges the sub-cohort's
-    /// low-rank factors into one update of the largest assigned width
-    pub up_bytes: usize,
+    /// low-rank factors into one update of the largest assigned width.
+    /// `u64` per the traffic contract: billed bytes never truncate, even
+    /// on 32-bit targets.
+    pub up_bytes: u64,
 }
 
 /// The whole round's hierarchical schedule.
@@ -102,8 +104,9 @@ pub struct HierarchyPlan {
     /// root-quorum edge's arrival
     pub t_q: f64,
     /// WAN uplink billed at aggregation: Σ composed-update bytes over
-    /// the root quorum (replaces the flat path's per-member sum)
-    pub wan_up_bytes: usize,
+    /// the root quorum (replaces the flat path's per-member sum).
+    /// `u64` like every billed byte counter.
+    pub wan_up_bytes: u64,
     /// α of the root decision (late merges of this round)
     pub alpha: f64,
     /// every non-member's landing instant relative to round start,
@@ -121,7 +124,7 @@ pub struct HierarchyPlan {
 // hlint::allow(panic_path, item): every index is a survivor position `< n = completions.len()` or an edge position `< edges.len()` produced by the round-robin split / quorum selection right above its use
 pub fn plan_hierarchy(
     completions: &[f64],
-    bytes: &[usize],
+    bytes: &[u64],
     cfg: &HierarchyCfg,
     policy: &mut QuorumPolicy,
     signals: impl Fn() -> QuorumSignals,
@@ -152,8 +155,7 @@ pub fn plan_hierarchy(
         let members: Vec<usize> = quorum_members(&gc, k).into_iter().map(|j| group[j]).collect();
         let t_edge = members.iter().map(|&i| completions[i]).fold(0.0f64, f64::max);
         let up_bytes = members.iter().map(|&i| bytes[i]).max().unwrap_or(0);
-        let arrival =
-            t_edge + crate::util::cast::bytes_to_f64(up_bytes as u64) / cfg.backhaul_bps;
+        let arrival = t_edge + crate::util::cast::bytes_to_f64(up_bytes) / cfg.backhaul_bps;
         edges.push(EdgePlan { edge: e, members, t_edge, arrival, up_bytes });
     }
 
@@ -184,7 +186,7 @@ pub fn plan_hierarchy(
     }
     for (i, member) in edge_member.iter().enumerate() {
         if !member {
-            let fwd = crate::util::cast::bytes_to_f64(bytes[i] as u64) / cfg.backhaul_bps;
+            let fwd = crate::util::cast::bytes_to_f64(bytes[i]) / cfg.backhaul_bps;
             deferred.push((i, completions[i] + fwd));
         }
     }
@@ -263,7 +265,7 @@ mod tests {
     #[test]
     fn plans_are_pure_in_their_inputs() {
         let completions: Vec<f64> = (0..13).map(|i| 1.0 + 0.7 * i as f64).collect();
-        let bytes: Vec<usize> = (0..13).map(|i| 100 + 37 * i).collect();
+        let bytes: Vec<u64> = (0..13u64).map(|i| 100 + 37 * i).collect();
         let mk = || QuorumPolicy::fixed(2, 0.5);
         let (mut p1, mut p2) = (mk(), mk());
         let a = plan_hierarchy(&completions, &bytes, &cfg(3), &mut p1, QuorumSignals::default);
@@ -285,7 +287,7 @@ mod tests {
         // decision), no matter how many edges decided with clones
         let hot = QuorumSignals { staleness_index: 0.5, ..QuorumSignals::default() };
         let completions: Vec<f64> = (0..12).map(|i| 1.0 + 0.5 * i as f64).collect();
-        let bytes = vec![100usize; 12];
+        let bytes = vec![100u64; 12];
 
         let mut hier = QuorumPolicy::Auto(QuorumController::new(QuorumCtlCfg::new(0.8, 1, 0.5, 1.0)));
         let _ = plan_hierarchy(&completions, &bytes, &cfg(4), &mut hier, || hot);

@@ -73,8 +73,8 @@ pub struct RoundReport {
     pub mean_loss: f64,
     pub taus: Vec<usize>,
     pub widths: Vec<usize>,
-    pub down_bytes: usize,
-    pub up_bytes: usize,
+    pub down_bytes: u64,
+    pub up_bytes: u64,
     pub completion_times: Vec<f64>,
     /// V^h (Eq. 21): block update-count variance after the round
     pub block_variance: f64,

@@ -76,6 +76,13 @@ impl FaultAction {
     }
 }
 
+/// Largest accepted `--fault-policy budget=N`. The backoff arithmetic is
+/// finite for any u32 ([`resolve_fault`]'s exp2 formulation), but a
+/// budget past this bound only buys astronomically long virtual delays
+/// (2^1024 seconds dwarfs any horizon) and usually signals a typo — so
+/// parsing rejects it with a typed error instead of quietly honoring it.
+pub const MAX_RETRY_BUDGET: u32 = 1024;
+
 /// The `--fault-policy` knob: per-class actions plus the retry knobs.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultPolicyCfg {
@@ -135,6 +142,13 @@ impl FaultPolicyCfg {
                     cfg.budget = val
                         .parse()
                         .map_err(|_| anyhow!("bad retry budget `{val}` in `{s}`"))?;
+                    if cfg.budget > MAX_RETRY_BUDGET {
+                        return Err(anyhow!(
+                            "retry budget {} exceeds the maximum {MAX_RETRY_BUDGET} \
+                             (backoff 2^N virtual seconds is astronomical past it)",
+                            cfg.budget
+                        ));
+                    }
                 }
                 "backoff" => {
                     let b: f64 = val
@@ -211,8 +225,13 @@ pub fn resolve_fault(
     let action = policy.action(event.class);
     // time one failed attempt wastes before the fault manifests
     let attempt = event.frac * completion;
-    // cumulative exponential backoff over n retries: backoff · (2^n − 1)
-    let backoff_sum = |n: u32| policy.backoff * ((1u64 << n) - 1) as f64;
+    // cumulative exponential backoff over n retries: backoff · (2^n − 1).
+    // exp2 instead of `(1u64 << n) - 1`: the shift is UB-shaped for
+    // n ≥ 64 (debug panic, release wrap), while exp2 is finite for every
+    // u32 — and bit-identical to the integer formulation wherever both
+    // are defined (2^n − 1 is exactly representable for n ≤ 53, and for
+    // 53 < n < 64 both round to 2^n under the same nearest-even rule).
+    let backoff_sum = |n: u32| policy.backoff * (f64::from(n).exp2() - 1.0);
     let resolution = match action {
         FaultAction::Fail => {
             return Err(ResilienceError::FaultAbort { round, client, class: event.class }.into())
@@ -277,9 +296,9 @@ pub fn resolve_fault(
 /// compute without re-uploading, partitions stall delivery of the one
 /// frame already in flight, and an unrecovered fault never completes its
 /// upload — all of those re-bill nothing.
-pub fn rebill_for(stamp: &FaultStamp, up_bytes: usize) -> usize {
+pub fn rebill_for(stamp: &FaultStamp, up_bytes: u64) -> u64 {
     if stamp.recovered && stamp.event.class == FaultClass::Corrupt {
-        up_bytes.saturating_mul(stamp.retries as usize)
+        up_bytes.saturating_mul(u64::from(stamp.retries))
     } else {
         0
     }
@@ -467,6 +486,15 @@ mod tests {
         assert_eq!(c.budget, 3);
         assert!((c.backoff - 2.5).abs() < 1e-12);
         for bad in ["", "panic", "exec=panic", "budget=x", "backoff=-1", "fuse=retry"] {
+            assert!(FaultPolicyCfg::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+        // budgets at/above the shift width are legal inputs (the backoff
+        // arithmetic is finite for any accepted N); only past the bound
+        // does parsing reject
+        assert_eq!(FaultPolicyCfg::parse("budget=64").unwrap().budget, 64);
+        assert_eq!(FaultPolicyCfg::parse("budget=200").unwrap().budget, 200);
+        assert_eq!(FaultPolicyCfg::parse("budget=1024").unwrap().budget, MAX_RETRY_BUDGET);
+        for bad in ["budget=1025", "budget=4000000000"] {
             assert!(FaultPolicyCfg::parse(bad).is_err(), "`{bad}` must be rejected");
         }
     }

@@ -279,9 +279,10 @@ use crate::coordinator::RoundReport;
 use crate::runtime::{Engine, EnginePanic, EnginePool};
 use crate::simulation::{FaultClass, ScenarioError};
 use crate::tensor::Tensor;
+use crate::transport::{SimTransport, Transport};
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::{Condvar, Mutex};
 
 /// One client's planned local round, fully self-contained: a worker
@@ -309,13 +310,14 @@ pub struct LocalTask {
     pub stream: BatchStream,
     /// broadcast (downlink) transfer size — the analytic payload float
     /// count in every codec mode (the server sends the model out as-is;
-    /// only the *update upload* is wire-framed)
-    pub bytes: usize,
+    /// only the *update upload* is wire-framed). Billed bytes are u64
+    /// end to end (hlint rule C1).
+    pub bytes: u64,
     /// upload (uplink) transfer size: equal to `bytes` under
     /// `--codec analytic`, the measured `HWU1` frame length
     /// ([`crate::codec::upload_bytes`]) under the wire modes — the same
     /// number the planner priced ν from
-    pub up_bytes: usize,
+    pub up_bytes: u64,
     /// extra upload bytes billed for fault-recovery retransmissions:
     /// a recovered `corrupt` fault re-sends the frame once per retry, and
     /// each retransmission is real uplink traffic (PR 8 follow-up).
@@ -324,7 +326,7 @@ pub struct LocalTask {
     /// tasks with 0. Kept separate from [`LocalTask::up_bytes`] so the
     /// planned-frame-length check ([`CodecError::PlannedSizeDrift`])
     /// still compares single-frame sizes.
-    pub rebill_bytes: usize,
+    pub rebill_bytes: u64,
     /// wire-mode frame identity; `None` under `--codec analytic`, where
     /// the update never touches the codec and the run stays
     /// byte-identical to the pre-codec repo
@@ -365,26 +367,28 @@ pub struct WireTask {
 }
 
 /// A completed task: the plan metadata plus the local-training result.
+#[derive(Debug)]
 pub struct TaskOutcome {
     pub client: usize,
     pub p: usize,
     pub tau: usize,
     /// broadcast (downlink) bytes — see [`LocalTask::bytes`]
-    pub bytes: usize,
+    pub bytes: u64,
     /// upload (uplink) bytes actually billed: the planned frame
     /// ([`LocalTask::up_bytes`]) plus any fault-recovery retransmissions
     /// ([`LocalTask::rebill_bytes`])
-    pub up_bytes: usize,
+    pub up_bytes: u64,
     pub completion: f64,
     pub result: LocalResult,
 }
 
 /// A dispatched client that vanished mid-round (module docs, "Scenario
 /// churn"): broadcast billed, PJRT work skipped, upload never arrives.
+#[derive(Debug)]
 pub struct DroppedTask {
     pub client: usize,
     /// broadcast bytes (billed down at aggregation, never up)
-    pub bytes: usize,
+    pub bytes: u64,
     /// virtual instant of the vanish, relative to the round start
     pub drop_time: f64,
 }
@@ -393,10 +397,11 @@ pub struct DroppedTask {
 /// (module docs, "Engine-level fault injection"): broadcast billed,
 /// PJRT work skipped, upload never arrives — the fault analogue of
 /// [`DroppedTask`], with the class/retry provenance attached.
+#[derive(Debug)]
 pub struct FaultedTask {
     pub client: usize,
     /// broadcast bytes (billed down at aggregation, never up)
-    pub bytes: usize,
+    pub bytes: u64,
     pub class: FaultClass,
     /// retry attempts paid before the coordinator gave up
     pub retries: u32,
@@ -406,6 +411,7 @@ pub struct FaultedTask {
 }
 
 /// What became of a dispatched task — the completion channel's payload.
+#[derive(Debug)]
 pub enum TaskFate {
     /// the client trained and (virtually) uploaded
     Done(TaskOutcome),
@@ -415,30 +421,47 @@ pub enum TaskFate {
     Faulted(FaultedTask),
 }
 
-fn exec_task(engine: &Engine, task: LocalTask) -> Result<TaskFate> {
-    let LocalTask {
-        client, p, tau, lr, train_exec, probe_exec, payload, mut stream, bytes, up_bytes,
-        rebill_bytes, wire, completion, drop_at, fault,
-    } = task;
-    if let Some(drop_time) = drop_at {
+/// The fate a stamp already decided at dispatch time, if any: a
+/// `drop_at` stamp completes as [`TaskFate::Dropped`], an unrecovered
+/// fault stamp as [`TaskFate::Faulted`] — both without touching an
+/// engine. The single source of truth shared by [`exec_task`] (the
+/// in-process path) and the networked transport, which resolves stamped
+/// fates coordinator-side so stamps never travel the wire.
+pub(crate) fn stamped_fate(task: &LocalTask) -> Option<TaskFate> {
+    if let Some(drop_time) = task.drop_at {
         // the client vanished: its broadcast is already out, its result
         // could never be uploaded — skip the PJRT work entirely
-        return Ok(TaskFate::Dropped(DroppedTask { client, bytes, drop_time }));
+        return Some(TaskFate::Dropped(DroppedTask {
+            client: task.client,
+            bytes: task.bytes,
+            drop_time,
+        }));
     }
-    if let Some(stamp) = fault {
+    if let Some(stamp) = task.fault {
         if !stamp.recovered {
             // the fault policy gave this task up at stamp time (retry
             // budget exhausted, or `replan`): like a dropout, nobody
             // can receive the result — skip the PJRT work
-            return Ok(TaskFate::Faulted(FaultedTask {
-                client,
-                bytes,
+            return Some(TaskFate::Faulted(FaultedTask {
+                client: task.client,
+                bytes: task.bytes,
                 class: stamp.event.class,
                 retries: stamp.retries,
                 fault_time: stamp.fault_time,
             }));
         }
     }
+    None
+}
+
+pub(crate) fn exec_task(engine: &Engine, task: LocalTask) -> Result<TaskFate> {
+    if let Some(fate) = stamped_fate(&task) {
+        return Ok(fate);
+    }
+    let LocalTask {
+        client, p, tau, lr, train_exec, probe_exec, payload, mut stream, bytes, up_bytes,
+        rebill_bytes, wire, completion, drop_at: _, fault,
+    } = task;
     let mut result = run_local(
         engine,
         &train_exec,
@@ -454,10 +477,10 @@ fn exec_task(engine: &Engine, task: LocalTask) -> Result<TaskFate> {
         // billed, and aggregate from the *decoded* tensors so q8/top-k
         // error honestly reaches the accumulators
         let meta = FrameMeta { scheme: w.scheme, round: w.round, client: client as u64 };
-        let mut buf = Vec::with_capacity(up_bytes);
+        let mut buf = Vec::with_capacity(crate::util::cast::bytes_to_usize(up_bytes));
         let n = codec::encode_update(&mut buf, &meta, w.enc, &result.params)?;
-        if n != up_bytes {
-            return Err(CodecError::PlannedSizeDrift { planned: up_bytes, actual: n }.into());
+        if n as u64 != up_bytes {
+            return Err(CodecError::PlannedSizeDrift { planned: up_bytes, actual: n as u64 }.into());
         }
         if let Some(stamp) = fault {
             if stamp.recovered && stamp.event.class == FaultClass::Corrupt {
@@ -507,16 +530,20 @@ struct Dispatch {
     task: LocalTask,
 }
 
-/// A finished task travelling back over the completion channel.
-struct Completion {
-    seq: usize,
-    index: usize,
-    outcome: Result<TaskFate>,
+/// A finished task travelling back to the coordinator — the unit every
+/// [`Transport`] backend delivers, whatever the medium (the in-process
+/// completion channel, or a socket). `seq`/`index` echo the dispatch
+/// coordinates; `outcome` carries the fate or the task's typed error
+/// (which fails the run through the earliest-failed-task path).
+pub struct Completion {
+    pub seq: usize,
+    pub index: usize,
+    pub outcome: Result<TaskFate>,
 }
 
 /// The shared work queue: coordinator pushes, workers pop (blocking until
 /// work arrives or the queue is closed).
-struct TaskQueue {
+pub(crate) struct TaskQueue {
     state: Mutex<QueueState>,
     ready: Condvar,
 }
@@ -540,7 +567,7 @@ impl TaskQueue {
     /// with the queue lock held leaves `QueueState` (a plain deque +
     /// flag) fully valid, and the panic itself already travels the
     /// completion channel as a typed [`EnginePanic`].
-    fn push_round(&self, seq: usize, tasks: Vec<LocalTask>) {
+    pub(crate) fn push_round(&self, seq: usize, tasks: Vec<LocalTask>) {
         let mut st = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         for (index, task) in tasks.into_iter().enumerate() {
             st.tasks.push_back(Dispatch { seq, index, task });
@@ -629,13 +656,13 @@ fn into_ordered(slots: Vec<Option<Result<TaskFate>>>) -> Result<Vec<TaskFate>> {
 /// caller's `CloseOnDrop`). The quorum path instead *routes* cross-round
 /// completions into its pending buffer (see `QuorumState`).
 fn collect_completions(
-    rx: &Receiver<Completion>,
+    tp: &mut dyn Transport,
     expected: usize,
     seq: usize,
 ) -> Result<Vec<TaskFate>> {
     let mut slots: Vec<Option<Result<TaskFate>>> = (0..expected).map(|_| None).collect();
     for _ in 0..expected {
-        let c = rx.recv().map_err(|_| anyhow!("worker pool died mid-round"))?;
+        let c = tp.recv().map_err(|_| anyhow!("worker pool died mid-round"))?;
         if c.seq != seq {
             return Err(anyhow!(
                 "stray completion from round {} while round {seq} is in flight",
@@ -711,7 +738,7 @@ pub fn finish_dispatched_round<S: Strategy + ?Sized>(
         return Err(ScenarioError::EmptySurvivors { round }.into());
     }
     let straggler_down_bytes =
-        dropped.iter().map(|d| d.bytes).sum::<usize>() + faulted.iter().map(|f| f.bytes).sum::<usize>();
+        dropped.iter().map(|d| d.bytes).sum::<u64>() + faulted.iter().map(|f| f.bytes).sum::<u64>();
     let mut lost: Vec<usize> = dropped.iter().map(|d| d.client).collect();
     lost.extend(faulted.iter().map(|f| f.client));
     strategy.finish_round_quorum(
@@ -728,11 +755,12 @@ pub fn finish_dispatched_round<S: Strategy + ?Sized>(
     )
 }
 
-/// Coordinator body of [`RoundDriver::run_overlapped`]: plan, dispatch
-/// and collect `rounds` rounds against an already-running worker pool.
+/// Coordinator body of [`RoundDriver::run_overlapped`] (and of
+/// [`RoundDriver::run_overlapped_on`] for a caller-supplied backend):
+/// plan, dispatch and collect `rounds` rounds against an
+/// already-running [`Transport`].
 fn drive_rounds(
-    queue: &TaskQueue,
-    rx: &std::sync::mpsc::Receiver<Completion>,
+    tp: &mut dyn Transport,
     env: &mut FlEnv,
     strategy: &mut dyn Strategy,
     rounds: usize,
@@ -750,7 +778,7 @@ fn drive_rounds(
     let mut round_id = env.stamp_dropouts(&mut tasks);
     env.stamp_faults(&mut tasks, round_id)?;
     validate_completions(&tasks)?;
-    queue.push_round(0, tasks);
+    tp.dispatch(0, tasks)?;
 
     for h in 0..rounds {
         if h + 1 < rounds {
@@ -758,7 +786,7 @@ fn drive_rounds(
             // stragglers are still on the workers
             strategy.plan_ahead(env)?;
         }
-        let fates = collect_completions(rx, expected, h)?;
+        let fates = collect_completions(tp, expected, h)?;
         let (survivors, dropped, faulted) = split_fates(fates);
         reports.push(finish_dispatched_round(
             env, strategy, round_id, survivors, dropped, faulted,
@@ -775,7 +803,7 @@ fn drive_rounds(
             round_id = env.stamp_dropouts(&mut tasks);
             env.stamp_faults(&mut tasks, round_id)?;
             validate_completions(&tasks)?;
-            queue.push_round(h + 1, tasks);
+            tp.dispatch(h + 1, tasks)?;
         }
     }
     Ok(())
@@ -826,7 +854,7 @@ pub struct QuorumBatch {
     /// surviving stragglers *and* dropped clients (their payloads went
     /// out at dispatch; a survivor's upload is billed at merge, a
     /// dropped client's never)
-    pub straggler_down_bytes: usize,
+    pub straggler_down_bytes: u64,
     /// clients of this round that vanished mid-round (assignment order):
     /// their updates never merge — schemes retaining per-round plan
     /// state must retire them here or leak it
@@ -836,7 +864,7 @@ pub struct QuorumBatch {
     /// root-quorum edges, which replaces the flat path's per-member sum
     /// (each edge forwards ONE composed update). `None` on every flat
     /// path, which bills member uploads individually as before.
-    pub wan_up_bytes: Option<usize>,
+    pub wan_up_bytes: Option<u64>,
     /// hierarchical rounds only: the root aggregation instant relative
     /// to the round start — the slowest root-quorum edge's *arrival*,
     /// backhaul included. `None` ⇒ the quorum members' max completion
@@ -871,10 +899,10 @@ struct RoundMeta {
     /// any busy-device delay — see `delay_busy_clients`)
     completions: Vec<f64>,
     /// per assignment index: broadcast (downlink) transfer size
-    bytes: Vec<usize>,
+    bytes: Vec<u64>,
     /// per assignment index: upload (uplink) transfer size — analytic or
     /// measured wire-frame length, whatever the plan billed ν from
-    up_bytes: Vec<usize>,
+    up_bytes: Vec<u64>,
     /// per assignment index: the simulated client
     clients: Vec<usize>,
     /// per assignment index: stamped as a scenario mid-round dropout OR
@@ -1038,9 +1066,9 @@ impl QuorumState {
     /// Faulted fates drain silently — scheduled churn and policy-resolved
     /// fault losses are facts of the plan, not failures. Costs no extra
     /// wall-clock: the worker scope joins on these tasks anyway.
-    fn drain(&mut self, rx: &Receiver<Completion>) -> Result<()> {
+    fn drain(&mut self, tp: &mut dyn Transport) -> Result<()> {
         while self.outstanding > 0 {
-            let c = rx.recv().map_err(|_| anyhow!("worker pool died during drain"))?;
+            let c = tp.recv().map_err(|_| anyhow!("worker pool died during drain"))?;
             self.file(c)?;
         }
         // ordered iteration replaces the old collect-and-sort: same
@@ -1055,12 +1083,17 @@ impl QuorumState {
 
     /// Block until the fate of `(seq, index)` is available, parking
     /// everything else that drains off the channel in the meantime.
-    fn demand(&mut self, rx: &Receiver<Completion>, seq: usize, index: usize) -> Result<TaskFate> {
+    fn demand(
+        &mut self,
+        tp: &mut dyn Transport,
+        seq: usize,
+        index: usize,
+    ) -> Result<TaskFate> {
         loop {
             if let Some(outcome) = self.arrived.remove(&(seq, index)) {
                 return outcome;
             }
-            let c = rx.recv().map_err(|_| anyhow!("worker pool died mid-round"))?;
+            let c = tp.recv().map_err(|_| anyhow!("worker pool died mid-round"))?;
             self.file(c)?;
         }
     }
@@ -1072,11 +1105,11 @@ impl QuorumState {
     /// rest of the dropout machinery.
     fn demand_done(
         &mut self,
-        rx: &Receiver<Completion>,
+        tp: &mut dyn Transport,
         seq: usize,
         index: usize,
     ) -> Result<TaskOutcome> {
-        match self.demand(rx, seq, index)? {
+        match self.demand(tp, seq, index)? {
             TaskFate::Done(o) => Ok(o),
             TaskFate::Dropped(d) => Err(ScenarioError::PhantomMerge {
                 round: seq,
@@ -1101,8 +1134,7 @@ impl QuorumState {
 // hlint::allow(panic_path, item): every index below is either `i < n = meta.*.len()` (RoundMeta's parallel vectors) or drawn from `survivors_idx`, whose entries are `0..n` by construction
 #[allow(clippy::too_many_arguments, clippy::indexing_slicing)]
 fn drive_quorum(
-    queue: &TaskQueue,
-    rx: &Receiver<Completion>,
+    tp: &mut dyn Transport,
     env: &mut FlEnv,
     strategy: &mut dyn Strategy,
     rounds: usize,
@@ -1125,7 +1157,7 @@ fn drive_quorum(
     validate_completions(&tasks)?;
     let mut meta = RoundMeta::capture(&tasks, env.clock.now());
     state.register_round(tasks.len());
-    queue.push_round(0, tasks);
+    tp.dispatch(0, tasks)?;
 
     for h in 0..rounds {
         if h + 1 < rounds {
@@ -1186,13 +1218,13 @@ fn drive_quorum(
         let (members, t_q, wan_up_bytes, alpha, deferred): (
             Vec<usize>,
             f64,
-            Option<usize>,
+            Option<u64>,
             f64,
             HashMap<usize, f64>,
         ) = if let Some(hcfg) = &hierarchy {
             // the hierarchy plans WAN forwards from *upload* sizes — in a
             // wire mode an edge's composed forward is a measured frame
-            let surv_bytes: Vec<usize> =
+            let surv_bytes: Vec<u64> =
                 survivors_idx.iter().map(|&i| meta.up_bytes[i]).collect();
             let plan = plan_hierarchy(&surv_completions, &surv_bytes, hcfg, policy, signals);
             let members: Vec<usize> =
@@ -1224,11 +1256,11 @@ fn drive_quorum(
         // anything else racing off the channel parks in the buffer
         let mut quorum_outcomes = Vec::with_capacity(members.len());
         for &i in &members {
-            quorum_outcomes.push(state.demand_done(rx, h, i)?);
+            quorum_outcomes.push(state.demand_done(tp, h, i)?);
         }
         let mut late = Vec::with_capacity(due.len());
         for p in &due {
-            let outcome = state.demand_done(rx, p.seq, p.index)?;
+            let outcome = state.demand_done(tp, p.seq, p.index)?;
             let staleness = h - p.seq;
             late.push(LateArrival {
                 origin_round: p.seq,
@@ -1244,7 +1276,7 @@ fn drive_quorum(
         // the pending buffer — its upload never arrives. A hierarchical
         // round overrides the landing instant with the plan's deferred
         // arrival (late edge as a unit, or individual backhaul forward).
-        let mut straggler_down = 0usize;
+        let mut straggler_down = 0u64;
         let mut dropped_clients = Vec::new();
         {
             let mut m = members.iter().peekable();
@@ -1297,7 +1329,7 @@ fn drive_quorum(
         reports.push(report);
         if let (Some(cb), Some(report)) = (observer.as_mut(), reports.last()) {
             if !cb(&*env, &*strategy, report)? {
-                return state.drain(rx);
+                return state.drain(tp);
             }
         }
 
@@ -1315,12 +1347,12 @@ fn drive_quorum(
             validate_completions(&tasks)?;
             meta = RoundMeta::capture(&tasks, t_start);
             state.register_round(tasks.len());
-            queue.push_round(h + 1, tasks);
+            tp.dispatch(h + 1, tasks)?;
         }
     }
     // outstanding stragglers never merge, but their failures must still
     // surface (see QuorumState::drain)
-    state.drain(rx)
+    state.drain(tp)
 }
 
 /// Dispatches rounds' tasks over up to `workers` threads, worker *i*
@@ -1388,11 +1420,12 @@ impl RoundDriver {
             }
             drop(tx);
             let _close = CloseOnDrop(&queue);
-            queue.push_round(0, tasks);
+            let mut tp = SimTransport::new(&queue, rx);
+            tp.dispatch(0, tasks)?;
             // close immediately: this is the whole dispatch, so workers
             // drain and exit while we collect
             queue.close();
-            collect_completions(&rx, n, 0)
+            collect_completions(&mut tp, n, 0)
         })
     }
 
@@ -1435,9 +1468,34 @@ impl RoundDriver {
             // must still close the queue or the parked workers would
             // never join and the scope would hang forever
             let _close = CloseOnDrop(&queue);
-            drive_rounds(&queue, &rx, env, strategy, rounds, &mut reports)
+            let mut tp = SimTransport::new(&queue, rx);
+            drive_rounds(&mut tp, env, strategy, rounds, &mut reports)
         });
         result.map(|()| reports)
+    }
+
+    /// [`RoundDriver::run_overlapped`] against a caller-supplied
+    /// [`Transport`] backend instead of the in-process worker pool.
+    ///
+    /// The transport owns its executors (`self.workers` is a sim-pool
+    /// concept and is ignored here), but the coordinator loop — and with
+    /// it every plan, stamp, aggregation and billing decision — is the
+    /// same code path, so a backend that executes tasks faithfully
+    /// reproduces the simulation byte for byte. The simulation is the
+    /// oracle: `transport::tcp`'s parity suite pins exactly this.
+    pub fn run_overlapped_on(
+        &self,
+        tp: &mut dyn Transport,
+        env: &mut FlEnv,
+        strategy: &mut dyn Strategy,
+        rounds: usize,
+    ) -> Result<Vec<RoundReport>> {
+        if rounds == 0 {
+            return Ok(Vec::new());
+        }
+        let mut reports = Vec::with_capacity(rounds);
+        drive_rounds(tp, env, strategy, rounds, &mut reports)?;
+        Ok(reports)
     }
 
     /// Drive `rounds` semi-async K-of-N quorum rounds of `strategy`
@@ -1486,9 +1544,9 @@ impl RoundDriver {
             drop(tx);
 
             let _close = CloseOnDrop(&queue);
+            let mut tp = SimTransport::new(&queue, rx);
             drive_quorum(
-                &queue,
-                &rx,
+                &mut tp,
                 env,
                 strategy,
                 rounds,
@@ -1499,6 +1557,38 @@ impl RoundDriver {
             )
         });
         result.map(|()| reports)
+    }
+
+    /// [`RoundDriver::run_quorum`] against a caller-supplied
+    /// [`Transport`] backend — the quorum analogue of
+    /// [`RoundDriver::run_overlapped_on`]. Quorum semantics live on the
+    /// virtual clock, so the decided (K, α), membership ranking and
+    /// staleness weights are identical whatever the medium; only wall
+    /// clocks differ.
+    pub fn run_quorum_on(
+        &self,
+        tp: &mut dyn Transport,
+        env: &mut FlEnv,
+        strategy: &mut dyn Strategy,
+        rounds: usize,
+        policy: &mut QuorumPolicy,
+        observer: Option<RoundObserver<'_>>,
+    ) -> Result<Vec<RoundReport>> {
+        if rounds == 0 {
+            return Ok(Vec::new());
+        }
+        let mut reports = Vec::with_capacity(rounds);
+        drive_quorum(
+            tp,
+            env,
+            strategy,
+            rounds,
+            policy,
+            self.hierarchy,
+            observer,
+            &mut reports,
+        )?;
+        Ok(reports)
     }
 }
 
@@ -1516,7 +1606,7 @@ pub fn collect_quorum_round(
     block_variance: f64,
 ) -> RoundReport {
     let mut down = batch.straggler_down_bytes;
-    let mut member_up = 0usize;
+    let mut member_up = 0u64;
     let mut completion = Vec::with_capacity(batch.quorum.len());
     let mut losses = Vec::with_capacity(batch.quorum.len() + batch.late.len());
     for o in &batch.quorum {
@@ -1563,8 +1653,8 @@ pub fn collect_round(
     outcomes: &[TaskOutcome],
     block_variance: f64,
 ) -> RoundReport {
-    let mut down = 0usize;
-    let mut up = 0usize;
+    let mut down = 0u64;
+    let mut up = 0u64;
     let mut completion = Vec::with_capacity(outcomes.len());
     let mut losses = Vec::with_capacity(outcomes.len());
     for o in outcomes {
@@ -1704,7 +1794,7 @@ mod tests {
         let (survivors, dropped, faulted) = split_fates(fates);
         assert_eq!(survivors.iter().map(|o| o.client).collect::<Vec<_>>(), vec![10, 12]);
         assert_eq!(dropped.iter().map(|d| d.client).collect::<Vec<_>>(), vec![11, 13]);
-        assert_eq!(dropped.iter().map(|d| d.bytes).sum::<usize>(), 16);
+        assert_eq!(dropped.iter().map(|d| d.bytes).sum::<u64>(), 16);
         assert_eq!(faulted.iter().map(|f| f.client).collect::<Vec<_>>(), vec![14]);
         assert_eq!(faulted[0].class, FaultClass::Exec);
         assert_eq!(faulted[0].retries, 2);
@@ -1738,20 +1828,22 @@ mod tests {
     fn stray_completion_is_an_error_not_a_panic() {
         // regression: a completion from a round not in flight used to hit
         // `assert_eq!` and abort the coordinator
+        let queue = TaskQueue::new();
         let (tx, rx) = channel::<Completion>();
+        let mut tp = SimTransport::new(&queue, rx);
         tx.send(Completion { seq: 3, index: 0, outcome: done(0) }).unwrap();
-        let err = collect_completions(&rx, 1, 0).unwrap_err();
+        let err = collect_completions(&mut tp, 1, 0).unwrap_err();
         assert!(err.to_string().contains("stray completion"), "unexpected error: {err}");
 
         // duplicate slot
         tx.send(Completion { seq: 0, index: 0, outcome: done(0) }).unwrap();
         tx.send(Completion { seq: 0, index: 0, outcome: done(0) }).unwrap();
-        let err = collect_completions(&rx, 2, 0).unwrap_err();
+        let err = collect_completions(&mut tp, 2, 0).unwrap_err();
         assert!(err.to_string().contains("duplicate completion"), "unexpected error: {err}");
 
         // out-of-range index
         tx.send(Completion { seq: 0, index: 9, outcome: done(0) }).unwrap();
-        let err = collect_completions(&rx, 1, 0).unwrap_err();
+        let err = collect_completions(&mut tp, 1, 0).unwrap_err();
         assert!(err.to_string().contains("out of range"), "unexpected error: {err}");
     }
 
@@ -1931,7 +2023,9 @@ mod tests {
 
     #[test]
     fn quorum_state_routes_cross_round_completions() {
+        let queue = TaskQueue::new();
         let (tx, rx) = channel::<Completion>();
+        let mut tp = SimTransport::new(&queue, rx);
         let mut state = QuorumState::default();
         state.register_round(2); // round 0
         state.register_round(1); // round 1
@@ -1941,9 +2035,9 @@ mod tests {
         tx.send(Completion { seq: 1, index: 0, outcome: done(10) }).unwrap();
         tx.send(Completion { seq: 0, index: 1, outcome: done(11) }).unwrap();
         tx.send(Completion { seq: 0, index: 0, outcome: done(12) }).unwrap();
-        assert_eq!(state.demand_done(&rx, 0, 0).unwrap().client, 12);
-        assert_eq!(state.demand_done(&rx, 0, 1).unwrap().client, 11);
-        assert_eq!(state.demand_done(&rx, 1, 0).unwrap().client, 10);
+        assert_eq!(state.demand_done(&mut tp, 0, 0).unwrap().client, 12);
+        assert_eq!(state.demand_done(&mut tp, 0, 1).unwrap().client, 11);
+        assert_eq!(state.demand_done(&mut tp, 1, 0).unwrap().client, 10);
 
         // never-dispatched round and duplicates are errors
         let c = Completion { seq: 5, index: 0, outcome: done(0) };
@@ -1954,12 +2048,14 @@ mod tests {
 
     #[test]
     fn demanding_a_dropped_fate_as_merge_input_is_a_scheduler_bug() {
+        let queue = TaskQueue::new();
         let (tx, rx) = channel::<Completion>();
+        let mut tp = SimTransport::new(&queue, rx);
         let mut state = QuorumState::default();
         state.register_round(2);
         let fate = TaskFate::Dropped(DroppedTask { client: 4, bytes: 0, drop_time: 1.0 });
         tx.send(Completion { seq: 0, index: 0, outcome: Ok(fate) }).unwrap();
-        let err = state.demand_done(&rx, 0, 0).unwrap_err();
+        let err = state.demand_done(&mut tp, 0, 0).unwrap_err();
         match err.downcast_ref::<ScenarioError>() {
             Some(&ScenarioError::PhantomMerge { round: 0, index: 0, client: 4, .. }) => {}
             other => panic!("expected a typed PhantomMerge, got {other:?} ({err})"),
@@ -1975,7 +2071,7 @@ mod tests {
             fault_time: 3.0,
         });
         tx.send(Completion { seq: 0, index: 1, outcome: Ok(fate) }).unwrap();
-        let err = state.demand_done(&rx, 0, 1).unwrap_err();
+        let err = state.demand_done(&mut tp, 0, 1).unwrap_err();
         match err.downcast_ref::<ScenarioError>() {
             Some(&ScenarioError::PhantomMerge { round: 0, index: 1, client: 7, fate }) => {
                 assert!(fate.contains("fault"), "fate string should name the fault: {fate}");
@@ -1988,24 +2084,28 @@ mod tests {
     fn drain_surfaces_failed_never_merged_stragglers() {
         // a straggler whose update would be discarded at run end must
         // still fail the run if its task errored
+        let queue = TaskQueue::new();
         let (tx, rx) = channel::<Completion>();
+        let mut tp = SimTransport::new(&queue, rx);
         let mut state = QuorumState::default();
         state.register_round(2);
         tx.send(Completion { seq: 0, index: 0, outcome: done(1) }).unwrap();
         tx.send(Completion { seq: 0, index: 1, outcome: Err(anyhow!("engine died")) }).unwrap();
-        let err = state.drain(&rx).unwrap_err();
+        let err = state.drain(&mut tp).unwrap_err();
         assert!(err.to_string().contains("straggler of round 0"), "unexpected error: {err}");
         assert!(err.to_string().contains("engine died"), "unexpected error: {err}");
 
         // all-Ok leftovers drain cleanly — including dropped fates, which
         // are scheduled churn, not faults
+        let queue = TaskQueue::new();
         let (tx, rx) = channel::<Completion>();
+        let mut tp = SimTransport::new(&queue, rx);
         let mut state = QuorumState::default();
         state.register_round(2);
         tx.send(Completion { seq: 0, index: 0, outcome: done(2) }).unwrap();
         let fate = TaskFate::Dropped(DroppedTask { client: 3, bytes: 0, drop_time: 0.2 });
         tx.send(Completion { seq: 0, index: 1, outcome: Ok(fate) }).unwrap();
-        state.drain(&rx).unwrap();
+        state.drain(&mut tp).unwrap();
     }
 
     #[test]
@@ -2018,7 +2118,9 @@ mod tests {
         // structural — this test keeps anyone from regressing it back to
         // an unordered map.
         let run = |arrivals: &[(usize, usize)]| -> String {
+            let queue = TaskQueue::new();
             let (tx, rx) = channel::<Completion>();
+            let mut tp = SimTransport::new(&queue, rx);
             let mut state = QuorumState::default();
             state.register_round(2); // round 0
             state.register_round(2); // round 1
@@ -2030,7 +2132,7 @@ mod tests {
                 };
                 tx.send(Completion { seq, index, outcome }).unwrap();
             }
-            state.drain(&rx).unwrap_err().to_string()
+            state.drain(&mut tp).unwrap_err().to_string()
         };
         let forward = run(&[(0, 0), (0, 1), (1, 0), (1, 1)]);
         let reversed = run(&[(1, 1), (1, 0), (0, 1), (0, 0)]);

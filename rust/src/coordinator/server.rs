@@ -191,7 +191,7 @@ impl HeroesServer {
                 probe_exec: probing.then(|| Manifest::probe_name(&self.family, a.p)),
                 payload: self.global.reduced_inputs(&env.info, a.p, &a.selection.blocks)?,
                 stream: env.batch_stream(a.client, self.round)?,
-                bytes: env.info.bytes_composed_of(a.p)?,
+                bytes: env.info.bytes_composed_of(a.p)? as u64,
                 up_bytes: crate::codec::upload_bytes(
                     env.info.composed_params_of(a.p)?,
                     env.info.bytes_composed_of(a.p)?,

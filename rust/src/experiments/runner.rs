@@ -27,6 +27,7 @@ use crate::coordinator::RoundReport;
 use crate::metrics::Recorder;
 use crate::runtime::EnginePool;
 use crate::simulation::Scenario;
+use crate::transport::{Transport, TransportCfg};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::path::Path;
@@ -109,6 +110,62 @@ pub fn run_scheme(
     let (loss0, acc0) = strategy.evaluate(&env)?;
     rec.push_eval(0, 0.0, &env.traffic, loss0, acc0, loss0, strategy.block_variance());
 
+    // Route the rounds through the configured transport. `sim` keeps
+    // the historical entry points (each chunk spawns its in-process
+    // worker pool) byte for byte; `tcp` binds a localhost server, runs
+    // `workers` loopback executor threads over real sockets, and drives
+    // every chunk through one persistent transport. Decisions are
+    // transport-independent (see `transport` module docs), so both
+    // routes must record identical series.
+    match &cfg.transport {
+        TransportCfg::Sim => {
+            drive_recorded(pool, None, cfg, scheme, stop, &mut env, strategy.as_mut(), &mut rec, loss0)?;
+        }
+        TransportCfg::Tcp(addr) => {
+            #[cfg(feature = "net")]
+            {
+                log::info!("[{scheme}] transport tcp:{addr} ({} loopback executors)", cfg.workers);
+                let tcp = crate::transport::tcp::TcpCfg::new(addr.as_str());
+                crate::transport::tcp::with_loopback(pool, cfg.workers, tcp, |tp| {
+                    drive_recorded(
+                        pool, Some(tp), cfg, scheme, stop, &mut env, strategy.as_mut(), &mut rec,
+                        loss0,
+                    )
+                })?;
+            }
+            #[cfg(not(feature = "net"))]
+            return Err(anyhow::anyhow!(
+                "--transport tcp:{addr} needs the `net` cargo feature \
+                 (rebuild with `cargo build --features net`)"
+            ));
+        }
+    }
+    if !cfg.faults.is_off() {
+        // attach the run's fault accounting; fault-free runs keep the
+        // pre-fault output schema byte for byte
+        rec.set_resilience(*env.resilience());
+    }
+    Ok(rec)
+}
+
+/// The transport-generic round loop behind [`run_scheme`]: quorum mode
+/// runs the whole budget as one semi-async pipeline, otherwise rounds
+/// between evaluation points form chunks. `net: None` is the historical
+/// in-process path (serial, `--overlap`, or quorum worker pools, byte
+/// for byte); `net: Some(tp)` drives the same loops over the given
+/// transport, which owns the executors for the entire run.
+#[allow(clippy::too_many_arguments)]
+fn drive_recorded(
+    pool: &EnginePool,
+    mut net: Option<&mut dyn Transport>,
+    cfg: &ExperimentConfig,
+    scheme: &str,
+    stop: StopCondition,
+    env: &mut FlEnv,
+    strategy: &mut dyn Strategy,
+    rec: &mut Recorder,
+    loss0: f64,
+) -> Result<()> {
     // With overlap, rounds between two evaluation points form one
     // pipelined chunk; otherwise they run one by one. Reports (and thus
     // every evaluation) are byte-identical across both paths. The
@@ -130,37 +187,39 @@ pub fn run_scheme(
                 // completion set is exactly the K aggregated members
                 let k = report.completion_times.len();
                 return eval_point(
-                    env, strategy, &mut rec, scheme, done, last_train_loss, stop, Some(k),
+                    env, strategy, rec, scheme, done, last_train_loss, stop, Some(k),
                 );
             }
             Ok(true)
         };
-        driver.run_quorum(
-            pool,
-            &mut env,
-            strategy.as_mut(),
-            total,
-            &mut policy,
-            Some(&mut observer),
-        )?;
-        if !cfg.faults.is_off() {
-            rec.set_resilience(*env.resilience());
+        match net.as_deref_mut() {
+            Some(tp) => {
+                driver.run_quorum_on(tp, env, strategy, total, &mut policy, Some(&mut observer))?;
+            }
+            None => {
+                driver.run_quorum(pool, env, strategy, total, &mut policy, Some(&mut observer))?;
+            }
         }
-        return Ok(rec);
+        return Ok(());
     }
 
     let mut round = 0usize;
     while round < cfg.rounds {
         let until_eval = cfg.eval_every - round % cfg.eval_every;
         let chunk = until_eval.min(cfg.rounds - round).max(1);
-        let reports = if cfg.overlap {
-            driver.run_overlapped(pool, &mut env, strategy.as_mut(), chunk)?
-        } else {
-            let mut out = Vec::with_capacity(chunk);
-            for _ in 0..chunk {
-                out.push(strategy.run_round(&mut env)?);
+        let reports = match net.as_deref_mut() {
+            // the networked transport owns the executors; every chunk
+            // (overlapped or not — they are byte-identical) rides the
+            // transport-generic drive loop
+            Some(tp) => driver.run_overlapped_on(tp, env, strategy, chunk)?,
+            None if cfg.overlap => driver.run_overlapped(pool, env, strategy, chunk)?,
+            None => {
+                let mut out = Vec::with_capacity(chunk);
+                for _ in 0..chunk {
+                    out.push(strategy.run_round(env)?);
+                }
+                out
             }
-            out
         };
         for report in &reports {
             last_train_loss = report.mean_loss;
@@ -169,19 +228,14 @@ pub fn run_scheme(
         round += chunk;
         if round % cfg.eval_every == 0 || round == cfg.rounds {
             let go = eval_point(
-                &env, strategy.as_ref(), &mut rec, scheme, round, last_train_loss, stop, None,
+                env, &*strategy, rec, scheme, round, last_train_loss, stop, None,
             )?;
             if !go {
                 break;
             }
         }
     }
-    if !cfg.faults.is_off() {
-        // attach the run's fault accounting; fault-free runs keep the
-        // pre-fault output schema byte for byte
-        rec.set_resilience(*env.resilience());
-    }
-    Ok(rec)
+    Ok(())
 }
 
 /// Run several schemes under identical configs; optionally persist each

@@ -28,4 +28,5 @@ pub mod model;
 pub mod runtime;
 pub mod simulation;
 pub mod tensor;
+pub mod transport;
 pub mod util;

@@ -6,6 +6,7 @@
 //! heroes train [--family cnn] [--scheme heroes] [--rounds N] [...]
 //! heroes inspect-artifacts  # list compiled executables + cost model
 //! heroes list               # available experiments / schemes
+//! heroes client --connect <addr>   # executor for --transport tcp
 //! ```
 //!
 //! Overrides: --clients --k --rounds --lr --seed --gamma --phi --tau
@@ -77,6 +78,20 @@
 //! aborts the run with a typed error; per-run accounting lands in the
 //! recorder output as the `resilience` ledger, and the adaptive
 //! quorum controller reads the observed fault rate as churn)
+//! --transport sim|tcp:<addr> (which backend executes dispatched
+//! tasks, `transport` module: `sim` — default, byte-identical to every
+//! prior release — runs the in-process worker pool; `tcp:<addr>` binds
+//! a localhost server — `tcp:127.0.0.1:0` picks a free port — and
+//! dispatches length-prefixed `HWU1`-framed tasks to connected
+//! executors: in-process loopback threads, or `heroes client
+//! --connect <addr>` processes. All decisions are virtual-clock plan
+//! facts carried in the messages, so a tcp run must reproduce the sim
+//! byte for byte — same plans, chosen K, aggregated model and billed
+//! bytes; only wall clocks differ. Wall time only decides whether a
+//! fate arrives: a timed-out or vanished executor completes its tasks
+//! as `Dropped`, a protocol violation as `Faulted`. Needs the `net`
+//! cargo feature — built without it, `--transport tcp:` is a typed
+//! error)
 
 // Outside the determinism layers (CONTRIBUTING.md): CLI surface,
 // report generation and dev tooling may panic on programmer error.
@@ -105,6 +120,7 @@ fn run() -> Result<()> {
     match cmd {
         "exp" => cmd_exp(&args),
         "train" => cmd_train(&args),
+        "client" => cmd_client(&args),
         "inspect-artifacts" => cmd_inspect(),
         "list" => {
             println!("experiments: {}", ALL_EXPERIMENTS.join(" "));
@@ -112,7 +128,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         _ => {
-            println!("usage: heroes <exp|train|inspect-artifacts|list> [...]");
+            println!("usage: heroes <exp|train|client|inspect-artifacts|list> [...]");
             println!("       see rust/src/main.rs docs for flags");
             Ok(())
         }
@@ -193,6 +209,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         last.traffic_gb,
         last.test_acc * 100.0
     );
+    Ok(())
+}
+
+/// Executor process for `--transport tcp:<addr>`: connect to the
+/// coordinator, greet, and serve task messages until it hangs up. Needs
+/// the same `make artifacts` output as the coordinator — both sides run
+/// the identical AOT executables, which is what keeps tcp runs
+/// byte-identical to the simulation.
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow!("usage: heroes client --connect <host:port>"))?;
+    let pool = EnginePool::new(load_manifest()?, 1)?;
+    let stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow!("connecting to coordinator {addr}: {e}"))?;
+    heroes::transport::client::client_loop(stream, pool.primary())?;
+    println!("coordinator closed the session; client exiting");
     Ok(())
 }
 

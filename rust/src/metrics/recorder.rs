@@ -214,7 +214,7 @@ mod tests {
     use super::*;
 
     /// A meter holding the given per-direction byte totals.
-    fn meter(down: usize, up: usize) -> TrafficMeter {
+    fn meter(down: u64, up: u64) -> TrafficMeter {
         let mut t = TrafficMeter::new();
         t.record_down(down);
         t.record_up(up);

@@ -40,12 +40,12 @@ impl TrafficMeter {
         TrafficMeter::default()
     }
 
-    pub fn record_down(&mut self, bytes: usize) {
-        self.down_bytes += bytes as u64;
+    pub fn record_down(&mut self, bytes: u64) {
+        self.down_bytes += bytes;
     }
 
-    pub fn record_up(&mut self, bytes: usize) {
-        self.up_bytes += bytes as u64;
+    pub fn record_up(&mut self, bytes: u64) {
+        self.up_bytes += bytes;
     }
 
     pub fn total_bytes(&self) -> u64 {

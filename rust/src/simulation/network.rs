@@ -29,12 +29,12 @@ pub const MAX_TRANSFER_SECS: f64 = 1e9;
 
 /// Seconds to move `bytes` over a `bps` link, saturating on degenerate
 /// bandwidth (see [`MAX_TRANSFER_SECS`]).
-fn transfer_time(bytes: usize, bps: f64) -> f64 {
+fn transfer_time(bytes: u64, bps: f64) -> f64 {
     // NaN is caught by the finiteness check, so `<= 0.0` is total here
     if !bps.is_finite() || bps <= 0.0 {
         return MAX_TRANSFER_SECS;
     }
-    (crate::util::cast::bytes_to_f64(bytes as u64) / bps).min(MAX_TRANSFER_SECS)
+    (crate::util::cast::bytes_to_f64(bytes) / bps).min(MAX_TRANSFER_SECS)
 }
 
 /// One round's sampled link for a client.
@@ -50,12 +50,12 @@ impl LinkSample {
     /// Seconds to upload `bytes` (paper Eq. 18). Saturating: a 0 Mb/s or
     /// non-finite link (trace-driven links can legitimately hit the
     /// floor) yields [`MAX_TRANSFER_SECS`], never `inf`/NaN.
-    pub fn upload_time(&self, bytes: usize) -> f64 {
+    pub fn upload_time(&self, bytes: u64) -> f64 {
         transfer_time(bytes, self.up_bps)
     }
 
     /// Seconds to download `bytes`. Saturating like [`LinkSample::upload_time`].
-    pub fn download_time(&self, bytes: usize) -> f64 {
+    pub fn download_time(&self, bytes: u64) -> f64 {
         transfer_time(bytes, self.down_bps)
     }
 }
@@ -177,7 +177,7 @@ mod tests {
         assert_eq!(dead.upload_time(0), MAX_TRANSFER_SECS);
         // a near-dead link whose quotient overflows f64 saturates too
         let tiny = LinkSample { up_bps: f64::MIN_POSITIVE, down_bps: f64::MIN_POSITIVE };
-        assert_eq!(tiny.upload_time(usize::MAX), MAX_TRANSFER_SECS);
+        assert_eq!(tiny.upload_time(u64::MAX), MAX_TRANSFER_SECS);
         // healthy links are untouched (bit-exact: min() with a larger cap)
         let l = LinkSample { up_bps: 2.0 * MBIT, down_bps: 10.0 * MBIT };
         assert_eq!(l.upload_time(1_000_000).to_bits(), (1_000_000.0 / (2.0 * MBIT)).to_bits());

@@ -1,0 +1,57 @@
+//! The executor side of the networked transport: a synchronous loop
+//! that greets the coordinator, then serves task messages until the
+//! coordinator hangs up.
+//!
+//! Runs identically as an in-process thread (the loopback tests and
+//! `transport::tcp::with_loopback`) or as a separate OS process
+//! (`heroes client --connect <addr>`): both paths are a plain
+//! `std::net::TcpStream` plus an [`Engine`] — no async runtime on the
+//! client, so the `net` cargo feature is not needed here.
+//!
+//! Execution reuses the exact worker body of the simulation
+//! ([`exec_task`]): same PJRT executables, same wire-frame
+//! encode/verify/decode, same divergence retry — the only difference
+//! is that batches replay from the task's shipped schedule instead of
+//! a live loader, which `BatchStream::Fixed` makes bit-identical.
+
+use crate::coordinator::round::{exec_task, TaskFate};
+use crate::runtime::Engine;
+use crate::transport::proto::{self, KIND_RESULT, KIND_TASK};
+use anyhow::{anyhow, Result};
+use std::net::TcpStream;
+
+/// Serve one coordinator connection until it closes the stream.
+///
+/// A clean end-of-stream at a message boundary is a normal shutdown
+/// (`Ok(())`); a mid-message cut or a malformed message is an error.
+/// Task failures do *not* tear the loop down — they travel back as
+/// error results and fail the run coordinator-side, exactly like an
+/// in-process task error.
+pub fn client_loop(mut stream: TcpStream, engine: &Engine) -> Result<()> {
+    // results are small; don't batch them behind Nagle
+    stream.set_nodelay(true)?;
+    proto::write_msg(&mut stream, proto::KIND_HELLO, &proto::hello_body())?;
+    loop {
+        let Some((kind, body)) = proto::read_msg(&mut stream, proto::FRAME_CAP)? else {
+            return Ok(());
+        };
+        if kind != KIND_TASK {
+            return Err(anyhow!("client expected a task message, got kind {kind}"));
+        }
+        let (seq, index, task) = proto::decode_task_msg(&body)?;
+        let reply = match exec_task(engine, task) {
+            Ok(TaskFate::Done(outcome)) => proto::encode_done_msg(seq, index, &outcome)?,
+            // decode_task_msg strips drop/unrecovered-fault stamps (the
+            // coordinator resolves those fates locally), so a stamped
+            // fate surfacing here means the two sides disagree about
+            // the protocol — report it instead of guessing
+            Ok(_) => proto::encode_err_msg(
+                seq,
+                index,
+                "stamped fate executed client-side: dropout/fault stamps must never ship",
+            ),
+            Err(e) => proto::encode_err_msg(seq, index, &format!("{e:#}")),
+        };
+        proto::write_msg(&mut stream, KIND_RESULT, &reply)?;
+    }
+}

@@ -1,0 +1,148 @@
+//! Transport abstraction for the coordinator's dispatch/collect loop.
+//!
+//! The round driver's coordinator bodies (`drive_rounds`,
+//! `drive_quorum`, `collect_completions`) are written against the
+//! [`Transport`] trait: dispatch a round's [`LocalTask`]s, receive
+//! [`Completion`]s in whatever order the executors produce them. Two
+//! backends implement it:
+//!
+//! - [`SimTransport`] (crate-internal): the in-process worker pool —
+//!   a shared task queue plus an mpsc completion channel. This is the
+//!   historical path, byte-identical to the pre-transport repo for
+//!   every `--workers`/`--pool`/`--overlap`/`--quorum` configuration.
+//! - `TcpTransport` (`transport::tcp`, behind the `net` cargo
+//!   feature): a localhost TCP server speaking the framing below, with
+//!   clients running as in-process threads or separate `heroes client`
+//!   processes.
+//!
+//! # Framing on the wire
+//!
+//! Every message is `[u32 kind (LE)][u64 body_len (LE)][body]` — see
+//! [`proto`] for the three kinds (hello/task/result) and their body
+//! layouts. Tensor groups travel as raw `HWU1` frames (the codec's
+//! wire format, bit-exact by construction), scalars as IEEE-754 bit
+//! patterns, so no value is ever reformatted in transit. Incremental
+//! reads tolerate arbitrary chunking; a declared length above the
+//! receiver's cap is a typed error before any allocation.
+//!
+//! # Clock ownership
+//!
+//! The virtual clock owns every *decision*: completion times, quorum
+//! membership, staleness weights, billed traffic are all plan facts
+//! computed coordinator-side and carried in the messages. The wall
+//! clock (legal only inside `transport/tcp.rs` — hlint rule D1) decides
+//! only whether a fate arrives at all: a connect/read/write timeout
+//! maps the task to [`TaskFate::Dropped`], a protocol violation to
+//! [`TaskFate::Faulted`], and no wall-clock quantity ever enters a
+//! virtual-time field (synthesized fates carry `0.0` timestamps).
+//!
+//! # The simulation is the oracle
+//!
+//! Because decisions are transport-independent, a run over any faithful
+//! backend must reproduce the simulation byte for byte — same plans,
+//! same chosen K, same aggregated model, same billed bytes; only wall
+//! clocks differ. `rust/tests/integration_transport.rs` pins sim-vs-net
+//! parity on exactly this contract.
+//!
+//! [`TaskFate::Dropped`]: crate::coordinator::round::TaskFate::Dropped
+//! [`TaskFate::Faulted`]: crate::coordinator::round::TaskFate::Faulted
+
+pub mod client;
+pub mod proto;
+mod sim;
+#[cfg(feature = "net")]
+pub mod tcp;
+
+pub(crate) use sim::SimTransport;
+
+use crate::coordinator::round::LocalTask;
+use anyhow::Result;
+
+pub use crate::coordinator::round::Completion;
+
+/// Every executor endpoint is gone — the transport can never deliver
+/// another completion. The drive loops map this onto their historical
+/// "worker pool died" errors.
+#[derive(Debug, thiserror::Error)]
+#[error("transport closed: every executor endpoint is gone")]
+pub struct TransportClosed;
+
+/// A backend that executes dispatched tasks and returns their fates.
+///
+/// Contract: every task handed to [`Transport::dispatch`] produces
+/// exactly one [`Completion`] echoing its `(seq, index)` — including
+/// tasks whose executor vanishes (the backend synthesizes a `Dropped`
+/// or `Faulted` fate). Completions may arrive in any order; the drive
+/// loops do the routing.
+pub trait Transport {
+    /// Hand one round's tasks (assignment order) to the executors under
+    /// sequence number `seq`.
+    fn dispatch(&mut self, seq: usize, tasks: Vec<LocalTask>) -> Result<()>;
+
+    /// Block until the next completion (any round, any order).
+    fn recv(&mut self) -> Result<Completion, TransportClosed>;
+}
+
+/// The `--transport` knob: which backend runs the cohort's tasks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportCfg {
+    /// in-process worker pool (the default; byte-identical to the
+    /// pre-transport repo)
+    Sim,
+    /// localhost TCP server bound to the given address (`tcp:<addr>`;
+    /// `tcp:127.0.0.1:0` picks a free port). Requires the `net` cargo
+    /// feature at run time.
+    Tcp(String),
+}
+
+impl TransportCfg {
+    pub fn parse(s: &str) -> Result<TransportCfg> {
+        if s == "sim" {
+            return Ok(TransportCfg::Sim);
+        }
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            if addr.is_empty() {
+                return Err(anyhow::anyhow!(
+                    "`--transport tcp:` needs a bind address (e.g. tcp:127.0.0.1:0)"
+                ));
+            }
+            return Ok(TransportCfg::Tcp(addr.to_string()));
+        }
+        Err(anyhow::anyhow!("unknown transport `{s}` (sim | tcp:<addr>)"))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            TransportCfg::Sim => "sim".into(),
+            TransportCfg::Tcp(addr) => format!("tcp:{addr}"),
+        }
+    }
+
+    pub fn is_sim(&self) -> bool {
+        matches!(self, TransportCfg::Sim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::TransportCfg;
+
+    #[test]
+    fn transport_knob_parses_and_round_trips() {
+        assert_eq!(TransportCfg::parse("sim").unwrap(), TransportCfg::Sim);
+        assert_eq!(
+            TransportCfg::parse("tcp:127.0.0.1:0").unwrap(),
+            TransportCfg::Tcp("127.0.0.1:0".into())
+        );
+        for cfg in [TransportCfg::Sim, TransportCfg::Tcp("127.0.0.1:4477".into())] {
+            assert_eq!(TransportCfg::parse(&cfg.name()).unwrap(), cfg);
+        }
+    }
+
+    #[test]
+    fn transport_knob_rejects_malformed_values() {
+        for bad in ["", "tcp", "tcp:", "udp:1.2.3.4:5", "simulated"] {
+            assert!(TransportCfg::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+    }
+}

@@ -1,0 +1,792 @@
+//! Message bodies for the networked coordinator: pure, synchronous
+//! encode/decode shared by the async server (`transport::tcp`) and the
+//! sync client (`transport::client`), so the two sides can never drift.
+//!
+//! Three message kinds travel the `[u32 kind][u64 body_len][body]`
+//! envelope (little-endian throughout):
+//!
+//! - **hello** — a magic u64; the server admits no task to an ungreeted
+//!   connection.
+//! - **task** — a [`LocalTask`] plus its pre-drawn batch schedule. The
+//!   coordinator draws the task's worst-case batch consumption
+//!   ([`batches_needed`]) from the live stream at dispatch and ships
+//!   it; the client replays it through [`BatchStream::Fixed`], which
+//!   makes client-side training bit-identical to the simulation in
+//!   every path, including the divergence retry. Dropout stamps and
+//!   unrecovered fault stamps never ship — the coordinator resolves
+//!   those fates locally (`stamped_fate`); only a recovered `corrupt`
+//!   stamp's bit draw travels, because the executor needs it to poison
+//!   and re-decode the frame.
+//! - **result** — the [`TaskOutcome`] of a completed task, or the
+//!   task's error message (which fails the run through the
+//!   earliest-failed-task path, exactly as in-process errors do).
+//!
+//! Floats travel as IEEE-754 bit patterns and tensor groups as raw
+//! `HWU1` frames, so every numeric value round-trips bit-exactly —
+//! the foundation of the sim-vs-net parity contract (module docs,
+//! `transport`).
+
+use crate::codec::{self, scheme_id, Encoding, FrameMeta};
+use crate::coordinator::client::LocalResult;
+use crate::coordinator::env::{BatchStream, FixedBatches};
+use crate::coordinator::estimator::ClientEstimates;
+use crate::coordinator::resilience::{FaultAction, FaultStamp};
+use crate::coordinator::round::{LocalTask, TaskOutcome, WireTask};
+use crate::coordinator::XData;
+use crate::simulation::{FaultClass, FaultEvent};
+use crate::tensor::{IntTensor, Tensor};
+use anyhow::{anyhow, Result};
+use std::io::{Read, Write};
+
+pub const KIND_HELLO: u32 = 1;
+pub const KIND_TASK: u32 = 2;
+pub const KIND_RESULT: u32 = 3;
+
+/// Envelope prefix length: `[u32 kind][u64 body_len]`.
+pub const ENVELOPE_LEN: usize = 12;
+
+/// Default per-message body cap (bytes): bounds every buffer a peer can
+/// make the receiver allocate.
+pub const FRAME_CAP: u64 = 1 << 31;
+
+/// Handshake magic ("HEROES1\0" as a little-endian u64).
+pub const HELLO_MAGIC: u64 = u64::from_le_bytes(*b"HEROES1\0");
+
+/// Worst-case batch consumption of `run_local` for a task: two probe
+/// batches (estimation rounds only) plus up to two attempts of τ
+/// batches each (the divergence-retry path). Pre-drawing exactly this
+/// many makes the shipped schedule cover every execution path.
+pub fn batches_needed(tau: usize, has_probe: bool) -> usize {
+    2 * tau + if has_probe { 2 } else { 0 }
+}
+
+// ---------------------------------------------------------------- body I/O
+
+/// Bounded cursor over a received body; every under-run is a typed
+/// error, never a panic (hlint rule P1).
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| anyhow!("transport message length overflows"))?;
+        let s = self
+            .b
+            .get(self.pos..end)
+            .ok_or_else(|| anyhow!("transport message truncated"))?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        let s = self.take(1)?;
+        s.first().copied().ok_or_else(|| anyhow!("transport message truncated"))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into()?))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into()?))
+    }
+
+    fn len(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        usize::try_from(n).map_err(|_| anyhow!("transport length {n} exceeds the address space"))
+    }
+
+    fn f32_bits(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f64_bits(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()?;
+        let s = self.take(usize::try_from(n)?)?;
+        String::from_utf8(s.to_vec()).map_err(|_| anyhow!("transport string is not utf-8"))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos == self.b.len() {
+            Ok(())
+        } else {
+            Err(anyhow!(
+                "transport message carries {} trailing bytes",
+                self.b.len() - self.pos
+            ))
+        }
+    }
+}
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32_bits(b: &mut Vec<u8>, v: f32) {
+    put_u32(b, v.to_bits());
+}
+
+fn put_f64_bits(b: &mut Vec<u8>, v: f64) {
+    put_u64(b, v.to_bits());
+}
+
+fn put_string(b: &mut Vec<u8>, s: &str) -> Result<()> {
+    let n = u32::try_from(s.len()).map_err(|_| anyhow!("transport string too long"))?;
+    put_u32(b, n);
+    b.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+/// A tensor group as one raw `HWU1` frame (bit-exact round-trip), or a
+/// zero length for the empty group (an `HWU1` frame is never empty).
+fn put_tensors(b: &mut Vec<u8>, client: u64, tensors: &[Tensor]) -> Result<()> {
+    if tensors.is_empty() {
+        put_u64(b, 0);
+        return Ok(());
+    }
+    let mut frame = Vec::new();
+    let meta = FrameMeta { scheme: scheme_id::HEROES, round: 0, client };
+    codec::encode_update(&mut frame, &meta, Encoding::default(), tensors)?;
+    put_u64(b, frame.len() as u64);
+    b.extend_from_slice(&frame);
+    Ok(())
+}
+
+fn take_tensors(r: &mut Rd) -> Result<Vec<Tensor>> {
+    let n = r.len()?;
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let frame = r.take(n)?;
+    Ok(codec::decode_update(frame)?.tensors)
+}
+
+fn put_int_tensor(b: &mut Vec<u8>, t: &IntTensor) -> Result<()> {
+    let rank = u32::try_from(t.shape().len()).map_err(|_| anyhow!("int tensor rank too large"))?;
+    put_u32(b, rank);
+    for &d in t.shape() {
+        put_u64(b, d as u64);
+    }
+    put_u64(b, t.data().len() as u64);
+    for &v in t.data() {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(())
+}
+
+fn take_int_tensor(r: &mut Rd) -> Result<IntTensor> {
+    let rank = r.u32()?;
+    if rank > 8 {
+        return Err(anyhow!("int tensor rank {rank} exceeds the sanity cap"));
+    }
+    let mut shape = Vec::with_capacity(rank as usize);
+    for _ in 0..rank {
+        shape.push(r.len()?);
+    }
+    let n = r.len()?;
+    if shape.iter().product::<usize>() != n {
+        return Err(anyhow!("int tensor shape {shape:?} incompatible with {n} elements"));
+    }
+    let raw = r.take(n.checked_mul(4).ok_or_else(|| anyhow!("int tensor length overflows"))?)?;
+    let data = raw
+        .chunks_exact(4)
+        .map(|c| c.try_into().map(i32::from_le_bytes))
+        .collect::<Result<Vec<i32>, _>>()?;
+    Ok(IntTensor::from_vec(&shape, data))
+}
+
+fn put_batch(b: &mut Vec<u8>, client: u64, x: &XData, y: &IntTensor) -> Result<()> {
+    match x {
+        XData::Image(t) => {
+            put_u8(b, 0);
+            put_tensors(b, client, std::slice::from_ref(t))?;
+        }
+        XData::Tokens(t) => {
+            put_u8(b, 1);
+            put_int_tensor(b, t)?;
+        }
+    }
+    put_int_tensor(b, y)
+}
+
+fn take_batch(r: &mut Rd) -> Result<(XData, IntTensor)> {
+    let x = match r.u8()? {
+        0 => {
+            let mut ts = take_tensors(r)?;
+            if ts.len() != 1 {
+                return Err(anyhow!("image batch frame must carry exactly one tensor"));
+            }
+            let t = ts.pop().ok_or_else(|| anyhow!("image batch frame is empty"))?;
+            XData::Image(t)
+        }
+        1 => XData::Tokens(take_int_tensor(r)?),
+        k => return Err(anyhow!("unknown batch payload tag {k}")),
+    };
+    let y = take_int_tensor(r)?;
+    Ok((x, y))
+}
+
+// ---------------------------------------------------------------- messages
+
+/// Hello body: the magic alone.
+pub fn hello_body() -> Vec<u8> {
+    HELLO_MAGIC.to_le_bytes().to_vec()
+}
+
+pub fn hello_ok(body: &[u8]) -> bool {
+    let mut r = Rd { b: body, pos: 0 };
+    matches!(r.u64(), Ok(m) if m == HELLO_MAGIC) && r.done().is_ok()
+}
+
+const FLAG_PROBE: u8 = 1;
+const FLAG_WIRE: u8 = 1 << 1;
+const FLAG_WIRE_Q8: u8 = 1 << 2;
+const FLAG_WIRE_TOPK: u8 = 1 << 3;
+const FLAG_CORRUPT: u8 = 1 << 4;
+
+/// Task body: plan facts + executables + payload + the pre-drawn batch
+/// schedule. `batches` must be nonempty ([`batches_needed`] is ≥ 2 for
+/// any dispatchable τ ≥ 1).
+pub fn encode_task_msg(
+    seq: u64,
+    index: u64,
+    task: &LocalTask,
+    batches: &[(XData, IntTensor)],
+) -> Result<Vec<u8>> {
+    let mut b = Vec::new();
+    put_u64(&mut b, seq);
+    put_u64(&mut b, index);
+    put_u64(&mut b, task.client as u64);
+    put_u64(&mut b, task.p as u64);
+    put_u64(&mut b, task.tau as u64);
+    put_f32_bits(&mut b, task.lr);
+    put_f64_bits(&mut b, task.completion);
+    put_u64(&mut b, task.bytes);
+    put_u64(&mut b, task.up_bytes);
+    put_u64(&mut b, task.rebill_bytes);
+    // only a *recovered corrupt* stamp has an executor-side effect (the
+    // poison-and-reject check needs the bit draw); every other stamp is
+    // resolved coordinator-side and must not ship
+    let corrupt_bit = match task.fault {
+        Some(s) if s.recovered && s.event.class == FaultClass::Corrupt => Some(s.event.bit),
+        _ => None,
+    };
+    let mut flags = 0u8;
+    if task.probe_exec.is_some() {
+        flags |= FLAG_PROBE;
+    }
+    if let Some(w) = task.wire {
+        flags |= FLAG_WIRE;
+        if w.enc.q8 {
+            flags |= FLAG_WIRE_Q8;
+        }
+        if w.enc.topk.is_some() {
+            flags |= FLAG_WIRE_TOPK;
+        }
+    }
+    if corrupt_bit.is_some() {
+        flags |= FLAG_CORRUPT;
+    }
+    put_u8(&mut b, flags);
+    let w = task.wire.unwrap_or(WireTask { scheme: 0, round: 0, enc: Encoding::default() });
+    put_u8(&mut b, w.scheme);
+    put_u32(&mut b, w.round);
+    put_f64_bits(&mut b, w.enc.topk.unwrap_or(0.0));
+    put_u64(&mut b, corrupt_bit.unwrap_or(0));
+    put_string(&mut b, &task.train_exec)?;
+    if let Some(p) = &task.probe_exec {
+        put_string(&mut b, p)?;
+    }
+    put_tensors(&mut b, task.client as u64, &task.payload)?;
+    let n = u32::try_from(batches.len()).map_err(|_| anyhow!("batch schedule too long"))?;
+    put_u32(&mut b, n);
+    for (x, y) in batches {
+        put_batch(&mut b, task.client as u64, x, y)?;
+    }
+    Ok(b)
+}
+
+/// Inverse of [`encode_task_msg`]: `(seq, index, task)` with the batch
+/// schedule rehydrated as [`BatchStream::Fixed`].
+pub fn decode_task_msg(body: &[u8]) -> Result<(u64, u64, LocalTask)> {
+    let mut r = Rd { b: body, pos: 0 };
+    let seq = r.u64()?;
+    let index = r.u64()?;
+    let client = usize::try_from(r.u64()?)?;
+    let p = usize::try_from(r.u64()?)?;
+    let tau = usize::try_from(r.u64()?)?;
+    let lr = r.f32_bits()?;
+    let completion = r.f64_bits()?;
+    let bytes = r.u64()?;
+    let up_bytes = r.u64()?;
+    let rebill_bytes = r.u64()?;
+    let flags = r.u8()?;
+    let wire_scheme = r.u8()?;
+    let wire_round = r.u32()?;
+    let topk = r.f64_bits()?;
+    let corrupt_bit = r.u64()?;
+    let train_exec = r.string()?;
+    let probe_exec = if flags & FLAG_PROBE != 0 { Some(r.string()?) } else { None };
+    let payload = take_tensors(&mut r)?;
+    let n_batches = r.u32()?;
+    let mut batches = Vec::with_capacity(n_batches as usize);
+    for _ in 0..n_batches {
+        batches.push(take_batch(&mut r)?);
+    }
+    r.done()?;
+    let wire = (flags & FLAG_WIRE != 0).then_some(WireTask {
+        scheme: wire_scheme,
+        round: wire_round,
+        enc: Encoding {
+            q8: flags & FLAG_WIRE_Q8 != 0,
+            topk: (flags & FLAG_WIRE_TOPK != 0).then_some(topk),
+        },
+    });
+    // synthesize the minimal recovered-corrupt stamp the executor's
+    // poison-and-reject check reads; the other fields are inert on the
+    // recovered path (completion/rebill adjustments already happened
+    // coordinator-side and travel in their own fields)
+    let fault = (flags & FLAG_CORRUPT != 0).then_some(FaultStamp {
+        event: FaultEvent {
+            class: FaultClass::Corrupt,
+            severity: 1,
+            frac: 0.0,
+            stall: 0.0,
+            bit: corrupt_bit,
+        },
+        action: FaultAction::Retry,
+        retries: 0,
+        recovered: true,
+        fault_time: 0.0,
+    });
+    let stream = BatchStream::Fixed(
+        FixedBatches::new(batches)
+            .ok_or_else(|| anyhow!("task message carries an empty batch schedule"))?,
+    );
+    Ok((
+        seq,
+        index,
+        LocalTask {
+            client,
+            p,
+            tau,
+            lr,
+            train_exec,
+            probe_exec,
+            payload,
+            stream,
+            bytes,
+            up_bytes,
+            rebill_bytes,
+            wire,
+            completion,
+            drop_at: None,
+            fault,
+        },
+    ))
+}
+
+/// A completed task's result body.
+pub fn encode_done_msg(seq: u64, index: u64, o: &TaskOutcome) -> Result<Vec<u8>> {
+    let mut b = Vec::new();
+    put_u64(&mut b, seq);
+    put_u64(&mut b, index);
+    put_u8(&mut b, 0);
+    put_u64(&mut b, o.client as u64);
+    put_u64(&mut b, o.p as u64);
+    put_u64(&mut b, o.tau as u64);
+    put_u64(&mut b, o.bytes);
+    put_u64(&mut b, o.up_bytes);
+    put_f64_bits(&mut b, o.completion);
+    put_f64_bits(&mut b, o.result.mean_loss);
+    put_f64_bits(&mut b, o.result.final_loss);
+    put_f64_bits(&mut b, o.result.mean_grad_sq);
+    match o.result.estimates {
+        Some(e) => {
+            put_u8(&mut b, 1);
+            put_f64_bits(&mut b, e.l);
+            put_f64_bits(&mut b, e.sigma_sq);
+            put_f64_bits(&mut b, e.g_sq);
+        }
+        None => put_u8(&mut b, 0),
+    }
+    put_tensors(&mut b, o.client as u64, &o.result.params)?;
+    Ok(b)
+}
+
+/// A failed task's result body: the error travels as a message and
+/// fails the run through the earliest-failed-task path, exactly as an
+/// in-process task error would.
+pub fn encode_err_msg(seq: u64, index: u64, msg: &str) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u64(&mut b, seq);
+    put_u64(&mut b, index);
+    put_u8(&mut b, 1);
+    // a lossy length clamp keeps the body bounded; errors are prose
+    let msg: String = msg.chars().take(4096).collect();
+    put_u32(&mut b, msg.len() as u32);
+    b.extend_from_slice(msg.as_bytes());
+    b
+}
+
+/// Inverse of [`encode_done_msg`]/[`encode_err_msg`].
+pub fn decode_result_msg(body: &[u8]) -> Result<(u64, u64, Result<TaskOutcome, String>)> {
+    let mut r = Rd { b: body, pos: 0 };
+    let seq = r.u64()?;
+    let index = r.u64()?;
+    match r.u8()? {
+        1 => {
+            let msg = r.string()?;
+            r.done()?;
+            Ok((seq, index, Err(msg)))
+        }
+        0 => {
+            let client = usize::try_from(r.u64()?)?;
+            let p = usize::try_from(r.u64()?)?;
+            let tau = usize::try_from(r.u64()?)?;
+            let bytes = r.u64()?;
+            let up_bytes = r.u64()?;
+            let completion = r.f64_bits()?;
+            let mean_loss = r.f64_bits()?;
+            let final_loss = r.f64_bits()?;
+            let mean_grad_sq = r.f64_bits()?;
+            let estimates = match r.u8()? {
+                0 => None,
+                1 => Some(ClientEstimates {
+                    l: r.f64_bits()?,
+                    sigma_sq: r.f64_bits()?,
+                    g_sq: r.f64_bits()?,
+                }),
+                k => return Err(anyhow!("unknown estimates tag {k}")),
+            };
+            let params = take_tensors(&mut r)?;
+            r.done()?;
+            Ok((
+                seq,
+                index,
+                Ok(TaskOutcome {
+                    client,
+                    p,
+                    tau,
+                    bytes,
+                    up_bytes,
+                    completion,
+                    result: LocalResult {
+                        params,
+                        mean_loss,
+                        final_loss,
+                        mean_grad_sq,
+                        estimates,
+                    },
+                }),
+            ))
+        }
+        k => Err(anyhow!("unknown result status {k}")),
+    }
+}
+
+// ---------------------------------------------------------------- envelope
+
+/// Split a received envelope into `(kind, body_len)`.
+pub fn split_envelope(head: &[u8; ENVELOPE_LEN]) -> (u32, u64) {
+    let mut r = Rd { b: head, pos: 0 };
+    match (r.u32(), r.u64()) {
+        (Ok(kind), Ok(n)) => (kind, n),
+        // unreachable: the array is exactly ENVELOPE_LEN bytes
+        _ => (0, 0),
+    }
+}
+
+/// Assemble one on-the-wire message: envelope + body.
+pub fn frame(kind: u32, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(ENVELOPE_LEN + body.len());
+    put_u32(&mut out, kind);
+    put_u64(&mut out, body.len() as u64);
+    out.extend_from_slice(body);
+    out
+}
+
+/// Write one message to a (blocking) stream.
+pub fn write_msg<W: Write>(w: &mut W, kind: u32, body: &[u8]) -> Result<()> {
+    w.write_all(&frame(kind, body))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Fill `buf` from `r`, tolerating arbitrary chunking; returns the
+/// bytes actually read (short only at end-of-stream).
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        let Some(dst) = buf.get_mut(filled..) else { break };
+        match r.read(dst) {
+            Ok(0) => break,
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(filled)
+}
+
+/// Read one message off a (blocking) stream: `Ok(None)` on a clean
+/// end-of-stream at a message boundary, a typed error on a truncated
+/// envelope/body or a declared length above `cap` (checked before any
+/// allocation — the peer cannot size our buffers).
+pub fn read_msg<R: Read>(r: &mut R, cap: u64) -> Result<Option<(u32, Vec<u8>)>> {
+    let mut head = [0u8; ENVELOPE_LEN];
+    let got = read_full(r, &mut head)?;
+    if got == 0 {
+        return Ok(None);
+    }
+    if got < ENVELOPE_LEN {
+        return Err(anyhow!("transport stream ended mid-envelope ({got} of {ENVELOPE_LEN} bytes)"));
+    }
+    let mut hr = Rd { b: &head, pos: 0 };
+    let kind = hr.u32()?;
+    let n = hr.u64()?;
+    if n > cap {
+        return Err(anyhow!("transport message of {n} bytes exceeds the {cap}-byte cap"));
+    }
+    let n = usize::try_from(n).map_err(|_| anyhow!("transport length {n} exceeds the address space"))?;
+    let mut body = vec![0u8; n];
+    let got = read_full(r, &mut body)?;
+    if got < n {
+        return Err(anyhow!("transport stream ended mid-body ({got} of {n} bytes)"));
+    }
+    Ok(Some((kind, body)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::round::TaskFate;
+
+    fn image_batch(seed: f32) -> (XData, IntTensor) {
+        let x = Tensor::from_vec(&[2, 3], vec![seed, 1.5, -2.25, 0.0, f32::MIN_POSITIVE, 7.0]);
+        let y = IntTensor::from_vec(&[2], vec![1, 0]);
+        (XData::Image(x), y)
+    }
+
+    fn token_batch() -> (XData, IntTensor) {
+        let x = IntTensor::from_vec(&[2, 4], vec![5, 6, 7, 8, 9, 10, 11, 12]);
+        let y = IntTensor::from_vec(&[2, 4], vec![6, 7, 8, 9, 10, 11, 12, 13]);
+        (XData::Tokens(x), y)
+    }
+
+    fn task(batches: Vec<(XData, IntTensor)>) -> LocalTask {
+        LocalTask {
+            client: 11,
+            p: 3,
+            tau: 2,
+            lr: 0.125,
+            train_exec: "train_p3".into(),
+            probe_exec: Some("probe_p3".into()),
+            payload: vec![Tensor::from_vec(&[2, 2], vec![1.0, -1.0, 0.5, 0.25])],
+            stream: BatchStream::Fixed(FixedBatches::new(vec![image_batch(0.5)]).unwrap()),
+            bytes: 1 << 33,
+            up_bytes: (1 << 33) + 17,
+            rebill_bytes: 9,
+            wire: Some(WireTask {
+                scheme: scheme_id::HEROES,
+                round: 4,
+                enc: Encoding { q8: true, topk: Some(0.25) },
+            }),
+            completion: 12.75,
+            drop_at: None,
+            fault: Some(FaultStamp {
+                event: FaultEvent {
+                    class: FaultClass::Corrupt,
+                    severity: 2,
+                    frac: 0.4,
+                    stall: 0.0,
+                    bit: 37,
+                },
+                action: FaultAction::Retry,
+                retries: 1,
+                recovered: true,
+                fault_time: 0.0,
+            }),
+        }
+    }
+
+    #[test]
+    fn task_messages_round_trip_bit_exactly() {
+        for batches in [vec![image_batch(0.5), image_batch(-3.0)], vec![token_batch()]] {
+            let t = task(batches.clone());
+            let body = encode_task_msg(7, 2, &t, &batches).unwrap();
+            let (seq, index, mut back) = decode_task_msg(&body).unwrap();
+            assert_eq!((seq, index), (7, 2));
+            assert_eq!(back.client, t.client);
+            assert_eq!(back.p, t.p);
+            assert_eq!(back.tau, t.tau);
+            assert_eq!(back.lr.to_bits(), t.lr.to_bits());
+            assert_eq!(back.train_exec, t.train_exec);
+            assert_eq!(back.probe_exec, t.probe_exec);
+            assert_eq!(back.bytes, t.bytes);
+            assert_eq!(back.up_bytes, t.up_bytes);
+            assert_eq!(back.rebill_bytes, t.rebill_bytes);
+            assert_eq!(back.completion.to_bits(), t.completion.to_bits());
+            assert!(back.drop_at.is_none());
+            let w = back.wire.unwrap();
+            assert_eq!(w.scheme, scheme_id::HEROES);
+            assert_eq!(w.round, 4);
+            assert!(w.enc.q8);
+            assert_eq!(w.enc.topk, Some(0.25));
+            let f = back.fault.unwrap();
+            assert!(f.recovered);
+            assert_eq!(f.event.class, FaultClass::Corrupt);
+            assert_eq!(f.event.bit, 37);
+            assert_eq!(back.payload.len(), 1);
+            assert_eq!(back.payload[0].data(), t.payload[0].data());
+            // the shipped schedule replays in order
+            for (x, y) in &batches {
+                let (bx, by) = back.stream.next_batch();
+                match (x, &bx) {
+                    (XData::Image(a), XData::Image(b)) => assert_eq!(a.data(), b.data()),
+                    (XData::Tokens(a), XData::Tokens(b)) => assert_eq!(a.data(), b.data()),
+                    _ => panic!("batch payload kind flipped in transit"),
+                }
+                assert_eq!(y.data(), by.data());
+            }
+        }
+    }
+
+    #[test]
+    fn unstamped_tasks_ship_no_fault() {
+        let batches = vec![image_batch(1.0)];
+        let mut t = task(batches.clone());
+        t.fault = None;
+        t.wire = None;
+        t.probe_exec = None;
+        let body = encode_task_msg(0, 0, &t, &batches).unwrap();
+        let (_, _, back) = decode_task_msg(&body).unwrap();
+        assert!(back.fault.is_none());
+        assert!(back.wire.is_none());
+        assert!(back.probe_exec.is_none());
+    }
+
+    #[test]
+    fn result_messages_round_trip_bit_exactly() {
+        let o = TaskOutcome {
+            client: 5,
+            p: 2,
+            tau: 3,
+            bytes: 1 << 34,
+            up_bytes: (1 << 34) + 3,
+            completion: 9.5,
+            result: LocalResult {
+                params: vec![Tensor::from_vec(&[3], vec![0.1, -0.2, 0.3])],
+                mean_loss: 1.25,
+                final_loss: 1.0,
+                mean_grad_sq: 0.0625,
+                estimates: Some(ClientEstimates { l: 2.0, sigma_sq: 0.5, g_sq: 4.0 }),
+            },
+        };
+        let body = encode_done_msg(3, 1, &o).unwrap();
+        let (seq, index, res) = decode_result_msg(&body).unwrap();
+        assert_eq!((seq, index), (3, 1));
+        let back = res.unwrap();
+        assert_eq!(back.client, 5);
+        assert_eq!(back.up_bytes, o.up_bytes);
+        assert_eq!(back.completion.to_bits(), o.completion.to_bits());
+        assert_eq!(back.result.mean_loss.to_bits(), o.result.mean_loss.to_bits());
+        assert_eq!(back.result.params[0].data(), o.result.params[0].data());
+        let e = back.result.estimates.unwrap();
+        assert_eq!(e.sigma_sq.to_bits(), 0.5f64.to_bits());
+
+        let body = encode_err_msg(4, 0, "engine exploded");
+        let (seq, index, res) = decode_result_msg(&body).unwrap();
+        assert_eq!((seq, index), (4, 0));
+        assert_eq!(res.unwrap_err(), "engine exploded");
+    }
+
+    #[test]
+    fn stamped_fates_never_ship() {
+        // a decoded task must never early-return a stamped fate on the
+        // client: drop_at is stripped and only recovered-corrupt ships
+        let batches = vec![image_batch(2.0)];
+        let mut t = task(batches.clone());
+        t.drop_at = Some(3.5);
+        let body = encode_task_msg(0, 0, &t, &batches).unwrap();
+        let (_, _, back) = decode_task_msg(&body).unwrap();
+        assert!(crate::coordinator::round::stamped_fate(&back).is_none());
+        assert!(matches!(
+            crate::coordinator::round::stamped_fate(&t),
+            Some(TaskFate::Dropped(_))
+        ));
+    }
+
+    #[test]
+    fn truncated_and_oversized_messages_are_typed_errors() {
+        let batches = vec![image_batch(0.0)];
+        let t = task(batches.clone());
+        let body = encode_task_msg(1, 0, &t, &batches).unwrap();
+        for cut in [0, 1, 8, 40, body.len() - 1] {
+            assert!(decode_task_msg(&body[..cut]).is_err(), "cut {cut} must error");
+        }
+        // trailing garbage is rejected too
+        let mut long = body.clone();
+        long.push(0);
+        assert!(decode_task_msg(&long).is_err());
+
+        // envelope: chunked reads, clean EOF, truncation, cap
+        let msg = frame(KIND_TASK, &body);
+        struct Chunky<'a>(&'a [u8], usize);
+        impl std::io::Read for Chunky<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                let n = 3.min(buf.len()).min(self.0.len() - self.1);
+                buf[..n].copy_from_slice(&self.0[self.1..self.1 + n]);
+                self.1 += n;
+                Ok(n)
+            }
+        }
+        let (kind, got) = read_msg(&mut Chunky(&msg, 0), FRAME_CAP).unwrap().unwrap();
+        assert_eq!(kind, KIND_TASK);
+        assert_eq!(got, body);
+        assert!(read_msg(&mut Chunky(&[], 0), FRAME_CAP).unwrap().is_none());
+        assert!(read_msg(&mut Chunky(&msg[..5], 0), FRAME_CAP).is_err());
+        assert!(read_msg(&mut Chunky(&msg[..20], 0), FRAME_CAP).is_err());
+        let err = read_msg(&mut Chunky(&msg, 0), 4).unwrap_err();
+        assert!(err.to_string().contains("exceeds the 4-byte cap"), "{err}");
+    }
+
+    #[test]
+    fn hello_round_trips_and_rejects_noise() {
+        assert!(hello_ok(&hello_body()));
+        assert!(!hello_ok(b"HEROES1"));
+        assert!(!hello_ok(b"HEROES2\0"));
+        assert!(!hello_ok(&[]));
+    }
+
+    #[test]
+    fn envelope_splits_round_trip() {
+        let msg = frame(KIND_RESULT, &[1, 2, 3]);
+        let head: [u8; ENVELOPE_LEN] = msg[..ENVELOPE_LEN].try_into().unwrap();
+        assert_eq!(split_envelope(&head), (KIND_RESULT, 3));
+    }
+
+    #[test]
+    fn batches_needed_covers_the_retry_path() {
+        assert_eq!(batches_needed(1, false), 2);
+        assert_eq!(batches_needed(4, false), 8);
+        assert_eq!(batches_needed(4, true), 10);
+    }
+}

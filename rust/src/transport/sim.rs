@@ -1,0 +1,35 @@
+//! The in-process backend: a thin adapter over the round driver's
+//! historical task queue + completion channel. Dispatch pushes onto the
+//! shared [`TaskQueue`] the worker threads pop from; receive blocks on
+//! the mpsc channel those workers report into. Zero behavioural
+//! distance from the pre-transport repo — the adapter exists so the
+//! drive loops can be written once against `dyn Transport`.
+
+use crate::coordinator::round::{Completion, LocalTask, TaskQueue};
+use crate::transport::{Transport, TransportClosed};
+use anyhow::Result;
+use std::sync::mpsc::Receiver;
+
+pub(crate) struct SimTransport<'q> {
+    queue: &'q TaskQueue,
+    rx: Receiver<Completion>,
+}
+
+impl<'q> SimTransport<'q> {
+    pub(crate) fn new(queue: &'q TaskQueue, rx: Receiver<Completion>) -> SimTransport<'q> {
+        SimTransport { queue, rx }
+    }
+}
+
+impl Transport for SimTransport<'_> {
+    fn dispatch(&mut self, seq: usize, tasks: Vec<LocalTask>) -> Result<()> {
+        self.queue.push_round(seq, tasks);
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Completion, TransportClosed> {
+        // a closed channel means every worker hung up — the drive loops
+        // translate this into their historical "worker pool died" errors
+        self.rx.recv().map_err(|_| TransportClosed)
+    }
+}

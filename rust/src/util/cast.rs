@@ -19,6 +19,17 @@ pub fn bytes_to_f64(bytes: u64) -> f64 {
     bytes as f64
 }
 
+/// Saturating `usize` view of a byte counter, for in-memory allocation
+/// sizes (`Vec::with_capacity` and friends).
+///
+/// On 64-bit targets this is value-preserving; on a hypothetical 32-bit
+/// target a counter past `usize::MAX` clamps instead of truncating. Like
+/// [`bytes_to_f64`] this is an audited exit from the u64 byte domain —
+/// use it instead of `as usize` on `*_bytes` / traffic counters.
+pub fn bytes_to_usize(bytes: u64) -> usize {
+    usize::try_from(bytes).unwrap_or(usize::MAX)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -29,5 +40,13 @@ mod tests {
         assert_eq!(bytes_to_f64(1), 1.0);
         assert_eq!(bytes_to_f64((1 << 53) - 1), 9_007_199_254_740_991.0);
         assert_eq!(bytes_to_f64(123_456_789_012), 123_456_789_012.0);
+    }
+
+    #[test]
+    fn usize_view_saturates() {
+        assert_eq!(bytes_to_usize(0), 0);
+        assert_eq!(bytes_to_usize(4096), 4096);
+        // saturation (a no-op on 64-bit, the clamp on 32-bit)
+        assert_eq!(bytes_to_usize(u64::MAX), usize::try_from(u64::MAX).unwrap_or(usize::MAX));
     }
 }

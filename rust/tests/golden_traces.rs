@@ -79,7 +79,7 @@ fn fingerprint(reports: &[RoundReport]) -> Json {
         .iter()
         .map(|r| {
             sim_time += r.round_time;
-            bytes += (r.down_bytes + r.up_bytes) as u64;
+            bytes += r.down_bytes + r.up_bytes;
             Json::obj(vec![
                 ("round", Json::from(r.round)),
                 ("sim_time", pinned_f64(sim_time)),

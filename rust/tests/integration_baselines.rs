@@ -108,10 +108,10 @@ fn composed_uploads_are_smaller_than_dense() {
     let cfg = tiny_cfg();
     let (h_reports, _, _, _) = run_rounds(&engine, &cfg, "heroes", 4);
     let (f_reports, _, _, _) = run_rounds(&engine, &cfg, "fedavg", 4);
-    let h_bytes: usize = h_reports.iter().map(|r| r.up_bytes).sum();
-    let f_bytes: usize = f_reports.iter().map(|r| r.up_bytes).sum();
+    let h_bytes: u64 = h_reports.iter().map(|r| r.up_bytes).sum();
+    let f_bytes: u64 = f_reports.iter().map(|r| r.up_bytes).sum();
     assert!(
-        (h_bytes as f64) < 0.6 * f_bytes as f64,
+        heroes::util::cast::bytes_to_f64(h_bytes) < 0.6 * heroes::util::cast::bytes_to_f64(f_bytes),
         "heroes rounds should upload far less: {h_bytes} vs {f_bytes}"
     );
 }

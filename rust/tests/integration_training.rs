@@ -68,7 +68,7 @@ fn heroes_cnn_rounds_run_and_improve() {
     assert!((env.clock.now() - total).abs() < 1e-9);
     assert_eq!(
         env.traffic.total_bytes(),
-        reports.iter().map(|r| (r.down_bytes + r.up_bytes) as u64).sum::<u64>()
+        reports.iter().map(|r| r.down_bytes + r.up_bytes).sum::<u64>()
     );
 }
 

@@ -1,0 +1,296 @@
+//! The networked transport's contracts (`transport` module docs;
+//! requires the `net` cargo feature):
+//!
+//! 1. **Sim-parity** — the simulation is the oracle: a `--transport
+//!    tcp` run over loopback executors records the exact series a
+//!    `--transport sim` run records — same plans, chosen K, aggregated
+//!    model (test loss/acc fingerprint) and billed bytes — through the
+//!    serial, overlapped and quorum pipelines alike.
+//! 2. **Liveness under executor loss** — a killed client, a silent
+//!    coordinator with no executor, and a protocol-violating peer all
+//!    complete their tasks (`Dropped` / `Faulted` with `0.0` virtual
+//!    timestamps) instead of hanging the drive loop.
+//! 3. **Stamped fates never ship** — dropout and unrecovered-fault
+//!    stamps resolve at dispatch, before any socket is touched.
+//!
+//! The parity tests need `make artifacts` and skip gracefully
+//! otherwise; the liveness tests hand-build tasks and run on any
+//! machine.
+
+// Test/bench/example code: panicking on setup failure is idiomatic
+// (CONTRIBUTING.md — the error-handling contract binds library code).
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::indexing_slicing)]
+
+use heroes::config::{ExperimentConfig, QuorumKnob, Scale};
+use heroes::coordinator::env::{BatchStream, FixedBatches};
+use heroes::coordinator::resilience::{FaultAction, FaultStamp};
+use heroes::coordinator::round::{LocalTask, TaskFate};
+use heroes::coordinator::XData;
+use heroes::experiments::{run_scheme, StopCondition};
+use heroes::metrics::Recorder;
+use heroes::runtime::{EnginePool, Manifest};
+use heroes::simulation::{FaultClass, FaultEvent};
+use heroes::tensor::{IntTensor, Tensor};
+use heroes::transport::tcp::{TcpCfg, TcpTransport};
+use heroes::transport::{proto, Transport, TransportCfg};
+use std::time::Duration;
+
+fn pool_or_skip(engines: usize) -> Option<EnginePool> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(EnginePool::new(Manifest::load(&dir).unwrap(), engines).unwrap())
+}
+
+/// A fully hand-built task — the liveness tests never execute it, so
+/// the executable names are decorative; what matters is that every
+/// synthesis fact (client, bytes) echoes back in the fate.
+fn fake_task(client: usize) -> LocalTask {
+    let x = XData::Image(Tensor::from_vec(&[1, 2], vec![0.25, -1.5]));
+    let y = IntTensor::from_vec(&[1], vec![1]);
+    LocalTask {
+        client,
+        p: 1,
+        tau: 1,
+        lr: 0.05,
+        train_exec: "cnn_train_p1".into(),
+        probe_exec: None,
+        payload: vec![Tensor::from_vec(&[2], vec![1.0, 2.0])],
+        stream: BatchStream::Fixed(FixedBatches::new(vec![(x, y)]).unwrap()),
+        bytes: 4096,
+        up_bytes: 4096,
+        rebill_bytes: 0,
+        wire: None,
+        completion: 3.5,
+        drop_at: None,
+        fault: None,
+    }
+}
+
+/// Short timeouts so liveness failures surface in milliseconds, not CI
+/// minutes.
+fn quick_cfg() -> TcpCfg {
+    let mut cfg = TcpCfg::new("127.0.0.1:0");
+    cfg.accept_timeout = Duration::from_millis(250);
+    cfg.io_timeout = Duration::from_millis(1500);
+    cfg
+}
+
+#[test]
+fn stamped_fates_resolve_at_dispatch_without_a_socket() {
+    // An hour-long accept timeout proves the point: if a stamped task
+    // ever reached the network path, recv would hang far past the test
+    // timeout. Both stamps must complete instantly, echoing the stamp's
+    // own virtual facts (never the wall clock).
+    let mut cfg = quick_cfg();
+    cfg.accept_timeout = Duration::from_secs(3600);
+    let mut tp = TcpTransport::bind(cfg).unwrap();
+
+    let mut dropped = fake_task(3);
+    dropped.drop_at = Some(2.5);
+    let mut faulted = fake_task(5);
+    faulted.fault = Some(FaultStamp {
+        event: FaultEvent { class: FaultClass::Exec, severity: 1, frac: 0.5, stall: 0.0, bit: 0 },
+        action: FaultAction::Retry,
+        retries: 2,
+        recovered: false,
+        fault_time: 7.0,
+    });
+    tp.dispatch(0, vec![dropped, faulted]).unwrap();
+
+    let c0 = tp.recv().unwrap();
+    assert_eq!((c0.seq, c0.index), (0, 0));
+    match c0.outcome.unwrap() {
+        TaskFate::Dropped(d) => {
+            assert_eq!((d.client, d.bytes), (3, 4096));
+            assert_eq!(d.drop_time, 2.5, "the stamp's virtual drop time must survive");
+        }
+        other => panic!("expected Dropped, got {other:?}"),
+    }
+    let c1 = tp.recv().unwrap();
+    assert_eq!((c1.seq, c1.index), (0, 1));
+    match c1.outcome.unwrap() {
+        TaskFate::Faulted(f) => {
+            assert_eq!((f.client, f.bytes), (5, 4096));
+            assert_eq!(f.class, FaultClass::Exec);
+            assert_eq!(f.retries, 2);
+            assert_eq!(f.fault_time, 7.0, "the stamp's virtual fault time must survive");
+        }
+        other => panic!("expected Faulted, got {other:?}"),
+    }
+    tp.close();
+}
+
+#[test]
+fn no_executor_completes_the_task_as_dropped() {
+    // Nobody ever connects: after accept_timeout the task must come
+    // back Dropped with a 0.0 virtual timestamp — wall time decided
+    // *whether* the fate arrived, never *what* it says.
+    let mut tp = TcpTransport::bind(quick_cfg()).unwrap();
+    tp.dispatch(7, vec![fake_task(2)]).unwrap();
+    let c = tp.recv().unwrap();
+    assert_eq!((c.seq, c.index), (7, 0));
+    match c.outcome.unwrap() {
+        TaskFate::Dropped(d) => {
+            assert_eq!((d.client, d.bytes), (2, 4096));
+            assert_eq!(d.drop_time, 0.0, "no wall-clock quantity may enter a virtual field");
+        }
+        other => panic!("expected Dropped, got {other:?}"),
+    }
+    tp.close();
+}
+
+#[test]
+fn killed_client_completes_its_tasks_as_dropped() {
+    // A client that greets, accepts the task, then vanishes: the server
+    // must settle everything the connection owed as Dropped.
+    let mut tp = TcpTransport::bind(quick_cfg()).unwrap();
+    let addr = tp.addr();
+    let killed = std::thread::spawn(move || {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        proto::write_msg(&mut s, proto::KIND_HELLO, &proto::hello_body()).unwrap();
+        let (kind, body) = proto::read_msg(&mut s, proto::FRAME_CAP).unwrap().unwrap();
+        assert_eq!(kind, proto::KIND_TASK);
+        let (seq, index, task) = proto::decode_task_msg(&body).unwrap();
+        assert_eq!((seq, index, task.client), (9, 0, 4));
+        // dropping the stream here kills the connection mid-task
+    });
+    tp.dispatch(9, vec![fake_task(4)]).unwrap();
+    let c = tp.recv().unwrap();
+    assert_eq!((c.seq, c.index), (9, 0));
+    match c.outcome.unwrap() {
+        TaskFate::Dropped(d) => {
+            assert_eq!((d.client, d.bytes), (4, 4096));
+            assert_eq!(d.drop_time, 0.0);
+        }
+        other => panic!("expected Dropped, got {other:?}"),
+    }
+    killed.join().unwrap();
+    tp.close();
+}
+
+#[test]
+fn protocol_violation_completes_its_tasks_as_faulted() {
+    // A peer that greets, accepts the task, then answers garbage: the
+    // connection is poisoned and its owed tasks complete as Faulted.
+    let mut tp = TcpTransport::bind(quick_cfg()).unwrap();
+    let addr = tp.addr();
+    let rogue = std::thread::spawn(move || {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        proto::write_msg(&mut s, proto::KIND_HELLO, &proto::hello_body()).unwrap();
+        let (kind, _body) = proto::read_msg(&mut s, proto::FRAME_CAP).unwrap().unwrap();
+        assert_eq!(kind, proto::KIND_TASK);
+        proto::write_msg(&mut s, proto::KIND_RESULT, &[0xFF, 0xFF, 0xFF]).unwrap();
+        // hold the socket open until the server hangs up, so the test
+        // can't mistake a connection loss for the protocol verdict
+        let _ = proto::read_msg(&mut s, proto::FRAME_CAP);
+    });
+    tp.dispatch(1, vec![fake_task(6)]).unwrap();
+    let c = tp.recv().unwrap();
+    assert_eq!((c.seq, c.index), (1, 0));
+    match c.outcome.unwrap() {
+        TaskFate::Faulted(f) => {
+            assert_eq!((f.client, f.bytes), (6, 4096));
+            assert_eq!(f.class, FaultClass::Corrupt);
+            assert_eq!((f.retries, f.fault_time), (0, 0.0));
+        }
+        other => panic!("expected Faulted, got {other:?}"),
+    }
+    tp.close();
+    rogue.join().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Sim-parity: the simulation is the oracle (artifacts-gated)
+// ---------------------------------------------------------------------
+
+fn tiny_cfg(workers: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("cnn", Scale::Smoke);
+    cfg.n_clients = 8;
+    cfg.k_per_round = 4;
+    cfg.samples_per_client = 32;
+    cfg.test_samples = 128;
+    cfg.tau_default = 3;
+    cfg.tau_max = 12;
+    cfg.workers = workers;
+    cfg.rounds = 2;
+    cfg.eval_every = 1;
+    cfg
+}
+
+/// Field-by-field sample comparison (exact — parity is byte-exact, not
+/// approximate; `Sample` deliberately has no `PartialEq`).
+fn assert_series_identical(sim: &Recorder, tcp: &Recorder, what: &str) {
+    assert_eq!(sim.samples.len(), tcp.samples.len(), "{what}: eval cadence diverged");
+    for (i, (a, b)) in sim.samples.iter().zip(&tcp.samples).enumerate() {
+        assert_eq!(a.round, b.round, "{what}: sample {i} round");
+        assert_eq!(a.sim_time, b.sim_time, "{what}: sample {i} virtual clock");
+        assert_eq!(a.traffic_gb, b.traffic_gb, "{what}: sample {i} billed traffic");
+        assert_eq!(a.down_bytes, b.down_bytes, "{what}: sample {i} billed downlink bytes");
+        assert_eq!(a.up_bytes, b.up_bytes, "{what}: sample {i} billed uplink bytes");
+        assert_eq!(a.test_loss, b.test_loss, "{what}: sample {i} model fingerprint (loss)");
+        assert_eq!(a.test_acc, b.test_acc, "{what}: sample {i} model fingerprint (acc)");
+        assert_eq!(a.avg_wait, b.avg_wait, "{what}: sample {i} waiting time");
+        assert_eq!(a.mean_train_loss, b.mean_train_loss, "{what}: sample {i} train loss");
+        assert_eq!(a.block_variance, b.block_variance, "{what}: sample {i} block variance");
+    }
+}
+
+/// One scheme through `run_scheme` under the given transport; the tcp
+/// route spins up `workers` loopback executor threads inside
+/// `run_scheme` itself (the `with_loopback` topology).
+fn run_with(pool: &EnginePool, mut cfg: ExperimentConfig, scheme: &str, tcp: bool) -> Recorder {
+    cfg.transport =
+        if tcp { TransportCfg::Tcp("127.0.0.1:0".into()) } else { TransportCfg::Sim };
+    run_scheme(pool, &cfg, scheme, StopCondition::default()).unwrap()
+}
+
+#[test]
+fn tcp_loopback_reproduces_the_simulation_byte_for_byte() {
+    // The acceptance pin: same seed, same cfg → a tcp run over loopback
+    // executors records the sim run's series exactly, for the Heroes
+    // scheme (probe rounds, composed payloads) and the dense baseline.
+    let Some(pool) = pool_or_skip(2) else { return };
+    for scheme in ["heroes", "fedavg"] {
+        let sim = run_with(&pool, tiny_cfg(2), scheme, false);
+        let net = run_with(&pool, tiny_cfg(2), scheme, true);
+        assert_series_identical(&sim, &net, scheme);
+    }
+}
+
+#[test]
+fn tcp_parity_holds_on_the_overlapped_and_quorum_pipelines() {
+    // The other two drive loops ride the same transport seam: the
+    // overlapped chunk pipeline and the semi-async K-of-N quorum (whose
+    // chosen K and staleness weights are plan facts, so they must
+    // survive the network unchanged).
+    let Some(pool) = pool_or_skip(2) else { return };
+    let overlap = |mut cfg: ExperimentConfig| {
+        cfg.overlap = true;
+        cfg
+    };
+    let quorum = |mut cfg: ExperimentConfig| {
+        cfg.quorum = QuorumKnob::Fixed(3);
+        cfg.rounds = 3;
+        cfg
+    };
+    let sim = run_with(&pool, overlap(tiny_cfg(2)), "heroes", false);
+    let net = run_with(&pool, overlap(tiny_cfg(2)), "heroes", true);
+    assert_series_identical(&sim, &net, "heroes/overlap");
+
+    let sim = run_with(&pool, quorum(tiny_cfg(2)), "heroes", false);
+    let net = run_with(&pool, quorum(tiny_cfg(2)), "heroes", true);
+    assert_series_identical(&sim, &net, "heroes/quorum");
+}
+
+#[test]
+fn tcp_run_is_reproducible_across_invocations() {
+    // Socket scheduling, executor racing and round-robin routing must
+    // leave no residue: two tcp runs with the same seed are identical.
+    let Some(pool) = pool_or_skip(2) else { return };
+    let a = run_with(&pool, tiny_cfg(2), "heroes", true);
+    let b = run_with(&pool, tiny_cfg(2), "heroes", true);
+    assert_series_identical(&a, &b, "heroes/tcp-repro");
+}

@@ -189,6 +189,84 @@ fn prop_encoded_bytes_are_pure_and_size_is_a_shape_function() {
     });
 }
 
+/// A reader that hands out at most `chunk` bytes per `read` call, so a
+/// frame arrives split at arbitrary boundaries — the shape a TCP stream
+/// actually delivers.
+struct Chunked<'a> {
+    data: &'a [u8],
+    pos: usize,
+    chunk: usize,
+}
+
+impl std::io::Read for Chunked<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.chunk.min(buf.len()).min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+#[test]
+fn prop_chunked_stream_reads_match_one_shot_decoding() {
+    // streaming contract: a frame delivered in arbitrary chunks decodes
+    // to the same bytes-and-values as the one-shot slice path, and a
+    // truncated stream yields the same *typed* error the slice yields
+    // for that prefix (trailing-bytes aside — a stream's surplus belongs
+    // to the next frame)
+    check(107, 60, gen_case, |(shapes, seed)| {
+        let ts = tensors_from(shapes, *seed);
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1));
+        for enc in all_encodings() {
+            let mut buf = Vec::new();
+            codec::encode_update(&mut buf, &meta(), enc, &ts).map_err(|e| e.to_string())?;
+            for chunk in [1, 3, 7, wire::HEADER_LEN, buf.len()] {
+                let mut r = Chunked { data: &buf, pos: 0, chunk };
+                let frame = wire::read_frame_from(&mut r, u64::MAX)
+                    .map_err(|e| format!("{enc:?} chunk {chunk}: {e}"))?;
+                if frame != buf {
+                    return Err(format!(
+                        "{enc:?} chunk {chunk}: streamed frame differs from the encoded bytes"
+                    ));
+                }
+                let d = wire::decode_update_from(
+                    &mut Chunked { data: &buf, pos: 0, chunk },
+                    u64::MAX,
+                )
+                .map_err(|e| format!("{enc:?} chunk {chunk}: {e}"))?;
+                let one_shot = codec::decode_update(&buf).map_err(|e| e.to_string())?;
+                for (i, (a, b)) in one_shot.tensors.iter().zip(&d.tensors).enumerate() {
+                    if a.shape() != b.shape() || a.data() != b.data() {
+                        return Err(format!(
+                            "{enc:?} chunk {chunk}: tensor {i} diverges from one-shot decode"
+                        ));
+                    }
+                }
+            }
+            // truncation parity: cut mid-header and mid-body
+            for _ in 0..4 {
+                let cut = rng.below(buf.len());
+                let stream_err = wire::decode_update_from(
+                    &mut Chunked { data: &buf[..cut], pos: 0, chunk: 5 },
+                    u64::MAX,
+                )
+                .err()
+                .ok_or_else(|| format!("{enc:?}: {cut}-byte stream prefix decoded"))?;
+                let slice_err = codec::decode_update(&buf[..cut])
+                    .err()
+                    .ok_or_else(|| format!("{enc:?}: {cut}-byte slice prefix decoded"))?;
+                let (s, o) = (format!("{stream_err:?}"), format!("{slice_err:?}"));
+                if s != o {
+                    return Err(format!(
+                        "{enc:?} cut {cut}: stream error {s} != one-shot error {o}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_truncated_frames_error_instead_of_panicking() {
     check(106, 60, gen_case, |(shapes, seed)| {

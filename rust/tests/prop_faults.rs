@@ -35,7 +35,7 @@ use heroes::coordinator::env::FlEnv;
 use heroes::coordinator::quorum_ctl::{QuorumController, QuorumCtlCfg, QuorumPolicy, QuorumSignals};
 use heroes::coordinator::resilience::{
     rebill_for, resolve_fault, FaultAction, FaultPolicyCfg, FaultResolution, FaultStamp,
-    FaultsCtl, ResilienceError,
+    FaultsCtl, ResilienceError, MAX_RETRY_BUDGET,
 };
 use heroes::coordinator::round::RoundDriver;
 use heroes::coordinator::RoundReport;
@@ -187,6 +187,57 @@ fn prop_retry_budget_is_never_exceeded() {
 
 fn class_idx(class: FaultClass) -> usize {
     FAULT_CLASSES.iter().position(|c| *c == class).unwrap()
+}
+
+#[test]
+fn large_retry_budgets_resolve_to_finite_backoff() {
+    // The shift-overflow regression pin: `backoff · (2^n − 1)` written as
+    // `(1u64 << n) - 1` panics (debug) or wraps (release) at n ≥ 64. The
+    // exp2 formulation must stay finite and monotone across the 64
+    // boundary. Severity just past each budget forces the abandonment
+    // arm, whose fault_time pays all `budget` backoffs — the exact
+    // expression the shift used to blow up.
+    let mk_event = |severity: u32| FaultEvent {
+        class: FaultClass::Exec,
+        severity,
+        frac: 0.5,
+        stall: 0.0,
+        bit: 1,
+    };
+    let mut last = 0.0;
+    for budget in [63u32, 64, 65, 200] {
+        let policy = FaultPolicyCfg { budget, backoff: 5.0, ..FaultPolicyCfg::default() };
+        let r = resolve_fault(mk_event(budget + 1), &policy, 0, 0, 100.0, false).unwrap();
+        match r {
+            FaultResolution::Abandoned { stamp } => {
+                assert!(
+                    stamp.fault_time.is_finite() && stamp.fault_time > 0.0,
+                    "budget {budget}: fault_time {} must be finite and positive",
+                    stamp.fault_time
+                );
+                assert!(
+                    stamp.fault_time > last,
+                    "budget {budget}: more backoffs must cost more virtual time"
+                );
+                last = stamp.fault_time;
+            }
+            other => panic!("budget {budget}: expected abandonment, got {other:?}"),
+        }
+    }
+    // and a contract-valid event (severity ≤ MAX_SEVERITY) under the
+    // budget cap recovers with a finite delayed completion
+    let policy =
+        FaultPolicyCfg { budget: MAX_RETRY_BUDGET, backoff: 5.0, ..FaultPolicyCfg::default() };
+    match resolve_fault(mk_event(MAX_SEVERITY), &policy, 0, 0, 100.0, false).unwrap() {
+        FaultResolution::Recovered { stamp, new_completion } => {
+            assert!(stamp.recovered);
+            assert!(
+                new_completion.is_finite() && new_completion > 100.0,
+                "capped budget must recover with a finite delay, got {new_completion}"
+            );
+        }
+        other => panic!("expected recovery under the budget cap, got {other:?}"),
+    }
 }
 
 // ---------------------------------------------------------------- ledger
@@ -346,7 +397,7 @@ fn recovered_corrupt_retries_rebill_upload_traffic() {
     // an unrecovered corrupt never completed its upload
     assert_eq!(rebill_for(&stamp(FaultClass::Corrupt, 2, false), 1000), 0);
     // saturation, not overflow, on absurd inputs
-    assert_eq!(rebill_for(&stamp(FaultClass::Corrupt, u32::MAX, true), usize::MAX), usize::MAX);
+    assert_eq!(rebill_for(&stamp(FaultClass::Corrupt, u32::MAX, true), u64::MAX), u64::MAX);
 
     // the ledger books re-billed bytes as an order-independent sum and
     // exports them in the run output JSON
@@ -361,10 +412,10 @@ fn recovered_corrupt_retries_rebill_upload_traffic() {
         let (stamp, _) = ctl.stamp_one(0, client, 50.0, false).unwrap().unwrap();
         assert!(stamp.recovered, "budget ≥ MAX_SEVERITY must always recover");
         let rebill = rebill_for(&stamp, 500);
-        assert_eq!(rebill, 500 * stamp.retries as usize);
+        assert_eq!(rebill, 500 * u64::from(stamp.retries));
         if rebill > 0 {
-            ctl.note_rebilled(rebill as u64);
-            expected += rebill as u64;
+            ctl.note_rebilled(rebill);
+            expected += rebill;
         }
     }
     assert!(expected > 0, "rate-1 corrupt with severities ≥ 1 must re-bill something");

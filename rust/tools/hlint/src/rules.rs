@@ -25,11 +25,16 @@ pub const RULE_NAMES: [&str; 5] = [
 pub const BAD_SUPPRESSION: &str = "bad_suppression";
 
 /// D1: files (relative to `rust/src/`) that may read the wall clock.
-const WALL_CLOCK_ALLOWLIST: [&str; 3] = ["runtime/engine.rs", "util/bench.rs", "util/logging.rs"];
+/// `transport/tcp.rs` is in the zone because socket timeouts are real
+/// time by definition — the determinism contract survives because wall
+/// time there only decides *whether* a fate arrives (Dropped/Faulted on
+/// timeout), never any value the virtual clock or the planner consumes.
+const WALL_CLOCK_ALLOWLIST: [&str; 4] =
+    ["runtime/engine.rs", "util/bench.rs", "util/logging.rs", "transport/tcp.rs"];
 
 const D2_DIRS: [&str; 2] = ["simulation", "coordinator"];
-const D3_DIRS: [&str; 4] = ["coordinator", "simulation", "codec", "metrics"];
-const P1_DIRS: [&str; 4] = ["coordinator", "codec", "simulation", "runtime"];
+const D3_DIRS: [&str; 5] = ["coordinator", "simulation", "codec", "metrics", "transport"];
+const P1_DIRS: [&str; 5] = ["coordinator", "codec", "simulation", "runtime", "transport"];
 
 const PANIC_MACROS: [&str; 7] = [
     "panic",
@@ -375,8 +380,53 @@ fn rule_panic_path(rel: &str, toks: &[Tok], tests: &[(u32, u32)], out: &mut Vec<
 /// `x as usize` / `as u32` / `as f64` where the nearest preceding ident
 /// (skipping one call-paren group) is `bytes`, `*_bytes` or `*traffic*`.
 /// Widening to `u64` / `u128` stays legal; `util::cast::bytes_to_f64`
-/// is the audited f64 exit.
+/// and `bytes_to_usize` are the audited exits.
+///
+/// Also flags *declarations* that type a byte-counter ident narrow —
+/// `up_bytes: usize` struct fields, params and lets (optionally behind
+/// `&`/`Vec<`/`Option<`): a counter born narrow truncates before any
+/// cast is visible, which is how the PR 7 bug entered.
+fn is_bytes_ident(name: &str) -> bool {
+    name == "bytes" || name.ends_with("_bytes") || name.to_lowercase().contains("traffic")
+}
+
 fn rule_truncating_cast(rel: &str, toks: &[Tok], tests: &[(u32, u32)], out: &mut Vec<Finding>) {
+    // narrow declarations: `bytes-ish : [&|mut|Vec|Option|<]* (usize|u32)`
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || !is_bytes_ident(t.text.as_str()) || in_test(tests, t.line) {
+            continue;
+        }
+        // a single ascription colon (`name::` paths have two)
+        if toks.get(i + 1).map(|t| t.text.as_str()) != Some(":")
+            || toks.get(i + 2).map(|t| t.text.as_str()) == Some(":")
+        {
+            continue;
+        }
+        // hop over references and one level of container generics
+        let mut j = i + 2;
+        let mut hops = 0u32;
+        while hops < 4 {
+            match toks.get(j).map(|t| t.text.as_str()) {
+                Some("&" | "mut" | "<" | "Vec" | "Option") => {
+                    j += 1;
+                    hops += 1;
+                }
+                _ => break,
+            }
+        }
+        let Some(ty) = toks.get(j) else { continue };
+        if ty.kind == TokKind::Ident && (ty.text == "usize" || ty.text == "u32") {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "truncating_cast",
+                message: format!(
+                    "byte counter `{}` declared as `{}` — counters stay u64 end to end (util::cast holds the audited exits)",
+                    t.text, ty.text
+                ),
+            });
+        }
+    }
     for (i, t) in toks.iter().enumerate() {
         if t.kind != TokKind::Ident || t.text != "as" || in_test(tests, t.line) {
             continue;
@@ -408,7 +458,7 @@ fn rule_truncating_cast(rel: &str, toks: &[Tok], tests: &[(u32, u32)], out: &mut
             continue;
         }
         let name = src.text.as_str();
-        if name == "bytes" || name.ends_with("_bytes") || name.to_lowercase().contains("traffic") {
+        if is_bytes_ident(name) {
             out.push(Finding {
                 file: rel.to_string(),
                 line: t.line,

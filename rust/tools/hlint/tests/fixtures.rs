@@ -35,7 +35,7 @@ fn bad_fixtures_trigger_exactly_their_rule() {
         ("d2_unkeyed_rng_bad.rs", "simulation/fixture.rs", "unkeyed_rng", 2),
         ("d3_map_iteration_bad.rs", "coordinator/fixture.rs", "map_iteration", 1),
         ("p1_panic_path_bad.rs", "coordinator/fixture.rs", "panic_path", 3),
-        ("c1_truncating_cast_bad.rs", "metrics/fixture.rs", "truncating_cast", 2),
+        ("c1_truncating_cast_bad.rs", "metrics/fixture.rs", "truncating_cast", 5),
     ];
     for (file, vpath, rule, count) in cases {
         let out = lint(file, vpath);
@@ -79,6 +79,17 @@ fn directory_scoping_gates_the_pass() {
     let src = read_fixture("p1_panic_path_bad.rs");
     let out = lint_source("util/fixture.rs", &src, &RULE_NAMES);
     assert!(out.active.is_empty(), "{:?}", out.active);
+}
+
+#[test]
+fn wall_clock_allow_zone_covers_the_tcp_transport() {
+    // transport/tcp.rs may read the wall clock (socket timeouts are real
+    // time by definition); the same source stays flagged elsewhere
+    let src = read_fixture("d1_wall_clock_bad.rs");
+    let out = lint_source("transport/tcp.rs", &src, &RULE_NAMES);
+    assert!(out.active.is_empty(), "{:?}", out.active);
+    let out = lint_source("transport/sim.rs", &src, &RULE_NAMES);
+    assert_eq!(out.active.len(), 2, "{:?}", out.active);
 }
 
 #[test]

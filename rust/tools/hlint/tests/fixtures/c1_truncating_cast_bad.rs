@@ -2,3 +2,12 @@
 pub fn gb(total_bytes: u64, traffic_up: u64) -> (f64, usize) {
     (total_bytes as f64 / 1e9, traffic_up as usize)
 }
+
+// ... and byte counters *declared* narrow: the counter truncates on a
+// 32-bit target before any cast is visible (struct fields, params and
+// container generics alike)
+pub struct Meta {
+    pub up_bytes: usize,
+    pub wan_up_bytes: Option<u32>,
+    pub bytes: Vec<usize>,
+}

@@ -1,7 +1,15 @@
-// fixture: C1 good — widening is legal, and the audited f64 exit is
-// util::cast::bytes_to_f64
-use crate::util::cast::bytes_to_f64;
+// fixture: C1 good — widening is legal, the audited exits are
+// util::cast::{bytes_to_f64, bytes_to_usize}, and u64-wide counter
+// declarations are exactly the contract
+use crate::util::cast::{bytes_to_f64, bytes_to_usize};
 
-pub fn gb(frame_len: usize, total_bytes: u64) -> (u64, f64) {
-    (frame_len as u64, bytes_to_f64(total_bytes) / 1e9)
+pub struct Meta {
+    pub up_bytes: u64,
+    pub wan_up_bytes: Option<u64>,
+    /// not a byte counter — free to stay usize
+    pub widths: Vec<usize>,
+}
+
+pub fn gb(frame_len: usize, total_bytes: u64) -> (u64, f64, usize) {
+    (frame_len as u64, bytes_to_f64(total_bytes) / 1e9, bytes_to_usize(total_bytes))
 }
